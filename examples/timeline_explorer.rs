@@ -1,0 +1,50 @@
+//! Render the Fig. 6 operator timelines for every architecture × strategy
+//! on any hardware preset, plus the adaptive expert-slot search (Eq. 11).
+
+use scmoe::cluster::Scenario;
+use scmoe::coordinator::adaptive::{choose_expert_slot, eq11_objective};
+use scmoe::coordinator::costs::{MoEKind, Strategy};
+use scmoe::coordinator::schedule::build_pair_schedule;
+use scmoe::coordinator::timeline;
+use scmoe::report::efficiency::proxy_costs;
+use scmoe::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let sc = Scenario::parse(&args.str_or("scenario", "pcie"))
+        .unwrap_or(Scenario::PcieA30x8);
+    let width = args.usize_or("width", 110);
+    let c = proxy_costs(sc);
+    println!("### {} (Fig. 6 reproduction) ###", sc.label());
+
+    let rows: Vec<(&str, MoEKind, Strategy)> = vec![
+        ("1. Standard top-2, sequential", MoEKind::Standard { k: 2 }, Strategy::Sequential),
+        ("2. Standard top-2, pipelined", MoEKind::Standard { k: 2 },
+         Strategy::Pipelined { chunks: 2 }),
+        ("3. Shared-expert MoE", MoEKind::SharedExpert, Strategy::Pipelined { chunks: 1 }),
+        ("4. ScMoE + overlapping", MoEKind::ScMoE { k: 1 }, Strategy::Overlap),
+        ("5. ScMoE + overlapping + pipelining", MoEKind::ScMoE { k: 1 },
+         Strategy::OverlapPipelined { chunks: 2 }),
+    ];
+    for (label, kind, strat) in rows {
+        let slot = match strat {
+            Strategy::Overlap | Strategy::OverlapPipelined { .. } => {
+                choose_expert_slot(&c, kind, strat).0
+            }
+            _ => 0,
+        };
+        let s = build_pair_schedule(&c, kind, strat, slot);
+        println!("\n--- {label} ---");
+        print!("{}", timeline::render(&s.run(), width));
+    }
+
+    println!("\n### adaptive expert-slot search (ScMoE, Eq. 11) ###");
+    let kind = MoEKind::ScMoE { k: 1 };
+    for slot in 0..4 {
+        let t = build_pair_schedule(&c, kind, Strategy::Overlap, slot).makespan();
+        println!("slot {}: DES makespan {:.3}ms | Eq.11 objective {:.3}ms",
+                 slot + 1, t * 1e3, eq11_objective(&c, kind, slot) * 1e3);
+    }
+    let (best, t) = choose_expert_slot(&c, kind, Strategy::Overlap);
+    println!("chosen: slot {} ({:.3}ms)", best + 1, t * 1e3);
+}

@@ -1,0 +1,304 @@
+"""AOT pipeline: lower every jitted step/operator to HLO text + manifest.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the `xla` crate binds) rejects; the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:
+  python -m compile.aot --profile quality --arch scmoe --preset tiny --out DIR
+  python -m compile.aot --profile ops --preset tiny --tokens 1024 --out DIR
+  python -m compile.aot --suite default --out-root ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+from typing import Any, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, ops, train
+from .config import ModelConfig, preset
+
+F32 = "f32"
+I32 = "i32"
+U32 = "u32"
+
+_DTYPES = {F32: jnp.float32, I32: jnp.int32, U32: jnp.uint32}
+
+
+def spec(shape: Sequence[int], dtype: str = F32) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), _DTYPES[dtype])
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _iospec(specs, names) -> List[Dict[str, Any]]:
+    out = []
+    for s, n in zip(specs, names):
+        dt = {jnp.float32: F32, jnp.int32: I32, jnp.uint32: U32}[
+            jnp.dtype(s.dtype).type if hasattr(s, "dtype") else s]
+        out.append({"name": n, "shape": list(s.shape), "dtype": dt})
+    return out
+
+
+class ArtifactWriter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        os.makedirs(out_dir, exist_ok=True)
+        self.entries: Dict[str, Any] = {}
+
+    def lower(self, name: str, fn, in_specs: List[jax.ShapeDtypeStruct],
+              in_names: List[str], out_names: List[str]):
+        lowered = jax.jit(fn, keep_unused=True).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *in_specs)
+        flat_outs, _ = jax.tree_util.tree_flatten(outs)
+        self.entries[name] = {
+            "file": fname,
+            "inputs": _iospec(in_specs, in_names),
+            "outputs": _iospec(flat_outs, out_names or
+                               [f"out{i}" for i in range(len(flat_outs))]),
+        }
+        print(f"  lowered {name}: {len(text)} chars, "
+              f"{len(in_specs)} in / {len(flat_outs)} out")
+
+    def finish(self, meta: Dict[str, Any]):
+        manifest = dict(meta)
+        manifest["artifacts"] = self.entries
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(manifest, f, indent=1)
+        print(f"  wrote {path}")
+
+
+# ---------------------------------------------------------------------------
+# quality profile: init / train_step / eval_step / infer_step per (arch, size)
+# ---------------------------------------------------------------------------
+
+def build_quality(cfg: ModelConfig, out_dir: str):
+    w = ArtifactWriter(out_dir)
+    specs = model.param_specs(cfg)
+    pnames = [n for n, _ in specs]
+    pspecs = [spec(s) for _, s in specs]
+    npar = len(pspecs)
+    bsz, s = cfg.batch_size, cfg.seq_len
+    tok = spec((bsz, s), I32)
+    tgt = spec((bsz, s) if cfg.task == "lm" else (bsz,), I32)
+    scalar_i = spec((), I32)
+
+    w.lower("init", lambda seed: tuple(train.init(cfg, seed)),
+            [scalar_i], ["seed"], pnames)
+
+    def tstep(*flat):
+        p = list(flat[:npar])
+        m = list(flat[npar:2 * npar])
+        v = list(flat[2 * npar:3 * npar])
+        step, tokens, targets, seed = flat[3 * npar:]
+        np_, nm, nv, loss, aux, acc, stats = train.train_step(
+            cfg, p, m, v, step, tokens, targets, seed)
+        return tuple(np_) + tuple(nm) + tuple(nv) + (loss, aux, acc, stats)
+
+    in_specs = pspecs * 3 + [scalar_i, tok, tgt, scalar_i]
+    in_names = (pnames + [f"m.{n}" for n in pnames] + [f"v.{n}" for n in pnames]
+                + ["step", "tokens", "targets", "seed"])
+    out_names = (pnames + [f"m.{n}" for n in pnames] + [f"v.{n}" for n in pnames]
+                 + ["loss", "aux", "acc", "stats"])
+    w.lower("train_step", tstep, in_specs, in_names, out_names)
+
+    # fused multi-step artifact (scan over MULTI steps): the training-driver
+    # hot-path optimization measured in EXPERIMENTS.md §Perf.
+    multi = 4
+    tok_n = spec((multi, bsz, s), I32)
+    tgt_n = spec((multi,) + ((bsz, s) if cfg.task == "lm" else (bsz,)), I32)
+
+    def tstep_n(*flat):
+        p = list(flat[:npar])
+        m = list(flat[npar:2 * npar])
+        v = list(flat[2 * npar:3 * npar])
+        step, tokens_n, targets_n, seed = flat[3 * npar:]
+        p2, m2, v2, losses, accs = train.train_step_n(
+            cfg, p, m, v, step, tokens_n, targets_n, seed, multi)
+        return tuple(p2) + tuple(m2) + tuple(v2) + (losses, accs)
+
+    w.lower(f"train_step_{multi}", tstep_n,
+            pspecs * 3 + [scalar_i, tok_n, tgt_n, scalar_i],
+            in_names[:3 * npar] + ["step", "tokens_n", "targets_n", "seed"],
+            pnames + [f"m.{n}" for n in pnames] + [f"v.{n}" for n in pnames]
+            + ["losses", "accs"])
+
+    w.lower("eval_step",
+            lambda *flat: train.eval_step(cfg, list(flat[:npar]), flat[npar], flat[npar + 1]),
+            pspecs + [tok, tgt], pnames + ["tokens", "targets"],
+            ["loss", "acc"])
+
+    w.lower("infer_step",
+            lambda *flat: train.infer_step(cfg, list(flat[:npar]), flat[npar]),
+            pspecs + [tok], pnames + ["tokens"],
+            ["logits", "selections"])
+
+    w.finish({
+        "version": 1,
+        "kind": "quality",
+        "config": cfg.to_json(),
+        "param_specs": [[n, list(s)] for n, s in specs],
+        "param_count": model.param_count(cfg),
+        "stats_fields": list(model.STATS_FIELDS),
+        "n_moe_blocks": cfg.n_moe_blocks if cfg.arch != "dense" else 0,
+        "capacity": cfg.expert_capacity(cfg.tokens_per_batch()),
+    })
+
+
+# ---------------------------------------------------------------------------
+# ops profile: per-operator artifacts at one shape point (for the
+# coordinator's distributed execution + DES calibration)
+# ---------------------------------------------------------------------------
+
+def build_ops(cfg: ModelConfig, tokens: int, out_dir: str):
+    w = ArtifactWriter(out_dir)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    t = tokens
+    x = spec((t, d))
+    vec = lambda *sh: spec(sh)
+
+    w.lower("ops_init", lambda seed: ops.ops_init(cfg, seed), [spec((), I32)],
+            ["seed"],
+            ["ln_g", "ln_b", "wqkv", "bqkv", "wo", "bo",
+             "mlp_w1", "mlp_b1", "mlp_w2", "mlp_b2",
+             "wg", "moe_w1", "moe_b1", "moe_w2", "moe_b2", "segate_w"])
+
+    w.lower("attn_op",
+            lambda *a: ops.attn_op(cfg, *a),
+            [x, vec(d), vec(d), vec(d, 3 * d), vec(3 * d), vec(d, d), vec(d)],
+            ["x", "ln_g", "ln_b", "wqkv", "bqkv", "wo", "bo"], ["y"])
+
+    w.lower("mlp_op",
+            lambda *a: ops.mlp_op(cfg, *a),
+            [x, vec(d), vec(d), vec(d, f), vec(f), vec(f, d), vec(d)],
+            ["x", "ln_g", "ln_b", "w1", "b1", "w2", "b2"], ["y"])
+
+    w.lower("se_op",
+            lambda *a: ops.se_op(cfg, *a),
+            [x, vec(d), vec(d), vec(d, f), vec(f), vec(f, d), vec(d), vec(d)],
+            ["x", "ln_g", "ln_b", "w1", "b1", "w2", "b2", "segate_w"], ["y"])
+
+    caps = {}
+    for k in (1, 2, 3):
+        cap = max(1, int(cfg.capacity_factor * t * k / e))
+        caps[str(k)] = cap
+        w.lower(f"gate_op_k{k}",
+                lambda x_, g_, b_, wg_, k=k: ops.gate_op(cfg, x_, g_, b_, wg_, k),
+                [x, vec(d), vec(d), vec(d, e)],
+                ["x", "ln_g", "ln_b", "wg"], ["h", "indices", "weights"])
+        w.lower(f"expert_op_c{cap}",
+                lambda xe, w1, b1, w2, b2: ops.expert_op(cfg, xe, w1, b1, w2, b2),
+                [spec((cap, d)), vec(d, f), vec(f), vec(f, d), vec(d)],
+                ["xe", "w1", "b1", "w2", "b2"], ["ye"])
+        w.lower(f"experts_op_c{cap}",
+                lambda xe, w1, b1, w2, b2: ops.experts_op(cfg, xe, w1, b1, w2, b2),
+                [spec((e, cap, d)), spec((e, d, f)), spec((e, f)),
+                 spec((e, f, d)), spec((e, d))],
+                ["xe", "w1", "b1", "w2", "b2"], ["ye"])
+        w.lower(f"moe_fused_op_k{k}",
+                lambda x_, g_, b_, wg_, w1, b1, w2, b2, k=k, cap=cap:
+                    ops.moe_fused_op(cfg, x_, g_, b_, wg_, w1, b1, w2, b2, k, cap),
+                [x, vec(d), vec(d), vec(d, e), spec((e, d, f)), spec((e, f)),
+                 spec((e, f, d)), spec((e, d))],
+                ["x", "ln_g", "ln_b", "wg", "w1", "b1", "w2", "b2"], ["y"])
+
+    w.finish({
+        "version": 1,
+        "kind": "ops",
+        "config": cfg.to_json(),
+        "tokens": t,
+        "capacities": caps,
+        "token_bytes": d * 4,
+        "expert_param_bytes": (d * f + f + f * d + d) * 4,
+    })
+
+
+# ---------------------------------------------------------------------------
+# suites
+# ---------------------------------------------------------------------------
+
+def suite_default(out_root: str):
+    """The artifact set `make artifacts` builds: enough for cargo test +
+    the quickstart/distributed examples + calibration."""
+    print("[aot] ops profile (tiny shapes)")
+    build_ops(preset("tiny"), tokens=512, out_dir=os.path.join(out_root, "ops_tiny"))
+    for arch in ("top2", "scmoe"):
+        print(f"[aot] quality micro/{arch}")
+        cfg = preset("micro", arch=arch)
+        build_quality(cfg, os.path.join(out_root, f"quality_{arch}_micro"))
+
+
+def parse_arch(name: str):
+    """`<arch>[_nosegate]` -> (arch, overrides). The _nosegate suffix builds
+    the Appendix A.3 ablation (shared-expert gate disabled)."""
+    if name.endswith("_nosegate"):
+        return name[: -len("_nosegate")], {"se_gate": False}
+    return name, {}
+
+
+def suite_quality(out_root: str, preset_name: str, archs: List[str]):
+    for name in archs:
+        arch, over = parse_arch(name)
+        print(f"[aot] quality {preset_name}/{name}")
+        cfg = preset(preset_name, arch=arch, **over)
+        build_quality(cfg, os.path.join(out_root, f"quality_{name}_{preset_name}"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--profile", choices=["quality", "ops"], default=None)
+    ap.add_argument("--suite", choices=["default"], default=None)
+    ap.add_argument("--arch", default="scmoe")
+    ap.add_argument("--archs", default=None, help="comma list for quality suites")
+    ap.add_argument("--preset", default="tiny")
+    ap.add_argument("--tokens", type=int, default=512)
+    ap.add_argument("--seq-len", type=int, default=None)
+    ap.add_argument("--batch-size", type=int, default=None)
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--out-root", default="../artifacts")
+    args = ap.parse_args()
+
+    if args.suite:
+        suite_default(args.out_root)
+        return
+    over = {}
+    if args.seq_len:
+        over["seq_len"] = args.seq_len
+    if args.batch_size:
+        over["batch_size"] = args.batch_size
+    if args.profile == "quality":
+        if args.archs:
+            suite_quality(args.out_root, args.preset, args.archs.split(","))
+        else:
+            cfg = preset(args.preset, arch=args.arch, **over)
+            out = args.out or os.path.join(args.out_root,
+                                           f"quality_{args.arch}_{args.preset}")
+            build_quality(cfg, out)
+    elif args.profile == "ops":
+        cfg = preset(args.preset, **over)
+        out = args.out or os.path.join(args.out_root, f"ops_{args.preset}")
+        build_ops(cfg, args.tokens, out)
+    else:
+        ap.error("need --profile or --suite")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,207 @@
+"""Shared model/compile configuration for the ScMoE reproduction.
+
+This module is the single source of truth for model shapes on the Python
+(build-time) side. The AOT pipeline (`aot.py`) serializes the active config
+into `manifest.json`, which the Rust coordinator reads; Rust never needs to
+know how the model was traced, only the flattened tensor interface.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Tuple
+
+# Architectures under study.  These mirror the paper's Table 2/3/6/7 rows
+# plus the appendix variants.
+ARCHS = (
+    "dense",        # plain transformer (MLP in every block)
+    "top1",         # standard top-1 MoE      (Table 2)
+    "top2",         # standard top-2 MoE      (baseline everywhere)
+    "top3",         # standard top-3 MoE      (Table 4)
+    "shared",       # shared-expert MoE: SE + top-1   (Fig 2b)
+    "scmoe_pos1",   # ScMoE, shortcut from preceding block *output*
+    "scmoe",        # ScMoE Pos-2 (default): shortcut from preceding
+                    # block's post-attention intermediate  (Fig 4b)
+    "scmoe_pos3",   # ScMoE, shortcut from preceding block *input*
+    "scmoe2",       # ScMoE-2: SE + top-2 on the shortcut  (Table 4)
+    "dgmoe",        # DoubleGating MoE (Appendix A.2)
+    "dgmoe_share",  # DGMoE with one MoE shared across two pairs (A.5)
+)
+
+# Architectures whose MoE consumes the *preceding layer's* representation,
+# i.e. whose All-to-All can be decoupled and overlapped (the paper's core).
+SHORTCUT_ARCHS = ("scmoe_pos1", "scmoe", "scmoe_pos3", "scmoe2", "dgmoe", "dgmoe_share")
+
+
+@dataclass
+class ModelConfig:
+    """One experiment's model hyperparameters (paper Appendix Tables 8/9)."""
+
+    name: str = "tiny"
+    arch: str = "scmoe"
+    task: str = "lm"            # "lm" (GPT-MoE) | "cls" (SwinV2-MoE proxy)
+
+    vocab_size: int = 259       # byte-level + BOS/EOS/PAD
+    n_classes: int = 16         # cls task head size
+    d_model: int = 128
+    n_heads: int = 4
+    d_ff: int = 512
+    n_blocks: int = 4           # must be even: Block-MLP / Block-MoE pairs
+    n_experts: int = 8
+    seq_len: int = 128
+    capacity_factor: float = 2.0
+    moe_loss_coef: float = 0.01
+    se_gate: bool = True        # shared-expert gate (Appendix A.3)
+    noisy_gate: bool = True     # noisy top-k gating (Eq. 4/5) at train time
+
+    # training
+    batch_size: int = 8
+    learning_rate: float = 1e-3
+    warmup_steps: int = 100
+    adam_b1: float = 0.9
+    adam_b2: float = 0.98
+    adam_eps: float = 1e-9
+    weight_decay: float = 0.0
+
+    dtype: str = "f32"
+
+    def __post_init__(self) -> None:
+        if self.arch not in ARCHS:
+            raise ValueError(f"unknown arch {self.arch!r}; expected one of {ARCHS}")
+        if self.n_blocks % 2 != 0:
+            raise ValueError("n_blocks must be even (Block-MLP/Block-MoE pairs)")
+        if self.d_model % self.n_heads != 0:
+            raise ValueError("d_model must be divisible by n_heads")
+        if self.task not in ("lm", "cls"):
+            raise ValueError(f"unknown task {self.task!r}")
+
+    # ---- derived quantities -------------------------------------------------
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def n_moe_blocks(self) -> int:
+        return self.n_blocks // 2
+
+    @property
+    def top_k(self) -> int:
+        """Number of gate-selected experts routed through All-to-All."""
+        return {
+            "dense": 0,
+            "top1": 1,
+            "top2": 2,
+            "top3": 3,
+            "shared": 1,
+            "scmoe_pos1": 1,
+            "scmoe": 1,
+            "scmoe_pos3": 1,
+            "scmoe2": 2,
+            "dgmoe": 2,
+            "dgmoe_share": 2,
+        }[self.arch]
+
+    @property
+    def has_shared_expert(self) -> bool:
+        return self.arch in ("shared", "scmoe_pos1", "scmoe", "scmoe_pos3", "scmoe2")
+
+    @property
+    def uses_shortcut(self) -> bool:
+        return self.arch in SHORTCUT_ARCHS
+
+    def expert_capacity(self, tokens: int) -> int:
+        """GShard-style per-expert capacity for a batch of `tokens` tokens."""
+        k = max(self.top_k, 1)
+        cap = int(self.capacity_factor * tokens * k / self.n_experts)
+        return max(cap, 1)
+
+    def tokens_per_batch(self) -> int:
+        return self.batch_size * self.seq_len
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: Dict[str, Any]) -> "ModelConfig":
+        return ModelConfig(**d)
+
+
+# ---- presets ---------------------------------------------------------------
+#
+# "tiny"/"small"/"medium" are the quality-experiment ladder (the paper's
+# GPT2-MoE-Small/Medium scaled to a single-CPU testbed, Appendix Table 8);
+# "e2e" is the end-to-end driver config (~100M-class parameter budget,
+# see EXPERIMENTS.md for the measured count); "proxy_cls" stands in for
+# SwinV2-MoE-S on the classification task.
+
+def preset(name: str, **overrides: Any) -> ModelConfig:
+    base: Dict[str, Dict[str, Any]] = {
+        "micro": dict(d_model=64, n_heads=2, d_ff=256, n_blocks=2, seq_len=32,
+                      n_experts=4, batch_size=4),
+        "tiny": dict(d_model=128, n_heads=4, d_ff=512, n_blocks=4, seq_len=128,
+                     n_experts=8, batch_size=8),
+        "small": dict(d_model=256, n_heads=8, d_ff=1024, n_blocks=8, seq_len=128,
+                      n_experts=8, batch_size=8),
+        "medium": dict(d_model=384, n_heads=8, d_ff=1536, n_blocks=12, seq_len=128,
+                       n_experts=8, batch_size=4),
+        # ~100M-class config for the end-to-end example (params dominated by
+        # 8-expert MoE FFNs: n_moe_blocks * E * 2*d*ff).
+        "e2e": dict(d_model=512, n_heads=8, d_ff=2048, n_blocks=8, seq_len=256,
+                    n_experts=8, batch_size=4),
+        "proxy_cls": dict(task="cls", d_model=128, n_heads=4, d_ff=512,
+                          n_blocks=4, seq_len=64, n_experts=8, batch_size=16,
+                          capacity_factor=1.25),
+        "proxy_cls_b": dict(task="cls", d_model=192, n_heads=6, d_ff=768,
+                            n_blocks=4, seq_len=64, n_experts=8, batch_size=16,
+                            capacity_factor=1.25),
+    }
+    if name not in base:
+        raise ValueError(f"unknown preset {name!r}; have {sorted(base)}")
+    kw = dict(base[name])
+    kw.update(overrides)
+    return ModelConfig(name=name, **kw)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Exact parameter count for the manifest (mirrors model.init_params)."""
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    n = 0
+    n += cfg.vocab_size * d                      # tok embed
+    n += cfg.seq_len * d                         # pos embed
+    for b in range(cfg.n_blocks):
+        n += 2 * 2 * d                           # 2 × LN (gamma, beta)
+        n += 4 * d * d + 4 * d                   # attn qkv+o with bias
+        is_moe = b % 2 == 1 and cfg.arch != "dense"
+        if not is_moe:
+            n += d * f + f + f * d + d           # MLP
+        else:
+            shared_pairs = cfg.arch == "dgmoe_share"
+            # dgmoe_share: MoE params counted once per two pairs (handled
+            # by the model by reusing the first pair's params).
+            pair_idx = (b // 2)
+            counted = not shared_pairs or pair_idx % 2 == 0
+            if counted:
+                n += d * e + (d * e if cfg.noisy_gate else 0)   # gate (+noise)
+                n += e * (d * f + f + f * d + d)                 # experts
+            if cfg.has_shared_expert:
+                n += d * f + f + f * d + d                       # shared expert
+                if cfg.se_gate:
+                    n += d                                       # SE-gate vector
+            if cfg.arch == "dgmoe" or cfg.arch == "dgmoe_share":
+                pass  # dual gating reuses the same gate matrix
+    n += 2 * d                                   # final LN
+    if cfg.task == "lm":
+        n += d * cfg.vocab_size                  # lm head (untied)
+    else:
+        n += d * cfg.n_classes + cfg.n_classes   # cls head
+    return n
+
+
+if __name__ == "__main__":  # quick inspection helper
+    for p in ("micro", "tiny", "small", "medium", "e2e", "proxy_cls"):
+        c = preset(p)
+        print(f"{p:10s} params≈{param_count(c)/1e6:8.2f}M  "
+              f"tokens/batch={c.tokens_per_batch()}")

@@ -1,0 +1,72 @@
+"""Causal multi-head attention core as a Pallas kernel.
+
+Grid iterates heads; one head's full [T, T] score tile lives in VMEM (the
+sequence lengths used in this reproduction keep T <= 512, i.e. <= 1 MiB of
+scores in f32 — within budget; the flash-tiled variant for long sequences is
+analyzed in EXPERIMENTS.md section Perf but not needed at these shapes).
+
+Backward recomputes probabilities in plain jnp inside a custom_vjp — the
+recompute lowers into the same train-step HLO (rematerialization, no stored
+probs), matching how the forward kernel avoids materializing probs in HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common, ref
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, *, causal):
+    q = q_ref[0]                      # [T, Dh]
+    k = k_ref[0]
+    v = v_ref[0]
+    t, dh = q.shape
+    scores = (q @ k.T) / jnp.sqrt(dh).astype(q.dtype)
+    if causal:
+        rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+        scores = jnp.where(rows >= cols, scores, jnp.finfo(scores.dtype).min)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0] = p @ v
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def attention(q, k, v, causal=True, interpret=common.INTERPRET_DEFAULT):
+    """q, k, v: [H, T, Dh] -> [H, T, Dh]."""
+    return _fwd_only(q, k, v, causal, interpret)
+
+
+def _fwd_only(q, k, v, causal, interpret):
+    h, t, dh = q.shape
+    kern = functools.partial(_fwd_kernel, causal=causal)
+    spec = pl.BlockSpec((1, t, dh), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        kern,
+        grid=(h,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((h, t, dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _vjp_fwd(q, k, v, causal, interpret):
+    return _fwd_only(q, k, v, causal, interpret), (q, k, v)
+
+
+def _vjp_bwd(causal, interpret, res, g):
+    # jnp recompute backward (rematerialized probs), verified against
+    # jax.grad of ref.attention in the tests.
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: ref.attention(q_, k_, v_, causal), q, k, v)
+    return vjp(g)
+
+
+attention.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,68 @@
+"""Shared helpers for the Pallas kernels (block sizing, VMEM accounting)."""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+# Pallas on this image must run in interpret mode: real TPU lowering emits a
+# Mosaic custom-call that the CPU PJRT plugin cannot execute. All kernels
+# take `interpret=` and default to True.
+INTERPRET_DEFAULT = True
+
+# TPU-v4-class VMEM budget used for the §Perf structural analysis
+# (bytes; ~16 MiB per core, half reserved for double buffering).
+VMEM_BUDGET = 16 * 1024 * 1024
+VMEM_USABLE = VMEM_BUDGET // 2
+
+
+def largest_divisor_leq(n: int, cap: int) -> int:
+    """Largest divisor of n that is <= cap (>=1). Used to pick block sizes
+    that tile the axis exactly — Pallas block shapes must divide the axis in
+    the configurations we emit (shapes are static at AOT time)."""
+    cap = max(1, min(n, cap))
+    for b in range(cap, 0, -1):
+        if n % b == 0:
+            return b
+    return 1
+
+
+def ffn_block_tokens(c: int, d: int, f: int, dtype_bytes: int = 4,
+                     budget: int = VMEM_USABLE) -> int:
+    """Pick the token-block size BC for the expert-FFN kernel so that
+    x-block + w1 + b1 + w2 + b2 + h-block + out-block fit the VMEM budget.
+
+    Weights for one expert are resident per grid step:
+      w1: d*f, w2: f*d, b1: f, b2: d
+    Per-token activations: x: d, h: f, out: d.
+    """
+    weight_bytes = (2 * d * f + f + d) * dtype_bytes
+    per_token = (2 * d + f) * dtype_bytes
+    avail = budget - weight_bytes
+    if avail <= 0:
+        # weights alone exceed budget: fall back to the smallest block and
+        # report pressure via vmem_footprint (the analysis will flag it).
+        return largest_divisor_leq(c, 8)
+    cap = max(1, avail // per_token)
+    # round to a multiple of 8 below the cap when possible (lane alignment)
+    cap = max(8, (cap // 8) * 8) if cap >= 8 else cap
+    return largest_divisor_leq(c, min(cap, 512))
+
+
+def ffn_vmem_footprint(bc: int, d: int, f: int, dtype_bytes: int = 4) -> int:
+    """Bytes resident in VMEM for one expert-FFN grid step."""
+    return ((2 * d * f + f + d) + bc * (2 * d + f)) * dtype_bytes
+
+
+def mxu_utilization_estimate(m: int, k: int, n: int, tile: int = 128) -> float:
+    """Fraction of MXU lanes doing useful work for an m x k x n matmul when
+    dimensions are padded up to `tile` (systolic-array occupancy estimate)."""
+    pad = lambda v: math.ceil(v / tile) * tile
+    useful = m * k * n
+    padded = pad(m) * pad(k) * pad(n)
+    return useful / padded
+
+
+def flops_expert_ffn(e: int, c: int, d: int, f: int) -> int:
+    """MAC-based FLOP count (2 per MAC) for the grouped expert FFN."""
+    return 2 * e * c * (d * f + f * d)

@@ -1,0 +1,143 @@
+"""Pallas kernel for the grouped expert FFN — the MoE compute hot-spot.
+
+Forward AND backward are Pallas kernels wired together with jax.custom_vjp,
+so the same kernel lowers into both the inference artifacts and the AOT
+train-step HLO.
+
+TPU mapping (DESIGN.md section "Hardware adaptation"): the grid iterates
+(expert, token-block); each grid step keeps one expert's weights resident in
+VMEM and streams `bc` tokens through the MXU (two [bc,D]x[D,F] / [bc,F]x[F,D]
+matmuls). BlockSpec expresses the HBM->VMEM schedule that a CUDA
+implementation would express with thread-block tiling + shared memory.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common, ref
+
+
+def _fwd_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[0]                       # [BC, D]
+    w1 = w1_ref[0]                     # [D, F]
+    w2 = w2_ref[0]                     # [F, D]
+    pre = x @ w1 + b1_ref[0]           # [BC, F]
+    h = ref.gelu(pre)
+    o_ref[0] = (h @ w2 + b2_ref[0]).astype(o_ref.dtype)
+
+
+def _gelu_grad(pre):
+    """d gelu(pre) / d pre for the tanh approximation used in ref.gelu."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(pre.dtype)
+    u = c * (pre + 0.044715 * pre ** 3)
+    t = jnp.tanh(u)
+    du = c * (1.0 + 3 * 0.044715 * pre * pre)
+    return 0.5 * (1.0 + t) + 0.5 * pre * (1.0 - t * t) * du
+
+
+def _bwd_kernel(x_ref, w1_ref, b1_ref, w2_ref, g_ref,
+                dx_ref, dw1_ref, db1_ref, dw2_ref, db2_ref):
+    """Backward: recomputes h (activation rematerialization) and accumulates
+    weight gradients across token-blocks (grid dim 1 revisits the same
+    dw/db blocks; Pallas guarantees sequential grid order)."""
+    cblk = pl.program_id(1)
+    x = x_ref[0]                       # [BC, D]
+    w1 = w1_ref[0]                     # [D, F]
+    w2 = w2_ref[0]                     # [F, D]
+    g = g_ref[0]                       # [BC, D]
+    pre = x @ w1 + b1_ref[0]
+    h = ref.gelu(pre)
+    dh = g @ w2.T                      # [BC, F]
+    dpre = dh * _gelu_grad(pre)        # [BC, F]
+    dx_ref[0] = dpre @ w1.T
+
+    @pl.when(cblk == 0)
+    def _init():
+        dw1_ref[0] = jnp.zeros_like(dw1_ref[0])
+        db1_ref[0] = jnp.zeros_like(db1_ref[0])
+        dw2_ref[0] = jnp.zeros_like(dw2_ref[0])
+        db2_ref[0] = jnp.zeros_like(db2_ref[0])
+
+    dw1_ref[0] += x.T @ dpre
+    db1_ref[0] += jnp.sum(dpre, axis=0)
+    dw2_ref[0] += h.T @ g
+    db2_ref[0] += jnp.sum(g, axis=0)
+
+
+def _specs(e, c, d, f, bc):
+    grid = (e, c // bc)
+    in_specs = [
+        pl.BlockSpec((1, bc, d), lambda i, j: (i, j, 0)),   # x
+        pl.BlockSpec((1, d, f), lambda i, j: (i, 0, 0)),    # w1
+        pl.BlockSpec((1, f), lambda i, j: (i, 0)),          # b1
+        pl.BlockSpec((1, f, d), lambda i, j: (i, 0, 0)),    # w2
+        pl.BlockSpec((1, d), lambda i, j: (i, 0)),          # b2
+    ]
+    return grid, in_specs
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def expert_ffn(x, w1, b1, w2, b2, block_tokens=None, interpret=common.INTERPRET_DEFAULT):
+    """Grouped expert FFN. x: [E, C, D]; weights per expert; returns [E, C, D]."""
+    return _expert_ffn_fwd_only(x, w1, b1, w2, b2, block_tokens, interpret)
+
+
+def _expert_ffn_fwd_only(x, w1, b1, w2, b2, block_tokens, interpret):
+    e, c, d = x.shape
+    f = w1.shape[-1]
+    bc = block_tokens or common.ffn_block_tokens(c, d, f)
+    grid, in_specs = _specs(e, c, d, f, bc)
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bc, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, c, d), x.dtype),
+        interpret=interpret,
+    )(x, w1, b1, w2, b2)
+
+
+def _vjp_fwd(x, w1, b1, w2, b2, block_tokens, interpret):
+    y = _expert_ffn_fwd_only(x, w1, b1, w2, b2, block_tokens, interpret)
+    return y, (x, w1, b1, w2, b2)
+
+
+def _vjp_bwd(block_tokens, interpret, res, g):
+    x, w1, b1, w2, b2 = res
+    e, c, d = x.shape
+    f = w1.shape[-1]
+    bc = block_tokens or common.ffn_block_tokens(c, d, f)
+    grid, in_specs = _specs(e, c, d, f, bc)
+    in_specs = in_specs[:4]  # x, w1, b1, w2 (b2 unused in bwd)
+    in_specs.append(pl.BlockSpec((1, bc, d), lambda i, j: (i, j, 0)))  # g
+    out_specs = [
+        pl.BlockSpec((1, bc, d), lambda i, j: (i, j, 0)),   # dx
+        pl.BlockSpec((1, d, f), lambda i, j: (i, 0, 0)),    # dw1 (accumulated)
+        pl.BlockSpec((1, f), lambda i, j: (i, 0)),          # db1
+        pl.BlockSpec((1, f, d), lambda i, j: (i, 0, 0)),    # dw2
+        pl.BlockSpec((1, d), lambda i, j: (i, 0)),          # db2
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((e, c, d), x.dtype),
+        jax.ShapeDtypeStruct((e, d, f), w1.dtype),
+        jax.ShapeDtypeStruct((e, f), b1.dtype),
+        jax.ShapeDtypeStruct((e, f, d), w2.dtype),
+        jax.ShapeDtypeStruct((e, d), b2.dtype),
+    ]
+    dx, dw1, db1, dw2, db2 = pl.pallas_call(
+        _bwd_kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, w1, b1, w2, g)
+    return dx, dw1, db1, dw2, db2
+
+
+expert_ffn.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,99 @@
+"""Noisy top-k gating as a Pallas kernel.
+
+The kernel consumes precomputed logits [T, E] (the gate matmul itself is a
+trivially-fused GEMV that XLA handles; the irregular part — iterative top-k
+selection + masked softmax — is what benefits from a hand-written kernel)
+and produces:
+    scores  [T, E]  softmax over top-k-masked logits (zeros elsewhere)
+    indices [T, K]  int32 expert ids, descending score
+    weights [T, K]  the matching combine weights
+
+Gradients flow through `scores` only (indices are integral); the custom_vjp
+backward differentiates the reference masked-softmax at fixed mask — the
+same gradient the standard top-k MoE uses.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common, ref
+
+
+def _kernel(logits_ref, scores_ref, idx_ref, w_ref, *, k):
+    logits = logits_ref[...]                         # [BT, E]
+    bt, e = logits.shape
+    neg = jnp.finfo(logits.dtype).min
+    masked = logits
+    picked = jnp.zeros((bt, e), dtype=jnp.bool_)
+    idxs = []
+    # iterative argmax: k passes (k <= 3 in every paper config)
+    for _ in range(k):
+        j = jnp.argmax(masked, axis=-1)              # [BT]
+        idxs.append(j.astype(jnp.int32))
+        onehot = jax.nn.one_hot(j, e, dtype=jnp.bool_)
+        picked = picked | onehot
+        masked = jnp.where(onehot, neg, masked)
+    # softmax over the picked set
+    sel = jnp.where(picked, logits, neg)
+    m = jnp.max(sel, axis=-1, keepdims=True)
+    ex = jnp.where(picked, jnp.exp(sel - m), 0.0)
+    scores = ex / jnp.sum(ex, axis=-1, keepdims=True)
+    scores_ref[...] = scores.astype(logits.dtype)
+    rows = jnp.arange(bt)
+    for kk in range(k):
+        idx_ref[:, kk] = idxs[kk]
+        w_ref[:, kk] = scores[rows, idxs[kk]]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def topk_gating(logits, k, block_tokens=None, interpret=common.INTERPRET_DEFAULT):
+    return _fwd_only(logits, k, block_tokens, interpret)
+
+
+def _fwd_only(logits, k, block_tokens, interpret):
+    t, e = logits.shape
+    bt = block_tokens or common.largest_divisor_leq(t, 512)
+    kern = functools.partial(_kernel, k=k)
+    scores, idx, w = pl.pallas_call(
+        kern,
+        grid=(t // bt,),
+        in_specs=[pl.BlockSpec((bt, e), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bt, e), lambda i: (i, 0)),
+            pl.BlockSpec((bt, k), lambda i: (i, 0)),
+            pl.BlockSpec((bt, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, e), logits.dtype),
+            jax.ShapeDtypeStruct((t, k), jnp.int32),
+            jax.ShapeDtypeStruct((t, k), logits.dtype),
+        ],
+        interpret=interpret,
+    )(logits)
+    return scores, idx, w
+
+
+def _vjp_fwd(logits, k, block_tokens, interpret):
+    out = _fwd_only(logits, k, block_tokens, interpret)
+    return out, (logits,)
+
+
+def _vjp_bwd(k, block_tokens, interpret, res, g):
+    (logits,) = res
+    gscores, _, gweights = g
+
+    def f(lg):
+        scores, idx, w = ref.topk_gating(lg, k)
+        return scores, w
+
+    _, vjp = jax.vjp(f, logits)
+    (dlogits,) = vjp((gscores, gweights))
+    return (dlogits,)
+
+
+topk_gating.defvjp(_vjp_fwd, _vjp_bwd)

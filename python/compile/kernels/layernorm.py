@@ -1,0 +1,108 @@
+"""Fused LayerNorm Pallas kernel (fwd + bwd via custom_vjp).
+
+Grid tiles the token axis; gamma/beta stay resident. The backward kernel
+accumulates dgamma/dbeta across token-blocks in the same sequential-grid
+pattern as expert_ffn's weight gradients.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+EPS = 1e-5
+
+
+def _fwd_kernel(x_ref, g_ref, b_ref, o_ref):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    xhat = (x - mu) * jax.lax.rsqrt(var + EPS)
+    o_ref[...] = xhat * g_ref[...] + b_ref[...]
+
+
+def _bwd_kernel(x_ref, g_ref, dy_ref, dx_ref, dg_ref, db_ref):
+    tblk = pl.program_id(0)
+    x = x_ref[...]
+    dy = dy_ref[...]
+    gamma = g_ref[...]
+    d = x.shape[-1]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + EPS)
+    xhat = (x - mu) * rstd
+    dxhat = dy * gamma
+    # standard LN backward
+    dx = (dxhat - jnp.mean(dxhat, axis=-1, keepdims=True)
+          - xhat * jnp.mean(dxhat * xhat, axis=-1, keepdims=True)) * rstd
+    dx_ref[...] = dx
+
+    @pl.when(tblk == 0)
+    def _init():
+        dg_ref[...] = jnp.zeros_like(dg_ref[...])
+        db_ref[...] = jnp.zeros_like(db_ref[...])
+
+    dg_ref[...] += jnp.sum(dy * xhat, axis=0)
+    db_ref[...] += jnp.sum(dy, axis=0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def layernorm(x, gamma, beta, block_tokens=None, interpret=common.INTERPRET_DEFAULT):
+    """LayerNorm over the last axis. x: [T, D]; gamma/beta: [D]."""
+    return _fwd_only(x, gamma, beta, block_tokens, interpret)
+
+
+def _fwd_only(x, gamma, beta, block_tokens, interpret):
+    t, d = x.shape
+    bt = block_tokens or common.largest_divisor_leq(t, 256)
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=(t // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        interpret=interpret,
+    )(x, gamma, beta)
+
+
+def _vjp_fwd(x, gamma, beta, block_tokens, interpret):
+    return _fwd_only(x, gamma, beta, block_tokens, interpret), (x, gamma)
+
+
+def _vjp_bwd(block_tokens, interpret, res, dy):
+    x, gamma = res
+    t, d = x.shape
+    bt = block_tokens or common.largest_divisor_leq(t, 256)
+    dx, dg, db = pl.pallas_call(
+        _bwd_kernel,
+        grid=(t // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, d), x.dtype),
+            jax.ShapeDtypeStruct((d,), gamma.dtype),
+            jax.ShapeDtypeStruct((d,), gamma.dtype),
+        ],
+        interpret=interpret,
+    )(x, gamma, dy)
+    return dx, dg, db
+
+
+layernorm.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,196 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function here is the mathematically-obvious implementation of the
+corresponding kernel in this package. pytest compares kernel outputs against
+these under hypothesis-driven shape/dtype sweeps; they are also used by the
+L2 model as the autodiff reference when deriving custom_vjp rules.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# LayerNorm
+# ---------------------------------------------------------------------------
+
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    """LayerNorm over the last axis. x: [..., D]; gamma/beta: [D]."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    xhat = (x - mu) * jax.lax.rsqrt(var + eps)
+    return xhat * gamma + beta
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP / shared expert (GELU FFN)
+# ---------------------------------------------------------------------------
+
+def gelu(x: jax.Array) -> jax.Array:
+    """tanh-approximation GELU (matches the kernel's polynomial)."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def ffn(x: jax.Array, w1: jax.Array, b1: jax.Array,
+        w2: jax.Array, b2: jax.Array) -> jax.Array:
+    """Two-layer GELU FFN. x: [T, D]; w1: [D, F]; w2: [F, D]."""
+    h = gelu(x @ w1 + b1)
+    return h @ w2 + b2
+
+
+# ---------------------------------------------------------------------------
+# Grouped expert FFN (the MoE compute hot-spot)
+# ---------------------------------------------------------------------------
+
+def expert_ffn(x: jax.Array, w1: jax.Array, b1: jax.Array,
+               w2: jax.Array, b2: jax.Array) -> jax.Array:
+    """Per-expert FFN over capacity-grouped tokens.
+
+    x: [E, C, D] tokens already dispatched to experts (C = capacity).
+    w1: [E, D, F], b1: [E, F], w2: [E, F, D], b2: [E, D].
+    Returns [E, C, D].
+    """
+    h = gelu(jnp.einsum("ecd,edf->ecf", x, w1) + b1[:, None, :])
+    return jnp.einsum("ecf,efd->ecd", h, w2) + b2[:, None, :]
+
+
+# ---------------------------------------------------------------------------
+# Noisy top-k gating (Shazeer et al. 2017, Eqs. 2-5 in the paper)
+# ---------------------------------------------------------------------------
+
+
+def iter_topk(x: jax.Array, k: int):
+    """top_k via k iterative argmax passes (k <= 3 everywhere in the paper).
+
+    Replaces jax.lax.top_k: jax lowers top_k to the dedicated `topk` HLO
+    instruction, which the XLA 0.5.1 text parser (the version the rust
+    `xla` crate binds) does not know. argmax lowers to plain reduces.
+    """
+    vals, idxs = [], []
+    masked = x
+    neg = jnp.finfo(x.dtype).min
+    for _ in range(k):
+        j = jnp.argmax(masked, axis=-1)
+        v = jnp.take_along_axis(masked, j[..., None], axis=-1)[..., 0]
+        idxs.append(j.astype(jnp.int32))
+        vals.append(v)
+        masked = jnp.where(jax.nn.one_hot(j, x.shape[-1], dtype=jnp.bool_), neg, masked)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+def gate_logits(x: jax.Array, w_gate: jax.Array, w_noise=None, noise=None) -> jax.Array:
+    """H(x): clean logits plus optional noise scaled by softplus(x.W_noise).
+
+    x: [T, D]; w_gate/w_noise: [D, E]; noise: [T, E] standard normal draws
+    (passed in explicitly so kernels stay deterministic functions).
+    """
+    logits = x @ w_gate
+    if w_noise is not None and noise is not None:
+        logits = logits + noise * jax.nn.softplus(x @ w_noise)
+    return logits
+
+
+def topk_mask(logits: jax.Array, k: int) -> jax.Array:
+    """TopK-bar: keep top-k entries, -inf elsewhere. logits: [T, E]."""
+    kth = iter_topk(logits, k)[0][..., -1:]  # [T, 1] k-th largest value
+    neg = jnp.full_like(logits, -jnp.inf)
+    return jnp.where(logits >= kth, logits, neg)
+
+
+def topk_gating(logits: jax.Array, k: int):
+    """Softmax over the top-k masked logits (Eq. 2).
+
+    Returns (scores [T, E] with zeros outside top-k,
+             indices [T, k] int32 sorted by descending score,
+             weights [T, k] the matching scores).
+    """
+    masked = topk_mask(logits, k)
+    scores = jax.nn.softmax(masked, axis=-1)
+    weights, indices = iter_topk(scores, k)
+    return scores, indices, weights
+
+
+def load_balance_loss(logits: jax.Array, scores: jax.Array, k: int) -> jax.Array:
+    """Switch-style auxiliary loss: E * sum_e fraction_e * prob_e.
+
+    fraction_e = share of tokens whose top-k picks include expert e;
+    prob_e = mean router probability mass on e (from full softmax).
+    """
+    e = logits.shape[-1]
+    probs = jax.nn.softmax(logits, axis=-1)                # [T, E]
+    picked = (scores > 0).astype(logits.dtype)             # [T, E]
+    fraction = jnp.mean(picked, axis=0) / k                # [E]
+    prob = jnp.mean(probs, axis=0)                         # [E]
+    return e * jnp.sum(fraction * prob)
+
+
+# ---------------------------------------------------------------------------
+# GShard-style dispatch / combine (the data plane mirrored by rust moe/)
+# ---------------------------------------------------------------------------
+
+def dispatch_combine_masks(indices: jax.Array, weights: jax.Array,
+                           n_experts: int, capacity: int):
+    """Build dispatch [T, E, C] and combine [T, E, C] masks.
+
+    Position-in-expert is assigned first-come-first-served per expert over
+    the flattened (token, k) order; overflow beyond `capacity` is dropped —
+    exactly the policy rust/src/moe/dispatch.rs implements.
+    """
+    t, k = indices.shape
+    onehot = jax.nn.one_hot(indices, n_experts, dtype=jnp.int32)  # [T, k, E]
+    # priority: earlier k-slot of earlier token wins
+    flat = onehot.reshape(t * k, n_experts)
+    pos = jnp.cumsum(flat, axis=0) - flat                        # [T*k, E]
+    pos = pos.reshape(t, k, n_experts)
+    in_cap = (pos < capacity) & (onehot > 0)
+    pos_clipped = jnp.clip(pos, 0, capacity - 1)
+    cap_onehot = jax.nn.one_hot(pos_clipped, capacity, dtype=jnp.float32)  # [T,k,E,C]
+    disp = jnp.einsum("tke,tkec->tec", in_cap.astype(jnp.float32),
+                      cap_onehot * in_cap[..., None].astype(jnp.float32))
+    disp = jnp.clip(disp, 0.0, 1.0)
+    comb = jnp.einsum("tk,tke,tkec->tec",
+                      weights.astype(jnp.float32),
+                      in_cap.astype(jnp.float32),
+                      cap_onehot)
+    return disp, comb
+
+
+def moe_layer(x: jax.Array, w_gate: jax.Array, k: int, capacity: int,
+              w1: jax.Array, b1: jax.Array, w2: jax.Array, b2: jax.Array,
+              w_noise=None, noise=None):
+    """Full reference MoE layer: gate -> dispatch -> expert_ffn -> combine.
+
+    x: [T, D]. Returns (y [T, D], aux_loss scalar, scores [T, E]).
+    """
+    e = w_gate.shape[-1]
+    logits = gate_logits(x, w_gate, w_noise, noise)
+    scores, indices, weights = topk_gating(logits, k)
+    disp, comb = dispatch_combine_masks(indices, weights, e, capacity)
+    xe = jnp.einsum("td,tec->ecd", x, disp)                 # [E, C, D]
+    ye = expert_ffn(xe, w1, b1, w2, b2)                     # [E, C, D]
+    y = jnp.einsum("ecd,tec->td", ye, comb)                 # [T, D]
+    aux = load_balance_loss(logits, scores, k)
+    return y, aux, scores
+
+
+# ---------------------------------------------------------------------------
+# Causal multi-head attention core
+# ---------------------------------------------------------------------------
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array,
+              causal: bool = True) -> jax.Array:
+    """softmax(QK^T/sqrt(d) [+ causal mask]) V per head.
+
+    q, k, v: [H, T, Dh]. Returns [H, T, Dh].
+    """
+    dh = q.shape[-1]
+    scores = jnp.einsum("htd,hsd->hts", q, k) / jnp.sqrt(dh).astype(q.dtype)
+    if causal:
+        t = q.shape[1]
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hts,hsd->htd", probs, v)

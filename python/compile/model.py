@@ -1,0 +1,409 @@
+"""L2: the ScMoE-family transformer in JAX, composed from L1 Pallas kernels.
+
+Every architecture in the paper is a pure function of (params, inputs):
+standard top-k MoE, shared-expert MoE, ScMoE Pos-1/2/3, ScMoE-2, DGMoE and
+DGMoE-Share — see config.ARCHS. Parameters are a flat, ordered list of
+named tensors (`param_specs`) so the Rust runtime can hold them as opaque
+device buffers.
+
+The model never runs at serving time: `aot.py` lowers the jitted functions
+to HLO text once, and the Rust coordinator executes the artifacts.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels import attention as attn_k
+from .kernels import expert_ffn as effn_k
+from .kernels import gating as gate_k
+from .kernels import layernorm as ln_k
+from .kernels import ref
+
+Params = Dict[str, jax.Array]
+
+# Stats layout per MoE block for the Fig.11 analysis (see `stats` below).
+STATS_PER_MOE = 4
+STATS_FIELDS = ("repeat_frac", "l2_dist", "score_prev", "score_cur")
+
+
+# ---------------------------------------------------------------------------
+# Parameter specification (the Python<->Rust interface contract)
+# ---------------------------------------------------------------------------
+
+def _ffn_specs(prefix: str, d: int, f: int):
+    return [
+        (f"{prefix}.w1", (d, f)),
+        (f"{prefix}.b1", (f,)),
+        (f"{prefix}.w2", (f, d)),
+        (f"{prefix}.b2", (d,)),
+    ]
+
+
+def _moe_param_block(cfg: ModelConfig, b: int):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    specs = [(f"blk{b}.moe.wg", (d, e))]
+    if cfg.noisy_gate:
+        specs.append((f"blk{b}.moe.wn", (d, e)))
+    specs += [
+        (f"blk{b}.moe.w1", (e, d, f)),
+        (f"blk{b}.moe.b1", (e, f)),
+        (f"blk{b}.moe.w2", (e, f, d)),
+        (f"blk{b}.moe.b2", (e, d)),
+    ]
+    return specs
+
+
+def moe_share_source(cfg: ModelConfig, b: int) -> int:
+    """For dgmoe_share, MoE params of pair p>0,odd reuse pair p-1's block."""
+    if cfg.arch != "dgmoe_share":
+        return b
+    pair = b // 2
+    if pair % 2 == 1:
+        return b - 2
+    return b
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list — the single flattening order used by
+    init/train/eval artifacts and recorded in manifest.json."""
+    d, f = cfg.d_model, cfg.d_ff
+    specs: List[Tuple[str, Tuple[int, ...]]] = [
+        ("embed.tok", (cfg.vocab_size, d)),
+        ("embed.pos", (cfg.seq_len, d)),
+    ]
+    for b in range(cfg.n_blocks):
+        specs += [
+            (f"blk{b}.ln1.g", (d,)), (f"blk{b}.ln1.b", (d,)),
+            (f"blk{b}.attn.wqkv", (d, 3 * d)), (f"blk{b}.attn.bqkv", (3 * d,)),
+            (f"blk{b}.attn.wo", (d, d)), (f"blk{b}.attn.bo", (d,)),
+            (f"blk{b}.ln2.g", (d,)), (f"blk{b}.ln2.b", (d,)),
+        ]
+        is_moe = (b % 2 == 1) and cfg.arch != "dense"
+        if not is_moe:
+            specs += _ffn_specs(f"blk{b}.mlp", d, f)
+        else:
+            if moe_share_source(cfg, b) == b:
+                specs += _moe_param_block(cfg, b)
+            if cfg.uses_shortcut:
+                # dedicated LN for the shortcut input to the MoE module
+                specs += [(f"blk{b}.lnsc.g", (d,)), (f"blk{b}.lnsc.b", (d,))]
+            if cfg.has_shared_expert:
+                specs += _ffn_specs(f"blk{b}.se", d, f)
+                if cfg.se_gate:
+                    specs.append((f"blk{b}.segate.w", (d,)))
+    specs += [("final_ln.g", (d,)), ("final_ln.b", (d,))]
+    if cfg.task == "lm":
+        specs.append(("head.w", (d, cfg.vocab_size)))
+    else:
+        specs += [("head.w", (d, cfg.n_classes)), ("head.b", (cfg.n_classes,))]
+    return specs
+
+
+def param_count(cfg: ModelConfig) -> int:
+    total = 0
+    for _, shape in param_specs(cfg):
+        n = 1
+        for s in shape:
+            n *= s
+        total += n
+    return total
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> List[jax.Array]:
+    """Deterministic initialization in param_specs order (scaled normal for
+    matrices, ones/zeros for norms and biases)."""
+    out = []
+    specs = param_specs(cfg)
+    keys = jax.random.split(key, len(specs))
+    for (name, shape), k in zip(specs, keys):
+        if name.endswith(".g") or name.endswith("segate.w"):
+            out.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(".b") or name.endswith((".b1", ".b2", ".bqkv", ".bo")):
+            out.append(jnp.zeros(shape, jnp.float32))
+        elif name.endswith((".wg", ".wn")):
+            out.append(0.02 * jax.random.normal(k, shape, jnp.float32))
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = 0.02 if "embed" in name else 1.0 / jnp.sqrt(fan_in)
+            out.append(std * jax.random.normal(k, shape, jnp.float32))
+    return out
+
+
+def to_dict(cfg: ModelConfig, flat: List[jax.Array]) -> Params:
+    return {name: t for (name, _), t in zip(param_specs(cfg), flat)}
+
+
+def to_flat(cfg: ModelConfig, p: Params) -> List[jax.Array]:
+    return [p[name] for name, _ in param_specs(cfg)]
+
+
+# ---------------------------------------------------------------------------
+# Sub-layers
+# ---------------------------------------------------------------------------
+
+def _ln2d(x: jax.Array, g: jax.Array, b: jax.Array) -> jax.Array:
+    """LayerNorm over last dim for [B, S, D] via the Pallas kernel."""
+    bsz, s, d = x.shape
+    return ln_k.layernorm(x.reshape(bsz * s, d), g, b).reshape(bsz, s, d)
+
+
+def attn_sublayer(cfg: ModelConfig, p: Params, b: int, x: jax.Array) -> jax.Array:
+    """Pre-norm causal self-attention with residual. x: [B, S, D]."""
+    bsz, s, d = x.shape
+    h = _ln2d(x, p[f"blk{b}.ln1.g"], p[f"blk{b}.ln1.b"])
+    qkv = h @ p[f"blk{b}.attn.wqkv"] + p[f"blk{b}.attn.bqkv"]   # [B,S,3D]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def per_example(q1, k1, v1):
+        # [S, D] -> [H, S, Dh]
+        def heads(t):
+            return t.reshape(s, cfg.n_heads, cfg.d_head).transpose(1, 0, 2)
+        o = attn_k.attention(heads(q1), heads(k1), heads(v1),
+                             causal=(cfg.task == "lm"))
+        return o.transpose(1, 0, 2).reshape(s, d)
+
+    o = jax.vmap(per_example)(q, k, v)
+    return x + o @ p[f"blk{b}.attn.wo"] + p[f"blk{b}.attn.bo"]
+
+
+def ffn_sublayer(p: Params, prefix: str, x: jax.Array,
+                 ln_g: jax.Array, ln_b: jax.Array) -> jax.Array:
+    """Pre-norm MLP with residual, using the expert-FFN kernel with E=1
+    (one 'expert' = the dense MLP — same hot-path code)."""
+    bsz, s, d = x.shape
+    h = _ln2d(x, ln_g, ln_b).reshape(1, bsz * s, d)
+    y = effn_k.expert_ffn(
+        h,
+        p[f"{prefix}.w1"][None], p[f"{prefix}.b1"][None],
+        p[f"{prefix}.w2"][None], p[f"{prefix}.b2"][None],
+    )[0].reshape(bsz, s, d)
+    return x + y
+
+
+def _se_output(cfg: ModelConfig, p: Params, b: int, x: jax.Array) -> jax.Array:
+    """Shared-expert branch output (no residual add)."""
+    bsz, s, d = x.shape
+    h = _ln2d(x, p[f"blk{b}.ln2.g"], p[f"blk{b}.ln2.b"])
+    y = effn_k.expert_ffn(
+        h.reshape(1, bsz * s, d),
+        p[f"blk{b}.se.w1"][None], p[f"blk{b}.se.b1"][None],
+        p[f"blk{b}.se.w2"][None], p[f"blk{b}.se.b2"][None],
+    )[0].reshape(bsz, s, d)
+    if cfg.se_gate:
+        # Appendix A.3: per-token scalar coefficient from a linear gate
+        coef = jax.nn.sigmoid(h @ p[f"blk{b}.segate.w"])    # [B, S]
+        y = y * coef[..., None]
+    return y
+
+
+def _moe_apply(cfg: ModelConfig, p: Params, b: int, h2d: jax.Array, k: int,
+               noise: jax.Array | None):
+    """Run the gate + dispatch + grouped-expert-FFN + combine on [T, D]
+    (already layer-normed). Returns (y [T,D], aux scalar, logits, scores,
+    indices, weights)."""
+    src = moe_share_source(cfg, b)
+    wg = p[f"blk{src}.moe.wg"]
+    wn = p.get(f"blk{src}.moe.wn") if cfg.noisy_gate else None
+    logits = ref.gate_logits(h2d, wg, wn, noise)
+    scores, idx, w = gate_k.topk_gating(logits, k)
+    t = h2d.shape[0]
+    cap = cfg.expert_capacity(t)
+    disp, comb = ref.dispatch_combine_masks(idx, w, cfg.n_experts, cap)
+    xe = jnp.einsum("td,tec->ecd", h2d, disp)
+    ye = effn_k.expert_ffn(
+        xe,
+        p[f"blk{src}.moe.w1"], p[f"blk{src}.moe.b1"],
+        p[f"blk{src}.moe.w2"], p[f"blk{src}.moe.b2"],
+    )
+    y = jnp.einsum("ecd,tec->td", ye, comb)
+    aux = ref.load_balance_loss(logits, scores, k)
+    return y, aux, logits, scores, idx, w
+
+
+# ---------------------------------------------------------------------------
+# Full forward
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, flat_params: List[jax.Array], tokens: jax.Array,
+            noise_key: jax.Array | None = None, train: bool = False):
+    """Forward pass.
+
+    tokens: int32 [B, S]. Returns dict with:
+      logits      [B, S, vocab] (lm) or [B, n_classes] (cls)
+      aux         scalar MoE load-balance loss (already coef-weighted)
+      stats       [n_moe_blocks, 4] Fig.11 instrumentation
+      selections  [n_moe_blocks, T, k] expert choices (for offload driver)
+    """
+    p = to_dict(cfg, flat_params)
+    bsz, s = tokens.shape
+    d = cfg.d_model
+    x = p["embed.tok"][tokens] + p["embed.pos"][None, :s, :]
+
+    aux_total = jnp.zeros((), jnp.float32)
+    stats_rows = []
+    selections = []
+    k = cfg.top_k
+
+    prev_in = x       # input of preceding block  (Pos-3)
+    prev_mid = x      # post-attention intermediate of preceding block (Pos-2)
+    prev_out = x      # output of preceding block (Pos-1)
+
+    moe_i = 0
+    for b in range(cfg.n_blocks):
+        block_in = x
+        x = attn_sublayer(cfg, p, b, x)
+        mid = x
+        is_moe = (b % 2 == 1) and cfg.arch != "dense"
+        if not is_moe:
+            x = ffn_sublayer(p, f"blk{b}.mlp", x,
+                             p[f"blk{b}.ln2.g"], p[f"blk{b}.ln2.b"])
+        else:
+            t = bsz * s
+            if noise_key is not None and cfg.noisy_gate and train:
+                nk = jax.random.fold_in(noise_key, b)
+                noise = jax.random.normal(nk, (t, cfg.n_experts))
+            else:
+                noise = None
+
+            if cfg.arch in ("top1", "top2", "top3"):
+                h2d = _ln2d(x, p[f"blk{b}.ln2.g"], p[f"blk{b}.ln2.b"]).reshape(t, d)
+                y, aux, logits, scores, idx, w = _moe_apply(cfg, p, b, h2d, k, noise)
+                x = x + y.reshape(bsz, s, d)
+                stats_rows.append(_stats_plain(logits, w))
+            elif cfg.arch == "shared":
+                h2d = _ln2d(x, p[f"blk{b}.ln2.g"], p[f"blk{b}.ln2.b"]).reshape(t, d)
+                y, aux, logits, scores, idx, w = _moe_apply(cfg, p, b, h2d, 1, noise)
+                x = x + _se_output(cfg, p, b, x) + y.reshape(bsz, s, d)
+                stats_rows.append(_stats_plain(logits, w))
+            elif cfg.arch in ("scmoe_pos1", "scmoe", "scmoe_pos3", "scmoe2"):
+                src = {"scmoe_pos1": prev_out, "scmoe": prev_mid,
+                       "scmoe_pos3": prev_in, "scmoe2": prev_mid}[cfg.arch]
+                h_sc = _ln2d(src, p[f"blk{b}.lnsc.g"], p[f"blk{b}.lnsc.b"]).reshape(t, d)
+                y, aux, logits, scores, idx, w = _moe_apply(cfg, p, b, h_sc, k, noise)
+                x = x + _se_output(cfg, p, b, x) + y.reshape(bsz, s, d)
+                # Fig.11 (a)/(b): same-gate selection on cur vs prev reps
+                h_cur = _ln2d(x, p[f"blk{b}.ln2.g"], p[f"blk{b}.ln2.b"]).reshape(t, d)
+                stats_rows.append(_stats_shortcut(cfg, p, b, h_sc, h_cur, logits, w))
+            elif cfg.arch in ("dgmoe", "dgmoe_share"):
+                h_sc = _ln2d(prev_mid, p[f"blk{b}.lnsc.g"],
+                             p[f"blk{b}.lnsc.b"]).reshape(t, d)
+                h_cur = _ln2d(x, p[f"blk{b}.ln2.g"], p[f"blk{b}.ln2.b"]).reshape(t, d)
+                y, aux, idx, w, st = _dgmoe_apply(cfg, p, b, h_sc, h_cur, noise)
+                x = x + y.reshape(bsz, s, d)
+                stats_rows.append(st)
+            else:  # dense handled above
+                raise AssertionError(cfg.arch)
+            aux_total = aux_total + aux
+            selections.append(idx)
+            moe_i += 1
+        prev_in = block_in
+        prev_mid = mid
+        prev_out = x
+
+    x = _ln2d(x, p["final_ln.g"], p["final_ln.b"])
+    if cfg.task == "lm":
+        logits_out = x @ p["head.w"]
+    else:
+        pooled = jnp.mean(x, axis=1)
+        logits_out = pooled @ p["head.w"] + p["head.b"]
+
+    stats = (jnp.stack(stats_rows) if stats_rows
+             else jnp.zeros((0, STATS_PER_MOE), jnp.float32))
+    sel = (jnp.stack(selections) if selections
+           else jnp.zeros((0, bsz * s, max(k, 1)), jnp.int32))
+    return {
+        "logits": logits_out,
+        "aux": cfg.moe_loss_coef * aux_total,
+        "stats": stats,
+        "selections": sel,
+    }
+
+
+def _stats_plain(logits: jax.Array, w: jax.Array) -> jax.Array:
+    """Stats row for non-shortcut MoE: only the mean top-1 score is
+    meaningful; repeat/L2 fields are zero."""
+    return jnp.stack([
+        jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
+        jnp.zeros((), jnp.float32), jnp.mean(w[:, 0]),
+    ])
+
+
+def _stats_shortcut(cfg, p, b, h_prev, h_cur, logits_prev, w_prev) -> jax.Array:
+    """Fig.11 instrumentation: apply the same gate to the current-layer
+    representation and compare selections/representations."""
+    src = moe_share_source(cfg, b)
+    wg = p[f"blk{src}.moe.wg"]
+    logits_cur = h_cur @ wg
+    top1_prev = jnp.argmax(logits_prev, axis=-1)
+    top1_cur = jnp.argmax(logits_cur, axis=-1)
+    repeat = jnp.mean((top1_prev == top1_cur).astype(jnp.float32))
+    l2 = jnp.mean(jnp.linalg.norm(h_prev - h_cur, axis=-1))
+    scores_cur = jax.nn.softmax(logits_cur, axis=-1)
+    return jnp.stack([
+        repeat, l2, jnp.mean(w_prev[:, 0]),
+        jnp.mean(jnp.max(scores_cur, axis=-1)),
+    ])
+
+
+def _dgmoe_apply(cfg, p, b, h_prev, h_cur, noise):
+    """DoubleGating MoE (Appendix A.2): top-1 on the preceding-layer rep and
+    top-1 on the current-layer rep, constrained to pick *distinct* experts
+    (if equal, the current layer takes its second-best)."""
+    src = moe_share_source(cfg, b)
+    wg = p[f"blk{src}.moe.wg"]
+    wn = p.get(f"blk{src}.moe.wn") if cfg.noisy_gate else None
+    t = h_prev.shape[0]
+    e = cfg.n_experts
+
+    logits_prev = ref.gate_logits(h_prev, wg, wn, noise)
+    logits_cur = h_cur @ wg
+    _, idx_p, w_p = gate_k.topk_gating(logits_prev, 1)
+    scores2, idx2, w2 = gate_k.topk_gating(logits_cur, 2)
+    same = idx2[:, 0] == idx_p[:, 0]
+    idx_c = jnp.where(same, idx2[:, 1], idx2[:, 0])[:, None]
+    w_c = jnp.ones_like(w_p)  # top-1 masked softmax weight == 1
+
+    cap = cfg.expert_capacity(t)
+    idx = jnp.concatenate([idx_p, idx_c], axis=1)          # [T, 2]
+    w = jnp.concatenate([w_p, w_c], axis=1)
+    disp, comb = ref.dispatch_combine_masks(idx, w, e, cap)
+    # prev tokens go through slot 0 routing, cur through slot 1 — dispatch
+    # masks mix them, so dispatch each representation with its own mask.
+    disp_p, comb_p = ref.dispatch_combine_masks(idx_p, w_p, e, cap)
+    disp_c, comb_c = ref.dispatch_combine_masks(idx_c, w_c, e, cap)
+    xe = (jnp.einsum("td,tec->ecd", h_prev, disp_p)
+          + jnp.einsum("td,tec->ecd", h_cur, disp_c))
+    # NB: capacity slots are assigned independently per mask, so a slot can
+    # be shared only if both masks routed different tokens to it; to keep
+    # the semantics exact we run the experts twice (prev and cur batches).
+    ye_p = effn_k.expert_ffn(
+        jnp.einsum("td,tec->ecd", h_prev, disp_p),
+        p[f"blk{src}.moe.w1"], p[f"blk{src}.moe.b1"],
+        p[f"blk{src}.moe.w2"], p[f"blk{src}.moe.b2"])
+    ye_c = effn_k.expert_ffn(
+        jnp.einsum("td,tec->ecd", h_cur, disp_c),
+        p[f"blk{src}.moe.w1"], p[f"blk{src}.moe.b1"],
+        p[f"blk{src}.moe.w2"], p[f"blk{src}.moe.b2"])
+    y = (jnp.einsum("ecd,tec->td", ye_p, comb_p)
+         + jnp.einsum("ecd,tec->td", ye_c, comb_c))
+
+    s_prev, _, _ = ref.topk_gating(logits_prev, 1)
+    aux = ref.load_balance_loss(logits_prev, s_prev, 1) \
+        + ref.load_balance_loss(logits_cur, scores2, 2)
+
+    # Fig.11 (c)/(d): gating scores of prev and cur selections
+    probs_prev = jax.nn.softmax(logits_prev, axis=-1)
+    probs_cur = jax.nn.softmax(logits_cur, axis=-1)
+    rows = jnp.arange(t)
+    st = jnp.stack([
+        jnp.mean(same.astype(jnp.float32)),
+        jnp.mean(jnp.linalg.norm(h_prev - h_cur, axis=-1)),
+        jnp.mean(probs_prev[rows, idx_p[:, 0]]),
+        jnp.mean(probs_cur[rows, idx_c[:, 0]]),
+    ])
+    return y, aux, idx, w, st

@@ -1,0 +1,103 @@
+"""Per-operator functions lowered into standalone artifacts.
+
+These are the units the Rust coordinator schedules (Fig. 5/6): the backbone
+stream (attn_op / mlp_op / se_op) and the MoE stream (gate_op / expert_op),
+with encode / All-to-All / decode living entirely in Rust. One artifact per
+operator per shape profile; the calibration harness measures their wallclock
+to ground the discrete-event simulator.
+
+`moe_fused_op` runs the whole MoE layer in one HLO — the numerics oracle the
+Rust-orchestrated distributed path is integration-tested against.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels import attention as attn_k
+from .kernels import expert_ffn as effn_k
+from .kernels import gating as gate_k
+from .kernels import layernorm as ln_k
+from .kernels import ref
+
+
+def attn_op(cfg: ModelConfig, x, ln_g, ln_b, wqkv, bqkv, wo, bo):
+    """Pre-norm causal attention sub-layer with residual. x: [T, D] (one
+    sequence; the coordinator batches sequences by stacking calls)."""
+    t, d = x.shape
+    h = ln_k.layernorm(x, ln_g, ln_b)
+    qkv = h @ wqkv + bqkv
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(z):
+        return z.reshape(t, cfg.n_heads, cfg.d_head).transpose(1, 0, 2)
+
+    o = attn_k.attention(heads(q), heads(k), heads(v), causal=(cfg.task == "lm"))
+    o = o.transpose(1, 0, 2).reshape(t, d)
+    return x + o @ wo + bo
+
+
+def mlp_op(cfg: ModelConfig, x, ln_g, ln_b, w1, b1, w2, b2):
+    """Pre-norm dense FFN sub-layer with residual. x: [T, D]."""
+    h = ln_k.layernorm(x, ln_g, ln_b)
+    y = effn_k.expert_ffn(h[None], w1[None], b1[None], w2[None], b2[None])[0]
+    return x + y
+
+
+def se_op(cfg: ModelConfig, x, ln_g, ln_b, w1, b1, w2, b2, segate_w):
+    """Shared-expert branch (returns the SE contribution, no residual)."""
+    h = ln_k.layernorm(x, ln_g, ln_b)
+    y = effn_k.expert_ffn(h[None], w1[None], b1[None], w2[None], b2[None])[0]
+    coef = jax.nn.sigmoid(h @ segate_w)
+    return y * coef[:, None]
+
+
+def gate_op(cfg: ModelConfig, x, ln_g, ln_b, wg, k: int):
+    """Gate routing on the (layer-normed) MoE input: returns int32 indices
+    [T, k] and combine weights [T, k]. Deterministic (inference path)."""
+    h = ln_k.layernorm(x, ln_g, ln_b)
+    logits = h @ wg
+    _, idx, w = gate_k.topk_gating(logits, k)
+    return h, idx, w
+
+
+def expert_op(cfg: ModelConfig, xe, w1, b1, w2, b2):
+    """One expert's FFN over its capacity buffer. xe: [C, D]."""
+    return effn_k.expert_ffn(xe[None], w1[None], b1[None], w2[None], b2[None])[0]
+
+
+def experts_op(cfg: ModelConfig, xe, w1, b1, w2, b2):
+    """All local experts' FFN over dispatched buffers. xe: [E, C, D]."""
+    return effn_k.expert_ffn(xe, w1, b1, w2, b2)
+
+
+def moe_fused_op(cfg: ModelConfig, x, ln_g, ln_b, wg, w1, b1, w2, b2, k: int,
+                 capacity: int):
+    """Entire MoE layer (gate+dispatch+experts+combine) in one HLO: the
+    numerics oracle for the Rust-orchestrated path. x: [T, D] un-normed."""
+    h = ln_k.layernorm(x, ln_g, ln_b)
+    y, aux, _ = ref.moe_layer(h, wg, k, capacity, w1, b1, w2, b2)
+    return y
+
+
+def ops_init(cfg: ModelConfig, seed):
+    """Weights for one Block-MLP + Block-MoE pair at ops shapes (stacked
+    expert weights; Rust slices per-expert contiguously)."""
+    key = jax.random.PRNGKey(seed)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 12)
+    sd = 1.0 / jnp.sqrt(d)
+    sf = 1.0 / jnp.sqrt(f)
+    return (
+        jnp.ones((d,)), jnp.zeros((d,)),                    # ln_g, ln_b
+        sd * jax.random.normal(ks[0], (d, 3 * d)), jnp.zeros((3 * d,)),
+        sd * jax.random.normal(ks[1], (d, d)), jnp.zeros((d,)),
+        sd * jax.random.normal(ks[2], (d, f)), jnp.zeros((f,)),   # mlp w1,b1
+        sf * jax.random.normal(ks[3], (f, d)), jnp.zeros((d,)),   # mlp w2,b2
+        0.02 * jax.random.normal(ks[4], (d, e)),                  # wg
+        sd * jax.random.normal(ks[5], (e, d, f)), jnp.zeros((e, f)),
+        sf * jax.random.normal(ks[6], (e, f, d)), jnp.zeros((e, d)),
+        jnp.ones((d,)),                                           # segate_w
+    )

@@ -1,0 +1,95 @@
+"""Structural performance analysis for L1/L2 (EXPERIMENTS.md §Perf).
+
+L1 (Pallas): interpret=True gives CPU-numpy timings only, so kernel quality
+is assessed structurally — VMEM footprint of each BlockSpec schedule and
+MXU-occupancy estimates for the matmul tiles (DESIGN.md §9).
+
+L2 (JAX): XLA cost analysis of the lowered modules — FLOPs, bytes accessed,
+and the arithmetic-intensity ratio the CPU/TPU roofline cares about.
+
+Usage:  python -m compile.perf [--preset tiny] [--arch scmoe]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from . import model, train
+from .config import preset
+from .kernels import common
+
+
+def l1_report(cfg) -> None:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    cap = cfg.expert_capacity(cfg.tokens_per_batch())
+    bc = common.ffn_block_tokens(cap, d, f)
+    fp = common.ffn_vmem_footprint(bc, d, f)
+    print(f"== L1 expert_ffn kernel ({cfg.name}: E={e} C={cap} D={d} F={f}) ==")
+    print(f"  token-block BC        : {bc}")
+    print(f"  VMEM/grid-step        : {fp / 1024:.0f} KiB "
+          f"(budget {common.VMEM_BUDGET // 1024} KiB, "
+          f"{100 * fp / common.VMEM_BUDGET:.0f}% occupied)")
+    u1 = common.mxu_utilization_estimate(bc, d, f)
+    u2 = common.mxu_utilization_estimate(bc, f, d)
+    print(f"  MXU occupancy (x@w1)  : {u1:.2f}  (tiles {bc}x{d}x{f} pad->128)")
+    print(f"  MXU occupancy (h@w2)  : {u2:.2f}")
+    flops = common.flops_expert_ffn(e, cap, d, f)
+    hbm = (e * (2 * d * f + f + d) + 2 * e * cap * d) * 4
+    print(f"  FLOPs/layer           : {flops / 1e6:.1f} MFLOP, "
+          f"HBM traffic {hbm / 1e6:.2f} MB, intensity {flops / hbm:.1f} FLOP/B")
+    # paper-efficiency framing: ratio to a dense top-2 FFN of equal activated
+    # params (ScMoE activates 1 routed + 1 shared = same as top-2)
+    print(f"  double-buffer headroom: {'yes' if fp < common.VMEM_USABLE else 'NO'}")
+
+
+def l2_report(cfg) -> None:
+    specs = model.param_specs(cfg)
+    pspecs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in specs]
+    tok = jax.ShapeDtypeStruct((cfg.batch_size, cfg.seq_len), jnp.int32)
+    scalar = jax.ShapeDtypeStruct((), jnp.int32)
+    n = len(pspecs)
+
+    def tstep(*flat):
+        p, m, v = list(flat[:n]), list(flat[n:2 * n]), list(flat[2 * n:3 * n])
+        step, tokens, targets, seed = flat[3 * n:]
+        out = train.train_step(cfg, p, m, v, step, tokens, targets, seed)
+        return tuple(out[0]) + (out[3],)
+
+    lowered = jax.jit(tstep, keep_unused=True).lower(
+        *(pspecs * 3 + [scalar, tok, tok if cfg.task == "lm" else
+                        jax.ShapeDtypeStruct((cfg.batch_size,), jnp.int32), scalar]))
+    compiled = lowered.compile()
+    try:
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, list) else ca
+        flops = ca.get("flops", float("nan"))
+        bytes_ = ca.get("bytes accessed", float("nan"))
+        print(f"== L2 train_step ({cfg.arch}/{cfg.name}) ==")
+        print(f"  params               : {model.param_count(cfg) / 1e6:.2f} M")
+        print(f"  FLOPs/step           : {flops / 1e9:.2f} GFLOP")
+        print(f"  bytes accessed/step  : {bytes_ / 1e9:.2f} GB")
+        print(f"  arithmetic intensity : {flops / bytes_:.2f} FLOP/B")
+        toks = cfg.tokens_per_batch()
+        print(f"  FLOPs/token          : {flops / toks / 1e6:.2f} MFLOP "
+              f"(6*P = {6 * model.param_count(cfg) / 1e6:.1f} expected for dense)")
+    except Exception as e:  # cost analysis availability varies by version
+        print(f"  cost analysis unavailable: {e}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny")
+    ap.add_argument("--arch", default="scmoe")
+    ap.add_argument("--skip-l2", action="store_true")
+    args = ap.parse_args()
+    cfg = preset(args.preset, arch=args.arch)
+    l1_report(cfg)
+    if not args.skip_l2:
+        l2_report(cfg)
+
+
+if __name__ == "__main__":
+    main()

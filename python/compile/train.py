@@ -1,0 +1,123 @@
+"""Training/eval/inference step functions lowered by aot.py.
+
+The Rust driver owns the loop; these functions are single steps with a flat
+tensor interface:
+
+  train_step(params..., m..., v..., step, tokens, targets, seed)
+      -> (params'..., m'..., v'..., loss, aux, acc, stats)
+  eval_step(params..., tokens, targets) -> (loss, acc)
+  infer_step(params..., tokens) -> (logits, selections)
+  init(seed) -> (params...,)
+
+Adam with inverse-sqrt warmup schedule (paper Appendix Table 8). Optimizer
+state lives on-device between steps — Rust feeds the outputs of step t
+straight back into step t+1 as PjRtBuffers (no host round-trip).
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from . import model
+from .config import ModelConfig
+
+
+def loss_fn(cfg: ModelConfig, flat_params, tokens, targets, noise_key, train):
+    out = model.forward(cfg, flat_params, tokens, noise_key=noise_key, train=train)
+    logits = out["logits"]
+    if cfg.task == "lm":
+        # next-token CE; targets: [B, S]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        loss = jnp.mean(nll)
+        acc = jnp.mean((jnp.argmax(logits, -1) == targets).astype(jnp.float32))
+    else:
+        # sequence classification; targets: [B]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[:, None], axis=-1)[:, 0]
+        loss = jnp.mean(nll)
+        acc = jnp.mean((jnp.argmax(logits, -1) == targets).astype(jnp.float32))
+    return loss + out["aux"], (loss, out["aux"], acc, out["stats"])
+
+
+def lr_schedule(cfg: ModelConfig, step: jax.Array) -> jax.Array:
+    """inverse_sqrt with linear warmup (fairseq-style)."""
+    step_f = step.astype(jnp.float32) + 1.0
+    warm = jnp.asarray(float(cfg.warmup_steps), jnp.float32)
+    warmup_lr = cfg.learning_rate * step_f / warm
+    decay_lr = cfg.learning_rate * jnp.sqrt(warm) / jnp.sqrt(step_f)
+    return jnp.where(step_f < warm, warmup_lr, decay_lr)
+
+
+def train_step(cfg: ModelConfig, params: List[jax.Array], m: List[jax.Array],
+               v: List[jax.Array], step: jax.Array, tokens: jax.Array,
+               targets: jax.Array, seed: jax.Array):
+    """One Adam step. All lists are in model.param_specs order."""
+    noise_key = jax.random.PRNGKey(seed)
+    grad_fn = jax.value_and_grad(
+        lambda fp: loss_fn(cfg, fp, tokens, targets, noise_key, True),
+        has_aux=True)
+    (total, (loss, aux, acc, stats)), grads = grad_fn(params)
+
+    lr = lr_schedule(cfg, step)
+    b1, b2, eps = cfg.adam_b1, cfg.adam_b2, cfg.adam_eps
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - jnp.power(b1, t)
+    bc2 = 1.0 - jnp.power(b2, t)
+
+    new_p, new_m, new_v = [], [], []
+    for pi, mi, vi, gi in zip(params, m, v, grads):
+        mi = b1 * mi + (1 - b1) * gi
+        vi = b2 * vi + (1 - b2) * gi * gi
+        mhat = mi / bc1
+        vhat = vi / bc2
+        upd = lr * mhat / (jnp.sqrt(vhat) + eps)
+        if cfg.weight_decay > 0.0:
+            upd = upd + lr * cfg.weight_decay * pi
+        new_p.append(pi - upd)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v, loss, aux, acc, stats
+
+
+def eval_step(cfg: ModelConfig, params: List[jax.Array], tokens: jax.Array,
+              targets: jax.Array):
+    _, (loss, aux, acc, _) = loss_fn(cfg, params, tokens, targets, None, False)
+    return loss, acc
+
+
+def infer_step(cfg: ModelConfig, params: List[jax.Array], tokens: jax.Array):
+    out = model.forward(cfg, params, tokens, noise_key=None, train=False)
+    return out["logits"], out["selections"]
+
+
+def init(cfg: ModelConfig, seed: jax.Array):
+    key = jax.random.PRNGKey(seed)
+    return model.init_params(cfg, key)
+
+
+def train_step_n(cfg: ModelConfig, params, m, v, step0, tokens_n, targets_n,
+                 seed: jax.Array, n: int):
+    """`n` fused training steps via lax.scan — amortizes the PJRT host
+    round-trip (the executable returns one tuple literal per call, so state
+    crossing the boundary once per N steps instead of once per step).
+
+    tokens_n/targets_n: [n, B, S]. Returns (params, m, v, losses [n],
+    accs [n]).
+    """
+
+    def body(carry, xs):
+        p, mm, vv, step = carry
+        tokens, targets, i = xs
+        p2, m2, v2, loss, aux, acc, _stats = train_step(
+            cfg, p, mm, vv, step, tokens, targets, seed + i)
+        return (p2, m2, v2, step + 1), (loss, acc)
+
+    idx = jnp.arange(n, dtype=jnp.int32)
+    (p, mm, vv, _), (losses, accs) = jax.lax.scan(
+        body, (list(params), list(m), list(v), step0),
+        (tokens_n, targets_n, idx))
+    return p, mm, vv, losses, accs

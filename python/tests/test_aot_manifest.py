@@ -1,0 +1,65 @@
+"""AOT pipeline: manifests agree with the lowered HLO interfaces and the
+HLO text stays within the XLA-0.5.1-parsable subset."""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _manifest(name):
+    path = os.path.join(ART, name, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip(f"{name} artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f), os.path.join(ART, name)
+
+
+def test_quality_manifest_interface():
+    m, d = _manifest("quality_scmoe_micro")
+    assert m["kind"] == "quality"
+    n = len(m["param_specs"])
+    ts = m["artifacts"]["train_step"]
+    assert len(ts["inputs"]) == 3 * n + 4
+    assert len(ts["outputs"]) == 3 * n + 4
+    # input order contract: params, m.*, v.*, step, tokens, targets, seed
+    names = [i["name"] for i in ts["inputs"]]
+    assert names[n].startswith("m.")
+    assert names[2 * n].startswith("v.")
+    assert names[-4:] == ["step", "tokens", "targets", "seed"]
+    # init produces exactly the params
+    init = m["artifacts"]["init"]
+    assert [o["name"] for o in init["outputs"]] == [p[0] for p in m["param_specs"]]
+    assert [o["shape"] for o in init["outputs"]] == [p[1] for p in m["param_specs"]]
+
+
+def test_ops_manifest_capacities():
+    m, d = _manifest("ops_tiny")
+    assert m["kind"] == "ops"
+    t = m["tokens"]
+    cfg = m["config"]
+    for k, cap in m["capacities"].items():
+        expect = int(cfg["capacity_factor"] * t * int(k) / cfg["n_experts"])
+        assert cap == max(1, expect)
+        assert f"expert_op_c{cap}" in m["artifacts"]
+        assert f"moe_fused_op_k{k}" in m["artifacts"]
+
+
+def test_hlo_text_parsable_subset():
+    """The xla_extension 0.5.1 text parser rejects newer HLO instructions;
+    guard against regressions (e.g. `topk(...)` from lax.top_k)."""
+    m, d = _manifest("quality_scmoe_micro")
+    for art in m["artifacts"].values():
+        with open(os.path.join(d, art["file"])) as f:
+            text = f.read()
+        assert " topk(" not in text, f"{art['file']} uses the topk HLO op"
+        assert "ragged" not in text, f"{art['file']} uses ragged ops"
+
+
+def test_all_artifact_files_exist():
+    for name in ("quality_scmoe_micro", "quality_top2_micro", "ops_tiny"):
+        m, d = _manifest(name)
+        for art in m["artifacts"].values():
+            assert os.path.exists(os.path.join(d, art["file"])), art["file"]

@@ -1,0 +1,74 @@
+"""L1 correctness: noisy top-k gating kernel vs oracle + gating invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gating, ref
+
+SETTLE = dict(max_examples=16, deadline=None)
+
+
+def _logits(t, e, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (t, e))
+
+
+@settings(**SETTLE)
+@given(t=st.sampled_from([1, 2, 16, 64]), e=st.sampled_from([4, 8, 16]),
+       k=st.sampled_from([1, 2, 3]))
+def test_forward_matches_ref(t, e, k):
+    logits = _logits(t, e, seed=t * 31 + e + k)
+    s, i, w = gating.topk_gating(logits, k)
+    sr, ir, wr = ref.topk_gating(logits, k)
+    np.testing.assert_allclose(s, sr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(i, ir)
+    np.testing.assert_allclose(w, wr, rtol=1e-5, atol=1e-6)
+
+
+@settings(**SETTLE)
+@given(t=st.sampled_from([4, 32]), e=st.sampled_from([4, 8]), k=st.sampled_from([1, 2]))
+def test_weights_sum_to_one(t, e, k):
+    s, i, w = gating.topk_gating(_logits(t, e, seed=t + e + k), k)
+    np.testing.assert_allclose(jnp.sum(w, -1), 1.0, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(jnp.sum(s, -1), 1.0, rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTLE)
+@given(t=st.sampled_from([4, 32]), e=st.sampled_from([4, 8]), k=st.sampled_from([2, 3]))
+def test_indices_distinct_and_sorted(t, e, k):
+    _, i, w = gating.topk_gating(_logits(t, e, seed=t * e + k), k)
+    i = np.asarray(i)
+    w = np.asarray(w)
+    for row_i, row_w in zip(i, w):
+        assert len(set(row_i.tolist())) == k
+        assert all(row_w[a] >= row_w[a + 1] - 1e-7 for a in range(k - 1))
+
+
+def test_grad_matches_ref():
+    logits = _logits(32, 8, seed=5)
+    f1 = lambda lg: jnp.sum(gating.topk_gating(lg, 2)[0] ** 2)
+    f2 = lambda lg: jnp.sum(ref.topk_gating(lg, 2)[0] ** 2)
+    np.testing.assert_allclose(jax.grad(f1)(logits), jax.grad(f2)(logits),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_noisy_logits_reduce_to_clean_when_noise_zero():
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 8))
+    wg = jax.random.normal(jax.random.PRNGKey(1), (8, 4))
+    wn = jax.random.normal(jax.random.PRNGKey(2), (8, 4))
+    clean = ref.gate_logits(x, wg, None, None)
+    noisy0 = ref.gate_logits(x, wg, wn, jnp.zeros((16, 4)))
+    np.testing.assert_allclose(clean, noisy0, rtol=1e-6, atol=1e-6)
+
+
+def test_load_balance_loss_uniform_is_one():
+    """Perfectly uniform routing gives aux loss == 1 (E * E * (1/E)^2)."""
+    t, e = 64, 8
+    logits = jnp.zeros((t, e))
+    # break ties deterministically but evenly: one-hot rotate
+    logits = logits.at[jnp.arange(t), jnp.arange(t) % e].set(1.0)
+    s, _, _ = ref.topk_gating(logits, 1)
+    aux = ref.load_balance_loss(logits, s, 1)
+    assert 0.9 < float(aux) < 1.3

@@ -1,0 +1,58 @@
+"""L1 correctness: fused LayerNorm kernel vs oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import layernorm, ref
+
+SETTLE = dict(max_examples=16, deadline=None)
+
+
+def _mk(t, d, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (
+        jax.random.normal(ks[0], (t, d)) * 3.0 + 1.0,
+        jax.random.normal(ks[1], (d,)) * 0.2 + 1.0,
+        jax.random.normal(ks[2], (d,)) * 0.2,
+    )
+
+
+@settings(**SETTLE)
+@given(t=st.sampled_from([1, 2, 16, 64, 96]), d=st.sampled_from([4, 8, 32, 128]))
+def test_forward(t, d):
+    x, g, b = _mk(t, d, seed=t * 131 + d)
+    np.testing.assert_allclose(
+        layernorm.layernorm(x, g, b), ref.layernorm(x, g, b), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(**SETTLE)
+@given(t=st.sampled_from([2, 16, 32]), d=st.sampled_from([8, 32]))
+def test_backward(t, d):
+    x, g, b = _mk(t, d, seed=t + d)
+    f1 = lambda *a: jnp.sum(jnp.tanh(layernorm.layernorm(*a)))
+    f2 = lambda *a: jnp.sum(jnp.tanh(ref.layernorm(*a)))
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(x, g, b)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(x, g, b)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(a, b_, rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("bt", [1, 2, 4, 8])
+def test_block_invariance(bt):
+    x, g, b = _mk(8, 16, seed=5)
+    np.testing.assert_allclose(
+        layernorm.layernorm(x, g, b, block_tokens=bt),
+        layernorm.layernorm(x, g, b, block_tokens=8),
+        rtol=1e-6, atol=1e-6,
+    )
+
+
+def test_output_is_normalized():
+    x, _, _ = _mk(32, 64, seed=2)
+    y = layernorm.layernorm(x, jnp.ones(64), jnp.zeros(64))
+    np.testing.assert_allclose(jnp.mean(y, -1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(jnp.var(y, -1), 1.0, rtol=1e-3, atol=1e-3)

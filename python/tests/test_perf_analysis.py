@@ -1,0 +1,26 @@
+"""Structural perf-analysis invariants (the §Perf tooling itself)."""
+
+from compile.kernels import common
+
+
+def test_vmem_budget_respected_at_paper_shapes():
+    # SwinV2-MoE-S stage-3 shapes and the GPT ladder must all fit VMEM with
+    # double-buffering headroom after block-size selection.
+    for (c, d, f) in [(1024, 96, 384), (512, 128, 512), (256, 256, 1024),
+                      (2048, 512, 2048)]:
+        bc = common.ffn_block_tokens(c, d, f)
+        fp = common.ffn_vmem_footprint(bc, d, f)
+        assert c % bc == 0
+        assert fp <= common.VMEM_BUDGET, (c, d, f, bc, fp)
+
+
+def test_mxu_estimate_monotone_in_alignment():
+    # 128-aligned tiles achieve full occupancy; misaligned ones less.
+    assert common.mxu_utilization_estimate(128, 128, 128) == 1.0
+    assert common.mxu_utilization_estimate(96, 128, 128) < 1.0
+    assert common.mxu_utilization_estimate(96, 128, 128) == 96 / 128
+
+
+def test_flops_counts():
+    assert common.flops_expert_ffn(1, 1, 1, 1) == 4
+    assert common.flops_expert_ffn(8, 128, 96, 384) == 2 * 8 * 128 * 2 * 96 * 384

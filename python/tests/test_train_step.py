@@ -1,0 +1,72 @@
+"""L2: training-step semantics — Adam update, LR schedule, loss behavior."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, train
+from compile.config import preset
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = preset("micro", arch="scmoe")
+    p = train.init(cfg, jnp.int32(0))
+    m = [jnp.zeros_like(t) for t in p]
+    v = [jnp.zeros_like(t) for t in p]
+    tokens = (jnp.arange(cfg.batch_size * cfg.seq_len, dtype=jnp.int32) % 250
+              ).reshape(cfg.batch_size, cfg.seq_len)
+    targets = jnp.roll(tokens, -1, axis=1)
+    return cfg, p, m, v, tokens, targets
+
+
+def test_loss_decreases_on_repeated_batch(setup):
+    cfg, p, m, v, tokens, targets = setup
+    losses = []
+    state = (p, m, v)
+    for step in range(6):
+        p_, m_, v_, loss, aux, acc, stats = train.train_step(
+            cfg, *state, jnp.int32(step), tokens, targets, jnp.int32(step))
+        losses.append(float(loss))
+        state = (p_, m_, v_)
+    assert losses[-1] < losses[0], losses
+
+
+def test_params_change_and_moments_populate(setup):
+    cfg, p, m, v, tokens, targets = setup
+    p_, m_, v_, *_ = train.train_step(cfg, p, m, v, jnp.int32(0),
+                                      tokens, targets, jnp.int32(1))
+    changed = sum(int(not np.allclose(a, b)) for a, b in zip(p, p_))
+    assert changed > len(p) // 2, f"only {changed}/{len(p)} params changed"
+    assert any(float(jnp.abs(x).max()) > 0 for x in m_)
+    assert any(float(jnp.abs(x).max()) > 0 for x in v_)
+
+
+def test_lr_schedule_warmup_then_decay():
+    cfg = preset("micro")
+    lrs = [float(train.lr_schedule(cfg, jnp.int32(s)))
+           for s in [0, 10, 50, 99, 100, 400]]
+    # warmup: increasing
+    assert lrs[0] < lrs[1] < lrs[2] < lrs[3]
+    # decay: decreasing after warmup
+    assert lrs[4] >= lrs[5]
+    # peak ~ learning_rate
+    assert abs(max(lrs) - cfg.learning_rate) / cfg.learning_rate < 0.1
+
+
+def test_eval_step_deterministic(setup):
+    cfg, p, m, v, tokens, targets = setup
+    l1, a1 = train.eval_step(cfg, p, tokens, targets)
+    l2, a2 = train.eval_step(cfg, p, tokens, targets)
+    assert float(l1) == float(l2)
+    assert float(a1) == float(a2)
+
+
+def test_infer_step_selections_valid(setup):
+    cfg, p, *_ = setup
+    tokens = jnp.zeros((cfg.batch_size, cfg.seq_len), jnp.int32)
+    logits, sel = train.infer_step(cfg, p, tokens)
+    sel = np.asarray(sel)
+    assert sel.min() >= 0 and sel.max() < cfg.n_experts
+    assert logits.shape[-1] == cfg.vocab_size

@@ -1,0 +1,44 @@
+//! Shared micro-bench harness (offline build: no criterion). Provides
+//! median-of-N timing with warmup and a stable report format that
+//! `cargo bench` prints.
+
+use std::time::Instant;
+
+pub struct Bench {
+    name: &'static str,
+}
+
+impl Bench {
+    pub fn new(name: &'static str) -> Bench {
+        println!("\n=== bench: {name} ===");
+        Bench { name }
+    }
+
+    /// Time `f` with `iters` iterations per sample, `samples` samples;
+    /// prints and returns the median per-iteration seconds.
+    pub fn measure<F: FnMut()>(&self, label: &str, iters: usize, samples: usize,
+                               mut f: F) -> f64 {
+        // warmup
+        f();
+        let mut per_iter = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            per_iter.push(t0.elapsed().as_secs_f64() / iters as f64);
+        }
+        per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = per_iter[samples / 2];
+        let (val, unit) = if med >= 1e-3 {
+            (med * 1e3, "ms")
+        } else if med >= 1e-6 {
+            (med * 1e6, "us")
+        } else {
+            (med * 1e9, "ns")
+        };
+        println!("{:<40} {:>10.3} {}/iter  ({} iters x {} samples)",
+                 format!("{}/{label}", self.name), val, unit, iters, samples);
+        med
+    }
+}

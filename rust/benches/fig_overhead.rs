@@ -1,0 +1,28 @@
+//! Regenerates Fig. 1 + Fig. 8 (per-pair overhead across scenarios and
+//! configurations) and times the DES while at it.
+
+mod common;
+
+use common::Bench;
+use scmoe::cluster::Scenario;
+use scmoe::coordinator::costs::{MoEKind, Strategy};
+use scmoe::coordinator::schedule::build_pair_schedule_auto;
+use scmoe::report::efficiency::proxy_costs;
+
+fn main() {
+    // the actual figures
+    let args = scmoe::util::cli::Args::default();
+    scmoe::report::efficiency::fig1(&args).unwrap();
+    scmoe::report::efficiency::fig8(&args).unwrap();
+
+    // bench: schedule build + simulate cost per pair
+    let b = Bench::new("fig_overhead");
+    for sc in Scenario::all() {
+        let c = proxy_costs(sc);
+        b.measure(&format!("build+sim pair ({})", sc.label()), 200, 5, || {
+            let s = build_pair_schedule_auto(&c, MoEKind::ScMoE { k: 1 },
+                                             Strategy::Overlap);
+            std::hint::black_box(s.makespan());
+        });
+    }
+}

@@ -1,0 +1,21 @@
+//! Regenerates Fig. 10 (offloading) and times the decode simulator.
+
+mod common;
+
+use common::Bench;
+use scmoe::offload::{simulate_decode, Policy};
+use scmoe::report::offload_report::{fig10, gpt2_moe_medium};
+
+fn main() {
+    let args = scmoe::util::cli::Args::default();
+    fig10(&args).unwrap();
+
+    let b = Bench::new("offload");
+    let cfg = gpt2_moe_medium();
+    for policy in [Policy::Blocking, Policy::AsyncDeterminate,
+                   Policy::Speculative { accuracy: 0.85 }] {
+        b.measure(&format!("simulate 64 tokens ({})", policy.label()), 50, 5, || {
+            std::hint::black_box(simulate_decode(&cfg, None, 64, policy, 1));
+        });
+    }
+}

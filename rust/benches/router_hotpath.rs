@@ -1,0 +1,58 @@
+//! L3 hot-path micro-benchmarks: routing-table construction and
+//! encode/decode layout transforms at serving-realistic shapes.
+//! These are the coordinator-side operations on the per-layer critical
+//! path (§Perf target: L3 must not be the bottleneck).
+
+mod common;
+
+use common::Bench;
+use scmoe::moe::{decode_into, encode_into, RoutingTable};
+use scmoe::util::rng::Rng;
+
+fn setup(t: usize, k: usize, e: usize) -> (Vec<i32>, Vec<f32>) {
+    let mut rng = Rng::new(1);
+    let mut idx = Vec::with_capacity(t * k);
+    let mut w = Vec::with_capacity(t * k);
+    for _ in 0..t {
+        for _ in 0..k {
+            idx.push(rng.below(e) as i32);
+            w.push(rng.next_f32());
+        }
+    }
+    (idx, w)
+}
+
+fn main() {
+    let b = Bench::new("router_hotpath");
+    for (t, k, e, d) in [(4096usize, 2usize, 8usize, 1024usize),
+                         (16384, 2, 64, 1024),
+                         (4096, 1, 8, 1024)] {
+        let (idx, w) = setup(t, k, e);
+        let cap = (t * k * 2) / e;
+        b.measure(&format!("RoutingTable::build t={t} k={k} E={e}"), 20, 5, || {
+            std::hint::black_box(RoutingTable::build(&idx, &w, t, k, e, cap));
+        });
+
+        let table = RoutingTable::build(&idx, &w, t, k, e, cap);
+        let mut rng = Rng::new(2);
+        let tokens: Vec<f32> = (0..t * d).map(|_| rng.next_f32()).collect();
+        let mut enc = vec![0.0f32; e * cap * d];
+        let mut dec = vec![0.0f32; t * d];
+        b.measure(&format!("encode t={t} d={d}"), 10, 5, || {
+            encode_into(&table, &tokens, d, &mut enc);
+            std::hint::black_box(&enc);
+        });
+        b.measure(&format!("decode t={t} d={d}"), 10, 5, || {
+            decode_into(&table, &enc, d, &mut dec);
+            std::hint::black_box(&dec);
+        });
+        // tokens/sec summary for the 4096-token case
+        let tt = b.measure(&format!("encode+decode roundtrip t={t} d={d}"), 10, 5, || {
+            encode_into(&table, &tokens, d, &mut enc);
+            decode_into(&table, &enc, d, &mut dec);
+            std::hint::black_box(&dec);
+        });
+        println!("  -> {:.1} M tokens/s through the data plane",
+                 t as f64 / tt / 1e6);
+    }
+}

@@ -1,0 +1,22 @@
+//! Regenerates the speedup columns of Tables 2/3/4 (paper §4.2) and times
+//! the adaptive slot search.
+
+mod common;
+
+use common::Bench;
+use scmoe::cluster::Scenario;
+use scmoe::coordinator::adaptive::choose_expert_slot;
+use scmoe::coordinator::costs::{MoEKind, Strategy};
+use scmoe::report::efficiency::{gpt_proxy_costs, speedup_tables};
+
+fn main() {
+    let args = scmoe::util::cli::Args::default();
+    speedup_tables(&args).unwrap();
+
+    let b = Bench::new("tables_speedup");
+    let c = gpt_proxy_costs(Scenario::NvlinkA800x8);
+    b.measure("adaptive slot search (4 DES runs)", 500, 5, || {
+        std::hint::black_box(choose_expert_slot(&c, MoEKind::ScMoE { k: 1 },
+                                                Strategy::Overlap));
+    });
+}

@@ -1,0 +1,62 @@
+//! Measure real CPU wallclock of each operator artifact — step 1 of the
+//! DES grounding method (DESIGN.md §6). The measured *ratios* between
+//! operators feed `ComputeCosts`; the absolute scale cancels in speedups.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{ArtifactSet, Engine, HostTensor};
+use crate::util::rng::Rng;
+use crate::util::stats::median;
+
+#[derive(Debug, Clone)]
+pub struct OpTimes {
+    pub attn: f64,
+    pub mlp: f64,
+    pub se: f64,
+    pub gate: f64,
+    pub expert_k1: f64,
+    pub experts_all_k1: f64,
+}
+
+fn rand_tensor(shape: &[usize], rng: &mut Rng) -> HostTensor {
+    let n: usize = shape.iter().product();
+    HostTensor::f32(shape.to_vec(), (0..n).map(|_| rng.next_f32() - 0.5).collect())
+}
+
+fn time_exe(set: &ArtifactSet, name: &str, reps: usize, rng: &mut Rng) -> Result<f64> {
+    let exe = set.get(name)?;
+    let inputs: Vec<HostTensor> = exe.spec.inputs.iter()
+        .map(|s| match s.dtype {
+            crate::runtime::DType::F32 => rand_tensor(&s.shape, rng),
+            _ => HostTensor::i32(s.shape.clone(),
+                                 vec![0; s.shape.iter().product()]),
+        })
+        .collect();
+    exe.run(&inputs)?; // warmup + compile
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        exe.run(&inputs).context(name.to_string())?;
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    Ok(median(&times))
+}
+
+/// Calibrate the ops manifest at `dir` with `reps` repetitions per op.
+pub fn calibrate_ops(engine: &Arc<Engine>, dir: &Path, reps: usize) -> Result<OpTimes> {
+    let set = engine.open(dir)?;
+    let mut rng = Rng::new(0xCA11B);
+    let cap1 = set.manifest.capacities.get(&1).copied().unwrap_or(1);
+    Ok(OpTimes {
+        attn: time_exe(&set, "attn_op", reps, &mut rng)?,
+        mlp: time_exe(&set, "mlp_op", reps, &mut rng)?,
+        se: time_exe(&set, "se_op", reps, &mut rng)?,
+        gate: time_exe(&set, "gate_op_k1", reps, &mut rng)?,
+        expert_k1: time_exe(&set, &format!("expert_op_c{cap1}"), reps, &mut rng)?,
+        experts_all_k1: time_exe(&set, &format!("experts_op_c{cap1}"), reps, &mut rng)?,
+    })
+}

@@ -1,0 +1,6 @@
+//! Calibration + micro-bench helpers shared by `cargo bench` targets and
+//! the `scmoe bench-calib` subcommand.
+
+pub mod calibrate;
+
+pub use calibrate::{calibrate_ops, OpTimes};

@@ -1,0 +1,14 @@
+//! Simulated device fleet + interconnect models.
+//!
+//! The paper's testbeds (8×A30-PCIe, 8×A800-NVLink, 16×A800 across two
+//! nodes) are modeled as `Topology` (devices, nodes) + `LinkModel`
+//! (α latency + bytes/β bandwidth per message). Presets are calibrated so
+//! the All-to-All share of total MoE time reproduces the paper's measured
+//! fractions (Fig. 1: 60% on PCIe, 15% on NVLink, ≈50% across 2 nodes) —
+//! see DESIGN.md §6 for the calibration method.
+
+pub mod interconnect;
+pub mod topology;
+
+pub use interconnect::{a2a_time, uniform_a2a_bytes, LinkModel};
+pub use topology::{Scenario, Topology};

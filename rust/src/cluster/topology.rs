@@ -1,0 +1,100 @@
+//! Named hardware scenarios matching the paper's testbeds.
+
+use super::interconnect::LinkModel;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    /// 8×A30, PCIe only (Fig. 1 left: comm ≈ 60% of MoE time).
+    PcieA30x8,
+    /// 8×A800 with NVLink (comm ≈ 15%).
+    NvlinkA800x8,
+    /// 16×A800 across 2 nodes over Ethernet (comm ≈ 50%).
+    TwoNodeA800x16,
+}
+
+impl Scenario {
+    pub fn parse(s: &str) -> Option<Scenario> {
+        match s {
+            "pcie" | "8xA30-PCIe" => Some(Scenario::PcieA30x8),
+            "nvlink" | "8xA800-NVLink" => Some(Scenario::NvlinkA800x8),
+            "2node" | "16xA800-2node" => Some(Scenario::TwoNodeA800x16),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Scenario::PcieA30x8 => "8xA30-PCIe",
+            Scenario::NvlinkA800x8 => "8xA800-NVLink",
+            Scenario::TwoNodeA800x16 => "16xA800-2node",
+        }
+    }
+
+    pub fn all() -> [Scenario; 3] {
+        [Scenario::PcieA30x8, Scenario::NvlinkA800x8, Scenario::TwoNodeA800x16]
+    }
+
+    pub fn topology(&self) -> Topology {
+        match self {
+            Scenario::PcieA30x8 => Topology {
+                n_devices: 8,
+                devices_per_node: 8,
+                intra: LinkModel::pcie(),
+                inter: None,
+                // A30: 165 TFLOPS bf16 tensor — relative compute scale 1.0
+                compute_scale: 1.0,
+            },
+            Scenario::NvlinkA800x8 => Topology {
+                n_devices: 8,
+                devices_per_node: 8,
+                intra: LinkModel::nvlink(),
+                inter: None,
+                // A800 ~1.9x A30 on the dense kernels in this proxy
+                compute_scale: 1.9,
+            },
+            Scenario::TwoNodeA800x16 => Topology {
+                n_devices: 16,
+                devices_per_node: 8,
+                intra: LinkModel::nvlink(),
+                inter: Some(LinkModel::ethernet()),
+                compute_scale: 1.9,
+            },
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub n_devices: usize,
+    pub devices_per_node: usize,
+    pub intra: LinkModel,
+    pub inter: Option<LinkModel>,
+    /// Device compute speed relative to the A30 baseline (divides op times).
+    pub compute_scale: f64,
+}
+
+impl Topology {
+    pub fn n_nodes(&self) -> usize {
+        self.n_devices / self.devices_per_node
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in Scenario::all() {
+            assert_eq!(Scenario::parse(s.label()), Some(s));
+        }
+        assert_eq!(Scenario::parse("nope"), None);
+    }
+
+    #[test]
+    fn two_node_has_inter_link() {
+        let t = Scenario::TwoNodeA800x16.topology();
+        assert_eq!(t.n_nodes(), 2);
+        assert!(t.inter.is_some());
+    }
+}

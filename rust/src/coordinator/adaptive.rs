@@ -1,0 +1,134 @@
+//! Adaptive operator scheduling (§3.2): choose where the expert computation
+//! sits among the four candidate locations ①–④ in the shared-expert stream.
+//!
+//! The paper schedules "based on actual performance metrics" — we implement
+//! exactly that: run the DES for each candidate slot and pick the argmin.
+//! Eq. 11's closed form plus the Eq. 12/13 bounds are provided for analysis
+//! and are property-tested against the DES (rust/tests/coordinator_props.rs).
+
+use super::costs::{BlockCosts, MoEKind, Strategy};
+use super::schedule::build_pair_schedule;
+
+/// Pick the expert slot minimizing the simulated pair makespan.
+/// Returns (slot, makespan).
+pub fn choose_expert_slot(c: &BlockCosts, kind: MoEKind,
+                          strategy: Strategy) -> (usize, f64) {
+    let mut best = (0usize, f64::INFINITY);
+    for slot in 0..4 {
+        let s = build_pair_schedule(c, kind, strategy, slot);
+        let t = s.makespan();
+        if t < best.1 {
+            best = (slot, t);
+        }
+    }
+    best
+}
+
+/// Eq. 11 closed-form estimate of the *overhead-relevant* objective for a
+/// given slot: |Σ_pre COMP − T_disp| + |Σ_post COMP − T_comb|.
+pub fn eq11_objective(c: &BlockCosts, kind: MoEKind, slot: usize) -> f64 {
+    let k = kind.routed_k();
+    let window = [c.mlp, c.attn, c.se];
+    let pre: f64 = window[..slot.min(3)].iter().sum();
+    let post: f64 = window[slot.min(3)..].iter().sum();
+    (pre - c.a2a(k)).abs() + (post - c.a2a(k)).abs()
+}
+
+/// Eq. 11: minimal objective over the four slots.
+pub fn eq11_min(c: &BlockCosts, kind: MoEKind) -> f64 {
+    (0..4).map(|s| eq11_objective(c, kind, s))
+          .fold(f64::INFINITY, f64::min)
+}
+
+/// Eq. 12 lower bound on the exposed (non-overlapped) time:
+/// |Σ COMP − (T_disp + T_comb)|.
+pub fn eq12_lower_bound(c: &BlockCosts, kind: MoEKind) -> f64 {
+    let k = kind.routed_k();
+    let comp_total = c.mlp + c.attn + c.se;
+    (comp_total - 2.0 * c.a2a(k)).abs()
+}
+
+/// Eq. 13 upper bound: Σ COMP + (T_disp + T_comb).
+pub fn eq13_upper_bound(c: &BlockCosts, kind: MoEKind) -> f64 {
+    let k = kind.routed_k();
+    c.mlp + c.attn + c.se + 2.0 * c.a2a(k)
+}
+
+/// Fraction of one-way-comm time hidden by the overlap schedule, for the
+/// paper's "70% to 100%" overlap claims (§1).
+pub fn overlap_fraction(c: &BlockCosts, kind: MoEKind, strategy: Strategy) -> f64 {
+    let (slot, overlapped) = choose_expert_slot(c, kind, strategy);
+    let _ = slot;
+    let k = kind.routed_k();
+    // serial reference: same ops, comm fully exposed
+    let serial = super::schedule::backbone_time(c, kind)
+        + c.gate + c.encode + 2.0 * c.a2a(k) + c.expert(k) + c.decode;
+    let comm = 2.0 * c.a2a(k);
+    if comm <= 0.0 {
+        return 1.0;
+    }
+    let exposed = (overlapped - (serial - comm)).max(0.0);
+    (1.0 - exposed / comm).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn costs(a2a: f64) -> BlockCosts {
+        BlockCosts {
+            attn: 1.0, mlp: 0.8, se: 0.8, gate: 0.05, encode: 0.05,
+            decode: 0.05, expert_k1: 0.6, a2a_k1: a2a,
+        }
+    }
+
+    #[test]
+    fn balanced_comm_prefers_middle_slot() {
+        // T_disp = T_comb = 0.9 ≈ mlp(0.8): slot 1 or 2 balance pre/post.
+        let c = costs(0.9);
+        let (slot, _) = choose_expert_slot(&c, MoEKind::ScMoE { k: 1 }, Strategy::Overlap);
+        assert!(slot == 1 || slot == 2, "slot {slot}");
+    }
+
+    #[test]
+    fn zero_comm_any_slot_equal() {
+        let c = costs(0.0);
+        let times: Vec<f64> = (0..4)
+            .map(|s| build_pair_schedule(&c, MoEKind::ScMoE { k: 1 },
+                                         Strategy::Overlap, s).makespan())
+            .collect();
+        for t in &times {
+            assert!((t - times[0]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn full_overlap_when_comm_fits_window() {
+        // paper: "can fully overlap communication if the communication
+        // tasks can be accommodated within the overlapping window"
+        let c = costs(0.4); // 2*0.4 = 0.8 < window 2.6
+        let f = overlap_fraction(&c, MoEKind::ScMoE { k: 1 }, Strategy::Overlap);
+        assert!(f > 0.999, "overlap fraction {f}");
+    }
+
+    #[test]
+    fn heavy_comm_overlap_band() {
+        // comm equal to the whole window still overlaps most of itself;
+        // the paper's 70%-100% band is asserted on the calibrated PCIe
+        // preset in rust/tests/schedule_integration.rs.
+        let c = costs(1.3);
+        let f = overlap_fraction(&c, MoEKind::ScMoE { k: 1 }, Strategy::Overlap);
+        assert!(f >= 0.65, "overlap fraction {f}");
+    }
+
+    #[test]
+    fn eq12_13_bound_eq11() {
+        for a2a in [0.0, 0.2, 0.5, 0.9, 1.5, 3.0] {
+            let c = costs(a2a);
+            let kind = MoEKind::ScMoE { k: 1 };
+            let m = eq11_min(&c, kind);
+            assert!(m >= eq12_lower_bound(&c, kind) - 1e-12);
+            assert!(m <= eq13_upper_bound(&c, kind) + 1e-12);
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! Operator durations and communication volumes for one
+//! Block-MLP + Block-MoE pair — the inputs to every schedule builder.
+
+use crate::cluster::{a2a_time, uniform_a2a_bytes, Topology};
+
+/// Which MoE architecture a schedule models (paper Fig. 6 / Fig. 8 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MoEKind {
+    /// Standard top-k MoE (k = 1, 2, 3): MoE input is the current layer.
+    Standard { k: usize },
+    /// Shared-expert MoE: SE + top-1, current layer ("Top1+SE1").
+    SharedExpert,
+    /// ScMoE: SE on current layer + top-k on the *preceding* layer
+    /// via the shortcut (k=1 default; k=2 is "ScMoE-2").
+    ScMoE { k: usize },
+}
+
+impl MoEKind {
+    pub fn label(&self) -> String {
+        match self {
+            MoEKind::Standard { k } => format!("Top{k}"),
+            MoEKind::SharedExpert => "Top1+SE1".into(),
+            MoEKind::ScMoE { k } => {
+                if *k == 1 { "ScMoE".into() } else { format!("ScMoE-{k}") }
+            }
+        }
+    }
+
+    /// Number of gate-selected experts routed through All-to-All.
+    pub fn routed_k(&self) -> usize {
+        match self {
+            MoEKind::Standard { k } => *k,
+            MoEKind::SharedExpert => 1,
+            MoEKind::ScMoE { k } => *k,
+        }
+    }
+
+    pub fn has_shared_expert(&self) -> bool {
+        matches!(self, MoEKind::SharedExpert | MoEKind::ScMoE { .. })
+    }
+}
+
+/// Execution strategy for the MoE stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Fully sequential (the naive baseline).
+    Sequential,
+    /// Tutel-style pipelining: tokens split into `chunks`; chunk i's expert
+    /// compute overlaps chunk i+1's dispatch / chunk i-1's combine.
+    Pipelined { chunks: usize },
+    /// The paper's overlapping strategy (requires a shortcut architecture).
+    Overlap,
+    /// Overlap augmented with pipelining (Fig. 6, 5th timeline).
+    OverlapPipelined { chunks: usize },
+}
+
+impl Strategy {
+    pub fn label(&self) -> String {
+        match self {
+            Strategy::Sequential => "seq".into(),
+            Strategy::Pipelined { chunks } => format!("pipe{chunks}"),
+            Strategy::Overlap => "overlap".into(),
+            Strategy::OverlapPipelined { chunks } => format!("overlap+pipe{chunks}"),
+        }
+    }
+}
+
+/// Durations (seconds) of the operators in one Block-MLP/Block-MoE pair,
+/// plus the communication volumes needed to derive A2A times.
+#[derive(Debug, Clone)]
+pub struct BlockCosts {
+    /// Attention sub-layer (one per block; assumed equal across the pair).
+    pub attn: f64,
+    /// Dense MLP sub-layer of the Block-MLP.
+    pub mlp: f64,
+    /// Shared expert (an MLP on the current layer).
+    pub se: f64,
+    /// Gate routing (+ encode) per routed-expert set.
+    pub gate: f64,
+    /// Encode (layout aggregation before dispatch).
+    pub encode: f64,
+    /// Decode (inverse of encode, after combine).
+    pub decode: f64,
+    /// Expert FFN over one capacity batch with k routed experts.
+    pub expert_k1: f64,
+    /// One-way All-to-All time for k = 1 volume.
+    pub a2a_k1: f64,
+}
+
+impl BlockCosts {
+    /// Expert computation time for k routed experts (capacity ∝ k; linear —
+    /// the conservative model, see EXPERIMENTS.md §Deviations for the
+    /// effect on the paper's Table 4 top-3 row).
+    pub fn expert(&self, k: usize) -> f64 {
+        self.expert_k1 * k as f64
+    }
+
+    /// One-way All-to-All (dispatch or combine) for k routed experts.
+    pub fn a2a(&self, k: usize) -> f64 {
+        self.a2a_k1 * k as f64
+    }
+
+    /// Total MoE-path time under naive sequential execution (for the
+    /// comm-fraction metrics of Fig. 1).
+    pub fn moe_sequential(&self, k: usize) -> f64 {
+        self.gate + self.encode + self.a2a(k) + self.expert(k) + self.a2a(k) + self.decode
+    }
+
+    /// Communication share of the sequential MoE path.
+    pub fn comm_fraction(&self, k: usize) -> f64 {
+        2.0 * self.a2a(k) / self.moe_sequential(k)
+    }
+
+    /// Build costs from compute-op durations measured on the A30-relative
+    /// scale plus a topology (which supplies A2A time and compute scaling).
+    pub fn from_topology(base: &ComputeCosts, topo: &Topology,
+                         tokens_per_device: usize, token_bytes: usize,
+                         capacity_factor: f64) -> BlockCosts {
+        let s = topo.compute_scale;
+        // k=1 volume: each device dispatches its tokens' routed copies;
+        // under uniform routing a (1 - 1/n) fraction crosses the link, with
+        // capacity_factor headroom in buffer sizing.
+        let bytes_per_pair = ((tokens_per_device as f64 * capacity_factor
+            / topo.n_devices as f64) * token_bytes as f64) as usize;
+        let m = uniform_a2a_bytes(topo.n_devices, bytes_per_pair);
+        let a2a_k1 = a2a_time(&m, topo.n_devices, topo.devices_per_node,
+                              topo.intra, topo.inter);
+        BlockCosts {
+            attn: base.attn / s,
+            mlp: base.mlp / s,
+            se: base.se / s,
+            gate: base.gate / s,
+            encode: base.encode / s,
+            decode: base.decode / s,
+            expert_k1: base.expert_k1 / s,
+            a2a_k1,
+        }
+    }
+}
+
+/// Pure compute-op durations on the baseline device (A30 scale = 1.0).
+/// Produced by the calibration harness (`scmoe bench-calib`) from real CPU
+/// measurements of the AOT operator artifacts, then scaled to GPU-class
+/// throughput ratios; or taken from the built-in proxy preset.
+#[derive(Debug, Clone)]
+pub struct ComputeCosts {
+    pub attn: f64,
+    pub mlp: f64,
+    pub se: f64,
+    pub gate: f64,
+    pub encode: f64,
+    pub decode: f64,
+    pub expert_k1: f64,
+}
+
+impl ComputeCosts {
+    /// SwinV2-MoE-S block proxy (paper Fig. 1/8 shapes): ratios measured
+    /// from the ops_tiny artifacts on CPU (see EXPERIMENTS.md §Calibration),
+    /// absolute scale normalized so attn ≈ 1 ms on the A30 baseline.
+    pub fn swin_proxy() -> ComputeCosts {
+        ComputeCosts {
+            attn: 1.00e-3,
+            mlp: 0.75e-3,
+            se: 0.75e-3,
+            gate: 0.06e-3,
+            encode: 0.05e-3,
+            decode: 0.05e-3,
+            expert_k1: 0.80e-3,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Scenario;
+
+    #[test]
+    fn comm_fraction_matches_paper_bands() {
+        // Fig. 1: top-2 comm share ≈ 60% on PCIe, ≈ 15% on NVLink,
+        // ≈ 50% across 2 nodes. The presets must land in those bands.
+        let base = ComputeCosts::swin_proxy();
+        let costs = |sc: Scenario| {
+            let t = sc.topology();
+            BlockCosts::from_topology(&base, &t, 4096, 384, 1.25)
+        };
+        let f_pcie = costs(Scenario::PcieA30x8).comm_fraction(2);
+        let f_nv = costs(Scenario::NvlinkA800x8).comm_fraction(2);
+        let f_2n = costs(Scenario::TwoNodeA800x16).comm_fraction(2);
+        assert!((0.50..0.70).contains(&f_pcie), "pcie comm frac {f_pcie}");
+        assert!((0.08..0.25).contains(&f_nv), "nvlink comm frac {f_nv}");
+        assert!((0.35..0.60).contains(&f_2n), "2node comm frac {f_2n}");
+    }
+
+    #[test]
+    fn expert_and_a2a_scale_with_k() {
+        let c = BlockCosts {
+            attn: 1.0, mlp: 1.0, se: 1.0, gate: 0.1, encode: 0.1,
+            decode: 0.1, expert_k1: 0.5, a2a_k1: 0.3,
+        };
+        assert_eq!(c.expert(2), 1.0);
+        assert_eq!(c.a2a(3), 0.3 * 3.0);
+    }
+}

@@ -1,0 +1,317 @@
+//! Real threaded execution of the ScMoE schedules against PJRT artifacts.
+//!
+//! One OS thread per simulated device owns that device's expert weights and
+//! executes the `expert_op` artifact; the leader thread runs the backbone
+//! operators and the routing/encode/decode data plane; link latencies are
+//! injected as scaled sleeps on dedicated comm threads so that transfers
+//! genuinely overlap leader compute (the DES's two-stream model, made
+//! physical). Numerics are integration-tested against the fused-HLO oracle.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::cluster::LinkModel;
+use crate::moe::{decode, encode, Placement, RoutingTable};
+use crate::runtime::{ArtifactSet, Executable, HostTensor};
+
+// SAFETY: the PJRT CPU client is internally synchronized; executables are
+// immutable after compilation and `execute` is thread-safe per the PJRT API
+// contract. The `xla` crate just doesn't declare it.
+struct SendExe(Arc<Executable>);
+unsafe impl Send for SendExe {}
+
+struct WorkerMsg {
+    /// [E_local * C * D] dispatched tokens for this device's experts.
+    shard: Vec<f32>,
+    reply: mpsc::Sender<(usize, Vec<f32>)>,
+    device: usize,
+}
+
+/// A simulated expert-parallel device fleet executing real HLO experts.
+pub struct Cluster {
+    placement: Placement,
+    senders: Vec<mpsc::Sender<WorkerMsg>>,
+    handles: Vec<thread::JoinHandle<()>>,
+    capacity: usize,
+    d_model: usize,
+    /// Expert weights [E, ...] kept by the leader for encode bookkeeping.
+    pub weights: ClusterWeights,
+}
+
+#[derive(Clone)]
+pub struct ClusterWeights {
+    pub ln_g: HostTensor,
+    pub ln_b: HostTensor,
+    pub wg: HostTensor,
+    pub w1: HostTensor,
+    pub b1: HostTensor,
+    pub w2: HostTensor,
+    pub b2: HostTensor,
+}
+
+impl Cluster {
+    /// Spawn `n_devices` workers; device i owns experts [i*per, (i+1)*per).
+    /// Expert weights are sliced from the stacked `ops_init` tensors
+    /// (contiguous along axis 0).
+    pub fn spawn(set: &ArtifactSet, n_devices: usize, k: usize) -> Result<Cluster> {
+        let m = &set.manifest;
+        let e = m.config.n_experts;
+        let d = m.config.d_model;
+        let f = m.config.d_ff;
+        let cap = *m.capacities.get(&k).context("capacity for k")?;
+        let placement = Placement::new(e, n_devices);
+        let per = placement.experts_per_device();
+
+        let weights_raw = set.get("ops_init")?.run(&[HostTensor::scalar_i32(7)])?;
+        let weights = ClusterWeights {
+            ln_g: weights_raw[0].clone(),
+            ln_b: weights_raw[1].clone(),
+            wg: weights_raw[10].clone(),
+            w1: weights_raw[11].clone(),
+            b1: weights_raw[12].clone(),
+            w2: weights_raw[13].clone(),
+            b2: weights_raw[14].clone(),
+        };
+
+        // each worker runs the single-expert artifact once per local expert
+        let exe = set.get(&format!("expert_op_c{cap}"))?;
+        let mut senders = Vec::new();
+        let mut handles = Vec::new();
+        for dev in 0..n_devices {
+            let (tx, rx) = mpsc::channel::<WorkerMsg>();
+            senders.push(tx);
+            // per-device expert weight slices [per, ...] (axis-0 contiguous)
+            let slice = |t: &HostTensor, inner: usize| -> HostTensor {
+                let v = t.as_f32().unwrap();
+                let start = dev * per * inner;
+                let mut shape = t.shape.clone();
+                shape[0] = per;
+                HostTensor::f32(shape, v[start..start + per * inner].to_vec())
+            };
+            let w1 = slice(&weights.w1, d * f);
+            let b1 = slice(&weights.b1, f);
+            let w2 = slice(&weights.w2, f * d);
+            let b2 = slice(&weights.b2, d);
+            let exe = SendExe(Arc::clone(&exe));
+            let handle = thread::spawn(move || {
+                let exe = exe;
+                let slice1 = |t: &HostTensor, li: usize, inner: usize| -> HostTensor {
+                    let v = t.as_f32().unwrap();
+                    let shape: Vec<usize> = t.shape[1..].to_vec();
+                    HostTensor::f32(shape, v[li * inner..(li + 1) * inner].to_vec())
+                };
+                while let Ok(msg) = rx.recv() {
+                    let mut out_all = Vec::with_capacity(per * cap * d);
+                    for li in 0..per {
+                        let xe = HostTensor::f32(
+                            vec![cap, d],
+                            msg.shard[li * cap * d..(li + 1) * cap * d].to_vec());
+                        let out = exe.0
+                            .run(&[xe,
+                                   slice1(&w1, li, d * f),
+                                   slice1(&b1, li, f),
+                                   slice1(&w2, li, f * d),
+                                   slice1(&b2, li, d)])
+                            .expect("expert execution failed");
+                        let ye = out.into_iter().next().unwrap();
+                        match ye.data {
+                            crate::runtime::TensorData::F32(v) => out_all.extend(v),
+                            _ => unreachable!(),
+                        }
+                    }
+                    let _ = msg.reply.send((msg.device, out_all));
+                }
+            });
+            handles.push(handle);
+        }
+        Ok(Cluster {
+            placement,
+            senders,
+            handles,
+            capacity: cap,
+            d_model: d,
+            weights,
+        })
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.placement.n_devices
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Asynchronously dispatch encoded expert buffers ([E, C, D]) to the
+    /// workers through simulated links; returns a receiver that yields each
+    /// device's results after its combine-path delay.
+    ///
+    /// `dispatch_delay`/`combine_delay`: one-way link times (already scaled
+    /// for wall-clock execution).
+    pub fn dispatch_async(
+        &self,
+        enc: Vec<f32>,
+        dispatch_delay: Duration,
+        combine_delay: Duration,
+    ) -> mpsc::Receiver<(usize, Vec<f32>)> {
+        let per = self.placement.experts_per_device();
+        let shard_len = per * self.capacity * self.d_model;
+        let (final_tx, final_rx) = mpsc::channel();
+        let (reply_tx, reply_rx) = mpsc::channel::<(usize, Vec<f32>)>();
+        let n = self.n_devices();
+
+        // comm thread: per-device dispatch after the link delay
+        let senders = self.senders.clone();
+        thread::spawn(move || {
+            thread::sleep(dispatch_delay);
+            for (dev, tx) in senders.iter().enumerate() {
+                let shard = enc[dev * shard_len..(dev + 1) * shard_len].to_vec();
+                let _ = tx.send(WorkerMsg { shard, reply: reply_tx.clone(), device: dev });
+            }
+        });
+        // combine thread: collect replies, apply return-path delay
+        thread::spawn(move || {
+            let mut got = 0;
+            while got < n {
+                match reply_rx.recv() {
+                    Ok(r) => {
+                        got += 1;
+                        thread::sleep(combine_delay / n as u32);
+                        let _ = final_tx.send(r);
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        final_rx
+    }
+
+    /// Collect all device results into one [E, C, D] buffer.
+    pub fn collect(&self, rx: mpsc::Receiver<(usize, Vec<f32>)>) -> Vec<f32> {
+        let per = self.placement.experts_per_device();
+        let shard_len = per * self.capacity * self.d_model;
+        let mut out = vec![0.0f32; self.n_devices() * shard_len];
+        for _ in 0..self.n_devices() {
+            let (dev, v) = rx.recv().expect("worker died");
+            out[dev * shard_len..(dev + 1) * shard_len].copy_from_slice(&v);
+        }
+        out
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        self.senders.clear(); // closes channels; workers exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One measured operator span in a real run.
+#[derive(Debug, Clone)]
+pub struct WallSpan {
+    pub label: String,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// Execute one Block-MLP + Block-MoE pair for real, either sequentially or
+/// with the ScMoE overlap (MoE stream launched from the preceding layer's
+/// intermediate), returning the MoE output and measured spans.
+#[allow(clippy::too_many_arguments)]
+pub fn run_pair_real(
+    set: &ArtifactSet,
+    cluster: &Cluster,
+    x: &HostTensor,
+    k: usize,
+    overlap: bool,
+    link: LinkModel,
+    time_scale: f64,
+    backbone_reps: usize,
+) -> Result<(Vec<f32>, Vec<WallSpan>)> {
+    let m = &set.manifest;
+    let t = m.tokens;
+    let d = m.config.d_model;
+    let e = m.config.n_experts;
+    let cap = cluster.capacity();
+    let w = &cluster.weights;
+
+    // modeled one-way A2A time, scaled to wall-clock
+    let bytes_out = t * k * m.token_bytes;
+    let delay = Duration::from_secs_f64(link.transfer_time(bytes_out) * time_scale);
+
+    let t0 = Instant::now();
+    let mut spans = Vec::new();
+    fn mark_into(spans: &mut Vec<WallSpan>, t0: Instant, label: &str,
+                 s: Instant, e_: Instant) {
+        spans.push(WallSpan {
+            label: label.into(),
+            start: s.duration_since(t0).as_secs_f64(),
+            end: e_.duration_since(t0).as_secs_f64(),
+        });
+    }
+
+    let gate_exe = set.get(&format!("gate_op_k{k}"))?;
+    let attn_exe = set.get("attn_op")?;
+    let weights_raw = set.get("ops_init")?.run(&[HostTensor::scalar_i32(7)])?;
+    let backbone_args = vec![
+        x.clone(),
+        weights_raw[0].clone(), weights_raw[1].clone(),
+        weights_raw[2].clone(), weights_raw[3].clone(),
+        weights_raw[4].clone(), weights_raw[5].clone(),
+    ];
+
+    // --- MoE stream head: gate + encode (earliest viable position) ---
+    let s = Instant::now();
+    let gout = gate_exe.run(&[x.clone(), w.ln_g.clone(), w.ln_b.clone(), w.wg.clone()])?;
+    let h = gout[0].as_f32()?;
+    let idx = gout[1].as_i32()?;
+    let wts = gout[2].as_f32()?;
+    let table = RoutingTable::build(idx, wts, t, k, e, cap);
+    let enc = encode(&table, h, d);
+    mark_into(&mut spans, t0, "Gate+Encode", s, Instant::now());
+
+    let run_backbone = |spans: &mut Vec<WallSpan>| -> Result<()> {
+        for i in 0..backbone_reps {
+            let s = Instant::now();
+            let _ = attn_exe.run(&backbone_args)?;
+            let e_ = Instant::now();
+            spans.push(WallSpan {
+                label: format!("Backbone{i}"),
+                start: s.duration_since(t0).as_secs_f64(),
+                end: e_.duration_since(t0).as_secs_f64(),
+            });
+        }
+        Ok(())
+    };
+
+    let expert_out: Vec<f32>;
+    if overlap {
+        // launch comm + experts, then run the backbone concurrently
+        let rx = cluster.dispatch_async(enc, delay, delay);
+        run_backbone(&mut spans)?;
+        let s = Instant::now();
+        expert_out = cluster.collect(rx);
+        mark_into(&mut spans, t0, "Wait+Combine", s, Instant::now());
+    } else {
+        // sequential: backbone first, then the blocking MoE chain
+        run_backbone(&mut spans)?;
+        let s = Instant::now();
+        thread::sleep(delay); // A2A dispatch
+        let rx = cluster.dispatch_async(enc, Duration::ZERO, Duration::ZERO);
+        expert_out = cluster.collect(rx);
+        thread::sleep(delay); // A2A combine
+        mark_into(&mut spans, t0, "MoE(serial)", s, Instant::now());
+    }
+
+    let s = Instant::now();
+    let y = decode(&table, &expert_out, d);
+    mark_into(&mut spans, t0, "Decode", s, Instant::now());
+    let _ = cap;
+    Ok((y, spans))
+}

@@ -1,0 +1,22 @@
+//! The paper's system contribution: operator scheduling for expert
+//! parallelism with shortcut-decoupled communication.
+//!
+//! - `costs`: per-operator durations (calibrated or preset) + comm volumes;
+//! - `schedule`: task-graph builders for every architecture × strategy in
+//!   Fig. 6 (sequential, Tutel-style pipelining, shared-expert, ScMoE
+//!   overlapping, ScMoE + pipelining);
+//! - `adaptive`: Eq. 11 — the adaptive placement of expert computation
+//!   among the four candidate locations in the shared-expert stream;
+//! - `timeline`: ASCII rendering of DES spans (regenerates Fig. 6);
+//! - `exec`: real threaded execution of the same schedules against PJRT
+//!   artifacts with injected link delays (validates the DES).
+
+pub mod adaptive;
+pub mod costs;
+pub mod exec;
+pub mod schedule;
+pub mod timeline;
+
+pub use adaptive::choose_expert_slot;
+pub use costs::{BlockCosts, MoEKind, Strategy};
+pub use schedule::{build_pair_schedule, PairSchedule};

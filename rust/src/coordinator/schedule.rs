@@ -1,0 +1,301 @@
+//! Task-graph builders for one Block-MLP + Block-MoE pair under every
+//! architecture × strategy combination in the paper (Fig. 6 timelines,
+//! Fig. 8 bars). The graphs run on the `simtime` DES; the same structures
+//! drive the real threaded executor (`exec`).
+//!
+//! Modeling follows the paper: one representative device; computation
+//! operators share a single exclusive compute stream; All-to-All runs on a
+//! separate comm stream; gate/encode scheduled at the earliest viable
+//! position and decode at the latest (§3.2).
+
+use crate::simtime::{Resource, Sim, Span, TaskId};
+
+use super::costs::{BlockCosts, MoEKind, Strategy};
+
+const DEV: usize = 0;
+
+/// A built schedule plus span bookkeeping for rendering and assertions.
+pub struct PairSchedule {
+    pub sim: Sim,
+    pub kind: MoEKind,
+    pub strategy: Strategy,
+    /// Expert-computation slot chosen (0..=3) when Strategy is Overlap*.
+    pub expert_slot: usize,
+}
+
+impl PairSchedule {
+    pub fn run(&self) -> Vec<Span> {
+        self.sim.run()
+    }
+
+    pub fn makespan(&self) -> f64 {
+        self.sim.makespan()
+    }
+}
+
+/// Serial compute time of the pair's backbone (no MoE stream at all):
+/// Attn(l) + MLP(l) + Attn(l+1) [+ SE(l+1)].
+pub fn backbone_time(c: &BlockCosts, kind: MoEKind) -> f64 {
+    let se = if kind.has_shared_expert() { c.se } else { 0.0 };
+    c.attn + c.mlp + c.attn + se
+}
+
+/// Build the schedule for a pair under (kind, strategy).
+///
+/// `expert_slot` only applies to Overlap strategies; pass
+/// `choose_expert_slot` output (or use `build_pair_schedule_auto`).
+pub fn build_pair_schedule(
+    c: &BlockCosts,
+    kind: MoEKind,
+    strategy: Strategy,
+    expert_slot: usize,
+) -> PairSchedule {
+    let k = kind.routed_k();
+    match strategy {
+        Strategy::Sequential => build_sequential(c, kind, k),
+        Strategy::Pipelined { chunks } => build_pipelined(c, kind, k, chunks),
+        Strategy::Overlap => build_overlap(c, kind, k, expert_slot, 1),
+        Strategy::OverlapPipelined { chunks } => {
+            build_overlap(c, kind, k, expert_slot, chunks)
+        }
+    }
+}
+
+/// Build with the best expert slot (and, for Overlap strategies on
+/// non-shortcut architectures, fall back to the legal strategy).
+pub fn build_pair_schedule_auto(c: &BlockCosts, kind: MoEKind,
+                                strategy: Strategy) -> PairSchedule {
+    match strategy {
+        Strategy::Overlap | Strategy::OverlapPipelined { .. } => {
+            assert!(matches!(kind, MoEKind::ScMoE { .. }),
+                    "overlap strategy requires the shortcut architecture");
+            let slot = super::adaptive::choose_expert_slot(c, kind, strategy).0;
+            build_pair_schedule(c, kind, strategy, slot)
+        }
+        _ => build_pair_schedule(c, kind, strategy, 0),
+    }
+}
+
+fn comp(sim: &mut Sim, label: &str, dur: f64, deps: &[TaskId]) -> TaskId {
+    sim.add(label, Resource::Compute(DEV), dur, deps)
+}
+
+fn comm(sim: &mut Sim, label: &str, dur: f64, deps: &[TaskId]) -> TaskId {
+    sim.add(label, Resource::Comm(DEV), dur, deps)
+}
+
+/// Standard top-k / shared-expert, fully sequential (Fig. 6, 1st timeline).
+fn build_sequential(c: &BlockCosts, kind: MoEKind, k: usize) -> PairSchedule {
+    let mut sim = Sim::new();
+    let attn_l = comp(&mut sim, "Attn(l)", c.attn, &[]);
+    let mlp_l = comp(&mut sim, "MLP(l)", c.mlp, &[attn_l]);
+    let attn_m = comp(&mut sim, "Attn(l+1)", c.attn, &[mlp_l]);
+    let gate = comp(&mut sim, "Gate", c.gate, &[attn_m]);
+    let enc = comp(&mut sim, "Encode", c.encode, &[gate]);
+    let disp = comm(&mut sim, "A2A-D", c.a2a(k), &[enc]);
+    let expert = comp(&mut sim, "Expert", c.expert(k), &[disp]);
+    let comb = comm(&mut sim, "A2A-C", c.a2a(k), &[expert]);
+    let mut decode_deps = vec![comb];
+    if kind.has_shared_expert() {
+        // SE computed after attention; serial on the compute stream but can
+        // overlap the MoE comm in principle — sequential strategy runs it
+        // before the gate for the worst-case baseline.
+        let se = comp(&mut sim, "SE", c.se, &[attn_m]);
+        decode_deps.push(se);
+    }
+    let _dec = comp(&mut sim, "Decode", c.decode, &decode_deps);
+    PairSchedule { sim, kind, strategy: Strategy::Sequential, expert_slot: 0 }
+}
+
+/// Tutel-style pipelining (Fig. 6, 2nd timeline): tokens split into
+/// `chunks`; dispatch/expert/combine of different chunks overlap.
+fn build_pipelined(c: &BlockCosts, kind: MoEKind, k: usize,
+                   chunks: usize) -> PairSchedule {
+    assert!(chunks >= 1);
+    let mut sim = Sim::new();
+    let attn_l = comp(&mut sim, "Attn(l)", c.attn, &[]);
+    let mlp_l = comp(&mut sim, "MLP(l)", c.mlp, &[attn_l]);
+    let attn_m = comp(&mut sim, "Attn(l+1)", c.attn, &[mlp_l]);
+    let gate = comp(&mut sim, "Gate", c.gate, &[attn_m]);
+    let enc = comp(&mut sim, "Encode", c.encode, &[gate]);
+    let fc = chunks as f64;
+    let mut combines = Vec::new();
+    let mut prev_disp: Option<TaskId> = None;
+    for i in 0..chunks {
+        let dd = match prev_disp {
+            Some(p) => vec![enc, p],
+            None => vec![enc],
+        };
+        let disp = comm(&mut sim, &format!("A2A-D{i}"), c.a2a(k) / fc, &dd);
+        prev_disp = Some(disp);
+        let expert = comp(&mut sim, &format!("Expert{i}"), c.expert(k) / fc, &[disp]);
+        let comb = comm(&mut sim, &format!("A2A-C{i}"), c.a2a(k) / fc, &[expert]);
+        combines.push(comb);
+    }
+    let mut decode_deps = combines;
+    if kind.has_shared_expert() {
+        // shared-expert MoE overlaps SE with the MoE stream's comm
+        let se = comp(&mut sim, "SE", c.se, &[attn_m]);
+        decode_deps.push(se);
+    }
+    let _dec = comp(&mut sim, "Decode", c.decode, &decode_deps);
+    PairSchedule { sim, kind, strategy: Strategy::Pipelined { chunks }, expert_slot: 0 }
+}
+
+/// The paper's overlapping strategy (Fig. 6, 4th/5th timelines): the MoE
+/// stream hangs off the *preceding layer's* intermediate representation
+/// (Pos-2 shortcut), so its comm overlaps MLP(l) + Attn(l+1) + SE(l+1).
+/// Expert computation is inserted in one of 4 slots of the backbone
+/// stream; with `chunks > 1` the dispatch/expert/combine are additionally
+/// pipelined inside the window.
+fn build_overlap(c: &BlockCosts, kind: MoEKind, k: usize, slot: usize,
+                 chunks: usize) -> PairSchedule {
+    assert!(slot <= 3, "expert slot must be one of the 4 locations");
+    assert!(chunks >= 1);
+    let mut sim = Sim::new();
+    let attn_l = comp(&mut sim, "Attn(l)", c.attn, &[]);
+    // MoE stream: gate + encode at the earliest viable position — right
+    // after the preceding layer's attention (Pos-2 shortcut input).
+    let gate = comp(&mut sim, "Gate", c.gate, &[attn_l]);
+    let enc = comp(&mut sim, "Encode", c.encode, &[gate]);
+
+    // Backbone window ops (COMP_1..COMP_3 of Eq. 11); the expert
+    // computation occupies one of the 4 slots around them.
+    // slot 0: before MLP(l); 1: after MLP(l); 2: after Attn(l+1);
+    // slot 3: after SE(l+1).
+    let fc = chunks as f64;
+    let mut dispatches = Vec::new();
+    let mut prev: Option<TaskId> = None;
+    for i in 0..chunks {
+        let deps = match prev {
+            Some(p) => vec![enc, p],
+            None => vec![enc],
+        };
+        let d = comm(&mut sim, &format!("A2A-D{i}"), c.a2a(k) / fc, &deps);
+        dispatches.push(d);
+        prev = Some(d);
+    }
+
+    // backbone ops, inserting expert chunks at `slot`
+    let mut experts: Vec<TaskId> = Vec::new();
+    let mut last_backbone = attn_l;
+    let window: [(&str, f64); 3] = [
+        ("MLP(l)", c.mlp),
+        ("Attn(l+1)", c.attn),
+        ("SE(l+1)", c.se),
+    ];
+    let mut place_experts = |sim: &mut Sim, after: TaskId| -> TaskId {
+        let mut tail = after;
+        for (i, d) in dispatches.iter().enumerate() {
+            let e = comp(sim, &format!("Expert{i}"),
+                         c.expert(k) / fc, &[*d, tail]);
+            experts.push(e);
+            tail = e;
+        }
+        tail
+    };
+
+    if slot == 0 {
+        last_backbone = place_experts(&mut sim, last_backbone);
+    }
+    for (i, (label, dur)) in window.iter().enumerate() {
+        last_backbone = comp(&mut sim, label, *dur, &[last_backbone]);
+        if slot == i + 1 {
+            last_backbone = place_experts(&mut sim, last_backbone);
+        }
+    }
+
+    // combines: chunk i's combine depends on its expert; comm stream FIFO
+    let mut combines = Vec::new();
+    for (i, e) in experts.iter().enumerate() {
+        combines.push(comm(&mut sim, &format!("A2A-C{i}"), c.a2a(k) / fc, &[*e]));
+    }
+    // decode at the latest position: after the backbone and all combines
+    let mut deps = combines;
+    deps.push(last_backbone);
+    let _dec = comp(&mut sim, "Decode", c.decode, &deps);
+    let strategy = if chunks == 1 {
+        Strategy::Overlap
+    } else {
+        Strategy::OverlapPipelined { chunks }
+    };
+    PairSchedule { sim, kind, strategy, expert_slot: slot }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn costs(a2a: f64) -> BlockCosts {
+        BlockCosts {
+            attn: 1.0, mlp: 0.8, se: 0.8, gate: 0.05, encode: 0.05,
+            decode: 0.05, expert_k1: 0.6, a2a_k1: a2a,
+        }
+    }
+
+    #[test]
+    fn sequential_is_sum_of_chain() {
+        let c = costs(0.5);
+        let s = build_pair_schedule(&c, MoEKind::Standard { k: 2 }, Strategy::Sequential, 0);
+        let expect = c.attn + c.mlp + c.attn
+            + c.gate + c.encode + c.a2a(2) + c.expert(2) + c.a2a(2) + c.decode;
+        assert!((s.makespan() - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pipelining_beats_sequential_with_comm() {
+        let c = costs(0.5);
+        let seq = build_pair_schedule(&c, MoEKind::Standard { k: 2 }, Strategy::Sequential, 0);
+        let pipe = build_pair_schedule(&c, MoEKind::Standard { k: 2 },
+                                       Strategy::Pipelined { chunks: 4 }, 0);
+        assert!(pipe.makespan() < seq.makespan());
+    }
+
+    #[test]
+    fn pipeline_one_chunk_equals_sequential_topk() {
+        let c = costs(0.3);
+        let seq = build_pair_schedule(&c, MoEKind::Standard { k: 2 }, Strategy::Sequential, 0);
+        let pipe1 = build_pair_schedule(&c, MoEKind::Standard { k: 2 },
+                                        Strategy::Pipelined { chunks: 1 }, 0);
+        assert!((pipe1.makespan() - seq.makespan()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_hides_small_comm_completely() {
+        let c = costs(0.1); // comm well under the window
+        let kind = MoEKind::ScMoE { k: 1 };
+        let s = build_pair_schedule_auto(&c, kind, Strategy::Overlap);
+        // full overlap: makespan = backbone + gate-side overhead + expert + decode
+        let serial_no_comm = backbone_time(&c, kind) + c.expert(1) + c.decode;
+        assert!(s.makespan() <= serial_no_comm + c.gate + c.encode + 1e-9,
+                "makespan {} vs {}", s.makespan(), serial_no_comm);
+    }
+
+    #[test]
+    fn overlap_beats_pipelined_top2_when_comm_heavy() {
+        let c = costs(0.8); // PCIe-like: comm ≈ 60% of MoE time
+        let top2 = build_pair_schedule(&c, MoEKind::Standard { k: 2 },
+                                       Strategy::Pipelined { chunks: 2 }, 0);
+        let sc = build_pair_schedule_auto(&c, MoEKind::ScMoE { k: 1 }, Strategy::Overlap);
+        assert!(sc.makespan() < top2.makespan());
+    }
+
+    #[test]
+    fn all_slots_produce_valid_schedules() {
+        let c = costs(0.5);
+        for slot in 0..4 {
+            let s = build_pair_schedule(&c, MoEKind::ScMoE { k: 1 }, Strategy::Overlap, slot);
+            let spans = s.run();
+            assert!(!spans.is_empty());
+            // compute stream never overlaps itself
+            let mut comp_spans: Vec<_> = spans.iter()
+                .filter(|sp| matches!(sp.resource, Resource::Compute(_)))
+                .collect();
+            comp_spans.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+            for w in comp_spans.windows(2) {
+                assert!(w[1].start >= w[0].end - 1e-12,
+                        "compute overlap: {:?} then {:?}", w[0].label, w[1].label);
+            }
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! ASCII timeline renderer for DES spans — regenerates Fig. 6.
+//!
+//! Spans are grouped into rows by resource (compute stream, comm stream,
+//! H2D engine) and drawn as labelled bars on a shared time axis.
+
+use std::collections::BTreeMap;
+
+use crate::simtime::{Resource, Span};
+use crate::util::stats::fmt_secs;
+
+fn resource_row(r: Resource) -> String {
+    match r {
+        Resource::Compute(d) => format!("compute[{d}]"),
+        Resource::Comm(d) => format!("comm[{d}]   "),
+        Resource::H2D(d) => format!("h2d[{d}]    "),
+        Resource::Free => "free      ".into(),
+    }
+}
+
+/// Render spans as an ASCII chart `width` characters wide.
+pub fn render(spans: &[Span], width: usize) -> String {
+    if spans.is_empty() {
+        return String::from("(empty timeline)\n");
+    }
+    let t_end = spans.iter().fold(0.0f64, |m, s| m.max(s.end));
+    if t_end <= 0.0 {
+        return String::from("(zero-length timeline)\n");
+    }
+    let scale = width as f64 / t_end;
+
+    let mut rows: BTreeMap<String, Vec<&Span>> = BTreeMap::new();
+    for s in spans {
+        rows.entry(resource_row(s.resource)).or_default().push(s);
+    }
+
+    let mut out = String::new();
+    for (row, mut row_spans) in rows {
+        row_spans.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+        let mut line = vec![b' '; width];
+        for s in &row_spans {
+            let a = ((s.start * scale) as usize).min(width.saturating_sub(1));
+            let b = ((s.end * scale) as usize).clamp(a + 1, width);
+            // bar body
+            for c in line.iter_mut().take(b).skip(a) {
+                *c = b'=';
+            }
+            line[a] = b'|';
+            // inscribe label if it fits
+            let label: Vec<u8> = s.label.bytes().take(b - a - 1).collect();
+            for (i, ch) in label.iter().enumerate() {
+                if a + 1 + i < b {
+                    line[a + 1 + i] = *ch;
+                }
+            }
+        }
+        out.push_str(&format!("{row} {}\n", String::from_utf8(line).unwrap()));
+    }
+    out.push_str(&format!("total: {}\n", fmt_secs(t_end)));
+    out
+}
+
+/// Compact per-op summary: label -> (start, end), sorted by start.
+pub fn summary(spans: &[Span]) -> String {
+    let mut sorted: Vec<&Span> = spans.iter().collect();
+    sorted.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+    let mut out = String::new();
+    for s in sorted {
+        out.push_str(&format!(
+            "{:12} {:>10} .. {:>10}  [{}]\n",
+            s.label,
+            fmt_secs(s.start),
+            fmt_secs(s.end),
+            resource_row(s.resource).trim()
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simtime::Sim;
+
+    #[test]
+    fn renders_rows_for_each_resource() {
+        let mut sim = Sim::new();
+        let a = sim.add("comp", Resource::Compute(0), 1.0, &[]);
+        sim.add("comm", Resource::Comm(0), 1.0, &[a]);
+        let spans = sim.run();
+        let txt = render(&spans, 40);
+        assert!(txt.contains("compute[0]"));
+        assert!(txt.contains("comm[0]"));
+        assert!(txt.contains("total:"));
+    }
+
+    #[test]
+    fn summary_sorted_by_start() {
+        let mut sim = Sim::new();
+        let a = sim.add("first", Resource::Compute(0), 1.0, &[]);
+        sim.add("second", Resource::Compute(0), 1.0, &[a]);
+        let txt = summary(&sim.run());
+        let p1 = txt.find("first").unwrap();
+        let p2 = txt.find("second").unwrap();
+        assert!(p1 < p2);
+    }
+
+    #[test]
+    fn empty_ok() {
+        assert!(render(&[], 40).contains("empty"));
+    }
+}

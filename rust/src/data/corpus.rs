@@ -1,0 +1,129 @@
+//! Tiny-corpus language-modeling dataset: contiguous byte chunks with
+//! next-token targets, deterministic shuffled batching, train/valid split.
+//!
+//! The bundled corpus (rust/assets/corpus.txt, ~118 KB of public-license
+//! English prose) substitutes for OpenWebText at this testbed's scale; the
+//! loader also accepts any external text file (--corpus PATH).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::rng::Rng;
+
+use super::tokenizer::ByteTokenizer;
+
+pub const BUNDLED: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/assets/corpus.txt");
+
+/// One LM batch: row-major [batch, seq] inputs and next-token targets.
+#[derive(Debug, Clone)]
+pub struct LmBatch {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+#[derive(Debug)]
+pub struct Corpus {
+    train: Vec<i32>,
+    valid: Vec<i32>,
+}
+
+impl Corpus {
+    pub fn load(path: &Path, valid_frac: f64) -> Result<Corpus> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading corpus {}", path.display()))?;
+        Ok(Corpus::from_text(&text, valid_frac))
+    }
+
+    pub fn bundled() -> Result<Corpus> {
+        Corpus::load(Path::new(BUNDLED), 0.1)
+    }
+
+    pub fn from_text(text: &str, valid_frac: f64) -> Corpus {
+        let ids = ByteTokenizer.encode(text);
+        let split = ((ids.len() as f64) * (1.0 - valid_frac)) as usize;
+        Corpus { train: ids[..split].to_vec(), valid: ids[split..].to_vec() }
+    }
+
+    pub fn train_len(&self) -> usize {
+        self.train.len()
+    }
+
+    pub fn valid_len(&self) -> usize {
+        self.valid.len()
+    }
+
+    fn sample_from(data: &[i32], rng: &mut Rng, batch: usize, seq: usize) -> LmBatch {
+        assert!(data.len() > seq + 1, "corpus shorter than sequence length");
+        let mut tokens = Vec::with_capacity(batch * seq);
+        let mut targets = Vec::with_capacity(batch * seq);
+        for _ in 0..batch {
+            let start = rng.below(data.len() - seq - 1);
+            tokens.extend_from_slice(&data[start..start + seq]);
+            targets.extend_from_slice(&data[start + 1..start + seq + 1]);
+        }
+        LmBatch { tokens, targets, batch, seq }
+    }
+
+    /// Deterministic random train batch for a step index.
+    pub fn train_batch(&self, step: u64, batch: usize, seq: usize) -> LmBatch {
+        let mut rng = Rng::new(0xC0FFEE ^ step);
+        Self::sample_from(&self.train, &mut rng, batch, seq)
+    }
+
+    /// Fixed validation batches (same for every evaluation).
+    pub fn valid_batches(&self, n: usize, batch: usize, seq: usize) -> Vec<LmBatch> {
+        let mut rng = Rng::new(0xEA7_5EED);
+        (0..n).map(|_| Self::sample_from(&self.valid, &mut rng, batch, seq)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> Corpus {
+        let text: String = std::iter::repeat("the quick brown fox jumps. ")
+            .take(200)
+            .collect();
+        Corpus::from_text(&text, 0.1)
+    }
+
+    #[test]
+    fn split_fractions() {
+        let c = corpus();
+        let total = c.train_len() + c.valid_len();
+        assert!((c.valid_len() as f64 / total as f64 - 0.1).abs() < 0.01);
+    }
+
+    #[test]
+    fn targets_shift_by_one() {
+        let c = corpus();
+        let b = c.train_batch(3, 2, 16);
+        assert_eq!(b.tokens.len(), 32);
+        // target[i] == token[i+1] within each row
+        for row in 0..2 {
+            for i in 0..15 {
+                assert_eq!(b.targets[row * 16 + i], b.tokens[row * 16 + i + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_batches() {
+        let c = corpus();
+        let a = c.train_batch(7, 2, 8);
+        let b = c.train_batch(7, 2, 8);
+        assert_eq!(a.tokens, b.tokens);
+        let d = c.train_batch(8, 2, 8);
+        assert_ne!(a.tokens, d.tokens);
+    }
+
+    #[test]
+    fn bundled_corpus_loads() {
+        let c = Corpus::bundled().unwrap();
+        assert!(c.train_len() > 50_000, "bundled corpus too small");
+    }
+}

@@ -1,0 +1,11 @@
+//! Data substrate: byte-level tokenizer, the bundled tiny corpus for
+//! language-model pretraining, and the synthetic classification task that
+//! stands in for the paper's ImageNet/SwinV2 vision workload.
+
+pub mod cls_task;
+pub mod corpus;
+pub mod tokenizer;
+
+pub use cls_task::ClsTask;
+pub use corpus::{Corpus, LmBatch};
+pub use tokenizer::ByteTokenizer;

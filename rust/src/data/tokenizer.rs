@@ -1,0 +1,55 @@
+//! Byte-level tokenizer with BOS/EOS/PAD specials.
+//!
+//! vocab: 0..=255 raw bytes, 256 BOS, 257 EOS, 258 PAD — matching
+//! `vocab_size = 259` in python/compile/config.py.
+
+pub const BOS: i32 = 256;
+pub const EOS: i32 = 257;
+pub const PAD: i32 = 258;
+pub const VOCAB_SIZE: usize = 259;
+
+#[derive(Debug, Clone, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.bytes().map(|b| b as i32).collect()
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let bytes: Vec<u8> = ids
+            .iter()
+            .filter(|&&i| (0..256).contains(&i))
+            .map(|&i| i as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        VOCAB_SIZE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer;
+        let ids = t.encode("hello, MoE!");
+        assert_eq!(t.decode(&ids), "hello, MoE!");
+    }
+
+    #[test]
+    fn specials_out_of_byte_range() {
+        assert!(BOS >= 256 && EOS >= 256 && PAD >= 256);
+        assert_eq!(VOCAB_SIZE, 259);
+    }
+
+    #[test]
+    fn decode_skips_specials() {
+        let t = ByteTokenizer;
+        assert_eq!(t.decode(&[104, BOS, 105, EOS]), "hi");
+    }
+}

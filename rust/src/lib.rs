@@ -1,0 +1,21 @@
+//! ScMoE: Shortcut-connected Expert Parallelism — Rust coordinator layer.
+//!
+//! Reproduction of "Shortcut-connected Expert Parallelism for Accelerating
+//! Mixture of Experts" (Cai et al., ICML 2025) as a three-layer stack:
+//! Pallas kernels (L1) and the JAX model (L2) are AOT-compiled to HLO text
+//! by `python/compile/`; this crate (L3) owns everything at and above the
+//! operator boundary: expert-parallel routing, All-to-All, the adaptive
+//! overlap scheduler, expert offloading, and the training/inference drivers.
+
+pub mod bench_support;
+pub mod cluster;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod moe;
+pub mod offload;
+pub mod report;
+pub mod runtime;
+pub mod simtime;
+pub mod train;
+pub mod util;

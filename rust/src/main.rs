@@ -1,0 +1,150 @@
+//! `scmoe` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   train        train a quality artifact set (loss curve + eval)
+//!   report EXP   regenerate a paper table/figure (fig1, fig6, fig8, fig9,
+//!                fig10, fig11, table1..table7, speedups, a5, all-efficiency)
+//!   timeline     render one architecture×strategy schedule
+//!   offload-sim  run the decode-offloading simulator
+//!   bench-calib  measure operator wallclock on the CPU artifacts
+//!   inspect DIR  dump a manifest's artifact interface
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use scmoe::cluster::Scenario;
+use scmoe::coordinator::costs::{MoEKind, Strategy};
+use scmoe::coordinator::schedule::build_pair_schedule_auto;
+use scmoe::coordinator::timeline;
+use scmoe::report;
+use scmoe::runtime::Engine;
+use scmoe::train::{TrainOptions, Trainer};
+use scmoe::util::cli::Args;
+
+const USAGE: &str = "\
+usage: scmoe <command> [options]
+  train        --arch scmoe --preset micro --steps 100 [--log out.csv]
+  report       <fig1|fig6|fig8|fig9|fig10|fig11|table1..7|speedups|a5|all-efficiency>
+  timeline     --kind <top2|top1|shared|scmoe|scmoe2> --strategy <seq|pipe|overlap|overlap-pipe>
+  offload-sim  [--tokens 64]
+  bench-calib  [--dir artifacts/ops_tiny] [--reps 5]
+  inspect      <manifest-dir>
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    match cmd {
+        "train" => cmd_train(&args),
+        "report" => {
+            let Some(exp) = args.positional.get(1) else {
+                bail!("report needs an experiment id; see DESIGN.md §4");
+            };
+            report::run(exp, &args)
+        }
+        "timeline" => cmd_timeline(&args),
+        "offload-sim" => report::offload_report::fig10(&args),
+        "bench-calib" => cmd_calib(&args),
+        "inspect" => cmd_inspect(&args),
+        other => {
+            print!("{USAGE}");
+            bail!("unknown command {other:?}");
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let arch = args.str_or("arch", "scmoe");
+    let preset = args.str_or("preset", "micro");
+    let dir = report::quality::artifacts_root().join(format!("quality_{arch}_{preset}"));
+    let engine = Arc::new(Engine::cpu()?);
+    let set = engine.open(&dir)?;
+    println!("training {arch}/{preset}: {} params, task={}",
+             set.manifest.param_count, set.manifest.config.task);
+    let mut tr = Trainer::new(&set, args.usize_or("seed", 0) as i32)?;
+    let opts = TrainOptions {
+        steps: args.usize_or("steps", 100),
+        eval_every: args.usize_or("eval-every", 50),
+        eval_batches: args.usize_or("eval-batches", 4),
+        log_csv: args.str_opt("log").map(PathBuf::from),
+        stats_csv: args.str_opt("stats-log").map(PathBuf::from),
+        verbose: !args.flag("quiet"),
+        seed: 0,
+    };
+    tr.run(&opts)?;
+    let ev = tr.evaluate(opts.eval_batches)?;
+    println!("final: eval loss {:.4}  ppl {:.2}  acc {:.3}", ev.loss, ev.ppl, ev.acc);
+    if let Some(ckpt) = args.str_opt("checkpoint") {
+        scmoe::train::checkpoint::save(
+            &PathBuf::from(ckpt), &set.manifest, &tr.params_host()?)?;
+        println!("checkpoint written to {ckpt}");
+    }
+    Ok(())
+}
+
+fn cmd_timeline(args: &Args) -> Result<()> {
+    let sc = Scenario::parse(&args.str_or("scenario", "pcie"))
+        .unwrap_or(Scenario::PcieA30x8);
+    let kind = match args.str_or("kind", "scmoe").as_str() {
+        "top1" => MoEKind::Standard { k: 1 },
+        "top2" => MoEKind::Standard { k: 2 },
+        "top3" => MoEKind::Standard { k: 3 },
+        "shared" => MoEKind::SharedExpert,
+        "scmoe" => MoEKind::ScMoE { k: 1 },
+        "scmoe2" => MoEKind::ScMoE { k: 2 },
+        other => bail!("unknown kind {other}"),
+    };
+    let strategy = match args.str_or("strategy", "overlap").as_str() {
+        "seq" => Strategy::Sequential,
+        "pipe" => Strategy::Pipelined { chunks: args.usize_or("chunks", 2) },
+        "overlap" => Strategy::Overlap,
+        "overlap-pipe" => Strategy::OverlapPipelined {
+            chunks: args.usize_or("chunks", 2) },
+        other => bail!("unknown strategy {other}"),
+    };
+    let costs = report::efficiency::proxy_costs(sc);
+    let sched = build_pair_schedule_auto(&costs, kind, strategy);
+    println!("{} / {} / {} (expert slot {})", sc.label(), kind.label(),
+             sched.strategy.label(), sched.expert_slot);
+    print!("{}", timeline::render(&sched.run(), args.usize_or("width", 110)));
+    print!("{}", timeline::summary(&sched.run()));
+    Ok(())
+}
+
+fn cmd_calib(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.str_or("dir", "artifacts/ops_tiny"));
+    let reps = args.usize_or("reps", 5);
+    let engine = Arc::new(Engine::cpu()?);
+    let t = scmoe::bench_support::calibrate_ops(&engine, &dir, reps)?;
+    println!("operator wallclock (median of {reps}) from {}:", dir.display());
+    println!("  attn      {:>10.3} ms", t.attn * 1e3);
+    println!("  mlp       {:>10.3} ms", t.mlp * 1e3);
+    println!("  se        {:>10.3} ms", t.se * 1e3);
+    println!("  gate      {:>10.3} ms", t.gate * 1e3);
+    println!("  expert_k1 {:>10.3} ms (single expert shard)", t.expert_k1 * 1e3);
+    println!("  experts   {:>10.3} ms (all local experts)", t.experts_all_k1 * 1e3);
+    println!("ratios vs attn: mlp {:.2}, se {:.2}, gate {:.3}, experts {:.2}",
+             t.mlp / t.attn, t.se / t.attn, t.gate / t.attn,
+             t.experts_all_k1 / t.attn);
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let Some(dir) = args.positional.get(1) else {
+        bail!("inspect needs a manifest directory");
+    };
+    let m = scmoe::runtime::Manifest::load(std::path::Path::new(dir))?;
+    println!("kind: {} | arch: {} | task: {} | params: {}",
+             m.kind, m.config.arch, m.config.task, m.param_count);
+    for (name, a) in &m.artifacts {
+        println!("  {name}: {} inputs -> {} outputs ({})",
+                 a.inputs.len(), a.outputs.len(),
+                 a.file.file_name().unwrap().to_string_lossy());
+    }
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Minimal CSV writer for metric logs (loss curves, Fig. 9/11 series).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    n_cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create(path: &Path, header: &[&str]) -> Result<CsvWriter> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let f = File::create(path).with_context(|| format!("creating {}", path.display()))?;
+        let mut out = BufWriter::new(f);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, n_cols: header.len() })
+    }
+
+    pub fn row(&mut self, values: &[f64]) -> Result<()> {
+        assert_eq!(values.len(), self.n_cols, "column count mismatch");
+        let cells: Vec<String> = values.iter().map(|v| format!("{v}")).collect();
+        writeln!(self.out, "{}", cells.join(","))?;
+        Ok(())
+    }
+
+    pub fn row_mixed(&mut self, values: &[String]) -> Result<()> {
+        assert_eq!(values.len(), self.n_cols, "column count mismatch");
+        writeln!(self.out, "{}", values.join(","))?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("scmoe_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&p, &["a", "b"]).unwrap();
+            w.row(&[1.0, 2.5]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "a,b\n1,2.5\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_arity_panics() {
+        let dir = std::env::temp_dir().join("scmoe_csv_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut w = CsvWriter::create(&dir.join("t.csv"), &["a"]).unwrap();
+        let _ = w.row(&[1.0, 2.0]);
+    }
+}

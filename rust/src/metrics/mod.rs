@@ -1,0 +1,7 @@
+//! Training/benchmark metrics: step records, CSV sinks, wall-clock timers.
+
+pub mod csv;
+pub mod timer;
+
+pub use csv::CsvWriter;
+pub use timer::Stopwatch;

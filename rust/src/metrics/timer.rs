@@ -1,0 +1,57 @@
+//! Wall-clock stopwatch with named laps (per-phase step timing).
+
+use std::time::Instant;
+
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+    last: Instant,
+    pub laps: Vec<(String, f64)>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Stopwatch {
+        let now = Instant::now();
+        Stopwatch { start: now, last: now, laps: Vec::new() }
+    }
+
+    /// Record time since the previous lap under `label`.
+    pub fn lap(&mut self, label: &str) -> f64 {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.laps.push((label.to_string(), dt));
+        dt
+    }
+
+    pub fn total(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn lap_total(&self, label: &str) -> f64 {
+        self.laps.iter().filter(|(l, _)| l == label).map(|(_, t)| t).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laps_accumulate() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        sw.lap("a");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        sw.lap("a");
+        assert!(sw.lap_total("a") >= 0.004);
+        assert!(sw.total() >= sw.lap_total("a"));
+        assert_eq!(sw.lap_total("missing"), 0.0);
+    }
+}

@@ -1,0 +1,156 @@
+//! Encode / decode: the data-movement half of expert parallelism.
+//!
+//! `encode` gathers routed tokens into per-expert capacity buffers
+//! ([E, C, D] contiguous, zero-padded) before the All-to-All dispatch;
+//! `decode` scatters expert outputs back to token order with combine
+//! weights after the All-to-All combine. These run on the coordinator's
+//! hot path, so they are allocation-conscious: callers can reuse buffers
+//! via the `_into` variants.
+
+use super::router::RoutingTable;
+
+/// Gather tokens into per-expert capacity buffers.
+///
+/// `tokens`: row-major [n_tokens, d]; returns [E, C, d] with dropped /
+/// unused slots zeroed.
+pub fn encode(table: &RoutingTable, tokens: &[f32], d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; table.n_experts * table.capacity * d];
+    encode_into(table, tokens, d, &mut out);
+    out
+}
+
+pub fn encode_into(table: &RoutingTable, tokens: &[f32], d: usize, out: &mut [f32]) {
+    assert_eq!(tokens.len(), table.n_tokens * d, "token buffer size");
+    assert_eq!(out.len(), table.n_experts * table.capacity * d, "encode buffer size");
+    // §Perf note: a slot-bitmap variant that skipped the blanket fill was
+    // tried and REVERTED — the sequential memset + copy beats scattered
+    // range-fills on this core (see EXPERIMENTS.md §Perf iteration log).
+    out.fill(0.0);
+    for r in &table.routes {
+        let src = &tokens[r.token * d..(r.token + 1) * d];
+        let base = (r.expert * table.capacity + r.slot) * d;
+        out[base..base + d].copy_from_slice(src);
+    }
+}
+
+/// Scatter expert outputs back to token order, weighted by combine weights.
+///
+/// `expert_out`: [E, C, d]; returns [n_tokens, d]. Tokens whose routes were
+/// all dropped produce zeros (the residual connection preserves them).
+pub fn decode(table: &RoutingTable, expert_out: &[f32], d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; table.n_tokens * d];
+    decode_into(table, expert_out, d, &mut out);
+    out
+}
+
+pub fn decode_into(table: &RoutingTable, expert_out: &[f32], d: usize, out: &mut [f32]) {
+    assert_eq!(expert_out.len(), table.n_experts * table.capacity * d, "expert buffer size");
+    assert_eq!(out.len(), table.n_tokens * d, "decode buffer size");
+    // §Perf: first write per token stores w*s directly (skips the blanket
+    // zero-fill); only tokens with zero surviving routes get memset.
+    let mut seen = vec![false; table.n_tokens];
+    for r in &table.routes {
+        let base = (r.expert * table.capacity + r.slot) * d;
+        let src = &expert_out[base..base + d];
+        let dst = &mut out[r.token * d..(r.token + 1) * d];
+        let w = r.weight;
+        if seen[r.token] {
+            for (o, s) in dst.iter_mut().zip(src) {
+                *o += w * s;
+            }
+        } else {
+            seen[r.token] = true;
+            for (o, s) in dst.iter_mut().zip(src) {
+                *o = w * s;
+            }
+        }
+    }
+    for (t, s) in seen.iter().enumerate() {
+        if !s {
+            out[t * d..(t + 1) * d].fill(0.0);
+        }
+    }
+}
+
+/// Split an [E, C, d] buffer into per-device shards (contiguous expert
+/// ranges) — what each worker receives after All-to-All dispatch.
+pub fn shard_by_device<'a>(
+    buf: &'a [f32],
+    n_experts: usize,
+    n_devices: usize,
+    capacity: usize,
+    d: usize,
+) -> Vec<&'a [f32]> {
+    assert_eq!(buf.len(), n_experts * capacity * d);
+    assert!(n_experts % n_devices == 0);
+    let per = n_experts / n_devices;
+    (0..n_devices)
+        .map(|dev| {
+            let start = dev * per * capacity * d;
+            &buf[start..start + per * capacity * d]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::router::RoutingTable;
+
+    fn table_2tok() -> RoutingTable {
+        // token0 -> expert1 (w 0.5), token1 -> expert0 (w 2.0)
+        RoutingTable::build(&[1, 0], &[0.5, 2.0], 2, 1, 2, 2)
+    }
+
+    #[test]
+    fn encode_places_tokens() {
+        let t = table_2tok();
+        let tokens = vec![1.0, 2.0, /* tok0 */ 3.0, 4.0 /* tok1 */];
+        let enc = encode(&t, &tokens, 2);
+        // layout [E=2, C=2, d=2]: expert0 slot0 = token1; expert1 slot0 = token0
+        assert_eq!(&enc[0..2], &[3.0, 4.0]);
+        assert_eq!(&enc[2..4], &[0.0, 0.0]);
+        assert_eq!(&enc[4..6], &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn decode_weights_and_restores_order() {
+        let t = table_2tok();
+        let mut expert_out = vec![0.0; 2 * 2 * 2];
+        expert_out[0..2].copy_from_slice(&[10.0, 20.0]); // expert0 slot0 -> token1
+        expert_out[4..6].copy_from_slice(&[1.0, 1.0]);   // expert1 slot0 -> token0
+        let dec = decode(&t, &expert_out, 2);
+        assert_eq!(&dec[0..2], &[0.5, 0.5]);   // token0: w=0.5
+        assert_eq!(&dec[2..4], &[20.0, 40.0]); // token1: w=2.0
+    }
+
+    #[test]
+    fn roundtrip_is_weighted_identity() {
+        // identity experts: decode(encode(x)) == w * x when capacity ample
+        let idx = vec![0, 1, 2, 3];
+        let w = vec![1.0; 4];
+        let t = RoutingTable::build(&idx, &w, 4, 1, 4, 2);
+        let tokens: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let enc = encode(&t, &tokens, 2);
+        let dec = decode(&t, &enc, 2);
+        assert_eq!(dec, tokens);
+    }
+
+    #[test]
+    fn dropped_tokens_zeroed() {
+        let t = RoutingTable::build(&[0, 0], &[1.0, 1.0], 2, 1, 1, 1);
+        let tokens = vec![1.0, 1.0, 2.0, 2.0];
+        let enc = encode(&t, &tokens, 2);
+        let dec = decode(&t, &enc, 2);
+        assert_eq!(&dec[0..2], &[1.0, 1.0]);
+        assert_eq!(&dec[2..4], &[0.0, 0.0]); // dropped
+    }
+
+    #[test]
+    fn shards_cover_buffer() {
+        let buf = vec![0.0f32; 8 * 4 * 3];
+        let shards = shard_by_device(&buf, 8, 4, 4, 3);
+        assert_eq!(shards.len(), 4);
+        assert!(shards.iter().all(|s| s.len() == 2 * 4 * 3));
+    }
+}

@@ -1,0 +1,13 @@
+//! MoE coordinator data plane: gate-output routing, capacity management,
+//! encode/decode layout transforms, expert placement.
+//!
+//! This is the Rust half of the GShard-style dispatch whose reference
+//! semantics live in python/compile/kernels/ref.py (`dispatch_combine_masks`).
+
+pub mod dispatch;
+pub mod placement;
+pub mod router;
+
+pub use dispatch::{decode, decode_into, encode, encode_into};
+pub use placement::Placement;
+pub use router::{Route, RoutingTable};

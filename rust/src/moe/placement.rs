@@ -1,0 +1,61 @@
+//! Expert placement across devices (the paper allocates one expert per GPU;
+//! we support `experts_per_device >= 1` for the multi-node Fig. 8c setup).
+
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub n_experts: usize,
+    pub n_devices: usize,
+}
+
+impl Placement {
+    pub fn new(n_experts: usize, n_devices: usize) -> Placement {
+        assert!(n_experts % n_devices == 0,
+                "experts ({n_experts}) must be divisible by devices ({n_devices})");
+        Placement { n_experts, n_devices }
+    }
+
+    pub fn experts_per_device(&self) -> usize {
+        self.n_experts / self.n_devices
+    }
+
+    /// Device owning an expert (contiguous block layout).
+    pub fn device_of(&self, expert: usize) -> usize {
+        assert!(expert < self.n_experts);
+        expert / self.experts_per_device()
+    }
+
+    /// Experts owned by a device.
+    pub fn experts_of(&self, device: usize) -> std::ops::Range<usize> {
+        assert!(device < self.n_devices);
+        let per = self.experts_per_device();
+        device * per..(device + 1) * per
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_layout() {
+        let p = Placement::new(8, 4);
+        assert_eq!(p.experts_per_device(), 2);
+        assert_eq!(p.device_of(0), 0);
+        assert_eq!(p.device_of(7), 3);
+        assert_eq!(p.experts_of(1), 2..4);
+    }
+
+    #[test]
+    fn one_expert_per_device() {
+        let p = Placement::new(8, 8);
+        for e in 0..8 {
+            assert_eq!(p.device_of(e), e);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn indivisible_panics() {
+        Placement::new(7, 2);
+    }
+}

@@ -1,0 +1,179 @@
+//! Gate-output routing: maps each token's top-k expert choices to
+//! (expert, capacity-slot) assignments with FCFS overflow dropping —
+//! byte-for-byte the policy of `ref.dispatch_combine_masks` on the Python
+//! side (pinned there by python/tests/test_dispatch_combine.py).
+
+/// One token's routing decision for one of its k expert choices.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Route {
+    pub token: usize,
+    pub k_slot: usize,
+    pub expert: usize,
+    /// Position within the expert's capacity buffer.
+    pub slot: usize,
+    /// Combine weight (gate score).
+    pub weight: f32,
+}
+
+/// Routing table for one MoE layer invocation.
+#[derive(Debug, Clone)]
+pub struct RoutingTable {
+    pub n_tokens: usize,
+    pub n_experts: usize,
+    pub capacity: usize,
+    pub k: usize,
+    pub routes: Vec<Route>,
+    /// Tokens-per-expert histogram (before drop: demand; after drop: load).
+    pub demand: Vec<usize>,
+    pub load: Vec<usize>,
+    pub dropped: usize,
+}
+
+impl RoutingTable {
+    /// Build the table from gate outputs.
+    ///
+    /// `indices`: row-major [n_tokens, k] expert ids;
+    /// `weights`: row-major [n_tokens, k] combine weights.
+    /// Slot assignment is first-come-first-served over the flattened
+    /// (token, k) order; routes beyond `capacity` are dropped.
+    pub fn build(
+        indices: &[i32],
+        weights: &[f32],
+        n_tokens: usize,
+        k: usize,
+        n_experts: usize,
+        capacity: usize,
+    ) -> RoutingTable {
+        assert_eq!(indices.len(), n_tokens * k, "indices length");
+        assert_eq!(weights.len(), n_tokens * k, "weights length");
+        let mut routes = Vec::with_capacity(n_tokens * k);
+        let mut next_slot = vec![0usize; n_experts];
+        let mut demand = vec![0usize; n_experts];
+        let mut dropped = 0usize;
+        for t in 0..n_tokens {
+            for kk in 0..k {
+                let e = indices[t * k + kk];
+                assert!(
+                    (0..n_experts as i32).contains(&e),
+                    "expert index {e} out of range (E={n_experts})"
+                );
+                let e = e as usize;
+                demand[e] += 1;
+                if next_slot[e] < capacity {
+                    routes.push(Route {
+                        token: t,
+                        k_slot: kk,
+                        expert: e,
+                        slot: next_slot[e],
+                        weight: weights[t * k + kk],
+                    });
+                    next_slot[e] += 1;
+                } else {
+                    dropped += 1;
+                }
+            }
+        }
+        RoutingTable {
+            n_tokens,
+            n_experts,
+            capacity,
+            k,
+            routes,
+            demand,
+            load: next_slot,
+            dropped,
+        }
+    }
+
+    /// Bytes each source device must send to each destination device under
+    /// an expert-parallel layout (`experts_per_device` consecutive experts
+    /// per device, tokens split evenly across devices).
+    /// Returns a row-major [n_devices, n_devices] matrix.
+    pub fn a2a_bytes(
+        &self,
+        n_devices: usize,
+        token_bytes: usize,
+    ) -> Vec<usize> {
+        assert!(self.n_experts % n_devices == 0, "experts must divide devices");
+        let experts_per_device = self.n_experts / n_devices;
+        let tokens_per_device = self.n_tokens.div_ceil(n_devices);
+        let mut mat = vec![0usize; n_devices * n_devices];
+        for r in &self.routes {
+            let src = (r.token / tokens_per_device).min(n_devices - 1);
+            let dst = r.expert / experts_per_device;
+            mat[src * n_devices + dst] += token_bytes;
+        }
+        mat
+    }
+
+    /// Per-expert load imbalance: max load / mean load (1.0 = perfect).
+    pub fn imbalance(&self) -> f64 {
+        let total: usize = self.load.iter().sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let mean = total as f64 / self.n_experts as f64;
+        let max = *self.load.iter().max().unwrap() as f64;
+        max / mean
+    }
+
+    pub fn kept(&self) -> usize {
+        self.routes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fcfs_capacity() {
+        // 4 tokens all to expert 0, capacity 2 -> tokens 0,1 kept.
+        let idx = vec![0, 0, 0, 0];
+        let w = vec![1.0; 4];
+        let rt = RoutingTable::build(&idx, &w, 4, 1, 2, 2);
+        assert_eq!(rt.kept(), 2);
+        assert_eq!(rt.dropped, 2);
+        assert_eq!(rt.routes[0].token, 0);
+        assert_eq!(rt.routes[0].slot, 0);
+        assert_eq!(rt.routes[1].token, 1);
+        assert_eq!(rt.routes[1].slot, 1);
+        assert_eq!(rt.demand[0], 4);
+        assert_eq!(rt.load[0], 2);
+    }
+
+    #[test]
+    fn topk_routes_both() {
+        let idx = vec![0, 1, 1, 0];
+        let w = vec![0.6, 0.4, 0.7, 0.3];
+        let rt = RoutingTable::build(&idx, &w, 2, 2, 2, 4);
+        assert_eq!(rt.kept(), 4);
+        assert_eq!(rt.load, vec![2, 2]);
+    }
+
+    #[test]
+    fn a2a_bytes_matrix() {
+        // 4 tokens on 2 devices (2 each), 4 experts on 2 devices.
+        // token0->e0, token1->e2, token2->e1, token3->e3
+        let idx = vec![0, 2, 1, 3];
+        let w = vec![1.0; 4];
+        let rt = RoutingTable::build(&idx, &w, 4, 1, 4, 4);
+        let m = rt.a2a_bytes(2, 10);
+        // src0: t0->e0(dev0), t1->e2(dev1); src1: t2->e1(dev0), t3->e3(dev1)
+        assert_eq!(m, vec![10, 10, 10, 10]);
+    }
+
+    #[test]
+    fn imbalance_metric() {
+        let idx = vec![0, 0, 0, 1];
+        let w = vec![1.0; 4];
+        let rt = RoutingTable::build(&idx, &w, 4, 1, 2, 8);
+        assert!((rt.imbalance() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_expert_panics() {
+        RoutingTable::build(&[5], &[1.0], 1, 1, 4, 1);
+    }
+}

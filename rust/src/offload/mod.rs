@@ -1,0 +1,22 @@
+//! Expert offloading for memory-limited inference (§3.3, Fig. 7, Fig. 10).
+//!
+//! Gate-selected experts live in CPU memory; non-expert weights and the
+//! shared expert stay resident on the GPU. Three migration policies:
+//!
+//! - `Blocking`        — fetch the selected experts when the expert
+//!                       computation needs them (baseline "Offload");
+//! - `AsyncDeterminate`— the ScMoE property: expert selection happens at the
+//!                       *preceding* layer's gate, so migration is issued one
+//!                       overlap-window early and is *exact* ("Offload-Async");
+//! - `Speculative`     — Pre-gated-MoE-style baseline: predict the selection
+//!                       from preceding-layer hints with some accuracy;
+//!                       mispredictions fall back to a blocking fetch.
+//!
+//! `pool` tracks residency + peak memory; `sim` builds per-token decode
+//! schedules on the DES and reports MoE-block latency.
+
+pub mod pool;
+pub mod sim;
+
+pub use pool::{ExpertId, ExpertPool, Residency};
+pub use sim::{simulate_decode, DecodeCosts, OffloadConfig, OffloadReport, Policy};

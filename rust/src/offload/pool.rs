@@ -1,0 +1,153 @@
+//! GPU-resident expert pool: residency tracking + peak-memory accounting.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ExpertId {
+    pub layer: usize,
+    pub expert: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Residency {
+    Cpu,
+    /// Migration issued; becomes GPU-resident at `ready` (seconds).
+    Migrating { ready: f64 },
+    Gpu,
+}
+
+/// Tracks which experts occupy GPU memory over time.
+#[derive(Debug)]
+pub struct ExpertPool {
+    pub expert_bytes: usize,
+    /// Bytes permanently resident (non-expert weights + shared experts).
+    pub resident_bytes: usize,
+    state: BTreeMap<ExpertId, Residency>,
+    current_expert_bytes: usize,
+    peak_bytes: usize,
+}
+
+impl ExpertPool {
+    pub fn new(expert_bytes: usize, resident_bytes: usize) -> ExpertPool {
+        ExpertPool {
+            expert_bytes,
+            resident_bytes,
+            state: BTreeMap::new(),
+            current_expert_bytes: 0,
+            peak_bytes: resident_bytes,
+        }
+    }
+
+    pub fn residency(&self, id: ExpertId) -> Residency {
+        *self.state.get(&id).unwrap_or(&Residency::Cpu)
+    }
+
+    /// Issue a migration at time `now`; completes at `now + duration`.
+    /// GPU memory is reserved from issue time (the transfer writes into it).
+    pub fn start_migration(&mut self, id: ExpertId, now: f64, duration: f64) {
+        self.start_migration_ready(id, now + duration);
+    }
+
+    /// Issue a migration that completes at absolute time `ready` (callers
+    /// model the serialized H2D copy engine and pass the queued finish).
+    pub fn start_migration_ready(&mut self, id: ExpertId, ready: f64) {
+        match self.residency(id) {
+            Residency::Cpu => {
+                self.state.insert(id, Residency::Migrating { ready });
+                self.current_expert_bytes += self.expert_bytes;
+                self.peak_bytes = self.peak_bytes
+                    .max(self.resident_bytes + self.current_expert_bytes);
+            }
+            _ => {} // already resident or in flight
+        }
+    }
+
+    /// Time at which the expert is usable, given `now` (issues a blocking
+    /// fetch if it was still on CPU).
+    pub fn ready_time(&mut self, id: ExpertId, now: f64, duration: f64) -> f64 {
+        match self.residency(id) {
+            Residency::Gpu => now,
+            Residency::Migrating { ready } => {
+                if ready <= now {
+                    self.state.insert(id, Residency::Gpu);
+                    now
+                } else {
+                    ready
+                }
+            }
+            Residency::Cpu => {
+                self.start_migration(id, now, duration);
+                now + duration
+            }
+        }
+    }
+
+    /// Evict an expert (after its layer's computation finished).
+    pub fn evict(&mut self, id: ExpertId) {
+        if !matches!(self.residency(id), Residency::Cpu) {
+            self.state.remove(&id);
+            self.current_expert_bytes = self.current_expert_bytes
+                .saturating_sub(self.expert_bytes);
+        }
+    }
+
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_bytes
+    }
+
+    pub fn current_bytes(&self) -> usize {
+        self.resident_bytes + self.current_expert_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn migration_lifecycle() {
+        let mut p = ExpertPool::new(100, 1000);
+        let id = ExpertId { layer: 0, expert: 3 };
+        assert_eq!(p.residency(id), Residency::Cpu);
+        p.start_migration(id, 0.0, 2.0);
+        assert!(matches!(p.residency(id), Residency::Migrating { .. }));
+        // not ready at t=1 -> ready time is 2
+        assert_eq!(p.ready_time(id, 1.0, 2.0), 2.0);
+        // at t=3 it's resident
+        assert_eq!(p.ready_time(id, 3.0, 2.0), 3.0);
+        assert_eq!(p.residency(id), Residency::Gpu);
+        p.evict(id);
+        assert_eq!(p.residency(id), Residency::Cpu);
+        assert_eq!(p.current_bytes(), 1000);
+    }
+
+    #[test]
+    fn blocking_fetch_pays_full_duration() {
+        let mut p = ExpertPool::new(100, 0);
+        let id = ExpertId { layer: 1, expert: 0 };
+        assert_eq!(p.ready_time(id, 5.0, 3.0), 8.0);
+    }
+
+    #[test]
+    fn peak_tracks_max_concurrent() {
+        let mut p = ExpertPool::new(100, 1000);
+        for e in 0..3 {
+            p.start_migration(ExpertId { layer: 0, expert: e }, 0.0, 1.0);
+        }
+        assert_eq!(p.peak_bytes(), 1300);
+        for e in 0..3 {
+            p.evict(ExpertId { layer: 0, expert: e });
+        }
+        assert_eq!(p.current_bytes(), 1000);
+        assert_eq!(p.peak_bytes(), 1300); // peak is sticky
+    }
+
+    #[test]
+    fn double_migration_is_idempotent() {
+        let mut p = ExpertPool::new(100, 0);
+        let id = ExpertId { layer: 0, expert: 0 };
+        p.start_migration(id, 0.0, 1.0);
+        p.start_migration(id, 0.5, 1.0);
+        assert_eq!(p.current_bytes(), 100);
+    }
+}

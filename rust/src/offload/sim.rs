@@ -1,0 +1,312 @@
+//! Per-token decode simulation under each offloading policy (Fig. 10).
+
+use crate::cluster::LinkModel;
+use crate::util::rng::Rng;
+
+use super::pool::{ExpertId, ExpertPool};
+
+/// Per-token decode-step operator durations (seconds) for one
+/// Block-MLP + Block-MoE pair.
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeCosts {
+    pub attn: f64,
+    pub mlp: f64,
+    pub se: f64,
+    pub gate: f64,
+    pub expert: f64,
+}
+
+impl DecodeCosts {
+    /// The ScMoE overlap window available for migration:
+    /// T_Atten + T_SE + T_MLP (§3.3).
+    pub fn window(&self) -> f64 {
+        self.attn + self.se + self.mlp
+    }
+
+    pub fn pair_compute(&self) -> f64 {
+        self.attn + self.mlp + self.attn + self.se + self.gate + self.expert
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Policy {
+    /// Entire model resident on GPU (no offloading).
+    GpuOnly,
+    /// Offload with on-demand blocking migration.
+    Blocking,
+    /// ScMoE determinate migration issued at the preceding layer (§3.3).
+    AsyncDeterminate,
+    /// Pre-gated-MoE-style speculative prefetch with hit-rate `accuracy`;
+    /// misses fall back to blocking fetches.
+    Speculative { accuracy: f64 },
+}
+
+impl Policy {
+    pub fn label(&self) -> String {
+        match self {
+            Policy::GpuOnly => "GPU-only".into(),
+            Policy::Blocking => "Offload".into(),
+            Policy::AsyncDeterminate => "Offload-Async".into(),
+            Policy::Speculative { accuracy } => format!("Speculative({accuracy:.2})"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct OffloadConfig {
+    /// Number of MoE layers (Block-MoE blocks).
+    pub n_moe_layers: usize,
+    /// Pre-allocated migration buffers: k expert slots per MoE layer stay
+    /// reserved for the whole run (static allocation, no cudaMalloc on the
+    /// decode path) — matches the paper's Fig. 10a accounting.
+    pub static_buffers: bool,
+    pub n_experts: usize,
+    /// Experts activated per token per MoE layer.
+    pub k: usize,
+    /// Bytes of one expert's parameters.
+    pub expert_bytes: usize,
+    /// Bytes of everything kept resident (non-expert + shared experts).
+    pub resident_bytes: usize,
+    /// Host-to-device link.
+    pub h2d: LinkModel,
+    pub costs: DecodeCosts,
+}
+
+impl OffloadConfig {
+    pub fn migration_time(&self) -> f64 {
+        self.h2d.transfer_time(self.expert_bytes * self.k)
+    }
+
+    /// Peak GPU bytes with the full model resident.
+    pub fn gpu_only_bytes(&self) -> usize {
+        self.resident_bytes + self.n_moe_layers * self.n_experts * self.expert_bytes
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct OffloadReport {
+    pub policy: Policy,
+    pub peak_gpu_bytes: usize,
+    /// Mean per-pair (Block-MLP + Block-MoE) latency over decoded tokens.
+    pub block_latency: f64,
+    /// Mean migration time NOT hidden by computation.
+    pub exposed_migration: f64,
+    pub tokens: usize,
+}
+
+/// Simulate `tokens` decode steps. `selections[t][l]` = experts chosen for
+/// token t at MoE layer l (k entries each); generated from `seed` when None.
+pub fn simulate_decode(
+    cfg: &OffloadConfig,
+    selections: Option<&[Vec<Vec<usize>>]>,
+    tokens: usize,
+    policy: Policy,
+    seed: u64,
+) -> OffloadReport {
+    let mut rng = Rng::new(seed);
+    let sel_owned: Vec<Vec<Vec<usize>>>;
+    let sels: &[Vec<Vec<usize>>] = match selections {
+        Some(s) => s,
+        None => {
+            sel_owned = (0..tokens)
+                .map(|_| {
+                    (0..cfg.n_moe_layers)
+                        .map(|_| {
+                            let mut picked = Vec::new();
+                            while picked.len() < cfg.k {
+                                let e = rng.below(cfg.n_experts);
+                                if !picked.contains(&e) {
+                                    picked.push(e);
+                                }
+                            }
+                            picked
+                        })
+                        .collect()
+                })
+                .collect();
+            &sel_owned
+        }
+    };
+
+    if policy == Policy::GpuOnly {
+        let lat = cfg.costs.pair_compute();
+        return OffloadReport {
+            policy,
+            peak_gpu_bytes: cfg.gpu_only_bytes(),
+            block_latency: lat,
+            exposed_migration: 0.0,
+            tokens,
+        };
+    }
+
+    let reserved = if cfg.static_buffers {
+        cfg.n_moe_layers * cfg.k * cfg.expert_bytes
+    } else {
+        0
+    };
+    let mut pool = ExpertPool::new(cfg.expert_bytes, cfg.resident_bytes + reserved);
+    let mig = cfg.h2d.transfer_time(cfg.expert_bytes);
+    let c = cfg.costs;
+    // H2D copies serialize on the single transfer engine
+    let mut h2d_free: f64;
+
+    let mut total_latency = 0.0;
+    let mut total_exposed = 0.0;
+
+    for sel_t in sels.iter().take(tokens) {
+        for (layer, experts) in sel_t.iter().enumerate() {
+            // --- one Block-MLP + Block-MoE pair, time relative to pair start
+            let mut now = 0.0;
+            h2d_free = 0.0;
+            now += c.attn; // Attn(l) — ScMoE gate runs here (preceding layer)
+            let gate_t = now + c.gate;
+
+            // migration issue point per policy (queued on the copy engine)
+            let queue_mig = |pool: &mut ExpertPool, h2d_free: &mut f64,
+                                 id: ExpertId, issue: f64| {
+                if matches!(pool.residency(id), super::pool::Residency::Cpu) {
+                    let start = h2d_free.max(issue);
+                    let ready = start + mig;
+                    *h2d_free = ready;
+                    pool.start_migration_ready(id, ready);
+                }
+            };
+            match policy {
+                Policy::AsyncDeterminate => {
+                    // exact selection known at preceding layer's gate
+                    for &e in experts {
+                        queue_mig(&mut pool, &mut h2d_free,
+                                  ExpertId { layer, expert: e }, gate_t);
+                    }
+                }
+                Policy::Speculative { accuracy } => {
+                    for &e in experts {
+                        let hit = rng.next_f64() < accuracy;
+                        let guess = if hit {
+                            e
+                        } else {
+                            (e + 1 + rng.below(cfg.n_experts - 1)) % cfg.n_experts
+                        };
+                        queue_mig(&mut pool, &mut h2d_free,
+                                  ExpertId { layer, expert: guess }, gate_t);
+                    }
+                }
+                _ => {}
+            }
+
+            now = gate_t + c.mlp;  // MLP(l)
+            now += c.attn;         // Attn(l+1)
+            now += c.se;           // SE(l+1)
+
+            // expert computation needs the weights on GPU (blocking fetches
+            // queue on the copy engine behind any in-flight prefetches)
+            let mut ready = now;
+            for &e in experts {
+                let id = ExpertId { layer, expert: e };
+                if matches!(pool.residency(id), super::pool::Residency::Cpu) {
+                    queue_mig(&mut pool, &mut h2d_free, id, now);
+                }
+                ready = ready.max(pool.ready_time(id, now, mig));
+            }
+            let exposed = ready - now;
+            now = ready + c.expert;
+
+            total_latency += now;
+            total_exposed += exposed;
+
+            // evict after use (and any mispredicted prefetches)
+            for e in 0..cfg.n_experts {
+                pool.evict(ExpertId { layer, expert: e });
+            }
+        }
+    }
+
+    let n = (tokens * cfg.n_moe_layers) as f64;
+    OffloadReport {
+        policy,
+        peak_gpu_bytes: pool.peak_bytes(),
+        block_latency: total_latency / n,
+        exposed_migration: total_exposed / n,
+        tokens,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> OffloadConfig {
+        OffloadConfig {
+            n_moe_layers: 12,
+            static_buffers: false,
+            n_experts: 8,
+            k: 1,
+            expert_bytes: 8 << 20,
+            resident_bytes: 200 << 20,
+            h2d: LinkModel::new(10e-6, 8e9),
+            costs: DecodeCosts {
+                attn: 300e-6, mlp: 250e-6, se: 250e-6,
+                gate: 20e-6, expert: 250e-6,
+            },
+        }
+    }
+
+    #[test]
+    fn offload_cuts_peak_memory() {
+        let c = cfg();
+        let gpu = simulate_decode(&c, None, 16, Policy::GpuOnly, 1);
+        let off = simulate_decode(&c, None, 16, Policy::Blocking, 1);
+        assert!(off.peak_gpu_bytes < gpu.peak_gpu_bytes / 2,
+                "offload {} vs gpu {}", off.peak_gpu_bytes, gpu.peak_gpu_bytes);
+    }
+
+    #[test]
+    fn async_hides_migration() {
+        let c = cfg();
+        let blocking = simulate_decode(&c, None, 32, Policy::Blocking, 2);
+        let asynch = simulate_decode(&c, None, 32, Policy::AsyncDeterminate, 2);
+        assert!(blocking.exposed_migration > 0.0);
+        assert!(asynch.exposed_migration < blocking.exposed_migration,
+                "async {} vs blocking {}", asynch.exposed_migration,
+                blocking.exposed_migration);
+        assert!(asynch.block_latency < blocking.block_latency);
+    }
+
+    #[test]
+    fn async_never_slower_than_gpu_only_plus_exposed() {
+        let c = cfg();
+        let gpu = simulate_decode(&c, None, 16, Policy::GpuOnly, 3);
+        let asynch = simulate_decode(&c, None, 16, Policy::AsyncDeterminate, 3);
+        assert!(asynch.block_latency + 1e-12 >= gpu.block_latency);
+        assert!((asynch.block_latency - gpu.block_latency - asynch.exposed_migration).abs() < 1e-9);
+    }
+
+    #[test]
+    fn speculative_accuracy_1_matches_async() {
+        let c = cfg();
+        let spec = simulate_decode(&c, None, 64, Policy::Speculative { accuracy: 1.0 }, 4);
+        let asynch = simulate_decode(&c, None, 64, Policy::AsyncDeterminate, 4);
+        assert!((spec.block_latency - asynch.block_latency).abs() < 1e-9);
+    }
+
+    #[test]
+    fn speculative_misses_cost_more() {
+        let c = cfg();
+        let hi = simulate_decode(&c, None, 128, Policy::Speculative { accuracy: 0.95 }, 5);
+        let lo = simulate_decode(&c, None, 128, Policy::Speculative { accuracy: 0.30 }, 5);
+        assert!(lo.block_latency > hi.block_latency);
+    }
+
+    #[test]
+    fn same_selections_same_experts_run() {
+        // async determinate must never change *which* experts execute
+        let c = cfg();
+        let sels: Vec<Vec<Vec<usize>>> =
+            vec![vec![vec![3]; c.n_moe_layers]; 8];
+        let a = simulate_decode(&c, Some(&sels), 8, Policy::Blocking, 6);
+        let b = simulate_decode(&c, Some(&sels), 8, Policy::AsyncDeterminate, 6);
+        // identical peak memory (k resident at a time) and b strictly faster
+        assert_eq!(a.peak_gpu_bytes, b.peak_gpu_bytes);
+        assert!(b.block_latency <= a.block_latency);
+    }
+}

@@ -1,0 +1,178 @@
+//! DES-driven efficiency experiments: Fig. 1, Fig. 6, Fig. 8 and the
+//! speedup columns of Tables 2-4.
+
+use anyhow::Result;
+
+use crate::cluster::Scenario;
+use crate::coordinator::adaptive::overlap_fraction;
+use crate::coordinator::costs::{BlockCosts, ComputeCosts, MoEKind, Strategy};
+use crate::coordinator::schedule::{build_pair_schedule_auto, backbone_time};
+use crate::coordinator::timeline;
+use crate::util::cli::Args;
+use crate::util::stats::fmt_secs;
+
+/// SwinV2-MoE-S proxy shape parameters (Fig. 1/8 workload).
+pub fn proxy_costs(scenario: Scenario) -> BlockCosts {
+    let base = ComputeCosts::swin_proxy();
+    let topo = scenario.topology();
+    BlockCosts::from_topology(&base, &topo, 4096, 384, 1.25)
+}
+
+/// GPT2-MoE-Medium proxy (Table 3/4 workload): d_model = 1024 tokens
+/// (4 KB each), heavier experts; comm share on NVLink ≈ 25% of MoE time —
+/// between the Swin NVLink (15%) and PCIe (60%) bands, reflecting the
+/// larger per-token payload of the language model.
+pub fn gpt_proxy_costs(scenario: Scenario) -> BlockCosts {
+    let base = ComputeCosts {
+        attn: 1.20e-3,
+        mlp: 1.00e-3,
+        se: 1.00e-3,
+        gate: 0.08e-3,
+        encode: 0.06e-3,
+        decode: 0.06e-3,
+        expert_k1: 1.10e-3,
+    };
+    let topo = scenario.topology();
+    BlockCosts::from_topology(&base, &topo, 640, 4096, 2.0)
+}
+
+/// GPT3-MoE-XL proxy (Table 4): d_model = 2048 (8 KB tokens), heavier
+/// experts; comm ≈ 33% of MoE time on NVLink at this payload.
+pub fn xl_proxy_costs(scenario: Scenario) -> BlockCosts {
+    let base = ComputeCosts {
+        attn: 1.40e-3,
+        mlp: 1.20e-3,
+        se: 1.20e-3,
+        gate: 0.09e-3,
+        encode: 0.07e-3,
+        decode: 0.07e-3,
+        expert_k1: 1.40e-3,
+    };
+    let topo = scenario.topology();
+    BlockCosts::from_topology(&base, &topo, 640, 8192, 2.0)
+}
+
+/// Training-iteration costs: forward + backward. Backward roughly doubles
+/// compute (recompute + grads) and repeats both All-to-Alls for gradients.
+pub fn train_costs(c: &BlockCosts) -> BlockCosts {
+    BlockCosts {
+        attn: c.attn * 3.0,
+        mlp: c.mlp * 3.0,
+        se: c.se * 3.0,
+        gate: c.gate * 3.0,
+        encode: c.encode * 2.0,
+        decode: c.decode * 2.0,
+        expert_k1: c.expert_k1 * 3.0,
+        a2a_k1: c.a2a_k1 * 2.0,
+    }
+}
+
+/// Fig. 1: MLP vs top-2/top-1 MoE time breakdown per scenario.
+pub fn fig1(_args: &Args) -> Result<()> {
+    println!("== Fig. 1: MoE block overhead breakdown (per Block pair) ==");
+    println!("{:<16} {:>10} {:>12} {:>12} {:>12} {:>9}",
+             "scenario", "MLP", "MoE-comp", "A2A", "MoE-total", "comm%");
+    for sc in Scenario::all() {
+        let c = proxy_costs(sc);
+        for k in [2usize, 1] {
+            let a2a = 2.0 * c.a2a(k);
+            let comp = c.gate + c.encode + c.decode + c.expert(k);
+            let total = comp + a2a;
+            println!("{:<16} {:>10} {:>12} {:>12} {:>12} {:>8.0}%  (top-{k})",
+                     sc.label(), fmt_secs(c.mlp), fmt_secs(comp),
+                     fmt_secs(a2a), fmt_secs(total), 100.0 * a2a / total);
+        }
+    }
+    println!("\npaper bands: PCIe ≈ 60% | NVLink ≈ 15% | 2-node → ~50% (top-2)");
+    Ok(())
+}
+
+/// Fig. 6: operator timelines for each architecture × strategy.
+pub fn fig6(args: &Args) -> Result<()> {
+    let sc = Scenario::parse(&args.str_or("scenario", "pcie")).unwrap_or(Scenario::PcieA30x8);
+    let c = proxy_costs(sc);
+    let width = args.usize_or("width", 100);
+    println!("== Fig. 6: timelines ({}) ==", sc.label());
+    let rows: Vec<(&str, MoEKind, Strategy)> = vec![
+        ("Standard MoE (sequential)", MoEKind::Standard { k: 2 }, Strategy::Sequential),
+        ("Standard MoE (pipelining)", MoEKind::Standard { k: 2 },
+         Strategy::Pipelined { chunks: 2 }),
+        ("Shared-expert MoE", MoEKind::SharedExpert, Strategy::Pipelined { chunks: 1 }),
+        ("ScMoE (overlapping)", MoEKind::ScMoE { k: 1 }, Strategy::Overlap),
+        ("ScMoE (overlapping+pipelining)", MoEKind::ScMoE { k: 1 },
+         Strategy::OverlapPipelined { chunks: 2 }),
+    ];
+    for (label, kind, strat) in rows {
+        let s = build_pair_schedule_auto(&c, kind, strat);
+        println!("\n--- {label} ---");
+        print!("{}", timeline::render(&s.run(), width));
+    }
+    Ok(())
+}
+
+/// Fig. 8: per-pair overhead across scenarios and configurations.
+pub fn fig8(_args: &Args) -> Result<()> {
+    println!("== Fig. 8: overhead per Block-MLP + Block-MoE pair ==");
+    let configs: Vec<(&str, MoEKind, Strategy)> = vec![
+        ("Top2",     MoEKind::Standard { k: 2 }, Strategy::Sequential),
+        ("Top2-P",   MoEKind::Standard { k: 2 }, Strategy::Pipelined { chunks: 2 }),
+        ("Top1",     MoEKind::Standard { k: 1 }, Strategy::Sequential),
+        ("Top1-P",   MoEKind::Standard { k: 1 }, Strategy::Pipelined { chunks: 2 }),
+        ("Top1+SE1", MoEKind::SharedExpert,      Strategy::Pipelined { chunks: 1 }),
+        ("ScMoE",    MoEKind::ScMoE { k: 1 },    Strategy::Overlap),
+        ("ScMoE-P",  MoEKind::ScMoE { k: 1 },    Strategy::OverlapPipelined { chunks: 2 }),
+    ];
+    for sc in Scenario::all() {
+        let c = proxy_costs(sc);
+        println!("\n--- {} ---", sc.label());
+        let base = build_pair_schedule_auto(&c, MoEKind::Standard { k: 2 },
+                                            Strategy::Sequential).makespan();
+        for (label, kind, strat) in &configs {
+            let t = build_pair_schedule_auto(&c, *kind, *strat).makespan();
+            let bar_len = (40.0 * t / base) as usize;
+            println!("{:<10} {:>10}  {:>5.2}x  {}",
+                     label, fmt_secs(t), base / t, "#".repeat(bar_len));
+        }
+        let ov = overlap_fraction(&c, MoEKind::ScMoE { k: 1 }, Strategy::Overlap);
+        println!("ScMoE overlap fraction: {:.0}%", ov * 100.0);
+    }
+    Ok(())
+}
+
+/// Speedup columns of Tables 2 (PCIe), 3 (NVLink) and 4 (NVLink, more
+/// activated experts), plus §4.2.4's ScMoE-2 vs top-2 cost ratio.
+pub fn speedup_tables(_args: &Args) -> Result<()> {
+    let rows: Vec<(&str, MoEKind, Strategy)> = vec![
+        ("Standard top-2 MoE", MoEKind::Standard { k: 2 }, Strategy::Sequential),
+        ("Standard top-1 MoE", MoEKind::Standard { k: 1 }, Strategy::Sequential),
+        ("Shared-Expert MoE",  MoEKind::SharedExpert,      Strategy::Pipelined { chunks: 1 }),
+        ("ScMoE",              MoEKind::ScMoE { k: 1 },    Strategy::Overlap),
+        ("Standard top-3 MoE", MoEKind::Standard { k: 3 }, Strategy::Sequential),
+        ("ScMoE-2",            MoEKind::ScMoE { k: 2 },    Strategy::Overlap),
+    ];
+    for (table, sc, proxy) in [("Table 2 (SwinV2 proxy)", Scenario::PcieA30x8, 0),
+                               ("Table 3 (GPT2-Medium proxy)", Scenario::NvlinkA800x8, 1),
+                               ("Table 4 (GPT3-XL proxy)", Scenario::NvlinkA800x8, 2)] {
+        let c_inf = match proxy {
+            0 => proxy_costs(sc),
+            1 => gpt_proxy_costs(sc),
+            _ => xl_proxy_costs(sc),
+        };
+        let c_tr = train_costs(&c_inf);
+        let base_inf = build_pair_schedule_auto(&c_inf, MoEKind::Standard { k: 2 },
+                                                Strategy::Sequential).makespan();
+        let base_tr = build_pair_schedule_auto(&c_tr, MoEKind::Standard { k: 2 },
+                                               Strategy::Sequential).makespan();
+        println!("\n== {table} — {} ==", sc.label());
+        println!("{:<22} {:>12} {:>12}", "model", "train", "inference");
+        for (label, kind, strat) in &rows {
+            let ti = build_pair_schedule_auto(&c_inf, *kind, *strat).makespan();
+            let tt = build_pair_schedule_auto(&c_tr, *kind, *strat).makespan();
+            println!("{:<22} {:>11.2}x {:>11.2}x", label, base_tr / tt, base_inf / ti);
+        }
+        let _ = backbone_time(&c_inf, MoEKind::ScMoE { k: 1 });
+    }
+    println!("\npaper: Table2 ScMoE 1.43x/1.66x (PCIe); Table3 1.12x/1.17x (NVLink);");
+    println!("       Table4 ScMoE-2 vs top-2: 1.05x train / 1.08x inference");
+    Ok(())
+}

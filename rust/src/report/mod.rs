@@ -1,0 +1,47 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (see DESIGN.md §4 for the experiment index).
+//!
+//! Efficiency results (Fig. 1/6/8, the speedup columns of Tables 2-4) come
+//! from the DES executing the coordinator's real schedules under the
+//! calibrated hardware presets; quality results (accuracy/perplexity
+//! columns, Tables 1/5/6/7, Fig. 9/11) come from real training runs through
+//! the AOT artifacts. Offloading (Fig. 10) uses the decode simulator with
+//! real parameter byte counts.
+
+pub mod efficiency;
+pub mod offload_report;
+pub mod quality;
+
+use anyhow::{bail, Result};
+
+use crate::util::cli::Args;
+
+pub fn run(exp: &str, args: &Args) -> Result<()> {
+    match exp {
+        "fig1" => efficiency::fig1(args),
+        "fig6" => efficiency::fig6(args),
+        "fig8" => efficiency::fig8(args),
+        "speedups" | "table2-speedup" | "table3-speedup" | "table4-speedup" => {
+            efficiency::speedup_tables(args)
+        }
+        "fig10" => offload_report::fig10(args),
+        "table1" => quality::table1(args),
+        "table2" => quality::table_archs(args, &["top2", "top1", "shared", "scmoe"], "table2"),
+        "table3" => quality::table_archs(args, &["top2", "shared", "scmoe"], "table3"),
+        "table4" => quality::table_archs(args, &["top2", "scmoe", "top3", "scmoe2"], "table4"),
+        "table5" => quality::table5(args),
+        "table6" | "table7" => quality::table_archs(
+            args, &["top2", "top1", "shared", "dgmoe", "scmoe"], exp),
+        "fig9" => quality::fig9(args),
+        "fig11" => quality::fig11(args),
+        "a5" => quality::table_archs(args, &["top1", "dgmoe", "dgmoe_share"], "a5"),
+        "all-efficiency" => {
+            efficiency::fig1(args)?;
+            efficiency::fig6(args)?;
+            efficiency::fig8(args)?;
+            efficiency::speedup_tables(args)?;
+            offload_report::fig10(args)
+        }
+        other => bail!("unknown experiment {other:?}; see DESIGN.md §4"),
+    }
+}

@@ -1,0 +1,177 @@
+//! Quality experiments: real training runs through the AOT artifacts.
+//!
+//! Each table row = one architecture trained from scratch on the bundled
+//! corpus (lm presets) or the synthetic classification proxy (cls presets),
+//! evaluated on held-out data. Artifact directories follow the aot.py
+//! naming scheme `quality_<arch>_<preset>`; build them with
+//! `make artifacts-quality PRESET=<preset> ARCHS=a,b,c`.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::Engine;
+use crate::train::{TrainOptions, Trainer};
+use crate::util::cli::Args;
+
+pub fn artifacts_root() -> PathBuf {
+    std::env::var("SCMOE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| {
+            PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        })
+}
+
+pub struct QualityRun {
+    pub arch: String,
+    pub eval_loss: f32,
+    pub ppl: f32,
+    pub acc: f32,
+    pub steps: usize,
+    pub param_count: usize,
+    pub mean_step_secs: f64,
+}
+
+/// Train one architecture for `steps` steps and evaluate.
+pub fn run_quality(engine: &Arc<Engine>, arch: &str, preset: &str,
+                   steps: usize, eval_batches: usize,
+                   log_csv: Option<PathBuf>, stats_csv: Option<PathBuf>)
+    -> Result<QualityRun> {
+    let dir = artifacts_root().join(format!("quality_{arch}_{preset}"));
+    if !dir.join("manifest.json").exists() {
+        anyhow::bail!(
+            "artifacts missing: {} — build with\n  \
+             cd python && python -m compile.aot --profile quality \
+             --arch {arch} --preset {preset} --out-root ../artifacts",
+            dir.display());
+    }
+    let set = engine.open(&dir).context("opening artifact set")?;
+    let mut tr = Trainer::new(&set, 0)?;
+    let opts = TrainOptions {
+        steps,
+        eval_every: 0,
+        eval_batches,
+        verbose: false,
+        log_csv,
+        stats_csv,
+        ..Default::default()
+    };
+    tr.run(&opts)?;
+    let ev = tr.evaluate(eval_batches)?;
+    let mean_step = tr.records.iter().map(|r| r.secs).sum::<f64>()
+        / tr.records.len().max(1) as f64;
+    Ok(QualityRun {
+        arch: arch.to_string(),
+        eval_loss: ev.loss,
+        ppl: ev.ppl,
+        acc: ev.acc,
+        steps,
+        param_count: set.manifest.param_count,
+        mean_step_secs: mean_step,
+    })
+}
+
+/// Generic architecture-comparison table (Tables 2/3/4/6/7 quality columns).
+pub fn table_archs(args: &Args, archs: &[&str], title: &str) -> Result<()> {
+    let preset = args.str_or("preset", "micro");
+    let steps = args.usize_or("steps", 60);
+    let eval_batches = args.usize_or("eval-batches", 4);
+    let engine = Arc::new(Engine::cpu()?);
+    println!("== {title}: quality comparison ({preset}, {steps} steps) ==");
+    println!("{:<14} {:>10} {:>8} {:>8} {:>10} {:>10}",
+             "arch", "eval loss", "ppl", "acc", "params", "s/step");
+    for arch in archs {
+        match run_quality(&engine, arch, &preset, steps, eval_batches, None, None) {
+            Ok(r) => println!("{:<14} {:>10.4} {:>8.2} {:>8.3} {:>10} {:>10.2}",
+                              r.arch, r.eval_loss, r.ppl, r.acc, r.param_count,
+                              r.mean_step_secs),
+            Err(e) => println!("{arch:<14} SKIPPED: {e}"),
+        }
+    }
+    Ok(())
+}
+
+/// Table 1: shortcut position ablation (Pos-1/2/3) + analytic overlap
+/// windows.
+pub fn table1(args: &Args) -> Result<()> {
+    let preset = args.str_or("preset", "micro");
+    let steps = args.usize_or("steps", 60);
+    let engine = Arc::new(Engine::cpu()?);
+    println!("== Table 1: ScMoE shortcut-position ablation ==");
+    println!("{:<14} {:>10} {:>8}   overlap window", "position", "eval loss", "ppl");
+    let rows = [("scmoe_pos1", "T_Atten + T_SE"),
+                ("scmoe", "T_Atten + T_SE + T_MLP"),
+                ("scmoe_pos3", "2*T_Atten + T_SE + T_MLP")];
+    for (arch, window) in rows {
+        match run_quality(&engine, arch, &preset, steps, 4, None, None) {
+            Ok(r) => println!("{:<14} {:>10.4} {:>8.2}   {window}",
+                              arch, r.eval_loss, r.ppl),
+            Err(e) => println!("{arch:<14} SKIPPED: {e}"),
+        }
+    }
+    Ok(())
+}
+
+/// Table 5: shared-expert-gate ablation. Requires artifacts built with
+/// `--arch <a>` plus variants without the SE gate (suffix `_nosegate`,
+/// built by the Makefile's artifacts-ablation target).
+pub fn table5(args: &Args) -> Result<()> {
+    let preset = args.str_or("preset", "micro");
+    let steps = args.usize_or("steps", 60);
+    let engine = Arc::new(Engine::cpu()?);
+    println!("== Table 5: SE-Gate ablation ({preset}) ==");
+    println!("{:<18} {:>12} {:>14}", "arch", "with gate", "without gate");
+    for arch in ["scmoe", "shared"] {
+        let with = run_quality(&engine, arch, &preset, steps, 4, None, None);
+        let without = run_quality(&engine, &format!("{arch}_nosegate"), &preset,
+                                  steps, 4, None, None);
+        let f = |r: Result<QualityRun>| match r {
+            Ok(q) => format!("{:.4}", q.eval_loss),
+            Err(_) => "missing".to_string(),
+        };
+        println!("{:<18} {:>12} {:>14}", arch, f(with), f(without));
+    }
+    Ok(())
+}
+
+/// Fig. 9: validation loss curves per architecture (CSV output).
+pub fn fig9(args: &Args) -> Result<()> {
+    let preset = args.str_or("preset", "micro");
+    let steps = args.usize_or("steps", 100);
+    let out = PathBuf::from(args.str_or("out", "reports"));
+    std::fs::create_dir_all(&out).ok();
+    let engine = Arc::new(Engine::cpu()?);
+    println!("== Fig. 9: training curves -> {}/fig9_<arch>.csv ==", out.display());
+    for arch in ["top2", "shared", "scmoe"] {
+        let csv = out.join(format!("fig9_{arch}.csv"));
+        match run_quality(&engine, arch, &preset, steps, 4, Some(csv.clone()), None) {
+            Ok(r) => println!("{arch}: final eval loss {:.4} (ppl {:.2}) -> {}",
+                              r.eval_loss, r.ppl, csv.display()),
+            Err(e) => println!("{arch}: SKIPPED: {e}"),
+        }
+    }
+    Ok(())
+}
+
+/// Fig. 11: shortcut-connection instrumentation (repeat-selection fraction,
+/// L2 distance, gating scores) logged during a ScMoE training run.
+pub fn fig11(args: &Args) -> Result<()> {
+    let preset = args.str_or("preset", "micro");
+    let steps = args.usize_or("steps", 100);
+    let out = PathBuf::from(args.str_or("out", "reports"));
+    std::fs::create_dir_all(&out).ok();
+    let engine = Arc::new(Engine::cpu()?);
+    let arch = args.str_or("arch", "scmoe");
+    let csv = out.join(format!("fig11_{arch}.csv"));
+    println!("== Fig. 11: shortcut analysis ({arch}) -> {} ==", csv.display());
+    let r = run_quality(&engine, &arch, &preset, steps, 4, None, Some(csv.clone()))?;
+    println!("final eval loss {:.4}; stats series written to {}",
+             r.eval_loss, csv.display());
+    // summarize the last row
+    let text = std::fs::read_to_string(&csv)?;
+    if let Some(last) = text.lines().last() {
+        println!("last stats row: {last}");
+    }
+    Ok(())
+}

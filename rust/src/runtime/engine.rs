@@ -1,0 +1,143 @@
+//! PJRT engine: loads AOT HLO-text artifacts, compiles them once on the CPU
+//! client, and executes them with shape-checked host tensors.
+//!
+//! Interchange is HLO *text* (see python/compile/aot.py): jax >= 0.5 emits
+//! protos with 64-bit ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids. Outputs always arrive as a single tuple buffer (the 0.5.1
+//! PJRT wrapper does not untuple), so `run` downloads + decomposes.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, Manifest};
+use super::tensor::HostTensor;
+
+/// Shared PJRT CPU client. Creating a TfrtCpuClient is expensive (~100ms)
+/// and the process only ever needs one.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one artifact (HLO text -> executable).
+    pub fn load_artifact(&self, spec: &ArtifactSpec) -> Result<Executable> {
+        let path = &spec.file;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let t0 = Instant::now();
+        let exe = self.client.compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            spec: spec.clone(),
+            exe,
+            compile_secs: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Load every artifact in a manifest (compiled lazily via `ArtifactSet`).
+    pub fn open(self: &Arc<Self>, dir: &Path) -> Result<ArtifactSet> {
+        let manifest = Manifest::load(dir)?;
+        Ok(ArtifactSet {
+            engine: Arc::clone(self),
+            manifest,
+            cache: Mutex::new(BTreeMap::new()),
+        })
+    }
+}
+
+/// One compiled artifact with its tensor interface.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    pub compile_secs: f64,
+}
+
+impl Executable {
+    /// Execute with shape/dtype validation; returns one HostTensor per
+    /// declared output.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.check_inputs(inputs)?;
+        let lits: Vec<xla::Literal> = inputs.iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        self.run_literals(&lits)
+    }
+
+    /// Execute with pre-built literals (hot loop: the training driver keeps
+    /// parameter literals resident and avoids re-encoding them per step).
+    pub fn run_literals<L: std::borrow::Borrow<xla::Literal>>(
+        &self, inputs: &[L]) -> Result<Vec<HostTensor>> {
+        let out = self.exe.execute::<L>(inputs)
+            .with_context(|| format!("executing {}", self.spec.name))?;
+        let tuple = out[0][0].to_literal_sync().context("downloading result")?;
+        let parts = tuple.to_tuple().context("decomposing result tuple")?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!("artifact {} returned {} outputs, manifest says {}",
+                  self.spec.name, parts.len(), self.spec.outputs.len());
+        }
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+
+    /// Execute and return raw literals without host conversion (used when
+    /// outputs feed straight back into the next call).
+    pub fn run_raw<L: std::borrow::Borrow<xla::Literal>>(
+        &self, inputs: &[L]) -> Result<Vec<xla::Literal>> {
+        let out = self.exe.execute::<L>(inputs)
+            .with_context(|| format!("executing {}", self.spec.name))?;
+        let tuple = out[0][0].to_literal_sync().context("downloading result")?;
+        tuple.to_tuple().context("decomposing result tuple")
+    }
+
+    fn check_inputs(&self, inputs: &[HostTensor]) -> Result<()> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!("artifact {} takes {} inputs, got {}",
+                  self.spec.name, self.spec.inputs.len(), inputs.len());
+        }
+        for (t, s) in inputs.iter().zip(&self.spec.inputs) {
+            if !t.matches(s) {
+                bail!("artifact {} input {:?}: expected shape {:?} dtype {:?}, \
+                       got shape {:?} dtype {:?}",
+                      self.spec.name, s.name, s.shape, s.dtype, t.shape, t.dtype());
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A manifest directory with lazily-compiled executables.
+pub struct ArtifactSet {
+    engine: Arc<Engine>,
+    pub manifest: Manifest,
+    cache: Mutex<BTreeMap<String, Arc<Executable>>>,
+}
+
+impl ArtifactSet {
+    pub fn get(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(Arc::clone(e));
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let exe = Arc::new(self.engine.load_artifact(&spec)?);
+        self.cache.lock().unwrap().insert(name.to_string(), Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.manifest.artifacts.keys().cloned().collect()
+    }
+}

@@ -1,0 +1,210 @@
+//! `manifest.json` loader — the contract between the Python AOT pipeline
+//! and the Rust runtime. One manifest per artifact directory describes the
+//! model config, the flattened parameter order, and every artifact's
+//! input/output tensor interface.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "u32" => DType::U32,
+            other => bail!("unknown dtype {other:?}"),
+        })
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.elements() * self.dtype.size_bytes()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let name = j.field("name").map_err(|e| anyhow!(e))?
+            .as_str().context("name not a string")?.to_string();
+        let shape = j.field("shape").map_err(|e| anyhow!(e))?
+            .as_arr().context("shape not an array")?
+            .iter().map(|v| v.as_usize().context("bad dim")).collect::<Result<_>>()?;
+        let dtype = DType::parse(
+            j.field("dtype").map_err(|e| anyhow!(e))?
+                .as_str().context("dtype not a string")?)?;
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Model hyperparameters mirrored from python/compile/config.py.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub arch: String,
+    pub task: String,
+    pub vocab_size: usize,
+    pub n_classes: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_blocks: usize,
+    pub n_experts: usize,
+    pub seq_len: usize,
+    pub capacity_factor: f64,
+    pub batch_size: usize,
+}
+
+impl ModelConfig {
+    fn from_json(j: &Json) -> Result<ModelConfig> {
+        let gs = |k: &str| -> Result<String> {
+            Ok(j.field(k).map_err(|e| anyhow!(e))?
+                .as_str().with_context(|| format!("{k} not a string"))?.to_string())
+        };
+        let gu = |k: &str| -> Result<usize> {
+            j.field(k).map_err(|e| anyhow!(e))?
+                .as_usize().with_context(|| format!("{k} not a number"))
+        };
+        Ok(ModelConfig {
+            name: gs("name")?,
+            arch: gs("arch")?,
+            task: gs("task")?,
+            vocab_size: gu("vocab_size")?,
+            n_classes: gu("n_classes")?,
+            d_model: gu("d_model")?,
+            n_heads: gu("n_heads")?,
+            d_ff: gu("d_ff")?,
+            n_blocks: gu("n_blocks")?,
+            n_experts: gu("n_experts")?,
+            seq_len: gu("seq_len")?,
+            capacity_factor: j.field("capacity_factor").map_err(|e| anyhow!(e))?
+                .as_f64().context("capacity_factor")?,
+            batch_size: gu("batch_size")?,
+        })
+    }
+
+    pub fn tokens_per_batch(&self) -> usize {
+        self.batch_size * self.seq_len
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub kind: String,
+    pub config: ModelConfig,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    /// quality manifests: flattened (name, shape) parameter order
+    pub param_specs: Vec<(String, Vec<usize>)>,
+    pub param_count: usize,
+    pub n_moe_blocks: usize,
+    pub capacity: usize,
+    /// ops manifests
+    pub tokens: usize,
+    pub capacities: BTreeMap<usize, usize>,
+    pub token_bytes: usize,
+    pub expert_param_bytes: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+
+        let kind = j.field("kind").map_err(|e| anyhow!(e))?
+            .as_str().context("kind")?.to_string();
+        let config = ModelConfig::from_json(j.field("config").map_err(|e| anyhow!(e))?)?;
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j.field("artifacts").map_err(|e| anyhow!(e))?
+            .as_obj().context("artifacts not an object")? {
+            let file = dir.join(a.field("file").map_err(|e| anyhow!(e))?
+                .as_str().context("file")?);
+            let inputs = a.field("inputs").map_err(|e| anyhow!(e))?
+                .as_arr().context("inputs")?
+                .iter().map(TensorSpec::from_json).collect::<Result<_>>()?;
+            let outputs = a.field("outputs").map_err(|e| anyhow!(e))?
+                .as_arr().context("outputs")?
+                .iter().map(TensorSpec::from_json).collect::<Result<_>>()?;
+            artifacts.insert(name.clone(), ArtifactSpec {
+                name: name.clone(), file, inputs, outputs,
+            });
+        }
+
+        let mut param_specs = Vec::new();
+        if let Some(ps) = j.get("param_specs").and_then(|v| v.as_arr()) {
+            for entry in ps {
+                let pair = entry.as_arr().context("param spec not a pair")?;
+                let name = pair[0].as_str().context("param name")?.to_string();
+                let shape = pair[1].as_arr().context("param shape")?
+                    .iter().map(|v| v.as_usize().context("dim")).collect::<Result<_>>()?;
+                param_specs.push((name, shape));
+            }
+        }
+
+        let mut capacities = BTreeMap::new();
+        if let Some(caps) = j.get("capacities").and_then(|v| v.as_obj()) {
+            for (k, v) in caps {
+                capacities.insert(
+                    k.parse::<usize>().context("capacity key")?,
+                    v.as_usize().context("capacity value")?,
+                );
+            }
+        }
+
+        let gu0 = |k: &str| j.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            kind,
+            config,
+            artifacts,
+            param_specs,
+            param_count: gu0("param_count"),
+            n_moe_blocks: gu0("n_moe_blocks"),
+            capacity: gu0("capacity"),
+            tokens: gu0("tokens"),
+            capacities,
+            token_bytes: gu0("token_bytes"),
+            expert_param_bytes: gu0("expert_param_bytes"),
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest {}", self.dir.display()))
+    }
+}

@@ -1,0 +1,13 @@
+//! L3 runtime: PJRT client wrapper (load + execute AOT artifacts).
+//!
+//! `Engine` owns the PJRT CPU client; `ArtifactSet` maps a manifest
+//! directory to lazily-compiled `Executable`s; `HostTensor` is the host
+//! representation crossing the boundary.
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::{ArtifactSet, Engine, Executable};
+pub use manifest::{ArtifactSpec, DType, Manifest, ModelConfig, TensorSpec};
+pub use tensor::{HostTensor, TensorData};

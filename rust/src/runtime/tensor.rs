@@ -1,0 +1,141 @@
+//! Host-side tensor representation + conversion to/from `xla::Literal`.
+//!
+//! The runtime moves flat buffers across the PJRT boundary; this type keeps
+//! shape/dtype metadata attached so the coordinator's data plane (routing,
+//! encode/decode) can operate on plain slices.
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{DType, TensorSpec};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor { shape, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor { shape, data: TensorData::I32(data) }
+    }
+
+    pub fn scalar_i32(v: i32) -> HostTensor {
+        HostTensor::i32(vec![], vec![v])
+    }
+
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor::f32(vec![], vec![v])
+    }
+
+    pub fn zeros(shape: &[usize]) -> HostTensor {
+        HostTensor::f32(shape.to_vec(), vec![0.0; shape.iter().product()])
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.elements() * 4
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::I32,
+            TensorData::U32(_) => DType::U32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn matches(&self, spec: &TensorSpec) -> bool {
+        self.shape == spec.shape && self.dtype() == spec.dtype
+    }
+
+    /// Upload to an XLA literal (host->host copy on the CPU plugin).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<usize> = self.shape.clone();
+        let lit = match &self.data {
+            TensorData::F32(v) => {
+                let mut l = xla::Literal::create_from_shape(xla::PrimitiveType::F32, &dims);
+                l.copy_raw_from(v).context("copy f32")?;
+                l
+            }
+            TensorData::I32(v) => {
+                let mut l = xla::Literal::create_from_shape(xla::PrimitiveType::S32, &dims);
+                l.copy_raw_from(v).context("copy i32")?;
+                l
+            }
+            TensorData::U32(v) => {
+                let mut l = xla::Literal::create_from_shape(xla::PrimitiveType::U32, &dims);
+                l.copy_raw_from(v).context("copy u32")?;
+                l
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Download from an XLA literal.
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape().context("literal shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = match shape.element_type() {
+            xla::ElementType::F32 => TensorData::F32(lit.to_vec::<f32>()?),
+            xla::ElementType::S32 => TensorData::I32(lit.to_vec::<i32>()?),
+            xla::ElementType::U32 => TensorData::U32(lit.to_vec::<u32>()?),
+            other => bail!("unsupported element type {other:?}"),
+        };
+        Ok(HostTensor { shape: dims, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_accounting() {
+        let t = HostTensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.elements(), 6);
+        assert_eq!(t.byte_len(), 24);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_shape_panics() {
+        HostTensor::f32(vec![2, 2], vec![0.0; 3]);
+    }
+}

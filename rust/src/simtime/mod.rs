@@ -1,0 +1,13 @@
+//! Deterministic discrete-event simulator for operator schedules.
+//!
+//! Models the paper's execution environment (Fig. 6): each device has one
+//! *compute stream* (exclusive — "computation operators are unable to
+//! execute concurrently due to the constraints on computing resources") and
+//! one *comm stream* that runs All-to-All transfers concurrently with
+//! compute. Tasks form a DAG; the engine performs resource-constrained list
+//! scheduling with deterministic tie-breaking, returning per-task spans that
+//! the timeline renderer and the experiment harness consume.
+
+pub mod engine;
+
+pub use engine::{Resource, Sim, Span, TaskId, TaskSpec};

@@ -1,0 +1,65 @@
+//! Flat binary checkpoints: `param_specs`-ordered f32 tensors with a JSON
+//! sidecar for shapes. No external serialization crates are available, so
+//! the format is a simple length-prefixed little-endian dump.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{HostTensor, Manifest};
+
+const MAGIC: &[u8; 8] = b"SCMOECK1";
+
+pub fn save(path: &Path, manifest: &Manifest, params: &[HostTensor]) -> Result<()> {
+    if params.len() != manifest.param_specs.len() {
+        bail!("param count mismatch");
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(params.len() as u64).to_le_bytes())?;
+    for (t, (name, shape)) in params.iter().zip(&manifest.param_specs) {
+        if &t.shape != shape {
+            bail!("checkpoint shape mismatch for {name}");
+        }
+        let data = t.as_f32()?;
+        f.write_all(&(data.len() as u64).to_le_bytes())?;
+        for v in data {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+pub fn load(path: &Path, manifest: &Manifest) -> Result<Vec<HostTensor>> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("bad checkpoint magic");
+    }
+    let mut n8 = [0u8; 8];
+    f.read_exact(&mut n8)?;
+    let n = u64::from_le_bytes(n8) as usize;
+    if n != manifest.param_specs.len() {
+        bail!("checkpoint has {n} tensors, manifest wants {}", manifest.param_specs.len());
+    }
+    let mut out = Vec::with_capacity(n);
+    for (name, shape) in &manifest.param_specs {
+        f.read_exact(&mut n8)?;
+        let len = u64::from_le_bytes(n8) as usize;
+        if len != shape.iter().product::<usize>() {
+            bail!("tensor {name} length mismatch");
+        }
+        let mut bytes = vec![0u8; len * 4];
+        f.read_exact(&mut bytes)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        out.push(HostTensor::f32(shape.clone(), data));
+    }
+    Ok(out)
+}

@@ -1,0 +1,357 @@
+//! The training loop.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::{ClsTask, Corpus};
+use crate::metrics::CsvWriter;
+use crate::runtime::{ArtifactSet, HostTensor};
+
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    pub steps: usize,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub seed: i32,
+    pub log_csv: Option<PathBuf>,
+    /// Also log the Fig.11 instrumentation rows.
+    pub stats_csv: Option<PathBuf>,
+    pub verbose: bool,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions {
+            steps: 100,
+            eval_every: 50,
+            eval_batches: 4,
+            seed: 0,
+            log_csv: None,
+            stats_csv: None,
+            verbose: true,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f32,
+    pub aux: f32,
+    pub acc: f32,
+    pub secs: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    pub step: usize,
+    pub loss: f32,
+    pub acc: f32,
+    pub ppl: f32,
+}
+
+pub struct Trainer<'a> {
+    set: &'a ArtifactSet,
+    /// params ++ m ++ v, kept as XLA literals between steps (outputs of step
+    /// t feed straight into step t+1 — no host conversion of the state).
+    state: Vec<xla::Literal>,
+    n_params: usize,
+    corpus: Option<Corpus>,
+    cls: Option<ClsTask>,
+    pub records: Vec<StepRecord>,
+    pub evals: Vec<EvalResult>,
+    pub stats_rows: Vec<(usize, Vec<f32>)>,
+    pub step: usize,
+}
+
+impl<'a> Trainer<'a> {
+    /// Initialize from the manifest's `init` artifact.
+    pub fn new(set: &'a ArtifactSet, seed: i32) -> Result<Trainer<'a>> {
+        let cfg = &set.manifest.config;
+        let n_params = set.manifest.param_specs.len();
+        if n_params == 0 {
+            bail!("manifest {} is not a quality manifest", set.manifest.dir.display());
+        }
+        let init = set.get("init")?;
+        let params = init.run_raw(&[HostTensor::scalar_i32(seed).to_literal()?])?;
+
+        // zero moments: reuse init shapes
+        let mut state = params;
+        for i in 0..n_params {
+            let spec = &set.manifest.param_specs[i];
+            let z = HostTensor::zeros(&spec.1).to_literal()?;
+            state.push(z);
+        }
+        for i in 0..n_params {
+            let spec = &set.manifest.param_specs[i];
+            let z = HostTensor::zeros(&spec.1).to_literal()?;
+            state.push(z);
+        }
+
+        let (corpus, cls) = match cfg.task.as_str() {
+            "lm" => (Some(Corpus::bundled()?), None),
+            "cls" => (None, Some(ClsTask::new(cfg.n_classes, cfg.vocab_size.min(256)))),
+            other => bail!("unknown task {other}"),
+        };
+        Ok(Trainer {
+            set,
+            state,
+            n_params,
+            corpus,
+            cls,
+            records: Vec::new(),
+            evals: Vec::new(),
+            stats_rows: Vec::new(),
+            step: 0,
+        })
+    }
+
+    fn batch_literals(&self, step: u64) -> Result<(xla::Literal, xla::Literal)> {
+        let cfg = &self.set.manifest.config;
+        let (b, s) = (cfg.batch_size, cfg.seq_len);
+        match (&self.corpus, &self.cls) {
+            (Some(c), _) => {
+                let batch = c.train_batch(step, b, s);
+                Ok((
+                    HostTensor::i32(vec![b, s], batch.tokens).to_literal()?,
+                    HostTensor::i32(vec![b, s], batch.targets).to_literal()?,
+                ))
+            }
+            (_, Some(t)) => {
+                let batch = t.batch(step, b, s);
+                Ok((
+                    HostTensor::i32(vec![b, s], batch.tokens).to_literal()?,
+                    HostTensor::i32(vec![b], batch.labels).to_literal()?,
+                ))
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Run one training step; returns the record.
+    pub fn train_step(&mut self) -> Result<StepRecord> {
+        let exe = self.set.get("train_step")?;
+        let (tokens, targets) = self.batch_literals(self.step as u64)?;
+        let t0 = Instant::now();
+
+        let mut inputs: Vec<&xla::Literal> = self.state.iter().collect();
+        let step_lit = HostTensor::scalar_i32(self.step as i32).to_literal()?;
+        let seed_lit = HostTensor::scalar_i32(self.step as i32 + 7919).to_literal()?;
+        inputs.push(&step_lit);
+        inputs.push(&tokens);
+        inputs.push(&targets);
+        inputs.push(&seed_lit);
+
+        let outs = exe.run_raw(&inputs)?;
+        let n3 = 3 * self.n_params;
+        let loss = HostTensor::from_literal(&outs[n3])?.as_f32()?[0];
+        let aux = HostTensor::from_literal(&outs[n3 + 1])?.as_f32()?[0];
+        let acc = HostTensor::from_literal(&outs[n3 + 2])?.as_f32()?[0];
+        let stats = HostTensor::from_literal(&outs[n3 + 3])?;
+        if !stats.shape.is_empty() && stats.elements() > 0 {
+            self.stats_rows.push((self.step, stats.as_f32()?.to_vec()));
+        }
+        self.state = outs.into_iter().take(n3).collect();
+
+        let rec = StepRecord {
+            step: self.step,
+            loss,
+            aux,
+            acc,
+            secs: t0.elapsed().as_secs_f64(),
+        };
+        if !loss.is_finite() {
+            bail!("non-finite loss at step {}: {loss}", self.step);
+        }
+        self.step += 1;
+        self.records.push(rec.clone());
+        Ok(rec)
+    }
+
+    /// Run `n_calls` invocations of the fused multi-step artifact
+    /// (`train_step_<m>`, lowered with lax.scan) — the §Perf hot-path
+    /// optimization: state crosses the PJRT boundary once per m steps.
+    pub fn train_steps_fused(&mut self, n_calls: usize) -> Result<Vec<StepRecord>> {
+        let cfg = &self.set.manifest.config;
+        let (b, s) = (cfg.batch_size, cfg.seq_len);
+        // discover the fused artifact and its step multiplicity
+        let name = self.set.names().into_iter()
+            .find(|n| n.starts_with("train_step_"))
+            .context("no fused train_step_<n> artifact in manifest")?;
+        let multi: usize = name["train_step_".len()..].parse()?;
+        let exe = self.set.get(&name)?;
+        let mut out_records = Vec::new();
+        for _ in 0..n_calls {
+            // stack `multi` batches
+            let mut toks = Vec::with_capacity(multi * b * s);
+            let mut tgts = Vec::new();
+            for i in 0..multi {
+                let (t, g) = match (&self.corpus, &self.cls) {
+                    (Some(c), _) => {
+                        let bt = c.train_batch((self.step + i) as u64, b, s);
+                        (bt.tokens, bt.targets)
+                    }
+                    (_, Some(t_)) => {
+                        let bt = t_.batch((self.step + i) as u64, b, s);
+                        (bt.tokens, bt.labels)
+                    }
+                    _ => unreachable!(),
+                };
+                toks.extend(t);
+                tgts.extend(g);
+            }
+            let tgt_shape = if cfg.task == "lm" {
+                vec![multi, b, s]
+            } else {
+                vec![multi, b]
+            };
+            let tokens = HostTensor::i32(vec![multi, b, s], toks).to_literal()?;
+            let targets = HostTensor::i32(tgt_shape, tgts).to_literal()?;
+            let step_lit = HostTensor::scalar_i32(self.step as i32).to_literal()?;
+            let seed_lit = HostTensor::scalar_i32(self.step as i32 + 7919).to_literal()?;
+            let t0 = Instant::now();
+            let mut inputs: Vec<&xla::Literal> = self.state.iter().collect();
+            inputs.push(&step_lit);
+            inputs.push(&tokens);
+            inputs.push(&targets);
+            inputs.push(&seed_lit);
+            let outs = exe.run_raw(&inputs)?;
+            let secs = t0.elapsed().as_secs_f64();
+            let n3 = 3 * self.n_params;
+            let losses = HostTensor::from_literal(&outs[n3])?;
+            let accs = HostTensor::from_literal(&outs[n3 + 1])?;
+            let (losses, accs) = (losses.as_f32()?.to_vec(), accs.as_f32()?.to_vec());
+            self.state = outs.into_iter().take(n3).collect();
+            for i in 0..multi {
+                let rec = StepRecord {
+                    step: self.step,
+                    loss: losses[i],
+                    aux: 0.0,
+                    acc: accs[i],
+                    secs: secs / multi as f64,
+                };
+                if !rec.loss.is_finite() {
+                    bail!("non-finite loss at fused step {}", self.step);
+                }
+                self.step += 1;
+                self.records.push(rec.clone());
+                out_records.push(rec);
+            }
+        }
+        Ok(out_records)
+    }
+
+    /// Evaluate on held-out batches; returns loss/acc/ppl.
+    pub fn evaluate(&mut self, n_batches: usize) -> Result<EvalResult> {
+        let exe = self.set.get("eval_step")?;
+        let cfg = &self.set.manifest.config;
+        let (b, s) = (cfg.batch_size, cfg.seq_len);
+        let mut losses = Vec::new();
+        let mut accs = Vec::new();
+        for i in 0..n_batches {
+            let (tokens, targets) = match (&self.corpus, &self.cls) {
+                (Some(c), _) => {
+                    let batches = c.valid_batches(n_batches, b, s);
+                    let bt = &batches[i];
+                    (
+                        HostTensor::i32(vec![b, s], bt.tokens.clone()).to_literal()?,
+                        HostTensor::i32(vec![b, s], bt.targets.clone()).to_literal()?,
+                    )
+                }
+                (_, Some(t)) => {
+                    let bt = t.batch(1_000_000 + i as u64, b, s);
+                    (
+                        HostTensor::i32(vec![b, s], bt.tokens).to_literal()?,
+                        HostTensor::i32(vec![b], bt.labels).to_literal()?,
+                    )
+                }
+                _ => unreachable!(),
+            };
+            let mut lits: Vec<&xla::Literal> = self.state[..self.n_params].iter().collect();
+            lits.push(&tokens);
+            lits.push(&targets);
+            let outs = exe.run_raw(&lits)?;
+            losses.push(HostTensor::from_literal(&outs[0])?.as_f32()?[0]);
+            accs.push(HostTensor::from_literal(&outs[1])?.as_f32()?[0]);
+        }
+        let loss = losses.iter().sum::<f32>() / losses.len() as f32;
+        let acc = accs.iter().sum::<f32>() / accs.len() as f32;
+        let res = EvalResult { step: self.step, loss, acc, ppl: loss.exp() };
+        self.evals.push(res.clone());
+        Ok(res)
+    }
+
+    /// Full loop per the options; writes CSV logs if requested.
+    pub fn run(&mut self, opts: &TrainOptions) -> Result<()> {
+        let mut log = match &opts.log_csv {
+            Some(p) => Some(CsvWriter::create(p, &["step", "loss", "aux", "acc", "secs"])?),
+            None => None,
+        };
+        for _ in 0..opts.steps {
+            let rec = self.train_step()?;
+            if let Some(w) = log.as_mut() {
+                w.row(&[rec.step as f64, rec.loss as f64, rec.aux as f64,
+                        rec.acc as f64, rec.secs])?;
+            }
+            if opts.verbose && (rec.step % 10 == 0 || rec.step + 1 == opts.steps) {
+                println!("step {:5}  loss {:.4}  aux {:.4}  acc {:.3}  {:.2}s",
+                         rec.step, rec.loss, rec.aux, rec.acc, rec.secs);
+            }
+            if opts.eval_every > 0 && (rec.step + 1) % opts.eval_every == 0 {
+                let ev = self.evaluate(opts.eval_batches)?;
+                if opts.verbose {
+                    println!("eval@{:5}  loss {:.4}  ppl {:.2}  acc {:.3}",
+                             ev.step, ev.loss, ev.ppl, ev.acc);
+                }
+            }
+        }
+        if let Some(w) = log.as_mut() {
+            w.flush()?;
+        }
+        if let Some(p) = &opts.stats_csv {
+            let n_moe = self.set.manifest.n_moe_blocks.max(1);
+            let mut hdr = vec!["step".to_string()];
+            for l in 0..n_moe {
+                for f in ["repeat", "l2", "score_prev", "score_cur"] {
+                    hdr.push(format!("moe{l}_{f}"));
+                }
+            }
+            let hdr_refs: Vec<&str> = hdr.iter().map(|s| s.as_str()).collect();
+            let mut w = CsvWriter::create(p, &hdr_refs)?;
+            for (step, row) in &self.stats_rows {
+                let mut vals = vec![*step as f64];
+                vals.extend(row.iter().map(|v| *v as f64));
+                if vals.len() == hdr.len() {
+                    w.row(&vals)?;
+                }
+            }
+            w.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Current parameter literals (for checkpointing / inference).
+    pub fn params(&self) -> &[xla::Literal] {
+        &self.state[..self.n_params]
+    }
+
+    pub fn params_host(&self) -> Result<Vec<HostTensor>> {
+        self.state[..self.n_params]
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect()
+    }
+
+    /// Load parameters (e.g. from a checkpoint), resetting moments.
+    pub fn set_params(&mut self, params: Vec<xla::Literal>) -> Result<()> {
+        if params.len() != self.n_params {
+            bail!("expected {} params, got {}", self.n_params, params.len());
+        }
+        for (i, p) in params.into_iter().enumerate() {
+            self.state[i] = p;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,8 @@
+//! Training driver: owns the loop around the AOT `train_step` artifact.
+//! Python never runs here — the step function is a compiled executable and
+//! all state (params + Adam moments) stays in XLA literals between steps.
+
+pub mod checkpoint;
+pub mod driver;
+
+pub use driver::{EvalResult, StepRecord, TrainOptions, Trainer};

@@ -1,0 +1,92 @@
+//! Tiny declarative CLI argument parser (offline build: no clap).
+//!
+//! `Args::parse` splits `--key value` / `--key=value` / `--flag` style
+//! options plus positionals; typed getters with defaults.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some(eq) = rest.find('=') {
+                    out.options.insert(rest[..eq].to_string(), rest[eq + 1..].to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.options.insert(rest.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.str_opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.str_opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.str_opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_mixed() {
+        let a = Args::parse(&sv(&["train", "--steps", "100", "--arch=scmoe", "--verbose"]));
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.usize_or("steps", 0), 100);
+        assert_eq!(a.str_or("arch", ""), "scmoe");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&sv(&[]));
+        assert_eq!(a.usize_or("n", 7), 7);
+        assert_eq!(a.f64_or("x", 1.5), 1.5);
+    }
+}

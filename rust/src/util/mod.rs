@@ -1,0 +1,8 @@
+//! In-tree substitutes for unavailable third-party crates (offline build):
+//! JSON, PRNG, CLI parsing, summary statistics.
+
+pub mod cli;
+pub mod propcheck;
+pub mod json;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,94 @@
+//! Miniature property-based testing kit (offline build: no proptest crate).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` on `cases` generated inputs
+//! from seeded RNG streams; on failure it reports the seed so the case can
+//! be replayed deterministically. Shrinking is intentionally omitted — the
+//! generators below produce small cases by construction.
+
+use super::rng::Rng;
+
+/// Run a property over `cases` seeded inputs; panics with the failing seed.
+pub fn check<T, G, P>(name: &str, cases: u64, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for seed in 0..cases {
+        let mut rng = Rng::new(0x9E1A_0000 ^ seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!("property {name} failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use super::Rng;
+
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo + 1)
+    }
+
+    pub fn f64_in(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+        rng.range_f64(lo, hi)
+    }
+
+    /// Random routing problem: (indices, weights, n_tokens, k, n_experts).
+    pub fn routing(rng: &mut Rng) -> (Vec<i32>, Vec<f32>, usize, usize, usize) {
+        let n_tokens = usize_in(rng, 1, 64);
+        let k = usize_in(rng, 1, 3);
+        let n_experts = [2, 4, 8][rng.below(3)];
+        let mut indices = Vec::with_capacity(n_tokens * k);
+        let mut weights = Vec::with_capacity(n_tokens * k);
+        for _ in 0..n_tokens {
+            // k distinct experts per token, descending weights
+            let mut picked: Vec<usize> = Vec::new();
+            while picked.len() < k.min(n_experts) {
+                let e = rng.below(n_experts);
+                if !picked.contains(&e) {
+                    picked.push(e);
+                }
+            }
+            while picked.len() < k {
+                picked.push(picked[0]);
+            }
+            let mut ws: Vec<f32> = (0..k).map(|_| rng.next_f32() + 0.01).collect();
+            ws.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let total: f32 = ws.iter().sum();
+            for (e, w) in picked.iter().zip(ws) {
+                indices.push(*e as i32);
+                weights.push(w / total);
+            }
+        }
+        (indices, weights, n_tokens, k, n_experts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("sum-commutes", 32, |r| (r.below(100), r.below(100)),
+              |&(a, b)| if a + b == b + a { Ok(()) } else { Err("math broke".into()) });
+    }
+
+    #[test]
+    #[should_panic(expected = "property always-fails failed at seed 0")]
+    fn reports_failing_seed() {
+        check("always-fails", 4, |r| r.below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn routing_generator_valid() {
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let (idx, w, t, k, e) = gen::routing(&mut rng);
+            assert_eq!(idx.len(), t * k);
+            assert_eq!(w.len(), t * k);
+            assert!(idx.iter().all(|&i| (i as usize) < e));
+        }
+    }
+}

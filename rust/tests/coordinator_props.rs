@@ -1,0 +1,239 @@
+//! Property-based tests over the coordinator invariants (DESIGN.md §8),
+//! using the in-tree propcheck kit (offline build: no proptest crate).
+
+use scmoe::cluster::{a2a_time, LinkModel};
+use scmoe::coordinator::adaptive::{
+    choose_expert_slot, eq12_lower_bound, eq13_upper_bound,
+};
+use scmoe::coordinator::costs::{BlockCosts, MoEKind, Strategy};
+use scmoe::coordinator::schedule::{backbone_time, build_pair_schedule};
+use scmoe::moe::{decode, encode, RoutingTable};
+use scmoe::simtime::Resource;
+use scmoe::util::propcheck::{check, gen};
+use scmoe::util::rng::Rng;
+
+fn rand_costs(rng: &mut Rng) -> BlockCosts {
+    BlockCosts {
+        attn: gen::f64_in(rng, 0.1, 2.0),
+        mlp: gen::f64_in(rng, 0.1, 2.0),
+        se: gen::f64_in(rng, 0.1, 2.0),
+        gate: gen::f64_in(rng, 0.01, 0.2),
+        encode: gen::f64_in(rng, 0.01, 0.2),
+        decode: gen::f64_in(rng, 0.01, 0.2),
+        expert_k1: gen::f64_in(rng, 0.1, 2.0),
+        a2a_k1: gen::f64_in(rng, 0.0, 3.0),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Routing invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_routing_conservation() {
+    check("routing-conservation", 200, |r| gen::routing(r), |input| {
+        let (idx, w, t, k, e) = input;
+        let cap = 1 + (t * k) / e;
+        let rt = RoutingTable::build(idx, w, *t, *k, *e, cap);
+        // kept + dropped == demand
+        if rt.kept() + rt.dropped != t * k {
+            return Err(format!("kept {} + dropped {} != {}", rt.kept(), rt.dropped, t * k));
+        }
+        // no expert over capacity; load sums to kept
+        if rt.load.iter().any(|&l| l > cap) {
+            return Err("capacity violated".into());
+        }
+        if rt.load.iter().sum::<usize>() != rt.kept() {
+            return Err("load histogram inconsistent".into());
+        }
+        // slots unique per expert
+        let mut seen = std::collections::HashSet::new();
+        for r_ in &rt.routes {
+            if !seen.insert((r_.expert, r_.slot)) {
+                return Err(format!("slot collision {:?}", (r_.expert, r_.slot)));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_encode_decode_roundtrip_identity_experts() {
+    // With ample capacity and identity expert outputs, decode(encode(x))
+    // recovers sum_k w_k * x per token (weights sum to 1 -> x itself).
+    check("encode-decode-roundtrip", 100, |r| gen::routing(r), |input| {
+        let (idx, w, t, k, e) = input;
+        let d = 4usize;
+        let cap = t * k; // ample
+        let rt = RoutingTable::build(idx, w, *t, *k, *e, cap);
+        let mut rng = Rng::new(42);
+        let tokens: Vec<f32> = (0..t * d).map(|_| rng.next_f32()).collect();
+        let enc = encode(&rt, &tokens, d);
+        let dec = decode(&rt, &enc, d);
+        for (i, (a, b)) in dec.iter().zip(&tokens).enumerate() {
+            if (a - b).abs() > 1e-4 {
+                return Err(format!("token elem {i}: {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_a2a_byte_conservation() {
+    check("a2a-byte-conservation", 100, |r| gen::routing(r), |input| {
+        let (idx, w, t, k, e) = input;
+        let rt = RoutingTable::build(idx, w, *t, *k, *e, t * k);
+        let n_dev = *e; // one expert per device
+        let m = rt.a2a_bytes(n_dev, 16);
+        let total: usize = m.iter().sum();
+        if total != rt.kept() * 16 {
+            return Err(format!("bytes {total} != kept {} * 16", rt.kept()));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_chosen_slot_is_argmin() {
+    check("slot-argmin", 100, rand_costs, |c| {
+        let kind = MoEKind::ScMoE { k: 1 };
+        let (slot, best) = choose_expert_slot(c, kind, Strategy::Overlap);
+        for s in 0..4 {
+            let t = build_pair_schedule(c, kind, Strategy::Overlap, s).makespan();
+            if t < best - 1e-12 {
+                return Err(format!("slot {slot} ({best}) beaten by {s} ({t})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_overlap_within_analytic_bounds() {
+    // The simulated MoE-exposed time respects Eq. 12/13 bounds.
+    check("overlap-bounds", 100, rand_costs, |c| {
+        let kind = MoEKind::ScMoE { k: 1 };
+        let (_, makespan) = choose_expert_slot(c, kind, Strategy::Overlap);
+        let serial_comp = backbone_time(c, kind)
+            + c.gate + c.encode + c.expert(1) + c.decode;
+        let exposed = makespan - serial_comp;
+        // Eq. 13: exposed comm never exceeds T_disp + T_comb
+        if exposed > 2.0 * c.a2a(1) + 1e-9 {
+            return Err(format!("exposed {exposed} > upper bound {}", 2.0 * c.a2a(1)));
+        }
+        let _ = (eq12_lower_bound(c, kind), eq13_upper_bound(c, kind));
+        // sanity: makespan at least the serial compute (compute is exclusive)
+        if makespan < serial_comp - 1e-9 {
+            return Err(format!("makespan {makespan} < serial compute {serial_comp}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_zero_comm_overlap_equals_serial_compute() {
+    check("zero-comm", 50, rand_costs, |c| {
+        let mut c = c.clone();
+        c.a2a_k1 = 0.0;
+        let kind = MoEKind::ScMoE { k: 1 };
+        let (_, t) = choose_expert_slot(&c, kind, Strategy::Overlap);
+        let serial = backbone_time(&c, kind) + c.gate + c.encode
+            + c.expert(1) + c.decode;
+        if (t - serial).abs() > 1e-9 {
+            return Err(format!("zero-comm makespan {t} != serial {serial}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pipelining_never_hurts_vs_sequential() {
+    check("pipe-no-worse", 100, rand_costs, |c| {
+        for k in [1usize, 2] {
+            let kind = MoEKind::Standard { k };
+            let seq = build_pair_schedule(c, kind, Strategy::Sequential, 0).makespan();
+            for chunks in [2usize, 4] {
+                let p = build_pair_schedule(c, kind,
+                                            Strategy::Pipelined { chunks }, 0).makespan();
+                if p > seq + 1e-9 {
+                    return Err(format!("pipe{chunks} ({p}) worse than seq ({seq})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_compute_stream_exclusive() {
+    check("compute-exclusive", 60, rand_costs, |c| {
+        for (kind, strat) in [
+            (MoEKind::Standard { k: 2 }, Strategy::Pipelined { chunks: 3 }),
+            (MoEKind::ScMoE { k: 1 }, Strategy::Overlap),
+            (MoEKind::ScMoE { k: 2 }, Strategy::OverlapPipelined { chunks: 2 }),
+        ] {
+            let slot = if matches!(strat, Strategy::Overlap
+                                   | Strategy::OverlapPipelined { .. }) {
+                choose_expert_slot(c, kind, strat).0
+            } else {
+                0
+            };
+            let spans = build_pair_schedule(c, kind, strat, slot).run();
+            let mut comp: Vec<_> = spans.iter()
+                .filter(|s| matches!(s.resource, Resource::Compute(_)))
+                .collect();
+            comp.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+            for w in comp.windows(2) {
+                if w[1].start < w[0].end - 1e-9 {
+                    return Err(format!("compute overlap {} / {}", w[0].label, w[1].label));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Interconnect invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_a2a_time_monotone_in_bytes() {
+    check("a2a-monotone", 100, |r| {
+        let n = [2usize, 4, 8][r.below(3)];
+        let bytes: Vec<usize> = (0..n * n).map(|_| r.below(1 << 20)).collect();
+        (n, bytes)
+    }, |(n, bytes)| {
+        let link = LinkModel::new(1e-6, 1e9);
+        let t1 = a2a_time(bytes, *n, *n, link, None);
+        let doubled: Vec<usize> = bytes.iter().map(|b| b * 2).collect();
+        let t2 = a2a_time(&doubled, *n, *n, link, None);
+        if t2 < t1 - 1e-12 {
+            return Err(format!("doubling bytes reduced time {t1} -> {t2}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_faster_link_never_slower() {
+    check("link-dominance", 100, |r| {
+        let n = 4usize;
+        let bytes: Vec<usize> = (0..16).map(|_| r.below(1 << 22)).collect();
+        bytes
+    }, |bytes| {
+        let slow = LinkModel::new(10e-6, 1e9);
+        let fast = LinkModel::new(1e-6, 10e9);
+        let ts = a2a_time(bytes, 4, 4, slow, None);
+        let tf = a2a_time(bytes, 4, 4, fast, None);
+        if tf > ts + 1e-12 {
+            return Err(format!("fast link slower: {tf} > {ts}"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,93 @@
+//! Integration: expert offloading driven by *real* gate selections from the
+//! AOT infer_step artifact (not synthetic routing), plus paper-claim bands
+//! for Fig. 10.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use scmoe::offload::{simulate_decode, Policy};
+use scmoe::report::offload_report::{gpt2_moe_medium, gpt3_moe_xl};
+use scmoe::runtime::{Engine, HostTensor};
+
+#[test]
+fn fig10_paper_bands() {
+    for (name, cfg, mem_lo, mem_hi, blk_lo, blk_hi) in [
+        ("medium", gpt2_moe_medium(), 0.40, 0.65, 0.5, 1.2),
+        ("xl", gpt3_moe_xl(), 0.40, 0.70, 1.8, 3.0),
+    ] {
+        let gpu = simulate_decode(&cfg, None, 48, Policy::GpuOnly, 7);
+        let blk = simulate_decode(&cfg, None, 48, Policy::Blocking, 7);
+        let asy = simulate_decode(&cfg, None, 48, Policy::AsyncDeterminate, 7);
+
+        let mem_cut = 1.0 - blk.peak_gpu_bytes as f64 / gpu.peak_gpu_bytes as f64;
+        assert!((mem_lo..mem_hi).contains(&mem_cut),
+                "{name}: memory cut {mem_cut}");
+
+        let added_blocking = blk.block_latency / gpu.block_latency - 1.0;
+        assert!((blk_lo..blk_hi).contains(&added_blocking),
+                "{name}: blocking added {added_blocking}");
+
+        // async strictly reduces the added overhead and hides part of the
+        // migration (the determinate-early-issue property)
+        assert!(asy.block_latency < blk.block_latency, "{name}: async wins");
+        assert!(asy.exposed_migration < blk.exposed_migration);
+        // async never changes which experts run: peak identical
+        assert_eq!(asy.peak_gpu_bytes, blk.peak_gpu_bytes);
+    }
+}
+
+#[test]
+fn real_gate_selections_drive_offload() {
+    let dir = Path::new(concat!(env!("CARGO_MANIFEST_DIR"),
+                                "/artifacts/quality_scmoe_micro"));
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let engine = Arc::new(Engine::cpu().unwrap());
+    let set = engine.open(dir).unwrap();
+    let cfg = &set.manifest.config;
+
+    // init params, run infer_step, extract per-layer expert selections
+    let init = set.get("init").unwrap();
+    let params = init.run(&[HostTensor::scalar_i32(3)]).unwrap();
+    let infer = set.get("infer_step").unwrap();
+    let tokens = HostTensor::i32(
+        vec![cfg.batch_size, cfg.seq_len],
+        (0..cfg.batch_size * cfg.seq_len).map(|i| (i % 251) as i32).collect());
+    let mut inputs = params;
+    inputs.push(tokens);
+    let out = infer.run(&inputs).unwrap();
+    let sel = &out[1]; // [n_moe, T, k]
+    assert_eq!(sel.shape.len(), 3);
+    let (n_moe, t, k) = (sel.shape[0], sel.shape[1], sel.shape[2]);
+    let sel_i = sel.as_i32().unwrap();
+
+    // reshape into per-token selections (tokens become decode steps)
+    let take = t.min(16);
+    let mut selections = Vec::new();
+    for tok in 0..take {
+        let mut per_layer = Vec::new();
+        for l in 0..n_moe {
+            let mut experts = Vec::new();
+            for kk in 0..k {
+                let e = sel_i[(l * t + tok) * k + kk];
+                assert!((0..cfg.n_experts as i32).contains(&e),
+                        "selection out of range: {e}");
+                experts.push(e as usize);
+            }
+            per_layer.push(experts);
+        }
+        selections.push(per_layer);
+    }
+
+    let mut ocfg = gpt2_moe_medium();
+    ocfg.n_moe_layers = n_moe;
+    ocfg.n_experts = cfg.n_experts;
+    ocfg.k = k;
+    let blk = simulate_decode(&ocfg, Some(&selections), take, Policy::Blocking, 1);
+    let asy = simulate_decode(&ocfg, Some(&selections), take,
+                              Policy::AsyncDeterminate, 1);
+    assert!(asy.block_latency <= blk.block_latency);
+    assert!(asy.exposed_migration <= blk.exposed_migration);
+}

@@ -1,0 +1,49 @@
+//! §Perf measurement: single-step vs fused multi-step training throughput
+//! (run with --nocapture to see the numbers; asserted loosely so CI noise
+//! doesn't flake).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use scmoe::runtime::Engine;
+use scmoe::train::Trainer;
+
+#[test]
+fn fused_steps_reduce_boundary_overhead() {
+    let dir = Path::new(concat!(env!("CARGO_MANIFEST_DIR"),
+                                "/artifacts/quality_scmoe_micro"));
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let engine = Arc::new(Engine::cpu().unwrap());
+    let set = engine.open(dir).unwrap();
+    if !set.names().iter().any(|n| n.starts_with("train_step_")) {
+        eprintln!("skipping: no fused artifact (rebuild artifacts)");
+        return;
+    }
+
+    // single-step path
+    let mut tr1 = Trainer::new(&set, 0).unwrap();
+    tr1.train_step().unwrap(); // compile + warmup
+    let t0 = std::time::Instant::now();
+    for _ in 0..8 {
+        tr1.train_step().unwrap();
+    }
+    let single = t0.elapsed().as_secs_f64() / 8.0;
+
+    // fused path (train_step_4): 2 calls = 8 steps
+    let mut tr2 = Trainer::new(&set, 0).unwrap();
+    tr2.train_steps_fused(1).unwrap(); // compile + warmup
+    let t0 = std::time::Instant::now();
+    tr2.train_steps_fused(2).unwrap();
+    let fused = t0.elapsed().as_secs_f64() / 8.0;
+
+    println!("PERF single-step: {:.2} ms/step | fused x4: {:.2} ms/step | {:.2}x",
+             single * 1e3, fused * 1e3, single / fused);
+    // same learning signal: losses finite & comparable trajectories
+    assert!(tr2.records.iter().all(|r| r.loss.is_finite()));
+    // fused must not be dramatically slower (it should be faster; allow noise)
+    assert!(fused < single * 1.2,
+            "fused {fused} vs single {single} — boundary fusion regressed");
+}

@@ -1,0 +1,119 @@
+//! Integration: the full python-AOT -> rust-PJRT bridge on real artifacts.
+//! Requires `make artifacts` (skips cleanly if artifacts/ is absent).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use scmoe::runtime::{Engine, HostTensor};
+
+fn artifacts_root() -> Option<&'static Path> {
+    let p = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+    if p.join("quality_scmoe_micro/manifest.json").exists() {
+        Some(Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")))
+    } else {
+        eprintln!("skipping: artifacts not built");
+        None
+    }
+}
+
+#[test]
+fn init_then_train_step_runs_and_improves() {
+    let Some(root) = artifacts_root() else { return };
+    let engine = Arc::new(Engine::cpu().unwrap());
+    let set = engine.open(&root.join("quality_scmoe_micro")).unwrap();
+    let cfg = set.manifest.config.clone();
+    assert_eq!(cfg.arch, "scmoe");
+
+    let init = set.get("init").unwrap();
+    let params = init.run(&[HostTensor::scalar_i32(0)]).unwrap();
+    assert_eq!(params.len(), set.manifest.param_specs.len());
+    for (p, (name, shape)) in params.iter().zip(&set.manifest.param_specs) {
+        assert_eq!(&p.shape, shape, "param {name}");
+    }
+
+    let train = set.get("train_step").unwrap();
+    let zeros: Vec<HostTensor> = params.iter()
+        .map(|p| HostTensor::zeros(&p.shape))
+        .collect();
+    // tokens/targets: fixed tiny batch
+    let b = cfg.batch_size;
+    let s = cfg.seq_len;
+    let tokens = HostTensor::i32(vec![b, s], (0..b * s).map(|i| (i % 250) as i32).collect());
+    let targets = HostTensor::i32(vec![b, s], (0..b * s).map(|i| ((i + 1) % 250) as i32).collect());
+
+    let mut state: Vec<HostTensor> = params.clone();
+    state.extend(zeros.iter().cloned());
+    state.extend(zeros.iter().cloned());
+
+    let mut losses = Vec::new();
+    for step in 0..4 {
+        let mut inputs = state.clone();
+        inputs.push(HostTensor::scalar_i32(step));
+        inputs.push(tokens.clone());
+        inputs.push(targets.clone());
+        inputs.push(HostTensor::scalar_i32(step + 100));
+        let out = train.run(&inputs).unwrap();
+        let n = set.manifest.param_specs.len();
+        let loss = out[3 * n].as_f32().unwrap()[0];
+        assert!(loss.is_finite(), "loss must be finite");
+        losses.push(loss);
+        state = out[..3 * n].to_vec();
+    }
+    // same batch repeated: loss must drop
+    assert!(losses[3] < losses[0],
+            "loss should decrease on repeated batch: {losses:?}");
+}
+
+#[test]
+fn ops_artifacts_compose_to_fused_moe() {
+    let Some(root) = artifacts_root() else { return };
+    let engine = Arc::new(Engine::cpu().unwrap());
+    let set = engine.open(&root.join("ops_tiny")).unwrap();
+    let m = &set.manifest;
+    let d = m.config.d_model;
+    let e = m.config.n_experts;
+    let t = m.tokens;
+    let k = 1usize;
+    let cap = m.capacities[&k];
+
+    // weights from ops_init
+    let weights = set.get("ops_init").unwrap().run(&[HostTensor::scalar_i32(7)]).unwrap();
+    // indices into ops_init outputs (see aot.py build_ops out names)
+    let (ln_g, ln_b) = (&weights[0], &weights[1]);
+    let wg = &weights[10];
+    let (w1, b1, w2, b2) = (&weights[11], &weights[12], &weights[13], &weights[14]);
+
+    // random-ish input
+    let x: Vec<f32> = (0..t * d).map(|i| ((i * 37 % 101) as f32 / 101.0) - 0.5).collect();
+    let xt = HostTensor::f32(vec![t, d], x.clone());
+
+    // (1) rust-orchestrated path: gate -> encode -> experts -> decode
+    let gate = set.get("gate_op_k1").unwrap();
+    let gout = gate.run(&[xt.clone(), ln_g.clone(), ln_b.clone(), wg.clone()]).unwrap();
+    let h = gout[0].as_f32().unwrap();
+    let idx = gout[1].as_i32().unwrap();
+    let w = gout[2].as_f32().unwrap();
+
+    let table = scmoe::moe::RoutingTable::build(idx, w, t, k, e, cap);
+    let enc = scmoe::moe::encode(&table, h, d);
+    let experts = set.get(&format!("experts_op_c{cap}")).unwrap();
+    let ye = experts.run(&[
+        HostTensor::f32(vec![e, cap, d], enc),
+        w1.clone(), b1.clone(), w2.clone(), b2.clone(),
+    ]).unwrap();
+    let y_rust = scmoe::moe::decode(&table, ye[0].as_f32().unwrap(), d);
+
+    // (2) fused oracle
+    let fused = set.get("moe_fused_op_k1").unwrap();
+    let y_fused = fused.run(&[
+        xt, ln_g.clone(), ln_b.clone(), wg.clone(),
+        w1.clone(), b1.clone(), w2.clone(), b2.clone(),
+    ]).unwrap();
+    let yf = y_fused[0].as_f32().unwrap();
+
+    let mut max_err = 0f32;
+    for (a, b) in y_rust.iter().zip(yf) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(max_err < 1e-4, "rust-orchestrated MoE != fused oracle (max err {max_err})");
+}

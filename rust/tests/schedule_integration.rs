@@ -1,0 +1,157 @@
+//! Integration: schedules + calibrated presets reproduce the paper's
+//! headline efficiency claims (shape, not absolute numbers), and the real
+//! threaded executor agrees with the fused-HLO oracle numerically.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use scmoe::cluster::{LinkModel, Scenario};
+use scmoe::coordinator::adaptive::overlap_fraction;
+use scmoe::coordinator::costs::{MoEKind, Strategy};
+use scmoe::coordinator::exec::{run_pair_real, Cluster};
+use scmoe::coordinator::schedule::build_pair_schedule_auto;
+use scmoe::report::efficiency::{gpt_proxy_costs, proxy_costs, train_costs};
+use scmoe::runtime::{Engine, HostTensor};
+
+#[test]
+fn paper_claim_speedup_bands() {
+    // Table 2 (PCIe): ScMoE 1.43x train / 1.66x inference over top-2.
+    let c = proxy_costs(Scenario::PcieA30x8);
+    let ct = train_costs(&c);
+    let base_inf = build_pair_schedule_auto(&c, MoEKind::Standard { k: 2 },
+                                            Strategy::Sequential).makespan();
+    let base_tr = build_pair_schedule_auto(&ct, MoEKind::Standard { k: 2 },
+                                           Strategy::Sequential).makespan();
+    let sc_inf = build_pair_schedule_auto(&c, MoEKind::ScMoE { k: 1 },
+                                          Strategy::Overlap).makespan();
+    let sc_tr = build_pair_schedule_auto(&ct, MoEKind::ScMoE { k: 1 },
+                                         Strategy::Overlap).makespan();
+    let sp_inf = base_inf / sc_inf;
+    let sp_tr = base_tr / sc_tr;
+    assert!((1.3..2.0).contains(&sp_inf), "PCIe inference speedup {sp_inf}");
+    assert!((1.2..1.8).contains(&sp_tr), "PCIe train speedup {sp_tr}");
+
+    // Table 3 (NVLink): 1.12x / 1.17x.
+    let c = gpt_proxy_costs(Scenario::NvlinkA800x8);
+    let ct = train_costs(&c);
+    let b_inf = build_pair_schedule_auto(&c, MoEKind::Standard { k: 2 },
+                                         Strategy::Sequential).makespan();
+    let b_tr = build_pair_schedule_auto(&ct, MoEKind::Standard { k: 2 },
+                                        Strategy::Sequential).makespan();
+    let s_inf = b_inf / build_pair_schedule_auto(&c, MoEKind::ScMoE { k: 1 },
+                                                 Strategy::Overlap).makespan();
+    let s_tr = b_tr / build_pair_schedule_auto(&ct, MoEKind::ScMoE { k: 1 },
+                                               Strategy::Overlap).makespan();
+    assert!((1.05..1.35).contains(&s_inf), "NVLink inference speedup {s_inf}");
+    assert!((1.03..1.3).contains(&s_tr), "NVLink train speedup {s_tr}");
+}
+
+#[test]
+fn paper_claim_overlap_band_70_to_100() {
+    // §1: "a substantial overlap of 70% to 100%" across the scenarios.
+    for sc in Scenario::all() {
+        let c = proxy_costs(sc);
+        let f = overlap_fraction(&c, MoEKind::ScMoE { k: 1 }, Strategy::Overlap);
+        assert!((0.70..=1.0).contains(&f),
+                "{}: overlap fraction {f}", sc.label());
+    }
+}
+
+#[test]
+fn paper_claim_scmoe_beats_top1_when_comm_over_20pct() {
+    // Table 2 / §4.2.2: ScMoE surpasses the standard top-1 MoE by 13%
+    // (train) / 20% (inference) on PCIe where comm is 60% of MoE time.
+    let c = proxy_costs(Scenario::PcieA30x8);
+    let top1 = build_pair_schedule_auto(&c, MoEKind::Standard { k: 1 },
+                                        Strategy::Sequential).makespan();
+    let sc = build_pair_schedule_auto(&c, MoEKind::ScMoE { k: 1 },
+                                      Strategy::Overlap).makespan();
+    let gain = top1 / sc - 1.0;
+    assert!((0.05..0.35).contains(&gain),
+            "ScMoE gain over top-1 on PCIe: {gain}");
+    // and on NVLink (comm 15% < 20%): top-1 is NOT clearly beaten — the
+    // crossover the paper describes in §4.2.3.
+    let c = proxy_costs(Scenario::NvlinkA800x8);
+    let top1_nv = build_pair_schedule_auto(&c, MoEKind::Standard { k: 1 },
+                                           Strategy::Sequential).makespan();
+    let sc_nv = build_pair_schedule_auto(&c, MoEKind::ScMoE { k: 1 },
+                                         Strategy::Overlap).makespan();
+    assert!(sc_nv > top1_nv * 0.95,
+            "below the ~20% comm crossover ScMoE shouldn't dominate top-1");
+}
+
+#[test]
+fn paper_claim_fig8_improvements() {
+    // Fig. 8a (PCIe): ScMoE ≈ 27% over shared-expert, ≈ 42% over pipelined
+    // top-2; Fig. 8c (2-node): 24% and 43%. Assert generous bands.
+    for (sc, lo_se, hi_se) in [(Scenario::PcieA30x8, 0.10, 0.45),
+                               (Scenario::TwoNodeA800x16, 0.10, 0.45)] {
+        let c = proxy_costs(sc);
+        let shared = build_pair_schedule_auto(&c, MoEKind::SharedExpert,
+                                              Strategy::Pipelined { chunks: 1 }).makespan();
+        let top2p = build_pair_schedule_auto(&c, MoEKind::Standard { k: 2 },
+                                             Strategy::Pipelined { chunks: 2 }).makespan();
+        let scmoe = build_pair_schedule_auto(&c, MoEKind::ScMoE { k: 1 },
+                                             Strategy::Overlap).makespan();
+        let over_se = shared / scmoe - 1.0;
+        let over_t2 = top2p / scmoe - 1.0;
+        assert!((lo_se..hi_se).contains(&over_se),
+                "{}: vs shared-expert {over_se}", sc.label());
+        assert!(over_t2 > 0.2, "{}: vs pipelined top-2 {over_t2}", sc.label());
+    }
+}
+
+#[test]
+fn real_distributed_pair_matches_fused_oracle_and_overlap_wins() {
+    let root = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/ops_tiny"));
+    if !root.join("manifest.json").exists() {
+        eprintln!("skipping: ops artifacts not built");
+        return;
+    }
+    let engine = Arc::new(Engine::cpu().unwrap());
+    let set = engine.open(root).unwrap();
+    let m = &set.manifest;
+    let (t, d) = (m.tokens, m.config.d_model);
+    let k = 1usize;
+    let cluster = Cluster::spawn(&set, 4, k).unwrap();
+
+    let x: Vec<f32> = (0..t * d).map(|i| ((i * 29 % 97) as f32 / 97.0) - 0.5).collect();
+    let xt = HostTensor::f32(vec![t, d], x);
+
+    // link injected at a scale where comm dominates a backbone op
+    let link = LinkModel::new(0.0, 50e6); // slow on purpose
+    let (y_overlap, _) = run_pair_real(&set, &cluster, &xt, k, true, link, 1.0, 2).unwrap();
+    let (y_seq, _) = run_pair_real(&set, &cluster, &xt, k, false, link, 1.0, 2).unwrap();
+
+    // numerics: both strategies produce identical results
+    for (a, b) in y_overlap.iter().zip(&y_seq) {
+        assert!((a - b).abs() < 1e-5, "overlap vs sequential numerics");
+    }
+
+    // numerics vs fused oracle
+    let w = &cluster.weights;
+    let fused = set.get("moe_fused_op_k1").unwrap();
+    let yf = fused.run(&[xt.clone(), w.ln_g.clone(), w.ln_b.clone(), w.wg.clone(),
+                         w.w1.clone(), w.b1.clone(), w.w2.clone(), w.b2.clone()])
+        .unwrap();
+    let yf = yf[0].as_f32().unwrap();
+    let mut max_err = 0.0f32;
+    for (a, b) in y_overlap.iter().zip(yf) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(max_err < 1e-4, "distributed != fused oracle: {max_err}");
+
+    // wall-clock: overlap hides the injected comm behind the backbone
+    let time = |overlap: bool| {
+        let t0 = std::time::Instant::now();
+        run_pair_real(&set, &cluster, &xt, k, overlap, link, 1.0, 2).unwrap();
+        t0.elapsed().as_secs_f64()
+    };
+    // median of 3
+    let mut seq_t: Vec<f64> = (0..3).map(|_| time(false)).collect();
+    let mut ovl_t: Vec<f64> = (0..3).map(|_| time(true)).collect();
+    seq_t.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ovl_t.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    assert!(ovl_t[1] < seq_t[1],
+            "overlap ({:.3}s) should beat sequential ({:.3}s)", ovl_t[1], seq_t[1]);
+}
