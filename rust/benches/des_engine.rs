@@ -26,6 +26,40 @@ fn build_chain_graph(pairs: usize, chunks: usize) -> Sim {
     sim
 }
 
+/// Multi-device graph shaped like the topology-aware pair schedules: per
+/// device compute/comm streams, per-node shared links, A2A barriers.
+fn build_fleet_graph(pairs: usize, devices: usize, per_node: usize) -> Sim {
+    let mut sim = Sim::new();
+    let nodes = devices / per_node;
+    let mut prev: Vec<Option<usize>> = vec![None; devices];
+    for _ in 0..pairs {
+        let mut enc = Vec::with_capacity(devices);
+        for d in 0..devices {
+            let deps: Vec<_> = prev[d].into_iter().collect();
+            let attn = sim.add("attn", Resource::Compute(d), 1.0, &deps);
+            enc.push(sim.add("enc", Resource::Compute(d), 0.1, &[attn]));
+        }
+        let mut disp = Vec::with_capacity(devices + nodes);
+        for d in 0..devices {
+            disp.push(sim.add("a2a", Resource::Comm(d), 0.4, &[enc[d]]));
+        }
+        // single-node topologies have no inter-node phase (matches the
+        // real builders, which emit Link tasks only when a2a_inter exists)
+        if nodes >= 2 {
+            for n in 0..nodes {
+                let deps: Vec<_> =
+                    (n * per_node..(n + 1) * per_node).map(|d| enc[d]).collect();
+                disp.push(sim.add("a2a-x", Resource::Link(n), 0.6, &deps));
+            }
+        }
+        for d in 0..devices {
+            let e = sim.add("expert", Resource::Compute(d), 0.5, &disp);
+            prev[d] = Some(sim.add("dec", Resource::Compute(d), 0.1, &[e]));
+        }
+    }
+    sim
+}
+
 fn main() {
     let b = Bench::new("des_engine");
     for (pairs, chunks) in [(12usize, 2usize), (48, 4), (96, 8)] {
@@ -35,6 +69,16 @@ fn main() {
                           100, 5, || {
             std::hint::black_box(sim.run());
         });
+        println!("  -> {:.2} M tasks/s", n as f64 / t / 1e6);
+    }
+    for (pairs, devices, per_node) in [(12usize, 8usize, 8usize), (12, 16, 8), (12, 32, 8)] {
+        let sim = build_fleet_graph(pairs, devices, per_node);
+        let n = sim.len();
+        let t = b.measure(
+            &format!("{n} tasks (fleet: {pairs} pairs x {devices} dev / {per_node} per node)"),
+            50, 5, || {
+                std::hint::black_box(sim.run());
+            });
         println!("  -> {:.2} M tasks/s", n as f64 / t / 1e6);
     }
 }

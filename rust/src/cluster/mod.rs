@@ -1,14 +1,22 @@
 //! Simulated device fleet + interconnect models.
 //!
 //! The paper's testbeds (8×A30-PCIe, 8×A800-NVLink, 16×A800 across two
-//! nodes) are modeled as `Topology` (devices, nodes) + `LinkModel`
-//! (α latency + bytes/β bandwidth per message). Presets are calibrated so
-//! the All-to-All share of total MoE time reproduces the paper's measured
-//! fractions (Fig. 1: 60% on PCIe, 15% on NVLink, ≈50% across 2 nodes) —
-//! see DESIGN.md §6 for the calibration method.
+//! nodes) are modeled as `Topology` (devices, nodes, per-device compute
+//! scales) + `LinkModel` (α latency + bytes/β bandwidth per message).
+//! Presets are calibrated so the All-to-All share of total MoE time
+//! reproduces the paper's measured fractions (Fig. 1: 60% on PCIe, 15% on
+//! NVLink, ≈50% across 2 nodes) — see DESIGN.md §6 for the calibration
+//! method. `Scenario::extended()` adds multi-node InfiniBand and
+//! heterogeneous presets beyond the paper's testbeds.
+//!
+//! All-to-All costs come in two granularities: the flat [`a2a_time`]
+//! bound (one number per collective, used by the single-representative-
+//! device schedules) and the MoNTA-style [`a2a_decompose`] per-link phase
+//! split (per-device intra-node + per-node inter-node), which the
+//! topology-aware DES schedules on distinct contended resources.
 
 pub mod interconnect;
 pub mod topology;
 
-pub use interconnect::{a2a_time, uniform_a2a_bytes, LinkModel};
+pub use interconnect::{a2a_decompose, a2a_time, uniform_a2a_bytes, A2aPhases, LinkModel};
 pub use topology::{Scenario, Topology};

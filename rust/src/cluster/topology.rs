@@ -1,4 +1,13 @@
-//! Named hardware scenarios matching the paper's testbeds.
+//! Named hardware scenarios matching the paper's testbeds, plus extended
+//! hierarchical presets for the multi-device topology-aware DES.
+//!
+//! A [`Topology`] describes the device fleet the scheduler models: device
+//! and node counts, the intra-node link, the optional shared inter-node
+//! uplink, and per-device compute speed (heterogeneous fleets supply a
+//! per-device scale vector). The three paper testbeds ([`Scenario::all`])
+//! stay calibrated to Fig. 1's communication shares; [`Scenario::extended`]
+//! adds a multi-node InfiniBand preset and a mixed A800+A30 preset for
+//! scenario-diversity studies.
 
 use super::interconnect::LinkModel;
 
@@ -10,6 +19,13 @@ pub enum Scenario {
     NvlinkA800x8,
     /// 16×A800 across 2 nodes over Ethernet (comm ≈ 50%).
     TwoNodeA800x16,
+    /// 32×A800 across 4 nodes over an InfiniBand-class fabric
+    /// (multi-node IB preset for the topology-aware DES).
+    FourNodeA800IBx32,
+    /// Heterogeneous 2-node fleet: one NVLink node of A800s plus one node
+    /// of A30s, bridged by Ethernet (mixed preset: stragglers shift the
+    /// overlap window per device).
+    HeteroA800A30x8,
 }
 
 impl Scenario {
@@ -18,6 +34,8 @@ impl Scenario {
             "pcie" | "8xA30-PCIe" => Some(Scenario::PcieA30x8),
             "nvlink" | "8xA800-NVLink" => Some(Scenario::NvlinkA800x8),
             "2node" | "16xA800-2node" => Some(Scenario::TwoNodeA800x16),
+            "4node-ib" | "32xA800-4node-IB" => Some(Scenario::FourNodeA800IBx32),
+            "hetero" | "8xA800+A30-hetero" => Some(Scenario::HeteroA800A30x8),
             _ => None,
         }
     }
@@ -27,11 +45,26 @@ impl Scenario {
             Scenario::PcieA30x8 => "8xA30-PCIe",
             Scenario::NvlinkA800x8 => "8xA800-NVLink",
             Scenario::TwoNodeA800x16 => "16xA800-2node",
+            Scenario::FourNodeA800IBx32 => "32xA800-4node-IB",
+            Scenario::HeteroA800A30x8 => "8xA800+A30-hetero",
         }
     }
 
+    /// The paper's three calibrated testbeds (Fig. 1 bands).
     pub fn all() -> [Scenario; 3] {
         [Scenario::PcieA30x8, Scenario::NvlinkA800x8, Scenario::TwoNodeA800x16]
+    }
+
+    /// Every preset, including the extended multi-node and heterogeneous
+    /// topologies that go beyond the paper's testbeds.
+    pub fn extended() -> [Scenario; 5] {
+        [
+            Scenario::PcieA30x8,
+            Scenario::NvlinkA800x8,
+            Scenario::TwoNodeA800x16,
+            Scenario::FourNodeA800IBx32,
+            Scenario::HeteroA800A30x8,
+        ]
     }
 
     pub fn topology(&self) -> Topology {
@@ -43,6 +76,7 @@ impl Scenario {
                 inter: None,
                 // A30: 165 TFLOPS bf16 tensor — relative compute scale 1.0
                 compute_scale: 1.0,
+                device_scales: None,
             },
             Scenario::NvlinkA800x8 => Topology {
                 n_devices: 8,
@@ -51,6 +85,7 @@ impl Scenario {
                 inter: None,
                 // A800 ~1.9x A30 on the dense kernels in this proxy
                 compute_scale: 1.9,
+                device_scales: None,
             },
             Scenario::TwoNodeA800x16 => Topology {
                 n_devices: 16,
@@ -58,6 +93,24 @@ impl Scenario {
                 intra: LinkModel::nvlink(),
                 inter: Some(LinkModel::ethernet()),
                 compute_scale: 1.9,
+                device_scales: None,
+            },
+            Scenario::FourNodeA800IBx32 => Topology {
+                n_devices: 32,
+                devices_per_node: 8,
+                intra: LinkModel::nvlink(),
+                inter: Some(LinkModel::infiniband()),
+                compute_scale: 1.9,
+                device_scales: None,
+            },
+            Scenario::HeteroA800A30x8 => Topology {
+                n_devices: 8,
+                devices_per_node: 4,
+                intra: LinkModel::nvlink(),
+                inter: Some(LinkModel::ethernet()),
+                compute_scale: 1.9,
+                // node 0: A800s; node 1: A30s (the stragglers)
+                device_scales: Some(vec![1.9, 1.9, 1.9, 1.9, 1.0, 1.0, 1.0, 1.0]),
             },
         }
     }
@@ -71,11 +124,53 @@ pub struct Topology {
     pub inter: Option<LinkModel>,
     /// Device compute speed relative to the A30 baseline (divides op times).
     pub compute_scale: f64,
+    /// Per-device compute scales for heterogeneous fleets; `None` means
+    /// every device runs at `compute_scale`.
+    pub device_scales: Option<Vec<f64>>,
 }
 
 impl Topology {
+    /// Validate internal consistency; cost constructors call this so a
+    /// malformed hand-built topology fails at the source instead of as an
+    /// index panic deep inside cost derivation.
+    pub fn assert_valid(&self) {
+        assert!(self.n_devices > 0 && self.devices_per_node > 0);
+        assert!(self.n_devices % self.devices_per_node == 0,
+                "devices ({}) must divide into nodes of {}",
+                self.n_devices, self.devices_per_node);
+        if let Some(v) = &self.device_scales {
+            assert_eq!(v.len(), self.n_devices,
+                       "device_scales length must equal n_devices");
+            assert!(v.iter().all(|&s| s > 0.0), "compute scales must be positive");
+        }
+    }
+
     pub fn n_nodes(&self) -> usize {
         self.n_devices / self.devices_per_node
+    }
+
+    /// Node owning a device (contiguous block layout).
+    pub fn node_of(&self, device: usize) -> usize {
+        device / self.devices_per_node
+    }
+
+    /// Compute scale of one device (heterogeneity-aware).
+    pub fn device_compute_scale(&self, device: usize) -> f64 {
+        match &self.device_scales {
+            Some(v) => v[device],
+            None => self.compute_scale,
+        }
+    }
+
+    /// Compute scale of the slowest device. The single-representative-
+    /// device cost model uses this: on a heterogeneous fleet the barrier
+    /// collectives are gated by the stragglers, so the representative
+    /// device must be the slow one.
+    pub fn min_compute_scale(&self) -> f64 {
+        match &self.device_scales {
+            Some(v) => v.iter().copied().fold(f64::INFINITY, f64::min),
+            None => self.compute_scale,
+        }
     }
 }
 
@@ -85,7 +180,7 @@ mod tests {
 
     #[test]
     fn parse_roundtrip() {
-        for s in Scenario::all() {
+        for s in Scenario::extended() {
             assert_eq!(Scenario::parse(s.label()), Some(s));
         }
         assert_eq!(Scenario::parse("nope"), None);
@@ -96,5 +191,26 @@ mod tests {
         let t = Scenario::TwoNodeA800x16.topology();
         assert_eq!(t.n_nodes(), 2);
         assert!(t.inter.is_some());
+    }
+
+    #[test]
+    fn four_node_ib_shape() {
+        let t = Scenario::FourNodeA800IBx32.topology();
+        assert_eq!(t.n_devices, 32);
+        assert_eq!(t.n_nodes(), 4);
+        assert!(t.inter.is_some());
+        assert_eq!(t.node_of(7), 0);
+        assert_eq!(t.node_of(8), 1);
+    }
+
+    #[test]
+    fn hetero_scales_per_device() {
+        let t = Scenario::HeteroA800A30x8.topology();
+        assert_eq!(t.n_nodes(), 2);
+        assert_eq!(t.device_compute_scale(0), 1.9);
+        assert_eq!(t.device_compute_scale(7), 1.0);
+        // homogeneous presets fall back to the fleet scale
+        let n = Scenario::NvlinkA800x8.topology();
+        assert_eq!(n.device_compute_scale(3), 1.9);
     }
 }

@@ -6,8 +6,8 @@
 //! Eq. 11's closed form plus the Eq. 12/13 bounds are provided for analysis
 //! and are property-tested against the DES (rust/tests/coordinator_props.rs).
 
-use super::costs::{BlockCosts, MoEKind, Strategy};
-use super::schedule::build_pair_schedule;
+use super::costs::{BlockCosts, MoEKind, Strategy, TopoCosts};
+use super::schedule::{build_pair_schedule, build_pair_schedule_topo};
 
 /// Pick the expert slot minimizing the simulated pair makespan.
 /// Returns (slot, makespan).
@@ -16,6 +16,23 @@ pub fn choose_expert_slot(c: &BlockCosts, kind: MoEKind,
     let mut best = (0usize, f64::INFINITY);
     for slot in 0..4 {
         let s = build_pair_schedule(c, kind, strategy, slot);
+        let t = s.makespan();
+        if t < best.1 {
+            best = (slot, t);
+        }
+    }
+    best
+}
+
+/// Topology-aware slot choice: simulate the whole fleet per candidate slot
+/// and pick the argmin of the fleet makespan. Different topologies (link
+/// hierarchies, heterogeneous compute) legitimately prefer different
+/// slots — that is the scenario diversity the multi-device DES buys.
+pub fn choose_expert_slot_topo(tc: &TopoCosts, kind: MoEKind,
+                               strategy: Strategy) -> (usize, f64) {
+    let mut best = (0usize, f64::INFINITY);
+    for slot in 0..4 {
+        let s = build_pair_schedule_topo(tc, kind, strategy, slot);
         let t = s.makespan();
         if t < best.1 {
             best = (slot, t);

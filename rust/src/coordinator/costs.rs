@@ -1,7 +1,22 @@
 //! Operator durations and communication volumes for one
 //! Block-MLP + Block-MoE pair — the inputs to every schedule builder.
+//!
+//! Two granularities coexist:
+//!
+//! - [`BlockCosts`] — the paper's single-representative-device model: one
+//!   scalar one-way All-to-All time (`a2a_k1`) per routed-expert volume;
+//! - [`TopoCosts`] — the topology-aware model: per-device operator
+//!   durations (heterogeneous fleets run slower on some devices) plus a
+//!   MoNTA-style per-link decomposition of each All-to-All into per-device
+//!   intra-node and per-node inter-node phases, derived from topology +
+//!   token counts instead of scalar constants.
+//!
+//! `TopoCosts::from_block` embeds a `BlockCosts` as the degenerate
+//! one-modeled-device topology; schedules built from it reproduce the
+//! legacy single-device schedules bit-exactly (property-tested in
+//! `rust/tests/simtime_props.rs`).
 
-use crate::cluster::{a2a_time, uniform_a2a_bytes, Topology};
+use crate::cluster::{a2a_decompose, a2a_time, uniform_a2a_bytes, Topology};
 
 /// Which MoE architecture a schedule models (paper Fig. 6 / Fig. 8 rows).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -113,27 +128,133 @@ impl BlockCosts {
 
     /// Build costs from compute-op durations measured on the A30-relative
     /// scale plus a topology (which supplies A2A time and compute scaling).
+    /// On heterogeneous fleets the representative device is the slowest
+    /// one (`Topology::min_compute_scale`): barrier collectives are gated
+    /// by the stragglers, so a faster representative would understate the
+    /// fleet makespan.
     pub fn from_topology(base: &ComputeCosts, topo: &Topology,
                          tokens_per_device: usize, token_bytes: usize,
                          capacity_factor: f64) -> BlockCosts {
-        let s = topo.compute_scale;
-        // k=1 volume: each device dispatches its tokens' routed copies;
-        // under uniform routing a (1 - 1/n) fraction crosses the link, with
-        // capacity_factor headroom in buffer sizing.
-        let bytes_per_pair = ((tokens_per_device as f64 * capacity_factor
-            / topo.n_devices as f64) * token_bytes as f64) as usize;
-        let m = uniform_a2a_bytes(topo.n_devices, bytes_per_pair);
+        topo.assert_valid();
+        let m = uniform_a2a_bytes(
+            topo.n_devices,
+            uniform_bytes_per_pair(topo, tokens_per_device, token_bytes,
+                                   capacity_factor));
         let a2a_k1 = a2a_time(&m, topo.n_devices, topo.devices_per_node,
                               topo.intra, topo.inter);
-        BlockCosts {
-            attn: base.attn / s,
-            mlp: base.mlp / s,
-            se: base.se / s,
-            gate: base.gate / s,
-            encode: base.encode / s,
-            decode: base.decode / s,
-            expert_k1: base.expert_k1 / s,
-            a2a_k1,
+        base.scaled(topo.min_compute_scale(), a2a_k1)
+    }
+}
+
+/// k=1 uniform-routing volume: each device dispatches its tokens' routed
+/// copies; under uniform routing a (1 - 1/n) fraction crosses the link,
+/// with `capacity_factor` headroom in buffer sizing. Shared by the legacy
+/// and topology-aware cost constructors so the two models can never
+/// disagree on communication volume.
+fn uniform_bytes_per_pair(topo: &Topology, tokens_per_device: usize,
+                          token_bytes: usize, capacity_factor: f64) -> usize {
+    ((tokens_per_device as f64 * capacity_factor / topo.n_devices as f64)
+        * token_bytes as f64) as usize
+}
+
+/// Topology-aware costs for one Block-MLP + Block-MoE pair across a
+/// modeled device fleet (see the module docs for how this generalizes
+/// [`BlockCosts`]).
+#[derive(Debug, Clone)]
+pub struct TopoCosts {
+    /// Per modeled device: compute-op durations (already scaled by that
+    /// device's compute speed) plus the flat one-way `a2a_k1` for
+    /// reporting and the single-device reduction.
+    pub per_device: Vec<BlockCosts>,
+    /// Per-device one-way intra-node All-to-All phase at k = 1 volume.
+    pub a2a_intra_k1: Vec<f64>,
+    /// Per-node one-way inter-node All-to-All phase at k = 1 volume;
+    /// empty for single-node (or single-modeled-device) topologies.
+    pub a2a_inter_k1: Vec<f64>,
+    pub devices_per_node: usize,
+}
+
+impl TopoCosts {
+    pub fn n_devices(&self) -> usize {
+        self.per_device.len()
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.n_devices().div_ceil(self.devices_per_node)
+    }
+
+    pub fn node_of(&self, device: usize) -> usize {
+        device / self.devices_per_node
+    }
+
+    /// Devices belonging to a node (contiguous block layout).
+    pub fn devices_of(&self, node: usize) -> std::ops::Range<usize> {
+        let lo = node * self.devices_per_node;
+        lo..(lo + self.devices_per_node).min(self.n_devices())
+    }
+
+    /// Validate internal consistency (the hand-construction twin of
+    /// `Topology::assert_valid`): every device needs an intra phase, and
+    /// the inter phases must cover every node or be absent entirely —
+    /// the schedule builders size their `Link` task loops off
+    /// `a2a_inter_k1.len()`, so a short vector would silently drop
+    /// uplink tasks instead of failing.
+    pub fn assert_valid(&self) {
+        assert!(!self.per_device.is_empty(), "at least one modeled device");
+        assert!(self.devices_per_node > 0);
+        assert_eq!(self.a2a_intra_k1.len(), self.per_device.len(),
+                   "one intra-node phase per device");
+        assert!(self.a2a_inter_k1.is_empty()
+                    || self.a2a_inter_k1.len() == self.n_nodes(),
+                "inter-node phases must cover every node (or be empty)");
+    }
+
+    /// One-way intra-node phase for device `d` at k routed experts.
+    pub fn a2a_intra(&self, d: usize, k: usize) -> f64 {
+        self.a2a_intra_k1[d] * k as f64
+    }
+
+    /// One-way inter-node phase for node `n` at k routed experts.
+    pub fn a2a_inter(&self, n: usize, k: usize) -> f64 {
+        self.a2a_inter_k1[n] * k as f64
+    }
+
+    /// Degenerate one-modeled-device view of legacy costs. Schedules built
+    /// from this reduce bit-exactly to the legacy single-device schedules:
+    /// the single intra phase carries the whole scalar `a2a_k1` and there
+    /// is no inter-node resource.
+    pub fn from_block(c: &BlockCosts) -> TopoCosts {
+        TopoCosts {
+            a2a_intra_k1: vec![c.a2a_k1],
+            a2a_inter_k1: Vec::new(),
+            per_device: vec![c.clone()],
+            devices_per_node: 1,
+        }
+    }
+
+    /// Build topology-aware costs: per-device compute durations from the
+    /// device's own compute scale, All-to-All phases from the uniform
+    /// routing byte matrix decomposed per link (`cluster::a2a_decompose`).
+    pub fn from_topology(base: &ComputeCosts, topo: &Topology,
+                         tokens_per_device: usize, token_bytes: usize,
+                         capacity_factor: f64) -> TopoCosts {
+        topo.assert_valid();
+        let m = uniform_a2a_bytes(
+            topo.n_devices,
+            uniform_bytes_per_pair(topo, tokens_per_device, token_bytes,
+                                   capacity_factor));
+        let phases = a2a_decompose(&m, topo.n_devices, topo.devices_per_node,
+                                   topo.intra, topo.inter);
+        let flat = a2a_time(&m, topo.n_devices, topo.devices_per_node,
+                            topo.intra, topo.inter);
+        let per_device = (0..topo.n_devices)
+            .map(|d| base.scaled(topo.device_compute_scale(d), flat))
+            .collect();
+        TopoCosts {
+            per_device,
+            a2a_intra_k1: phases.intra,
+            a2a_inter_k1: phases.inter,
+            devices_per_node: topo.devices_per_node,
         }
     }
 }
@@ -154,6 +275,23 @@ pub struct ComputeCosts {
 }
 
 impl ComputeCosts {
+    /// Divide every op duration by a device compute speed and attach a
+    /// flat one-way All-to-All time — the one place op scaling happens,
+    /// shared by the legacy and topology-aware cost constructors.
+    pub fn scaled(&self, compute_scale: f64, a2a_k1: f64) -> BlockCosts {
+        let s = compute_scale;
+        BlockCosts {
+            attn: self.attn / s,
+            mlp: self.mlp / s,
+            se: self.se / s,
+            gate: self.gate / s,
+            encode: self.encode / s,
+            decode: self.decode / s,
+            expert_k1: self.expert_k1 / s,
+            a2a_k1,
+        }
+    }
+
     /// SwinV2-MoE-S block proxy (paper Fig. 1/8 shapes): ratios measured
     /// from the ops_tiny artifacts on CPU (see EXPERIMENTS.md §Calibration),
     /// absolute scale normalized so attn ≈ 1 ms on the A30 baseline.
@@ -200,5 +338,55 @@ mod tests {
         };
         assert_eq!(c.expert(2), 1.0);
         assert_eq!(c.a2a(3), 0.3 * 3.0);
+    }
+
+    #[test]
+    fn topo_from_block_is_exact_single_device_view() {
+        let c = BlockCosts {
+            attn: 1.0, mlp: 0.8, se: 0.8, gate: 0.05, encode: 0.05,
+            decode: 0.05, expert_k1: 0.6, a2a_k1: 0.37,
+        };
+        let tc = TopoCosts::from_block(&c);
+        assert_eq!(tc.n_devices(), 1);
+        assert_eq!(tc.n_nodes(), 1);
+        assert!(tc.a2a_inter_k1.is_empty());
+        assert_eq!(tc.a2a_intra(0, 2), c.a2a(2)); // bit-exact, same expression
+        assert_eq!(tc.per_device[0].attn, c.attn);
+    }
+
+    #[test]
+    fn topo_from_topology_scales_hetero_devices() {
+        let base = ComputeCosts::swin_proxy();
+        let topo = Scenario::HeteroA800A30x8.topology();
+        let tc = TopoCosts::from_topology(&base, &topo, 4096, 384, 1.25);
+        assert_eq!(tc.n_devices(), 8);
+        assert_eq!(tc.n_nodes(), 2);
+        assert_eq!(tc.a2a_inter_k1.len(), 2);
+        // A30 node (devices 4..8) is 1.9x slower on compute ops
+        let fast = tc.per_device[0].attn;
+        let slow = tc.per_device[7].attn;
+        assert!((slow / fast - 1.9).abs() < 1e-12, "ratio {}", slow / fast);
+    }
+
+    #[test]
+    fn legacy_hetero_costs_use_the_straggler_scale() {
+        // single-representative-device view of the mixed fleet must model
+        // the A30 stragglers (scale 1.0), not the A800s
+        let base = ComputeCosts::swin_proxy();
+        let topo = Scenario::HeteroA800A30x8.topology();
+        let c = BlockCosts::from_topology(&base, &topo, 4096, 384, 1.25);
+        assert_eq!(c.attn, base.attn);
+        assert_eq!(c.expert_k1, base.expert_k1);
+    }
+
+    #[test]
+    fn topo_single_node_has_no_inter_phase() {
+        let base = ComputeCosts::swin_proxy();
+        let topo = Scenario::NvlinkA800x8.topology();
+        let tc = TopoCosts::from_topology(&base, &topo, 4096, 384, 1.25);
+        assert!(tc.a2a_inter_k1.is_empty());
+        assert_eq!(tc.a2a_intra_k1.len(), 8);
+        // flat bound equals the per-device phase on a uniform single node
+        assert!((tc.a2a_intra_k1[0] - tc.per_device[0].a2a_k1).abs() < 1e-15);
     }
 }

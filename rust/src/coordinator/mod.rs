@@ -1,12 +1,17 @@
 //! The paper's system contribution: operator scheduling for expert
 //! parallelism with shortcut-decoupled communication.
 //!
-//! - `costs`: per-operator durations (calibrated or preset) + comm volumes;
+//! - `costs`: per-operator durations (calibrated or preset) + comm
+//!   volumes, at two granularities — the single-representative-device
+//!   `BlockCosts` and the topology-aware `TopoCosts` (per-device compute,
+//!   per-link All-to-All phases derived from topology + token counts);
 //! - `schedule`: task-graph builders for every architecture × strategy in
 //!   Fig. 6 (sequential, Tutel-style pipelining, shared-expert, ScMoE
-//!   overlapping, ScMoE + pipelining);
+//!   overlapping, ScMoE + pipelining), in both single-device and
+//!   N-device topology-aware variants;
 //! - `adaptive`: Eq. 11 — the adaptive placement of expert computation
-//!   among the four candidate locations in the shared-expert stream;
+//!   among the four candidate locations in the shared-expert stream,
+//!   including the fleet-level argmin over topology-aware simulations;
 //! - `timeline`: ASCII rendering of DES spans (regenerates Fig. 6);
 //! - `exec`: real threaded execution of the same schedules against PJRT
 //!   artifacts with injected link delays (validates the DES).
@@ -17,6 +22,9 @@ pub mod exec;
 pub mod schedule;
 pub mod timeline;
 
-pub use adaptive::choose_expert_slot;
-pub use costs::{BlockCosts, MoEKind, Strategy};
-pub use schedule::{build_pair_schedule, PairSchedule};
+pub use adaptive::{choose_expert_slot, choose_expert_slot_topo};
+pub use costs::{BlockCosts, MoEKind, Strategy, TopoCosts};
+pub use schedule::{
+    build_pair_schedule, build_pair_schedule_topo, build_pair_schedule_topo_auto,
+    PairSchedule,
+};

@@ -3,14 +3,27 @@
 //! Fig. 8 bars). The graphs run on the `simtime` DES; the same structures
 //! drive the real threaded executor (`exec`).
 //!
-//! Modeling follows the paper: one representative device; computation
-//! operators share a single exclusive compute stream; All-to-All runs on a
-//! separate comm stream; gate/encode scheduled at the earliest viable
-//! position and decode at the latest (§3.2).
+//! Modeling follows the paper: computation operators share one exclusive
+//! compute stream per device; All-to-All runs on a separate comm stream;
+//! gate/encode scheduled at the earliest viable position and decode at the
+//! latest (§3.2).
+//!
+//! Two families of builders:
+//!
+//! - [`build_pair_schedule`] — the paper's single-representative-device
+//!   graphs over [`BlockCosts`];
+//! - [`build_pair_schedule_topo`] — the same strategies generalized to an
+//!   N-device fleet over [`TopoCosts`]: every device runs its own backbone
+//!   on `Compute(d)`, each All-to-All becomes per-device intra-node phase
+//!   tasks on `Comm(d)` plus per-node inter-node phase tasks on the shared
+//!   `Link(node)` resource, and expert computation on each device waits on
+//!   the whole collective (barrier semantics). With one modeled device the
+//!   construction emits the identical task graph as the legacy builders,
+//!   so N = 1 reproduces the legacy makespans bit-exactly.
 
 use crate::simtime::{Resource, Sim, Span, TaskId};
 
-use super::costs::{BlockCosts, MoEKind, Strategy};
+use super::costs::{BlockCosts, MoEKind, Strategy, TopoCosts};
 
 const DEV: usize = 0;
 
@@ -73,6 +86,41 @@ pub fn build_pair_schedule_auto(c: &BlockCosts, kind: MoEKind,
             build_pair_schedule(c, kind, strategy, slot)
         }
         _ => build_pair_schedule(c, kind, strategy, 0),
+    }
+}
+
+/// Build the topology-aware schedule for a pair under (kind, strategy)
+/// across every modeled device of `tc`.
+pub fn build_pair_schedule_topo(
+    tc: &TopoCosts,
+    kind: MoEKind,
+    strategy: Strategy,
+    expert_slot: usize,
+) -> PairSchedule {
+    tc.assert_valid();
+    let k = kind.routed_k();
+    match strategy {
+        Strategy::Sequential => build_sequential_topo(tc, kind, k),
+        Strategy::Pipelined { chunks } => build_pipelined_topo(tc, kind, k, chunks),
+        Strategy::Overlap => build_overlap_topo(tc, kind, k, expert_slot, 1),
+        Strategy::OverlapPipelined { chunks } => {
+            build_overlap_topo(tc, kind, k, expert_slot, chunks)
+        }
+    }
+}
+
+/// Topology-aware twin of [`build_pair_schedule_auto`]: picks the best
+/// expert slot for overlap strategies by simulating the whole fleet.
+pub fn build_pair_schedule_topo_auto(tc: &TopoCosts, kind: MoEKind,
+                                     strategy: Strategy) -> PairSchedule {
+    match strategy {
+        Strategy::Overlap | Strategy::OverlapPipelined { .. } => {
+            assert!(matches!(kind, MoEKind::ScMoE { .. }),
+                    "overlap strategy requires the shortcut architecture");
+            let slot = super::adaptive::choose_expert_slot_topo(tc, kind, strategy).0;
+            build_pair_schedule_topo(tc, kind, strategy, slot)
+        }
+        _ => build_pair_schedule_topo(tc, kind, strategy, 0),
     }
 }
 
@@ -222,6 +270,258 @@ fn build_overlap(c: &BlockCosts, kind: MoEKind, k: usize, slot: usize,
     PairSchedule { sim, kind, strategy, expert_slot: slot }
 }
 
+// ---------------------------------------------------------------------------
+// Topology-aware builders: the same strategies over an N-device fleet.
+//
+// Construction rules shared by all three builders:
+//  - device d's operators run on `Compute(d)`; its A2A intra-node phases on
+//    `Comm(d)`; node n's inter-node phases on the shared `Link(n)`;
+//  - an All-to-All is a barrier collective: consumers depend on every
+//    phase task (per-device intra + per-node inter);
+//  - task insertion order matches the legacy single-device builders, so a
+//    one-device `TopoCosts` yields the identical task graph (same ids,
+//    deps, durations) and therefore bit-exact spans.
+// ---------------------------------------------------------------------------
+
+/// Per-device sequential baseline over the fleet (cf. `build_sequential`).
+fn build_sequential_topo(tc: &TopoCosts, kind: MoEKind, k: usize) -> PairSchedule {
+    let n = tc.n_devices();
+    let n_links = tc.a2a_inter_k1.len();
+    let mut sim = Sim::new();
+    let mut attn_m = Vec::with_capacity(n);
+    let mut enc = Vec::with_capacity(n);
+    for d in 0..n {
+        let c = &tc.per_device[d];
+        let attn_l = sim.add("Attn(l)", Resource::Compute(d), c.attn, &[]);
+        let mlp_l = sim.add("MLP(l)", Resource::Compute(d), c.mlp, &[attn_l]);
+        let a_m = sim.add("Attn(l+1)", Resource::Compute(d), c.attn, &[mlp_l]);
+        let gate = sim.add("Gate", Resource::Compute(d), c.gate, &[a_m]);
+        let e = sim.add("Encode", Resource::Compute(d), c.encode, &[gate]);
+        attn_m.push(a_m);
+        enc.push(e);
+    }
+    let mut disp = Vec::with_capacity(n + n_links);
+    for d in 0..n {
+        disp.push(sim.add("A2A-D", Resource::Comm(d), tc.a2a_intra(d, k), &[enc[d]]));
+    }
+    for node in 0..n_links {
+        let deps: Vec<TaskId> = tc.devices_of(node).map(|d| enc[d]).collect();
+        disp.push(sim.add("A2A-Dx", Resource::Link(node), tc.a2a_inter(node, k), &deps));
+    }
+    let mut experts = Vec::with_capacity(n);
+    for d in 0..n {
+        let c = &tc.per_device[d];
+        experts.push(sim.add("Expert", Resource::Compute(d), c.expert(k), &disp));
+    }
+    let mut comb = Vec::with_capacity(n + n_links);
+    for d in 0..n {
+        comb.push(sim.add("A2A-C", Resource::Comm(d), tc.a2a_intra(d, k), &[experts[d]]));
+    }
+    for node in 0..n_links {
+        let deps: Vec<TaskId> = tc.devices_of(node).map(|d| experts[d]).collect();
+        comb.push(sim.add("A2A-Cx", Resource::Link(node), tc.a2a_inter(node, k), &deps));
+    }
+    for d in 0..n {
+        let c = &tc.per_device[d];
+        let mut deps = comb.clone();
+        if kind.has_shared_expert() {
+            let se = sim.add("SE", Resource::Compute(d), c.se, &[attn_m[d]]);
+            deps.push(se);
+        }
+        sim.add("Decode", Resource::Compute(d), c.decode, &deps);
+    }
+    PairSchedule { sim, kind, strategy: Strategy::Sequential, expert_slot: 0 }
+}
+
+/// Tutel-style pipelining over the fleet (cf. `build_pipelined`): chunk
+/// phases chain per link, and every chunk's expert computation waits on
+/// that chunk's full collective.
+fn build_pipelined_topo(tc: &TopoCosts, kind: MoEKind, k: usize,
+                        chunks: usize) -> PairSchedule {
+    assert!(chunks >= 1);
+    let n = tc.n_devices();
+    let n_links = tc.a2a_inter_k1.len();
+    let mut sim = Sim::new();
+    let mut attn_m = Vec::with_capacity(n);
+    let mut enc = Vec::with_capacity(n);
+    for d in 0..n {
+        let c = &tc.per_device[d];
+        let attn_l = sim.add("Attn(l)", Resource::Compute(d), c.attn, &[]);
+        let mlp_l = sim.add("MLP(l)", Resource::Compute(d), c.mlp, &[attn_l]);
+        let a_m = sim.add("Attn(l+1)", Resource::Compute(d), c.attn, &[mlp_l]);
+        let gate = sim.add("Gate", Resource::Compute(d), c.gate, &[a_m]);
+        let e = sim.add("Encode", Resource::Compute(d), c.encode, &[gate]);
+        attn_m.push(a_m);
+        enc.push(e);
+    }
+    let fc = chunks as f64;
+    let mut prev_d: Vec<Option<TaskId>> = vec![None; n];
+    let mut prev_x: Vec<Option<TaskId>> = vec![None; n_links];
+    let mut combines: Vec<TaskId> = Vec::new();
+    for i in 0..chunks {
+        let mut disp_i = Vec::with_capacity(n + n_links);
+        for d in 0..n {
+            let mut deps = vec![enc[d]];
+            if let Some(p) = prev_d[d] {
+                deps.push(p);
+            }
+            let t = sim.add(format!("A2A-D{i}"), Resource::Comm(d),
+                            tc.a2a_intra(d, k) / fc, &deps);
+            prev_d[d] = Some(t);
+            disp_i.push(t);
+        }
+        for node in 0..n_links {
+            let mut deps: Vec<TaskId> = tc.devices_of(node).map(|d| enc[d]).collect();
+            if let Some(p) = prev_x[node] {
+                deps.push(p);
+            }
+            let t = sim.add(format!("A2A-Dx{i}"), Resource::Link(node),
+                            tc.a2a_inter(node, k) / fc, &deps);
+            prev_x[node] = Some(t);
+            disp_i.push(t);
+        }
+        let mut experts_i = Vec::with_capacity(n);
+        for d in 0..n {
+            let c = &tc.per_device[d];
+            experts_i.push(sim.add(format!("Expert{i}"), Resource::Compute(d),
+                                   c.expert(k) / fc, &disp_i));
+        }
+        for d in 0..n {
+            combines.push(sim.add(format!("A2A-C{i}"), Resource::Comm(d),
+                                  tc.a2a_intra(d, k) / fc, &[experts_i[d]]));
+        }
+        for node in 0..n_links {
+            let deps: Vec<TaskId> = tc.devices_of(node).map(|d| experts_i[d]).collect();
+            combines.push(sim.add(format!("A2A-Cx{i}"), Resource::Link(node),
+                                  tc.a2a_inter(node, k) / fc, &deps));
+        }
+    }
+    for d in 0..n {
+        let c = &tc.per_device[d];
+        let mut deps = combines.clone();
+        if kind.has_shared_expert() {
+            let se = sim.add("SE", Resource::Compute(d), c.se, &[attn_m[d]]);
+            deps.push(se);
+        }
+        sim.add("Decode", Resource::Compute(d), c.decode, &deps);
+    }
+    PairSchedule { sim, kind, strategy: Strategy::Pipelined { chunks }, expert_slot: 0 }
+}
+
+/// The paper's overlapping strategy over the fleet (cf. `build_overlap`):
+/// every device hangs its MoE stream off the preceding layer's
+/// intermediate and inserts its expert chunks at `slot` in its own
+/// backbone window; slow devices stretch the collective for everyone.
+fn build_overlap_topo(tc: &TopoCosts, kind: MoEKind, k: usize, slot: usize,
+                      chunks: usize) -> PairSchedule {
+    assert!(slot <= 3, "expert slot must be one of the 4 locations");
+    assert!(chunks >= 1);
+    let n = tc.n_devices();
+    let n_links = tc.a2a_inter_k1.len();
+    let mut sim = Sim::new();
+    let mut attn_l_ids = Vec::with_capacity(n);
+    let mut enc = Vec::with_capacity(n);
+    for d in 0..n {
+        let c = &tc.per_device[d];
+        let attn_l = sim.add("Attn(l)", Resource::Compute(d), c.attn, &[]);
+        let gate = sim.add("Gate", Resource::Compute(d), c.gate, &[attn_l]);
+        let e = sim.add("Encode", Resource::Compute(d), c.encode, &[gate]);
+        attn_l_ids.push(attn_l);
+        enc.push(e);
+    }
+    let fc = chunks as f64;
+    let mut disp_chunks: Vec<Vec<TaskId>> = Vec::with_capacity(chunks);
+    let mut prev_d: Vec<Option<TaskId>> = vec![None; n];
+    let mut prev_x: Vec<Option<TaskId>> = vec![None; n_links];
+    for i in 0..chunks {
+        let mut disp_i = Vec::with_capacity(n + n_links);
+        for d in 0..n {
+            let mut deps = vec![enc[d]];
+            if let Some(p) = prev_d[d] {
+                deps.push(p);
+            }
+            let t = sim.add(format!("A2A-D{i}"), Resource::Comm(d),
+                            tc.a2a_intra(d, k) / fc, &deps);
+            prev_d[d] = Some(t);
+            disp_i.push(t);
+        }
+        for node in 0..n_links {
+            let mut deps: Vec<TaskId> = tc.devices_of(node).map(|d| enc[d]).collect();
+            if let Some(p) = prev_x[node] {
+                deps.push(p);
+            }
+            let t = sim.add(format!("A2A-Dx{i}"), Resource::Link(node),
+                            tc.a2a_inter(node, k) / fc, &deps);
+            prev_x[node] = Some(t);
+            disp_i.push(t);
+        }
+        disp_chunks.push(disp_i);
+    }
+    // per-device backbone window with expert chunks inserted at `slot`
+    let mut last_backbone: Vec<TaskId> = vec![0; n];
+    let mut experts_by_dev: Vec<Vec<TaskId>> = Vec::with_capacity(n);
+    for d in 0..n {
+        let c = &tc.per_device[d];
+        let mut dev_experts = Vec::with_capacity(chunks);
+        let place = |sim: &mut Sim, after: TaskId,
+                     out: &mut Vec<TaskId>| -> TaskId {
+            let mut tail = after;
+            for (i, disp_i) in disp_chunks.iter().enumerate() {
+                let mut deps = disp_i.clone();
+                deps.push(tail);
+                let e = sim.add(format!("Expert{i}"), Resource::Compute(d),
+                                c.expert(k) / fc, &deps);
+                out.push(e);
+                tail = e;
+            }
+            tail
+        };
+        let mut tail = attn_l_ids[d];
+        if slot == 0 {
+            tail = place(&mut sim, tail, &mut dev_experts);
+        }
+        let window: [(&str, f64); 3] = [
+            ("MLP(l)", c.mlp),
+            ("Attn(l+1)", c.attn),
+            ("SE(l+1)", c.se),
+        ];
+        for (wi, (label, dur)) in window.iter().enumerate() {
+            tail = sim.add(*label, Resource::Compute(d), *dur, &[tail]);
+            if slot == wi + 1 {
+                tail = place(&mut sim, tail, &mut dev_experts);
+            }
+        }
+        last_backbone[d] = tail;
+        experts_by_dev.push(dev_experts);
+    }
+    let mut combines: Vec<TaskId> = Vec::new();
+    for i in 0..chunks {
+        for d in 0..n {
+            combines.push(sim.add(format!("A2A-C{i}"), Resource::Comm(d),
+                                  tc.a2a_intra(d, k) / fc,
+                                  &[experts_by_dev[d][i]]));
+        }
+        for node in 0..n_links {
+            let deps: Vec<TaskId> =
+                tc.devices_of(node).map(|d| experts_by_dev[d][i]).collect();
+            combines.push(sim.add(format!("A2A-Cx{i}"), Resource::Link(node),
+                                  tc.a2a_inter(node, k) / fc, &deps));
+        }
+    }
+    for d in 0..n {
+        let c = &tc.per_device[d];
+        let mut deps = combines.clone();
+        deps.push(last_backbone[d]);
+        sim.add("Decode", Resource::Compute(d), c.decode, &deps);
+    }
+    let strategy = if chunks == 1 {
+        Strategy::Overlap
+    } else {
+        Strategy::OverlapPipelined { chunks }
+    };
+    PairSchedule { sim, kind, strategy, expert_slot: slot }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -297,5 +597,95 @@ mod tests {
                         "compute overlap: {:?} then {:?}", w[0].label, w[1].label);
             }
         }
+    }
+
+    fn homogeneous_topo(c: &BlockCosts, n: usize, devices_per_node: usize,
+                        inter_k1: f64) -> TopoCosts {
+        let n_nodes = n / devices_per_node;
+        TopoCosts {
+            per_device: vec![c.clone(); n],
+            a2a_intra_k1: vec![c.a2a_k1; n],
+            a2a_inter_k1: if n_nodes > 1 { vec![inter_k1; n_nodes] } else { Vec::new() },
+            devices_per_node,
+        }
+    }
+
+    #[test]
+    fn topo_one_device_matches_legacy_graphs() {
+        let c = costs(0.45);
+        let tc = TopoCosts::from_block(&c);
+        for (kind, strat, slot) in [
+            (MoEKind::Standard { k: 2 }, Strategy::Sequential, 0),
+            (MoEKind::SharedExpert, Strategy::Sequential, 0),
+            (MoEKind::Standard { k: 2 }, Strategy::Pipelined { chunks: 3 }, 0),
+            (MoEKind::ScMoE { k: 1 }, Strategy::Overlap, 2),
+            (MoEKind::ScMoE { k: 2 }, Strategy::OverlapPipelined { chunks: 2 }, 1),
+        ] {
+            let legacy = build_pair_schedule(&c, kind, strat, slot);
+            let topo = build_pair_schedule_topo(&tc, kind, strat, slot);
+            let (ls, ts) = (legacy.run(), topo.run());
+            assert_eq!(ls.len(), ts.len(), "{kind:?}/{strat:?}");
+            for (a, b) in ls.iter().zip(&ts) {
+                assert_eq!(a.label, b.label);
+                assert_eq!(a.resource, b.resource);
+                assert_eq!(a.start, b.start, "{}: start", a.label);
+                assert_eq!(a.end, b.end, "{}: end", a.label);
+            }
+        }
+    }
+
+    #[test]
+    fn topo_homogeneous_single_node_fleet_matches_legacy_makespan() {
+        // N identical devices on one node run the same schedule in
+        // lockstep: fleet makespan == representative-device makespan.
+        let c = costs(0.5);
+        let tc = homogeneous_topo(&c, 4, 4, 0.0);
+        for (kind, strat) in [
+            (MoEKind::Standard { k: 2 }, Strategy::Sequential),
+            (MoEKind::Standard { k: 2 }, Strategy::Pipelined { chunks: 2 }),
+        ] {
+            let legacy = build_pair_schedule(&c, kind, strat, 0).makespan();
+            let topo = build_pair_schedule_topo(&tc, kind, strat, 0).makespan();
+            assert!((legacy - topo).abs() < 1e-12,
+                    "{kind:?}/{strat:?}: legacy {legacy} topo {topo}");
+        }
+    }
+
+    #[test]
+    fn topo_straggler_device_stretches_the_collective() {
+        let c = costs(0.3);
+        let mut tc = homogeneous_topo(&c, 4, 4, 0.0);
+        // device 3 computes 2x slower: everyone waits at the barrier
+        let d3 = &mut tc.per_device[3];
+        d3.attn *= 2.0;
+        d3.mlp *= 2.0;
+        d3.se *= 2.0;
+        d3.expert_k1 *= 2.0;
+        let uniform = build_pair_schedule_topo(
+            &homogeneous_topo(&c, 4, 4, 0.0),
+            MoEKind::Standard { k: 2 }, Strategy::Sequential, 0).makespan();
+        let straggler = build_pair_schedule_topo(
+            &tc, MoEKind::Standard { k: 2 }, Strategy::Sequential, 0).makespan();
+        assert!(straggler > uniform + 1e-9,
+                "straggler {straggler} vs uniform {uniform}");
+    }
+
+    #[test]
+    fn topo_inter_node_link_is_contended() {
+        // one shared uplink per node: raising the inter phase raises the
+        // makespan even when intra phases stay fixed
+        let c = costs(0.2);
+        let cheap = build_pair_schedule_topo(
+            &homogeneous_topo(&c, 4, 2, 0.1),
+            MoEKind::Standard { k: 2 }, Strategy::Sequential, 0).makespan();
+        let pricey = build_pair_schedule_topo(
+            &homogeneous_topo(&c, 4, 2, 1.5),
+            MoEKind::Standard { k: 2 }, Strategy::Sequential, 0).makespan();
+        assert!(pricey > cheap + 1e-9, "pricey {pricey} vs cheap {cheap}");
+        // and the link rows exist in the spans
+        let spans = build_pair_schedule_topo(
+            &homogeneous_topo(&c, 4, 2, 0.5),
+            MoEKind::Standard { k: 2 }, Strategy::Sequential, 0).run();
+        assert!(spans.iter().any(|s| matches!(s.resource, Resource::Link(_))));
     }
 }

@@ -11,13 +11,17 @@ use crate::util::stats::fmt_secs;
 fn resource_row(r: Resource) -> String {
     match r {
         Resource::Compute(d) => format!("compute[{d}]"),
-        Resource::Comm(d) => format!("comm[{d}]   "),
-        Resource::H2D(d) => format!("h2d[{d}]    "),
-        Resource::Free => "free      ".into(),
+        Resource::Comm(d) => format!("comm[{d}]"),
+        Resource::Link(n) => format!("link[{n}]"),
+        Resource::H2D(d) => format!("h2d[{d}]"),
+        Resource::Free => "free".into(),
     }
 }
 
-/// Render spans as an ASCII chart `width` characters wide.
+/// Render spans as an ASCII chart `width` characters wide. Rows are
+/// ordered by the `Resource` enum (all compute streams in device order,
+/// then comm streams, then node links), so multi-device fleet renders
+/// stay numerically ordered past device 9.
 pub fn render(spans: &[Span], width: usize) -> String {
     if spans.is_empty() {
         return String::from("(empty timeline)\n");
@@ -28,13 +32,18 @@ pub fn render(spans: &[Span], width: usize) -> String {
     }
     let scale = width as f64 / t_end;
 
-    let mut rows: BTreeMap<String, Vec<&Span>> = BTreeMap::new();
+    let mut rows: BTreeMap<Resource, Vec<&Span>> = BTreeMap::new();
     for s in spans {
-        rows.entry(resource_row(s.resource)).or_default().push(s);
+        rows.entry(s.resource).or_default().push(s);
     }
+    let label_w = rows
+        .keys()
+        .map(|r| resource_row(*r).len())
+        .max()
+        .unwrap_or(0);
 
     let mut out = String::new();
-    for (row, mut row_spans) in rows {
+    for (res, mut row_spans) in rows {
         row_spans.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
         let mut line = vec![b' '; width];
         for s in &row_spans {
@@ -53,7 +62,8 @@ pub fn render(spans: &[Span], width: usize) -> String {
                 }
             }
         }
-        out.push_str(&format!("{row} {}\n", String::from_utf8(line).unwrap()));
+        out.push_str(&format!("{:<label_w$} {}\n", resource_row(res),
+                              String::from_utf8(line).unwrap()));
     }
     out.push_str(&format!("total: {}\n", fmt_secs(t_end)));
     out
@@ -107,5 +117,21 @@ mod tests {
     #[test]
     fn empty_ok() {
         assert!(render(&[], 40).contains("empty"));
+    }
+
+    #[test]
+    fn rows_ordered_numerically_past_device_nine() {
+        let mut sim = Sim::new();
+        for d in [0usize, 2, 10] {
+            sim.add("t", Resource::Compute(d), 1.0, &[]);
+        }
+        sim.add("x", Resource::Comm(0), 1.0, &[]);
+        let txt = render(&sim.run(), 20);
+        let p0 = txt.find("compute[0]").unwrap();
+        let p2 = txt.find("compute[2]").unwrap();
+        let p10 = txt.find("compute[10]").unwrap();
+        let pc = txt.find("comm[0]").unwrap();
+        // device order is numeric (2 before 10), compute before comm
+        assert!(p0 < p2 && p2 < p10 && p10 < pc, "{txt}");
     }
 }

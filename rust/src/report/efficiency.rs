@@ -4,9 +4,11 @@
 use anyhow::Result;
 
 use crate::cluster::Scenario;
-use crate::coordinator::adaptive::overlap_fraction;
-use crate::coordinator::costs::{BlockCosts, ComputeCosts, MoEKind, Strategy};
-use crate::coordinator::schedule::{build_pair_schedule_auto, backbone_time};
+use crate::coordinator::adaptive::{choose_expert_slot_topo, overlap_fraction};
+use crate::coordinator::costs::{BlockCosts, ComputeCosts, MoEKind, Strategy, TopoCosts};
+use crate::coordinator::schedule::{
+    backbone_time, build_pair_schedule_auto, build_pair_schedule_topo,
+};
 use crate::coordinator::timeline;
 use crate::util::cli::Args;
 use crate::util::stats::fmt_secs;
@@ -16,6 +18,14 @@ pub fn proxy_costs(scenario: Scenario) -> BlockCosts {
     let base = ComputeCosts::swin_proxy();
     let topo = scenario.topology();
     BlockCosts::from_topology(&base, &topo, 4096, 384, 1.25)
+}
+
+/// SwinV2-MoE-S proxy on the topology-aware fleet model: per-device
+/// compute durations + per-link All-to-All phases for the full preset.
+pub fn topo_proxy_costs(scenario: Scenario) -> TopoCosts {
+    let base = ComputeCosts::swin_proxy();
+    let topo = scenario.topology();
+    TopoCosts::from_topology(&base, &topo, 4096, 384, 1.25)
 }
 
 /// GPT2-MoE-Medium proxy (Table 3/4 workload): d_model = 1024 tokens
@@ -39,7 +49,13 @@ pub fn gpt_proxy_costs(scenario: Scenario) -> BlockCosts {
 /// GPT3-MoE-XL proxy (Table 4): d_model = 2048 (8 KB tokens), heavier
 /// experts; comm ≈ 33% of MoE time on NVLink at this payload.
 pub fn xl_proxy_costs(scenario: Scenario) -> BlockCosts {
-    let base = ComputeCosts {
+    let base = xl_compute_costs();
+    let topo = scenario.topology();
+    BlockCosts::from_topology(&base, &topo, 640, 8192, 2.0)
+}
+
+fn xl_compute_costs() -> ComputeCosts {
+    ComputeCosts {
         attn: 1.40e-3,
         mlp: 1.20e-3,
         se: 1.20e-3,
@@ -47,9 +63,18 @@ pub fn xl_proxy_costs(scenario: Scenario) -> BlockCosts {
         encode: 0.07e-3,
         decode: 0.07e-3,
         expert_k1: 1.40e-3,
-    };
+    }
+}
+
+/// GPT3-MoE-XL proxy on the topology-aware fleet model. The heavy 8 KB
+/// token payload makes the All-to-All phases rival the backbone window,
+/// which is where the adaptive expert slot genuinely diverges across
+/// topology presets (PCIe/2-node prefer the earliest slot; NVLink-class
+/// and heterogeneous fleets keep the post-attention slot).
+pub fn xl_topo_proxy_costs(scenario: Scenario) -> TopoCosts {
+    let base = xl_compute_costs();
     let topo = scenario.topology();
-    BlockCosts::from_topology(&base, &topo, 640, 8192, 2.0)
+    TopoCosts::from_topology(&base, &topo, 640, 8192, 2.0)
 }
 
 /// Training-iteration costs: forward + backward. Backward roughly doubles
@@ -136,6 +161,40 @@ pub fn fig8(_args: &Args) -> Result<()> {
         let ov = overlap_fraction(&c, MoEKind::ScMoE { k: 1 }, Strategy::Overlap);
         println!("ScMoE overlap fraction: {:.0}%", ov * 100.0);
     }
+    Ok(())
+}
+
+/// Topology-aware fleet report: for every preset (including the extended
+/// multi-node IB and heterogeneous topologies), simulate the whole device
+/// fleet and compare the sequential top-2 baseline against the ScMoE
+/// overlap with its per-topology adaptive expert slot.
+pub fn topo_report(args: &Args) -> Result<()> {
+    let width = args.usize_or("width", 0);
+    let workloads: [(&str, fn(Scenario) -> TopoCosts); 2] = [
+        ("SwinV2 proxy", topo_proxy_costs),
+        ("GPT3-XL proxy", xl_topo_proxy_costs),
+    ];
+    for (wname, costs_of) in workloads {
+        println!("== topology-aware fleet schedules ({wname}) ==");
+        println!("{:<18} {:>4} {:>6} {:>12} {:>12} {:>8} {:>6}",
+                 "preset", "dev", "nodes", "top2-seq", "scmoe-ovl", "speedup", "slot");
+        for sc in Scenario::extended() {
+            let tc = costs_of(sc);
+            let base = build_pair_schedule_topo(
+                &tc, MoEKind::Standard { k: 2 }, Strategy::Sequential, 0).makespan();
+            let kind = MoEKind::ScMoE { k: 1 };
+            let (slot, overlap) = choose_expert_slot_topo(&tc, kind, Strategy::Overlap);
+            println!("{:<18} {:>4} {:>6} {:>12} {:>12} {:>7.2}x {:>6}",
+                     sc.label(), tc.n_devices(), tc.n_nodes(),
+                     fmt_secs(base), fmt_secs(overlap), base / overlap, slot + 1);
+            if width > 0 {
+                let s = build_pair_schedule_topo(&tc, kind, Strategy::Overlap, slot);
+                print!("{}", timeline::render(&s.run(), width));
+            }
+        }
+        println!();
+    }
+    println!("slot = adaptive expert location (1..4, Eq. 11) chosen per topology");
     Ok(())
 }
 

@@ -24,6 +24,7 @@ pub fn run(exp: &str, args: &Args) -> Result<()> {
         "speedups" | "table2-speedup" | "table3-speedup" | "table4-speedup" => {
             efficiency::speedup_tables(args)
         }
+        "topo" | "fleet" => efficiency::topo_report(args),
         "fig10" => offload_report::fig10(args),
         "table1" => quality::table1(args),
         "table2" => quality::table_archs(args, &["top2", "top1", "shared", "scmoe"], "table2"),

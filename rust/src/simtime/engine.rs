@@ -6,12 +6,20 @@ pub type TaskId = usize;
 
 /// Execution resource. Each resource executes at most one task at a time;
 /// tasks queued on the same resource run in global readiness order.
+///
+/// Multi-device schedules use one `Compute`/`Comm` pair per modeled device
+/// plus one `Link` per node for the shared inter-node fabric, so All-to-All
+/// phases crossing the node boundary contend on the node's uplink while
+/// intra-node phases run on the per-device comm streams.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Resource {
     /// The device's compute stream (kernels are serialized here).
     Compute(usize),
     /// The device's communication stream (overlaps compute).
     Comm(usize),
+    /// A node's shared inter-node uplink (IB/Ethernet fabric): all
+    /// node-crossing All-to-All phases of that node serialize here.
+    Link(usize),
     /// Host-to-device transfer engine (expert offloading migrations).
     H2D(usize),
     /// Unlimited: bookkeeping tasks that consume time but no stream.

@@ -7,7 +7,13 @@
 //! compute. Tasks form a DAG; the engine performs resource-constrained list
 //! scheduling with deterministic tie-breaking, returning per-task spans that
 //! the timeline renderer and the experiment harness consume.
+//!
+//! Multi-device, topology-aware schedules instantiate one compute/comm
+//! stream pair per modeled device plus one shared [`Resource::Link`] per
+//! node, so the MoNTA-style intra-node vs. inter-node All-to-All phase
+//! decomposition (see `cluster::interconnect::a2a_decompose`) maps onto
+//! genuinely contended simulation resources.
 
 pub mod engine;
 
-pub use engine::{Resource, Sim, Span, TaskId, TaskSpec};
+pub use engine::{makespan, Resource, Sim, Span, TaskId, TaskSpec};

@@ -1,0 +1,177 @@
+//! Golden-timeline regression: every MoEKind × Strategy combination in
+//! `coordinator::schedule` is pinned as a span-order + makespan snapshot
+//! (rust/tests/golden/timelines.txt), so schedule refactors cannot
+//! silently reorder the Fig. 6 timelines.
+//!
+//! Costs are dyadic rationals (exact in binary floating point), so every
+//! start/makespan formats exactly at six decimals and comparisons are
+//! deterministic across platforms.
+
+use scmoe::coordinator::costs::{BlockCosts, MoEKind, Strategy, TopoCosts};
+use scmoe::coordinator::schedule::{
+    build_pair_schedule, build_pair_schedule_topo, PairSchedule,
+};
+use scmoe::simtime::Resource;
+
+const GOLDEN: &str = include_str!("golden/timelines.txt");
+
+fn dyadic_costs() -> BlockCosts {
+    BlockCosts {
+        attn: 1.0,
+        mlp: 0.75,
+        se: 0.75,
+        gate: 0.0625,
+        encode: 0.0625,
+        decode: 0.0625,
+        expert_k1: 0.5,
+        a2a_k1: 0.8125,
+    }
+}
+
+/// 2 nodes × 2 devices; node 1 runs every compute op 2x slower.
+fn dyadic_fleet() -> TopoCosts {
+    let fast = dyadic_costs();
+    let mut slow = dyadic_costs();
+    slow.attn *= 2.0;
+    slow.mlp *= 2.0;
+    slow.se *= 2.0;
+    slow.gate *= 2.0;
+    slow.encode *= 2.0;
+    slow.decode *= 2.0;
+    slow.expert_k1 *= 2.0;
+    TopoCosts {
+        per_device: vec![fast.clone(), fast, slow.clone(), slow],
+        a2a_intra_k1: vec![0.25; 4],
+        a2a_inter_k1: vec![0.5; 2],
+        devices_per_node: 2,
+    }
+}
+
+fn resource_token(r: Resource) -> String {
+    match r {
+        Resource::Compute(d) => format!("c{d}"),
+        Resource::Comm(d) => format!("m{d}"),
+        Resource::Link(n) => format!("l{n}"),
+        Resource::H2D(d) => format!("h{d}"),
+        Resource::Free => "f".into(),
+    }
+}
+
+fn render_line(name: &str, sched: &PairSchedule) -> String {
+    let mut spans = sched.run();
+    let makespan = spans.iter().fold(0.0f64, |m, s| m.max(s.end));
+    spans.sort_by(|a, b| {
+        a.start.partial_cmp(&b.start).unwrap().then(a.id.cmp(&b.id))
+    });
+    let toks: Vec<String> = spans
+        .iter()
+        .map(|s| format!("{}@{}@{:.6}", s.label, resource_token(s.resource), s.start))
+        .collect();
+    format!("{name} | makespan {makespan:.6} | {}", toks.join(" "))
+}
+
+fn generate_lines() -> Vec<String> {
+    let c = dyadic_costs();
+    let mut lines = Vec::new();
+    let kinds = [
+        MoEKind::Standard { k: 1 },
+        MoEKind::Standard { k: 2 },
+        MoEKind::Standard { k: 3 },
+        MoEKind::SharedExpert,
+        MoEKind::ScMoE { k: 1 },
+        MoEKind::ScMoE { k: 2 },
+    ];
+    for kind in kinds {
+        let strategies: Vec<Strategy> = match kind {
+            MoEKind::Standard { .. } => vec![
+                Strategy::Sequential,
+                Strategy::Pipelined { chunks: 2 },
+                Strategy::Pipelined { chunks: 4 },
+            ],
+            MoEKind::SharedExpert => vec![
+                Strategy::Sequential,
+                Strategy::Pipelined { chunks: 1 },
+                Strategy::Pipelined { chunks: 2 },
+            ],
+            MoEKind::ScMoE { .. } => vec![
+                Strategy::Sequential,
+                Strategy::Pipelined { chunks: 2 },
+            ],
+        };
+        for strategy in strategies {
+            let name = format!("{}/{}", kind.label(), strategy.label());
+            lines.push(render_line(&name, &build_pair_schedule(&c, kind, strategy, 0)));
+        }
+        if matches!(kind, MoEKind::ScMoE { .. }) {
+            for slot in 0..4 {
+                let s = build_pair_schedule(&c, kind, Strategy::Overlap, slot);
+                lines.push(render_line(
+                    &format!("{}/overlap-s{slot}", kind.label()), &s));
+            }
+            for slot in 0..4 {
+                let s = build_pair_schedule(
+                    &c, kind, Strategy::OverlapPipelined { chunks: 2 }, slot);
+                lines.push(render_line(
+                    &format!("{}/overlap+pipe2-s{slot}", kind.label()), &s));
+            }
+        }
+    }
+
+    let tf = dyadic_fleet();
+    lines.push(render_line(
+        "fleet:Top2/seq",
+        &build_pair_schedule_topo(&tf, MoEKind::Standard { k: 2 },
+                                  Strategy::Sequential, 0)));
+    lines.push(render_line(
+        "fleet:Top2/pipe2",
+        &build_pair_schedule_topo(&tf, MoEKind::Standard { k: 2 },
+                                  Strategy::Pipelined { chunks: 2 }, 0)));
+    for slot in 0..4 {
+        lines.push(render_line(
+            &format!("fleet:ScMoE/overlap-s{slot}"),
+            &build_pair_schedule_topo(&tf, MoEKind::ScMoE { k: 1 },
+                                      Strategy::Overlap, slot)));
+    }
+    lines
+}
+
+#[test]
+fn timelines_match_golden_snapshots() {
+    let golden: Vec<&str> = GOLDEN
+        .lines()
+        .filter(|l| !l.starts_with('#') && !l.trim().is_empty())
+        .collect();
+    let current = generate_lines();
+    assert_eq!(
+        golden.len(),
+        current.len(),
+        "golden has {} lines, current build produces {} — regenerate \
+         rust/tests/golden/timelines.txt deliberately if the config set changed",
+        golden.len(),
+        current.len()
+    );
+    let mut diffs = Vec::new();
+    for (g, c) in golden.iter().zip(&current) {
+        if g != c {
+            diffs.push(format!("- {g}\n+ {c}"));
+        }
+    }
+    assert!(
+        diffs.is_empty(),
+        "{} timeline(s) drifted from the golden snapshots:\n{}",
+        diffs.len(),
+        diffs.join("\n")
+    );
+}
+
+#[test]
+fn golden_file_covers_every_kind_and_strategy() {
+    // meta-test: the snapshot corpus really spans the full matrix
+    for needle in [
+        "Top1/", "Top2/", "Top3/", "Top1+SE1/", "ScMoE/", "ScMoE-2/",
+        "/seq", "/pipe1", "/pipe2", "/pipe4", "/overlap-s0", "/overlap-s3",
+        "/overlap+pipe2-s0", "fleet:",
+    ] {
+        assert!(GOLDEN.contains(needle), "golden corpus is missing {needle}");
+    }
+}

@@ -1,0 +1,199 @@
+//! Round-trip tests for the MoE data plane: `decode(encode(x))` identity
+//! under no-drop capacity, and exact dropped-token accounting when
+//! capacity binds in `moe::dispatch` / `moe::router`.
+
+use scmoe::moe::{decode, encode, RoutingTable};
+use scmoe::util::propcheck::{check, gen};
+use scmoe::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// decode ∘ encode identity under no-drop capacity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn roundtrip_identity_k1_unit_weights_is_bitwise() {
+    // k = 1, weight 1.0, ample capacity: decode(encode(x)) must return x
+    // exactly (the copies are unscaled f32 moves, not arithmetic).
+    let (t, e, d) = (16usize, 4usize, 8usize);
+    let idx: Vec<i32> = (0..t).map(|i| (i % e) as i32).collect();
+    let w = vec![1.0f32; t];
+    let table = RoutingTable::build(&idx, &w, t, 1, e, t);
+    let tokens: Vec<f32> = (0..t * d).map(|i| (i as f32).sin()).collect();
+    let enc = encode(&table, &tokens, d);
+    let dec = decode(&table, &enc, d);
+    assert_eq!(dec, tokens, "k=1 unit-weight roundtrip must be bit-exact");
+    assert_eq!(table.dropped, 0);
+}
+
+#[test]
+fn prop_roundtrip_identity_under_no_drop() {
+    // Random top-k routing with per-token weights summing to 1 and ample
+    // capacity: identity experts make decode(encode(x)) recover x.
+    check("dataplane-roundtrip", 150, |r| gen::routing(r), |input| {
+        let (idx, w, t, k, e) = input;
+        let d = 6usize;
+        let table = RoutingTable::build(idx, w, *t, *k, *e, t * k);
+        if table.dropped != 0 {
+            return Err("ample capacity must never drop".into());
+        }
+        let mut rng = Rng::new(0xDA7A);
+        let tokens: Vec<f32> = (0..t * d).map(|_| rng.next_f32() - 0.5).collect();
+        let enc = encode(&table, &tokens, d);
+        let dec = decode(&table, &enc, d);
+        for (i, (a, b)) in dec.iter().zip(&tokens).enumerate() {
+            if (a - b).abs() > 1e-4 {
+                return Err(format!("elem {i}: {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn encode_buffer_layout_and_padding() {
+    // unused capacity slots stay zero after encode
+    let idx = vec![0, 1];
+    let w = vec![1.0f32, 1.0];
+    let table = RoutingTable::build(&idx, &w, 2, 1, 2, 3);
+    let tokens = vec![1.0f32, 2.0, 3.0, 4.0];
+    let enc = encode(&table, &tokens, 2);
+    assert_eq!(enc.len(), 2 * 3 * 2);
+    assert_eq!(&enc[0..2], &[1.0, 2.0]); // expert0 slot0 = token0
+    assert_eq!(&enc[2..6], &[0.0; 4]);   // expert0 slots 1..3 padded
+    assert_eq!(&enc[6..8], &[3.0, 4.0]); // expert1 slot0 = token1
+    assert_eq!(&enc[8..12], &[0.0; 4]);
+}
+
+// ---------------------------------------------------------------------------
+// Exact dropped-token accounting when capacity binds
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fcfs_drop_accounting_is_exact() {
+    // 6 tokens all routed to expert 0 with capacity 2: tokens 0 and 1 keep
+    // their slots (FCFS), tokens 2..6 drop.
+    let t = 6usize;
+    let idx = vec![0i32; t];
+    let w = vec![1.0f32; t];
+    let table = RoutingTable::build(&idx, &w, t, 1, 2, 2);
+    assert_eq!(table.kept(), 2);
+    assert_eq!(table.dropped, 4);
+    assert_eq!(table.demand, vec![6, 0]);
+    assert_eq!(table.load, vec![2, 0]);
+
+    let d = 3usize;
+    let tokens: Vec<f32> = (0..t * d).map(|i| i as f32 + 1.0).collect();
+    let enc = encode(&table, &tokens, d);
+    let dec = decode(&table, &enc, d);
+    // kept tokens round-trip exactly; dropped tokens decode to exact zeros
+    assert_eq!(&dec[0..2 * d], &tokens[0..2 * d]);
+    assert_eq!(&dec[2 * d..], &vec![0.0f32; 4 * d][..]);
+}
+
+#[test]
+fn partial_drop_keeps_surviving_route_weights() {
+    // token0 -> (e0 w=0.5, e1 w=0.5); token1 -> (e0 w=0.3, e2 w=0.7).
+    // Capacity 1: token1's e0 route drops behind token0 (FCFS); its e2
+    // route survives, so token1 decodes to exactly the surviving 0.7 * x.
+    let idx = vec![0, 1, 0, 2];
+    let w = vec![0.5f32, 0.5, 0.3, 0.7];
+    let table = RoutingTable::build(&idx, &w, 2, 2, 3, 1);
+    assert_eq!(table.kept(), 3);
+    assert_eq!(table.dropped, 1);
+    assert_eq!(table.load, vec![1, 1, 1]);
+
+    let d = 2usize;
+    let tokens = vec![10.0f32, 20.0, 30.0, 40.0];
+    let enc = encode(&table, &tokens, d);
+    let dec = decode(&table, &enc, d);
+    // token0 keeps both routes: 0.5*x + 0.5*x = x (within f32 rounding)
+    assert!((dec[0] - 10.0).abs() < 1e-4 && (dec[1] - 20.0).abs() < 1e-4);
+    // token1 keeps only the 0.7 route: first-write path stores 0.7*x exactly
+    assert_eq!(&dec[2..4], &[0.7 * 30.0, 0.7 * 40.0]);
+}
+
+#[test]
+fn prop_drop_accounting_under_tight_capacity() {
+    // With any capacity, FCFS guarantees load[e] == min(demand[e], cap),
+    // kept == sum(load), dropped == demand - kept, and slots stay unique.
+    check("dataplane-drop-accounting", 150, |r| {
+        let (idx, w, t, k, e) = gen::routing(r);
+        let cap = 1 + r.below(3); // deliberately binding
+        (idx, w, t, k, e, cap)
+    }, |input| {
+        let (idx, w, t, k, e, cap) = input;
+        let table = RoutingTable::build(idx, w, *t, *k, *e, *cap);
+        for (ex, (&demand, &load)) in
+            table.demand.iter().zip(&table.load).enumerate()
+        {
+            if load != demand.min(*cap) {
+                return Err(format!(
+                    "expert {ex}: load {load} != min(demand {demand}, cap {cap})"
+                ));
+            }
+        }
+        let kept: usize = table.load.iter().sum();
+        if table.kept() != kept {
+            return Err("kept() disagrees with load histogram".into());
+        }
+        if table.kept() + table.dropped != t * k {
+            return Err(format!(
+                "kept {} + dropped {} != demand {}",
+                table.kept(), table.dropped, t * k
+            ));
+        }
+        let mut seen = std::collections::HashSet::new();
+        for route in &table.routes {
+            if route.slot >= *cap {
+                return Err(format!("slot {} beyond capacity {cap}", route.slot));
+            }
+            if !seen.insert((route.expert, route.slot)) {
+                return Err("slot collision".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dropped_tokens_decode_to_exact_zeros() {
+    check("dataplane-dropped-zeros", 100, |r| {
+        let (idx, w, t, k, e) = gen::routing(r);
+        let cap = 1 + r.below(2);
+        (idx, w, t, k, e, cap)
+    }, |input| {
+        let (idx, w, t, k, e, cap) = input;
+        let d = 4usize;
+        let table = RoutingTable::build(idx, w, *t, *k, *e, *cap);
+        let mut rng = Rng::new(7);
+        let tokens: Vec<f32> = (0..t * d).map(|_| rng.next_f32() + 1.0).collect();
+        let enc = encode(&table, &tokens, d);
+        let dec = decode(&table, &enc, d);
+        let mut has_route = vec![false; *t];
+        for route in &table.routes {
+            has_route[route.token] = true;
+        }
+        for (tok, &alive) in has_route.iter().enumerate() {
+            let row = &dec[tok * d..(tok + 1) * d];
+            if !alive && row.iter().any(|&v| v != 0.0) {
+                return Err(format!("dropped token {tok} decoded non-zero {row:?}"));
+            }
+            if alive && row.iter().all(|&v| v == 0.0) {
+                return Err(format!("routed token {tok} decoded to zeros"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn a2a_bytes_conserved_under_drops() {
+    // the byte matrix counts exactly the kept routes
+    let idx = vec![0i32; 8];
+    let w = vec![1.0f32; 8];
+    let table = RoutingTable::build(&idx, &w, 8, 1, 4, 3);
+    assert_eq!(table.kept(), 3);
+    let m = table.a2a_bytes(4, 100);
+    let total: usize = m.iter().sum();
+    assert_eq!(total, 3 * 100);
+}

@@ -1,0 +1,321 @@
+//! Property tests for the DES engine over random task DAGs, plus the
+//! exact single-device reduction of the topology-aware builders:
+//!
+//! - no two spans ever overlap on an exclusive resource;
+//! - every task starts after all of its dependencies finish;
+//! - the pair-schedule makespan is monotone non-decreasing in every
+//!   operator cost (builder-level monotonicity — see
+//!   `graham_anomaly_on_arbitrary_dags` for why arbitrary DAGs are
+//!   deliberately excluded from this claim);
+//! - topology-aware schedules with one modeled device reproduce the
+//!   legacy single-device schedules bit-exactly (same spans, same
+//!   makespan — not within a tolerance).
+
+use scmoe::coordinator::costs::{BlockCosts, MoEKind, Strategy, TopoCosts};
+use scmoe::coordinator::schedule::{build_pair_schedule, build_pair_schedule_topo};
+use scmoe::simtime::{Resource, Sim};
+use scmoe::util::propcheck::{check, gen};
+use scmoe::util::rng::Rng;
+
+/// One generated task: (resource, duration, deps).
+type DagSpec = Vec<(Resource, f64, Vec<usize>)>;
+
+fn rand_resource(rng: &mut Rng) -> Resource {
+    match rng.below(7) {
+        0 | 1 => Resource::Compute(rng.below(3)),
+        2 | 3 => Resource::Comm(rng.below(2)),
+        4 => Resource::Link(rng.below(2)),
+        5 => Resource::H2D(0),
+        _ => Resource::Free,
+    }
+}
+
+/// Random DAG + a perturbation target: (tasks, target index, extra duration).
+fn rand_dag(rng: &mut Rng) -> (DagSpec, usize, f64) {
+    let n = gen::usize_in(rng, 5, 40);
+    let mut tasks = Vec::with_capacity(n);
+    for i in 0..n {
+        let resource = rand_resource(rng);
+        let duration = gen::f64_in(rng, 0.0, 2.0);
+        let mut deps: Vec<usize> = Vec::new();
+        if i > 0 {
+            let n_deps = rng.below(3.min(i) + 1);
+            for _ in 0..n_deps {
+                let d = rng.below(i);
+                if !deps.contains(&d) {
+                    deps.push(d);
+                }
+            }
+        }
+        tasks.push((resource, duration, deps));
+    }
+    let target = rng.below(n);
+    let delta = gen::f64_in(rng, 0.1, 1.5);
+    (tasks, target, delta)
+}
+
+fn build(tasks: &DagSpec) -> Sim {
+    let mut sim = Sim::new();
+    for (i, (resource, duration, deps)) in tasks.iter().enumerate() {
+        sim.add(format!("t{i}"), *resource, *duration, deps);
+    }
+    sim
+}
+
+#[test]
+fn prop_exclusive_resources_never_overlap() {
+    check("exclusive-no-overlap", 200, rand_dag, |(tasks, _, _)| {
+        let spans = build(tasks).run();
+        let mut by_resource: std::collections::BTreeMap<Resource, Vec<(f64, f64)>> =
+            std::collections::BTreeMap::new();
+        for s in &spans {
+            if !matches!(s.resource, Resource::Free) {
+                by_resource.entry(s.resource).or_default().push((s.start, s.end));
+            }
+        }
+        for (res, mut intervals) in by_resource {
+            intervals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for w in intervals.windows(2) {
+                if w[1].0 < w[0].1 - 1e-12 {
+                    return Err(format!(
+                        "{res:?}: [{:.6}, {:.6}] overlaps [{:.6}, {:.6}]",
+                        w[0].0, w[0].1, w[1].0, w[1].1
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// List scheduling with global readiness-order dispatch is NOT monotone in
+/// task durations on arbitrary DAGs (Graham's scheduling anomalies):
+/// lengthening a predecessor can flip the dispatch order on a contended
+/// resource and *shorten* the makespan. This construction pins the
+/// behavior so nobody "fixes" a monotonicity test by accident: P delays A
+/// past B's readiness, letting B's long downstream chain start 9.5 units
+/// earlier.
+#[test]
+fn graham_anomaly_on_arbitrary_dags() {
+    let makespan_with_p = |p: f64| {
+        let mut sim = Sim::new();
+        let pp = sim.add("P", Resource::Compute(1), p, &[]);
+        let q = sim.add("Q", Resource::Free, 0.5, &[]);
+        let _a = sim.add("A", Resource::Compute(0), 10.0, &[pp]);
+        let b = sim.add("B", Resource::Compute(0), 1.0, &[q]);
+        let _c = sim.add("C", Resource::Comm(0), 20.0, &[b]);
+        sim.makespan()
+    };
+    assert_eq!(makespan_with_p(0.0), 31.0);
+    assert_eq!(makespan_with_p(2.0), 21.5); // longer P, shorter makespan
+}
+
+const COST_FIELDS: usize = 8;
+
+fn bump_field(c: &BlockCosts, field: usize, delta: f64) -> BlockCosts {
+    let mut c = c.clone();
+    match field {
+        0 => c.attn += delta,
+        1 => c.mlp += delta,
+        2 => c.se += delta,
+        3 => c.gate += delta,
+        4 => c.encode += delta,
+        5 => c.decode += delta,
+        6 => c.expert_k1 += delta,
+        _ => c.a2a_k1 += delta,
+    }
+    c
+}
+
+fn monotone_configs() -> Vec<(MoEKind, Strategy, usize)> {
+    let mut out = Vec::new();
+    for kind in [
+        MoEKind::Standard { k: 1 },
+        MoEKind::Standard { k: 2 },
+        MoEKind::Standard { k: 3 },
+        MoEKind::SharedExpert,
+        MoEKind::ScMoE { k: 1 },
+        MoEKind::ScMoE { k: 2 },
+    ] {
+        out.push((kind, Strategy::Sequential, 0));
+        out.push((kind, Strategy::Pipelined { chunks: 2 }, 0));
+        if matches!(kind, MoEKind::ScMoE { .. }) {
+            for slot in 0..4 {
+                out.push((kind, Strategy::Overlap, slot));
+                out.push((kind, Strategy::OverlapPipelined { chunks: 2 }, slot));
+            }
+        }
+    }
+    out
+}
+
+/// The schedules we actually build ARE monotone: making any operator more
+/// expensive never shrinks any architecture × strategy makespan.
+#[test]
+fn prop_pair_makespan_monotone_in_every_op_cost() {
+    check("pair-monotone", 120, |rng| {
+        let c = rand_costs(rng);
+        let field = rng.below(COST_FIELDS);
+        let delta = gen::f64_in(rng, 0.05, 1.0);
+        (c, field, delta)
+    }, |(c, field, delta)| {
+        let bumped = bump_field(c, *field, *delta);
+        for (kind, strategy, slot) in monotone_configs() {
+            let before = build_pair_schedule(c, kind, strategy, slot).makespan();
+            let after = build_pair_schedule(&bumped, kind, strategy, slot).makespan();
+            if after < before - 1e-9 {
+                return Err(format!(
+                    "{kind:?}/{strategy:?} slot {slot}: bumping field {field} \
+                     by {delta:.4} shrank {before:.6} -> {after:.6}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Fleet-level monotonicity: slowing one device's compute or one
+/// device's intra-node A2A phase never shrinks the fleet makespan.
+#[test]
+fn prop_topo_fleet_makespan_monotone() {
+    check("topo-monotone", 120, |rng| {
+        let c = rand_costs(rng);
+        let field = rng.below(COST_FIELDS);
+        let delta = gen::f64_in(rng, 0.05, 1.0);
+        let inter = gen::f64_in(rng, 0.0, 2.0);
+        let dev = rng.below(4);
+        (c, field, delta, inter, dev)
+    }, |(c, field, delta, inter, dev)| {
+        let base = TopoCosts {
+            per_device: vec![c.clone(); 4],
+            a2a_intra_k1: vec![c.a2a_k1; 4],
+            a2a_inter_k1: vec![*inter; 2],
+            devices_per_node: 2,
+        };
+        let mut bumped = base.clone();
+        if *field < 7 {
+            let slowed = bump_field(&base.per_device[*dev], *field, *delta);
+            bumped.per_device[*dev] = slowed;
+        } else {
+            bumped.a2a_intra_k1[*dev] += *delta;
+        }
+        for (kind, strategy, slot) in monotone_configs() {
+            let before = build_pair_schedule_topo(&base, kind, strategy, slot).makespan();
+            let after = build_pair_schedule_topo(&bumped, kind, strategy, slot).makespan();
+            if after < before - 1e-9 {
+                return Err(format!(
+                    "{kind:?}/{strategy:?} slot {slot}: device {dev} field {field} \
+                     +{delta:.4} shrank the fleet makespan {before:.6} -> {after:.6}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_every_task_scheduled_after_deps() {
+    check("deps-respected", 100, rand_dag, |(tasks, _, _)| {
+        let spans = build(tasks).run();
+        for (i, (_, _, deps)) in tasks.iter().enumerate() {
+            for &d in deps {
+                if spans[i].start < spans[d].end - 1e-12 {
+                    return Err(format!(
+                        "task {i} starts {:.6} before dep {d} ends {:.6}",
+                        spans[i].start, spans[d].end
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn link_resource_serializes_within_node_only() {
+    let mut sim = Sim::new();
+    sim.add("x0", Resource::Link(0), 2.0, &[]);
+    sim.add("x1", Resource::Link(0), 2.0, &[]);
+    sim.add("y0", Resource::Link(1), 2.0, &[]);
+    let spans = sim.run();
+    // same link serializes; the other node's link runs concurrently
+    assert_eq!(spans[0].end, 2.0);
+    assert_eq!(spans[1].start, 2.0);
+    assert_eq!(spans[2].start, 0.0);
+    assert_eq!(sim.makespan(), 4.0);
+}
+
+// ---------------------------------------------------------------------------
+// Exact N=1 reduction of the topology-aware builders
+// ---------------------------------------------------------------------------
+
+fn rand_costs(rng: &mut Rng) -> BlockCosts {
+    BlockCosts {
+        attn: gen::f64_in(rng, 0.1, 2.0),
+        mlp: gen::f64_in(rng, 0.1, 2.0),
+        se: gen::f64_in(rng, 0.1, 2.0),
+        gate: gen::f64_in(rng, 0.01, 0.2),
+        encode: gen::f64_in(rng, 0.01, 0.2),
+        decode: gen::f64_in(rng, 0.01, 0.2),
+        expert_k1: gen::f64_in(rng, 0.1, 2.0),
+        a2a_k1: gen::f64_in(rng, 0.0, 3.0),
+    }
+}
+
+fn assert_identical(c: &BlockCosts, tc: &TopoCosts, kind: MoEKind,
+                    strategy: Strategy, slot: usize) -> Result<(), String> {
+    let legacy = build_pair_schedule(c, kind, strategy, slot);
+    let topo = build_pair_schedule_topo(tc, kind, strategy, slot);
+    let (ls, ts) = (legacy.run(), topo.run());
+    if ls.len() != ts.len() {
+        return Err(format!("{kind:?}/{strategy:?}: {} vs {} spans",
+                           ls.len(), ts.len()));
+    }
+    for (a, b) in ls.iter().zip(&ts) {
+        // bit-exact: same graph, same arithmetic — not a tolerance check
+        if a.label != b.label || a.resource != b.resource
+            || a.start != b.start || a.end != b.end
+        {
+            return Err(format!(
+                "{kind:?}/{strategy:?} slot {slot}: span {:?}@{}..{} vs {:?}@{}..{}",
+                a.label, a.start, a.end, b.label, b.start, b.end
+            ));
+        }
+    }
+    if legacy.makespan() != topo.makespan() {
+        return Err(format!("{kind:?}/{strategy:?}: makespan drifted"));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_topo_one_device_reduces_to_legacy_bit_exactly() {
+    check("topo-n1-exact", 100, rand_costs, |c| {
+        let tc = TopoCosts::from_block(c);
+        let kinds = [
+            MoEKind::Standard { k: 1 },
+            MoEKind::Standard { k: 2 },
+            MoEKind::Standard { k: 3 },
+            MoEKind::SharedExpert,
+            MoEKind::ScMoE { k: 1 },
+            MoEKind::ScMoE { k: 2 },
+        ];
+        for kind in kinds {
+            for strategy in [
+                Strategy::Sequential,
+                Strategy::Pipelined { chunks: 2 },
+                Strategy::Pipelined { chunks: 4 },
+            ] {
+                assert_identical(c, &tc, kind, strategy, 0)?;
+            }
+            if matches!(kind, MoEKind::ScMoE { .. }) {
+                for slot in 0..4 {
+                    assert_identical(c, &tc, kind, Strategy::Overlap, slot)?;
+                    assert_identical(c, &tc, kind,
+                                     Strategy::OverlapPipelined { chunks: 3 }, slot)?;
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,259 @@
+//! Offline stub of the XLA/PJRT bindings used by the `scmoe` runtime layer.
+//!
+//! The real backend links `xla_extension` (PJRT CPU plugin), which is not
+//! available in this build environment. This stub keeps the exact API
+//! surface the runtime uses so the crate compiles and unit tests run;
+//! `PjRtClient::cpu()` returns an error, and every artifact-gated test,
+//! example, and subcommand that would need a real client skips cleanly
+//! (they all check for compiled artifacts before constructing the engine).
+//!
+//! Host-side `Literal` containers are fully functional (shape + dtype +
+//! bytes), so tensor round-trip code paths work without a backend.
+
+use std::fmt;
+
+/// Error type for all stub operations; implements `std::error::Error` so
+/// `?` conversion into `anyhow::Error` works unchanged.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+
+    fn backend_unavailable(what: &str) -> Error {
+        Error::new(format!(
+            "xla backend unavailable in this build ({what}); \
+             link the real PJRT bindings to execute artifacts"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla::Error({})", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// XLA primitive types used on the host boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    F32,
+    S32,
+    U32,
+}
+
+impl PrimitiveType {
+    fn element_type(self) -> ElementType {
+        match self {
+            PrimitiveType::F32 => ElementType::F32,
+            PrimitiveType::S32 => ElementType::S32,
+            PrimitiveType::U32 => ElementType::U32,
+        }
+    }
+
+    fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// Element types as reported by literal shapes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    U32,
+    Pred,
+}
+
+/// Scalar types that can cross the literal boundary.
+pub trait NativeType: Copy + Default {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+impl NativeType for u32 {}
+
+/// Array shape metadata of a literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// A host-side array literal (shape + dtype + raw little-endian bytes).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: PrimitiveType,
+    dims: Vec<usize>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    /// Allocate a zero-initialized literal of the given shape.
+    pub fn create_from_shape(ty: PrimitiveType, dims: &[usize]) -> Literal {
+        let n: usize = dims.iter().product();
+        Literal {
+            ty,
+            dims: dims.to_vec(),
+            bytes: vec![0u8; n * ty.size_bytes()],
+        }
+    }
+
+    /// Copy a raw host buffer into the literal (sizes must match).
+    pub fn copy_raw_from<T: NativeType>(&mut self, src: &[T]) -> Result<()> {
+        let want = self.bytes.len();
+        let got = std::mem::size_of_val(src);
+        if want != got {
+            return Err(Error::new(format!(
+                "copy_raw_from size mismatch: literal {want} bytes, source {got} bytes"
+            )));
+        }
+        // SAFETY: NativeType is only implemented for plain-old-data scalars;
+        // the byte lengths were checked above.
+        let raw = unsafe { std::slice::from_raw_parts(src.as_ptr() as *const u8, got) };
+        self.bytes.copy_from_slice(raw);
+        Ok(())
+    }
+
+    /// Read the literal back as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        let elem = std::mem::size_of::<T>();
+        if elem == 0 || self.bytes.len() % elem != 0 {
+            return Err(Error::new("to_vec: element size does not divide buffer"));
+        }
+        let n = self.bytes.len() / elem;
+        let mut out = vec![T::default(); n];
+        // SAFETY: NativeType scalars are plain old data; lengths match.
+        let raw =
+            unsafe { std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, self.bytes.len()) };
+        raw.copy_from_slice(&self.bytes);
+        Ok(out)
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape {
+            dims: self.dims.iter().map(|&d| d as i64).collect(),
+            ty: self.ty.element_type(),
+        })
+    }
+
+    /// Decompose a tuple literal. Stub literals are never tuples.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::backend_unavailable("tuple literals"))
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::backend_unavailable("HLO text parsing"))
+    }
+}
+
+/// An XLA computation handle (opaque in the stub).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device buffer returned by executions.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::backend_unavailable("buffer download"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::backend_unavailable("execution"))
+    }
+}
+
+/// PJRT client handle. The stub cannot construct one.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::backend_unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::backend_unavailable("compilation"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_fails_gracefully() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("unavailable"));
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let mut l = Literal::create_from_shape(PrimitiveType::F32, &[2, 3]);
+        let data = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        l.copy_raw_from(&data).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), data);
+        let shape = l.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+        assert_eq!(shape.element_type(), ElementType::F32);
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let mut l = Literal::create_from_shape(PrimitiveType::S32, &[4]);
+        assert!(l.copy_raw_from(&[1i32, 2]).is_err());
+    }
+}
