@@ -5,18 +5,35 @@
 //! device of the preset gets its own compute/comm rows, inter-node
 //! All-to-All phases appear on the shared `link[n]` rows, and the adaptive
 //! slot is chosen per topology (compare presets with `--scenario`).
+//!
+//! With `--placement`, contrast *routed* All-to-All traffic under three
+//! expert placements (block, affinity-packed, imbalance-skewed) against
+//! the uniform byte-matrix model on a multi-node preset (default
+//! `--scenario 4node-ib`): affinity packing a node-affine routing drives
+//! the `link[n]` rows to zero-length phases.
 
 use scmoe::cluster::Scenario;
 use scmoe::coordinator::adaptive::{choose_expert_slot, choose_expert_slot_topo, eq11_objective};
 use scmoe::coordinator::costs::{MoEKind, Strategy};
 use scmoe::coordinator::schedule::{build_pair_schedule, build_pair_schedule_topo};
 use scmoe::coordinator::timeline;
-use scmoe::report::efficiency::{proxy_costs, topo_proxy_costs, xl_topo_proxy_costs};
+use scmoe::report::efficiency::{
+    placement_study_rows, proxy_costs, topo_proxy_costs, xl_topo_proxy_costs,
+};
 use scmoe::simtime::makespan;
 use scmoe::util::cli::Args;
 
 fn main() {
     let args = Args::from_env();
+    if args.flag("placement") {
+        let sc = Scenario::parse(&args.str_or("scenario", "4node-ib"))
+            .unwrap_or(Scenario::FourNodeA800IBx32);
+        // same defaults as `scmoe report topo`'s routed placement study so
+        // the rendered timelines match the table row for row
+        placement_mode(sc, args.usize_or("width", 110),
+                       args.usize_or("tokens", 640), args.u64_or("seed", 7));
+        return;
+    }
     let sc = Scenario::parse(&args.str_or("scenario", "pcie"))
         .unwrap_or(Scenario::PcieA30x8);
     let width = args.usize_or("width", 110);
@@ -87,4 +104,35 @@ fn fleet_mode(sc: Scenario, width: usize) {
         println!("{:<18} {:>8} {:>8} {:>12.3}ms",
                  p.label(), s_swin + 1, s_xl + 1, m_xl * 1e3);
     }
+}
+
+/// Contrast uniform vs. routed All-to-All traffic under the placement
+/// study's rows on one preset (GPT3-XL payload, node-affine routing) —
+/// the same rows `scmoe report topo` tabulates, rendered as timelines.
+fn placement_mode(sc: Scenario, width: usize, tokens_per_device: usize,
+                  seed: u64) {
+    let topo = sc.topology();
+    let kind = MoEKind::ScMoE { k: 1 };
+    println!("### {} — routed placement timelines ({} devices, {} nodes, \
+              seed {seed}) ###",
+             sc.label(), topo.n_devices, topo.n_nodes());
+    if topo.n_nodes() < 2 {
+        println!("(single-node preset: every placement is already node-local; \
+                  try --scenario 4node-ib)");
+    }
+    let rows = placement_study_rows(&topo, tokens_per_device, seed);
+    let mut makespans = Vec::new();
+    for (label, tc) in &rows {
+        let (slot, _) = choose_expert_slot_topo(tc, kind, Strategy::Overlap);
+        let spans = build_pair_schedule_topo(tc, kind, Strategy::Overlap, slot).run();
+        println!("\n--- ScMoE overlap, {label} (adaptive slot {}) ---", slot + 1);
+        print!("{}", timeline::render(&spans, width));
+        makespans.push(makespan(&spans));
+    }
+    let vs_uniform: Vec<String> = rows.iter()
+        .zip(&makespans)
+        .skip(1)
+        .map(|((label, _), m)| format!("{label} {:.2}x", makespans[0] / m))
+        .collect();
+    println!("\noverlap speedup vs uniform: {}", vs_uniform.join(" | "));
 }

@@ -10,11 +10,15 @@ pub struct LinkModel {
 }
 
 impl LinkModel {
+    /// Build a link from per-message latency `alpha` (seconds, >= 0) and
+    /// bandwidth `beta` (bytes/second, > 0).
     pub fn new(alpha: f64, beta: f64) -> LinkModel {
         assert!(alpha >= 0.0 && beta > 0.0);
         LinkModel { alpha, beta }
     }
 
+    /// Time (seconds) to move `bytes` over this link; zero bytes cost
+    /// nothing (no message is sent).
     pub fn transfer_time(&self, bytes: usize) -> f64 {
         if bytes == 0 {
             return 0.0;
@@ -52,13 +56,10 @@ impl LinkModel {
     }
 }
 
-/// Time for an All-to-All where `bytes[src * n + dst]` must move between
-/// devices, given per-device links and an optional inter-node bottleneck.
-///
-/// Cost model (congestion-free ring/pairwise-exchange):
-///   per-device send time  = α·(messages) + (bytes out)/β_intra
-///   node-crossing traffic additionally bounded by β_inter shared per node.
-/// The A2A finishes when the slowest device/node finishes.
+/// Time (seconds) for an All-to-All where `bytes[src * n + dst]` must move
+/// between devices, given one intra-node link per fleet and an optional
+/// inter-node bottleneck. Thin wrapper over [`a2a_time_per_node`] with the
+/// same link replicated on every node.
 pub fn a2a_time(
     bytes: &[usize],
     n_devices: usize,
@@ -66,9 +67,31 @@ pub fn a2a_time(
     intra: LinkModel,
     inter: Option<LinkModel>,
 ) -> f64 {
+    assert!(devices_per_node > 0 && n_devices % devices_per_node == 0);
+    let intra = vec![intra; n_devices / devices_per_node];
+    a2a_time_per_node(bytes, n_devices, devices_per_node, &intra, inter)
+}
+
+/// Time (seconds) for an All-to-All where `bytes[src * n + dst]` must move
+/// between devices, with one intra-node [`LinkModel`] *per node* (index =
+/// node id; heterogeneous fleets mix PCIe and NVLink nodes) and an
+/// optional shared inter-node bottleneck.
+///
+/// Cost model (congestion-free ring/pairwise-exchange):
+///   per-device send time  = α·(messages) + (bytes out)/β_intra
+///   node-crossing traffic additionally bounded by β_inter shared per node.
+/// The A2A finishes when the slowest device/node finishes.
+pub fn a2a_time_per_node(
+    bytes: &[usize],
+    n_devices: usize,
+    devices_per_node: usize,
+    intra: &[LinkModel],
+    inter: Option<LinkModel>,
+) -> f64 {
     assert_eq!(bytes.len(), n_devices * n_devices);
     assert!(n_devices % devices_per_node == 0);
     let n_nodes = n_devices / devices_per_node;
+    assert_eq!(intra.len(), n_nodes, "one intra link per node");
     let node_of = |d: usize| d / devices_per_node;
 
     let mut worst_dev = 0.0f64;
@@ -85,7 +108,8 @@ pub fn a2a_time(
                 msgs += 1;
             }
         }
-        let t = intra.alpha * msgs as f64 + out_bytes as f64 / intra.beta;
+        let l = intra[node_of(src)];
+        let t = l.alpha * msgs as f64 + out_bytes as f64 / l.beta;
         worst_dev = worst_dev.max(t);
     }
 
@@ -140,12 +164,9 @@ impl A2aPhases {
 }
 
 /// Decompose an All-to-All over `bytes[src * n + dst]` into per-link
-/// phases (see [`A2aPhases`]). Same-node traffic costs
-/// `α_intra · messages + bytes / β_intra` on the source device; node-
-/// crossing traffic costs `α_inter + bytes / β_inter` on the source node's
-/// shared uplink. With a single node (or `inter == None`) every transfer
-/// is intra-node and the result reduces to the flat per-device model of
-/// [`a2a_time`].
+/// phases (see [`A2aPhases`]) with one intra-node link per fleet. Thin
+/// wrapper over [`a2a_decompose_per_node`] with the same link replicated
+/// on every node.
 pub fn a2a_decompose(
     bytes: &[usize],
     n_devices: usize,
@@ -153,9 +174,30 @@ pub fn a2a_decompose(
     intra: LinkModel,
     inter: Option<LinkModel>,
 ) -> A2aPhases {
+    assert!(devices_per_node > 0 && n_devices % devices_per_node == 0);
+    let intra = vec![intra; n_devices / devices_per_node];
+    a2a_decompose_per_node(bytes, n_devices, devices_per_node, &intra, inter)
+}
+
+/// Decompose an All-to-All over `bytes[src * n + dst]` into per-link
+/// phases (see [`A2aPhases`]) with one intra-node [`LinkModel`] *per node*
+/// (index = node id). Same-node traffic costs
+/// `α_intra · messages + bytes / β_intra` on the source device; node-
+/// crossing traffic costs `α_inter + bytes / β_inter` on the source node's
+/// shared uplink. With a single node (or `inter == None`) every transfer
+/// is intra-node and the result reduces to the flat per-device model of
+/// [`a2a_time_per_node`].
+pub fn a2a_decompose_per_node(
+    bytes: &[usize],
+    n_devices: usize,
+    devices_per_node: usize,
+    intra: &[LinkModel],
+    inter: Option<LinkModel>,
+) -> A2aPhases {
     assert_eq!(bytes.len(), n_devices * n_devices);
     assert!(n_devices % devices_per_node == 0);
     let n_nodes = n_devices / devices_per_node;
+    assert_eq!(intra.len(), n_nodes, "one intra link per node");
     let node_of = |d: usize| d / devices_per_node;
     let split_nodes = inter.is_some() && n_nodes > 1;
 
@@ -173,7 +215,8 @@ pub fn a2a_decompose(
                 msgs += 1;
             }
         }
-        *t = intra.alpha * msgs as f64 + out_bytes as f64 / intra.beta;
+        let l = intra[node_of(src)];
+        *t = l.alpha * msgs as f64 + out_bytes as f64 / l.beta;
     }
 
     let mut inter_phase = Vec::new();
@@ -212,6 +255,20 @@ pub fn uniform_a2a_bytes(n_devices: usize, bytes_per_pair: usize) -> Vec<usize> 
         }
     }
     m
+}
+
+/// Transpose a row-major `[n, n]` byte matrix. The combine All-to-All
+/// carries the dispatch traffic in reverse (expert-owner back to token
+/// source), so its byte matrix is the transpose of the dispatch matrix.
+pub fn a2a_transpose(bytes: &[usize], n_devices: usize) -> Vec<usize> {
+    assert_eq!(bytes.len(), n_devices * n_devices);
+    let mut out = vec![0usize; n_devices * n_devices];
+    for s in 0..n_devices {
+        for d in 0..n_devices {
+            out[d * n_devices + s] = bytes[s * n_devices + d];
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -306,5 +363,44 @@ mod tests {
         let ib = LinkModel::infiniband();
         let eth = LinkModel::ethernet();
         assert!(ib.transfer_time(8 << 20) < eth.transfer_time(8 << 20));
+    }
+
+    #[test]
+    fn per_node_wrappers_are_bit_exact_with_flat_model() {
+        // same link on every node: the per-node functions must reproduce
+        // the single-link functions exactly (identical arithmetic)
+        let intra = LinkModel::new(2e-6, 3e9);
+        let inter = Some(LinkModel::new(10e-6, 1e9));
+        let m = uniform_a2a_bytes(4, 12_345);
+        let links = vec![intra; 2];
+        assert_eq!(a2a_time(&m, 4, 2, intra, inter),
+                   a2a_time_per_node(&m, 4, 2, &links, inter));
+        let a = a2a_decompose(&m, 4, 2, intra, inter);
+        let b = a2a_decompose_per_node(&m, 4, 2, &links, inter);
+        assert_eq!(a.intra, b.intra);
+        assert_eq!(a.inter, b.inter);
+    }
+
+    #[test]
+    fn per_node_links_differ_per_source_node() {
+        // node 0 on a fast link, node 1 on a slow one: the slow node's
+        // devices pay more for the same intra-node traffic
+        let links = vec![LinkModel::new(0.0, 10e9), LinkModel::new(0.0, 1e9)];
+        let mut m = vec![0usize; 16];
+        m[1] = 1_000_000; // device0 -> device1 (node 0)
+        m[2 * 4 + 3] = 1_000_000; // device2 -> device3 (node 1)
+        let p = a2a_decompose_per_node(&m, 4, 2, &links, None);
+        assert!((p.intra[0] - 1e6 / 10e9).abs() < 1e-15);
+        assert!((p.intra[2] - 1e6 / 1e9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn transpose_reverses_src_dst() {
+        let m = vec![0, 1, 2, 3, 4, 5, 6, 7, 8];
+        let t = a2a_transpose(&m, 3);
+        assert_eq!(t, vec![0, 3, 6, 1, 4, 7, 2, 5, 8]);
+        // transposing a symmetric matrix is the identity
+        let u = uniform_a2a_bytes(4, 9);
+        assert_eq!(a2a_transpose(&u, 4), u);
     }
 }

@@ -13,10 +13,17 @@
 //! bound (one number per collective, used by the single-representative-
 //! device schedules) and the MoNTA-style [`a2a_decompose`] per-link phase
 //! split (per-device intra-node + per-node inter-node), which the
-//! topology-aware DES schedules on distinct contended resources.
+//! topology-aware DES schedules on distinct contended resources. Both have
+//! `*_per_node` variants taking one intra [`LinkModel`] per node for
+//! fleets that mix PCIe and NVLink nodes, and both consume an arbitrary
+//! `[n, n]` byte matrix — uniform ([`uniform_a2a_bytes`]) or derived from
+//! real routing decisions (`moe::RoutingTable::a2a_bytes_placed`).
 
 pub mod interconnect;
 pub mod topology;
 
-pub use interconnect::{a2a_decompose, a2a_time, uniform_a2a_bytes, A2aPhases, LinkModel};
+pub use interconnect::{
+    a2a_decompose, a2a_decompose_per_node, a2a_time, a2a_time_per_node,
+    a2a_transpose, uniform_a2a_bytes, A2aPhases, LinkModel,
+};
 pub use topology::{Scenario, Topology};

@@ -11,6 +11,8 @@
 
 use super::interconnect::LinkModel;
 
+/// Named hardware preset (paper testbeds + extended fleets); see the
+/// module docs for calibration notes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Scenario {
     /// 8×A30, PCIe only (Fig. 1 left: comm ≈ 60% of MoE time).
@@ -29,6 +31,8 @@ pub enum Scenario {
 }
 
 impl Scenario {
+    /// Parse a preset from its short alias (`"pcie"`) or full label
+    /// (`"8xA30-PCIe"`); `None` for unknown names.
     pub fn parse(s: &str) -> Option<Scenario> {
         match s {
             "pcie" | "8xA30-PCIe" => Some(Scenario::PcieA30x8),
@@ -40,6 +44,7 @@ impl Scenario {
         }
     }
 
+    /// Canonical display label (also accepted by [`Self::parse`]).
     pub fn label(&self) -> &'static str {
         match self {
             Scenario::PcieA30x8 => "8xA30-PCIe",
@@ -67,6 +72,8 @@ impl Scenario {
         ]
     }
 
+    /// Materialize the preset's [`Topology`] (device/node counts, link
+    /// models, per-device compute scales).
     pub fn topology(&self) -> Topology {
         match self {
             Scenario::PcieA30x8 => Topology {
@@ -77,6 +84,7 @@ impl Scenario {
                 // A30: 165 TFLOPS bf16 tensor — relative compute scale 1.0
                 compute_scale: 1.0,
                 device_scales: None,
+                node_intra: None,
             },
             Scenario::NvlinkA800x8 => Topology {
                 n_devices: 8,
@@ -86,6 +94,7 @@ impl Scenario {
                 // A800 ~1.9x A30 on the dense kernels in this proxy
                 compute_scale: 1.9,
                 device_scales: None,
+                node_intra: None,
             },
             Scenario::TwoNodeA800x16 => Topology {
                 n_devices: 16,
@@ -94,6 +103,7 @@ impl Scenario {
                 inter: Some(LinkModel::ethernet()),
                 compute_scale: 1.9,
                 device_scales: None,
+                node_intra: None,
             },
             Scenario::FourNodeA800IBx32 => Topology {
                 n_devices: 32,
@@ -102,6 +112,7 @@ impl Scenario {
                 inter: Some(LinkModel::infiniband()),
                 compute_scale: 1.9,
                 device_scales: None,
+                node_intra: None,
             },
             Scenario::HeteroA800A30x8 => Topology {
                 n_devices: 8,
@@ -111,22 +122,38 @@ impl Scenario {
                 compute_scale: 1.9,
                 // node 0: A800s; node 1: A30s (the stragglers)
                 device_scales: Some(vec![1.9, 1.9, 1.9, 1.9, 1.0, 1.0, 1.0, 1.0]),
+                // the A800 node has NVSwitch; the A30 node is PCIe-only,
+                // so its intra-node A2A phases run on the slower link
+                node_intra: Some(vec![LinkModel::nvlink(), LinkModel::pcie()]),
             },
         }
     }
 }
 
+/// A modeled device fleet: device/node counts, intra- and inter-node
+/// link models, and per-device compute speed (relative to the A30
+/// baseline; divides operator durations).
 #[derive(Debug, Clone)]
 pub struct Topology {
+    /// Total modeled devices.
     pub n_devices: usize,
+    /// Devices per node (contiguous block node layout).
     pub devices_per_node: usize,
+    /// Default intra-node link (NVLink/PCIe class), shared by every node
+    /// unless `node_intra` overrides it per node.
     pub intra: LinkModel,
+    /// Shared inter-node uplink (IB/Ethernet class); `None` on single-node
+    /// topologies.
     pub inter: Option<LinkModel>,
     /// Device compute speed relative to the A30 baseline (divides op times).
     pub compute_scale: f64,
     /// Per-device compute scales for heterogeneous fleets; `None` means
     /// every device runs at `compute_scale`.
     pub device_scales: Option<Vec<f64>>,
+    /// Per-node intra links for heterogeneous fleets (index = node id);
+    /// `None` means every node uses `intra`. Lets a PCIe-only node coexist
+    /// with NVSwitch nodes in one fleet.
+    pub node_intra: Option<Vec<LinkModel>>,
 }
 
 impl Topology {
@@ -143,8 +170,13 @@ impl Topology {
                        "device_scales length must equal n_devices");
             assert!(v.iter().all(|&s| s > 0.0), "compute scales must be positive");
         }
+        if let Some(v) = &self.node_intra {
+            assert_eq!(v.len(), self.n_nodes(),
+                       "node_intra length must equal the node count");
+        }
     }
 
+    /// Number of nodes in the fleet.
     pub fn n_nodes(&self) -> usize {
         self.n_devices / self.devices_per_node
     }
@@ -159,6 +191,16 @@ impl Topology {
         match &self.device_scales {
             Some(v) => v[device],
             None => self.compute_scale,
+        }
+    }
+
+    /// Intra-node link of every node (index = node id): the per-node
+    /// override when present, otherwise the fleet-wide `intra` replicated.
+    /// This is the vector the per-node A2A cost functions consume.
+    pub fn intra_links(&self) -> Vec<LinkModel> {
+        match &self.node_intra {
+            Some(v) => v.clone(),
+            None => vec![self.intra; self.n_nodes()],
         }
     }
 
@@ -212,5 +254,26 @@ mod tests {
         // homogeneous presets fall back to the fleet scale
         let n = Scenario::NvlinkA800x8.topology();
         assert_eq!(n.device_compute_scale(3), 1.9);
+    }
+
+    #[test]
+    fn hetero_has_per_node_intra_links() {
+        // A800 node on NVLink, A30 node on PCIe
+        let t = Scenario::HeteroA800A30x8.topology();
+        let links = t.intra_links();
+        assert_eq!(links.len(), 2);
+        assert_eq!(links[0], LinkModel::nvlink());
+        assert_eq!(links[1], LinkModel::pcie());
+        // homogeneous presets replicate the fleet-wide intra link
+        let n = Scenario::FourNodeA800IBx32.topology();
+        assert_eq!(n.intra_links(), vec![LinkModel::nvlink(); 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "node_intra length")]
+    fn short_node_intra_vector_fails_validation() {
+        let mut t = Scenario::TwoNodeA800x16.topology();
+        t.node_intra = Some(vec![LinkModel::nvlink()]);
+        t.assert_valid();
     }
 }

@@ -15,8 +15,21 @@
 //! one-modeled-device topology; schedules built from it reproduce the
 //! legacy single-device schedules bit-exactly (property-tested in
 //! `rust/tests/simtime_props.rs`).
+//!
+//! Communication volume likewise comes in two granularities:
+//! [`TopoCosts::from_topology`] feeds the decomposition a *uniform* byte
+//! matrix (every device pair exchanges the same volume), while
+//! [`TopoCosts::from_routing`] derives the matrix from an actual
+//! `moe::RoutingTable` and `moe::Placement`, so skewed routing or
+//! ExFlow-style placements change the simulated per-link phase times —
+//! including asymmetric dispatch vs. combine phases when the routed matrix
+//! is not symmetric.
 
-use crate::cluster::{a2a_decompose, a2a_time, uniform_a2a_bytes, Topology};
+use crate::cluster::{
+    a2a_decompose_per_node, a2a_time_per_node, a2a_transpose,
+    uniform_a2a_bytes, Topology,
+};
+use crate::moe::{Placement, RoutingTable};
 
 /// Which MoE architecture a schedule models (paper Fig. 6 / Fig. 8 rows).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -31,6 +44,7 @@ pub enum MoEKind {
 }
 
 impl MoEKind {
+    /// Display label matching the paper's table rows ("Top2", "ScMoE", …).
     pub fn label(&self) -> String {
         match self {
             MoEKind::Standard { k } => format!("Top{k}"),
@@ -50,6 +64,7 @@ impl MoEKind {
         }
     }
 
+    /// Whether the architecture adds a shared-expert MLP on the backbone.
     pub fn has_shared_expert(&self) -> bool {
         matches!(self, MoEKind::SharedExpert | MoEKind::ScMoE { .. })
     }
@@ -70,6 +85,7 @@ pub enum Strategy {
 }
 
 impl Strategy {
+    /// Display label ("seq", "pipe2", "overlap", "overlap+pipe2", …).
     pub fn label(&self) -> String {
         match self {
             Strategy::Sequential => "seq".into(),
@@ -140,8 +156,9 @@ impl BlockCosts {
             topo.n_devices,
             uniform_bytes_per_pair(topo, tokens_per_device, token_bytes,
                                    capacity_factor));
-        let a2a_k1 = a2a_time(&m, topo.n_devices, topo.devices_per_node,
-                              topo.intra, topo.inter);
+        let a2a_k1 = a2a_time_per_node(&m, topo.n_devices,
+                                       topo.devices_per_node,
+                                       &topo.intra_links(), topo.inter);
         base.scaled(topo.min_compute_scale(), a2a_k1)
     }
 }
@@ -162,27 +179,42 @@ fn uniform_bytes_per_pair(topo: &Topology, tokens_per_device: usize,
 /// [`BlockCosts`]).
 #[derive(Debug, Clone)]
 pub struct TopoCosts {
-    /// Per modeled device: compute-op durations (already scaled by that
-    /// device's compute speed) plus the flat one-way `a2a_k1` for
+    /// Per modeled device: compute-op durations in seconds (already scaled
+    /// by that device's compute speed) plus the flat one-way `a2a_k1` for
     /// reporting and the single-device reduction.
     pub per_device: Vec<BlockCosts>,
-    /// Per-device one-way intra-node All-to-All phase at k = 1 volume.
+    /// Per-device one-way *dispatch* intra-node All-to-All phase (seconds)
+    /// at k = 1 volume.
     pub a2a_intra_k1: Vec<f64>,
-    /// Per-node one-way inter-node All-to-All phase at k = 1 volume;
-    /// empty for single-node (or single-modeled-device) topologies.
+    /// Per-node one-way *dispatch* inter-node All-to-All phase (seconds)
+    /// at k = 1 volume; empty for single-node (or single-modeled-device)
+    /// topologies.
     pub a2a_inter_k1: Vec<f64>,
+    /// Per-device *combine* intra-node phase (seconds) at k = 1 volume.
+    /// Empty means the combine direction mirrors dispatch exactly (true
+    /// for uniform routing, whose byte matrix is symmetric); routed
+    /// constructors fill it from the transposed byte matrix.
+    pub a2a_intra_combine_k1: Vec<f64>,
+    /// Per-node *combine* inter-node phase (seconds) at k = 1 volume;
+    /// empty under the same symmetric-fallback rule as
+    /// `a2a_intra_combine_k1`.
+    pub a2a_inter_combine_k1: Vec<f64>,
+    /// Devices per node (contiguous block node layout).
     pub devices_per_node: usize,
 }
 
 impl TopoCosts {
+    /// Number of modeled devices.
     pub fn n_devices(&self) -> usize {
         self.per_device.len()
     }
 
+    /// Number of nodes covering the modeled devices.
     pub fn n_nodes(&self) -> usize {
         self.n_devices().div_ceil(self.devices_per_node)
     }
 
+    /// Node owning a device (contiguous block layout).
     pub fn node_of(&self, device: usize) -> usize {
         device / self.devices_per_node
     }
@@ -207,16 +239,48 @@ impl TopoCosts {
         assert!(self.a2a_inter_k1.is_empty()
                     || self.a2a_inter_k1.len() == self.n_nodes(),
                 "inter-node phases must cover every node (or be empty)");
+        assert!(self.a2a_intra_combine_k1.is_empty()
+                    || self.a2a_intra_combine_k1.len() == self.per_device.len(),
+                "combine intra phases must cover every device (or be empty)");
+        assert!(self.a2a_inter_combine_k1.is_empty()
+                    || self.a2a_inter_combine_k1.len() == self.a2a_inter_k1.len(),
+                "combine inter phases must mirror the dispatch link set \
+                 (or be empty)");
     }
 
-    /// One-way intra-node phase for device `d` at k routed experts.
+    /// One-way *dispatch* intra-node phase (seconds) for device `d` at
+    /// k routed experts.
     pub fn a2a_intra(&self, d: usize, k: usize) -> f64 {
         self.a2a_intra_k1[d] * k as f64
     }
 
-    /// One-way inter-node phase for node `n` at k routed experts.
+    /// One-way *dispatch* inter-node phase (seconds) for node `n` at
+    /// k routed experts.
     pub fn a2a_inter(&self, n: usize, k: usize) -> f64 {
         self.a2a_inter_k1[n] * k as f64
+    }
+
+    /// *Combine* intra-node phase (seconds) for device `d` at k routed
+    /// experts; falls back to the dispatch phase when the combine vectors
+    /// are empty (symmetric traffic), keeping uniform-routing schedules
+    /// bit-exact with the pre-routed model.
+    pub fn a2a_intra_combine(&self, d: usize, k: usize) -> f64 {
+        if self.a2a_intra_combine_k1.is_empty() {
+            self.a2a_intra(d, k)
+        } else {
+            self.a2a_intra_combine_k1[d] * k as f64
+        }
+    }
+
+    /// *Combine* inter-node phase (seconds) for node `n` at k routed
+    /// experts, with the same symmetric fallback as
+    /// [`Self::a2a_intra_combine`].
+    pub fn a2a_inter_combine(&self, n: usize, k: usize) -> f64 {
+        if self.a2a_inter_combine_k1.is_empty() {
+            self.a2a_inter(n, k)
+        } else {
+            self.a2a_inter_combine_k1[n] * k as f64
+        }
     }
 
     /// Degenerate one-modeled-device view of legacy costs. Schedules built
@@ -227,14 +291,20 @@ impl TopoCosts {
         TopoCosts {
             a2a_intra_k1: vec![c.a2a_k1],
             a2a_inter_k1: Vec::new(),
+            a2a_intra_combine_k1: Vec::new(),
+            a2a_inter_combine_k1: Vec::new(),
             per_device: vec![c.clone()],
             devices_per_node: 1,
         }
     }
 
-    /// Build topology-aware costs: per-device compute durations from the
-    /// device's own compute scale, All-to-All phases from the uniform
-    /// routing byte matrix decomposed per link (`cluster::a2a_decompose`).
+    /// Build topology-aware costs under *uniform* routing: per-device
+    /// compute durations from the device's own compute scale, All-to-All
+    /// phases from the uniform byte matrix decomposed per link
+    /// (`cluster::a2a_decompose_per_node`). The uniform matrix is
+    /// symmetric, so the combine vectors stay empty and combine phases
+    /// mirror dispatch bit-exactly — this is the N-devices degenerate case
+    /// of [`Self::from_routing`].
     pub fn from_topology(base: &ComputeCosts, topo: &Topology,
                          tokens_per_device: usize, token_bytes: usize,
                          capacity_factor: f64) -> TopoCosts {
@@ -243,10 +313,12 @@ impl TopoCosts {
             topo.n_devices,
             uniform_bytes_per_pair(topo, tokens_per_device, token_bytes,
                                    capacity_factor));
-        let phases = a2a_decompose(&m, topo.n_devices, topo.devices_per_node,
-                                   topo.intra, topo.inter);
-        let flat = a2a_time(&m, topo.n_devices, topo.devices_per_node,
-                            topo.intra, topo.inter);
+        let links = topo.intra_links();
+        let phases = a2a_decompose_per_node(&m, topo.n_devices,
+                                            topo.devices_per_node,
+                                            &links, topo.inter);
+        let flat = a2a_time_per_node(&m, topo.n_devices, topo.devices_per_node,
+                                     &links, topo.inter);
         let per_device = (0..topo.n_devices)
             .map(|d| base.scaled(topo.device_compute_scale(d), flat))
             .collect();
@@ -254,6 +326,60 @@ impl TopoCosts {
             per_device,
             a2a_intra_k1: phases.intra,
             a2a_inter_k1: phases.inter,
+            a2a_intra_combine_k1: Vec::new(),
+            a2a_inter_combine_k1: Vec::new(),
+            devices_per_node: topo.devices_per_node,
+        }
+    }
+
+    /// Build topology-aware costs from *actual routing decisions*: the
+    /// dispatch byte matrix comes from `rt.a2a_bytes_placed(placement,
+    /// token_bytes)` and the combine matrix is its transpose, so expert
+    /// placement (block, affinity-packed, skewed) directly shapes the
+    /// per-device intra-node and per-node inter-node phase times —
+    /// including asymmetric dispatch vs. combine phases under skewed
+    /// layouts. A placement that keeps every route node-local yields
+    /// inter-node phases of exactly zero.
+    ///
+    /// Phases are normalized to k = 1 volume by dividing the routed phase
+    /// times (which already include all `rt.k` route copies) by `rt.k`, so
+    /// schedule builders that scale by `MoEKind::routed_k()` reproduce the
+    /// full routed volume when the kind's k matches the table's.
+    pub fn from_routing(base: &ComputeCosts, topo: &Topology,
+                        rt: &RoutingTable, placement: &Placement,
+                        token_bytes: usize) -> TopoCosts {
+        topo.assert_valid();
+        assert_eq!(placement.n_devices, topo.n_devices,
+                   "placement must cover the topology's device fleet");
+        let disp = rt.a2a_bytes_placed(placement, token_bytes);
+        let comb = a2a_transpose(&disp, topo.n_devices);
+        let links = topo.intra_links();
+        let pd = a2a_decompose_per_node(&disp, topo.n_devices,
+                                        topo.devices_per_node,
+                                        &links, topo.inter);
+        let pc = a2a_decompose_per_node(&comb, topo.n_devices,
+                                        topo.devices_per_node,
+                                        &links, topo.inter);
+        let kf = rt.k.max(1) as f64;
+        let scale = |v: Vec<f64>| -> Vec<f64> {
+            v.into_iter().map(|x| x / kf).collect()
+        };
+        let flat = a2a_time_per_node(&disp, topo.n_devices,
+                                     topo.devices_per_node,
+                                     &links, topo.inter)
+            .max(a2a_time_per_node(&comb, topo.n_devices,
+                                   topo.devices_per_node,
+                                   &links, topo.inter))
+            / kf;
+        let per_device = (0..topo.n_devices)
+            .map(|d| base.scaled(topo.device_compute_scale(d), flat))
+            .collect();
+        TopoCosts {
+            per_device,
+            a2a_intra_k1: scale(pd.intra),
+            a2a_inter_k1: scale(pd.inter),
+            a2a_intra_combine_k1: scale(pc.intra),
+            a2a_inter_combine_k1: scale(pc.inter),
             devices_per_node: topo.devices_per_node,
         }
     }
@@ -388,5 +514,78 @@ mod tests {
         assert_eq!(tc.a2a_intra_k1.len(), 8);
         // flat bound equals the per-device phase on a uniform single node
         assert!((tc.a2a_intra_k1[0] - tc.per_device[0].a2a_k1).abs() < 1e-15);
+    }
+
+    #[test]
+    fn uniform_costs_leave_combine_symmetric() {
+        let base = ComputeCosts::swin_proxy();
+        for sc in Scenario::extended() {
+            let tc = TopoCosts::from_topology(&base, &sc.topology(), 4096, 384, 1.25);
+            assert!(tc.a2a_intra_combine_k1.is_empty());
+            assert!(tc.a2a_inter_combine_k1.is_empty());
+            // the fallback accessors mirror dispatch bit-exactly
+            for d in 0..tc.n_devices() {
+                assert_eq!(tc.a2a_intra_combine(d, 2), tc.a2a_intra(d, 2));
+            }
+            for n in 0..tc.a2a_inter_k1.len() {
+                assert_eq!(tc.a2a_inter_combine(n, 2), tc.a2a_inter(n, 2));
+            }
+        }
+    }
+
+    #[test]
+    fn routed_costs_fill_combine_phases() {
+        use crate::moe::{Placement, RoutingTable};
+        // 4 tokens on 4 devices, each routed to the "next" device's expert:
+        // the byte matrix is a rotation (not symmetric), so dispatch and
+        // combine phases genuinely differ per device, yet every phase pair
+        // is derived from the same transposed volume.
+        let idx = vec![1i32, 2, 3, 0];
+        let w = vec![1.0f32; 4];
+        let rt = RoutingTable::build(&idx, &w, 4, 1, 4, 4);
+        let topo = Scenario::HeteroA800A30x8.topology();
+        // shrink to a 4-device view of the hetero fleet for the test
+        let topo = crate::cluster::Topology {
+            n_devices: 4,
+            devices_per_node: 2,
+            device_scales: None,
+            node_intra: None,
+            ..topo
+        };
+        let p = Placement::new(4, 4);
+        let tc = TopoCosts::from_routing(&ComputeCosts::swin_proxy(), &topo,
+                                         &rt, &p, 1024);
+        tc.assert_valid();
+        assert_eq!(tc.a2a_intra_combine_k1.len(), 4);
+        assert_eq!(tc.a2a_inter_combine_k1.len(), 2);
+        // rotation: device d sends to d+1; device 1 sends to node 1 (cross)
+        // while device 2 receives from node 0 — dispatch and combine phase
+        // sums must both account for exactly the cross volume
+        let cross_d: f64 = tc.a2a_inter_k1.iter().sum();
+        let cross_c: f64 = tc.a2a_inter_combine_k1.iter().sum();
+        assert!(cross_d > 0.0 && cross_c > 0.0);
+    }
+
+    #[test]
+    fn routed_costs_normalize_per_k() {
+        use crate::moe::{Placement, RoutingTable};
+        // k = 2: every token routes to experts 0 and 1 (devices 0 and 1)
+        let idx = vec![0i32, 1, 0, 1];
+        let w = vec![0.5f32; 4];
+        let rt = RoutingTable::build(&idx, &w, 2, 2, 2, 4);
+        let topo = crate::cluster::Topology {
+            n_devices: 2,
+            devices_per_node: 2,
+            intra: crate::cluster::LinkModel::new(0.0, 1e9),
+            inter: None,
+            compute_scale: 1.0,
+            device_scales: None,
+            node_intra: None,
+        };
+        let tc = TopoCosts::from_routing(&ComputeCosts::swin_proxy(), &topo,
+                                         &rt, &Placement::new(2, 2), 1000);
+        // device 0 dispatches its token's remote copy (1000 B) once per k;
+        // normalized per k then rescaled by k = 2 gives the full volume
+        assert!((tc.a2a_intra(0, 2) - 1000.0 / 1e9).abs() < 1e-15);
     }
 }

@@ -42,6 +42,8 @@ pub struct Cluster {
     pub weights: ClusterWeights,
 }
 
+/// Stacked expert weights `[E, ...]` plus the gate/layer-norm tensors the
+/// leader keeps for routing and encode bookkeeping.
 #[derive(Clone)]
 pub struct ClusterWeights {
     pub ln_g: HostTensor,
@@ -138,10 +140,12 @@ impl Cluster {
         })
     }
 
+    /// Number of simulated expert-parallel devices (worker threads).
     pub fn n_devices(&self) -> usize {
         self.placement.n_devices
     }
 
+    /// Per-expert capacity (tokens) of the compiled expert artifact.
     pub fn capacity(&self) -> usize {
         self.capacity
     }

@@ -4,7 +4,9 @@
 //! - `costs`: per-operator durations (calibrated or preset) + comm
 //!   volumes, at two granularities — the single-representative-device
 //!   `BlockCosts` and the topology-aware `TopoCosts` (per-device compute,
-//!   per-link All-to-All phases derived from topology + token counts);
+//!   per-link All-to-All phases derived from topology + token counts, or
+//!   from actual `moe::RoutingTable` traffic under a `moe::Placement` via
+//!   `TopoCosts::from_routing`);
 //! - `schedule`: task-graph builders for every architecture × strategy in
 //!   Fig. 6 (sequential, Tutel-style pipelining, shared-expert, ScMoE
 //!   overlapping, ScMoE + pipelining), in both single-device and

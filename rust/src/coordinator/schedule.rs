@@ -37,10 +37,12 @@ pub struct PairSchedule {
 }
 
 impl PairSchedule {
+    /// Execute the DES and return one span (start/end seconds) per task.
     pub fn run(&self) -> Vec<Span> {
         self.sim.run()
     }
 
+    /// End time (seconds) of the last task in the simulated schedule.
     pub fn makespan(&self) -> f64 {
         self.sim.makespan()
     }
@@ -278,6 +280,11 @@ fn build_overlap(c: &BlockCosts, kind: MoEKind, k: usize, slot: usize,
 //    `Comm(d)`; node n's inter-node phases on the shared `Link(n)`;
 //  - an All-to-All is a barrier collective: consumers depend on every
 //    phase task (per-device intra + per-node inter);
+//  - dispatch tasks (`A2A-D*`) take durations from the dispatch phase
+//    vectors; combine tasks (`A2A-C*`) from `TopoCosts::a2a_*_combine`,
+//    which fall back to the dispatch phases when routing is symmetric —
+//    routed placements thus expose asymmetric forward/return traffic
+//    without forking the builders;
 //  - task insertion order matches the legacy single-device builders, so a
 //    one-device `TopoCosts` yields the identical task graph (same ids,
 //    deps, durations) and therefore bit-exact spans.
@@ -315,11 +322,13 @@ fn build_sequential_topo(tc: &TopoCosts, kind: MoEKind, k: usize) -> PairSchedul
     }
     let mut comb = Vec::with_capacity(n + n_links);
     for d in 0..n {
-        comb.push(sim.add("A2A-C", Resource::Comm(d), tc.a2a_intra(d, k), &[experts[d]]));
+        comb.push(sim.add("A2A-C", Resource::Comm(d),
+                          tc.a2a_intra_combine(d, k), &[experts[d]]));
     }
     for node in 0..n_links {
         let deps: Vec<TaskId> = tc.devices_of(node).map(|d| experts[d]).collect();
-        comb.push(sim.add("A2A-Cx", Resource::Link(node), tc.a2a_inter(node, k), &deps));
+        comb.push(sim.add("A2A-Cx", Resource::Link(node),
+                          tc.a2a_inter_combine(node, k), &deps));
     }
     for d in 0..n {
         let c = &tc.per_device[d];
@@ -388,12 +397,12 @@ fn build_pipelined_topo(tc: &TopoCosts, kind: MoEKind, k: usize,
         }
         for d in 0..n {
             combines.push(sim.add(format!("A2A-C{i}"), Resource::Comm(d),
-                                  tc.a2a_intra(d, k) / fc, &[experts_i[d]]));
+                                  tc.a2a_intra_combine(d, k) / fc, &[experts_i[d]]));
         }
         for node in 0..n_links {
             let deps: Vec<TaskId> = tc.devices_of(node).map(|d| experts_i[d]).collect();
             combines.push(sim.add(format!("A2A-Cx{i}"), Resource::Link(node),
-                                  tc.a2a_inter(node, k) / fc, &deps));
+                                  tc.a2a_inter_combine(node, k) / fc, &deps));
         }
     }
     for d in 0..n {
@@ -498,14 +507,14 @@ fn build_overlap_topo(tc: &TopoCosts, kind: MoEKind, k: usize, slot: usize,
     for i in 0..chunks {
         for d in 0..n {
             combines.push(sim.add(format!("A2A-C{i}"), Resource::Comm(d),
-                                  tc.a2a_intra(d, k) / fc,
+                                  tc.a2a_intra_combine(d, k) / fc,
                                   &[experts_by_dev[d][i]]));
         }
         for node in 0..n_links {
             let deps: Vec<TaskId> =
                 tc.devices_of(node).map(|d| experts_by_dev[d][i]).collect();
             combines.push(sim.add(format!("A2A-Cx{i}"), Resource::Link(node),
-                                  tc.a2a_inter(node, k) / fc, &deps));
+                                  tc.a2a_inter_combine(node, k) / fc, &deps));
         }
     }
     for d in 0..n {
@@ -606,6 +615,8 @@ mod tests {
             per_device: vec![c.clone(); n],
             a2a_intra_k1: vec![c.a2a_k1; n],
             a2a_inter_k1: if n_nodes > 1 { vec![inter_k1; n_nodes] } else { Vec::new() },
+            a2a_intra_combine_k1: Vec::new(),
+            a2a_inter_combine_k1: Vec::new(),
             devices_per_node,
         }
     }

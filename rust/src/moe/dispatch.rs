@@ -19,6 +19,8 @@ pub fn encode(table: &RoutingTable, tokens: &[f32], d: usize) -> Vec<f32> {
     out
 }
 
+/// In-place [`encode`]: fills a caller-owned `[E * C * d]` buffer (zeroing
+/// unused slots) instead of allocating.
 pub fn encode_into(table: &RoutingTable, tokens: &[f32], d: usize, out: &mut [f32]) {
     assert_eq!(tokens.len(), table.n_tokens * d, "token buffer size");
     assert_eq!(out.len(), table.n_experts * table.capacity * d, "encode buffer size");
@@ -43,6 +45,8 @@ pub fn decode(table: &RoutingTable, expert_out: &[f32], d: usize) -> Vec<f32> {
     out
 }
 
+/// In-place [`decode`]: accumulates into a caller-owned `[n_tokens * d]`
+/// buffer instead of allocating.
 pub fn decode_into(table: &RoutingTable, expert_out: &[f32], d: usize, out: &mut [f32]) {
     assert_eq!(expert_out.len(), table.n_experts * table.capacity * d, "expert buffer size");
     assert_eq!(out.len(), table.n_tokens * d, "decode buffer size");

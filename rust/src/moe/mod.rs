@@ -3,6 +3,11 @@
 //!
 //! This is the Rust half of the GShard-style dispatch whose reference
 //! semantics live in python/compile/kernels/ref.py (`dispatch_combine_masks`).
+//!
+//! It also feeds the scheduling simulator: `RoutingTable::a2a_bytes_placed`
+//! turns real routing decisions plus a [`Placement`] into the per-device-
+//! pair byte matrix that `coordinator::TopoCosts::from_routing` converts
+//! into per-link All-to-All phase times.
 
 pub mod dispatch;
 pub mod placement;

@@ -1,34 +1,144 @@
-//! Expert placement across devices (the paper allocates one expert per GPU;
-//! we support `experts_per_device >= 1` for the multi-node Fig. 8c setup).
+//! Expert placement across devices.
+//!
+//! The paper allocates one expert per GPU; we support arbitrary
+//! expert-to-device maps so the scheduling simulator can study how layout
+//! shapes All-to-All traffic:
+//!
+//! - [`Placement::new`] — the contiguous block layout (`experts_per_device`
+//!   consecutive experts per device), the default everywhere;
+//! - [`Placement::affinity_packed`] — ExFlow-style (arXiv:2401.08383)
+//!   greedy packing that co-locates each expert with the node sourcing
+//!   most of its tokens, shrinking inter-node A2A volume;
+//! - [`Placement::imbalance_skewed`] — a deliberately skewed layout that
+//!   concentrates experts on a device prefix, for studying hot-device
+//!   link contention;
+//! - [`Placement::custom`] — any explicit expert→device map.
+//!
+//! A placement combines with a [`RoutingTable`](super::RoutingTable) via
+//! `RoutingTable::a2a_bytes_placed` to produce the per-device-pair byte
+//! matrix that `coordinator::TopoCosts::from_routing` turns into per-link
+//! phase times.
 
+use super::router::RoutingTable;
+
+/// Maps each expert id to the device owning its parameters.
 #[derive(Debug, Clone)]
 pub struct Placement {
+    /// Total number of experts in the layer.
     pub n_experts: usize,
+    /// Number of expert-parallel devices.
     pub n_devices: usize,
+    /// `map[expert] == device` owning that expert.
+    map: Vec<usize>,
 }
 
 impl Placement {
+    /// Contiguous block layout: device `d` owns experts
+    /// `[d * per, (d + 1) * per)` with `per = n_experts / n_devices`.
+    /// Panics unless `n_experts` divides evenly.
     pub fn new(n_experts: usize, n_devices: usize) -> Placement {
         assert!(n_experts % n_devices == 0,
                 "experts ({n_experts}) must be divisible by devices ({n_devices})");
-        Placement { n_experts, n_devices }
+        let per = n_experts / n_devices;
+        let map = (0..n_experts).map(|e| e / per).collect();
+        Placement { n_experts, n_devices, map }
     }
 
+    /// Arbitrary expert→device map (`map[expert] == device`). Unlike the
+    /// block layout, per-device expert counts may be uneven — that is the
+    /// point of skewed layouts.
+    pub fn custom(n_experts: usize, n_devices: usize, map: Vec<usize>) -> Placement {
+        assert_eq!(map.len(), n_experts, "one device per expert");
+        assert!(n_devices > 0);
+        assert!(map.iter().all(|&d| d < n_devices),
+                "placement maps an expert to a device outside the fleet");
+        Placement { n_experts, n_devices, map }
+    }
+
+    /// ExFlow-style affinity packing: assign each expert to the node that
+    /// sources most of its routed tokens (greedy, highest-demand experts
+    /// first, node capacity balanced at `n_experts / n_nodes` experts per
+    /// node), then round-robin experts over the node's devices. When every
+    /// expert's traffic comes from a single node and group sizes match the
+    /// capacity, the resulting layout makes all A2A traffic node-local and
+    /// the inter-node phase times drop to zero.
+    ///
+    /// Token sources follow the same convention as
+    /// `RoutingTable::a2a_bytes_placed`: tokens are split evenly over
+    /// devices in index order.
+    pub fn affinity_packed(rt: &RoutingTable, n_devices: usize,
+                           devices_per_node: usize) -> Placement {
+        assert!(devices_per_node > 0 && n_devices % devices_per_node == 0);
+        let n_nodes = n_devices / devices_per_node;
+        assert!(rt.n_experts % n_nodes == 0,
+                "experts ({}) must divide into {} nodes", rt.n_experts, n_nodes);
+        let tokens_per_device = rt.n_tokens.div_ceil(n_devices);
+        // affinity[e][node] = routed copies expert e receives from node
+        let mut aff = vec![vec![0usize; n_nodes]; rt.n_experts];
+        for r in &rt.routes {
+            let src = (r.token / tokens_per_device).min(n_devices - 1);
+            aff[r.expert][src / devices_per_node] += 1;
+        }
+        // place the highest-demand experts first (ties: lower expert id)
+        let mut order: Vec<usize> = (0..rt.n_experts).collect();
+        order.sort_by_key(|&e| {
+            (std::cmp::Reverse(aff[e].iter().sum::<usize>()), e)
+        });
+        let cap = rt.n_experts / n_nodes;
+        let mut node_load = vec![0usize; n_nodes];
+        let mut map = vec![0usize; rt.n_experts];
+        for &e in &order {
+            let mut best: Option<usize> = None;
+            let mut best_aff = 0usize;
+            for node in 0..n_nodes {
+                if node_load[node] >= cap {
+                    continue;
+                }
+                if best.is_none() || aff[e][node] > best_aff {
+                    best = Some(node);
+                    best_aff = aff[e][node];
+                }
+            }
+            let node = best.expect("capacities sum to n_experts");
+            map[e] = node * devices_per_node + node_load[node] % devices_per_node;
+            node_load[node] += 1;
+        }
+        Placement::custom(rt.n_experts, n_devices, map)
+    }
+
+    /// Imbalance-skewed layout: pack `pack` experts per device onto the
+    /// first `n_experts / pack` devices, leaving the rest empty. `pack = 1`
+    /// with `n_experts == n_devices` is the block layout; larger `pack`
+    /// concentrates combine traffic on the loaded device prefix.
+    pub fn imbalance_skewed(n_experts: usize, n_devices: usize,
+                            pack: usize) -> Placement {
+        assert!(pack >= 1 && n_experts % pack == 0,
+                "pack ({pack}) must divide the expert count ({n_experts})");
+        let used = n_experts / pack;
+        assert!((1..=n_devices).contains(&used),
+                "skewed layout needs {used} devices, fleet has {n_devices}");
+        let map = (0..n_experts).map(|e| e / pack).collect();
+        Placement::custom(n_experts, n_devices, map)
+    }
+
+    /// Mean experts per device of the balanced layout (total / devices).
+    /// Meaningful for block placements (where it is exact); skewed layouts
+    /// intentionally deviate from it per device.
     pub fn experts_per_device(&self) -> usize {
         self.n_experts / self.n_devices
     }
 
-    /// Device owning an expert (contiguous block layout).
+    /// Device owning an expert.
     pub fn device_of(&self, expert: usize) -> usize {
         assert!(expert < self.n_experts);
-        expert / self.experts_per_device()
+        self.map[expert]
     }
 
-    /// Experts owned by a device.
-    pub fn experts_of(&self, device: usize) -> std::ops::Range<usize> {
+    /// Experts owned by a device, in ascending expert order. Contiguous
+    /// for the block layout, arbitrary for custom/skewed layouts.
+    pub fn experts_of(&self, device: usize) -> Vec<usize> {
         assert!(device < self.n_devices);
-        let per = self.experts_per_device();
-        device * per..(device + 1) * per
+        (0..self.n_experts).filter(|&e| self.map[e] == device).collect()
     }
 }
 
@@ -42,7 +152,7 @@ mod tests {
         assert_eq!(p.experts_per_device(), 2);
         assert_eq!(p.device_of(0), 0);
         assert_eq!(p.device_of(7), 3);
-        assert_eq!(p.experts_of(1), 2..4);
+        assert_eq!(p.experts_of(1), vec![2, 3]);
     }
 
     #[test]
@@ -57,5 +167,44 @@ mod tests {
     #[should_panic]
     fn indivisible_panics() {
         Placement::new(7, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the fleet")]
+    fn custom_rejects_out_of_range_device() {
+        Placement::custom(2, 2, vec![0, 5]);
+    }
+
+    #[test]
+    fn skewed_packs_device_prefix() {
+        let p = Placement::imbalance_skewed(8, 8, 2);
+        assert_eq!(p.experts_of(0), vec![0, 1]);
+        assert_eq!(p.experts_of(3), vec![6, 7]);
+        assert!(p.experts_of(4).is_empty());
+        // pack = 1 on a square layout is the block layout
+        let q = Placement::imbalance_skewed(4, 4, 1);
+        for e in 0..4 {
+            assert_eq!(q.device_of(e), e);
+        }
+    }
+
+    #[test]
+    fn affinity_packing_localizes_node_partitioned_traffic() {
+        // 4 devices, 2 per node, 4 experts. Node 0's tokens route only to
+        // experts {0, 2}; node 1's only to {1, 3}. Affinity packing must
+        // place {0, 2} on node 0 and {1, 3} on node 1.
+        let indices: Vec<i32> = vec![0, 2, 0, 2, 2, 0, 0, 2, 1, 3, 3, 1, 3, 1, 3, 3];
+        let weights = vec![1.0f32; 16];
+        let rt = RoutingTable::build(&indices, &weights, 16, 1, 4, 16);
+        let p = Placement::affinity_packed(&rt, 4, 2);
+        assert_eq!(p.device_of(0) / 2, 0, "expert 0 belongs on node 0");
+        assert_eq!(p.device_of(2) / 2, 0, "expert 2 belongs on node 0");
+        assert_eq!(p.device_of(1) / 2, 1, "expert 1 belongs on node 1");
+        assert_eq!(p.device_of(3) / 2, 1, "expert 3 belongs on node 1");
+        // deterministic greedy: highest-demand expert first, ties by id
+        assert_eq!(
+            (0..4).map(|e| p.device_of(e)).collect::<Vec<_>>(),
+            vec![0, 3, 1, 2]
+        );
     }
 }

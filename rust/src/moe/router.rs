@@ -3,6 +3,8 @@
 //! byte-for-byte the policy of `ref.dispatch_combine_masks` on the Python
 //! side (pinned there by python/tests/test_dispatch_combine.py).
 
+use super::placement::Placement;
+
 /// One token's routing decision for one of its k expert choices.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Route {
@@ -86,21 +88,42 @@ impl RoutingTable {
     }
 
     /// Bytes each source device must send to each destination device under
-    /// an expert-parallel layout (`experts_per_device` consecutive experts
-    /// per device, tokens split evenly across devices).
-    /// Returns a row-major [n_devices, n_devices] matrix.
+    /// the contiguous block layout (`experts_per_device` consecutive
+    /// experts per device, tokens split evenly across devices).
+    /// Returns a row-major `[n_devices, n_devices]` matrix of dispatch
+    /// bytes. Shorthand for [`Self::a2a_bytes_placed`] with
+    /// [`Placement::new`].
     pub fn a2a_bytes(
         &self,
         n_devices: usize,
         token_bytes: usize,
     ) -> Vec<usize> {
         assert!(self.n_experts % n_devices == 0, "experts must divide devices");
-        let experts_per_device = self.n_experts / n_devices;
+        self.a2a_bytes_placed(&Placement::new(self.n_experts, n_devices),
+                              token_bytes)
+    }
+
+    /// Bytes each source device must send to each destination device under
+    /// an arbitrary expert [`Placement`] (tokens split evenly across
+    /// devices in index order; each kept route moves one `token_bytes`
+    /// payload to the device owning its expert).
+    ///
+    /// Returns the row-major `[n_devices, n_devices]` *dispatch* matrix;
+    /// the combine direction is its transpose
+    /// (`cluster::a2a_transpose`). Dropped routes move no bytes.
+    pub fn a2a_bytes_placed(
+        &self,
+        placement: &Placement,
+        token_bytes: usize,
+    ) -> Vec<usize> {
+        assert_eq!(placement.n_experts, self.n_experts,
+                   "placement expert count must match the routing table");
+        let n_devices = placement.n_devices;
         let tokens_per_device = self.n_tokens.div_ceil(n_devices);
         let mut mat = vec![0usize; n_devices * n_devices];
         for r in &self.routes {
             let src = (r.token / tokens_per_device).min(n_devices - 1);
-            let dst = r.expert / experts_per_device;
+            let dst = placement.device_of(r.expert);
             mat[src * n_devices + dst] += token_bytes;
         }
         mat
@@ -117,6 +140,7 @@ impl RoutingTable {
         max / mean
     }
 
+    /// Number of routes kept after capacity dropping.
     pub fn kept(&self) -> usize {
         self.routes.len()
     }
@@ -161,6 +185,27 @@ mod tests {
         let m = rt.a2a_bytes(2, 10);
         // src0: t0->e0(dev0), t1->e2(dev1); src1: t2->e1(dev0), t3->e3(dev1)
         assert_eq!(m, vec![10, 10, 10, 10]);
+    }
+
+    #[test]
+    fn a2a_bytes_placed_block_matches_legacy() {
+        let idx = vec![0, 2, 1, 3, 2, 2];
+        let w = vec![1.0; 6];
+        let rt = RoutingTable::build(&idx, &w, 6, 1, 4, 4);
+        let legacy = rt.a2a_bytes(2, 10);
+        let placed = rt.a2a_bytes_placed(&Placement::new(4, 2), 10);
+        assert_eq!(legacy, placed);
+    }
+
+    #[test]
+    fn a2a_bytes_placed_follows_the_map() {
+        // all experts on device 1: every source sends everything there
+        let idx = vec![0, 1, 2, 3];
+        let w = vec![1.0; 4];
+        let rt = RoutingTable::build(&idx, &w, 4, 1, 4, 4);
+        let p = Placement::custom(4, 2, vec![1, 1, 1, 1]);
+        let m = rt.a2a_bytes_placed(&p, 10);
+        assert_eq!(m, vec![0, 20, 0, 20]);
     }
 
     #[test]

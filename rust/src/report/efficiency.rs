@@ -3,14 +3,16 @@
 
 use anyhow::Result;
 
-use crate::cluster::Scenario;
+use crate::cluster::{Scenario, Topology};
 use crate::coordinator::adaptive::{choose_expert_slot_topo, overlap_fraction};
 use crate::coordinator::costs::{BlockCosts, ComputeCosts, MoEKind, Strategy, TopoCosts};
 use crate::coordinator::schedule::{
     backbone_time, build_pair_schedule_auto, build_pair_schedule_topo,
 };
 use crate::coordinator::timeline;
+use crate::moe::{Placement, RoutingTable};
 use crate::util::cli::Args;
+use crate::util::rng::Rng;
 use crate::util::stats::fmt_secs;
 
 /// SwinV2-MoE-S proxy shape parameters (Fig. 1/8 workload).
@@ -54,7 +56,10 @@ pub fn xl_proxy_costs(scenario: Scenario) -> BlockCosts {
     BlockCosts::from_topology(&base, &topo, 640, 8192, 2.0)
 }
 
-fn xl_compute_costs() -> ComputeCosts {
+/// GPT3-MoE-XL compute-op durations (seconds, A30-relative scale 1.0) —
+/// the shared source of truth for the XL proxy; also consumed by the
+/// placement example and tests so recalibrations stay in sync.
+pub fn xl_compute_costs() -> ComputeCosts {
     ComputeCosts {
         attn: 1.40e-3,
         mlp: 1.20e-3,
@@ -75,6 +80,43 @@ pub fn xl_topo_proxy_costs(scenario: Scenario) -> TopoCosts {
     let base = xl_compute_costs();
     let topo = scenario.topology();
     TopoCosts::from_topology(&base, &topo, 640, 8192, 2.0)
+}
+
+/// Seeded node-affine routing table: every token picks `k` distinct
+/// experts from its source node's affinity group
+/// `{e : e % n_nodes == node}`, with tokens split evenly over devices in
+/// index order and capacity sized so nothing drops.
+///
+/// This is the routing family where expert placement matters most: under
+/// the block layout each affinity group is scattered across all nodes
+/// (heavy uplink traffic), while `Placement::affinity_packed` makes every
+/// route node-local and drives the inter-node phase times to exactly zero.
+/// Deterministic for a given seed (splitmix64 stream).
+pub fn node_affine_routing(n_devices: usize, devices_per_node: usize,
+                           n_experts: usize, tokens_per_device: usize,
+                           k: usize, seed: u64) -> RoutingTable {
+    assert!(devices_per_node > 0 && n_devices % devices_per_node == 0);
+    let n_nodes = n_devices / devices_per_node;
+    assert!(n_experts % n_nodes == 0, "experts must divide into nodes");
+    let group = n_experts / n_nodes;
+    assert!(k <= group, "k must fit inside one affinity group");
+    let n_tokens = n_devices * tokens_per_device;
+    let mut rng = Rng::new(seed);
+    let mut indices = Vec::with_capacity(n_tokens * k);
+    let weights = vec![1.0f32; n_tokens * k];
+    for t in 0..n_tokens {
+        let node = (t / tokens_per_device) / devices_per_node;
+        let first = rng.below(group);
+        indices.push((node + n_nodes * first) as i32);
+        // remaining group members, ordered from first+1 wrapping around;
+        // drawing by index keeps all k picks distinct for any k <= group
+        let mut rest: Vec<usize> = (1..group).map(|o| (first + o) % group).collect();
+        for _ in 1..k {
+            let idx = rest.remove(rng.below(rest.len()));
+            indices.push((node + n_nodes * idx) as i32);
+        }
+    }
+    RoutingTable::build(&indices, &weights, n_tokens, k, n_experts, n_tokens)
 }
 
 /// Training-iteration costs: forward + backward. Backward roughly doubles
@@ -195,7 +237,87 @@ pub fn topo_report(args: &Args) -> Result<()> {
         println!();
     }
     println!("slot = adaptive expert location (1..4, Eq. 11) chosen per topology");
+
+    routed_placement_study(args);
     Ok(())
+}
+
+/// The routed placement study's `(label, costs)` rows on one topology
+/// (GPT3-XL payload, 8 KiB tokens, node-affine routing from `seed`): the
+/// uniform byte-matrix model vs actual routed bytes under block,
+/// affinity-packed (ExFlow-style) and imbalance-skewed expert placements.
+/// Shared by `scmoe report topo` and `timeline_explorer --placement` so
+/// the table and the rendered timelines can never drift apart.
+pub fn placement_study_rows(topo: &Topology, tokens_per_device: usize,
+                            seed: u64) -> Vec<(&'static str, TopoCosts)> {
+    let base = xl_compute_costs();
+    let token_bytes = 8192;
+    let rt = node_affine_routing(topo.n_devices, topo.devices_per_node,
+                                 topo.n_devices, tokens_per_device, 1, seed);
+    vec![
+        ("uniform (no routing)",
+         TopoCosts::from_topology(&base, topo, tokens_per_device,
+                                  token_bytes, 2.0)),
+        ("routed + block",
+         TopoCosts::from_routing(&base, topo, &rt,
+                                 &Placement::new(topo.n_devices, topo.n_devices),
+                                 token_bytes)),
+        ("routed + affinity-packed",
+         TopoCosts::from_routing(&base, topo, &rt,
+                                 &Placement::affinity_packed(
+                                     &rt, topo.n_devices, topo.devices_per_node),
+                                 token_bytes)),
+        ("routed + skewed (2/dev)",
+         TopoCosts::from_routing(&base, topo, &rt,
+                                 &Placement::imbalance_skewed(
+                                     topo.n_devices, topo.n_devices, 2),
+                                 token_bytes)),
+    ]
+}
+
+/// Routed-traffic placement study on the 4-node IB preset (GPT3-XL
+/// payload): contrast the uniform byte-matrix model against actual routed
+/// bytes under block, affinity-packed (ExFlow-style) and imbalance-skewed
+/// expert placements. Affinity packing the node-affine routing drives the
+/// uplink phases to exactly zero. Phase columns report the worst phase
+/// over *both* A2A directions (dispatch and combine) — skewed layouts
+/// make them asymmetric.
+fn routed_placement_study(args: &Args) {
+    let sc = Scenario::FourNodeA800IBx32;
+    let topo = sc.topology();
+    let kind = MoEKind::ScMoE { k: 1 };
+    let seed = args.u64_or("seed", 7);
+    let tokens_per_device = args.usize_or("tokens", 640);
+
+    let rows = placement_study_rows(&topo, tokens_per_device, seed);
+    println!("== routed placement study ({}, GPT3-XL payload, seed {seed}) ==",
+             sc.label());
+    println!("{:<26} {:>11} {:>11} {:>12} {:>12} {:>6}",
+             "placement", "intra-max", "inter-max", "scmoe-seq",
+             "scmoe-ovl", "slot");
+    for (name, tc) in &rows {
+        // worst phase across dispatch AND combine directions
+        let intra_max = tc.a2a_intra_k1.iter()
+            .chain(tc.a2a_intra_combine_k1.iter())
+            .fold(0.0f64, |m, &t| m.max(t));
+        let inter_max = tc.a2a_inter_k1.iter()
+            .chain(tc.a2a_inter_combine_k1.iter())
+            .fold(0.0f64, |m, &t| m.max(t));
+        let seq = build_pair_schedule_topo(tc, kind, Strategy::Sequential, 0)
+            .makespan();
+        let (slot, ovl) = choose_expert_slot_topo(tc, kind, Strategy::Overlap);
+        println!("{:<26} {:>11} {:>11} {:>12} {:>12} {:>6}",
+                 name, fmt_secs(intra_max), fmt_secs(inter_max),
+                 fmt_secs(seq), fmt_secs(ovl), slot + 1);
+    }
+    println!("routing: node-affine (each token's experts live in its node's \
+              affinity group);");
+    println!("affinity packing makes every route node-local, so the uplink \
+              phases are exactly 0");
+    println!("note: the uniform row carries capacity_factor 2.0 headroom; \
+              compare the routed rows");
+    println!("      against each other for placement-only effects \
+              (seq + phase columns)");
 }
 
 /// Speedup columns of Tables 2 (PCIe), 3 (NVLink) and 4 (NVLink, more

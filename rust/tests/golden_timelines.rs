@@ -7,10 +7,12 @@
 //! start/makespan formats exactly at six decimals and comparisons are
 //! deterministic across platforms.
 
-use scmoe::coordinator::costs::{BlockCosts, MoEKind, Strategy, TopoCosts};
+use scmoe::cluster::{LinkModel, Topology};
+use scmoe::coordinator::costs::{BlockCosts, ComputeCosts, MoEKind, Strategy, TopoCosts};
 use scmoe::coordinator::schedule::{
     build_pair_schedule, build_pair_schedule_topo, PairSchedule,
 };
+use scmoe::moe::{Placement, RoutingTable};
 use scmoe::simtime::Resource;
 
 const GOLDEN: &str = include_str!("golden/timelines.txt");
@@ -43,8 +45,43 @@ fn dyadic_fleet() -> TopoCosts {
         per_device: vec![fast.clone(), fast, slow.clone(), slow],
         a2a_intra_k1: vec![0.25; 4],
         a2a_inter_k1: vec![0.5; 2],
+        a2a_intra_combine_k1: Vec::new(),
+        a2a_inter_combine_k1: Vec::new(),
         devices_per_node: 2,
     }
+}
+
+/// Dyadic routed-placement scenario: 4 devices in 2 nodes with
+/// power-of-two link constants, a node-affine routing table (node 0's
+/// tokens pick experts {0, 2}; node 1's pick {1, 3}), and three expert
+/// placements. Every duration is a dyadic rational, so the snapshot
+/// format stays exact.
+fn routed_table() -> RoutingTable {
+    let indices: Vec<i32> = vec![0, 2, 0, 2, 2, 0, 0, 2, 1, 3, 3, 1, 3, 1, 3, 3];
+    let weights = vec![1.0f32; 16];
+    RoutingTable::build(&indices, &weights, 16, 1, 4, 16)
+}
+
+fn routed_fleet(rt: &RoutingTable, placement: &Placement) -> TopoCosts {
+    let topo = Topology {
+        n_devices: 4,
+        devices_per_node: 2,
+        intra: LinkModel::new(0.0625, 1024.0),
+        inter: Some(LinkModel::new(0.125, 512.0)),
+        compute_scale: 1.0,
+        device_scales: None,
+        node_intra: None,
+    };
+    let base = ComputeCosts {
+        attn: 1.0,
+        mlp: 0.75,
+        se: 0.75,
+        gate: 0.0625,
+        encode: 0.0625,
+        decode: 0.0625,
+        expert_k1: 0.5,
+    };
+    TopoCosts::from_routing(&base, &topo, rt, placement, 64)
 }
 
 fn resource_token(r: Resource) -> String {
@@ -132,6 +169,23 @@ fn generate_lines() -> Vec<String> {
             &build_pair_schedule_topo(&tf, MoEKind::ScMoE { k: 1 },
                                       Strategy::Overlap, slot)));
     }
+
+    let rt = routed_table();
+    for (name, placement) in [
+        ("block", Placement::new(4, 4)),
+        ("affinity", Placement::affinity_packed(&rt, 4, 2)),
+        ("skewed", Placement::imbalance_skewed(4, 4, 2)),
+    ] {
+        let tc = routed_fleet(&rt, &placement);
+        lines.push(render_line(
+            &format!("routed:{name}/seq"),
+            &build_pair_schedule_topo(&tc, MoEKind::ScMoE { k: 1 },
+                                      Strategy::Sequential, 0)));
+        lines.push(render_line(
+            &format!("routed:{name}/overlap-s2"),
+            &build_pair_schedule_topo(&tc, MoEKind::ScMoE { k: 1 },
+                                      Strategy::Overlap, 2)));
+    }
     lines
 }
 
@@ -170,7 +224,8 @@ fn golden_file_covers_every_kind_and_strategy() {
     for needle in [
         "Top1/", "Top2/", "Top3/", "Top1+SE1/", "ScMoE/", "ScMoE-2/",
         "/seq", "/pipe1", "/pipe2", "/pipe4", "/overlap-s0", "/overlap-s3",
-        "/overlap+pipe2-s0", "fleet:",
+        "/overlap+pipe2-s0", "fleet:", "routed:block/", "routed:affinity/",
+        "routed:skewed/",
     ] {
         assert!(GOLDEN.contains(needle), "golden corpus is missing {needle}");
     }

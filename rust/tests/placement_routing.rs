@@ -1,0 +1,200 @@
+//! Placement-sensitivity acceptance tests for the routed A2A cost path:
+//!
+//! - an affinity-packed (fully node-local) placement yields *exactly zero*
+//!   inter-node phase time in both A2A directions, and strictly lower
+//!   sequential and overlap makespans than a maximally-remote placement,
+//!   across seeded random node-affine routings on the 4-node IB preset;
+//! - on the same preset the affinity-packed overlap makespan strictly
+//!   beats the uniform-routing overlap makespan (the ExFlow effect);
+//! - the block layout run through the routed path agrees with the legacy
+//!   block byte matrix, and a symmetric matrix yields combine phases that
+//!   equal the dispatch phases bit-exactly.
+
+use scmoe::cluster::{a2a_transpose, Scenario};
+use scmoe::coordinator::adaptive::choose_expert_slot_topo;
+use scmoe::coordinator::costs::{ComputeCosts, MoEKind, Strategy, TopoCosts};
+use scmoe::coordinator::schedule::build_pair_schedule_topo;
+use scmoe::moe::{Placement, RoutingTable};
+use scmoe::report::efficiency::{node_affine_routing, xl_compute_costs};
+use scmoe::util::propcheck::{check, gen};
+
+/// GPT3-XL-class operator costs — the comm-heavy workload where placement
+/// matters most (shared with the report tables and the placement example).
+fn xl_costs() -> ComputeCosts {
+    xl_compute_costs()
+}
+
+/// Maximally-remote counterpart of an affinity-packed placement: every
+/// expert shifted one node over, so all of its traffic crosses the fabric.
+fn anti_affinity(p: &Placement, devices_per_node: usize) -> Placement {
+    let n_nodes = p.n_devices / devices_per_node;
+    let map = (0..p.n_experts)
+        .map(|e| {
+            let d = p.device_of(e);
+            (d / devices_per_node + 1) % n_nodes * devices_per_node
+                + d % devices_per_node
+        })
+        .collect();
+    Placement::custom(p.n_experts, p.n_devices, map)
+}
+
+#[test]
+fn prop_affinity_packing_zeroes_inter_phases_and_beats_remote() {
+    // Heavy 32 KiB tokens so the remote placement's fabric traffic cannot
+    // hide inside the overlap window (strict comparisons verified for all
+    // seeds below).
+    let topo = Scenario::FourNodeA800IBx32.topology();
+    let base = xl_costs();
+    check("affinity-placement", 12, |rng| {
+        let tokens_per_device = gen::usize_in(rng, 256, 640);
+        let k = gen::usize_in(rng, 1, 2);
+        let seed = rng.next_u64();
+        (tokens_per_device, k, seed)
+    }, |&(tokens_per_device, k, seed)| {
+        let rt = node_affine_routing(32, 8, 32, tokens_per_device, k, seed);
+        let affinity = Placement::affinity_packed(&rt, 32, 8);
+        let remote = anti_affinity(&affinity, 8);
+        let tc_a = TopoCosts::from_routing(&base, &topo, &rt, &affinity, 32768);
+        let tc_r = TopoCosts::from_routing(&base, &topo, &rt, &remote, 32768);
+        tc_a.assert_valid();
+        tc_r.assert_valid();
+        // fully node-local traffic: the uplink phases are exactly zero in
+        // both directions — not merely small
+        if !tc_a.a2a_inter_k1.iter().all(|&t| t == 0.0)
+            || !tc_a.a2a_inter_combine_k1.iter().all(|&t| t == 0.0)
+        {
+            return Err(format!("nonzero inter phase: {:?} / {:?}",
+                               tc_a.a2a_inter_k1, tc_a.a2a_inter_combine_k1));
+        }
+        let kind = MoEKind::ScMoE { k };
+        let seq_a = build_pair_schedule_topo(
+            &tc_a, kind, Strategy::Sequential, 0).makespan();
+        let seq_r = build_pair_schedule_topo(
+            &tc_r, kind, Strategy::Sequential, 0).makespan();
+        if seq_a >= seq_r {
+            return Err(format!("sequential: local {seq_a} !< remote {seq_r}"));
+        }
+        let ovl_a = build_pair_schedule_topo(
+            &tc_a, kind, Strategy::Overlap, 2).makespan();
+        let ovl_r = build_pair_schedule_topo(
+            &tc_r, kind, Strategy::Overlap, 2).makespan();
+        if ovl_a >= ovl_r {
+            return Err(format!("overlap: local {ovl_a} !< remote {ovl_r}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn affinity_packed_overlap_beats_uniform_routing_on_4node_ib() {
+    // The headline acceptance scenario: GPT3-XL payload on the 4-node IB
+    // fleet. Affinity packing the node-affine routing drives the uplink
+    // phases to exactly zero and strictly beats the uniform model's
+    // overlap and sequential makespans.
+    //
+    // Attribution caveat (pinned by the block-placement assertions below):
+    // vs *uniform*, part of the win is volume normalization — the uniform
+    // model carries capacity_factor = 2.0 headroom that routed bytes
+    // don't. The placement-only effect at this 8 KiB payload shows up on
+    // the sequential makespan and the uplink phases (affinity strictly
+    // beats *routed + block* there), while the overlap window hides both
+    // routed variants' comm entirely; the heavier-payload property test
+    // above pins the placement-only overlap win.
+    let topo = Scenario::FourNodeA800IBx32.topology();
+    let base = xl_costs();
+    let kind = MoEKind::ScMoE { k: 1 };
+
+    let uniform = TopoCosts::from_topology(&base, &topo, 640, 8192, 2.0);
+    let rt = node_affine_routing(32, 8, 32, 640, 1, 7);
+    assert_eq!(rt.dropped, 0, "demo routing must not drop routes");
+    let affinity = Placement::affinity_packed(&rt, 32, 8);
+    let routed = TopoCosts::from_routing(&base, &topo, &rt, &affinity, 8192);
+
+    assert!(routed.a2a_inter_k1.iter().all(|&t| t == 0.0),
+            "affinity packing must zero the dispatch uplink phases");
+    assert!(routed.a2a_inter_combine_k1.iter().all(|&t| t == 0.0),
+            "affinity packing must zero the combine uplink phases");
+
+    let (_, ovl_uniform) = choose_expert_slot_topo(&uniform, kind, Strategy::Overlap);
+    let (_, ovl_routed) = choose_expert_slot_topo(&routed, kind, Strategy::Overlap);
+    assert!(ovl_routed < ovl_uniform,
+            "affinity overlap {ovl_routed} must beat uniform {ovl_uniform}");
+
+    let seq_uniform = build_pair_schedule_topo(
+        &uniform, kind, Strategy::Sequential, 0).makespan();
+    let seq_routed = build_pair_schedule_topo(
+        &routed, kind, Strategy::Sequential, 0).makespan();
+    assert!(seq_routed < seq_uniform,
+            "affinity sequential {seq_routed} must beat uniform {seq_uniform}");
+
+    // placement-only comparison: same routing, same bytes, block layout —
+    // block keeps uplink traffic and pays for it on the sequential path
+    let block = TopoCosts::from_routing(&base, &topo, &rt,
+                                        &Placement::new(32, 32), 8192);
+    assert!(block.a2a_inter_k1.iter().any(|&t| t > 0.0),
+            "block layout must keep some uplink traffic");
+    let seq_block = build_pair_schedule_topo(
+        &block, kind, Strategy::Sequential, 0).makespan();
+    assert!(seq_routed < seq_block,
+            "placement-only: affinity sequential {seq_routed} must beat \
+             routed-block {seq_block}");
+}
+
+#[test]
+fn symmetric_routed_matrix_gives_bitexact_combine_phases() {
+    // a symmetric byte matrix transposes to itself, so the combine phase
+    // vectors must equal the dispatch vectors exactly
+    let topo = Scenario::TwoNodeA800x16.topology();
+    let base = xl_costs();
+    // every device's tokens route to its own expert id mirrored pairwise:
+    // token block d routes to expert d (pure self-traffic => symmetric)
+    let tokens_per_device = 4;
+    let n_tokens = 16 * tokens_per_device;
+    let indices: Vec<i32> = (0..n_tokens)
+        .map(|t| (t / tokens_per_device) as i32)
+        .collect();
+    let weights = vec![1.0f32; n_tokens];
+    let rt = RoutingTable::build(&indices, &weights, n_tokens, 1, 16, n_tokens);
+    let p = Placement::new(16, 16);
+    let disp = rt.a2a_bytes_placed(&p, 4096);
+    assert_eq!(a2a_transpose(&disp, 16), disp, "matrix must be symmetric");
+    let tc = TopoCosts::from_routing(&base, &topo, &rt, &p, 4096);
+    assert_eq!(tc.a2a_intra_k1, tc.a2a_intra_combine_k1);
+    assert_eq!(tc.a2a_inter_k1, tc.a2a_inter_combine_k1);
+}
+
+#[test]
+fn routed_block_placement_matches_legacy_byte_matrix() {
+    let rt = node_affine_routing(8, 4, 8, 16, 2, 3);
+    let legacy = rt.a2a_bytes(8, 512);
+    let placed = rt.a2a_bytes_placed(&Placement::new(8, 8), 512);
+    assert_eq!(legacy, placed);
+}
+
+#[test]
+fn skewed_placement_concentrates_and_slows_the_fleet() {
+    // packing all experts onto half the devices cannot make the simulated
+    // fleet faster than the balanced block layout, and it concentrates
+    // every dispatch byte on the loaded device columns
+    let topo = Scenario::FourNodeA800IBx32.topology();
+    let base = xl_costs();
+    let rt = node_affine_routing(32, 8, 32, 256, 1, 11);
+    let block = TopoCosts::from_routing(&base, &topo, &rt,
+                                        &Placement::new(32, 32), 8192);
+    let skew_p = Placement::imbalance_skewed(32, 32, 2);
+    let skew = TopoCosts::from_routing(&base, &topo, &rt, &skew_p, 8192);
+    let m = rt.a2a_bytes_placed(&skew_p, 8192);
+    for dst in 16..32 {
+        for src in 0..32 {
+            assert_eq!(m[src * 32 + dst], 0,
+                       "unloaded device {dst} must receive nothing");
+        }
+    }
+    let kind = MoEKind::ScMoE { k: 1 };
+    let seq_block = build_pair_schedule_topo(
+        &block, kind, Strategy::Sequential, 0).makespan();
+    let seq_skew = build_pair_schedule_topo(
+        &skew, kind, Strategy::Sequential, 0).makespan();
+    assert!(seq_skew >= seq_block,
+            "skewed {seq_skew} should not beat block {seq_block}");
+}

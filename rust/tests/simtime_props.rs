@@ -190,6 +190,8 @@ fn prop_topo_fleet_makespan_monotone() {
             per_device: vec![c.clone(); 4],
             a2a_intra_k1: vec![c.a2a_k1; 4],
             a2a_inter_k1: vec![*inter; 2],
+            a2a_intra_combine_k1: Vec::new(),
+            a2a_inter_combine_k1: Vec::new(),
             devices_per_node: 2,
         };
         let mut bumped = base.clone();

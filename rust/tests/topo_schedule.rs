@@ -88,8 +88,9 @@ fn adaptive_slot_choice_differs_across_topology_presets() {
     // topology. PCIe and the Ethernet-bridged 2-node fleet pull the
     // experts to the earliest slot (dispatch is the bottleneck); the
     // NVLink-class, IB, and heterogeneous fleets keep the post-attention
-    // slot. Margins between best and runner-up slots are 60us-730us —
-    // far beyond f64 noise.
+    // slot. Margins between best and runner-up slots are 60us-1.2ms
+    // (the hetero margin grew when its A30 node moved to per-node PCIe
+    // intra links) — far beyond f64 noise.
     let kind = MoEKind::ScMoE { k: 1 };
     let slots: Vec<usize> = Scenario::extended()
         .iter()
@@ -118,7 +119,8 @@ fn adaptive_slot_choice_differs_across_topology_presets() {
 fn hetero_fleet_is_gated_by_its_slow_node() {
     // The mixed A800+A30 preset's makespan must exceed the homogeneous
     // NVLink preset's (same device count, same workload): stragglers set
-    // the barrier.
+    // the barrier — on both compute (A30 op scale) and communication
+    // (the A30 node's intra link is PCIe, not NVLink).
     let nv = build_pair_schedule_topo(
         &topo_proxy_costs(Scenario::NvlinkA800x8),
         MoEKind::Standard { k: 2 }, Strategy::Sequential, 0).makespan();
@@ -126,4 +128,15 @@ fn hetero_fleet_is_gated_by_its_slow_node() {
         &topo_proxy_costs(Scenario::HeteroA800A30x8),
         MoEKind::Standard { k: 2 }, Strategy::Sequential, 0).makespan();
     assert!(hetero > nv, "hetero {hetero} should exceed nvlink {nv}");
+}
+
+#[test]
+fn hetero_a30_node_pays_pcie_intra_phases() {
+    // ROADMAP item: the mixed fleet's A30 node runs PCIe while the A800
+    // node keeps NVLink — its intra-node A2A phases must be an order of
+    // magnitude slower for the same uniform traffic.
+    let tc = topo_proxy_costs(Scenario::HeteroA800A30x8);
+    let a800 = tc.a2a_intra_k1[0];
+    let a30 = tc.a2a_intra_k1[7];
+    assert!(a30 > a800 * 10.0, "A30 intra {a30} vs A800 intra {a800}");
 }

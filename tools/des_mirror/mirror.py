@@ -1,0 +1,517 @@
+"""Faithful Python mirror of the scmoe Rust DES + schedule builders.
+
+Used offline (no Rust toolchain in this container) to
+  1. sanity-check the new topology-aware builders' properties,
+  2. choose test constants (adaptive slots per preset),
+  3. generate rust/tests/golden/timelines.txt.
+
+Every function transcribes the Rust source line-by-line; f64 arithmetic is
+IEEE double in both languages, so results are bit-identical.
+"""
+import heapq
+from dataclasses import dataclass, replace
+from typing import Optional
+
+FREE = ("free",)
+
+def comp(d): return ("compute", d)
+def comm(d): return ("comm", d)
+def link(n): return ("link", n)
+
+class Sim:
+    def __init__(self):
+        self.tasks = []  # (label, resource, duration, deps)
+
+    def add(self, label, resource, duration, deps):
+        i = len(self.tasks)
+        for d in deps:
+            assert d < i
+        assert duration >= 0.0
+        self.tasks.append((label, resource, float(duration), list(deps)))
+        return i
+
+    def run(self):
+        n = len(self.tasks)
+        remaining = [len(t[3]) for t in self.tasks]
+        dependents = [[] for _ in range(n)]
+        for i, t in enumerate(self.tasks):
+            for d in t[3]:
+                dependents[d].append(i)
+        heap = []
+        ready_at = [0.0] * n
+        for i, t in enumerate(self.tasks):
+            if not t[3]:
+                heapq.heappush(heap, (0.0, i))
+        free = {}
+        spans = [None] * n
+        done = 0
+        while heap:
+            _, i = heapq.heappop(heap)
+            label, res, dur, deps = self.tasks[i]
+            if res == FREE:
+                start = ready_at[i]
+            else:
+                start = max(free.get(res, 0.0), ready_at[i])
+            end = start + dur
+            if res != FREE:
+                free[res] = end
+            spans[i] = (i, label, res, start, end)
+            done += 1
+            for dep in dependents[i]:
+                ready_at[dep] = max(ready_at[dep], end)
+                remaining[dep] -= 1
+                if remaining[dep] == 0:
+                    heapq.heappush(heap, (ready_at[dep], dep))
+        assert done == n, "cycle"
+        return spans
+
+    def makespan(self):
+        return max((s[4] for s in self.run()), default=0.0)
+
+
+# --- costs ------------------------------------------------------------------
+
+@dataclass
+class BlockCosts:
+    attn: float; mlp: float; se: float; gate: float
+    encode: float; decode: float; expert_k1: float; a2a_k1: float
+
+    def expert(self, k): return self.expert_k1 * float(k)
+    def a2a(self, k): return self.a2a_k1 * float(k)
+
+@dataclass
+class ComputeCosts:
+    attn: float; mlp: float; se: float; gate: float
+    encode: float; decode: float; expert_k1: float
+
+def swin_proxy():
+    return ComputeCosts(1.00e-3, 0.75e-3, 0.75e-3, 0.06e-3, 0.05e-3, 0.05e-3, 0.80e-3)
+
+@dataclass
+class LinkModel:
+    alpha: float; beta: float
+
+def pcie(): return LinkModel(10e-6, 2.9e9)
+def nvlink(): return LinkModel(1e-6, 50e9)
+def ethernet(): return LinkModel(30e-6, 30e9)
+def infiniband(): return LinkModel(5e-6, 60e9)
+
+def uniform_a2a_bytes(n, bpp):
+    m = [0] * (n * n)
+    for s in range(n):
+        for d in range(n):
+            if s != d:
+                m[s * n + d] = bpp
+    return m
+
+def a2a_time(bytes_, n_devices, devices_per_node, intra, inter):
+    n_nodes = n_devices // devices_per_node
+    node_of = lambda d: d // devices_per_node
+    worst_dev = 0.0
+    for src in range(n_devices):
+        out_bytes = 0; msgs = 0
+        for dst in range(n_devices):
+            if dst == src: continue
+            b = bytes_[src * n_devices + dst]
+            if b > 0:
+                out_bytes += b; msgs += 1
+        t = intra.alpha * float(msgs) + float(out_bytes) / intra.beta
+        worst_dev = max(worst_dev, t)
+    worst_node = 0.0
+    if inter is not None and n_nodes > 1:
+        for node in range(n_nodes):
+            cross = 0
+            for src in range(n_devices):
+                if node_of(src) != node: continue
+                for dst in range(n_devices):
+                    if node_of(dst) != node:
+                        cross += bytes_[src * n_devices + dst]
+            if cross > 0:
+                worst_node = max(worst_node, inter.alpha + float(cross) / inter.beta)
+    return max(worst_dev, worst_node)
+
+def a2a_decompose(bytes_, n_devices, devices_per_node, intra, inter):
+    n_nodes = n_devices // devices_per_node
+    node_of = lambda d: d // devices_per_node
+    split = inter is not None and n_nodes > 1
+    intra_phase = []
+    for src in range(n_devices):
+        out_bytes = 0; msgs = 0
+        for dst in range(n_devices):
+            if dst == src or (split and node_of(dst) != node_of(src)):
+                continue
+            b = bytes_[src * n_devices + dst]
+            if b > 0:
+                out_bytes += b; msgs += 1
+        intra_phase.append(intra.alpha * float(msgs) + float(out_bytes) / intra.beta)
+    inter_phase = []
+    if split:
+        for node in range(n_nodes):
+            cross = 0
+            for src in range(n_devices):
+                if node_of(src) != node: continue
+                for dst in range(n_devices):
+                    if node_of(dst) != node:
+                        cross += bytes_[src * n_devices + dst]
+            inter_phase.append(inter.alpha + float(cross) / inter.beta if cross > 0 else 0.0)
+    return intra_phase, inter_phase
+
+@dataclass
+class Topology:
+    n_devices: int; devices_per_node: int
+    intra: LinkModel; inter: Optional[LinkModel]
+    compute_scale: float; device_scales: Optional[list]
+
+    def device_compute_scale(self, d):
+        return self.device_scales[d] if self.device_scales else self.compute_scale
+
+SCENARIOS = {
+    "pcie": Topology(8, 8, pcie(), None, 1.0, None),
+    "nvlink": Topology(8, 8, nvlink(), None, 1.9, None),
+    "2node": Topology(16, 8, nvlink(), ethernet(), 1.9, None),
+    "4node-ib": Topology(32, 8, nvlink(), infiniband(), 1.9, None),
+    "hetero": Topology(8, 4, nvlink(), ethernet(), 1.9,
+                       [1.9, 1.9, 1.9, 1.9, 1.0, 1.0, 1.0, 1.0]),
+}
+
+def block_from_topology(base, topo, tokens_per_device, token_bytes, cf):
+    s = topo.compute_scale
+    bpp = int((float(tokens_per_device) * cf / float(topo.n_devices)) * float(token_bytes))
+    m = uniform_a2a_bytes(topo.n_devices, bpp)
+    a2a_k1 = a2a_time(m, topo.n_devices, topo.devices_per_node, topo.intra, topo.inter)
+    return BlockCosts(base.attn / s, base.mlp / s, base.se / s, base.gate / s,
+                      base.encode / s, base.decode / s, base.expert_k1 / s, a2a_k1)
+
+@dataclass
+class TopoCosts:
+    per_device: list
+    a2a_intra_k1: list
+    a2a_inter_k1: list
+    devices_per_node: int
+
+    def n_devices(self): return len(self.per_device)
+    def devices_of(self, node):
+        lo = node * self.devices_per_node
+        return range(lo, min(lo + self.devices_per_node, self.n_devices()))
+    def a2a_intra(self, d, k): return self.a2a_intra_k1[d] * float(k)
+    def a2a_inter(self, n, k): return self.a2a_inter_k1[n] * float(k)
+
+def topo_from_block(c):
+    return TopoCosts([replace(c)], [c.a2a_k1], [], 1)
+
+def topo_from_topology(base, topo, tokens_per_device, token_bytes, cf):
+    bpp = int((float(tokens_per_device) * cf / float(topo.n_devices)) * float(token_bytes))
+    m = uniform_a2a_bytes(topo.n_devices, bpp)
+    intra, inter = a2a_decompose(m, topo.n_devices, topo.devices_per_node,
+                                 topo.intra, topo.inter)
+    flat = a2a_time(m, topo.n_devices, topo.devices_per_node, topo.intra, topo.inter)
+    per_device = []
+    for d in range(topo.n_devices):
+        s = topo.device_compute_scale(d)
+        per_device.append(BlockCosts(base.attn / s, base.mlp / s, base.se / s,
+                                     base.gate / s, base.encode / s, base.decode / s,
+                                     base.expert_k1 / s, flat))
+    return TopoCosts(per_device, intra, inter, topo.devices_per_node)
+
+
+# --- kinds / strategies -----------------------------------------------------
+
+def routed_k(kind):
+    name, k = kind
+    return k
+
+def has_shared_expert(kind):
+    return kind[0] in ("shared", "scmoe")
+
+# kind: ("std", k) | ("shared", 1) | ("scmoe", k)
+
+# --- legacy single-device builders (schedule.rs) ----------------------------
+
+DEV = 0
+
+def build_sequential(c, kind, k):
+    sim = Sim()
+    attn_l = sim.add("Attn(l)", comp(DEV), c.attn, [])
+    mlp_l = sim.add("MLP(l)", comp(DEV), c.mlp, [attn_l])
+    attn_m = sim.add("Attn(l+1)", comp(DEV), c.attn, [mlp_l])
+    gate = sim.add("Gate", comp(DEV), c.gate, [attn_m])
+    enc = sim.add("Encode", comp(DEV), c.encode, [gate])
+    disp = sim.add("A2A-D", comm(DEV), c.a2a(k), [enc])
+    expert = sim.add("Expert", comp(DEV), c.expert(k), [disp])
+    comb = sim.add("A2A-C", comm(DEV), c.a2a(k), [expert])
+    decode_deps = [comb]
+    if has_shared_expert(kind):
+        se = sim.add("SE", comp(DEV), c.se, [attn_m])
+        decode_deps.append(se)
+    sim.add("Decode", comp(DEV), c.decode, decode_deps)
+    return sim
+
+def build_pipelined(c, kind, k, chunks):
+    sim = Sim()
+    attn_l = sim.add("Attn(l)", comp(DEV), c.attn, [])
+    mlp_l = sim.add("MLP(l)", comp(DEV), c.mlp, [attn_l])
+    attn_m = sim.add("Attn(l+1)", comp(DEV), c.attn, [mlp_l])
+    gate = sim.add("Gate", comp(DEV), c.gate, [attn_m])
+    enc = sim.add("Encode", comp(DEV), c.encode, [gate])
+    fc = float(chunks)
+    combines = []
+    prev_disp = None
+    for i in range(chunks):
+        dd = [enc, prev_disp] if prev_disp is not None else [enc]
+        disp = sim.add(f"A2A-D{i}", comm(DEV), c.a2a(k) / fc, dd)
+        prev_disp = disp
+        expert = sim.add(f"Expert{i}", comp(DEV), c.expert(k) / fc, [disp])
+        comb = sim.add(f"A2A-C{i}", comm(DEV), c.a2a(k) / fc, [expert])
+        combines.append(comb)
+    decode_deps = combines[:]
+    if has_shared_expert(kind):
+        se = sim.add("SE", comp(DEV), c.se, [attn_m])
+        decode_deps.append(se)
+    sim.add("Decode", comp(DEV), c.decode, decode_deps)
+    return sim
+
+def build_overlap(c, kind, k, slot, chunks):
+    assert slot <= 3 and chunks >= 1
+    sim = Sim()
+    attn_l = sim.add("Attn(l)", comp(DEV), c.attn, [])
+    gate = sim.add("Gate", comp(DEV), c.gate, [attn_l])
+    enc = sim.add("Encode", comp(DEV), c.encode, [gate])
+    fc = float(chunks)
+    dispatches = []
+    prev = None
+    for i in range(chunks):
+        deps = [enc, prev] if prev is not None else [enc]
+        d = sim.add(f"A2A-D{i}", comm(DEV), c.a2a(k) / fc, deps)
+        dispatches.append(d)
+        prev = d
+    experts = []
+    last_backbone = attn_l
+    window = [("MLP(l)", c.mlp), ("Attn(l+1)", c.attn), ("SE(l+1)", c.se)]
+    def place_experts(after):
+        tail = after
+        for i, d in enumerate(dispatches):
+            e = sim.add(f"Expert{i}", comp(DEV), c.expert(k) / fc, [d, tail])
+            experts.append(e)
+            tail = e
+        return tail
+    if slot == 0:
+        last_backbone = place_experts(last_backbone)
+    for i, (label, dur) in enumerate(window):
+        last_backbone = sim.add(label, comp(DEV), dur, [last_backbone])
+        if slot == i + 1:
+            last_backbone = place_experts(last_backbone)
+    combines = []
+    for i, e in enumerate(experts):
+        combines.append(sim.add(f"A2A-C{i}", comm(DEV), c.a2a(k) / fc, [e]))
+    deps = combines[:]
+    deps.append(last_backbone)
+    sim.add("Decode", comp(DEV), c.decode, deps)
+    return sim
+
+def build_pair_schedule(c, kind, strat, slot):
+    k = routed_k(kind)
+    name = strat[0]
+    if name == "seq":
+        return build_sequential(c, kind, k)
+    if name == "pipe":
+        return build_pipelined(c, kind, k, strat[1])
+    if name == "overlap":
+        return build_overlap(c, kind, k, slot, 1)
+    if name == "overlap-pipe":
+        return build_overlap(c, kind, k, slot, strat[1])
+    raise ValueError(name)
+
+def choose_expert_slot(c, kind, strat):
+    best = (0, float("inf"))
+    for slot in range(4):
+        t = build_pair_schedule(c, kind, strat, slot).makespan()
+        if t < best[1]:
+            best = (slot, t)
+    return best
+
+# --- topo builders (new code) -----------------------------------------------
+
+def build_sequential_topo(tc, kind, k):
+    n = tc.n_devices()
+    n_links = len(tc.a2a_inter_k1)
+    sim = Sim()
+    attn_m = []; enc = []
+    for d in range(n):
+        c = tc.per_device[d]
+        attn_l = sim.add("Attn(l)", comp(d), c.attn, [])
+        mlp_l = sim.add("MLP(l)", comp(d), c.mlp, [attn_l])
+        a_m = sim.add("Attn(l+1)", comp(d), c.attn, [mlp_l])
+        gate = sim.add("Gate", comp(d), c.gate, [a_m])
+        e = sim.add("Encode", comp(d), c.encode, [gate])
+        attn_m.append(a_m); enc.append(e)
+    disp = []
+    for d in range(n):
+        disp.append(sim.add("A2A-D", comm(d), tc.a2a_intra(d, k), [enc[d]]))
+    for node in range(n_links):
+        deps = [enc[d] for d in tc.devices_of(node)]
+        disp.append(sim.add("A2A-Dx", link(node), tc.a2a_inter(node, k), deps))
+    experts = []
+    for d in range(n):
+        c = tc.per_device[d]
+        experts.append(sim.add("Expert", comp(d), c.expert(k), disp))
+    comb = []
+    for d in range(n):
+        comb.append(sim.add("A2A-C", comm(d), tc.a2a_intra(d, k), [experts[d]]))
+    for node in range(n_links):
+        deps = [experts[d] for d in tc.devices_of(node)]
+        comb.append(sim.add("A2A-Cx", link(node), tc.a2a_inter(node, k), deps))
+    for d in range(n):
+        c = tc.per_device[d]
+        deps = comb[:]
+        if has_shared_expert(kind):
+            se = sim.add("SE", comp(d), c.se, [attn_m[d]])
+            deps.append(se)
+        sim.add("Decode", comp(d), c.decode, deps)
+    return sim
+
+def build_pipelined_topo(tc, kind, k, chunks):
+    n = tc.n_devices()
+    n_links = len(tc.a2a_inter_k1)
+    sim = Sim()
+    attn_m = []; enc = []
+    for d in range(n):
+        c = tc.per_device[d]
+        attn_l = sim.add("Attn(l)", comp(d), c.attn, [])
+        mlp_l = sim.add("MLP(l)", comp(d), c.mlp, [attn_l])
+        a_m = sim.add("Attn(l+1)", comp(d), c.attn, [mlp_l])
+        gate = sim.add("Gate", comp(d), c.gate, [a_m])
+        e = sim.add("Encode", comp(d), c.encode, [gate])
+        attn_m.append(a_m); enc.append(e)
+    fc = float(chunks)
+    prev_d = [None] * n
+    prev_x = [None] * n_links
+    combines = []
+    for i in range(chunks):
+        disp_i = []
+        for d in range(n):
+            deps = [enc[d]]
+            if prev_d[d] is not None:
+                deps.append(prev_d[d])
+            t = sim.add(f"A2A-D{i}", comm(d), tc.a2a_intra(d, k) / fc, deps)
+            prev_d[d] = t
+            disp_i.append(t)
+        for node in range(n_links):
+            deps = [enc[d] for d in tc.devices_of(node)]
+            if prev_x[node] is not None:
+                deps.append(prev_x[node])
+            t = sim.add(f"A2A-Dx{i}", link(node), tc.a2a_inter(node, k) / fc, deps)
+            prev_x[node] = t
+            disp_i.append(t)
+        experts_i = []
+        for d in range(n):
+            c = tc.per_device[d]
+            experts_i.append(sim.add(f"Expert{i}", comp(d), c.expert(k) / fc, disp_i))
+        for d in range(n):
+            combines.append(sim.add(f"A2A-C{i}", comm(d), tc.a2a_intra(d, k) / fc,
+                                    [experts_i[d]]))
+        for node in range(n_links):
+            deps = [experts_i[d] for d in tc.devices_of(node)]
+            combines.append(sim.add(f"A2A-Cx{i}", link(node),
+                                    tc.a2a_inter(node, k) / fc, deps))
+    for d in range(n):
+        c = tc.per_device[d]
+        deps = combines[:]
+        if has_shared_expert(kind):
+            se = sim.add("SE", comp(d), c.se, [attn_m[d]])
+            deps.append(se)
+        sim.add("Decode", comp(d), c.decode, deps)
+    return sim
+
+def build_overlap_topo(tc, kind, k, slot, chunks):
+    assert slot <= 3 and chunks >= 1
+    n = tc.n_devices()
+    n_links = len(tc.a2a_inter_k1)
+    sim = Sim()
+    attn_l_ids = []; enc = []
+    for d in range(n):
+        c = tc.per_device[d]
+        attn_l = sim.add("Attn(l)", comp(d), c.attn, [])
+        gate = sim.add("Gate", comp(d), c.gate, [attn_l])
+        e = sim.add("Encode", comp(d), c.encode, [gate])
+        attn_l_ids.append(attn_l); enc.append(e)
+    fc = float(chunks)
+    disp_chunks = []
+    prev_d = [None] * n
+    prev_x = [None] * n_links
+    for i in range(chunks):
+        disp_i = []
+        for d in range(n):
+            deps = [enc[d]]
+            if prev_d[d] is not None:
+                deps.append(prev_d[d])
+            t = sim.add(f"A2A-D{i}", comm(d), tc.a2a_intra(d, k) / fc, deps)
+            prev_d[d] = t
+            disp_i.append(t)
+        for node in range(n_links):
+            deps = [enc[d] for d in tc.devices_of(node)]
+            if prev_x[node] is not None:
+                deps.append(prev_x[node])
+            t = sim.add(f"A2A-Dx{i}", link(node), tc.a2a_inter(node, k) / fc, deps)
+            prev_x[node] = t
+            disp_i.append(t)
+        disp_chunks.append(disp_i)
+    last_backbone = [0] * n
+    experts_by_dev = []
+    for d in range(n):
+        c = tc.per_device[d]
+        dev_experts = []
+        def place(after):
+            tail = after
+            for i, disp_i in enumerate(disp_chunks):
+                deps = disp_i[:]
+                deps.append(tail)
+                e = sim.add(f"Expert{i}", comp(d), c.expert(k) / fc, deps)
+                dev_experts.append(e)
+                tail = e
+            return tail
+        tail = attn_l_ids[d]
+        if slot == 0:
+            tail = place(tail)
+        window = [("MLP(l)", c.mlp), ("Attn(l+1)", c.attn), ("SE(l+1)", c.se)]
+        for wi, (label, dur) in enumerate(window):
+            tail = sim.add(label, comp(d), dur, [tail])
+            if slot == wi + 1:
+                tail = place(tail)
+        last_backbone[d] = tail
+        experts_by_dev.append(dev_experts)
+    combines = []
+    for i in range(chunks):
+        for d in range(n):
+            combines.append(sim.add(f"A2A-C{i}", comm(d), tc.a2a_intra(d, k) / fc,
+                                    [experts_by_dev[d][i]]))
+        for node in range(n_links):
+            deps = [experts_by_dev[d][i] for d in tc.devices_of(node)]
+            combines.append(sim.add(f"A2A-Cx{i}", link(node),
+                                    tc.a2a_inter(node, k) / fc, deps))
+    for d in range(n):
+        c = tc.per_device[d]
+        deps = combines[:]
+        deps.append(last_backbone[d])
+        sim.add("Decode", comp(d), c.decode, deps)
+    return sim
+
+def build_pair_schedule_topo(tc, kind, strat, slot):
+    k = routed_k(kind)
+    name = strat[0]
+    if name == "seq":
+        return build_sequential_topo(tc, kind, k)
+    if name == "pipe":
+        return build_pipelined_topo(tc, kind, k, strat[1])
+    if name == "overlap":
+        return build_overlap_topo(tc, kind, k, slot, 1)
+    if name == "overlap-pipe":
+        return build_overlap_topo(tc, kind, k, slot, strat[1])
+    raise ValueError(name)
+
+def choose_expert_slot_topo(tc, kind, strat):
+    best = (0, float("inf"))
+    for slot in range(4):
+        t = build_pair_schedule_topo(tc, kind, strat, slot).makespan()
+        if t < best[1]:
+            best = (slot, t)
+    return best
