@@ -11,11 +11,20 @@
 //! the uniform byte-matrix model on a multi-node preset (default
 //! `--scenario 4node-ib`): affinity packing a node-affine routing drives
 //! the `link[n]` rows to zero-length phases.
+//!
+//! `--chunks N` sets the pipeline depth of the chunked rows (default 2).
+//! Every chunk pays its own launch latency, so deep chunking visibly
+//! stops helping; in `--fleet` mode the chunked ScMoE timeline is also
+//! rendered with MoNTA-style intra/inter staging and compared against
+//! the phase-chained baseline.
 
 use scmoe::cluster::Scenario;
 use scmoe::coordinator::adaptive::{choose_expert_slot, choose_expert_slot_topo, eq11_objective};
 use scmoe::coordinator::costs::{MoEKind, Strategy};
-use scmoe::coordinator::schedule::{build_pair_schedule, build_pair_schedule_topo};
+use scmoe::coordinator::schedule::{
+    build_pair_schedule, build_pair_schedule_topo, build_pair_schedule_topo_with,
+    ChunkPipelining,
+};
 use scmoe::coordinator::timeline;
 use scmoe::report::efficiency::{
     placement_study_rows, proxy_costs, topo_proxy_costs, xl_topo_proxy_costs,
@@ -37,21 +46,22 @@ fn main() {
     let sc = Scenario::parse(&args.str_or("scenario", "pcie"))
         .unwrap_or(Scenario::PcieA30x8);
     let width = args.usize_or("width", 110);
+    let chunks = args.usize_or("chunks", 2).max(1);
     if args.flag("fleet") {
-        fleet_mode(sc, width);
+        fleet_mode(sc, width, chunks);
         return;
     }
     let c = proxy_costs(sc);
-    println!("### {} (Fig. 6 reproduction) ###", sc.label());
+    println!("### {} (Fig. 6 reproduction, {chunks} chunks) ###", sc.label());
 
     let rows: Vec<(&str, MoEKind, Strategy)> = vec![
         ("1. Standard top-2, sequential", MoEKind::Standard { k: 2 }, Strategy::Sequential),
         ("2. Standard top-2, pipelined", MoEKind::Standard { k: 2 },
-         Strategy::Pipelined { chunks: 2 }),
+         Strategy::Pipelined { chunks }),
         ("3. Shared-expert MoE", MoEKind::SharedExpert, Strategy::Pipelined { chunks: 1 }),
         ("4. ScMoE + overlapping", MoEKind::ScMoE { k: 1 }, Strategy::Overlap),
         ("5. ScMoE + overlapping + pipelining", MoEKind::ScMoE { k: 1 },
-         Strategy::OverlapPipelined { chunks: 2 }),
+         Strategy::OverlapPipelined { chunks }),
     ];
     for (label, kind, strat) in rows {
         let slot = match strat {
@@ -76,7 +86,7 @@ fn main() {
     println!("chosen: slot {} ({:.3}ms)", best + 1, t * 1e3);
 }
 
-fn fleet_mode(sc: Scenario, width: usize) {
+fn fleet_mode(sc: Scenario, width: usize, chunks: usize) {
     let tc = topo_proxy_costs(sc);
     println!("### {} — topology-aware fleet ({} devices, {} nodes) ###",
              sc.label(), tc.n_devices(), tc.n_nodes());
@@ -90,6 +100,24 @@ fn fleet_mode(sc: Scenario, width: usize) {
     println!("\n--- ScMoE overlapping (fleet, adaptive slot {}) ---", slot + 1);
     print!("{}", timeline::render(&spans, width));
     println!("\nspeedup: {:.2}x", makespan(&base_spans) / makespan(&spans));
+
+    if chunks > 1 {
+        // chunked MoE stream: every chunk pays its own α; the uplink task
+        // of chunk i is staged behind the node's intra tasks and overlaps
+        // chunk i+1's intra phase (MoNTA-style)
+        let strat = Strategy::OverlapPipelined { chunks };
+        let (cslot, staged) = choose_expert_slot_topo(&tc, kind, strat);
+        let cspans =
+            build_pair_schedule_topo(&tc, kind, strat, cslot).run();
+        println!("\n--- ScMoE overlap + {chunks}-chunk pipeline \
+                  (staged, slot {}) ---", cslot + 1);
+        print!("{}", timeline::render(&cspans, width));
+        let chained = build_pair_schedule_topo_with(
+            &tc, kind, strat, cslot, ChunkPipelining::PhaseChained).makespan();
+        println!("\nstaged {:.3}ms vs phase-chained {:.3}ms \
+                  (intra/inter overlap saves {:.0}us)",
+                 staged * 1e3, chained * 1e3, (chained - staged) * 1e6);
+    }
 
     // The slot choice is workload-dependent: the light Swin payload agrees
     // on one slot everywhere, while the comm-heavy GPT3-XL payload makes

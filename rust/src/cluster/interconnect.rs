@@ -88,13 +88,30 @@ pub fn a2a_time_per_node(
     intra: &[LinkModel],
     inter: Option<LinkModel>,
 ) -> f64 {
+    a2a_time_split_per_node(bytes, n_devices, devices_per_node, intra, inter).0
+}
+
+/// [`a2a_time_per_node`] plus the launch-latency decomposition of the
+/// bottleneck: returns `(time, alpha_part)` where `alpha_part` is the
+/// α·messages component of whichever device (or node uplink) sets the
+/// collective time. Chunked pipelines pay `alpha_part` once per chunk
+/// while only the remaining byte term divides (see [`a2a_chunk_time`]).
+/// Ties resolve to the first maximum in device order, then node order —
+/// deterministic, and the time component is identical to the plain bound.
+pub fn a2a_time_split_per_node(
+    bytes: &[usize],
+    n_devices: usize,
+    devices_per_node: usize,
+    intra: &[LinkModel],
+    inter: Option<LinkModel>,
+) -> (f64, f64) {
     assert_eq!(bytes.len(), n_devices * n_devices);
     assert!(n_devices % devices_per_node == 0);
     let n_nodes = n_devices / devices_per_node;
     assert_eq!(intra.len(), n_nodes, "one intra link per node");
     let node_of = |d: usize| d / devices_per_node;
 
-    let mut worst_dev = 0.0f64;
+    let mut worst = (0.0f64, 0.0f64);
     for src in 0..n_devices {
         let mut out_bytes = 0usize;
         let mut msgs = 0usize;
@@ -109,11 +126,13 @@ pub fn a2a_time_per_node(
             }
         }
         let l = intra[node_of(src)];
-        let t = l.alpha * msgs as f64 + out_bytes as f64 / l.beta;
-        worst_dev = worst_dev.max(t);
+        let a = l.alpha * msgs as f64;
+        let t = a + out_bytes as f64 / l.beta;
+        if t > worst.0 {
+            worst = (t, a);
+        }
     }
 
-    let mut worst_node = 0.0f64;
     if let (Some(inter), true) = (inter, n_nodes > 1) {
         for node in 0..n_nodes {
             let mut cross = 0usize;
@@ -128,11 +147,34 @@ pub fn a2a_time_per_node(
                 }
             }
             if cross > 0 {
-                worst_node = worst_node.max(inter.alpha + cross as f64 / inter.beta);
+                let t = inter.alpha + cross as f64 / inter.beta;
+                if t > worst.0 {
+                    worst = (t, inter.alpha);
+                }
             }
         }
     }
-    worst_dev.max(worst_node)
+    worst
+}
+
+/// One chunk's share of a `chunks`-way-pipelined phase whose full
+/// (unchunked) time is `full` and whose launch-latency component is
+/// `alpha`: every chunk message pays the full α; only the byte term
+/// divides. `chunks == 1` returns `full` bit-exactly, so unchunked
+/// schedules are untouched by the decomposition.
+///
+/// This helper is the single source of truth for per-chunk phase times —
+/// the legacy `BlockCosts` path and the topology-aware analytic path both
+/// call it, so the two models can never disagree on chunking arithmetic.
+/// Summed over chunks it charges `full + (chunks - 1) · alpha`: chunking
+/// is no longer latency-free, which is exactly the point.
+pub fn a2a_chunk_time(full: f64, alpha: f64, chunks: usize) -> f64 {
+    assert!(chunks >= 1);
+    if chunks == 1 {
+        full
+    } else {
+        alpha + (full - alpha) / chunks as f64
+    }
 }
 
 /// MoNTA-style per-link decomposition of one All-to-All: the per-device
@@ -151,6 +193,12 @@ pub struct A2aPhases {
     /// Per source node: inter-node phase duration (seconds); empty when
     /// the topology is single-node or has no inter link.
     pub inter: Vec<f64>,
+    /// Per source device: the α·messages launch-latency component of
+    /// `intra` (the part every pipeline chunk pays in full).
+    pub intra_alpha: Vec<f64>,
+    /// Per source node: the α launch-latency component of `inter`; zero
+    /// for nodes with no cross traffic, empty when `inter` is empty.
+    pub inter_alpha: Vec<f64>,
 }
 
 impl A2aPhases {
@@ -202,7 +250,8 @@ pub fn a2a_decompose_per_node(
     let split_nodes = inter.is_some() && n_nodes > 1;
 
     let mut intra_phase = vec![0.0f64; n_devices];
-    for (src, t) in intra_phase.iter_mut().enumerate() {
+    let mut intra_alpha = vec![0.0f64; n_devices];
+    for src in 0..n_devices {
         let mut out_bytes = 0usize;
         let mut msgs = 0usize;
         for dst in 0..n_devices {
@@ -216,14 +265,17 @@ pub fn a2a_decompose_per_node(
             }
         }
         let l = intra[node_of(src)];
-        *t = l.alpha * msgs as f64 + out_bytes as f64 / l.beta;
+        intra_alpha[src] = l.alpha * msgs as f64;
+        intra_phase[src] = intra_alpha[src] + out_bytes as f64 / l.beta;
     }
 
     let mut inter_phase = Vec::new();
+    let mut inter_alpha = Vec::new();
     if split_nodes {
         let inter = inter.unwrap();
         inter_phase = vec![0.0f64; n_nodes];
-        for (node, t) in inter_phase.iter_mut().enumerate() {
+        inter_alpha = vec![0.0f64; n_nodes];
+        for node in 0..n_nodes {
             let mut cross = 0usize;
             for src in 0..n_devices {
                 if node_of(src) != node {
@@ -236,11 +288,12 @@ pub fn a2a_decompose_per_node(
                 }
             }
             if cross > 0 {
-                *t = inter.alpha + cross as f64 / inter.beta;
+                inter_alpha[node] = inter.alpha;
+                inter_phase[node] = inter.alpha + cross as f64 / inter.beta;
             }
         }
     }
-    A2aPhases { intra: intra_phase, inter: inter_phase }
+    A2aPhases { intra: intra_phase, inter: inter_phase, intra_alpha, inter_alpha }
 }
 
 /// Byte matrix for a perfectly balanced A2A: every device sends
@@ -392,6 +445,56 @@ mod tests {
         let p = a2a_decompose_per_node(&m, 4, 2, &links, None);
         assert!((p.intra[0] - 1e6 / 10e9).abs() < 1e-15);
         assert!((p.intra[2] - 1e6 / 1e9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn chunk_time_preserves_alpha_per_chunk() {
+        // unchunked: bit-exact identity
+        let full = 0.3 + 0.1;
+        assert_eq!(a2a_chunk_time(full, 0.1, 1), full);
+        // chunked: α stays whole, bytes divide
+        let per = a2a_chunk_time(full, 0.1, 4);
+        assert!((per - (0.1 + 0.3 / 4.0)).abs() < 1e-15);
+        // total over chunks = full + (chunks-1)·α
+        assert!((4.0 * per - (full + 3.0 * 0.1)).abs() < 1e-12);
+        // zero α reduces to plain division
+        assert_eq!(a2a_chunk_time(0.8, 0.0, 2), 0.4);
+    }
+
+    #[test]
+    fn time_split_reports_bottleneck_alpha() {
+        let intra = LinkModel::new(1e-6, 1e9);
+        let m = uniform_a2a_bytes(4, 1000);
+        let (t, a) = a2a_time_split_per_node(&m, 4, 4, &[intra; 1], None);
+        assert_eq!(t, a2a_time(&m, 4, 4, intra, None));
+        assert!((a - 3.0 * 1e-6).abs() < 1e-18, "3 messages worth of α");
+        // when the uplink dominates, the α part is the inter link's α
+        let slow_inter = Some(LinkModel::new(5e-6, 1e8));
+        let (t2, a2) = a2a_time_split_per_node(&m, 4, 2,
+                                               &[intra; 2], slow_inter);
+        assert!(t2 > t);
+        assert!((a2 - 5e-6).abs() < 1e-18);
+    }
+
+    #[test]
+    fn decompose_reports_phase_alphas() {
+        let intra = LinkModel::new(2e-6, 1e9);
+        let inter = Some(LinkModel::new(7e-6, 1e9));
+        let m = uniform_a2a_bytes(4, 1000);
+        let p = a2a_decompose(&m, 4, 2, intra, inter);
+        // one same-node peer -> one intra message per device
+        assert_eq!(p.intra_alpha, vec![2e-6; 4]);
+        assert_eq!(p.inter_alpha, vec![7e-6; 2]);
+        // α components are contained in the phases
+        for (t, a) in p.intra.iter().zip(&p.intra_alpha) {
+            assert!(t >= a);
+        }
+        // no cross traffic -> zero uplink α
+        let mut local = vec![0usize; 16];
+        local[1] = 500; // device0 -> device1, same node
+        let q = a2a_decompose(&local, 4, 2, intra, inter);
+        assert_eq!(q.inter_alpha, vec![0.0, 0.0]);
+        assert_eq!(q.intra_alpha[2], 0.0, "idle device sends no messages");
     }
 
     #[test]

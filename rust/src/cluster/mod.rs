@@ -23,7 +23,8 @@ pub mod interconnect;
 pub mod topology;
 
 pub use interconnect::{
-    a2a_decompose, a2a_decompose_per_node, a2a_time, a2a_time_per_node,
-    a2a_transpose, uniform_a2a_bytes, A2aPhases, LinkModel,
+    a2a_chunk_time, a2a_decompose, a2a_decompose_per_node, a2a_time,
+    a2a_time_per_node, a2a_time_split_per_node, a2a_transpose,
+    uniform_a2a_bytes, A2aPhases, LinkModel,
 };
 pub use topology::{Scenario, Topology};

@@ -96,6 +96,7 @@ mod tests {
         BlockCosts {
             attn: 1.0, mlp: 0.8, se: 0.8, gate: 0.05, encode: 0.05,
             decode: 0.05, expert_k1: 0.6, a2a_k1: a2a,
+            a2a_alpha_k1: 0.0,
         }
     }
 

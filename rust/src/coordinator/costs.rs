@@ -24,10 +24,18 @@
 //! ExFlow-style placements change the simulated per-link phase times —
 //! including asymmetric dispatch vs. combine phases when the routed matrix
 //! is not symmetric.
+//!
+//! Pipeline chunking is priced honestly at both granularities: every
+//! phase carries its launch-latency (α) component separately from the
+//! byte term, so a chunk pays the full α and only its byte share
+//! ([`BlockCosts::a2a_chunk`], [`TopoCosts::chunk_phases`]); routed costs
+//! additionally carry a [`ChunkSource`] so per-chunk phases are
+//! recomputed from each chunk's own token range (token-true chunking —
+//! see docs/ARCHITECTURE.md §"The chunked A2A model").
 
 use crate::cluster::{
-    a2a_decompose_per_node, a2a_time_per_node, a2a_transpose,
-    uniform_a2a_bytes, Topology,
+    a2a_chunk_time, a2a_decompose_per_node, a2a_time_split_per_node,
+    a2a_transpose, uniform_a2a_bytes, LinkModel, Topology,
 };
 use crate::moe::{Placement, RoutingTable};
 
@@ -116,6 +124,12 @@ pub struct BlockCosts {
     pub expert_k1: f64,
     /// One-way All-to-All time for k = 1 volume.
     pub a2a_k1: f64,
+    /// Launch-latency (α) component of `a2a_k1`: the part of the one-way
+    /// time every pipeline chunk pays in full, while the remaining byte
+    /// term divides across chunks (see [`Self::a2a_chunk`]). Zero models a
+    /// latency-free link, under which chunking is free — the seed's
+    /// (buggy) behavior for every link.
+    pub a2a_alpha_k1: f64,
 }
 
 impl BlockCosts {
@@ -129,6 +143,24 @@ impl BlockCosts {
     /// One-way All-to-All (dispatch or combine) for k routed experts.
     pub fn a2a(&self, k: usize) -> f64 {
         self.a2a_k1 * k as f64
+    }
+
+    /// Launch-latency component of [`Self::a2a`] (k-scaled like the phase
+    /// itself, matching the flat model's volume convention).
+    pub fn a2a_alpha(&self, k: usize) -> f64 {
+        self.a2a_alpha_k1 * k as f64
+    }
+
+    /// One chunk's share of a `chunks`-way-pipelined one-way All-to-All:
+    /// `α + (bytes / chunks) / β`, i.e. every chunk message pays the full
+    /// launch latency and only the byte term divides. `chunks == 1`
+    /// returns [`Self::a2a`] bit-exactly. Shared arithmetic with the
+    /// topology-aware path via [`cluster::a2a_chunk_time`], so the two
+    /// models can never disagree on chunking.
+    ///
+    /// [`cluster::a2a_chunk_time`]: crate::cluster::a2a_chunk_time
+    pub fn a2a_chunk(&self, k: usize, chunks: usize) -> f64 {
+        a2a_chunk_time(self.a2a(k), self.a2a_alpha(k), chunks)
     }
 
     /// Total MoE-path time under naive sequential execution (for the
@@ -156,10 +188,10 @@ impl BlockCosts {
             topo.n_devices,
             uniform_bytes_per_pair(topo, tokens_per_device, token_bytes,
                                    capacity_factor));
-        let a2a_k1 = a2a_time_per_node(&m, topo.n_devices,
-                                       topo.devices_per_node,
-                                       &topo.intra_links(), topo.inter);
-        base.scaled(topo.min_compute_scale(), a2a_k1)
+        let (a2a_k1, a2a_alpha_k1) = a2a_time_split_per_node(
+            &m, topo.n_devices, topo.devices_per_node,
+            &topo.intra_links(), topo.inter);
+        base.scaled(topo.min_compute_scale(), a2a_k1, a2a_alpha_k1)
     }
 }
 
@@ -167,11 +199,14 @@ impl BlockCosts {
 /// copies; under uniform routing a (1 - 1/n) fraction crosses the link,
 /// with `capacity_factor` headroom in buffer sizing. Shared by the legacy
 /// and topology-aware cost constructors so the two models can never
-/// disagree on communication volume.
-fn uniform_bytes_per_pair(topo: &Topology, tokens_per_device: usize,
-                          token_bytes: usize, capacity_factor: f64) -> usize {
+/// disagree on communication volume. Fractional bytes round to nearest
+/// (half away from zero) rather than truncating, so a 2/3-byte pair no
+/// longer loses volume to integer casting.
+pub fn uniform_bytes_per_pair(topo: &Topology, tokens_per_device: usize,
+                              token_bytes: usize,
+                              capacity_factor: f64) -> usize {
     ((tokens_per_device as f64 * capacity_factor / topo.n_devices as f64)
-        * token_bytes as f64) as usize
+        * token_bytes as f64).round() as usize
 }
 
 /// Topology-aware costs for one Block-MLP + Block-MoE pair across a
@@ -199,8 +234,61 @@ pub struct TopoCosts {
     /// empty under the same symmetric-fallback rule as
     /// `a2a_intra_combine_k1`.
     pub a2a_inter_combine_k1: Vec<f64>,
+    /// Launch-latency (α) component of each dispatch intra phase — the
+    /// part a pipeline chunk pays in full while the byte term divides.
+    /// Empty models latency-free links (α = 0 everywhere), under which
+    /// chunking divides phases exactly as the seed did.
+    pub a2a_intra_alpha_k1: Vec<f64>,
+    /// α component of each dispatch inter phase; empty = zero.
+    pub a2a_inter_alpha_k1: Vec<f64>,
+    /// α component of each combine intra phase; empty mirrors the
+    /// dispatch α (same fallback rule as the combine phases).
+    pub a2a_intra_combine_alpha_k1: Vec<f64>,
+    /// α component of each combine inter phase; empty mirrors dispatch.
+    pub a2a_inter_combine_alpha_k1: Vec<f64>,
+    /// Token-true chunking source: when present, per-chunk phases are
+    /// recomputed from the actual routing table split into contiguous
+    /// token ranges (see [`Self::chunk_phases`]); when absent, chunks fall
+    /// back to the α-true analytic split of the stored phase vectors.
+    pub chunk_source: Option<ChunkSource>,
     /// Devices per node (contiguous block node layout).
     pub devices_per_node: usize,
+}
+
+/// Everything needed to recompute *token-true* per-chunk All-to-All
+/// phases for any chunk count: the routing table is re-split into
+/// contiguous token ranges ([`RoutingTable::chunk`]) and each range's
+/// routed byte matrix is decomposed through the same link models as the
+/// unchunked phase vectors, so a chunk only pays α toward destinations it
+/// actually sends to and skewed routing skews per-chunk traffic.
+#[derive(Debug, Clone)]
+pub struct ChunkSource {
+    /// The routing decisions the unchunked phases were derived from.
+    pub rt: RoutingTable,
+    /// Expert placement in force.
+    pub placement: Placement,
+    /// Payload bytes per routed token copy.
+    pub token_bytes: usize,
+    /// One intra-node link per node (same vector the unchunked
+    /// decomposition used).
+    pub intra_links: Vec<LinkModel>,
+    /// Shared inter-node uplink, if any.
+    pub inter: Option<LinkModel>,
+}
+
+/// Per-chunk, per-link one-way All-to-All durations (seconds, already
+/// scaled to the requested k) for one `chunks`-way pipelined collective.
+/// Outer index = chunk, inner = device (intra) or node (inter).
+#[derive(Debug, Clone)]
+pub struct ChunkedA2a {
+    /// Dispatch intra-node phase per `[chunk][device]`.
+    pub disp_intra: Vec<Vec<f64>>,
+    /// Dispatch inter-node phase per `[chunk][node]`.
+    pub disp_inter: Vec<Vec<f64>>,
+    /// Combine intra-node phase per `[chunk][device]`.
+    pub comb_intra: Vec<Vec<f64>>,
+    /// Combine inter-node phase per `[chunk][node]`.
+    pub comb_inter: Vec<Vec<f64>>,
 }
 
 impl TopoCosts {
@@ -234,6 +322,12 @@ impl TopoCosts {
     pub fn assert_valid(&self) {
         assert!(!self.per_device.is_empty(), "at least one modeled device");
         assert!(self.devices_per_node > 0);
+        // Every cluster::a2a_* cost function requires whole nodes; a
+        // ragged hand-built fleet would silently desync from the cost
+        // model (n_nodes/devices_of tolerate it), so fail loudly here.
+        assert!(self.n_devices() % self.devices_per_node == 0,
+                "devices ({}) must divide into nodes of {}",
+                self.n_devices(), self.devices_per_node);
         assert_eq!(self.a2a_intra_k1.len(), self.per_device.len(),
                    "one intra-node phase per device");
         assert!(self.a2a_inter_k1.is_empty()
@@ -246,6 +340,27 @@ impl TopoCosts {
                     || self.a2a_inter_combine_k1.len() == self.a2a_inter_k1.len(),
                 "combine inter phases must mirror the dispatch link set \
                  (or be empty)");
+        assert!(self.a2a_intra_alpha_k1.is_empty()
+                    || self.a2a_intra_alpha_k1.len() == self.per_device.len(),
+                "intra α terms must cover every device (or be empty)");
+        assert!(self.a2a_inter_alpha_k1.is_empty()
+                    || self.a2a_inter_alpha_k1.len() == self.a2a_inter_k1.len(),
+                "inter α terms must mirror the dispatch link set (or be empty)");
+        assert!(self.a2a_intra_combine_alpha_k1.is_empty()
+                    || self.a2a_intra_combine_alpha_k1.len()
+                        == self.per_device.len(),
+                "combine intra α terms must cover every device (or be empty)");
+        assert!(self.a2a_inter_combine_alpha_k1.is_empty()
+                    || self.a2a_inter_combine_alpha_k1.len()
+                        == self.a2a_inter_k1.len(),
+                "combine inter α terms must mirror the dispatch link set \
+                 (or be empty)");
+        if let Some(src) = &self.chunk_source {
+            assert_eq!(src.placement.n_devices, self.n_devices(),
+                       "chunk source placement must cover the fleet");
+            assert_eq!(src.intra_links.len(), self.n_nodes(),
+                       "chunk source needs one intra link per node");
+        }
     }
 
     /// One-way *dispatch* intra-node phase (seconds) for device `d` at
@@ -283,6 +398,116 @@ impl TopoCosts {
         }
     }
 
+    /// α (launch-latency) component of the dispatch intra phase for
+    /// device `d`; empty vector = latency-free links (zero).
+    pub fn a2a_intra_alpha(&self, d: usize, k: usize) -> f64 {
+        if self.a2a_intra_alpha_k1.is_empty() {
+            0.0
+        } else {
+            self.a2a_intra_alpha_k1[d] * k as f64
+        }
+    }
+
+    /// α component of the dispatch inter phase for node `n`; empty = zero.
+    pub fn a2a_inter_alpha(&self, n: usize, k: usize) -> f64 {
+        if self.a2a_inter_alpha_k1.is_empty() {
+            0.0
+        } else {
+            self.a2a_inter_alpha_k1[n] * k as f64
+        }
+    }
+
+    /// α component of the combine intra phase for device `d`; empty
+    /// mirrors the dispatch α (same fallback rule as the phases).
+    pub fn a2a_intra_combine_alpha(&self, d: usize, k: usize) -> f64 {
+        if self.a2a_intra_combine_alpha_k1.is_empty() {
+            self.a2a_intra_alpha(d, k)
+        } else {
+            self.a2a_intra_combine_alpha_k1[d] * k as f64
+        }
+    }
+
+    /// α component of the combine inter phase for node `n`; empty mirrors
+    /// the dispatch α.
+    pub fn a2a_inter_combine_alpha(&self, n: usize, k: usize) -> f64 {
+        if self.a2a_inter_combine_alpha_k1.is_empty() {
+            self.a2a_inter_alpha(n, k)
+        } else {
+            self.a2a_inter_combine_alpha_k1[n] * k as f64
+        }
+    }
+
+    /// Per-chunk, per-link phase durations for a `chunks`-way pipelined
+    /// All-to-All at k routed experts.
+    ///
+    /// With a [`ChunkSource`] (routed costs) the split is *token-true*:
+    /// the routing table is divided into contiguous token ranges, each
+    /// range's routed byte matrix is decomposed through the stored link
+    /// models, and every chunk pays α only toward destinations it
+    /// actually sends to — skewed routing therefore skews per-chunk
+    /// traffic. Without a source the split is *α-true analytic*: every
+    /// chunk pays the stored phase's full α plus its `1/chunks` byte
+    /// share ([`cluster::a2a_chunk_time`]); with empty α vectors this
+    /// reduces bit-exactly to the seed's plain division.
+    ///
+    /// [`cluster::a2a_chunk_time`]: crate::cluster::a2a_chunk_time
+    pub fn chunk_phases(&self, k: usize, chunks: usize) -> ChunkedA2a {
+        assert!(chunks >= 1);
+        let n = self.n_devices();
+        let n_links = self.a2a_inter_k1.len();
+        if let Some(src) = &self.chunk_source {
+            let kf = src.rt.k.max(1) as f64;
+            let scale = k as f64 / kf;
+            let mut out = ChunkedA2a {
+                disp_intra: Vec::with_capacity(chunks),
+                disp_inter: Vec::with_capacity(chunks),
+                comb_intra: Vec::with_capacity(chunks),
+                comb_inter: Vec::with_capacity(chunks),
+            };
+            for part in src.rt.chunk(chunks) {
+                let disp = part.a2a_bytes_placed(&src.placement,
+                                                 src.token_bytes);
+                let comb = a2a_transpose(&disp, n);
+                let pd = a2a_decompose_per_node(&disp, n,
+                                                self.devices_per_node,
+                                                &src.intra_links, src.inter);
+                let pc = a2a_decompose_per_node(&comb, n,
+                                                self.devices_per_node,
+                                                &src.intra_links, src.inter);
+                out.disp_intra.push(pd.intra.iter().map(|t| t * scale).collect());
+                out.disp_inter.push(pd.inter.iter().map(|t| t * scale).collect());
+                out.comb_intra.push(pc.intra.iter().map(|t| t * scale).collect());
+                out.comb_inter.push(pc.inter.iter().map(|t| t * scale).collect());
+            }
+            out
+        } else {
+            let di: Vec<f64> = (0..n)
+                .map(|d| a2a_chunk_time(self.a2a_intra(d, k),
+                                        self.a2a_intra_alpha(d, k), chunks))
+                .collect();
+            let dx: Vec<f64> = (0..n_links)
+                .map(|nd| a2a_chunk_time(self.a2a_inter(nd, k),
+                                         self.a2a_inter_alpha(nd, k), chunks))
+                .collect();
+            let ci: Vec<f64> = (0..n)
+                .map(|d| a2a_chunk_time(self.a2a_intra_combine(d, k),
+                                        self.a2a_intra_combine_alpha(d, k),
+                                        chunks))
+                .collect();
+            let cx: Vec<f64> = (0..n_links)
+                .map(|nd| a2a_chunk_time(self.a2a_inter_combine(nd, k),
+                                         self.a2a_inter_combine_alpha(nd, k),
+                                         chunks))
+                .collect();
+            ChunkedA2a {
+                disp_intra: vec![di; chunks],
+                disp_inter: vec![dx; chunks],
+                comb_intra: vec![ci; chunks],
+                comb_inter: vec![cx; chunks],
+            }
+        }
+    }
+
     /// Degenerate one-modeled-device view of legacy costs. Schedules built
     /// from this reduce bit-exactly to the legacy single-device schedules:
     /// the single intra phase carries the whole scalar `a2a_k1` and there
@@ -293,6 +518,11 @@ impl TopoCosts {
             a2a_inter_k1: Vec::new(),
             a2a_intra_combine_k1: Vec::new(),
             a2a_inter_combine_k1: Vec::new(),
+            a2a_intra_alpha_k1: vec![c.a2a_alpha_k1],
+            a2a_inter_alpha_k1: Vec::new(),
+            a2a_intra_combine_alpha_k1: Vec::new(),
+            a2a_inter_combine_alpha_k1: Vec::new(),
+            chunk_source: None,
             per_device: vec![c.clone()],
             devices_per_node: 1,
         }
@@ -317,10 +547,10 @@ impl TopoCosts {
         let phases = a2a_decompose_per_node(&m, topo.n_devices,
                                             topo.devices_per_node,
                                             &links, topo.inter);
-        let flat = a2a_time_per_node(&m, topo.n_devices, topo.devices_per_node,
-                                     &links, topo.inter);
+        let (flat, flat_alpha) = a2a_time_split_per_node(
+            &m, topo.n_devices, topo.devices_per_node, &links, topo.inter);
         let per_device = (0..topo.n_devices)
-            .map(|d| base.scaled(topo.device_compute_scale(d), flat))
+            .map(|d| base.scaled(topo.device_compute_scale(d), flat, flat_alpha))
             .collect();
         TopoCosts {
             per_device,
@@ -328,6 +558,11 @@ impl TopoCosts {
             a2a_inter_k1: phases.inter,
             a2a_intra_combine_k1: Vec::new(),
             a2a_inter_combine_k1: Vec::new(),
+            a2a_intra_alpha_k1: phases.intra_alpha,
+            a2a_inter_alpha_k1: phases.inter_alpha,
+            a2a_intra_combine_alpha_k1: Vec::new(),
+            a2a_inter_combine_alpha_k1: Vec::new(),
+            chunk_source: None,
             devices_per_node: topo.devices_per_node,
         }
     }
@@ -364,15 +599,19 @@ impl TopoCosts {
         let scale = |v: Vec<f64>| -> Vec<f64> {
             v.into_iter().map(|x| x / kf).collect()
         };
-        let flat = a2a_time_per_node(&disp, topo.n_devices,
-                                     topo.devices_per_node,
-                                     &links, topo.inter)
-            .max(a2a_time_per_node(&comb, topo.n_devices,
-                                   topo.devices_per_node,
-                                   &links, topo.inter))
-            / kf;
+        let (td, ad) = a2a_time_split_per_node(&disp, topo.n_devices,
+                                               topo.devices_per_node,
+                                               &links, topo.inter);
+        let (tcm, acm) = a2a_time_split_per_node(&comb, topo.n_devices,
+                                                 topo.devices_per_node,
+                                                 &links, topo.inter);
+        let (flat, flat_alpha) = if tcm > td {
+            (tcm / kf, acm / kf)
+        } else {
+            (td / kf, ad / kf)
+        };
         let per_device = (0..topo.n_devices)
-            .map(|d| base.scaled(topo.device_compute_scale(d), flat))
+            .map(|d| base.scaled(topo.device_compute_scale(d), flat, flat_alpha))
             .collect();
         TopoCosts {
             per_device,
@@ -380,6 +619,17 @@ impl TopoCosts {
             a2a_inter_k1: scale(pd.inter),
             a2a_intra_combine_k1: scale(pc.intra),
             a2a_inter_combine_k1: scale(pc.inter),
+            a2a_intra_alpha_k1: scale(pd.intra_alpha),
+            a2a_inter_alpha_k1: scale(pd.inter_alpha),
+            a2a_intra_combine_alpha_k1: scale(pc.intra_alpha),
+            a2a_inter_combine_alpha_k1: scale(pc.inter_alpha),
+            chunk_source: Some(ChunkSource {
+                rt: rt.clone(),
+                placement: placement.clone(),
+                token_bytes,
+                intra_links: links,
+                inter: topo.inter,
+            }),
             devices_per_node: topo.devices_per_node,
         }
     }
@@ -402,9 +652,11 @@ pub struct ComputeCosts {
 
 impl ComputeCosts {
     /// Divide every op duration by a device compute speed and attach a
-    /// flat one-way All-to-All time — the one place op scaling happens,
-    /// shared by the legacy and topology-aware cost constructors.
-    pub fn scaled(&self, compute_scale: f64, a2a_k1: f64) -> BlockCosts {
+    /// flat one-way All-to-All time plus its launch-latency component —
+    /// the one place op scaling happens, shared by the legacy and
+    /// topology-aware cost constructors.
+    pub fn scaled(&self, compute_scale: f64, a2a_k1: f64,
+                  a2a_alpha_k1: f64) -> BlockCosts {
         let s = compute_scale;
         BlockCosts {
             attn: self.attn / s,
@@ -415,6 +667,7 @@ impl ComputeCosts {
             decode: self.decode / s,
             expert_k1: self.expert_k1 / s,
             a2a_k1,
+            a2a_alpha_k1,
         }
     }
 
@@ -460,24 +713,141 @@ mod tests {
     fn expert_and_a2a_scale_with_k() {
         let c = BlockCosts {
             attn: 1.0, mlp: 1.0, se: 1.0, gate: 0.1, encode: 0.1,
-            decode: 0.1, expert_k1: 0.5, a2a_k1: 0.3,
+            decode: 0.1, expert_k1: 0.5, a2a_k1: 0.3, a2a_alpha_k1: 0.05,
         };
         assert_eq!(c.expert(2), 1.0);
         assert_eq!(c.a2a(3), 0.3 * 3.0);
+        assert_eq!(c.a2a_alpha(2), 0.1);
+        // chunks = 1 is the identity; chunks > 1 keep α whole
+        assert_eq!(c.a2a_chunk(2, 1), c.a2a(2));
+        assert!((c.a2a_chunk(2, 2) - (0.1 + 0.5 / 2.0)).abs() < 1e-15);
     }
 
     #[test]
     fn topo_from_block_is_exact_single_device_view() {
         let c = BlockCosts {
             attn: 1.0, mlp: 0.8, se: 0.8, gate: 0.05, encode: 0.05,
-            decode: 0.05, expert_k1: 0.6, a2a_k1: 0.37,
+            decode: 0.05, expert_k1: 0.6, a2a_k1: 0.37, a2a_alpha_k1: 0.02,
         };
         let tc = TopoCosts::from_block(&c);
         assert_eq!(tc.n_devices(), 1);
         assert_eq!(tc.n_nodes(), 1);
         assert!(tc.a2a_inter_k1.is_empty());
         assert_eq!(tc.a2a_intra(0, 2), c.a2a(2)); // bit-exact, same expression
+        assert_eq!(tc.a2a_intra_alpha(0, 2), c.a2a_alpha(2));
         assert_eq!(tc.per_device[0].attn, c.attn);
+    }
+
+    #[test]
+    fn uniform_bytes_per_pair_rounds_fractional_bytes() {
+        // 50 tokens over 3 devices at 1 byte: 16.666… bytes per pair must
+        // round to 17, not truncate to 16 (regression: `as usize` lost the
+        // fraction on every non-divisible tokens/devices split).
+        let topo = Topology {
+            n_devices: 3,
+            devices_per_node: 3,
+            intra: LinkModel::new(0.0, 1e9),
+            inter: None,
+            compute_scale: 1.0,
+            device_scales: None,
+            node_intra: None,
+        };
+        assert_eq!(uniform_bytes_per_pair(&topo, 50, 1, 1.0), 17);
+        // divisible splits are untouched
+        assert_eq!(uniform_bytes_per_pair(&topo, 48, 384, 1.0), 16 * 384);
+    }
+
+    #[test]
+    #[should_panic(expected = "divide into nodes")]
+    fn ragged_fleet_fails_validation() {
+        let c = BlockCosts {
+            attn: 1.0, mlp: 0.8, se: 0.8, gate: 0.05, encode: 0.05,
+            decode: 0.05, expert_k1: 0.6, a2a_k1: 0.3, a2a_alpha_k1: 0.0,
+        };
+        let tc = TopoCosts {
+            per_device: vec![c; 3],
+            a2a_intra_k1: vec![0.1; 3],
+            a2a_inter_k1: vec![0.2; 2],
+            a2a_intra_combine_k1: Vec::new(),
+            a2a_inter_combine_k1: Vec::new(),
+            a2a_intra_alpha_k1: Vec::new(),
+            a2a_inter_alpha_k1: Vec::new(),
+            a2a_intra_combine_alpha_k1: Vec::new(),
+            a2a_inter_combine_alpha_k1: Vec::new(),
+            chunk_source: None,
+            devices_per_node: 2,
+        };
+        tc.assert_valid();
+    }
+
+    #[test]
+    fn analytic_chunk_phases_pay_alpha_per_chunk() {
+        let base = ComputeCosts::swin_proxy();
+        let tc = TopoCosts::from_topology(
+            &base, &Scenario::FourNodeA800IBx32.topology(), 4096, 384, 1.25);
+        assert!(tc.chunk_source.is_none(), "uniform costs chunk analytically");
+        for chunks in [2usize, 4, 8] {
+            let ca = tc.chunk_phases(2, chunks);
+            for d in 0..tc.n_devices() {
+                let total: f64 = (0..chunks).map(|i| ca.disp_intra[i][d]).sum();
+                let expect = tc.a2a_intra(d, 2)
+                    + (chunks - 1) as f64 * tc.a2a_intra_alpha(d, 2);
+                assert!((total - expect).abs() < 1e-12,
+                        "device {d} x{chunks}: {total} vs {expect}");
+            }
+            for nd in 0..tc.a2a_inter_k1.len() {
+                let total: f64 = (0..chunks).map(|i| ca.disp_inter[i][nd]).sum();
+                let expect = tc.a2a_inter(nd, 2)
+                    + (chunks - 1) as f64 * tc.a2a_inter_alpha(nd, 2);
+                assert!((total - expect).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_phases_with_zero_alpha_reduce_to_plain_division() {
+        let c = BlockCosts {
+            attn: 1.0, mlp: 0.75, se: 0.75, gate: 0.0625, encode: 0.0625,
+            decode: 0.0625, expert_k1: 0.5, a2a_k1: 0.8125, a2a_alpha_k1: 0.0,
+        };
+        let mut tc = TopoCosts::from_block(&c);
+        tc.a2a_intra_alpha_k1 = Vec::new(); // seed-style: no α information
+        let ca = tc.chunk_phases(2, 2);
+        assert_eq!(ca.disp_intra[0][0], tc.a2a_intra(0, 2) / 2.0);
+        assert_eq!(ca.comb_intra[1][0], tc.a2a_intra_combine(0, 2) / 2.0);
+    }
+
+    #[test]
+    fn routed_chunk_phases_are_token_true() {
+        use crate::moe::{Placement, RoutingTable};
+        // 8 tokens on 2 devices (1 node each): the first 4 (device 0) all
+        // route to device 1's expert, the last 4 stay local. Chunking in
+        // half must put ALL cross-node traffic in chunk 0 and none in
+        // chunk 1 — dividing phases evenly would put half in each.
+        let idx = vec![1i32, 1, 1, 1, 1, 1, 1, 1];
+        let w = vec![1.0f32; 8];
+        let rt = RoutingTable::build(&idx, &w, 8, 1, 2, 8);
+        let topo = Topology {
+            n_devices: 2,
+            devices_per_node: 1,
+            intra: LinkModel::new(0.0, 1e9),
+            inter: Some(LinkModel::new(1e-3, 1e6)),
+            compute_scale: 1.0,
+            device_scales: None,
+            node_intra: None,
+        };
+        let tc = TopoCosts::from_routing(&ComputeCosts::swin_proxy(), &topo,
+                                         &rt, &Placement::new(2, 2), 1000);
+        assert!(tc.chunk_source.is_some());
+        let ca = tc.chunk_phases(1, 2);
+        // chunk 0: node 0 sends 4 x 1000 B cross + pays α once
+        assert!((ca.disp_inter[0][0] - (1e-3 + 4000.0 / 1e6)).abs() < 1e-15);
+        // chunk 1: device 1's tokens route to its own expert - silence
+        assert_eq!(ca.disp_inter[1][0], 0.0);
+        assert_eq!(ca.disp_inter[1][1], 0.0);
+        // combine mirrors: chunk 0's return traffic crosses from node 1
+        assert!((ca.comb_inter[0][1] - (1e-3 + 4000.0 / 1e6)).abs() < 1e-15);
+        assert_eq!(ca.comb_inter[1][1], 0.0);
     }
 
     #[test]

@@ -25,8 +25,8 @@ pub mod schedule;
 pub mod timeline;
 
 pub use adaptive::{choose_expert_slot, choose_expert_slot_topo};
-pub use costs::{BlockCosts, MoEKind, Strategy, TopoCosts};
+pub use costs::{BlockCosts, ChunkSource, ChunkedA2a, MoEKind, Strategy, TopoCosts};
 pub use schedule::{
     build_pair_schedule, build_pair_schedule_topo, build_pair_schedule_topo_auto,
-    PairSchedule,
+    build_pair_schedule_topo_with, ChunkPipelining, PairSchedule,
 };

@@ -23,9 +23,35 @@
 
 use crate::simtime::{Resource, Sim, Span, TaskId};
 
-use super::costs::{BlockCosts, MoEKind, Strategy, TopoCosts};
+use super::costs::{BlockCosts, ChunkedA2a, MoEKind, Strategy, TopoCosts};
 
 const DEV: usize = 0;
+
+/// How the chunked topology-aware builders arrange a chunk's intra-node
+/// and inter-node phase tasks. With a single chunk there is nothing to
+/// pipeline and both models keep the seed's barrier semantics (every
+/// phase starts after Encode), so chunks = 1 schedules are identical
+/// under either value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChunkPipelining {
+    /// MoNTA-style pipelining (the default): chunk i's uplink task starts
+    /// once that node's chunk-i intra tasks finish (the cross-node data
+    /// must be gathered before it can leave the node), and chunk i+1's
+    /// intra tasks only wait on their own `Comm(d)` stream — so chunk i's
+    /// inter-node transfer genuinely overlaps chunk i+1's intra phase on
+    /// separate resources. The combine direction mirrors the staging
+    /// structurally: each node drains its outbound return uplink before
+    /// the local scatter, so chunk i's scatter overlaps chunk i+1's
+    /// uplink (remote-arrival gating stays at the Decode barrier, as in
+    /// the seed's send-side cost model).
+    Staged,
+    /// Conservative baseline for A/B comparison: like `Staged`, but chunk
+    /// i+1's intra tasks additionally wait on chunk i's uplink (and the
+    /// combine uplink of chunk i+1 on chunk i's intra scatter), so the
+    /// phases of consecutive chunks alternate with no cross-chunk
+    /// overlap.
+    PhaseChained,
+}
 
 /// A built schedule plus span bookkeeping for rendering and assertions.
 pub struct PairSchedule {
@@ -92,21 +118,41 @@ pub fn build_pair_schedule_auto(c: &BlockCosts, kind: MoEKind,
 }
 
 /// Build the topology-aware schedule for a pair under (kind, strategy)
-/// across every modeled device of `tc`.
+/// across every modeled device of `tc`, with MoNTA-style
+/// [`ChunkPipelining::Staged`] intra/inter staging for chunked strategies.
 pub fn build_pair_schedule_topo(
     tc: &TopoCosts,
     kind: MoEKind,
     strategy: Strategy,
     expert_slot: usize,
 ) -> PairSchedule {
+    build_pair_schedule_topo_with(tc, kind, strategy, expert_slot,
+                                  ChunkPipelining::Staged)
+}
+
+/// [`build_pair_schedule_topo`] with an explicit [`ChunkPipelining`]
+/// model — `PhaseChained` serializes each chunk's intra phase against the
+/// previous chunk's uplink, the baseline the staged pipeline is measured
+/// against in `scmoe report topo`'s chunk sweep.
+pub fn build_pair_schedule_topo_with(
+    tc: &TopoCosts,
+    kind: MoEKind,
+    strategy: Strategy,
+    expert_slot: usize,
+    pipelining: ChunkPipelining,
+) -> PairSchedule {
     tc.assert_valid();
     let k = kind.routed_k();
     match strategy {
         Strategy::Sequential => build_sequential_topo(tc, kind, k),
-        Strategy::Pipelined { chunks } => build_pipelined_topo(tc, kind, k, chunks),
-        Strategy::Overlap => build_overlap_topo(tc, kind, k, expert_slot, 1),
+        Strategy::Pipelined { chunks } => {
+            build_pipelined_topo(tc, kind, k, chunks, pipelining)
+        }
+        Strategy::Overlap => {
+            build_overlap_topo(tc, kind, k, expert_slot, 1, pipelining)
+        }
         Strategy::OverlapPipelined { chunks } => {
-            build_overlap_topo(tc, kind, k, expert_slot, chunks)
+            build_overlap_topo(tc, kind, k, expert_slot, chunks, pipelining)
         }
     }
 }
@@ -158,7 +204,9 @@ fn build_sequential(c: &BlockCosts, kind: MoEKind, k: usize) -> PairSchedule {
 }
 
 /// Tutel-style pipelining (Fig. 6, 2nd timeline): tokens split into
-/// `chunks`; dispatch/expert/combine of different chunks overlap.
+/// `chunks`; dispatch/expert/combine of different chunks overlap. Each
+/// chunk message pays the link's full launch latency — only the byte term
+/// divides (`BlockCosts::a2a_chunk`), so deep chunking is no longer free.
 fn build_pipelined(c: &BlockCosts, kind: MoEKind, k: usize,
                    chunks: usize) -> PairSchedule {
     assert!(chunks >= 1);
@@ -176,10 +224,12 @@ fn build_pipelined(c: &BlockCosts, kind: MoEKind, k: usize,
             Some(p) => vec![enc, p],
             None => vec![enc],
         };
-        let disp = comm(&mut sim, &format!("A2A-D{i}"), c.a2a(k) / fc, &dd);
+        let disp = comm(&mut sim, &format!("A2A-D{i}"),
+                        c.a2a_chunk(k, chunks), &dd);
         prev_disp = Some(disp);
         let expert = comp(&mut sim, &format!("Expert{i}"), c.expert(k) / fc, &[disp]);
-        let comb = comm(&mut sim, &format!("A2A-C{i}"), c.a2a(k) / fc, &[expert]);
+        let comb = comm(&mut sim, &format!("A2A-C{i}"),
+                        c.a2a_chunk(k, chunks), &[expert]);
         combines.push(comb);
     }
     let mut decode_deps = combines;
@@ -221,7 +271,8 @@ fn build_overlap(c: &BlockCosts, kind: MoEKind, k: usize, slot: usize,
             Some(p) => vec![enc, p],
             None => vec![enc],
         };
-        let d = comm(&mut sim, &format!("A2A-D{i}"), c.a2a(k) / fc, &deps);
+        let d = comm(&mut sim, &format!("A2A-D{i}"),
+                     c.a2a_chunk(k, chunks), &deps);
         dispatches.push(d);
         prev = Some(d);
     }
@@ -258,7 +309,8 @@ fn build_overlap(c: &BlockCosts, kind: MoEKind, k: usize, slot: usize,
     // combines: chunk i's combine depends on its expert; comm stream FIFO
     let mut combines = Vec::new();
     for (i, e) in experts.iter().enumerate() {
-        combines.push(comm(&mut sim, &format!("A2A-C{i}"), c.a2a(k) / fc, &[*e]));
+        combines.push(comm(&mut sim, &format!("A2A-C{i}"),
+                           c.a2a_chunk(k, chunks), &[*e]));
     }
     // decode at the latest position: after the backbone and all combines
     let mut deps = combines;
@@ -285,6 +337,12 @@ fn build_overlap(c: &BlockCosts, kind: MoEKind, k: usize, slot: usize,
 //    which fall back to the dispatch phases when routing is symmetric —
 //    routed placements thus expose asymmetric forward/return traffic
 //    without forking the builders;
+//  - with `chunks > 1` every chunk's durations come from
+//    `TopoCosts::chunk_phases` (token-true under routed costs; α-true
+//    analytic otherwise) and the uplink tasks are staged behind the
+//    node's intra tasks per `ChunkPipelining`; with one chunk the
+//    builders keep the seed's enc-barrier phase layout and full-phase
+//    durations bit-exactly;
 //  - task insertion order matches the legacy single-device builders, so a
 //    one-device `TopoCosts` yields the identical task graph (same ids,
 //    deps, durations) and therefore bit-exact spans.
@@ -342,11 +400,150 @@ fn build_sequential_topo(tc: &TopoCosts, kind: MoEKind, k: usize) -> PairSchedul
     PairSchedule { sim, kind, strategy: Strategy::Sequential, expert_slot: 0 }
 }
 
-/// Tutel-style pipelining over the fleet (cf. `build_pipelined`): chunk
-/// phases chain per link, and every chunk's expert computation waits on
-/// that chunk's full collective.
+/// One chunk's dispatch phase tasks (intra per device, then inter per
+/// node), shared by the chunked topo builders. With `chunks == 1`
+/// (`ca == None`) this reproduces the seed's task graph exactly: full
+/// phase durations and every phase starting after Encode. With
+/// `chunks > 1` durations come from the per-chunk [`ChunkedA2a`] and the
+/// uplink is staged behind the node's intra tasks (plus the previous
+/// chunk's uplink under `PhaseChained` for the intra tasks).
+/// Returns this chunk's task ids (devices first, then links).
+#[allow(clippy::too_many_arguments)]
+fn add_dispatch_chunk(
+    sim: &mut Sim,
+    tc: &TopoCosts,
+    k: usize,
+    i: usize,
+    ca: Option<&ChunkedA2a>,
+    enc: &[TaskId],
+    prev_d: &mut [Option<TaskId>],
+    prev_x: &mut [Option<TaskId>],
+    pipelining: ChunkPipelining,
+) -> Vec<TaskId> {
+    let n = tc.n_devices();
+    let n_links = tc.a2a_inter_k1.len();
+    let mut disp_i = Vec::with_capacity(n + n_links);
+    for d in 0..n {
+        let mut deps = vec![enc[d]];
+        if let Some(p) = prev_d[d] {
+            deps.push(p);
+        }
+        if pipelining == ChunkPipelining::PhaseChained && n_links > 0 {
+            if let Some(p) = prev_x[tc.node_of(d)] {
+                deps.push(p);
+            }
+        }
+        let dur = match ca {
+            Some(ca) => ca.disp_intra[i][d],
+            None => tc.a2a_intra(d, k),
+        };
+        let t = sim.add(format!("A2A-D{i}"), Resource::Comm(d), dur, &deps);
+        prev_d[d] = Some(t);
+        disp_i.push(t);
+    }
+    for node in 0..n_links {
+        // staged (chunks > 1): the uplink sends what the node's intra
+        // phase gathered, so it waits on this chunk's intra tasks; the
+        // unchunked collective keeps the seed's enc-barrier semantics
+        let mut deps: Vec<TaskId> = match ca {
+            Some(_) => tc.devices_of(node).map(|d| disp_i[d]).collect(),
+            None => tc.devices_of(node).map(|d| enc[d]).collect(),
+        };
+        if let Some(p) = prev_x[node] {
+            deps.push(p);
+        }
+        let dur = match ca {
+            Some(ca) => ca.disp_inter[i][node],
+            None => tc.a2a_inter(node, k),
+        };
+        let t = sim.add(format!("A2A-Dx{i}"), Resource::Link(node), dur, &deps);
+        prev_x[node] = Some(t);
+        disp_i.push(t);
+    }
+    disp_i
+}
+
+/// One chunk's combine phase tasks, mirroring [`add_dispatch_chunk`] in
+/// the return direction: with `chunks > 1` the uplink-return tasks come
+/// first and each device's intra scatter waits on its own node's
+/// *outbound* return task — the structural mirror of dispatch's
+/// gather-then-send (the node drains its shared return fabric before the
+/// local scatter), so chunk i's intra scatter overlaps chunk i+1's
+/// uplink. Remote-*arrival* gating is unchanged from the seed: the
+/// consumer (`Decode`) barriers on every combine task of every chunk,
+/// so no result is consumed before all uplinks finish. `PhaseChained`
+/// additionally chains each uplink behind the previous chunk's scatter.
+/// `experts_i[d]` is device d's chunk-i expert task; appends all created
+/// tasks to `combines` and records this chunk's intra tasks in `prev_c`.
+#[allow(clippy::too_many_arguments)]
+fn add_combine_chunk(
+    sim: &mut Sim,
+    tc: &TopoCosts,
+    k: usize,
+    i: usize,
+    ca: Option<&ChunkedA2a>,
+    experts_i: &[TaskId],
+    prev_c: &mut [Option<TaskId>],
+    combines: &mut Vec<TaskId>,
+    pipelining: ChunkPipelining,
+) {
+    let n = tc.n_devices();
+    let n_links = tc.a2a_inter_k1.len();
+    match ca {
+        Some(ca) => {
+            let mut comb_x_i = Vec::with_capacity(n_links);
+            for node in 0..n_links {
+                let mut deps: Vec<TaskId> =
+                    tc.devices_of(node).map(|d| experts_i[d]).collect();
+                if pipelining == ChunkPipelining::PhaseChained {
+                    for d in tc.devices_of(node) {
+                        if let Some(p) = prev_c[d] {
+                            deps.push(p);
+                        }
+                    }
+                }
+                let t = sim.add(format!("A2A-Cx{i}"), Resource::Link(node),
+                                ca.comb_inter[i][node], &deps);
+                comb_x_i.push(t);
+                combines.push(t);
+            }
+            for d in 0..n {
+                let mut deps = vec![experts_i[d]];
+                if n_links > 0 {
+                    deps.push(comb_x_i[tc.node_of(d)]);
+                }
+                let t = sim.add(format!("A2A-C{i}"), Resource::Comm(d),
+                                ca.comb_intra[i][d], &deps);
+                prev_c[d] = Some(t);
+                combines.push(t);
+            }
+        }
+        None => {
+            for d in 0..n {
+                let t = sim.add(format!("A2A-C{i}"), Resource::Comm(d),
+                                tc.a2a_intra_combine(d, k), &[experts_i[d]]);
+                prev_c[d] = Some(t);
+                combines.push(t);
+            }
+            for node in 0..n_links {
+                let deps: Vec<TaskId> =
+                    tc.devices_of(node).map(|d| experts_i[d]).collect();
+                combines.push(sim.add(format!("A2A-Cx{i}"),
+                                      Resource::Link(node),
+                                      tc.a2a_inter_combine(node, k), &deps));
+            }
+        }
+    }
+}
+
+/// Tutel-style pipelining over the fleet (cf. `build_pipelined`): every
+/// chunk's expert computation waits on that chunk's full collective, each
+/// chunk pays its own per-link α and bytes (`TopoCosts::chunk_phases` —
+/// token-true under routed costs), and the uplink tasks are staged behind
+/// the intra phases per [`ChunkPipelining`].
 fn build_pipelined_topo(tc: &TopoCosts, kind: MoEKind, k: usize,
-                        chunks: usize) -> PairSchedule {
+                        chunks: usize,
+                        pipelining: ChunkPipelining) -> PairSchedule {
     assert!(chunks >= 1);
     let n = tc.n_devices();
     let n_links = tc.a2a_inter_k1.len();
@@ -364,46 +561,22 @@ fn build_pipelined_topo(tc: &TopoCosts, kind: MoEKind, k: usize,
         enc.push(e);
     }
     let fc = chunks as f64;
+    let ca = if chunks > 1 { Some(tc.chunk_phases(k, chunks)) } else { None };
     let mut prev_d: Vec<Option<TaskId>> = vec![None; n];
     let mut prev_x: Vec<Option<TaskId>> = vec![None; n_links];
+    let mut prev_c: Vec<Option<TaskId>> = vec![None; n];
     let mut combines: Vec<TaskId> = Vec::new();
     for i in 0..chunks {
-        let mut disp_i = Vec::with_capacity(n + n_links);
-        for d in 0..n {
-            let mut deps = vec![enc[d]];
-            if let Some(p) = prev_d[d] {
-                deps.push(p);
-            }
-            let t = sim.add(format!("A2A-D{i}"), Resource::Comm(d),
-                            tc.a2a_intra(d, k) / fc, &deps);
-            prev_d[d] = Some(t);
-            disp_i.push(t);
-        }
-        for node in 0..n_links {
-            let mut deps: Vec<TaskId> = tc.devices_of(node).map(|d| enc[d]).collect();
-            if let Some(p) = prev_x[node] {
-                deps.push(p);
-            }
-            let t = sim.add(format!("A2A-Dx{i}"), Resource::Link(node),
-                            tc.a2a_inter(node, k) / fc, &deps);
-            prev_x[node] = Some(t);
-            disp_i.push(t);
-        }
+        let disp_i = add_dispatch_chunk(&mut sim, tc, k, i, ca.as_ref(), &enc,
+                                        &mut prev_d, &mut prev_x, pipelining);
         let mut experts_i = Vec::with_capacity(n);
         for d in 0..n {
             let c = &tc.per_device[d];
             experts_i.push(sim.add(format!("Expert{i}"), Resource::Compute(d),
                                    c.expert(k) / fc, &disp_i));
         }
-        for d in 0..n {
-            combines.push(sim.add(format!("A2A-C{i}"), Resource::Comm(d),
-                                  tc.a2a_intra_combine(d, k) / fc, &[experts_i[d]]));
-        }
-        for node in 0..n_links {
-            let deps: Vec<TaskId> = tc.devices_of(node).map(|d| experts_i[d]).collect();
-            combines.push(sim.add(format!("A2A-Cx{i}"), Resource::Link(node),
-                                  tc.a2a_inter_combine(node, k) / fc, &deps));
-        }
+        add_combine_chunk(&mut sim, tc, k, i, ca.as_ref(), &experts_i,
+                          &mut prev_c, &mut combines, pipelining);
     }
     for d in 0..n {
         let c = &tc.per_device[d];
@@ -421,8 +594,11 @@ fn build_pipelined_topo(tc: &TopoCosts, kind: MoEKind, k: usize,
 /// every device hangs its MoE stream off the preceding layer's
 /// intermediate and inserts its expert chunks at `slot` in its own
 /// backbone window; slow devices stretch the collective for everyone.
+/// Chunked dispatch/combine phases follow the same per-chunk α + staging
+/// model as [`build_pipelined_topo`].
 fn build_overlap_topo(tc: &TopoCosts, kind: MoEKind, k: usize, slot: usize,
-                      chunks: usize) -> PairSchedule {
+                      chunks: usize,
+                      pipelining: ChunkPipelining) -> PairSchedule {
     assert!(slot <= 3, "expert slot must be one of the 4 locations");
     assert!(chunks >= 1);
     let n = tc.n_devices();
@@ -439,32 +615,14 @@ fn build_overlap_topo(tc: &TopoCosts, kind: MoEKind, k: usize, slot: usize,
         enc.push(e);
     }
     let fc = chunks as f64;
+    let ca = if chunks > 1 { Some(tc.chunk_phases(k, chunks)) } else { None };
     let mut disp_chunks: Vec<Vec<TaskId>> = Vec::with_capacity(chunks);
     let mut prev_d: Vec<Option<TaskId>> = vec![None; n];
     let mut prev_x: Vec<Option<TaskId>> = vec![None; n_links];
     for i in 0..chunks {
-        let mut disp_i = Vec::with_capacity(n + n_links);
-        for d in 0..n {
-            let mut deps = vec![enc[d]];
-            if let Some(p) = prev_d[d] {
-                deps.push(p);
-            }
-            let t = sim.add(format!("A2A-D{i}"), Resource::Comm(d),
-                            tc.a2a_intra(d, k) / fc, &deps);
-            prev_d[d] = Some(t);
-            disp_i.push(t);
-        }
-        for node in 0..n_links {
-            let mut deps: Vec<TaskId> = tc.devices_of(node).map(|d| enc[d]).collect();
-            if let Some(p) = prev_x[node] {
-                deps.push(p);
-            }
-            let t = sim.add(format!("A2A-Dx{i}"), Resource::Link(node),
-                            tc.a2a_inter(node, k) / fc, &deps);
-            prev_x[node] = Some(t);
-            disp_i.push(t);
-        }
-        disp_chunks.push(disp_i);
+        disp_chunks.push(add_dispatch_chunk(&mut sim, tc, k, i, ca.as_ref(),
+                                            &enc, &mut prev_d, &mut prev_x,
+                                            pipelining));
     }
     // per-device backbone window with expert chunks inserted at `slot`
     let mut last_backbone: Vec<TaskId> = vec![0; n];
@@ -503,19 +661,13 @@ fn build_overlap_topo(tc: &TopoCosts, kind: MoEKind, k: usize, slot: usize,
         last_backbone[d] = tail;
         experts_by_dev.push(dev_experts);
     }
+    let mut prev_c: Vec<Option<TaskId>> = vec![None; n];
     let mut combines: Vec<TaskId> = Vec::new();
     for i in 0..chunks {
-        for d in 0..n {
-            combines.push(sim.add(format!("A2A-C{i}"), Resource::Comm(d),
-                                  tc.a2a_intra_combine(d, k) / fc,
-                                  &[experts_by_dev[d][i]]));
-        }
-        for node in 0..n_links {
-            let deps: Vec<TaskId> =
-                tc.devices_of(node).map(|d| experts_by_dev[d][i]).collect();
-            combines.push(sim.add(format!("A2A-Cx{i}"), Resource::Link(node),
-                                  tc.a2a_inter_combine(node, k) / fc, &deps));
-        }
+        let experts_i: Vec<TaskId> =
+            (0..n).map(|d| experts_by_dev[d][i]).collect();
+        add_combine_chunk(&mut sim, tc, k, i, ca.as_ref(), &experts_i,
+                          &mut prev_c, &mut combines, pipelining);
     }
     for d in 0..n {
         let c = &tc.per_device[d];
@@ -539,6 +691,7 @@ mod tests {
         BlockCosts {
             attn: 1.0, mlp: 0.8, se: 0.8, gate: 0.05, encode: 0.05,
             decode: 0.05, expert_k1: 0.6, a2a_k1: a2a,
+            a2a_alpha_k1: a2a / 16.0,
         }
     }
 
@@ -617,6 +770,15 @@ mod tests {
             a2a_inter_k1: if n_nodes > 1 { vec![inter_k1; n_nodes] } else { Vec::new() },
             a2a_intra_combine_k1: Vec::new(),
             a2a_inter_combine_k1: Vec::new(),
+            a2a_intra_alpha_k1: vec![c.a2a_alpha_k1; n],
+            a2a_inter_alpha_k1: if n_nodes > 1 {
+                vec![inter_k1 / 16.0; n_nodes]
+            } else {
+                Vec::new()
+            },
+            a2a_intra_combine_alpha_k1: Vec::new(),
+            a2a_inter_combine_alpha_k1: Vec::new(),
+            chunk_source: None,
             devices_per_node,
         }
     }

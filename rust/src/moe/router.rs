@@ -129,6 +129,47 @@ impl RoutingTable {
         mat
     }
 
+    /// Split into `chunks` contiguous token ranges (Tutel-style pipeline
+    /// chunking): part `i` covers tokens `[i·⌈n/chunks⌉, (i+1)·⌈n/chunks⌉)`
+    /// and keeps exactly the parent routes whose token falls in that range.
+    ///
+    /// Each part retains the parent's `n_tokens`/`k`/`capacity` (and the
+    /// parent's token ids and capacity slots), so `a2a_bytes_placed` maps
+    /// tokens to source devices identically and the parts' byte matrices
+    /// sum to the parent's matrix entry-for-entry — skewed routing skews
+    /// *per-chunk* traffic instead of being averaged away. `demand`/`load`
+    /// are the part's kept-route histograms and `dropped` the part's share
+    /// of the parent's capacity drops (attributed by token range).
+    pub fn chunk(&self, chunks: usize) -> Vec<RoutingTable> {
+        assert!(chunks >= 1);
+        let size = self.n_tokens.div_ceil(chunks);
+        let mut parts = Vec::with_capacity(chunks);
+        for i in 0..chunks {
+            let lo = (i * size).min(self.n_tokens);
+            let hi = ((i + 1) * size).min(self.n_tokens);
+            let routes: Vec<Route> = self.routes.iter()
+                .filter(|r| (lo..hi).contains(&r.token))
+                .cloned()
+                .collect();
+            let mut load = vec![0usize; self.n_experts];
+            for r in &routes {
+                load[r.expert] += 1;
+            }
+            let dropped = (hi - lo) * self.k - routes.len();
+            parts.push(RoutingTable {
+                n_tokens: self.n_tokens,
+                n_experts: self.n_experts,
+                capacity: self.capacity,
+                k: self.k,
+                routes,
+                demand: load.clone(),
+                load,
+                dropped,
+            });
+        }
+        parts
+    }
+
     /// Per-expert load imbalance: max load / mean load (1.0 = perfect).
     pub fn imbalance(&self) -> f64 {
         let total: usize = self.load.iter().sum();
@@ -206,6 +247,47 @@ mod tests {
         let p = Placement::custom(4, 2, vec![1, 1, 1, 1]);
         let m = rt.a2a_bytes_placed(&p, 10);
         assert_eq!(m, vec![0, 20, 0, 20]);
+    }
+
+    #[test]
+    fn chunk_partitions_routes_and_matrices() {
+        // 6 tokens, skewed: the first half routes remotely, the rest stays
+        let idx = vec![2, 3, 2, 0, 1, 0];
+        let w = vec![1.0; 6];
+        let rt = RoutingTable::build(&idx, &w, 6, 1, 4, 4);
+        for chunks in [1usize, 2, 3, 4] {
+            let parts = rt.chunk(chunks);
+            assert_eq!(parts.len(), chunks);
+            let kept: usize = parts.iter().map(|p| p.kept()).sum();
+            assert_eq!(kept, rt.kept(), "routes partition");
+            let full = rt.a2a_bytes_placed(&Placement::new(4, 2), 8);
+            let mut sum = vec![0usize; full.len()];
+            for p in &parts {
+                for (s, b) in sum.iter_mut()
+                    .zip(p.a2a_bytes_placed(&Placement::new(4, 2), 8))
+                {
+                    *s += b;
+                }
+            }
+            assert_eq!(sum, full, "chunk matrices sum to the parent's");
+        }
+        // contiguous split: chunk 0 of 2 holds tokens 0..3 only
+        let parts = rt.chunk(2);
+        assert!(parts[0].routes.iter().all(|r| r.token < 3));
+        assert!(parts[1].routes.iter().all(|r| r.token >= 3));
+    }
+
+    #[test]
+    fn chunk_attributes_drops_by_token_range() {
+        // capacity 1 on expert 0: tokens 1 and 2 drop (FCFS)
+        let idx = vec![0, 0, 0, 1];
+        let w = vec![1.0; 4];
+        let rt = RoutingTable::build(&idx, &w, 4, 1, 2, 1);
+        assert_eq!(rt.dropped, 2);
+        let parts = rt.chunk(2);
+        assert_eq!(parts[0].dropped, 1, "token 1's drop lands in chunk 0");
+        assert_eq!(parts[1].dropped, 1, "token 2's drop lands in chunk 1");
+        assert_eq!(parts.iter().map(|p| p.dropped).sum::<usize>(), rt.dropped);
     }
 
     #[test]

@@ -8,6 +8,7 @@ use crate::coordinator::adaptive::{choose_expert_slot_topo, overlap_fraction};
 use crate::coordinator::costs::{BlockCosts, ComputeCosts, MoEKind, Strategy, TopoCosts};
 use crate::coordinator::schedule::{
     backbone_time, build_pair_schedule_auto, build_pair_schedule_topo,
+    build_pair_schedule_topo_with, ChunkPipelining,
 };
 use crate::coordinator::timeline;
 use crate::moe::{Placement, RoutingTable};
@@ -131,6 +132,7 @@ pub fn train_costs(c: &BlockCosts) -> BlockCosts {
         decode: c.decode * 2.0,
         expert_k1: c.expert_k1 * 3.0,
         a2a_k1: c.a2a_k1 * 2.0,
+        a2a_alpha_k1: c.a2a_alpha_k1 * 2.0,
     }
 }
 
@@ -239,7 +241,48 @@ pub fn topo_report(args: &Args) -> Result<()> {
     println!("slot = adaptive expert location (1..4, Eq. 11) chosen per topology");
 
     routed_placement_study(args);
+    chunk_sweep_study(args);
     Ok(())
+}
+
+/// Chunk-count sweep on the 4-node IB preset (GPT3-XL payload): every
+/// chunk pays its own launch latency (`α + bytes/chunks/β` per phase), so
+/// deep chunking stops being free — the sweep exposes the optimum instead
+/// of monotonically rewarding more chunks as the amortized model did.
+/// `staged` columns use the MoNTA-style intra/inter pipeline (chunk i's
+/// uplink behind that node's intra tasks, overlapping chunk i+1's intra
+/// phase); `chained` serializes consecutive chunks' phases and is strictly
+/// slower at every chunk count.
+fn chunk_sweep_study(args: &Args) {
+    let sc = Scenario::FourNodeA800IBx32;
+    let tc = xl_topo_proxy_costs(sc);
+    let kind = MoEKind::ScMoE { k: 1 };
+    let max_chunks = args.usize_or("max-chunks", 16);
+    println!("\n== chunk sweep ({}, GPT3-XL payload) ==", sc.label());
+    println!("{:<7} {:>12} {:>13} {:>12} {:>12} {:>6}",
+             "chunks", "pipe-staged", "pipe-chained", "ovl-staged",
+             "ovl-chained", "slot");
+    let mut chunks = 1usize;
+    while chunks <= max_chunks {
+        let pipe = Strategy::Pipelined { chunks };
+        let staged = build_pair_schedule_topo(
+            &tc, MoEKind::Standard { k: 2 }, pipe, 0).makespan();
+        let chained = build_pair_schedule_topo_with(
+            &tc, MoEKind::Standard { k: 2 }, pipe, 0,
+            ChunkPipelining::PhaseChained).makespan();
+        let ostrat = Strategy::OverlapPipelined { chunks };
+        let (slot, ovl_staged) = choose_expert_slot_topo(&tc, kind, ostrat);
+        let ovl_chained = build_pair_schedule_topo_with(
+            &tc, kind, ostrat, slot, ChunkPipelining::PhaseChained).makespan();
+        println!("{:<7} {:>12} {:>13} {:>12} {:>12} {:>6}",
+                 chunks, fmt_secs(staged), fmt_secs(chained),
+                 fmt_secs(ovl_staged), fmt_secs(ovl_chained), slot + 1);
+        chunks *= 2;
+    }
+    println!("per-chunk α is paid by every chunk message, so deep chunking \
+              has a real cost;");
+    println!("staged = MoNTA intra/inter pipelining; chained = consecutive \
+              chunks' phases serialized");
 }
 
 /// The routed placement study's `(label, costs)` rows on one topology

@@ -1,0 +1,186 @@
+//! Acceptance tests for token-true, α-true chunked All-to-All:
+//!
+//! - total chunked comm time exceeds the unchunked time by exactly
+//!   `(chunks - 1) · α` per phase under uniform routing — the launch
+//!   latency is no longer amortized across chunks;
+//! - chunks = 1 stays bit-exact with the unchunked model (and with the
+//!   seed schedules, pinned independently by the golden corpus);
+//! - per-chunk routed byte matrices partition the unchunked matrix, so
+//!   skewed routing skews per-chunk traffic instead of averaging away;
+//! - the legacy (`BlockCosts`) and topology-aware chunk arithmetic agree
+//!   through the shared `cluster::a2a_chunk_time` helper.
+
+use scmoe::cluster::{a2a_chunk_time, Scenario};
+use scmoe::coordinator::costs::{MoEKind, Strategy, TopoCosts};
+use scmoe::coordinator::schedule::{
+    build_pair_schedule_topo, build_pair_schedule_topo_with, ChunkPipelining,
+};
+use scmoe::moe::Placement;
+use scmoe::report::efficiency::{
+    node_affine_routing, proxy_costs, topo_proxy_costs, xl_proxy_costs,
+    xl_topo_proxy_costs,
+};
+
+/// (a) Uniform routing: summing a phase over its chunks recovers the
+/// unchunked phase plus exactly one extra α per additional chunk — on
+/// every preset, for dispatch and combine, intra and inter.
+#[test]
+fn chunked_phase_totals_exceed_unchunked_by_alpha_per_extra_chunk() {
+    let k = 2usize;
+    for sc in Scenario::extended() {
+        for tc in [topo_proxy_costs(sc), xl_topo_proxy_costs(sc)] {
+            for chunks in [2usize, 3, 4, 8] {
+                let ca = tc.chunk_phases(k, chunks);
+                let extra = (chunks - 1) as f64;
+                for d in 0..tc.n_devices() {
+                    let total: f64 = (0..chunks).map(|i| ca.disp_intra[i][d]).sum();
+                    let expect = tc.a2a_intra(d, k)
+                        + extra * tc.a2a_intra_alpha(d, k);
+                    assert!((total - expect).abs() < 1e-12,
+                            "{} dev {d} x{chunks}: {total} vs {expect}",
+                            sc.label());
+                    let ctotal: f64 = (0..chunks).map(|i| ca.comb_intra[i][d]).sum();
+                    let cexpect = tc.a2a_intra_combine(d, k)
+                        + extra * tc.a2a_intra_combine_alpha(d, k);
+                    assert!((ctotal - cexpect).abs() < 1e-12);
+                }
+                for nd in 0..tc.a2a_inter_k1.len() {
+                    let total: f64 = (0..chunks).map(|i| ca.disp_inter[i][nd]).sum();
+                    let expect = tc.a2a_inter(nd, k)
+                        + extra * tc.a2a_inter_alpha(nd, k);
+                    assert!((total - expect).abs() < 1e-12,
+                            "{} node {nd} x{chunks}: {total} vs {expect}",
+                            sc.label());
+                }
+            }
+        }
+    }
+}
+
+/// (a, legacy twin) The `BlockCosts` path charges the identical per-chunk
+/// arithmetic through the shared helper: the two models cannot disagree.
+#[test]
+fn legacy_chunk_time_matches_shared_helper_and_alpha_total() {
+    for sc in Scenario::extended() {
+        for c in [proxy_costs(sc), xl_proxy_costs(sc)] {
+            for k in [1usize, 2] {
+                assert_eq!(c.a2a_chunk(k, 1), c.a2a(k), "chunks=1 identity");
+                for chunks in [2usize, 4, 8] {
+                    assert_eq!(c.a2a_chunk(k, chunks),
+                               a2a_chunk_time(c.a2a(k), c.a2a_alpha(k), chunks));
+                    let total = chunks as f64 * c.a2a_chunk(k, chunks);
+                    let expect = c.a2a(k)
+                        + (chunks - 1) as f64 * c.a2a_alpha(k);
+                    assert!((total - expect).abs() < 1e-12,
+                            "{}: {total} vs {expect}", sc.label());
+                }
+            }
+        }
+    }
+}
+
+/// (b) chunks = 1 keeps the seed semantics bit-exactly: the α
+/// decomposition cannot perturb an unchunked schedule (every phase runs
+/// whole), OverlapPipelined{1} is Overlap, and both pipelining models
+/// coincide. The chunks=1 golden corpus lines pin the same property
+/// against the seed's absolute span values.
+#[test]
+fn single_chunk_schedules_ignore_alpha_and_staging() {
+    let tc = xl_topo_proxy_costs(Scenario::FourNodeA800IBx32);
+    let mut no_alpha = tc.clone();
+    no_alpha.a2a_intra_alpha_k1 = Vec::new();
+    no_alpha.a2a_inter_alpha_k1 = Vec::new();
+    for (kind, strat, slot) in [
+        (MoEKind::Standard { k: 2 }, Strategy::Pipelined { chunks: 1 }, 0),
+        (MoEKind::ScMoE { k: 1 }, Strategy::OverlapPipelined { chunks: 1 }, 2),
+    ] {
+        let a = build_pair_schedule_topo(&tc, kind, strat, slot).run();
+        let b = build_pair_schedule_topo(&no_alpha, kind, strat, slot).run();
+        let c = build_pair_schedule_topo_with(
+            &tc, kind, strat, slot, ChunkPipelining::PhaseChained).run();
+        assert_eq!(a.len(), b.len());
+        for ((x, y), z) in a.iter().zip(&b).zip(&c) {
+            assert_eq!(x.start, y.start, "{}: α leaked into chunks=1", x.label);
+            assert_eq!(x.end, y.end);
+            assert_eq!(x.start, z.start, "{}: staging leaked into chunks=1",
+                       x.label);
+            assert_eq!(x.end, z.end);
+        }
+    }
+    // OverlapPipelined{1} builds the identical graph as Overlap
+    let ovl = build_pair_schedule_topo(
+        &tc, MoEKind::ScMoE { k: 1 }, Strategy::Overlap, 2).run();
+    let op1 = build_pair_schedule_topo(
+        &tc, MoEKind::ScMoE { k: 1 },
+        Strategy::OverlapPipelined { chunks: 1 }, 2).run();
+    assert_eq!(ovl.len(), op1.len());
+    for (x, y) in ovl.iter().zip(&op1) {
+        assert_eq!((x.start, x.end), (y.start, y.end), "{}", x.label);
+    }
+}
+
+/// (c) Token-true chunking: the per-chunk routed byte matrices sum to the
+/// unchunked matrix entry-for-entry, for any chunk count, under a skewed
+/// node-affine routing.
+#[test]
+fn per_chunk_routed_matrices_sum_to_unchunked() {
+    let topo = Scenario::FourNodeA800IBx32.topology();
+    let rt = node_affine_routing(topo.n_devices, topo.devices_per_node,
+                                 topo.n_devices, 64, 1, 7);
+    let p = Placement::new(topo.n_devices, topo.n_devices);
+    let full = rt.a2a_bytes_placed(&p, 8192);
+    for chunks in [1usize, 2, 3, 7, 16] {
+        let parts = rt.chunk(chunks);
+        assert_eq!(parts.len(), chunks);
+        let mut sum = vec![0usize; full.len()];
+        for part in &parts {
+            for (s, b) in sum.iter_mut().zip(part.a2a_bytes_placed(&p, 8192)) {
+                *s += b;
+            }
+        }
+        assert_eq!(sum, full, "chunks={chunks}");
+        let kept: usize = parts.iter().map(|part| part.kept()).sum();
+        assert_eq!(kept, rt.kept());
+    }
+}
+
+/// Skewed routing must skew *per-chunk* phases: a routing whose remote
+/// traffic all sits in the first half of the token range yields a chunk 0
+/// with strictly more uplink time than chunk 1 — dividing whole phases by
+/// the chunk count (the seed model) would make them equal.
+#[test]
+fn token_true_chunks_expose_routing_skew() {
+    use scmoe::cluster::Topology;
+    use scmoe::coordinator::costs::ComputeCosts;
+    use scmoe::moe::RoutingTable;
+    // 4 devices / 2 nodes; node 0's tokens (first half) all route to
+    // node 1's experts, node 1's tokens stay node-local.
+    let idx: Vec<i32> = vec![2, 3, 2, 3, 2, 3, 3, 2];
+    let w = vec![1.0f32; 8];
+    let rt = RoutingTable::build(&idx, &w, 8, 1, 4, 8);
+    let topo = Topology {
+        n_devices: 4,
+        devices_per_node: 2,
+        intra: scmoe::cluster::LinkModel::new(1e-6, 1e9),
+        inter: Some(scmoe::cluster::LinkModel::new(1e-5, 1e8)),
+        compute_scale: 1.0,
+        device_scales: None,
+        node_intra: None,
+    };
+    let tc = TopoCosts::from_routing(&ComputeCosts::swin_proxy(), &topo, &rt,
+                                     &Placement::new(4, 4), 4096);
+    let ca = tc.chunk_phases(1, 2);
+    // chunk 0 carries all of node 0's uplink traffic...
+    assert!(ca.disp_inter[0][0] > 0.0);
+    // ...and chunk 1 none of it (node 1's tokens are node-local)
+    assert_eq!(ca.disp_inter[1][0], 0.0);
+    assert_eq!(ca.disp_inter[1][1], 0.0);
+    // combine mirrors: only chunk 0 returns traffic across the fabric
+    assert!(ca.comb_inter[0][1] > 0.0);
+    assert_eq!(ca.comb_inter[1][1], 0.0);
+    // and the built schedule differs from the evenly-divided model
+    let staged = build_pair_schedule_topo(
+        &tc, MoEKind::ScMoE { k: 1 },
+        Strategy::Pipelined { chunks: 2 }, 0).makespan();
+    assert!(staged > 0.0);
+}

@@ -13,7 +13,7 @@ use scmoe::util::propcheck::{check, gen};
 use scmoe::util::rng::Rng;
 
 fn rand_costs(rng: &mut Rng) -> BlockCosts {
-    BlockCosts {
+    let mut c = BlockCosts {
         attn: gen::f64_in(rng, 0.1, 2.0),
         mlp: gen::f64_in(rng, 0.1, 2.0),
         se: gen::f64_in(rng, 0.1, 2.0),
@@ -22,7 +22,11 @@ fn rand_costs(rng: &mut Rng) -> BlockCosts {
         decode: gen::f64_in(rng, 0.01, 0.2),
         expert_k1: gen::f64_in(rng, 0.1, 2.0),
         a2a_k1: gen::f64_in(rng, 0.0, 3.0),
-    }
+        a2a_alpha_k1: 0.0,
+    };
+    // α is a fraction of the one-way time: links spend 0-50% on latency
+    c.a2a_alpha_k1 = c.a2a_k1 * gen::f64_in(rng, 0.0, 0.5);
+    c
 }
 
 // ---------------------------------------------------------------------------
@@ -152,16 +156,33 @@ fn prop_zero_comm_overlap_equals_serial_compute() {
 }
 
 #[test]
-fn prop_pipelining_never_hurts_vs_sequential() {
-    check("pipe-no-worse", 100, rand_costs, |c| {
+fn prop_pipelining_cost_bounded_by_chunk_alpha() {
+    // α-true chunking: each extra chunk message pays the launch latency
+    // again, so pipelining is no longer free. It can still never cost
+    // more than the added latency — (chunks-1)·α per one-way phase, two
+    // phases per A2A — and on latency-free links (α = 0) the seed's
+    // "pipelining never hurts" claim must keep holding exactly.
+    check("pipe-alpha-bound", 100, rand_costs, |c| {
         for k in [1usize, 2] {
             let kind = MoEKind::Standard { k };
             let seq = build_pair_schedule(c, kind, Strategy::Sequential, 0).makespan();
+            let mut free = c.clone();
+            free.a2a_alpha_k1 = 0.0;
+            let seq_free =
+                build_pair_schedule(&free, kind, Strategy::Sequential, 0).makespan();
             for chunks in [2usize, 4] {
                 let p = build_pair_schedule(c, kind,
                                             Strategy::Pipelined { chunks }, 0).makespan();
-                if p > seq + 1e-9 {
-                    return Err(format!("pipe{chunks} ({p}) worse than seq ({seq})"));
+                let bound = seq + 2.0 * (chunks - 1) as f64 * c.a2a_alpha(k);
+                if p > bound + 1e-9 {
+                    return Err(format!(
+                        "pipe{chunks} ({p}) exceeds seq + chunk-α bound ({bound})"));
+                }
+                let pf = build_pair_schedule(&free, kind,
+                                             Strategy::Pipelined { chunks }, 0).makespan();
+                if pf > seq_free + 1e-9 {
+                    return Err(format!(
+                        "α-free pipe{chunks} ({pf}) worse than seq ({seq_free})"));
                 }
             }
         }

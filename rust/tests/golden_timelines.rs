@@ -10,7 +10,8 @@
 use scmoe::cluster::{LinkModel, Topology};
 use scmoe::coordinator::costs::{BlockCosts, ComputeCosts, MoEKind, Strategy, TopoCosts};
 use scmoe::coordinator::schedule::{
-    build_pair_schedule, build_pair_schedule_topo, PairSchedule,
+    build_pair_schedule, build_pair_schedule_topo, build_pair_schedule_topo_with,
+    ChunkPipelining, PairSchedule,
 };
 use scmoe::moe::{Placement, RoutingTable};
 use scmoe::simtime::Resource;
@@ -27,6 +28,9 @@ fn dyadic_costs() -> BlockCosts {
         decode: 0.0625,
         expert_k1: 0.5,
         a2a_k1: 0.8125,
+        // 1/13 of the one-way time is launch latency: chunked entries pay
+        // it per chunk, so pipe4 visibly stops dominating pipe2
+        a2a_alpha_k1: 0.0625,
     }
 }
 
@@ -47,6 +51,11 @@ fn dyadic_fleet() -> TopoCosts {
         a2a_inter_k1: vec![0.5; 2],
         a2a_intra_combine_k1: Vec::new(),
         a2a_inter_combine_k1: Vec::new(),
+        a2a_intra_alpha_k1: vec![0.0625; 4],
+        a2a_inter_alpha_k1: vec![0.125; 2],
+        a2a_intra_combine_alpha_k1: Vec::new(),
+        a2a_inter_combine_alpha_k1: Vec::new(),
+        chunk_source: None,
         devices_per_node: 2,
     }
 }
@@ -163,12 +172,21 @@ fn generate_lines() -> Vec<String> {
         "fleet:Top2/pipe2",
         &build_pair_schedule_topo(&tf, MoEKind::Standard { k: 2 },
                                   Strategy::Pipelined { chunks: 2 }, 0)));
+    lines.push(render_line(
+        "fleet:Top2/pipe2-chained",
+        &build_pair_schedule_topo_with(&tf, MoEKind::Standard { k: 2 },
+                                       Strategy::Pipelined { chunks: 2 }, 0,
+                                       ChunkPipelining::PhaseChained)));
     for slot in 0..4 {
         lines.push(render_line(
             &format!("fleet:ScMoE/overlap-s{slot}"),
             &build_pair_schedule_topo(&tf, MoEKind::ScMoE { k: 1 },
                                       Strategy::Overlap, slot)));
     }
+    lines.push(render_line(
+        "fleet:ScMoE/overlap+pipe2-s2",
+        &build_pair_schedule_topo(&tf, MoEKind::ScMoE { k: 1 },
+                                  Strategy::OverlapPipelined { chunks: 2 }, 2)));
 
     let rt = routed_table();
     for (name, placement) in [
@@ -185,6 +203,11 @@ fn generate_lines() -> Vec<String> {
             &format!("routed:{name}/overlap-s2"),
             &build_pair_schedule_topo(&tc, MoEKind::ScMoE { k: 1 },
                                       Strategy::Overlap, 2)));
+        lines.push(render_line(
+            &format!("routed:{name}/overlap+pipe2-s2"),
+            &build_pair_schedule_topo(&tc, MoEKind::ScMoE { k: 1 },
+                                      Strategy::OverlapPipelined { chunks: 2 },
+                                      2)));
     }
     lines
 }
@@ -224,8 +247,9 @@ fn golden_file_covers_every_kind_and_strategy() {
     for needle in [
         "Top1/", "Top2/", "Top3/", "Top1+SE1/", "ScMoE/", "ScMoE-2/",
         "/seq", "/pipe1", "/pipe2", "/pipe4", "/overlap-s0", "/overlap-s3",
-        "/overlap+pipe2-s0", "fleet:", "routed:block/", "routed:affinity/",
-        "routed:skewed/",
+        "/overlap+pipe2-s0", "fleet:", "fleet:Top2/pipe2-chained",
+        "fleet:ScMoE/overlap+pipe2-s2", "routed:block/", "routed:affinity/",
+        "routed:skewed/", "routed:skewed/overlap+pipe2-s2",
     ] {
         assert!(GOLDEN.contains(needle), "golden corpus is missing {needle}");
     }

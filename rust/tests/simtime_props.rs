@@ -110,7 +110,7 @@ fn graham_anomaly_on_arbitrary_dags() {
     assert_eq!(makespan_with_p(2.0), 21.5); // longer P, shorter makespan
 }
 
-const COST_FIELDS: usize = 8;
+const COST_FIELDS: usize = 9;
 
 fn bump_field(c: &BlockCosts, field: usize, delta: f64) -> BlockCosts {
     let mut c = c.clone();
@@ -122,7 +122,8 @@ fn bump_field(c: &BlockCosts, field: usize, delta: f64) -> BlockCosts {
         4 => c.encode += delta,
         5 => c.decode += delta,
         6 => c.expert_k1 += delta,
-        _ => c.a2a_k1 += delta,
+        7 => c.a2a_k1 += delta,
+        _ => c.a2a_alpha_k1 += delta,
     }
     c
 }
@@ -192,14 +193,21 @@ fn prop_topo_fleet_makespan_monotone() {
             a2a_inter_k1: vec![*inter; 2],
             a2a_intra_combine_k1: Vec::new(),
             a2a_inter_combine_k1: Vec::new(),
+            a2a_intra_alpha_k1: vec![c.a2a_alpha_k1; 4],
+            a2a_inter_alpha_k1: vec![*inter / 16.0; 2],
+            a2a_intra_combine_alpha_k1: Vec::new(),
+            a2a_inter_combine_alpha_k1: Vec::new(),
+            chunk_source: None,
             devices_per_node: 2,
         };
         let mut bumped = base.clone();
         if *field < 7 {
             let slowed = bump_field(&base.per_device[*dev], *field, *delta);
             bumped.per_device[*dev] = slowed;
-        } else {
+        } else if *field == 7 {
             bumped.a2a_intra_k1[*dev] += *delta;
+        } else {
+            bumped.a2a_intra_alpha_k1[*dev] += *delta;
         }
         for (kind, strategy, slot) in monotone_configs() {
             let before = build_pair_schedule_topo(&base, kind, strategy, slot).makespan();
@@ -252,7 +260,7 @@ fn link_resource_serializes_within_node_only() {
 // ---------------------------------------------------------------------------
 
 fn rand_costs(rng: &mut Rng) -> BlockCosts {
-    BlockCosts {
+    let mut c = BlockCosts {
         attn: gen::f64_in(rng, 0.1, 2.0),
         mlp: gen::f64_in(rng, 0.1, 2.0),
         se: gen::f64_in(rng, 0.1, 2.0),
@@ -261,7 +269,11 @@ fn rand_costs(rng: &mut Rng) -> BlockCosts {
         decode: gen::f64_in(rng, 0.01, 0.2),
         expert_k1: gen::f64_in(rng, 0.1, 2.0),
         a2a_k1: gen::f64_in(rng, 0.0, 3.0),
-    }
+        a2a_alpha_k1: 0.0,
+    };
+    // α is a fraction of the one-way time: links spend 0-50% on latency
+    c.a2a_alpha_k1 = c.a2a_k1 * gen::f64_in(rng, 0.0, 0.5);
+    c
 }
 
 fn assert_identical(c: &BlockCosts, tc: &TopoCosts, kind: MoEKind,

@@ -13,6 +13,7 @@ use scmoe::coordinator::adaptive::choose_expert_slot_topo;
 use scmoe::coordinator::costs::{MoEKind, Strategy, TopoCosts};
 use scmoe::coordinator::schedule::{
     build_pair_schedule, build_pair_schedule_topo, build_pair_schedule_topo_auto,
+    build_pair_schedule_topo_with, ChunkPipelining,
 };
 use scmoe::report::efficiency::{proxy_costs, topo_proxy_costs, xl_topo_proxy_costs};
 
@@ -78,6 +79,37 @@ fn overlap_pipelined_also_beats_sequential_on_fleets() {
             &tc, MoEKind::ScMoE { k: 1 },
             Strategy::OverlapPipelined { chunks: 2 }).makespan();
         assert!(ovl < seq, "{}: {ovl} vs {seq}", sc.label());
+    }
+}
+
+#[test]
+fn staged_pipelining_strictly_beats_phase_chained_on_4node_ib() {
+    // Acceptance criterion: on the 32xA800-4node-IB preset the MoNTA-style
+    // staged pipeline (chunk i's uplink overlapping chunk i+1's intra
+    // phase) strictly beats the phase-chained schedule at the same chunk
+    // count — for both the plain pipeline and the ScMoE overlap+pipeline.
+    // Mirrored margins: pipe 120us/74us/50us and ovl 43us/110us/96us at
+    // chunks 2/4/8 — far beyond f64 noise.
+    let tc = xl_topo_proxy_costs(Scenario::FourNodeA800IBx32);
+    for chunks in [2usize, 4, 8] {
+        let staged = build_pair_schedule_topo(
+            &tc, MoEKind::Standard { k: 2 },
+            Strategy::Pipelined { chunks }, 0).makespan();
+        let chained = build_pair_schedule_topo_with(
+            &tc, MoEKind::Standard { k: 2 },
+            Strategy::Pipelined { chunks }, 0,
+            ChunkPipelining::PhaseChained).makespan();
+        assert!(staged < chained,
+                "pipe{chunks}: staged {staged} vs chained {chained}");
+
+        let kind = MoEKind::ScMoE { k: 1 };
+        let strat = Strategy::OverlapPipelined { chunks };
+        let (slot, ovl_staged) = choose_expert_slot_topo(&tc, kind, strat);
+        let ovl_chained = build_pair_schedule_topo_with(
+            &tc, kind, strat, slot, ChunkPipelining::PhaseChained).makespan();
+        assert!(ovl_staged < ovl_chained,
+                "ovl+pipe{chunks} slot {slot}: staged {ovl_staged} \
+                 vs chained {ovl_chained}");
     }
 }
 

@@ -429,41 +429,839 @@ class Placement:
         return self.map[e]
 
 
-if __name__ == '__main__':
-    # validate the full golden corpus (seed lines + routed placements)
-    from mirror import Topology as _T
-    lines = generate_seed_lines()
-    _topo = _T(4, 2, LinkModel(0.0625, 1024.0), LinkModel(0.125, 512.0), 1.0, None)
-    _base = ComputeCosts(1.0, 0.75, 0.75, 0.0625, 0.0625, 0.0625, 0.5)
-    _rt = RoutingTable([0, 2, 0, 2, 2, 0, 0, 2, 1, 3, 3, 1, 3, 1, 3, 3],
-                       [1.0] * 16, 16, 1, 4, 16)
-    for _name, _p in [('block', Placement.block(4, 4)),
-                      ('affinity', Placement.affinity_packed(_rt, 4, 2)),
-                      ('skewed', Placement.imbalance_skewed(4, 4, 2))]:
-        _tc = topo_from_routed(_base, _topo, _rt.a2a_bytes_placed(_p, 64), _rt.k)
-        lines.append(render_line(f'routed:{_name}/seq',
-                     build_pair_schedule_topo_c(_tc, ('scmoe', 1), ('seq',), 0)))
-        lines.append(render_line(f'routed:{_name}/overlap-s2',
-                     build_pair_schedule_topo_c(_tc, ('scmoe', 1), ('overlap',), 2)))
+# ======================================================================
+# PR 3 model: token-true chunked All-to-All with per-link intra/inter
+# pipelining. Transcribes the post-PR3 Rust line-by-line:
+#   cluster/interconnect.rs  -> a2a_chunk_time, a2a_decompose_pn3,
+#                               a2a_time_split_pn
+#   moe/router.rs            -> RoutingTable.chunk (chunk_rt)
+#   coordinator/costs.rs     -> BlockCosts3, TopoCosts3 (+ ChunkSource)
+#   coordinator/schedule.rs  -> build_*3 builders with ChunkPipelining
+# ======================================================================
+
+import math
+from dataclasses import dataclass as _dataclass
+
+
+def rust_round(x):
+    """f64::round (half away from zero) for non-negative x. Computed on
+    the exact fractional part — floor(x + 0.5) would round up one ulp
+    below .5 (x + 0.5 is inexact there) and diverge from Rust."""
+    f = math.floor(x)
+    return int(f) + (1 if x - f >= 0.5 else 0)
+
+
+def a2a_chunk_time(full, alpha, chunks):
+    assert chunks >= 1
+    if chunks == 1:
+        return full
+    return alpha + (full - alpha) / float(chunks)
+
+
+def a2a_time_split_pn(bytes_, n_devices, devices_per_node, intra_links, inter):
+    n_nodes = n_devices // devices_per_node
+    node_of = lambda d: d // devices_per_node
+    worst = (0.0, 0.0)
+    for src in range(n_devices):
+        out_bytes = 0
+        msgs = 0
+        for dst in range(n_devices):
+            if dst == src:
+                continue
+            b = bytes_[src * n_devices + dst]
+            if b > 0:
+                out_bytes += b
+                msgs += 1
+        l = intra_links[node_of(src)]
+        a = l.alpha * float(msgs)
+        t = a + float(out_bytes) / l.beta
+        if t > worst[0]:
+            worst = (t, a)
+    if inter is not None and n_nodes > 1:
+        for node in range(n_nodes):
+            cross = 0
+            for src in range(n_devices):
+                if node_of(src) != node:
+                    continue
+                for dst in range(n_devices):
+                    if node_of(dst) != node:
+                        cross += bytes_[src * n_devices + dst]
+            if cross > 0:
+                t = inter.alpha + float(cross) / inter.beta
+                if t > worst[0]:
+                    worst = (t, inter.alpha)
+    return worst
+
+
+def a2a_decompose_pn3(bytes_, n_devices, devices_per_node, intra_links, inter):
+    """Returns (intra, inter, intra_alpha, inter_alpha)."""
+    n_nodes = n_devices // devices_per_node
+    node_of = lambda d: d // devices_per_node
+    split = inter is not None and n_nodes > 1
+    intra_phase = []
+    intra_alpha = []
+    for src in range(n_devices):
+        out_bytes = 0
+        msgs = 0
+        for dst in range(n_devices):
+            if dst == src or (split and node_of(dst) != node_of(src)):
+                continue
+            b = bytes_[src * n_devices + dst]
+            if b > 0:
+                out_bytes += b
+                msgs += 1
+        l = intra_links[node_of(src)]
+        a = l.alpha * float(msgs)
+        intra_alpha.append(a)
+        intra_phase.append(a + float(out_bytes) / l.beta)
+    inter_phase = []
+    inter_alpha = []
+    if split:
+        for node in range(n_nodes):
+            cross = 0
+            for src in range(n_devices):
+                if node_of(src) != node:
+                    continue
+                for dst in range(n_devices):
+                    if node_of(dst) != node:
+                        cross += bytes_[src * n_devices + dst]
+            if cross > 0:
+                inter_alpha.append(inter.alpha)
+                inter_phase.append(inter.alpha + float(cross) / inter.beta)
+            else:
+                inter_alpha.append(0.0)
+                inter_phase.append(0.0)
+    return intra_phase, inter_phase, intra_alpha, inter_alpha
+
+
+def uniform_bytes_per_pair3(topo, tokens_per_device, token_bytes, cf):
+    return rust_round((float(tokens_per_device) * cf / float(topo.n_devices))
+                      * float(token_bytes))
+
+
+@_dataclass
+class BlockCosts3:
+    attn: float; mlp: float; se: float; gate: float
+    encode: float; decode: float; expert_k1: float
+    a2a_k1: float; a2a_alpha_k1: float
+
+    def expert(self, k): return self.expert_k1 * float(k)
+    def a2a(self, k): return self.a2a_k1 * float(k)
+    def a2a_alpha(self, k): return self.a2a_alpha_k1 * float(k)
+    def a2a_chunk(self, k, chunks):
+        return a2a_chunk_time(self.a2a(k), self.a2a_alpha(k), chunks)
+
+
+class ChunkSource:
+    def __init__(self, rt, placement, token_bytes, intra_links, inter):
+        self.rt = rt
+        self.placement = placement
+        self.token_bytes = token_bytes
+        self.intra_links = intra_links
+        self.inter = inter
+
+
+def chunk_rt(rt, chunks):
+    """RoutingTable::chunk — contiguous token ranges, parent token space."""
+    assert chunks >= 1
+    size = -(-rt.n_tokens // chunks)
+    parts = []
+    for i in range(chunks):
+        lo = min(i * size, rt.n_tokens)
+        hi = min((i + 1) * size, rt.n_tokens)
+        part = RoutingTable.__new__(RoutingTable)
+        part.n_tokens = rt.n_tokens
+        part.n_experts = rt.n_experts
+        part.capacity = rt.capacity
+        part.k = rt.k
+        part.routes = [r for r in rt.routes if lo <= r[0] < hi]
+        load = [0] * rt.n_experts
+        for r in part.routes:
+            load[r[2]] += 1
+        part.demand = load[:]
+        part.load = load
+        part.dropped = (hi - lo) * rt.k - len(part.routes)
+        parts.append(part)
+    return parts
+
+
+class TopoCosts3:
+    def __init__(self, per_device, a2a_intra_k1, a2a_inter_k1,
+                 devices_per_node, intra_c=None, inter_c=None,
+                 intra_a=None, inter_a=None, intra_ca=None, inter_ca=None,
+                 chunk_source=None):
+        self.per_device = per_device
+        self.a2a_intra_k1 = a2a_intra_k1
+        self.a2a_inter_k1 = a2a_inter_k1
+        self.a2a_intra_combine_k1 = intra_c or []
+        self.a2a_inter_combine_k1 = inter_c or []
+        self.a2a_intra_alpha_k1 = intra_a or []
+        self.a2a_inter_alpha_k1 = inter_a or []
+        self.a2a_intra_combine_alpha_k1 = intra_ca or []
+        self.a2a_inter_combine_alpha_k1 = inter_ca or []
+        self.chunk_source = chunk_source
+        self.devices_per_node = devices_per_node
+
+    def n_devices(self): return len(self.per_device)
+
+    def node_of(self, d): return d // self.devices_per_node
+
+    def devices_of(self, node):
+        lo = node * self.devices_per_node
+        return range(lo, min(lo + self.devices_per_node, self.n_devices()))
+
+    def a2a_intra(self, d, k): return self.a2a_intra_k1[d] * float(k)
+    def a2a_inter(self, n, k): return self.a2a_inter_k1[n] * float(k)
+
+    def a2a_intra_combine(self, d, k):
+        if not self.a2a_intra_combine_k1:
+            return self.a2a_intra(d, k)
+        return self.a2a_intra_combine_k1[d] * float(k)
+
+    def a2a_inter_combine(self, n, k):
+        if not self.a2a_inter_combine_k1:
+            return self.a2a_inter(n, k)
+        return self.a2a_inter_combine_k1[n] * float(k)
+
+    def a2a_intra_alpha(self, d, k):
+        if not self.a2a_intra_alpha_k1:
+            return 0.0
+        return self.a2a_intra_alpha_k1[d] * float(k)
+
+    def a2a_inter_alpha(self, n, k):
+        if not self.a2a_inter_alpha_k1:
+            return 0.0
+        return self.a2a_inter_alpha_k1[n] * float(k)
+
+    def a2a_intra_combine_alpha(self, d, k):
+        if not self.a2a_intra_combine_alpha_k1:
+            return self.a2a_intra_alpha(d, k)
+        return self.a2a_intra_combine_alpha_k1[d] * float(k)
+
+    def a2a_inter_combine_alpha(self, n, k):
+        if not self.a2a_inter_combine_alpha_k1:
+            return self.a2a_inter_alpha(n, k)
+        return self.a2a_inter_combine_alpha_k1[n] * float(k)
+
+    def chunk_phases(self, k, chunks):
+        assert chunks >= 1
+        n = self.n_devices()
+        n_links = len(self.a2a_inter_k1)
+        if self.chunk_source is not None:
+            src = self.chunk_source
+            kf = float(max(src.rt.k, 1))
+            scale = float(k) / kf
+            di, dx, ci, cx = [], [], [], []
+            for part in chunk_rt(src.rt, chunks):
+                disp = part.a2a_bytes_placed(src.placement, src.token_bytes)
+                comb = transpose(disp, n)
+                pdi, pdx, _, _ = a2a_decompose_pn3(
+                    disp, n, self.devices_per_node, src.intra_links, src.inter)
+                pci, pcx, _, _ = a2a_decompose_pn3(
+                    comb, n, self.devices_per_node, src.intra_links, src.inter)
+                di.append([t * scale for t in pdi])
+                dx.append([t * scale for t in pdx])
+                ci.append([t * scale for t in pci])
+                cx.append([t * scale for t in pcx])
+            return di, dx, ci, cx
+        di_row = [a2a_chunk_time(self.a2a_intra(d, k),
+                                 self.a2a_intra_alpha(d, k), chunks)
+                  for d in range(n)]
+        dx_row = [a2a_chunk_time(self.a2a_inter(nd, k),
+                                 self.a2a_inter_alpha(nd, k), chunks)
+                  for nd in range(n_links)]
+        ci_row = [a2a_chunk_time(self.a2a_intra_combine(d, k),
+                                 self.a2a_intra_combine_alpha(d, k), chunks)
+                  for d in range(n)]
+        cx_row = [a2a_chunk_time(self.a2a_inter_combine(nd, k),
+                                 self.a2a_inter_combine_alpha(nd, k), chunks)
+                  for nd in range(n_links)]
+        return ([di_row[:] for _ in range(chunks)],
+                [dx_row[:] for _ in range(chunks)],
+                [ci_row[:] for _ in range(chunks)],
+                [cx_row[:] for _ in range(chunks)])
+
+
+def topo_from_block3(c):
+    return TopoCosts3([replace(c)], [c.a2a_k1], [], 1,
+                      intra_a=[c.a2a_alpha_k1])
+
+
+def block_from_topology3(base, topo, tokens_per_device, token_bytes, cf,
+                         node_intra=None):
+    s = topo.compute_scale
+    if topo.device_scales:
+        s = min(topo.device_scales)
+    bpp = uniform_bytes_per_pair3(topo, tokens_per_device, token_bytes, cf)
+    m = uniform_a2a_bytes(topo.n_devices, bpp)
+    links = topo_intra_links(topo, node_intra)
+    a2a_k1, a2a_alpha_k1 = a2a_time_split_pn(
+        m, topo.n_devices, topo.devices_per_node, links, topo.inter)
+    return BlockCosts3(base.attn / s, base.mlp / s, base.se / s,
+                       base.gate / s, base.encode / s, base.decode / s,
+                       base.expert_k1 / s, a2a_k1, a2a_alpha_k1)
+
+
+def topo_from_topology3(base, topo, tokens_per_device, token_bytes, cf,
+                        node_intra=None):
+    bpp = uniform_bytes_per_pair3(topo, tokens_per_device, token_bytes, cf)
+    m = uniform_a2a_bytes(topo.n_devices, bpp)
+    links = topo_intra_links(topo, node_intra)
+    intra, inter, intra_a, inter_a = a2a_decompose_pn3(
+        m, topo.n_devices, topo.devices_per_node, links, topo.inter)
+    flat, flat_a = a2a_time_split_pn(m, topo.n_devices, topo.devices_per_node,
+                                     links, topo.inter)
+    per_device = []
+    for d in range(topo.n_devices):
+        s = topo.device_compute_scale(d)
+        per_device.append(BlockCosts3(base.attn / s, base.mlp / s, base.se / s,
+                                      base.gate / s, base.encode / s,
+                                      base.decode / s, base.expert_k1 / s,
+                                      flat, flat_a))
+    return TopoCosts3(per_device, intra, inter, topo.devices_per_node,
+                      intra_a=intra_a, inter_a=inter_a)
+
+
+def topo_from_routing3(base, topo, rt, placement, token_bytes,
+                       node_intra=None):
+    n = topo.n_devices
+    links = topo_intra_links(topo, node_intra)
+    disp = rt.a2a_bytes_placed(placement, token_bytes)
+    comb = transpose(disp, n)
+    pdi, pdx, pdia, pdxa = a2a_decompose_pn3(
+        disp, n, topo.devices_per_node, links, topo.inter)
+    pci, pcx, pcia, pcxa = a2a_decompose_pn3(
+        comb, n, topo.devices_per_node, links, topo.inter)
+    kf = float(max(rt.k, 1))
+    scale = lambda v: [x / kf for x in v]
+    td, ad = a2a_time_split_pn(disp, n, topo.devices_per_node, links, topo.inter)
+    tcm, acm = a2a_time_split_pn(comb, n, topo.devices_per_node, links, topo.inter)
+    if tcm > td:
+        flat, flat_a = tcm / kf, acm / kf
+    else:
+        flat, flat_a = td / kf, ad / kf
+    per_device = []
+    for d in range(n):
+        s = topo.device_compute_scale(d)
+        per_device.append(BlockCosts3(base.attn / s, base.mlp / s, base.se / s,
+                                      base.gate / s, base.encode / s,
+                                      base.decode / s, base.expert_k1 / s,
+                                      flat, flat_a))
+    return TopoCosts3(per_device, scale(pdi), scale(pdx),
+                      topo.devices_per_node,
+                      intra_c=scale(pci), inter_c=scale(pcx),
+                      intra_a=scale(pdia), inter_a=scale(pdxa),
+                      intra_ca=scale(pcia), inter_ca=scale(pcxa),
+                      chunk_source=ChunkSource(rt, placement, token_bytes,
+                                               links, topo.inter))
+
+
+# --- schedule.rs (post-PR3) -------------------------------------------
+
+STAGED = 'staged'
+PHASE_CHAINED = 'chained'
+
+
+def build_sequential3(c, kind, k):
+    return build_sequential(c, kind, k)
+
+
+def build_pipelined3(c, kind, k, chunks):
+    sim = Sim()
+    attn_l = sim.add("Attn(l)", comp(DEV), c.attn, [])
+    mlp_l = sim.add("MLP(l)", comp(DEV), c.mlp, [attn_l])
+    attn_m = sim.add("Attn(l+1)", comp(DEV), c.attn, [mlp_l])
+    gate = sim.add("Gate", comp(DEV), c.gate, [attn_m])
+    enc = sim.add("Encode", comp(DEV), c.encode, [gate])
+    fc = float(chunks)
+    combines = []
+    prev_disp = None
+    for i in range(chunks):
+        dd = [enc, prev_disp] if prev_disp is not None else [enc]
+        disp = sim.add(f"A2A-D{i}", comm(DEV), c.a2a_chunk(k, chunks), dd)
+        prev_disp = disp
+        expert = sim.add(f"Expert{i}", comp(DEV), c.expert(k) / fc, [disp])
+        comb = sim.add(f"A2A-C{i}", comm(DEV), c.a2a_chunk(k, chunks), [expert])
+        combines.append(comb)
+    decode_deps = combines[:]
+    if has_shared_expert(kind):
+        se = sim.add("SE", comp(DEV), c.se, [attn_m])
+        decode_deps.append(se)
+    sim.add("Decode", comp(DEV), c.decode, decode_deps)
+    return sim
+
+
+def build_overlap3(c, kind, k, slot, chunks):
+    assert slot <= 3 and chunks >= 1
+    sim = Sim()
+    attn_l = sim.add("Attn(l)", comp(DEV), c.attn, [])
+    gate = sim.add("Gate", comp(DEV), c.gate, [attn_l])
+    enc = sim.add("Encode", comp(DEV), c.encode, [gate])
+    fc = float(chunks)
+    dispatches = []
+    prev = None
+    for i in range(chunks):
+        deps = [enc, prev] if prev is not None else [enc]
+        d = sim.add(f"A2A-D{i}", comm(DEV), c.a2a_chunk(k, chunks), deps)
+        dispatches.append(d)
+        prev = d
+    experts = []
+    last_backbone = attn_l
+    window = [("MLP(l)", c.mlp), ("Attn(l+1)", c.attn), ("SE(l+1)", c.se)]
+    def place_experts(after):
+        tail = after
+        for i, d in enumerate(dispatches):
+            e = sim.add(f"Expert{i}", comp(DEV), c.expert(k) / fc, [d, tail])
+            experts.append(e)
+            tail = e
+        return tail
+    if slot == 0:
+        last_backbone = place_experts(last_backbone)
+    for i, (label, dur) in enumerate(window):
+        last_backbone = sim.add(label, comp(DEV), dur, [last_backbone])
+        if slot == i + 1:
+            last_backbone = place_experts(last_backbone)
+    combines = []
+    for i, e in enumerate(experts):
+        combines.append(sim.add(f"A2A-C{i}", comm(DEV),
+                                c.a2a_chunk(k, chunks), [e]))
+    deps = combines[:]
+    deps.append(last_backbone)
+    sim.add("Decode", comp(DEV), c.decode, deps)
+    return sim
+
+
+def build_pair_schedule3(c, kind, strat, slot):
+    k = routed_k(kind)
+    name = strat[0]
+    if name == "seq":
+        return build_sequential3(c, kind, k)
+    if name == "pipe":
+        return build_pipelined3(c, kind, k, strat[1])
+    if name == "overlap":
+        return build_overlap3(c, kind, k, slot, 1)
+    if name == "overlap-pipe":
+        return build_overlap3(c, kind, k, slot, strat[1])
+    raise ValueError(name)
+
+
+def add_dispatch_chunk3(sim, tc, k, i, ca, enc, prev_d, prev_x, pipelining):
+    n = tc.n_devices()
+    n_links = len(tc.a2a_inter_k1)
+    disp_i = []
+    for d in range(n):
+        deps = [enc[d]]
+        if prev_d[d] is not None:
+            deps.append(prev_d[d])
+        if pipelining == PHASE_CHAINED and n_links > 0:
+            if prev_x[tc.node_of(d)] is not None:
+                deps.append(prev_x[tc.node_of(d)])
+        dur = ca[0][i][d] if ca is not None else tc.a2a_intra(d, k)
+        t = sim.add(f"A2A-D{i}", comm(d), dur, deps)
+        prev_d[d] = t
+        disp_i.append(t)
+    for node in range(n_links):
+        if ca is not None:
+            deps = [disp_i[d] for d in tc.devices_of(node)]
+        else:
+            deps = [enc[d] for d in tc.devices_of(node)]
+        if prev_x[node] is not None:
+            deps.append(prev_x[node])
+        dur = ca[1][i][node] if ca is not None else tc.a2a_inter(node, k)
+        t = sim.add(f"A2A-Dx{i}", link(node), dur, deps)
+        prev_x[node] = t
+        disp_i.append(t)
+    return disp_i
+
+
+def add_combine_chunk3(sim, tc, k, i, ca, experts_i, prev_c, combines,
+                       pipelining):
+    n = tc.n_devices()
+    n_links = len(tc.a2a_inter_k1)
+    if ca is not None:
+        comb_x_i = []
+        for node in range(n_links):
+            deps = [experts_i[d] for d in tc.devices_of(node)]
+            if pipelining == PHASE_CHAINED:
+                for d in tc.devices_of(node):
+                    if prev_c[d] is not None:
+                        deps.append(prev_c[d])
+            t = sim.add(f"A2A-Cx{i}", link(node), ca[3][i][node], deps)
+            comb_x_i.append(t)
+            combines.append(t)
+        for d in range(n):
+            deps = [experts_i[d]]
+            if n_links > 0:
+                deps.append(comb_x_i[tc.node_of(d)])
+            t = sim.add(f"A2A-C{i}", comm(d), ca[2][i][d], deps)
+            prev_c[d] = t
+            combines.append(t)
+    else:
+        for d in range(n):
+            t = sim.add(f"A2A-C{i}", comm(d), tc.a2a_intra_combine(d, k),
+                        [experts_i[d]])
+            prev_c[d] = t
+            combines.append(t)
+        for node in range(n_links):
+            deps = [experts_i[d] for d in tc.devices_of(node)]
+            combines.append(sim.add(f"A2A-Cx{i}", link(node),
+                                    tc.a2a_inter_combine(node, k), deps))
+
+
+def build_sequential_topo3(tc, kind, k):
+    n = tc.n_devices()
+    n_links = len(tc.a2a_inter_k1)
+    sim = Sim()
+    attn_m = []; enc = []
+    for d in range(n):
+        c = tc.per_device[d]
+        attn_l = sim.add("Attn(l)", comp(d), c.attn, [])
+        mlp_l = sim.add("MLP(l)", comp(d), c.mlp, [attn_l])
+        a_m = sim.add("Attn(l+1)", comp(d), c.attn, [mlp_l])
+        gate = sim.add("Gate", comp(d), c.gate, [a_m])
+        e = sim.add("Encode", comp(d), c.encode, [gate])
+        attn_m.append(a_m); enc.append(e)
+    disp = []
+    for d in range(n):
+        disp.append(sim.add("A2A-D", comm(d), tc.a2a_intra(d, k), [enc[d]]))
+    for node in range(n_links):
+        deps = [enc[d] for d in tc.devices_of(node)]
+        disp.append(sim.add("A2A-Dx", link(node), tc.a2a_inter(node, k), deps))
+    experts = []
+    for d in range(n):
+        c = tc.per_device[d]
+        experts.append(sim.add("Expert", comp(d), c.expert(k), disp))
+    comb = []
+    for d in range(n):
+        comb.append(sim.add("A2A-C", comm(d), tc.a2a_intra_combine(d, k),
+                            [experts[d]]))
+    for node in range(n_links):
+        deps = [experts[d] for d in tc.devices_of(node)]
+        comb.append(sim.add("A2A-Cx", link(node),
+                            tc.a2a_inter_combine(node, k), deps))
+    for d in range(n):
+        c = tc.per_device[d]
+        deps = comb[:]
+        if has_shared_expert(kind):
+            se = sim.add("SE", comp(d), c.se, [attn_m[d]])
+            deps.append(se)
+        sim.add("Decode", comp(d), c.decode, deps)
+    return sim
+
+
+def build_pipelined_topo3(tc, kind, k, chunks, pipelining=STAGED):
+    assert chunks >= 1
+    n = tc.n_devices()
+    n_links = len(tc.a2a_inter_k1)
+    sim = Sim()
+    attn_m = []; enc = []
+    for d in range(n):
+        c = tc.per_device[d]
+        attn_l = sim.add("Attn(l)", comp(d), c.attn, [])
+        mlp_l = sim.add("MLP(l)", comp(d), c.mlp, [attn_l])
+        a_m = sim.add("Attn(l+1)", comp(d), c.attn, [mlp_l])
+        gate = sim.add("Gate", comp(d), c.gate, [a_m])
+        e = sim.add("Encode", comp(d), c.encode, [gate])
+        attn_m.append(a_m); enc.append(e)
+    fc = float(chunks)
+    ca = tc.chunk_phases(k, chunks) if chunks > 1 else None
+    prev_d = [None] * n
+    prev_x = [None] * n_links
+    prev_c = [None] * n
+    combines = []
+    for i in range(chunks):
+        disp_i = add_dispatch_chunk3(sim, tc, k, i, ca, enc, prev_d, prev_x,
+                                     pipelining)
+        experts_i = []
+        for d in range(n):
+            c = tc.per_device[d]
+            experts_i.append(sim.add(f"Expert{i}", comp(d),
+                                     c.expert(k) / fc, disp_i))
+        add_combine_chunk3(sim, tc, k, i, ca, experts_i, prev_c, combines,
+                           pipelining)
+    for d in range(n):
+        c = tc.per_device[d]
+        deps = combines[:]
+        if has_shared_expert(kind):
+            se = sim.add("SE", comp(d), c.se, [attn_m[d]])
+            deps.append(se)
+        sim.add("Decode", comp(d), c.decode, deps)
+    return sim
+
+
+def build_overlap_topo3(tc, kind, k, slot, chunks, pipelining=STAGED):
+    assert slot <= 3 and chunks >= 1
+    n = tc.n_devices()
+    n_links = len(tc.a2a_inter_k1)
+    sim = Sim()
+    attn_l_ids = []; enc = []
+    for d in range(n):
+        c = tc.per_device[d]
+        attn_l = sim.add("Attn(l)", comp(d), c.attn, [])
+        gate = sim.add("Gate", comp(d), c.gate, [attn_l])
+        e = sim.add("Encode", comp(d), c.encode, [gate])
+        attn_l_ids.append(attn_l); enc.append(e)
+    fc = float(chunks)
+    ca = tc.chunk_phases(k, chunks) if chunks > 1 else None
+    disp_chunks = []
+    prev_d = [None] * n
+    prev_x = [None] * n_links
+    for i in range(chunks):
+        disp_chunks.append(add_dispatch_chunk3(sim, tc, k, i, ca, enc,
+                                               prev_d, prev_x, pipelining))
+    last_backbone = [0] * n
+    experts_by_dev = []
+    for d in range(n):
+        c = tc.per_device[d]
+        dev_experts = []
+        def place(after):
+            tail = after
+            for i, disp_i in enumerate(disp_chunks):
+                deps = disp_i[:]
+                deps.append(tail)
+                e = sim.add(f"Expert{i}", comp(d), c.expert(k) / fc, deps)
+                dev_experts.append(e)
+                tail = e
+            return tail
+        tail = attn_l_ids[d]
+        if slot == 0:
+            tail = place(tail)
+        window = [("MLP(l)", c.mlp), ("Attn(l+1)", c.attn), ("SE(l+1)", c.se)]
+        for wi, (label, dur) in enumerate(window):
+            tail = sim.add(label, comp(d), dur, [tail])
+            if slot == wi + 1:
+                tail = place(tail)
+        last_backbone[d] = tail
+        experts_by_dev.append(dev_experts)
+    prev_c = [None] * n
+    combines = []
+    for i in range(chunks):
+        experts_i = [experts_by_dev[d][i] for d in range(n)]
+        add_combine_chunk3(sim, tc, k, i, ca, experts_i, prev_c, combines,
+                           pipelining)
+    for d in range(n):
+        c = tc.per_device[d]
+        deps = combines[:]
+        deps.append(last_backbone[d])
+        sim.add("Decode", comp(d), c.decode, deps)
+    return sim
+
+
+def build_pair_schedule_topo3(tc, kind, strat, slot, pipelining=STAGED):
+    k = routed_k(kind)
+    name = strat[0]
+    if name == "seq":
+        return build_sequential_topo3(tc, kind, k)
+    if name == "pipe":
+        return build_pipelined_topo3(tc, kind, k, strat[1], pipelining)
+    if name == "overlap":
+        return build_overlap_topo3(tc, kind, k, slot, 1, pipelining)
+    if name == "overlap-pipe":
+        return build_overlap_topo3(tc, kind, k, slot, strat[1], pipelining)
+    raise ValueError(name)
+
+
+def choose_expert_slot_topo3(tc, kind, strat):
+    best = (0, float('inf'))
+    for slot in range(4):
+        t = build_pair_schedule_topo3(tc, kind, strat, slot).makespan()
+        if t < best[1]:
+            best = (slot, t)
+    return best
+
+
+# --- PR3 golden corpus generator (mirrors golden_timelines.rs) --------
+
+def dyadic_costs3():
+    return BlockCosts3(1.0, 0.75, 0.75, 0.0625, 0.0625, 0.0625, 0.5,
+                       0.8125, 0.0625)
+
+
+def dyadic_fleet3():
+    fast = dyadic_costs3()
+    slow = BlockCosts3(2.0, 1.5, 1.5, 0.125, 0.125, 0.125, 1.0,
+                       0.8125, 0.0625)
+    return TopoCosts3([replace(fast), fast, replace(slow), slow],
+                      [0.25] * 4, [0.5] * 2, 2,
+                      intra_a=[0.0625] * 4, inter_a=[0.125] * 2)
+
+
+def routed_table3():
+    return RoutingTable([0, 2, 0, 2, 2, 0, 0, 2, 1, 3, 3, 1, 3, 1, 3, 3],
+                        [1.0] * 16, 16, 1, 4, 16)
+
+
+def routed_fleet3(rt, placement):
+    topo = Topology(4, 2, LinkModel(0.0625, 1024.0), LinkModel(0.125, 512.0),
+                    1.0, None)
+    base = ComputeCosts(1.0, 0.75, 0.75, 0.0625, 0.0625, 0.0625, 0.5)
+    return topo_from_routing3(base, topo, rt, placement, 64)
+
+
+def generate_corpus_lines3():
+    c = dyadic_costs3()
+    lines = []
+    kinds = [('std', 1), ('std', 2), ('std', 3), ('shared', 1),
+             ('scmoe', 1), ('scmoe', 2)]
+    for kind in kinds:
+        if kind[0] == 'std':
+            strategies = [('seq',), ('pipe', 2), ('pipe', 4)]
+        elif kind[0] == 'shared':
+            strategies = [('seq',), ('pipe', 1), ('pipe', 2)]
+        else:
+            strategies = [('seq',), ('pipe', 2)]
+        for strategy in strategies:
+            slabel = 'seq' if strategy[0] == 'seq' else f'pipe{strategy[1]}'
+            name = f'{kind_label(kind)}/{slabel}'
+            lines.append(render_line(name, build_pair_schedule3(c, kind, strategy, 0)))
+        if kind[0] == 'scmoe':
+            for slot in range(4):
+                s = build_pair_schedule3(c, kind, ('overlap',), slot)
+                lines.append(render_line(f'{kind_label(kind)}/overlap-s{slot}', s))
+            for slot in range(4):
+                s = build_pair_schedule3(c, kind, ('overlap-pipe', 2), slot)
+                lines.append(render_line(
+                    f'{kind_label(kind)}/overlap+pipe2-s{slot}', s))
+    tf = dyadic_fleet3()
+    lines.append(render_line('fleet:Top2/seq',
+                             build_pair_schedule_topo3(tf, ('std', 2), ('seq',), 0)))
+    lines.append(render_line('fleet:Top2/pipe2',
+                             build_pair_schedule_topo3(tf, ('std', 2), ('pipe', 2), 0)))
+    lines.append(render_line(
+        'fleet:Top2/pipe2-chained',
+        build_pair_schedule_topo3(tf, ('std', 2), ('pipe', 2), 0,
+                                  PHASE_CHAINED)))
+    for slot in range(4):
+        lines.append(render_line(
+            f'fleet:ScMoE/overlap-s{slot}',
+            build_pair_schedule_topo3(tf, ('scmoe', 1), ('overlap',), slot)))
+    lines.append(render_line(
+        'fleet:ScMoE/overlap+pipe2-s2',
+        build_pair_schedule_topo3(tf, ('scmoe', 1), ('overlap-pipe', 2), 2)))
+    rt = routed_table3()
+    for name, p in [('block', Placement.block(4, 4)),
+                    ('affinity', Placement.affinity_packed(rt, 4, 2)),
+                    ('skewed', Placement.imbalance_skewed(4, 4, 2))]:
+        tc = routed_fleet3(rt, p)
+        lines.append(render_line(f'routed:{name}/seq',
+                     build_pair_schedule_topo3(tc, ('scmoe', 1), ('seq',), 0)))
+        lines.append(render_line(f'routed:{name}/overlap-s2',
+                     build_pair_schedule_topo3(tc, ('scmoe', 1), ('overlap',), 2)))
+        lines.append(render_line(
+            f'routed:{name}/overlap+pipe2-s2',
+            build_pair_schedule_topo3(tc, ('scmoe', 1), ('overlap-pipe', 2), 2)))
+    return lines
+
+
+def validate_corpus3():
     golden_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                               '..', '..', 'rust', 'tests', 'golden', 'timelines.txt')
+                               '..', '..', 'rust', 'tests', 'golden',
+                               'timelines.txt')
     golden = [l for l in open(golden_path).read().splitlines()
               if l.strip() and not l.startswith('#')]
-    assert len(golden) == len(lines), (len(golden), len(lines))
+    lines = generate_corpus_lines3()
     bad = 0
+    if len(golden) != len(lines):
+        print(f'line-count mismatch: golden {len(golden)} vs mirror {len(lines)}')
+        bad += 1
     for g, cu in zip(golden, lines):
         if g != cu:
             bad += 1
             print('- ' + g)
             print('+ ' + cu)
-    print(f'golden corpus: {len(golden)} lines, {bad} mismatches')
-    # combine-aware builders with empty combine vectors reduce to seed builders
-    tf = dyadic_fleet()
-    tf.a2a_intra_c_k1 = []
-    tf.a2a_inter_c_k1 = []
+    print(f'golden corpus (PR3 model): {len(lines)} lines, {bad} mismatches')
+    return bad == 0
+
+
+def consistency_checks3():
+    """Internal reductions the PR3 model must satisfy before any of its
+    output is trusted as a golden value."""
+    # 1. chunks=1 schedules are byte-identical to the pre-PR3 (seed)
+    #    builders on the dyadic corpus costs — the α decomposition and
+    #    staging must not perturb unchunked schedules.
+    c_old = dyadic_costs()
+    c_new = dyadic_costs3()
+    for kind in [('std', 2), ('shared', 1), ('scmoe', 1), ('scmoe', 2)]:
+        a = render_line('x', build_pair_schedule(c_old, kind, ('seq',), 0))
+        b = render_line('x', build_pair_schedule3(c_new, kind, ('seq',), 0))
+        assert a == b, ('seq drifted', kind)
+        if kind[0] == 'scmoe':
+            for slot in range(4):
+                a = render_line('x', build_pair_schedule(
+                    c_old, kind, ('overlap',), slot))
+                b = render_line('x', build_pair_schedule3(
+                    c_new, kind, ('overlap',), slot))
+                assert a == b, ('overlap drifted', kind, slot)
+    tf_old = dyadic_fleet()
+    tf_new = dyadic_fleet3()
     for slot in range(4):
-        a = render_line('x', build_pair_schedule_topo(tf, ('scmoe', 1), ('overlap',), slot))
-        b = render_line('x', build_pair_schedule_topo_c(tf, ('scmoe', 1), ('overlap',), slot))
-        assert a == b, (slot, a, b)
-    print('combine-aware builders reduce to seed builders: OK')
-    sys.exit(1 if bad else 0)
+        a = render_line('x', build_pair_schedule_topo(tf_old, ('scmoe', 1),
+                                                      ('overlap',), slot))
+        b = render_line('x', build_pair_schedule_topo3(tf_new, ('scmoe', 1),
+                                                       ('overlap',), slot))
+        assert a == b, ('fleet overlap drifted', slot)
+    # 2. zero-α chunking reduces to the seed's plain division.
+    from dataclasses import replace as _rep
+    c_free = _rep(c_new)
+    c_free.a2a_alpha_k1 = 0.0
+    a = render_line('x', build_pair_schedule(c_old, ('std', 2), ('pipe', 2), 0))
+    b = render_line('x', build_pair_schedule3(c_free, ('std', 2), ('pipe', 2), 0))
+    assert a == b, 'zero-α legacy chunking drifted from the seed division'
+    # 3. staged is never slower than phase-chained on the dyadic fleet.
+    for chunks in [2, 4]:
+        st = build_pair_schedule_topo3(tf_new, ('std', 2), ('pipe', chunks),
+                                       0, STAGED).makespan()
+        ch = build_pair_schedule_topo3(tf_new, ('std', 2), ('pipe', chunks),
+                                       0, PHASE_CHAINED).makespan()
+        assert st <= ch + 1e-12, (chunks, st, ch)
+    print('PR3 consistency checks: OK')
+
+
+CORPUS_HEADER3 = """# Golden operator timelines for every MoEKind x Strategy combination.
+#
+# Format: <kind>/<strategy>[-s<slot>] | makespan <secs> | <spans...>
+#   span token = <label>@<resource>@<start>, resources c<dev>=compute,
+#   m<dev>=comm, l<node>=link; spans sorted by (start, task id).
+# Costs are dyadic rationals (exact in binary floating point), so every
+# value formats exactly at 6 decimals and any schedule change — reordered
+# spans, shifted starts, changed makespan — diffs cleanly.
+#
+# Chunked entries (pipe2/pipe4/overlap+pipe2) price every chunk at
+# alpha + bytes/chunks/beta (the launch latency is NOT amortized across
+# chunks) and, on fleets, stage each chunk's uplink behind that node's
+# intra tasks; the `-chained` fleet entry pins the PhaseChained A/B
+# baseline. Routed overlap+pipe2 entries use token-true per-chunk byte
+# matrices (RoutingTable::chunk), so the skewed placement's chunks carry
+# genuinely different traffic.
+#
+# Regenerated only deliberately (tools/des_mirror/mirror2.py --emit):
+# these snapshots pin Fig. 6 span order so schedule refactors cannot
+# silently reorder the paper's timelines."""
+
+
+def emit_corpus3(path):
+    keep = CORPUS_HEADER3.splitlines()
+    lines = generate_corpus_lines3()
+    routed_at = next(i for i, l in enumerate(lines) if l.startswith('routed:'))
+    routed_comment = [
+        '# Routed-placement scenarios (dyadic 4-device/2-node fleet; see',
+        '# routed_table/routed_fleet in golden_timelines.rs).',
+    ]
+    body = lines[:routed_at] + routed_comment + lines[routed_at:]
+    with open(path, 'w') as f:
+        f.write('\n'.join(keep) + '\n' + '\n'.join(body) + '\n')
+    print(f'emitted {len(lines)} corpus lines to {path}')
+
+
+if __name__ == '__main__':
+    # Internal reductions first (chunks=1 and zero-α must reproduce the
+    # seed model bit-for-bit), then validate the PR3 model against the
+    # full golden corpus. `--emit` deliberately regenerates the file;
+    # plain invocation (CI) only validates and exits nonzero on drift.
+    consistency_checks3()
+    if '--emit' in sys.argv:
+        emit_corpus3(os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                  '..', '..', 'rust', 'tests', 'golden',
+                                  'timelines.txt'))
+    ok = validate_corpus3()
+    sys.exit(0 if ok else 1)
