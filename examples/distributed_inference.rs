@@ -8,7 +8,9 @@ use std::path::Path;
 use std::sync::Arc;
 
 use scmoe::cluster::LinkModel;
+use scmoe::coordinator::costs::{MoEKind, Strategy};
 use scmoe::coordinator::exec::{run_pair_real, Cluster};
+use scmoe::coordinator::spec::ScheduleSpec;
 use scmoe::runtime::{Engine, HostTensor};
 use scmoe::util::cli::Args;
 
@@ -31,15 +33,17 @@ fn main() -> anyhow::Result<()> {
     // a deliberately slow link so the schedule difference is visible
     let link = LinkModel::new(0.0, args.f64_or("beta", 40e6));
 
+    let seq_spec = ScheduleSpec::new(MoEKind::ScMoE { k }, Strategy::Sequential);
+    let ovl_spec = ScheduleSpec::new(MoEKind::ScMoE { k }, Strategy::Overlap);
     let reps = args.usize_or("reps", 3);
     let mut t_seq = Vec::new();
     let mut t_ovl = Vec::new();
     for _ in 0..reps {
         let t0 = std::time::Instant::now();
-        let (y_seq, _) = run_pair_real(&set, &cluster, &x, k, false, link, 1.0, 2)?;
+        let (y_seq, _) = run_pair_real(&set, &cluster, &x, &seq_spec, link, 1.0, 2)?;
         t_seq.push(t0.elapsed().as_secs_f64());
         let t0 = std::time::Instant::now();
-        let (y_ovl, spans) = run_pair_real(&set, &cluster, &x, k, true, link, 1.0, 2)?;
+        let (y_ovl, spans) = run_pair_real(&set, &cluster, &x, &ovl_spec, link, 1.0, 2)?;
         t_ovl.push(t0.elapsed().as_secs_f64());
         // numerics must be identical
         for (a, b) in y_seq.iter().zip(&y_ovl) {

@@ -9,7 +9,7 @@ use std::sync::Arc;
 
 use scmoe::cluster::Scenario;
 use scmoe::coordinator::costs::{MoEKind, Strategy};
-use scmoe::coordinator::schedule::build_pair_schedule_auto;
+use scmoe::coordinator::spec::ScheduleSpec;
 use scmoe::coordinator::timeline;
 use scmoe::moe::{decode, encode, RoutingTable};
 use scmoe::report::efficiency::proxy_costs;
@@ -48,12 +48,14 @@ fn main() -> anyhow::Result<()> {
     // --- 2. the paper's schedule, on the PCIe preset ---
     let costs = proxy_costs(Scenario::PcieA30x8);
     println!("\n=== standard top-2 MoE (sequential) ===");
-    let base = build_pair_schedule_auto(&costs, MoEKind::Standard { k: 2 },
-                                        Strategy::Sequential);
+    let base = ScheduleSpec::new(MoEKind::Standard { k: 2 },
+                                 Strategy::Sequential)
+        .build(&costs);
     print!("{}", timeline::render(&base.run(), 100));
     println!("\n=== ScMoE with overlapping expert parallelism ===");
-    let sc = build_pair_schedule_auto(&costs, MoEKind::ScMoE { k: 1 },
-                                      Strategy::Overlap);
+    let sc = ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, Strategy::Overlap)
+        .adaptive()
+        .build(&costs);
     print!("{}", timeline::render(&sc.run(), 100));
     println!("\nspeedup on 8xA30-PCIe: {:.2}x (paper Table 2: 1.66x inference)",
              base.makespan() / sc.makespan());

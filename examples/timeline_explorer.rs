@@ -12,35 +12,49 @@
 //! `--scenario 4node-ib`): affinity packing a node-affine routing drives
 //! the `link[n]` rows to zero-length phases.
 //!
+//! With `--skew`, contrast *load-true* expert compute under the balanced
+//! block layout vs imbalance-skewed layouts: the hot devices' Expert
+//! spans stretch by `load / mean` while the unloaded devices' spans
+//! vanish, and the fleet barrier follows the hot prefix — the same rows
+//! `scmoe report topo`'s load-skew study tabulates.
+//!
 //! `--chunks N` sets the pipeline depth of the chunked rows (default 2).
 //! Every chunk pays its own launch latency, so deep chunking visibly
 //! stops helping; in `--fleet` mode the chunked ScMoE timeline is also
 //! rendered with MoNTA-style intra/inter staging and compared against
 //! the phase-chained baseline.
+//!
+//! All schedules are built through the one construction API:
+//! `ScheduleSpec::new(kind, strategy).build(&cost_model)`.
 
 use scmoe::cluster::Scenario;
-use scmoe::coordinator::adaptive::{choose_expert_slot, choose_expert_slot_topo, eq11_objective};
+use scmoe::coordinator::adaptive::eq11_objective;
 use scmoe::coordinator::costs::{MoEKind, Strategy};
-use scmoe::coordinator::schedule::{
-    build_pair_schedule, build_pair_schedule_topo, build_pair_schedule_topo_with,
-    ChunkPipelining,
-};
+use scmoe::coordinator::schedule::ChunkPipelining;
+use scmoe::coordinator::spec::ScheduleSpec;
 use scmoe::coordinator::timeline;
 use scmoe::report::efficiency::{
-    placement_study_rows, proxy_costs, topo_proxy_costs, xl_topo_proxy_costs,
+    load_skew_study_rows, placement_study_rows, proxy_costs, topo_proxy_costs,
+    xl_topo_proxy_costs,
 };
 use scmoe::simtime::makespan;
 use scmoe::util::cli::Args;
 
 fn main() {
     let args = Args::from_env();
-    if args.flag("placement") {
+    if args.flag("placement") || args.flag("skew") {
         let sc = Scenario::parse(&args.str_or("scenario", "4node-ib"))
             .unwrap_or(Scenario::FourNodeA800IBx32);
-        // same defaults as `scmoe report topo`'s routed placement study so
-        // the rendered timelines match the table row for row
-        placement_mode(sc, args.usize_or("width", 110),
-                       args.usize_or("tokens", 640), args.u64_or("seed", 7));
+        // same defaults as `scmoe report topo`'s routed studies so the
+        // rendered timelines match the tables row for row
+        let (width, tokens, seed) = (args.usize_or("width", 110),
+                                     args.usize_or("tokens", 640),
+                                     args.u64_or("seed", 7));
+        if args.flag("skew") {
+            skew_mode(sc, width, tokens, seed);
+        } else {
+            placement_mode(sc, width, tokens, seed);
+        }
         return;
     }
     let sc = Scenario::parse(&args.str_or("scenario", "pcie"))
@@ -64,25 +78,20 @@ fn main() {
          Strategy::OverlapPipelined { chunks }),
     ];
     for (label, kind, strat) in rows {
-        let slot = match strat {
-            Strategy::Overlap | Strategy::OverlapPipelined { .. } => {
-                choose_expert_slot(&c, kind, strat).0
-            }
-            _ => 0,
-        };
-        let s = build_pair_schedule(&c, kind, strat, slot);
+        let s = ScheduleSpec::new(kind, strat).adaptive().build(&c);
         println!("\n--- {label} ---");
         print!("{}", timeline::render(&s.run(), width));
     }
 
     println!("\n### adaptive expert-slot search (ScMoE, Eq. 11) ###");
     let kind = MoEKind::ScMoE { k: 1 };
+    let spec = ScheduleSpec::new(kind, Strategy::Overlap);
     for slot in 0..4 {
-        let t = build_pair_schedule(&c, kind, Strategy::Overlap, slot).makespan();
+        let t = spec.with_slot(slot).build(&c).makespan();
         println!("slot {}: DES makespan {:.3}ms | Eq.11 objective {:.3}ms",
                  slot + 1, t * 1e3, eq11_objective(&c, kind, slot) * 1e3);
     }
-    let (best, t) = choose_expert_slot(&c, kind, Strategy::Overlap);
+    let (best, t) = spec.choose_slot(&c);
     println!("chosen: slot {} ({:.3}ms)", best + 1, t * 1e3);
 }
 
@@ -91,12 +100,15 @@ fn fleet_mode(sc: Scenario, width: usize, chunks: usize) {
     println!("### {} — topology-aware fleet ({} devices, {} nodes) ###",
              sc.label(), tc.n_devices(), tc.n_nodes());
     let kind = MoEKind::ScMoE { k: 1 };
-    let base_spans = build_pair_schedule_topo(
-        &tc, MoEKind::Standard { k: 2 }, Strategy::Sequential, 0).run();
+    let base_spans = ScheduleSpec::new(MoEKind::Standard { k: 2 },
+                                       Strategy::Sequential)
+        .build(&tc)
+        .run();
     println!("\n--- standard top-2, sequential (fleet) ---");
     print!("{}", timeline::render(&base_spans, width));
-    let (slot, _) = choose_expert_slot_topo(&tc, kind, Strategy::Overlap);
-    let spans = build_pair_schedule_topo(&tc, kind, Strategy::Overlap, slot).run();
+    let ovl = ScheduleSpec::new(kind, Strategy::Overlap);
+    let (slot, _) = ovl.choose_slot(&tc);
+    let spans = ovl.with_slot(slot).build(&tc).run();
     println!("\n--- ScMoE overlapping (fleet, adaptive slot {}) ---", slot + 1);
     print!("{}", timeline::render(&spans, width));
     println!("\nspeedup: {:.2}x", makespan(&base_spans) / makespan(&spans));
@@ -105,15 +117,17 @@ fn fleet_mode(sc: Scenario, width: usize, chunks: usize) {
         // chunked MoE stream: every chunk pays its own α; the uplink task
         // of chunk i is staged behind the node's intra tasks and overlaps
         // chunk i+1's intra phase (MoNTA-style)
-        let strat = Strategy::OverlapPipelined { chunks };
-        let (cslot, staged) = choose_expert_slot_topo(&tc, kind, strat);
-        let cspans =
-            build_pair_schedule_topo(&tc, kind, strat, cslot).run();
+        let ospec = ScheduleSpec::new(kind, Strategy::OverlapPipelined { chunks });
+        let (cslot, staged) = ospec.choose_slot(&tc);
+        let cspans = ospec.with_slot(cslot).build(&tc).run();
         println!("\n--- ScMoE overlap + {chunks}-chunk pipeline \
                   (staged, slot {}) ---", cslot + 1);
         print!("{}", timeline::render(&cspans, width));
-        let chained = build_pair_schedule_topo_with(
-            &tc, kind, strat, cslot, ChunkPipelining::PhaseChained).makespan();
+        let chained = ospec
+            .with_slot(cslot)
+            .with_pipelining(ChunkPipelining::PhaseChained)
+            .build(&tc)
+            .makespan();
         println!("\nstaged {:.3}ms vs phase-chained {:.3}ms \
                   (intra/inter overlap saves {:.0}us)",
                  staged * 1e3, chained * 1e3, (chained - staged) * 1e6);
@@ -124,11 +138,10 @@ fn fleet_mode(sc: Scenario, width: usize, chunks: usize) {
     // the optimum diverge across topologies.
     println!("\n### adaptive slot per topology preset ###");
     println!("{:<18} {:>8} {:>8} {:>14}", "preset", "SwinV2", "GPT3-XL", "XL makespan");
+    let ovl = ScheduleSpec::new(kind, Strategy::Overlap);
     for p in Scenario::extended() {
-        let (s_swin, _) =
-            choose_expert_slot_topo(&topo_proxy_costs(p), kind, Strategy::Overlap);
-        let (s_xl, m_xl) =
-            choose_expert_slot_topo(&xl_topo_proxy_costs(p), kind, Strategy::Overlap);
+        let (s_swin, _) = ovl.choose_slot(&topo_proxy_costs(p));
+        let (s_xl, m_xl) = ovl.choose_slot(&xl_topo_proxy_costs(p));
         println!("{:<18} {:>8} {:>8} {:>12.3}ms",
                  p.label(), s_swin + 1, s_xl + 1, m_xl * 1e3);
     }
@@ -149,10 +162,11 @@ fn placement_mode(sc: Scenario, width: usize, tokens_per_device: usize,
                   try --scenario 4node-ib)");
     }
     let rows = placement_study_rows(&topo, tokens_per_device, seed);
+    let ovl = ScheduleSpec::new(kind, Strategy::Overlap);
     let mut makespans = Vec::new();
     for (label, tc) in &rows {
-        let (slot, _) = choose_expert_slot_topo(tc, kind, Strategy::Overlap);
-        let spans = build_pair_schedule_topo(tc, kind, Strategy::Overlap, slot).run();
+        let (slot, _) = ovl.choose_slot(tc);
+        let spans = ovl.with_slot(slot).build(tc).run();
         println!("\n--- ScMoE overlap, {label} (adaptive slot {}) ---", slot + 1);
         print!("{}", timeline::render(&spans, width));
         makespans.push(makespan(&spans));
@@ -163,4 +177,32 @@ fn placement_mode(sc: Scenario, width: usize, tokens_per_device: usize,
         .map(|((label, _), m)| format!("{label} {:.2}x", makespans[0] / m))
         .collect();
     println!("\noverlap speedup vs uniform: {}", vs_uniform.join(" | "));
+}
+
+/// Render the load-skew study's rows as fleet timelines: the balanced
+/// block layout vs imbalance-skewed layouts, with load-true Expert spans
+/// (hot devices stretched by `load / mean`, unloaded devices at zero).
+/// The load-naive makespan (the pre-redesign model) is printed next to
+/// each row to show what the balanced-capacity-batch assumption hid.
+fn skew_mode(sc: Scenario, width: usize, tokens_per_device: usize, seed: u64) {
+    let topo = sc.topology();
+    let kind = MoEKind::ScMoE { k: 1 };
+    println!("### {} — load-skew timelines ({} devices, seed {seed}) ###",
+             sc.label(), topo.n_devices);
+    let rows = load_skew_study_rows(&topo, tokens_per_device, seed);
+    let ovl = ScheduleSpec::new(kind, Strategy::Overlap);
+    for (label, tc) in &rows {
+        let imb = tc.expert_load.as_ref().map_or(1.0, |l| l.imbalance());
+        let (slot, m_true) = ovl.choose_slot(tc);
+        let spans = ovl.with_slot(slot).build(tc).run();
+        let mut naive = tc.clone();
+        naive.expert_load = None;
+        let (_, m_naive) = ovl.choose_slot(&naive);
+        println!("\n--- ScMoE overlap, {label} (load imbalance {imb:.2}x, \
+                  slot {}) ---", slot + 1);
+        print!("{}", timeline::render(&spans, width));
+        println!("load-true {:.3}ms vs load-naive {:.3}ms (+{:.0}us hidden \
+                  by the balanced-batch assumption)",
+                 m_true * 1e3, m_naive * 1e3, (m_true - m_naive) * 1e6);
+    }
 }

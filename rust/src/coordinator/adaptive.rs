@@ -7,21 +7,21 @@
 //! and are property-tested against the DES (rust/tests/coordinator_props.rs).
 
 use super::costs::{BlockCosts, MoEKind, Strategy, TopoCosts};
-use super::schedule::{build_pair_schedule, build_pair_schedule_topo};
+use super::spec::{CostModel, ScheduleSpec};
 
-/// Pick the expert slot minimizing the simulated pair makespan.
+/// Pick the expert slot minimizing the simulated makespan over any cost
+/// back end ([`ScheduleSpec::choose_slot`] on an ad-hoc spec).
 /// Returns (slot, makespan).
+pub fn choose_expert_slot_model(cm: &dyn CostModel, kind: MoEKind,
+                                strategy: Strategy) -> (usize, f64) {
+    ScheduleSpec::new(kind, strategy).choose_slot(cm)
+}
+
+/// Single-device slot choice (the paper's §3.2 search on the
+/// representative-device model). Returns (slot, makespan).
 pub fn choose_expert_slot(c: &BlockCosts, kind: MoEKind,
                           strategy: Strategy) -> (usize, f64) {
-    let mut best = (0usize, f64::INFINITY);
-    for slot in 0..4 {
-        let s = build_pair_schedule(c, kind, strategy, slot);
-        let t = s.makespan();
-        if t < best.1 {
-            best = (slot, t);
-        }
-    }
-    best
+    choose_expert_slot_model(c, kind, strategy)
 }
 
 /// Topology-aware slot choice: simulate the whole fleet per candidate slot
@@ -30,15 +30,7 @@ pub fn choose_expert_slot(c: &BlockCosts, kind: MoEKind,
 /// slots — that is the scenario diversity the multi-device DES buys.
 pub fn choose_expert_slot_topo(tc: &TopoCosts, kind: MoEKind,
                                strategy: Strategy) -> (usize, f64) {
-    let mut best = (0usize, f64::INFINITY);
-    for slot in 0..4 {
-        let s = build_pair_schedule_topo(tc, kind, strategy, slot);
-        let t = s.makespan();
-        if t < best.1 {
-            best = (slot, t);
-        }
-    }
-    best
+    choose_expert_slot_model(tc, kind, strategy)
 }
 
 /// Eq. 11 closed-form estimate of the *overhead-relevant* objective for a
@@ -91,6 +83,7 @@ pub fn overlap_fraction(c: &BlockCosts, kind: MoEKind, strategy: Strategy) -> f6
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::schedule::build_pair_schedule;
 
     fn costs(a2a: f64) -> BlockCosts {
         BlockCosts {

@@ -28,16 +28,28 @@
 //! Pipeline chunking is priced honestly at both granularities: every
 //! phase carries its launch-latency (α) component separately from the
 //! byte term, so a chunk pays the full α and only its byte share
-//! ([`BlockCosts::a2a_chunk`], [`TopoCosts::chunk_phases`]); routed costs
+//! ([`BlockCosts::a2a_chunk`], [`CostModel::chunk_phases`]); routed costs
 //! additionally carry a [`ChunkSource`] so per-chunk phases are
 //! recomputed from each chunk's own token range (token-true chunking —
 //! see docs/ARCHITECTURE.md §"The chunked A2A model").
+//!
+//! Schedule builders consume both granularities through ONE interface:
+//! the [`CostModel`] trait (`phase(dir, scope, idx, k)`-style queries,
+//! defined in [`super::spec`]), which `BlockCosts` implements as a
+//! degenerate one-device fleet and `TopoCosts` implements over its stored
+//! phase vectors. `TopoCosts::from_routing` additionally derives a
+//! per-device [`ExpertLoad`] (`RoutingTable::load` × [`Placement`]), so a
+//! hot device's Expert duration stretches by `load / mean` — balanced
+//! routing multiplies by exactly 1.0 and reduces bit-exactly to the
+//! balanced-capacity-batch model.
 
 use crate::cluster::{
     a2a_chunk_time, a2a_decompose_per_node, a2a_time_split_per_node,
     a2a_transpose, uniform_a2a_bytes, LinkModel, Topology,
 };
-use crate::moe::{Placement, RoutingTable};
+use crate::moe::{ExpertLoad, Placement, RoutingTable};
+
+use super::spec::{CostModel, PhaseDir, PhaseScope};
 
 /// Which MoE architecture a schedule models (paper Fig. 6 / Fig. 8 rows).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -248,9 +260,19 @@ pub struct TopoCosts {
     pub a2a_inter_combine_alpha_k1: Vec<f64>,
     /// Token-true chunking source: when present, per-chunk phases are
     /// recomputed from the actual routing table split into contiguous
-    /// token ranges (see [`Self::chunk_phases`]); when absent, chunks fall
-    /// back to the α-true analytic split of the stored phase vectors.
+    /// token ranges (see [`CostModel::chunk_phases`]); when absent, chunks
+    /// fall back to the α-true analytic split of the stored phase vectors.
     pub chunk_source: Option<ChunkSource>,
+    /// Per-device routed compute load. When present, every device's
+    /// Expert duration is stretched by `load_d / mean_load`
+    /// ([`CostModel::expert_time`]) and chunked Expert spans split by each
+    /// chunk's own token share instead of dividing evenly. `None` (and any
+    /// perfectly balanced load vector) reduces unchunked Expert durations
+    /// bit-exactly to the balanced-capacity-batch model the paper
+    /// assumes; chunked spans also coincide whenever the chunking splits
+    /// the balanced loads evenly (an uneven token split legitimately
+    /// prices its hotter chunk higher — that is the token-true point).
+    pub expert_load: Option<ExpertLoad>,
     /// Devices per node (contiguous block node layout).
     pub devices_per_node: usize,
 }
@@ -276,9 +298,10 @@ pub struct ChunkSource {
     pub inter: Option<LinkModel>,
 }
 
-/// Per-chunk, per-link one-way All-to-All durations (seconds, already
-/// scaled to the requested k) for one `chunks`-way pipelined collective.
-/// Outer index = chunk, inner = device (intra) or node (inter).
+/// Per-chunk, per-link one-way All-to-All durations plus per-chunk expert
+/// durations (seconds, already scaled to the requested k) for one
+/// `chunks`-way pipelined collective.
+/// Outer index = chunk, inner = device (intra/expert) or node (inter).
 #[derive(Debug, Clone)]
 pub struct ChunkedA2a {
     /// Dispatch intra-node phase per `[chunk][device]`.
@@ -289,6 +312,11 @@ pub struct ChunkedA2a {
     pub comb_intra: Vec<Vec<f64>>,
     /// Combine inter-node phase per `[chunk][node]`.
     pub comb_inter: Vec<Vec<f64>>,
+    /// Expert-computation duration per `[chunk][device]` — token-true
+    /// (proportional to the chunk's own kept token copies on that device)
+    /// when the cost model carries a routed `ExpertLoad`; an even
+    /// `expert_time / chunks` split otherwise.
+    pub expert: Vec<Vec<f64>>,
 }
 
 impl TopoCosts {
@@ -361,149 +389,14 @@ impl TopoCosts {
             assert_eq!(src.intra_links.len(), self.n_nodes(),
                        "chunk source needs one intra link per node");
         }
-    }
-
-    /// One-way *dispatch* intra-node phase (seconds) for device `d` at
-    /// k routed experts.
-    pub fn a2a_intra(&self, d: usize, k: usize) -> f64 {
-        self.a2a_intra_k1[d] * k as f64
-    }
-
-    /// One-way *dispatch* inter-node phase (seconds) for node `n` at
-    /// k routed experts.
-    pub fn a2a_inter(&self, n: usize, k: usize) -> f64 {
-        self.a2a_inter_k1[n] * k as f64
-    }
-
-    /// *Combine* intra-node phase (seconds) for device `d` at k routed
-    /// experts; falls back to the dispatch phase when the combine vectors
-    /// are empty (symmetric traffic), keeping uniform-routing schedules
-    /// bit-exact with the pre-routed model.
-    pub fn a2a_intra_combine(&self, d: usize, k: usize) -> f64 {
-        if self.a2a_intra_combine_k1.is_empty() {
-            self.a2a_intra(d, k)
-        } else {
-            self.a2a_intra_combine_k1[d] * k as f64
-        }
-    }
-
-    /// *Combine* inter-node phase (seconds) for node `n` at k routed
-    /// experts, with the same symmetric fallback as
-    /// [`Self::a2a_intra_combine`].
-    pub fn a2a_inter_combine(&self, n: usize, k: usize) -> f64 {
-        if self.a2a_inter_combine_k1.is_empty() {
-            self.a2a_inter(n, k)
-        } else {
-            self.a2a_inter_combine_k1[n] * k as f64
-        }
-    }
-
-    /// α (launch-latency) component of the dispatch intra phase for
-    /// device `d`; empty vector = latency-free links (zero).
-    pub fn a2a_intra_alpha(&self, d: usize, k: usize) -> f64 {
-        if self.a2a_intra_alpha_k1.is_empty() {
-            0.0
-        } else {
-            self.a2a_intra_alpha_k1[d] * k as f64
-        }
-    }
-
-    /// α component of the dispatch inter phase for node `n`; empty = zero.
-    pub fn a2a_inter_alpha(&self, n: usize, k: usize) -> f64 {
-        if self.a2a_inter_alpha_k1.is_empty() {
-            0.0
-        } else {
-            self.a2a_inter_alpha_k1[n] * k as f64
-        }
-    }
-
-    /// α component of the combine intra phase for device `d`; empty
-    /// mirrors the dispatch α (same fallback rule as the phases).
-    pub fn a2a_intra_combine_alpha(&self, d: usize, k: usize) -> f64 {
-        if self.a2a_intra_combine_alpha_k1.is_empty() {
-            self.a2a_intra_alpha(d, k)
-        } else {
-            self.a2a_intra_combine_alpha_k1[d] * k as f64
-        }
-    }
-
-    /// α component of the combine inter phase for node `n`; empty mirrors
-    /// the dispatch α.
-    pub fn a2a_inter_combine_alpha(&self, n: usize, k: usize) -> f64 {
-        if self.a2a_inter_combine_alpha_k1.is_empty() {
-            self.a2a_inter_alpha(n, k)
-        } else {
-            self.a2a_inter_combine_alpha_k1[n] * k as f64
-        }
-    }
-
-    /// Per-chunk, per-link phase durations for a `chunks`-way pipelined
-    /// All-to-All at k routed experts.
-    ///
-    /// With a [`ChunkSource`] (routed costs) the split is *token-true*:
-    /// the routing table is divided into contiguous token ranges, each
-    /// range's routed byte matrix is decomposed through the stored link
-    /// models, and every chunk pays α only toward destinations it
-    /// actually sends to — skewed routing therefore skews per-chunk
-    /// traffic. Without a source the split is *α-true analytic*: every
-    /// chunk pays the stored phase's full α plus its `1/chunks` byte
-    /// share ([`cluster::a2a_chunk_time`]); with empty α vectors this
-    /// reduces bit-exactly to the seed's plain division.
-    ///
-    /// [`cluster::a2a_chunk_time`]: crate::cluster::a2a_chunk_time
-    pub fn chunk_phases(&self, k: usize, chunks: usize) -> ChunkedA2a {
-        assert!(chunks >= 1);
-        let n = self.n_devices();
-        let n_links = self.a2a_inter_k1.len();
-        if let Some(src) = &self.chunk_source {
-            let kf = src.rt.k.max(1) as f64;
-            let scale = k as f64 / kf;
-            let mut out = ChunkedA2a {
-                disp_intra: Vec::with_capacity(chunks),
-                disp_inter: Vec::with_capacity(chunks),
-                comb_intra: Vec::with_capacity(chunks),
-                comb_inter: Vec::with_capacity(chunks),
-            };
-            for part in src.rt.chunk(chunks) {
-                let disp = part.a2a_bytes_placed(&src.placement,
-                                                 src.token_bytes);
-                let comb = a2a_transpose(&disp, n);
-                let pd = a2a_decompose_per_node(&disp, n,
-                                                self.devices_per_node,
-                                                &src.intra_links, src.inter);
-                let pc = a2a_decompose_per_node(&comb, n,
-                                                self.devices_per_node,
-                                                &src.intra_links, src.inter);
-                out.disp_intra.push(pd.intra.iter().map(|t| t * scale).collect());
-                out.disp_inter.push(pd.inter.iter().map(|t| t * scale).collect());
-                out.comb_intra.push(pc.intra.iter().map(|t| t * scale).collect());
-                out.comb_inter.push(pc.inter.iter().map(|t| t * scale).collect());
-            }
-            out
-        } else {
-            let di: Vec<f64> = (0..n)
-                .map(|d| a2a_chunk_time(self.a2a_intra(d, k),
-                                        self.a2a_intra_alpha(d, k), chunks))
-                .collect();
-            let dx: Vec<f64> = (0..n_links)
-                .map(|nd| a2a_chunk_time(self.a2a_inter(nd, k),
-                                         self.a2a_inter_alpha(nd, k), chunks))
-                .collect();
-            let ci: Vec<f64> = (0..n)
-                .map(|d| a2a_chunk_time(self.a2a_intra_combine(d, k),
-                                        self.a2a_intra_combine_alpha(d, k),
-                                        chunks))
-                .collect();
-            let cx: Vec<f64> = (0..n_links)
-                .map(|nd| a2a_chunk_time(self.a2a_inter_combine(nd, k),
-                                         self.a2a_inter_combine_alpha(nd, k),
-                                         chunks))
-                .collect();
-            ChunkedA2a {
-                disp_intra: vec![di; chunks],
-                disp_inter: vec![dx; chunks],
-                comb_intra: vec![ci; chunks],
-                comb_inter: vec![cx; chunks],
+        if let Some(load) = &self.expert_load {
+            assert_eq!(load.per_device.len(), self.n_devices(),
+                       "one expert load per device");
+            assert_eq!(load.per_device.iter().sum::<usize>(), load.total,
+                       "expert load total must equal the per-device sum");
+            if let Some(src) = &self.chunk_source {
+                assert_eq!(load.total, src.rt.kept(),
+                           "expert loads must sum to the routed token total");
             }
         }
     }
@@ -523,6 +416,7 @@ impl TopoCosts {
             a2a_intra_combine_alpha_k1: Vec::new(),
             a2a_inter_combine_alpha_k1: Vec::new(),
             chunk_source: None,
+            expert_load: None,
             per_device: vec![c.clone()],
             devices_per_node: 1,
         }
@@ -563,6 +457,7 @@ impl TopoCosts {
             a2a_intra_combine_alpha_k1: Vec::new(),
             a2a_inter_combine_alpha_k1: Vec::new(),
             chunk_source: None,
+            expert_load: None,
             devices_per_node: topo.devices_per_node,
         }
     }
@@ -574,7 +469,9 @@ impl TopoCosts {
     /// per-device intra-node and per-node inter-node phase times —
     /// including asymmetric dispatch vs. combine phases under skewed
     /// layouts. A placement that keeps every route node-local yields
-    /// inter-node phases of exactly zero.
+    /// inter-node phases of exactly zero. The same routing × placement
+    /// also yields the per-device [`ExpertLoad`] that stretches hot
+    /// devices' Expert durations ([`CostModel::expert_time`]).
     ///
     /// Phases are normalized to k = 1 volume by dividing the routed phase
     /// times (which already include all `rt.k` route copies) by `rt.k`, so
@@ -630,9 +527,280 @@ impl TopoCosts {
                 intra_links: links,
                 inter: topo.inter,
             }),
+            expert_load: Some(ExpertLoad::from_routing(rt, placement)),
             devices_per_node: topo.devices_per_node,
         }
     }
+}
+
+impl CostModel for TopoCosts {
+    // geometry delegates to the inherent methods (one source of truth for
+    // the contiguous-block node layout)
+    fn n_devices(&self) -> usize {
+        TopoCosts::n_devices(self)
+    }
+
+    fn devices_per_node(&self) -> usize {
+        self.devices_per_node
+    }
+
+    fn n_links(&self) -> usize {
+        self.a2a_inter_k1.len()
+    }
+
+    fn n_nodes(&self) -> usize {
+        TopoCosts::n_nodes(self)
+    }
+
+    fn node_of(&self, device: usize) -> usize {
+        TopoCosts::node_of(self, device)
+    }
+
+    fn devices_of(&self, node: usize) -> std::ops::Range<usize> {
+        TopoCosts::devices_of(self, node)
+    }
+
+    fn device(&self, d: usize) -> &BlockCosts {
+        &self.per_device[d]
+    }
+
+    /// Phase queries over the stored per-`k = 1` vectors. Empty combine
+    /// vectors mirror dispatch (symmetric traffic), keeping
+    /// uniform-routing schedules bit-exact with the pre-routed model.
+    fn phase(&self, dir: PhaseDir, scope: PhaseScope, idx: usize, k: usize) -> f64 {
+        match (dir, scope) {
+            (PhaseDir::Dispatch, PhaseScope::Intra) => {
+                self.a2a_intra_k1[idx] * k as f64
+            }
+            (PhaseDir::Dispatch, PhaseScope::Inter) => {
+                self.a2a_inter_k1[idx] * k as f64
+            }
+            (PhaseDir::Combine, PhaseScope::Intra) => {
+                if self.a2a_intra_combine_k1.is_empty() {
+                    self.phase(PhaseDir::Dispatch, PhaseScope::Intra, idx, k)
+                } else {
+                    self.a2a_intra_combine_k1[idx] * k as f64
+                }
+            }
+            (PhaseDir::Combine, PhaseScope::Inter) => {
+                if self.a2a_inter_combine_k1.is_empty() {
+                    self.phase(PhaseDir::Dispatch, PhaseScope::Inter, idx, k)
+                } else {
+                    self.a2a_inter_combine_k1[idx] * k as f64
+                }
+            }
+        }
+    }
+
+    /// α queries with the matching fallbacks: empty dispatch α vectors
+    /// model latency-free links (zero); empty combine α vectors mirror
+    /// the dispatch α.
+    fn phase_alpha(&self, dir: PhaseDir, scope: PhaseScope, idx: usize,
+                   k: usize) -> f64 {
+        match (dir, scope) {
+            (PhaseDir::Dispatch, PhaseScope::Intra) => {
+                if self.a2a_intra_alpha_k1.is_empty() {
+                    0.0
+                } else {
+                    self.a2a_intra_alpha_k1[idx] * k as f64
+                }
+            }
+            (PhaseDir::Dispatch, PhaseScope::Inter) => {
+                if self.a2a_inter_alpha_k1.is_empty() {
+                    0.0
+                } else {
+                    self.a2a_inter_alpha_k1[idx] * k as f64
+                }
+            }
+            (PhaseDir::Combine, PhaseScope::Intra) => {
+                if self.a2a_intra_combine_alpha_k1.is_empty() {
+                    self.phase_alpha(PhaseDir::Dispatch, PhaseScope::Intra,
+                                     idx, k)
+                } else {
+                    self.a2a_intra_combine_alpha_k1[idx] * k as f64
+                }
+            }
+            (PhaseDir::Combine, PhaseScope::Inter) => {
+                if self.a2a_inter_combine_alpha_k1.is_empty() {
+                    self.phase_alpha(PhaseDir::Dispatch, PhaseScope::Inter,
+                                     idx, k)
+                } else {
+                    self.a2a_inter_combine_alpha_k1[idx] * k as f64
+                }
+            }
+        }
+    }
+
+    /// Load-scaled expert time: the balanced capacity batch stretched by
+    /// device `d`'s share of the routed load (`load_d / mean`). Balanced
+    /// loads multiply by exactly 1.0, so the pre-load model is reproduced
+    /// bit-exactly; a device owning no experts computes for 0 seconds.
+    fn expert_time(&self, d: usize, k: usize) -> f64 {
+        let base = self.per_device[d].expert(k);
+        match &self.expert_load {
+            Some(load) => base * load.scale(d),
+            None => base,
+        }
+    }
+
+    /// Per-chunk, per-link phase + expert durations for a `chunks`-way
+    /// pipelined All-to-All at k routed experts.
+    ///
+    /// With a [`ChunkSource`] (routed costs) the split is *token-true*:
+    /// the routing table is divided into contiguous token ranges, each
+    /// range's routed byte matrix is decomposed through the stored link
+    /// models, and every chunk pays α only toward destinations it
+    /// actually sends to — skewed routing therefore skews per-chunk
+    /// traffic. A routed [`ExpertLoad`] additionally makes the per-chunk
+    /// expert durations token-true (each chunk costs its own kept copies,
+    /// so the chunk durations partition [`CostModel::expert_time`]).
+    /// Without a source the split is *α-true analytic*: every chunk pays
+    /// the stored phase's full α plus its `1/chunks` byte share
+    /// ([`cluster::a2a_chunk_time`]) and an even expert split; with empty
+    /// α vectors this reduces bit-exactly to the seed's plain division.
+    ///
+    /// [`cluster::a2a_chunk_time`]: crate::cluster::a2a_chunk_time
+    fn chunk_phases(&self, k: usize, chunks: usize) -> ChunkedA2a {
+        assert!(chunks >= 1);
+        let n = self.n_devices();
+        let n_links = self.a2a_inter_k1.len();
+        let fc = chunks as f64;
+        if let Some(src) = &self.chunk_source {
+            let kf = src.rt.k.max(1) as f64;
+            let scale = k as f64 / kf;
+            let load = self.expert_load.as_ref().filter(|l| l.total > 0);
+            let mut out = ChunkedA2a {
+                disp_intra: Vec::with_capacity(chunks),
+                disp_inter: Vec::with_capacity(chunks),
+                comb_intra: Vec::with_capacity(chunks),
+                comb_inter: Vec::with_capacity(chunks),
+                expert: Vec::with_capacity(chunks),
+            };
+            for part in src.rt.chunk(chunks) {
+                let disp = part.a2a_bytes_placed(&src.placement,
+                                                 src.token_bytes);
+                let comb = a2a_transpose(&disp, n);
+                let pd = a2a_decompose_per_node(&disp, n,
+                                                self.devices_per_node,
+                                                &src.intra_links, src.inter);
+                let pc = a2a_decompose_per_node(&comb, n,
+                                                self.devices_per_node,
+                                                &src.intra_links, src.inter);
+                out.disp_intra.push(pd.intra.iter().map(|t| t * scale).collect());
+                out.disp_inter.push(pd.inter.iter().map(|t| t * scale).collect());
+                out.comb_intra.push(pc.intra.iter().map(|t| t * scale).collect());
+                out.comb_inter.push(pc.inter.iter().map(|t| t * scale).collect());
+                let ex_row: Vec<f64> = match load {
+                    Some(load) => {
+                        // token-true: charge each device this chunk's own
+                        // kept copies relative to the fleet-wide balanced
+                        // mean (the PARENT total, so the chunk durations
+                        // partition the unchunked expert time)
+                        let pl = ExpertLoad::from_routing(&part,
+                                                          &src.placement);
+                        (0..n)
+                            .map(|d| {
+                                let s = pl.per_device[d] as f64 * n as f64
+                                    / load.total as f64;
+                                self.per_device[d].expert(k) * s
+                            })
+                            .collect()
+                    }
+                    None => (0..n).map(|d| self.expert_time(d, k) / fc).collect(),
+                };
+                out.expert.push(ex_row);
+            }
+            out
+        } else {
+            let di: Vec<f64> = (0..n)
+                .map(|d| a2a_chunk_time(
+                    self.phase(PhaseDir::Dispatch, PhaseScope::Intra, d, k),
+                    self.phase_alpha(PhaseDir::Dispatch, PhaseScope::Intra, d, k),
+                    chunks))
+                .collect();
+            let dx: Vec<f64> = (0..n_links)
+                .map(|nd| a2a_chunk_time(
+                    self.phase(PhaseDir::Dispatch, PhaseScope::Inter, nd, k),
+                    self.phase_alpha(PhaseDir::Dispatch, PhaseScope::Inter, nd, k),
+                    chunks))
+                .collect();
+            let ci: Vec<f64> = (0..n)
+                .map(|d| a2a_chunk_time(
+                    self.phase(PhaseDir::Combine, PhaseScope::Intra, d, k),
+                    self.phase_alpha(PhaseDir::Combine, PhaseScope::Intra, d, k),
+                    chunks))
+                .collect();
+            let cx: Vec<f64> = (0..n_links)
+                .map(|nd| a2a_chunk_time(
+                    self.phase(PhaseDir::Combine, PhaseScope::Inter, nd, k),
+                    self.phase_alpha(PhaseDir::Combine, PhaseScope::Inter, nd, k),
+                    chunks))
+                .collect();
+            let ex: Vec<f64> =
+                (0..n).map(|d| self.expert_time(d, k) / fc).collect();
+            ChunkedA2a {
+                disp_intra: vec![di; chunks],
+                disp_inter: vec![dx; chunks],
+                comb_intra: vec![ci; chunks],
+                comb_inter: vec![cx; chunks],
+                expert: vec![ex; chunks],
+            }
+        }
+    }
+
+    fn validate(&self) {
+        self.assert_valid();
+    }
+}
+
+impl CostModel for BlockCosts {
+    fn n_devices(&self) -> usize {
+        1
+    }
+
+    fn devices_per_node(&self) -> usize {
+        1
+    }
+
+    fn n_links(&self) -> usize {
+        0
+    }
+
+    fn device(&self, _d: usize) -> &BlockCosts {
+        self
+    }
+
+    /// The single intra phase carries the whole scalar one-way time in
+    /// both directions (the flat model has no routed asymmetry); there is
+    /// no inter-node resource, so `Inter` is never queried.
+    fn phase(&self, _dir: PhaseDir, _scope: PhaseScope, _idx: usize,
+             k: usize) -> f64 {
+        self.a2a(k)
+    }
+
+    fn phase_alpha(&self, _dir: PhaseDir, _scope: PhaseScope, _idx: usize,
+                   k: usize) -> f64 {
+        self.a2a_alpha(k)
+    }
+
+    fn expert_time(&self, _d: usize, k: usize) -> f64 {
+        self.expert(k)
+    }
+
+    fn chunk_phases(&self, k: usize, chunks: usize) -> ChunkedA2a {
+        assert!(chunks >= 1);
+        let row = vec![self.a2a_chunk(k, chunks)];
+        let ex = vec![self.expert(k) / chunks as f64];
+        ChunkedA2a {
+            disp_intra: vec![row.clone(); chunks],
+            disp_inter: vec![Vec::new(); chunks],
+            comb_intra: vec![row; chunks],
+            comb_inter: vec![Vec::new(); chunks],
+            expert: vec![ex; chunks],
+        }
+    }
+
+    fn validate(&self) {}
 }
 
 /// Pure compute-op durations on the baseline device (A30 scale = 1.0).
@@ -733,8 +901,11 @@ mod tests {
         assert_eq!(tc.n_devices(), 1);
         assert_eq!(tc.n_nodes(), 1);
         assert!(tc.a2a_inter_k1.is_empty());
-        assert_eq!(tc.a2a_intra(0, 2), c.a2a(2)); // bit-exact, same expression
-        assert_eq!(tc.a2a_intra_alpha(0, 2), c.a2a_alpha(2));
+        // bit-exact, same expression on both back ends
+        assert_eq!(tc.phase(PhaseDir::Dispatch, PhaseScope::Intra, 0, 2),
+                   c.a2a(2));
+        assert_eq!(tc.phase_alpha(PhaseDir::Dispatch, PhaseScope::Intra, 0, 2),
+                   c.a2a_alpha(2));
         assert_eq!(tc.per_device[0].attn, c.attn);
     }
 
@@ -775,6 +946,7 @@ mod tests {
             a2a_intra_combine_alpha_k1: Vec::new(),
             a2a_inter_combine_alpha_k1: Vec::new(),
             chunk_source: None,
+            expert_load: None,
             devices_per_node: 2,
         };
         tc.assert_valid();
@@ -790,15 +962,21 @@ mod tests {
             let ca = tc.chunk_phases(2, chunks);
             for d in 0..tc.n_devices() {
                 let total: f64 = (0..chunks).map(|i| ca.disp_intra[i][d]).sum();
-                let expect = tc.a2a_intra(d, 2)
-                    + (chunks - 1) as f64 * tc.a2a_intra_alpha(d, 2);
+                let expect =
+                    tc.phase(PhaseDir::Dispatch, PhaseScope::Intra, d, 2)
+                    + (chunks - 1) as f64
+                        * tc.phase_alpha(PhaseDir::Dispatch, PhaseScope::Intra,
+                                         d, 2);
                 assert!((total - expect).abs() < 1e-12,
                         "device {d} x{chunks}: {total} vs {expect}");
             }
             for nd in 0..tc.a2a_inter_k1.len() {
                 let total: f64 = (0..chunks).map(|i| ca.disp_inter[i][nd]).sum();
-                let expect = tc.a2a_inter(nd, 2)
-                    + (chunks - 1) as f64 * tc.a2a_inter_alpha(nd, 2);
+                let expect =
+                    tc.phase(PhaseDir::Dispatch, PhaseScope::Inter, nd, 2)
+                    + (chunks - 1) as f64
+                        * tc.phase_alpha(PhaseDir::Dispatch, PhaseScope::Inter,
+                                         nd, 2);
                 assert!((total - expect).abs() < 1e-12);
             }
         }
@@ -813,8 +991,10 @@ mod tests {
         let mut tc = TopoCosts::from_block(&c);
         tc.a2a_intra_alpha_k1 = Vec::new(); // seed-style: no α information
         let ca = tc.chunk_phases(2, 2);
-        assert_eq!(ca.disp_intra[0][0], tc.a2a_intra(0, 2) / 2.0);
-        assert_eq!(ca.comb_intra[1][0], tc.a2a_intra_combine(0, 2) / 2.0);
+        assert_eq!(ca.disp_intra[0][0],
+                   tc.phase(PhaseDir::Dispatch, PhaseScope::Intra, 0, 2) / 2.0);
+        assert_eq!(ca.comb_intra[1][0],
+                   tc.phase(PhaseDir::Combine, PhaseScope::Intra, 0, 2) / 2.0);
     }
 
     #[test]
@@ -893,12 +1073,14 @@ mod tests {
             let tc = TopoCosts::from_topology(&base, &sc.topology(), 4096, 384, 1.25);
             assert!(tc.a2a_intra_combine_k1.is_empty());
             assert!(tc.a2a_inter_combine_k1.is_empty());
-            // the fallback accessors mirror dispatch bit-exactly
+            // the combine queries mirror dispatch bit-exactly
             for d in 0..tc.n_devices() {
-                assert_eq!(tc.a2a_intra_combine(d, 2), tc.a2a_intra(d, 2));
+                assert_eq!(tc.phase(PhaseDir::Combine, PhaseScope::Intra, d, 2),
+                           tc.phase(PhaseDir::Dispatch, PhaseScope::Intra, d, 2));
             }
             for n in 0..tc.a2a_inter_k1.len() {
-                assert_eq!(tc.a2a_inter_combine(n, 2), tc.a2a_inter(n, 2));
+                assert_eq!(tc.phase(PhaseDir::Combine, PhaseScope::Inter, n, 2),
+                           tc.phase(PhaseDir::Dispatch, PhaseScope::Inter, n, 2));
             }
         }
     }
@@ -956,6 +1138,39 @@ mod tests {
                                          &rt, &Placement::new(2, 2), 1000);
         // device 0 dispatches its token's remote copy (1000 B) once per k;
         // normalized per k then rescaled by k = 2 gives the full volume
-        assert!((tc.a2a_intra(0, 2) - 1000.0 / 1e9).abs() < 1e-15);
+        assert!((tc.phase(PhaseDir::Dispatch, PhaseScope::Intra, 0, 2)
+                 - 1000.0 / 1e9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn routed_costs_carry_expert_load_and_scale_expert_time() {
+        use crate::moe::{Placement, RoutingTable};
+        // all 8 tokens route to device 1's expert: device 0 computes
+        // nothing, device 1 carries twice the balanced mean
+        let idx = vec![1i32, 1, 1, 1, 1, 1, 1, 1];
+        let w = vec![1.0f32; 8];
+        let rt = RoutingTable::build(&idx, &w, 8, 1, 2, 8);
+        let topo = Topology {
+            n_devices: 2,
+            devices_per_node: 1,
+            intra: LinkModel::new(0.0, 1e9),
+            inter: Some(LinkModel::new(1e-3, 1e6)),
+            compute_scale: 1.0,
+            device_scales: None,
+            node_intra: None,
+        };
+        let tc = TopoCosts::from_routing(&ComputeCosts::swin_proxy(), &topo,
+                                         &rt, &Placement::new(2, 2), 1000);
+        tc.assert_valid();
+        let load = tc.expert_load.as_ref().unwrap();
+        assert_eq!(load.per_device, vec![0, 8]);
+        assert_eq!(tc.expert_time(0, 1), 0.0);
+        assert_eq!(tc.expert_time(1, 1), tc.per_device[1].expert(1) * 2.0);
+        // per-chunk expert durations are token-true and partition the
+        // unchunked expert time (each chunk carries 4 of the 8 copies)
+        let ca = tc.chunk_phases(1, 2);
+        assert_eq!(ca.expert[0][0], 0.0);
+        assert_eq!(ca.expert[0][1], tc.per_device[1].expert(1));
+        assert_eq!(ca.expert[0][1] + ca.expert[1][1], tc.expert_time(1, 1));
     }
 }

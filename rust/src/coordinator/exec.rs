@@ -18,6 +18,9 @@ use crate::cluster::LinkModel;
 use crate::moe::{decode, encode, Placement, RoutingTable};
 use crate::runtime::{ArtifactSet, Executable, HostTensor};
 
+use super::costs::Strategy;
+use super::spec::ScheduleSpec;
+
 // SAFETY: the PJRT CPU client is internally synchronized; executables are
 // immutable after compilation and `execute` is thread-safe per the PJRT API
 // contract. The `xla` crate just doesn't declare it.
@@ -224,20 +227,28 @@ pub struct WallSpan {
     pub end: f64,
 }
 
-/// Execute one Block-MLP + Block-MoE pair for real, either sequentially or
-/// with the ScMoE overlap (MoE stream launched from the preceding layer's
-/// intermediate), returning the MoE output and measured spans.
+/// Execute one Block-MLP + Block-MoE pair for real, driven by the same
+/// [`ScheduleSpec`] the DES builders consume: sequential strategies run
+/// the blocking MoE chain after the backbone, overlap strategies launch
+/// the MoE stream from the preceding layer's intermediate and hide the
+/// injected link delays behind backbone compute. Returns the MoE output
+/// and measured spans. The spec's kind supplies the routed `k` (its
+/// capacity artifact must exist in `set`); chunked strategies execute
+/// like their unchunked parents — the thread executor has no chunk-level
+/// streams (the DES models those).
 #[allow(clippy::too_many_arguments)]
 pub fn run_pair_real(
     set: &ArtifactSet,
     cluster: &Cluster,
     x: &HostTensor,
-    k: usize,
-    overlap: bool,
+    spec: &ScheduleSpec,
     link: LinkModel,
     time_scale: f64,
     backbone_reps: usize,
 ) -> Result<(Vec<f32>, Vec<WallSpan>)> {
+    let k = spec.kind.routed_k();
+    let overlap = matches!(spec.strategy,
+                           Strategy::Overlap | Strategy::OverlapPipelined { .. });
     let m = &set.manifest;
     let t = m.tokens;
     let d = m.config.d_model;

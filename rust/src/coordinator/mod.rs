@@ -1,16 +1,21 @@
 //! The paper's system contribution: operator scheduling for expert
 //! parallelism with shortcut-decoupled communication.
 //!
+//! - `spec`: the construction API — a declarative [`ScheduleSpec`] (MoE
+//!   kind × strategy × slot policy × chunk pipelining) built against any
+//!   [`CostModel`] back end via `spec.build(&costs)`;
 //! - `costs`: per-operator durations (calibrated or preset) + comm
 //!   volumes, at two granularities — the single-representative-device
 //!   `BlockCosts` and the topology-aware `TopoCosts` (per-device compute,
 //!   per-link All-to-All phases derived from topology + token counts, or
 //!   from actual `moe::RoutingTable` traffic under a `moe::Placement` via
-//!   `TopoCosts::from_routing`);
-//! - `schedule`: task-graph builders for every architecture × strategy in
-//!   Fig. 6 (sequential, Tutel-style pipelining, shared-expert, ScMoE
-//!   overlapping, ScMoE + pipelining), in both single-device and
-//!   N-device topology-aware variants;
+//!   `TopoCosts::from_routing`, including the per-device `ExpertLoad`
+//!   that stretches hot devices' expert compute) — both implementing
+//!   [`CostModel`];
+//! - `schedule`: the spec-driven task-graph builders for every
+//!   architecture × strategy in Fig. 6 (sequential, Tutel-style
+//!   pipelining, shared-expert, ScMoE overlapping, ScMoE + pipelining);
+//!   one builder family serves both back ends;
 //! - `adaptive`: Eq. 11 — the adaptive placement of expert computation
 //!   among the four candidate locations in the shared-expert stream,
 //!   including the fleet-level argmin over topology-aware simulations;
@@ -22,11 +27,12 @@ pub mod adaptive;
 pub mod costs;
 pub mod exec;
 pub mod schedule;
+pub mod spec;
 pub mod timeline;
 
-pub use adaptive::{choose_expert_slot, choose_expert_slot_topo};
+pub use adaptive::{choose_expert_slot, choose_expert_slot_model,
+                   choose_expert_slot_topo};
 pub use costs::{BlockCosts, ChunkSource, ChunkedA2a, MoEKind, Strategy, TopoCosts};
-pub use schedule::{
-    build_pair_schedule, build_pair_schedule_topo, build_pair_schedule_topo_auto,
-    build_pair_schedule_topo_with, ChunkPipelining, PairSchedule,
-};
+pub use schedule::{build_pair_schedule, build_pair_schedule_auto,
+                   ChunkPipelining, PairSchedule};
+pub use spec::{CostModel, PhaseDir, PhaseScope, ScheduleSpec, SlotPolicy};

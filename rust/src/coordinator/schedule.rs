@@ -8,30 +8,37 @@
 //! gate/encode scheduled at the earliest viable position and decode at the
 //! latest (§3.2).
 //!
-//! Two families of builders:
+//! Since the [`ScheduleSpec`] redesign there is exactly ONE builder
+//! family, driven by the spec and generic over the [`CostModel`] back end:
 //!
-//! - [`build_pair_schedule`] — the paper's single-representative-device
-//!   graphs over [`BlockCosts`];
-//! - [`build_pair_schedule_topo`] — the same strategies generalized to an
-//!   N-device fleet over [`TopoCosts`]: every device runs its own backbone
-//!   on `Compute(d)`, each All-to-All becomes per-device intra-node phase
-//!   tasks on `Comm(d)` plus per-node inter-node phase tasks on the shared
-//!   `Link(node)` resource, and expert computation on each device waits on
-//!   the whole collective (barrier semantics). With one modeled device the
-//!   construction emits the identical task graph as the legacy builders,
-//!   so N = 1 reproduces the legacy makespans bit-exactly.
+//! - built against a [`BlockCosts`](super::costs::BlockCosts), it emits
+//!   the paper's single-representative-device graphs (one `Compute(0)` +
+//!   one `Comm(0)` stream, no `Link` tasks);
+//! - built against a [`TopoCosts`](super::costs::TopoCosts), every device
+//!   runs its own backbone on `Compute(d)`, each All-to-All becomes
+//!   per-device intra-node phase tasks on `Comm(d)` plus per-node
+//!   inter-node phase tasks on the shared `Link(node)` resource, expert
+//!   computation waits on the whole collective (barrier semantics), and
+//!   hot devices' Expert spans stretch with their routed
+//!   [`ExpertLoad`](crate::moe::ExpertLoad).
+//!
+//! With one modeled device both back ends emit the identical task graph,
+//! so N = 1 reproduces the legacy makespans bit-exactly (property-tested
+//! in `rust/tests/simtime_props.rs`; absolute spans pinned by the golden
+//! corpus). The prologue / dispatch / combine / decode loops that the
+//! three pre-redesign topo builders kept verbatim now live once in the
+//! shared helpers below — insertion order is semantic (the DES breaks
+//! readiness ties by task id) and is unchanged.
 
 use crate::simtime::{Resource, Sim, Span, TaskId};
 
-use super::costs::{BlockCosts, ChunkedA2a, MoEKind, Strategy, TopoCosts};
+use super::costs::{BlockCosts, ChunkedA2a, MoEKind, Strategy};
+use super::spec::{CostModel, PhaseDir, PhaseScope, ScheduleSpec};
 
-const DEV: usize = 0;
-
-/// How the chunked topology-aware builders arrange a chunk's intra-node
-/// and inter-node phase tasks. With a single chunk there is nothing to
-/// pipeline and both models keep the seed's barrier semantics (every
-/// phase starts after Encode), so chunks = 1 schedules are identical
-/// under either value.
+/// How the chunked builders arrange a chunk's intra-node and inter-node
+/// phase tasks. With a single chunk there is nothing to pipeline and both
+/// models keep the seed's barrier semantics (every phase starts after
+/// Encode), so chunks = 1 schedules are identical under either value.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ChunkPipelining {
     /// MoNTA-style pipelining (the default): chunk i's uplink task starts
@@ -81,347 +88,129 @@ pub fn backbone_time(c: &BlockCosts, kind: MoEKind) -> f64 {
     c.attn + c.mlp + c.attn + se
 }
 
-/// Build the schedule for a pair under (kind, strategy).
-///
-/// `expert_slot` only applies to Overlap strategies; pass
-/// `choose_expert_slot` output (or use `build_pair_schedule_auto`).
+/// Single-device convenience shim over [`ScheduleSpec::build`], kept for
+/// the paper-table call sites that iterate (kind, strategy, slot) triples.
+/// `expert_slot` only applies to Overlap strategies.
 pub fn build_pair_schedule(
     c: &BlockCosts,
     kind: MoEKind,
     strategy: Strategy,
     expert_slot: usize,
 ) -> PairSchedule {
-    let k = kind.routed_k();
-    match strategy {
-        Strategy::Sequential => build_sequential(c, kind, k),
-        Strategy::Pipelined { chunks } => build_pipelined(c, kind, k, chunks),
-        Strategy::Overlap => build_overlap(c, kind, k, expert_slot, 1),
-        Strategy::OverlapPipelined { chunks } => {
-            build_overlap(c, kind, k, expert_slot, chunks)
-        }
-    }
+    ScheduleSpec::new(kind, strategy).with_slot(expert_slot).build(c)
 }
 
-/// Build with the best expert slot (and, for Overlap strategies on
-/// non-shortcut architectures, fall back to the legal strategy).
+/// [`build_pair_schedule`] with the adaptive expert slot (and the
+/// shortcut-architecture assertion for overlap strategies).
 pub fn build_pair_schedule_auto(c: &BlockCosts, kind: MoEKind,
                                 strategy: Strategy) -> PairSchedule {
-    match strategy {
-        Strategy::Overlap | Strategy::OverlapPipelined { .. } => {
-            assert!(matches!(kind, MoEKind::ScMoE { .. }),
-                    "overlap strategy requires the shortcut architecture");
-            let slot = super::adaptive::choose_expert_slot(c, kind, strategy).0;
-            build_pair_schedule(c, kind, strategy, slot)
-        }
-        _ => build_pair_schedule(c, kind, strategy, 0),
-    }
+    ScheduleSpec::new(kind, strategy).adaptive().build(c)
 }
 
-/// Build the topology-aware schedule for a pair under (kind, strategy)
-/// across every modeled device of `tc`, with MoNTA-style
-/// [`ChunkPipelining::Staged`] intra/inter staging for chunked strategies.
-pub fn build_pair_schedule_topo(
-    tc: &TopoCosts,
-    kind: MoEKind,
-    strategy: Strategy,
-    expert_slot: usize,
-) -> PairSchedule {
-    build_pair_schedule_topo_with(tc, kind, strategy, expert_slot,
-                                  ChunkPipelining::Staged)
-}
-
-/// [`build_pair_schedule_topo`] with an explicit [`ChunkPipelining`]
-/// model — `PhaseChained` serializes each chunk's intra phase against the
-/// previous chunk's uplink, the baseline the staged pipeline is measured
-/// against in `scmoe report topo`'s chunk sweep.
-pub fn build_pair_schedule_topo_with(
-    tc: &TopoCosts,
-    kind: MoEKind,
-    strategy: Strategy,
-    expert_slot: usize,
-    pipelining: ChunkPipelining,
-) -> PairSchedule {
-    tc.assert_valid();
-    let k = kind.routed_k();
-    match strategy {
-        Strategy::Sequential => build_sequential_topo(tc, kind, k),
+/// Build the schedule a resolved spec describes. Crate-internal: the
+/// public entry point is [`ScheduleSpec::build`], which validates the
+/// cost model and resolves the slot policy first.
+pub(crate) fn build_from_spec(spec: &ScheduleSpec, cm: &dyn CostModel,
+                              slot: usize) -> PairSchedule {
+    let k = spec.kind.routed_k();
+    match spec.strategy {
+        Strategy::Sequential => build_sequential(cm, spec.kind, k),
         Strategy::Pipelined { chunks } => {
-            build_pipelined_topo(tc, kind, k, chunks, pipelining)
+            build_pipelined(cm, spec.kind, k, chunks, spec.pipelining)
         }
         Strategy::Overlap => {
-            build_overlap_topo(tc, kind, k, expert_slot, 1, pipelining)
+            build_overlap(cm, spec.kind, k, slot, 1, spec.pipelining)
         }
         Strategy::OverlapPipelined { chunks } => {
-            build_overlap_topo(tc, kind, k, expert_slot, chunks, pipelining)
+            build_overlap(cm, spec.kind, k, slot, chunks, spec.pipelining)
         }
     }
-}
-
-/// Topology-aware twin of [`build_pair_schedule_auto`]: picks the best
-/// expert slot for overlap strategies by simulating the whole fleet.
-pub fn build_pair_schedule_topo_auto(tc: &TopoCosts, kind: MoEKind,
-                                     strategy: Strategy) -> PairSchedule {
-    match strategy {
-        Strategy::Overlap | Strategy::OverlapPipelined { .. } => {
-            assert!(matches!(kind, MoEKind::ScMoE { .. }),
-                    "overlap strategy requires the shortcut architecture");
-            let slot = super::adaptive::choose_expert_slot_topo(tc, kind, strategy).0;
-            build_pair_schedule_topo(tc, kind, strategy, slot)
-        }
-        _ => build_pair_schedule_topo(tc, kind, strategy, 0),
-    }
-}
-
-fn comp(sim: &mut Sim, label: &str, dur: f64, deps: &[TaskId]) -> TaskId {
-    sim.add(label, Resource::Compute(DEV), dur, deps)
-}
-
-fn comm(sim: &mut Sim, label: &str, dur: f64, deps: &[TaskId]) -> TaskId {
-    sim.add(label, Resource::Comm(DEV), dur, deps)
-}
-
-/// Standard top-k / shared-expert, fully sequential (Fig. 6, 1st timeline).
-fn build_sequential(c: &BlockCosts, kind: MoEKind, k: usize) -> PairSchedule {
-    let mut sim = Sim::new();
-    let attn_l = comp(&mut sim, "Attn(l)", c.attn, &[]);
-    let mlp_l = comp(&mut sim, "MLP(l)", c.mlp, &[attn_l]);
-    let attn_m = comp(&mut sim, "Attn(l+1)", c.attn, &[mlp_l]);
-    let gate = comp(&mut sim, "Gate", c.gate, &[attn_m]);
-    let enc = comp(&mut sim, "Encode", c.encode, &[gate]);
-    let disp = comm(&mut sim, "A2A-D", c.a2a(k), &[enc]);
-    let expert = comp(&mut sim, "Expert", c.expert(k), &[disp]);
-    let comb = comm(&mut sim, "A2A-C", c.a2a(k), &[expert]);
-    let mut decode_deps = vec![comb];
-    if kind.has_shared_expert() {
-        // SE computed after attention; serial on the compute stream but can
-        // overlap the MoE comm in principle — sequential strategy runs it
-        // before the gate for the worst-case baseline.
-        let se = comp(&mut sim, "SE", c.se, &[attn_m]);
-        decode_deps.push(se);
-    }
-    let _dec = comp(&mut sim, "Decode", c.decode, &decode_deps);
-    PairSchedule { sim, kind, strategy: Strategy::Sequential, expert_slot: 0 }
-}
-
-/// Tutel-style pipelining (Fig. 6, 2nd timeline): tokens split into
-/// `chunks`; dispatch/expert/combine of different chunks overlap. Each
-/// chunk message pays the link's full launch latency — only the byte term
-/// divides (`BlockCosts::a2a_chunk`), so deep chunking is no longer free.
-fn build_pipelined(c: &BlockCosts, kind: MoEKind, k: usize,
-                   chunks: usize) -> PairSchedule {
-    assert!(chunks >= 1);
-    let mut sim = Sim::new();
-    let attn_l = comp(&mut sim, "Attn(l)", c.attn, &[]);
-    let mlp_l = comp(&mut sim, "MLP(l)", c.mlp, &[attn_l]);
-    let attn_m = comp(&mut sim, "Attn(l+1)", c.attn, &[mlp_l]);
-    let gate = comp(&mut sim, "Gate", c.gate, &[attn_m]);
-    let enc = comp(&mut sim, "Encode", c.encode, &[gate]);
-    let fc = chunks as f64;
-    let mut combines = Vec::new();
-    let mut prev_disp: Option<TaskId> = None;
-    for i in 0..chunks {
-        let dd = match prev_disp {
-            Some(p) => vec![enc, p],
-            None => vec![enc],
-        };
-        let disp = comm(&mut sim, &format!("A2A-D{i}"),
-                        c.a2a_chunk(k, chunks), &dd);
-        prev_disp = Some(disp);
-        let expert = comp(&mut sim, &format!("Expert{i}"), c.expert(k) / fc, &[disp]);
-        let comb = comm(&mut sim, &format!("A2A-C{i}"),
-                        c.a2a_chunk(k, chunks), &[expert]);
-        combines.push(comb);
-    }
-    let mut decode_deps = combines;
-    if kind.has_shared_expert() {
-        // shared-expert MoE overlaps SE with the MoE stream's comm
-        let se = comp(&mut sim, "SE", c.se, &[attn_m]);
-        decode_deps.push(se);
-    }
-    let _dec = comp(&mut sim, "Decode", c.decode, &decode_deps);
-    PairSchedule { sim, kind, strategy: Strategy::Pipelined { chunks }, expert_slot: 0 }
-}
-
-/// The paper's overlapping strategy (Fig. 6, 4th/5th timelines): the MoE
-/// stream hangs off the *preceding layer's* intermediate representation
-/// (Pos-2 shortcut), so its comm overlaps MLP(l) + Attn(l+1) + SE(l+1).
-/// Expert computation is inserted in one of 4 slots of the backbone
-/// stream; with `chunks > 1` the dispatch/expert/combine are additionally
-/// pipelined inside the window.
-fn build_overlap(c: &BlockCosts, kind: MoEKind, k: usize, slot: usize,
-                 chunks: usize) -> PairSchedule {
-    assert!(slot <= 3, "expert slot must be one of the 4 locations");
-    assert!(chunks >= 1);
-    let mut sim = Sim::new();
-    let attn_l = comp(&mut sim, "Attn(l)", c.attn, &[]);
-    // MoE stream: gate + encode at the earliest viable position — right
-    // after the preceding layer's attention (Pos-2 shortcut input).
-    let gate = comp(&mut sim, "Gate", c.gate, &[attn_l]);
-    let enc = comp(&mut sim, "Encode", c.encode, &[gate]);
-
-    // Backbone window ops (COMP_1..COMP_3 of Eq. 11); the expert
-    // computation occupies one of the 4 slots around them.
-    // slot 0: before MLP(l); 1: after MLP(l); 2: after Attn(l+1);
-    // slot 3: after SE(l+1).
-    let fc = chunks as f64;
-    let mut dispatches = Vec::new();
-    let mut prev: Option<TaskId> = None;
-    for i in 0..chunks {
-        let deps = match prev {
-            Some(p) => vec![enc, p],
-            None => vec![enc],
-        };
-        let d = comm(&mut sim, &format!("A2A-D{i}"),
-                     c.a2a_chunk(k, chunks), &deps);
-        dispatches.push(d);
-        prev = Some(d);
-    }
-
-    // backbone ops, inserting expert chunks at `slot`
-    let mut experts: Vec<TaskId> = Vec::new();
-    let mut last_backbone = attn_l;
-    let window: [(&str, f64); 3] = [
-        ("MLP(l)", c.mlp),
-        ("Attn(l+1)", c.attn),
-        ("SE(l+1)", c.se),
-    ];
-    let mut place_experts = |sim: &mut Sim, after: TaskId| -> TaskId {
-        let mut tail = after;
-        for (i, d) in dispatches.iter().enumerate() {
-            let e = comp(sim, &format!("Expert{i}"),
-                         c.expert(k) / fc, &[*d, tail]);
-            experts.push(e);
-            tail = e;
-        }
-        tail
-    };
-
-    if slot == 0 {
-        last_backbone = place_experts(&mut sim, last_backbone);
-    }
-    for (i, (label, dur)) in window.iter().enumerate() {
-        last_backbone = comp(&mut sim, label, *dur, &[last_backbone]);
-        if slot == i + 1 {
-            last_backbone = place_experts(&mut sim, last_backbone);
-        }
-    }
-
-    // combines: chunk i's combine depends on its expert; comm stream FIFO
-    let mut combines = Vec::new();
-    for (i, e) in experts.iter().enumerate() {
-        combines.push(comm(&mut sim, &format!("A2A-C{i}"),
-                           c.a2a_chunk(k, chunks), &[*e]));
-    }
-    // decode at the latest position: after the backbone and all combines
-    let mut deps = combines;
-    deps.push(last_backbone);
-    let _dec = comp(&mut sim, "Decode", c.decode, &deps);
-    let strategy = if chunks == 1 {
-        Strategy::Overlap
-    } else {
-        Strategy::OverlapPipelined { chunks }
-    };
-    PairSchedule { sim, kind, strategy, expert_slot: slot }
 }
 
 // ---------------------------------------------------------------------------
-// Topology-aware builders: the same strategies over an N-device fleet.
+// Shared construction helpers.
 //
-// Construction rules shared by all three builders:
+// Construction rules (all builders):
 //  - device d's operators run on `Compute(d)`; its A2A intra-node phases on
 //    `Comm(d)`; node n's inter-node phases on the shared `Link(n)`;
 //  - an All-to-All is a barrier collective: consumers depend on every
 //    phase task (per-device intra + per-node inter);
-//  - dispatch tasks (`A2A-D*`) take durations from the dispatch phase
-//    vectors; combine tasks (`A2A-C*`) from `TopoCosts::a2a_*_combine`,
-//    which fall back to the dispatch phases when routing is symmetric —
-//    routed placements thus expose asymmetric forward/return traffic
-//    without forking the builders;
-//  - with `chunks > 1` every chunk's durations come from
-//    `TopoCosts::chunk_phases` (token-true under routed costs; α-true
-//    analytic otherwise) and the uplink tasks are staged behind the
-//    node's intra tasks per `ChunkPipelining`; with one chunk the
-//    builders keep the seed's enc-barrier phase layout and full-phase
-//    durations bit-exactly;
-//  - task insertion order matches the legacy single-device builders, so a
-//    one-device `TopoCosts` yields the identical task graph (same ids,
-//    deps, durations) and therefore bit-exact spans.
+//  - dispatch tasks (`A2A-D*`) answer `phase(Dispatch, ..)` queries and
+//    combine tasks (`A2A-C*`) `phase(Combine, ..)`, whose symmetric
+//    fallback keeps uniform-routing schedules bit-exact with the
+//    pre-routed model;
+//  - expert durations come from `CostModel::expert_time` (load-scaled on
+//    routed back ends) and, with `chunks > 1`, from the per-chunk
+//    `ChunkedA2a::expert` matrix (token-true under routed costs; an even
+//    `1/chunks` split otherwise);
+//  - with `chunks > 1` phase durations come from `chunk_phases` and the
+//    uplink tasks are staged behind the node's intra tasks per
+//    `ChunkPipelining`; with one chunk the builders keep the seed's
+//    enc-barrier phase layout and full-phase durations bit-exactly;
+//  - task insertion order is semantic (the DES breaks readiness ties by
+//    task id) and matches the pre-redesign builders exactly.
 // ---------------------------------------------------------------------------
 
-/// Per-device sequential baseline over the fleet (cf. `build_sequential`).
-fn build_sequential_topo(tc: &TopoCosts, kind: MoEKind, k: usize) -> PairSchedule {
-    let n = tc.n_devices();
-    let n_links = tc.a2a_inter_k1.len();
-    let mut sim = Sim::new();
-    let mut attn_m = Vec::with_capacity(n);
+/// Per-device backbone prologue shared by every builder. Non-shortcut
+/// kinds run Attn(l) → MLP(l) → Attn(l+1) and hang Gate + Encode off
+/// Attn(l+1); the shortcut (ScMoE) hangs them off the *preceding layer's*
+/// Attn(l) (Pos-2 shortcut input), leaving MLP(l)/Attn(l+1)/SE(l+1) for
+/// the overlap window. Returns (anchor, enc) task ids per device — the
+/// anchor is the task SE / the overlap window chains from.
+fn add_backbone_head(sim: &mut Sim, cm: &dyn CostModel,
+                     shortcut: bool) -> (Vec<TaskId>, Vec<TaskId>) {
+    let n = cm.n_devices();
+    let mut anchors = Vec::with_capacity(n);
     let mut enc = Vec::with_capacity(n);
     for d in 0..n {
-        let c = &tc.per_device[d];
+        let c = cm.device(d);
         let attn_l = sim.add("Attn(l)", Resource::Compute(d), c.attn, &[]);
-        let mlp_l = sim.add("MLP(l)", Resource::Compute(d), c.mlp, &[attn_l]);
-        let a_m = sim.add("Attn(l+1)", Resource::Compute(d), c.attn, &[mlp_l]);
-        let gate = sim.add("Gate", Resource::Compute(d), c.gate, &[a_m]);
+        let anchor = if shortcut {
+            attn_l
+        } else {
+            let mlp_l = sim.add("MLP(l)", Resource::Compute(d), c.mlp, &[attn_l]);
+            sim.add("Attn(l+1)", Resource::Compute(d), c.attn, &[mlp_l])
+        };
+        let gate = sim.add("Gate", Resource::Compute(d), c.gate, &[anchor]);
         let e = sim.add("Encode", Resource::Compute(d), c.encode, &[gate]);
-        attn_m.push(a_m);
+        anchors.push(anchor);
         enc.push(e);
     }
-    let mut disp = Vec::with_capacity(n + n_links);
-    for d in 0..n {
-        disp.push(sim.add("A2A-D", Resource::Comm(d), tc.a2a_intra(d, k), &[enc[d]]));
-    }
-    for node in 0..n_links {
-        let deps: Vec<TaskId> = tc.devices_of(node).map(|d| enc[d]).collect();
-        disp.push(sim.add("A2A-Dx", Resource::Link(node), tc.a2a_inter(node, k), &deps));
-    }
-    let mut experts = Vec::with_capacity(n);
-    for d in 0..n {
-        let c = &tc.per_device[d];
-        experts.push(sim.add("Expert", Resource::Compute(d), c.expert(k), &disp));
-    }
-    let mut comb = Vec::with_capacity(n + n_links);
-    for d in 0..n {
-        comb.push(sim.add("A2A-C", Resource::Comm(d),
-                          tc.a2a_intra_combine(d, k), &[experts[d]]));
-    }
-    for node in 0..n_links {
-        let deps: Vec<TaskId> = tc.devices_of(node).map(|d| experts[d]).collect();
-        comb.push(sim.add("A2A-Cx", Resource::Link(node),
-                          tc.a2a_inter_combine(node, k), &deps));
-    }
-    for d in 0..n {
-        let c = &tc.per_device[d];
-        let mut deps = comb.clone();
-        if kind.has_shared_expert() {
-            let se = sim.add("SE", Resource::Compute(d), c.se, &[attn_m[d]]);
-            deps.push(se);
-        }
-        sim.add("Decode", Resource::Compute(d), c.decode, &deps);
-    }
-    PairSchedule { sim, kind, strategy: Strategy::Sequential, expert_slot: 0 }
+    (anchors, enc)
 }
 
-/// One chunk's dispatch phase tasks (intra per device, then inter per
-/// node), shared by the chunked topo builders. With `chunks == 1`
-/// (`ca == None`) this reproduces the seed's task graph exactly: full
-/// phase durations and every phase starting after Encode. With
-/// `chunks > 1` durations come from the per-chunk [`ChunkedA2a`] and the
-/// uplink is staged behind the node's intra tasks (plus the previous
-/// chunk's uplink under `PhaseChained` for the intra tasks).
-/// Returns this chunk's task ids (devices first, then links).
+/// Dispatch-phase task label: unchunked collectives use the bare name,
+/// chunk i of a pipelined collective gets the index suffix.
+fn tag(base: &str, i: Option<usize>) -> String {
+    match i {
+        Some(i) => format!("{base}{i}"),
+        None => base.to_string(),
+    }
+}
+
+/// One collective's dispatch phase tasks (intra per device, then inter
+/// per node). `i = None` is the unchunked collective (`"A2A-D"` labels,
+/// full phase durations, every phase starting after Encode — the seed's
+/// barrier layout); `i = Some(idx)` is chunk `idx` of a pipelined stream,
+/// whose durations come from `ca` when `chunks > 1` and whose uplink is
+/// staged behind the node's intra tasks (plus the previous chunk's uplink
+/// under `PhaseChained` for the intra tasks).
+/// Returns this collective's task ids (devices first, then links).
 #[allow(clippy::too_many_arguments)]
 fn add_dispatch_chunk(
     sim: &mut Sim,
-    tc: &TopoCosts,
+    cm: &dyn CostModel,
     k: usize,
-    i: usize,
+    i: Option<usize>,
     ca: Option<&ChunkedA2a>,
     enc: &[TaskId],
     prev_d: &mut [Option<TaskId>],
     prev_x: &mut [Option<TaskId>],
     pipelining: ChunkPipelining,
 ) -> Vec<TaskId> {
-    let n = tc.n_devices();
-    let n_links = tc.a2a_inter_k1.len();
+    let n = cm.n_devices();
+    let n_links = cm.n_links();
+    let ci = i.unwrap_or(0);
     let mut disp_i = Vec::with_capacity(n + n_links);
     for d in 0..n {
         let mut deps = vec![enc[d]];
@@ -429,15 +218,15 @@ fn add_dispatch_chunk(
             deps.push(p);
         }
         if pipelining == ChunkPipelining::PhaseChained && n_links > 0 {
-            if let Some(p) = prev_x[tc.node_of(d)] {
+            if let Some(p) = prev_x[cm.node_of(d)] {
                 deps.push(p);
             }
         }
         let dur = match ca {
-            Some(ca) => ca.disp_intra[i][d],
-            None => tc.a2a_intra(d, k),
+            Some(ca) => ca.disp_intra[ci][d],
+            None => cm.phase(PhaseDir::Dispatch, PhaseScope::Intra, d, k),
         };
-        let t = sim.add(format!("A2A-D{i}"), Resource::Comm(d), dur, &deps);
+        let t = sim.add(tag("A2A-D", i), Resource::Comm(d), dur, &deps);
         prev_d[d] = Some(t);
         disp_i.push(t);
     }
@@ -446,25 +235,25 @@ fn add_dispatch_chunk(
         // phase gathered, so it waits on this chunk's intra tasks; the
         // unchunked collective keeps the seed's enc-barrier semantics
         let mut deps: Vec<TaskId> = match ca {
-            Some(_) => tc.devices_of(node).map(|d| disp_i[d]).collect(),
-            None => tc.devices_of(node).map(|d| enc[d]).collect(),
+            Some(_) => cm.devices_of(node).map(|d| disp_i[d]).collect(),
+            None => cm.devices_of(node).map(|d| enc[d]).collect(),
         };
         if let Some(p) = prev_x[node] {
             deps.push(p);
         }
         let dur = match ca {
-            Some(ca) => ca.disp_inter[i][node],
-            None => tc.a2a_inter(node, k),
+            Some(ca) => ca.disp_inter[ci][node],
+            None => cm.phase(PhaseDir::Dispatch, PhaseScope::Inter, node, k),
         };
-        let t = sim.add(format!("A2A-Dx{i}"), Resource::Link(node), dur, &deps);
+        let t = sim.add(tag("A2A-Dx", i), Resource::Link(node), dur, &deps);
         prev_x[node] = Some(t);
         disp_i.push(t);
     }
     disp_i
 }
 
-/// One chunk's combine phase tasks, mirroring [`add_dispatch_chunk`] in
-/// the return direction: with `chunks > 1` the uplink-return tasks come
+/// One collective's combine phase tasks, mirroring [`add_dispatch_chunk`]
+/// in the return direction: with `chunks > 1` the uplink-return tasks come
 /// first and each device's intra scatter waits on its own node's
 /// *outbound* return task — the structural mirror of dispatch's
 /// gather-then-send (the node drains its shared return fabric before the
@@ -473,162 +262,183 @@ fn add_dispatch_chunk(
 /// consumer (`Decode`) barriers on every combine task of every chunk,
 /// so no result is consumed before all uplinks finish. `PhaseChained`
 /// additionally chains each uplink behind the previous chunk's scatter.
-/// `experts_i[d]` is device d's chunk-i expert task; appends all created
-/// tasks to `combines` and records this chunk's intra tasks in `prev_c`.
+/// `experts_i[d]` is device d's expert task for this collective; appends
+/// all created tasks to `combines` and records the intra tasks in
+/// `prev_c`.
 #[allow(clippy::too_many_arguments)]
 fn add_combine_chunk(
     sim: &mut Sim,
-    tc: &TopoCosts,
+    cm: &dyn CostModel,
     k: usize,
-    i: usize,
+    i: Option<usize>,
     ca: Option<&ChunkedA2a>,
     experts_i: &[TaskId],
     prev_c: &mut [Option<TaskId>],
     combines: &mut Vec<TaskId>,
     pipelining: ChunkPipelining,
 ) {
-    let n = tc.n_devices();
-    let n_links = tc.a2a_inter_k1.len();
+    let n = cm.n_devices();
+    let n_links = cm.n_links();
+    let ci = i.unwrap_or(0);
     match ca {
         Some(ca) => {
             let mut comb_x_i = Vec::with_capacity(n_links);
             for node in 0..n_links {
                 let mut deps: Vec<TaskId> =
-                    tc.devices_of(node).map(|d| experts_i[d]).collect();
+                    cm.devices_of(node).map(|d| experts_i[d]).collect();
                 if pipelining == ChunkPipelining::PhaseChained {
-                    for d in tc.devices_of(node) {
+                    for d in cm.devices_of(node) {
                         if let Some(p) = prev_c[d] {
                             deps.push(p);
                         }
                     }
                 }
-                let t = sim.add(format!("A2A-Cx{i}"), Resource::Link(node),
-                                ca.comb_inter[i][node], &deps);
+                let t = sim.add(tag("A2A-Cx", i), Resource::Link(node),
+                                ca.comb_inter[ci][node], &deps);
                 comb_x_i.push(t);
                 combines.push(t);
             }
             for d in 0..n {
                 let mut deps = vec![experts_i[d]];
                 if n_links > 0 {
-                    deps.push(comb_x_i[tc.node_of(d)]);
+                    deps.push(comb_x_i[cm.node_of(d)]);
                 }
-                let t = sim.add(format!("A2A-C{i}"), Resource::Comm(d),
-                                ca.comb_intra[i][d], &deps);
+                let t = sim.add(tag("A2A-C", i), Resource::Comm(d),
+                                ca.comb_intra[ci][d], &deps);
                 prev_c[d] = Some(t);
                 combines.push(t);
             }
         }
         None => {
             for d in 0..n {
-                let t = sim.add(format!("A2A-C{i}"), Resource::Comm(d),
-                                tc.a2a_intra_combine(d, k), &[experts_i[d]]);
+                let t = sim.add(
+                    tag("A2A-C", i), Resource::Comm(d),
+                    cm.phase(PhaseDir::Combine, PhaseScope::Intra, d, k),
+                    &[experts_i[d]]);
                 prev_c[d] = Some(t);
                 combines.push(t);
             }
             for node in 0..n_links {
                 let deps: Vec<TaskId> =
-                    tc.devices_of(node).map(|d| experts_i[d]).collect();
-                combines.push(sim.add(format!("A2A-Cx{i}"),
-                                      Resource::Link(node),
-                                      tc.a2a_inter_combine(node, k), &deps));
+                    cm.devices_of(node).map(|d| experts_i[d]).collect();
+                combines.push(sim.add(
+                    tag("A2A-Cx", i), Resource::Link(node),
+                    cm.phase(PhaseDir::Combine, PhaseScope::Inter, node, k),
+                    &deps));
             }
         }
     }
 }
 
-/// Tutel-style pipelining over the fleet (cf. `build_pipelined`): every
-/// chunk's expert computation waits on that chunk's full collective, each
-/// chunk pays its own per-link α and bytes (`TopoCosts::chunk_phases` —
-/// token-true under routed costs), and the uplink tasks are staged behind
-/// the intra phases per [`ChunkPipelining`].
-fn build_pipelined_topo(tc: &TopoCosts, kind: MoEKind, k: usize,
-                        chunks: usize,
-                        pipelining: ChunkPipelining) -> PairSchedule {
-    assert!(chunks >= 1);
-    let n = tc.n_devices();
-    let n_links = tc.a2a_inter_k1.len();
-    let mut sim = Sim::new();
-    let mut attn_m = Vec::with_capacity(n);
-    let mut enc = Vec::with_capacity(n);
-    for d in 0..n {
-        let c = &tc.per_device[d];
-        let attn_l = sim.add("Attn(l)", Resource::Compute(d), c.attn, &[]);
-        let mlp_l = sim.add("MLP(l)", Resource::Compute(d), c.mlp, &[attn_l]);
-        let a_m = sim.add("Attn(l+1)", Resource::Compute(d), c.attn, &[mlp_l]);
-        let gate = sim.add("Gate", Resource::Compute(d), c.gate, &[a_m]);
-        let e = sim.add("Encode", Resource::Compute(d), c.encode, &[gate]);
-        attn_m.push(a_m);
-        enc.push(e);
-    }
-    let fc = chunks as f64;
-    let ca = if chunks > 1 { Some(tc.chunk_phases(k, chunks)) } else { None };
-    let mut prev_d: Vec<Option<TaskId>> = vec![None; n];
-    let mut prev_x: Vec<Option<TaskId>> = vec![None; n_links];
-    let mut prev_c: Vec<Option<TaskId>> = vec![None; n];
-    let mut combines: Vec<TaskId> = Vec::new();
-    for i in 0..chunks {
-        let disp_i = add_dispatch_chunk(&mut sim, tc, k, i, ca.as_ref(), &enc,
-                                        &mut prev_d, &mut prev_x, pipelining);
-        let mut experts_i = Vec::with_capacity(n);
-        for d in 0..n {
-            let c = &tc.per_device[d];
-            experts_i.push(sim.add(format!("Expert{i}"), Resource::Compute(d),
-                                   c.expert(k) / fc, &disp_i));
-        }
-        add_combine_chunk(&mut sim, tc, k, i, ca.as_ref(), &experts_i,
-                          &mut prev_c, &mut combines, pipelining);
-    }
-    for d in 0..n {
-        let c = &tc.per_device[d];
-        let mut deps = combines.clone();
-        if kind.has_shared_expert() {
-            let se = sim.add("SE", Resource::Compute(d), c.se, &[attn_m[d]]);
+/// Per-device Decode at the latest position (§3.2), barriering on every
+/// combine task. Non-shortcut shared-expert kinds insert the SE task here
+/// (`anchors` = Attn(l+1)); the overlap builder instead passes its
+/// per-device backbone tails via `last_backbone` (SE already sits inside
+/// the window).
+fn add_decode(sim: &mut Sim, cm: &dyn CostModel, kind: MoEKind,
+              combines: &[TaskId], anchors: &[TaskId],
+              last_backbone: Option<&[TaskId]>) {
+    for d in 0..cm.n_devices() {
+        let c = cm.device(d);
+        let mut deps = combines.to_vec();
+        if let Some(tails) = last_backbone {
+            deps.push(tails[d]);
+        } else if kind.has_shared_expert() {
+            let se = sim.add("SE", Resource::Compute(d), c.se, &[anchors[d]]);
             deps.push(se);
         }
         sim.add("Decode", Resource::Compute(d), c.decode, &deps);
     }
+}
+
+/// Fully sequential baseline (Fig. 6, 1st timeline), over the whole
+/// modeled fleet: one barrier collective each way, experts between.
+fn build_sequential(cm: &dyn CostModel, kind: MoEKind, k: usize) -> PairSchedule {
+    let n = cm.n_devices();
+    let mut sim = Sim::new();
+    let (attn_m, enc) = add_backbone_head(&mut sim, cm, false);
+    let mut prev_d: Vec<Option<TaskId>> = vec![None; n];
+    let mut prev_x: Vec<Option<TaskId>> = vec![None; cm.n_links()];
+    let mut prev_c: Vec<Option<TaskId>> = vec![None; n];
+    let disp = add_dispatch_chunk(&mut sim, cm, k, None, None, &enc,
+                                  &mut prev_d, &mut prev_x,
+                                  ChunkPipelining::Staged);
+    let experts: Vec<TaskId> = (0..n)
+        .map(|d| sim.add("Expert", Resource::Compute(d),
+                         cm.expert_time(d, k), &disp))
+        .collect();
+    let mut combines = Vec::new();
+    add_combine_chunk(&mut sim, cm, k, None, None, &experts, &mut prev_c,
+                      &mut combines, ChunkPipelining::Staged);
+    add_decode(&mut sim, cm, kind, &combines, &attn_m, None);
+    PairSchedule { sim, kind, strategy: Strategy::Sequential, expert_slot: 0 }
+}
+
+/// Tutel-style pipelining (Fig. 6, 2nd timeline) over the fleet: every
+/// chunk's expert computation waits on that chunk's full collective, each
+/// chunk pays its own per-link α and bytes (`CostModel::chunk_phases` —
+/// token-true under routed costs, as are the per-chunk expert durations),
+/// and the uplink tasks are staged per [`ChunkPipelining`].
+fn build_pipelined(cm: &dyn CostModel, kind: MoEKind, k: usize,
+                   chunks: usize, pipelining: ChunkPipelining) -> PairSchedule {
+    assert!(chunks >= 1);
+    let n = cm.n_devices();
+    let mut sim = Sim::new();
+    let (attn_m, enc) = add_backbone_head(&mut sim, cm, false);
+    let fc = chunks as f64;
+    let ca = if chunks > 1 { Some(cm.chunk_phases(k, chunks)) } else { None };
+    let mut prev_d: Vec<Option<TaskId>> = vec![None; n];
+    let mut prev_x: Vec<Option<TaskId>> = vec![None; cm.n_links()];
+    let mut prev_c: Vec<Option<TaskId>> = vec![None; n];
+    let mut combines: Vec<TaskId> = Vec::new();
+    for i in 0..chunks {
+        let disp_i = add_dispatch_chunk(&mut sim, cm, k, Some(i), ca.as_ref(),
+                                        &enc, &mut prev_d, &mut prev_x,
+                                        pipelining);
+        let mut experts_i = Vec::with_capacity(n);
+        for d in 0..n {
+            let dur = match &ca {
+                Some(ca) => ca.expert[i][d],
+                None => cm.expert_time(d, k) / fc,
+            };
+            experts_i.push(sim.add(format!("Expert{i}"), Resource::Compute(d),
+                                   dur, &disp_i));
+        }
+        add_combine_chunk(&mut sim, cm, k, Some(i), ca.as_ref(), &experts_i,
+                          &mut prev_c, &mut combines, pipelining);
+    }
+    add_decode(&mut sim, cm, kind, &combines, &attn_m, None);
     PairSchedule { sim, kind, strategy: Strategy::Pipelined { chunks }, expert_slot: 0 }
 }
 
-/// The paper's overlapping strategy over the fleet (cf. `build_overlap`):
-/// every device hangs its MoE stream off the preceding layer's
-/// intermediate and inserts its expert chunks at `slot` in its own
-/// backbone window; slow devices stretch the collective for everyone.
-/// Chunked dispatch/combine phases follow the same per-chunk α + staging
-/// model as [`build_pipelined_topo`].
-fn build_overlap_topo(tc: &TopoCosts, kind: MoEKind, k: usize, slot: usize,
-                      chunks: usize,
-                      pipelining: ChunkPipelining) -> PairSchedule {
+/// The paper's overlapping strategy (Fig. 6, 4th/5th timelines) over the
+/// fleet: every device hangs its MoE stream off the preceding layer's
+/// intermediate (Pos-2 shortcut) and inserts its expert chunks at `slot`
+/// in its own backbone window; slow or hot devices stretch the collective
+/// for everyone. Chunked dispatch/combine phases follow the same
+/// per-chunk α + staging model as [`build_pipelined`].
+fn build_overlap(cm: &dyn CostModel, kind: MoEKind, k: usize, slot: usize,
+                 chunks: usize, pipelining: ChunkPipelining) -> PairSchedule {
     assert!(slot <= 3, "expert slot must be one of the 4 locations");
     assert!(chunks >= 1);
-    let n = tc.n_devices();
-    let n_links = tc.a2a_inter_k1.len();
+    let n = cm.n_devices();
     let mut sim = Sim::new();
-    let mut attn_l_ids = Vec::with_capacity(n);
-    let mut enc = Vec::with_capacity(n);
-    for d in 0..n {
-        let c = &tc.per_device[d];
-        let attn_l = sim.add("Attn(l)", Resource::Compute(d), c.attn, &[]);
-        let gate = sim.add("Gate", Resource::Compute(d), c.gate, &[attn_l]);
-        let e = sim.add("Encode", Resource::Compute(d), c.encode, &[gate]);
-        attn_l_ids.push(attn_l);
-        enc.push(e);
-    }
+    let (attn_l_ids, enc) = add_backbone_head(&mut sim, cm, true);
     let fc = chunks as f64;
-    let ca = if chunks > 1 { Some(tc.chunk_phases(k, chunks)) } else { None };
+    let ca = if chunks > 1 { Some(cm.chunk_phases(k, chunks)) } else { None };
     let mut disp_chunks: Vec<Vec<TaskId>> = Vec::with_capacity(chunks);
     let mut prev_d: Vec<Option<TaskId>> = vec![None; n];
-    let mut prev_x: Vec<Option<TaskId>> = vec![None; n_links];
+    let mut prev_x: Vec<Option<TaskId>> = vec![None; cm.n_links()];
     for i in 0..chunks {
-        disp_chunks.push(add_dispatch_chunk(&mut sim, tc, k, i, ca.as_ref(),
-                                            &enc, &mut prev_d, &mut prev_x,
-                                            pipelining));
+        disp_chunks.push(add_dispatch_chunk(&mut sim, cm, k, Some(i),
+                                            ca.as_ref(), &enc, &mut prev_d,
+                                            &mut prev_x, pipelining));
     }
     // per-device backbone window with expert chunks inserted at `slot`
     let mut last_backbone: Vec<TaskId> = vec![0; n];
     let mut experts_by_dev: Vec<Vec<TaskId>> = Vec::with_capacity(n);
     for d in 0..n {
-        let c = &tc.per_device[d];
+        let c = cm.device(d);
         let mut dev_experts = Vec::with_capacity(chunks);
         let place = |sim: &mut Sim, after: TaskId,
                      out: &mut Vec<TaskId>| -> TaskId {
@@ -636,8 +446,12 @@ fn build_overlap_topo(tc: &TopoCosts, kind: MoEKind, k: usize, slot: usize,
             for (i, disp_i) in disp_chunks.iter().enumerate() {
                 let mut deps = disp_i.clone();
                 deps.push(tail);
+                let dur = match &ca {
+                    Some(ca) => ca.expert[i][d],
+                    None => cm.expert_time(d, k) / fc,
+                };
                 let e = sim.add(format!("Expert{i}"), Resource::Compute(d),
-                                c.expert(k) / fc, &deps);
+                                dur, &deps);
                 out.push(e);
                 tail = e;
             }
@@ -666,15 +480,10 @@ fn build_overlap_topo(tc: &TopoCosts, kind: MoEKind, k: usize, slot: usize,
     for i in 0..chunks {
         let experts_i: Vec<TaskId> =
             (0..n).map(|d| experts_by_dev[d][i]).collect();
-        add_combine_chunk(&mut sim, tc, k, i, ca.as_ref(), &experts_i,
+        add_combine_chunk(&mut sim, cm, k, Some(i), ca.as_ref(), &experts_i,
                           &mut prev_c, &mut combines, pipelining);
     }
-    for d in 0..n {
-        let c = &tc.per_device[d];
-        let mut deps = combines.clone();
-        deps.push(last_backbone[d]);
-        sim.add("Decode", Resource::Compute(d), c.decode, &deps);
-    }
+    add_decode(&mut sim, cm, kind, &combines, &[], Some(&last_backbone));
     let strategy = if chunks == 1 {
         Strategy::Overlap
     } else {
@@ -686,6 +495,8 @@ fn build_overlap_topo(tc: &TopoCosts, kind: MoEKind, k: usize, slot: usize,
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::costs::TopoCosts;
+    use crate::moe::ExpertLoad;
 
     fn costs(a2a: f64) -> BlockCosts {
         BlockCosts {
@@ -779,8 +590,13 @@ mod tests {
             a2a_intra_combine_alpha_k1: Vec::new(),
             a2a_inter_combine_alpha_k1: Vec::new(),
             chunk_source: None,
+            expert_load: None,
             devices_per_node,
         }
+    }
+
+    fn spec_of(kind: MoEKind, strat: Strategy, slot: usize) -> ScheduleSpec {
+        ScheduleSpec::new(kind, strat).with_slot(slot)
     }
 
     #[test]
@@ -795,7 +611,7 @@ mod tests {
             (MoEKind::ScMoE { k: 2 }, Strategy::OverlapPipelined { chunks: 2 }, 1),
         ] {
             let legacy = build_pair_schedule(&c, kind, strat, slot);
-            let topo = build_pair_schedule_topo(&tc, kind, strat, slot);
+            let topo = spec_of(kind, strat, slot).build(&tc);
             let (ls, ts) = (legacy.run(), topo.run());
             assert_eq!(ls.len(), ts.len(), "{kind:?}/{strat:?}");
             for (a, b) in ls.iter().zip(&ts) {
@@ -818,7 +634,7 @@ mod tests {
             (MoEKind::Standard { k: 2 }, Strategy::Pipelined { chunks: 2 }),
         ] {
             let legacy = build_pair_schedule(&c, kind, strat, 0).makespan();
-            let topo = build_pair_schedule_topo(&tc, kind, strat, 0).makespan();
+            let topo = spec_of(kind, strat, 0).build(&tc).makespan();
             assert!((legacy - topo).abs() < 1e-12,
                     "{kind:?}/{strat:?}: legacy {legacy} topo {topo}");
         }
@@ -834,13 +650,31 @@ mod tests {
         d3.mlp *= 2.0;
         d3.se *= 2.0;
         d3.expert_k1 *= 2.0;
-        let uniform = build_pair_schedule_topo(
-            &homogeneous_topo(&c, 4, 4, 0.0),
-            MoEKind::Standard { k: 2 }, Strategy::Sequential, 0).makespan();
-        let straggler = build_pair_schedule_topo(
-            &tc, MoEKind::Standard { k: 2 }, Strategy::Sequential, 0).makespan();
+        let spec = spec_of(MoEKind::Standard { k: 2 }, Strategy::Sequential, 0);
+        let uniform = spec.build(&homogeneous_topo(&c, 4, 4, 0.0)).makespan();
+        let straggler = spec.build(&tc).makespan();
         assert!(straggler > uniform + 1e-9,
                 "straggler {straggler} vs uniform {uniform}");
+    }
+
+    #[test]
+    fn topo_hot_device_load_stretches_the_collective() {
+        // same fleet, but device 3 carries twice the balanced load: its
+        // Expert span (and the fleet makespan) must stretch even though
+        // its compute scale and every phase duration are unchanged
+        let c = costs(0.3);
+        let balanced = homogeneous_topo(&c, 4, 4, 0.0);
+        let mut hot = homogeneous_topo(&c, 4, 4, 0.0);
+        hot.expert_load = Some(ExpertLoad { per_device: vec![4, 4, 4, 8],
+                                            total: 20 });
+        let spec = spec_of(MoEKind::Standard { k: 2 }, Strategy::Sequential, 0);
+        let t_bal = spec.build(&balanced).makespan();
+        let t_hot = spec.build(&hot).makespan();
+        assert!(t_hot > t_bal + 1e-9, "hot {t_hot} vs balanced {t_bal}");
+        // and the even-load fleet is bit-exact with no load vector at all
+        let mut even = homogeneous_topo(&c, 4, 4, 0.0);
+        even.expert_load = Some(ExpertLoad { per_device: vec![5; 4], total: 20 });
+        assert_eq!(spec.build(&even).makespan(), t_bal);
     }
 
     #[test]
@@ -848,17 +682,12 @@ mod tests {
         // one shared uplink per node: raising the inter phase raises the
         // makespan even when intra phases stay fixed
         let c = costs(0.2);
-        let cheap = build_pair_schedule_topo(
-            &homogeneous_topo(&c, 4, 2, 0.1),
-            MoEKind::Standard { k: 2 }, Strategy::Sequential, 0).makespan();
-        let pricey = build_pair_schedule_topo(
-            &homogeneous_topo(&c, 4, 2, 1.5),
-            MoEKind::Standard { k: 2 }, Strategy::Sequential, 0).makespan();
+        let spec = spec_of(MoEKind::Standard { k: 2 }, Strategy::Sequential, 0);
+        let cheap = spec.build(&homogeneous_topo(&c, 4, 2, 0.1)).makespan();
+        let pricey = spec.build(&homogeneous_topo(&c, 4, 2, 1.5)).makespan();
         assert!(pricey > cheap + 1e-9, "pricey {pricey} vs cheap {cheap}");
         // and the link rows exist in the spans
-        let spans = build_pair_schedule_topo(
-            &homogeneous_topo(&c, 4, 2, 0.5),
-            MoEKind::Standard { k: 2 }, Strategy::Sequential, 0).run();
+        let spans = spec.build(&homogeneous_topo(&c, 4, 2, 0.5)).run();
         assert!(spans.iter().any(|s| matches!(s.resource, Resource::Link(_))));
     }
 }

@@ -1,0 +1,284 @@
+//! The one entry point for schedule construction: a declarative
+//! [`ScheduleSpec`] built against any [`CostModel`] back end.
+//!
+//! Before this module the construction API had sprawled: `BlockCosts` and
+//! `TopoCosts` each exposed their own accessor families (8+ parallel
+//! phase accessors on the topology side alone) and three positional-arg
+//! topo builders (`build_pair_schedule_topo{,_with,_auto}`) widened with
+//! every new dimension. The redesign follows the separation MoNTA draws
+//! between its traffic model and its pipeline scheduler: everything the
+//! builders need from a cost back end is behind the [`CostModel`] trait's
+//! `phase(dir, scope, idx, k)`-style queries, and everything that selects
+//! *which* schedule to build lives in the [`ScheduleSpec`] value.
+//!
+//! ```no_run
+//! use scmoe::coordinator::costs::{MoEKind, Strategy, TopoCosts};
+//! use scmoe::coordinator::spec::ScheduleSpec;
+//! # fn get_costs() -> TopoCosts { unimplemented!() }
+//! let tc: TopoCosts = get_costs();
+//! let sched = ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, Strategy::Overlap)
+//!     .adaptive()
+//!     .build(&tc);
+//! println!("fleet makespan: {}", sched.makespan());
+//! ```
+//!
+//! Both back ends implement [`CostModel`]:
+//!
+//! - [`BlockCosts`](super::costs::BlockCosts) — the paper's
+//!   single-representative-device model, presented as a degenerate
+//!   one-device fleet;
+//! - [`TopoCosts`](super::costs::TopoCosts) — the topology-aware fleet
+//!   model (per-device compute, per-link phases, optional routed
+//!   [`ChunkSource`](super::costs::ChunkSource) and per-device
+//!   [`ExpertLoad`](crate::moe::ExpertLoad)).
+//!
+//! A one-device `TopoCosts` and the `BlockCosts` it came from produce the
+//! *identical* task graph (same ids, deps, durations) — property-tested in
+//! `rust/tests/simtime_props.rs` and pinned by the golden corpus.
+
+use std::ops::Range;
+
+use super::costs::{BlockCosts, ChunkedA2a, MoEKind, Strategy};
+use super::schedule::{build_from_spec, ChunkPipelining, PairSchedule};
+
+/// Which direction of the All-to-All a phase query refers to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PhaseDir {
+    /// Token dispatch (encode → experts).
+    Dispatch,
+    /// Result combine (experts → decode). Back ends with symmetric
+    /// traffic answer combine queries with the dispatch values.
+    Combine,
+}
+
+/// Which link level of the All-to-All a phase query refers to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PhaseScope {
+    /// Per-device intra-node phase (`idx` = device id, `Comm(idx)`).
+    Intra,
+    /// Per-node inter-node phase (`idx` = node id, `Link(idx)`).
+    Inter,
+}
+
+/// How the expert-computation slot is chosen for overlap strategies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotPolicy {
+    /// Use the given slot (0..=3) verbatim; ignored by non-overlap
+    /// strategies.
+    Fixed(usize),
+    /// Simulate all four candidate slots (§3.2) and keep the argmin of
+    /// the fleet makespan. Requires the shortcut architecture for overlap
+    /// strategies.
+    Adaptive,
+}
+
+/// The unified phase-query interface every schedule builder consumes.
+///
+/// `idx` is a device id for [`PhaseScope::Intra`] queries and a node id
+/// for [`PhaseScope::Inter`] queries; `k` is the routed-expert count the
+/// per-`k = 1` stored volumes are scaled by. Implementations must answer
+/// combine queries with their dispatch values when traffic is symmetric,
+/// so schedules built on symmetric back ends stay bit-exact with the
+/// pre-redesign model.
+pub trait CostModel {
+    /// Number of modeled devices.
+    fn n_devices(&self) -> usize;
+    /// Devices per node (contiguous block node layout).
+    fn devices_per_node(&self) -> usize;
+    /// Number of shared inter-node uplinks the builders must emit `Link`
+    /// tasks for (0 on single-node back ends).
+    fn n_links(&self) -> usize;
+    /// Device `d`'s operator durations (already compute-scaled).
+    fn device(&self, d: usize) -> &BlockCosts;
+    /// One-way All-to-All phase duration (seconds).
+    fn phase(&self, dir: PhaseDir, scope: PhaseScope, idx: usize, k: usize) -> f64;
+    /// Launch-latency (α) component of [`Self::phase`] — the part every
+    /// pipeline chunk pays in full while the byte term divides.
+    fn phase_alpha(&self, dir: PhaseDir, scope: PhaseScope, idx: usize,
+                   k: usize) -> f64;
+    /// Device `d`'s expert-computation time for k routed experts,
+    /// *load-scaled*: back ends carrying an `ExpertLoad` stretch hot
+    /// devices by `load_d / mean_load` (balanced loads are exactly 1.0).
+    fn expert_time(&self, d: usize, k: usize) -> f64;
+    /// Per-chunk phase + expert durations for a `chunks`-way pipelined
+    /// MoE stream (token-true when the back end carries routing
+    /// information; α-true analytic otherwise).
+    fn chunk_phases(&self, k: usize, chunks: usize) -> ChunkedA2a;
+    /// Validate internal consistency; called once per build.
+    fn validate(&self);
+
+    /// Number of nodes covering the modeled devices.
+    fn n_nodes(&self) -> usize {
+        self.n_devices().div_ceil(self.devices_per_node())
+    }
+
+    /// Node owning a device (contiguous block layout).
+    fn node_of(&self, device: usize) -> usize {
+        device / self.devices_per_node()
+    }
+
+    /// Devices belonging to a node (contiguous block layout).
+    fn devices_of(&self, node: usize) -> Range<usize> {
+        let lo = node * self.devices_per_node();
+        lo..(lo + self.devices_per_node()).min(self.n_devices())
+    }
+}
+
+/// Declarative description of one Block-MLP + Block-MoE pair schedule:
+/// what to build (`kind` × `strategy`, chunk count inside the strategy),
+/// where the experts sit (`slot`), and how chunk phases pipeline
+/// (`pipelining`). Construction itself is `spec.build(&cost_model)`.
+///
+/// The optional routing + placement source and the per-device expert
+/// loads are properties of the *cost model* (`TopoCosts::from_routing`
+/// carries both), not of the spec: the same spec builds against any back
+/// end.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScheduleSpec {
+    /// MoE architecture (paper Fig. 6 rows).
+    pub kind: MoEKind,
+    /// Execution strategy, including the pipeline chunk count.
+    pub strategy: Strategy,
+    /// Expert-slot policy for overlap strategies.
+    pub slot: SlotPolicy,
+    /// Chunk pipelining model for `chunks > 1` strategies.
+    pub pipelining: ChunkPipelining,
+}
+
+impl ScheduleSpec {
+    /// Spec with the defaults every report used implicitly: fixed slot 0
+    /// and MoNTA-style staged chunk pipelining.
+    pub fn new(kind: MoEKind, strategy: Strategy) -> ScheduleSpec {
+        ScheduleSpec {
+            kind,
+            strategy,
+            slot: SlotPolicy::Fixed(0),
+            pipelining: ChunkPipelining::Staged,
+        }
+    }
+
+    /// Use a fixed expert slot (0..=3).
+    pub fn with_slot(mut self, slot: usize) -> ScheduleSpec {
+        self.slot = SlotPolicy::Fixed(slot);
+        self
+    }
+
+    /// Choose the expert slot adaptively (argmin over simulated slots).
+    pub fn adaptive(mut self) -> ScheduleSpec {
+        self.slot = SlotPolicy::Adaptive;
+        self
+    }
+
+    /// Override the chunk pipelining model (`PhaseChained` is the
+    /// measured-slower A/B baseline).
+    pub fn with_pipelining(mut self, pipelining: ChunkPipelining) -> ScheduleSpec {
+        self.pipelining = pipelining;
+        self
+    }
+
+    /// Build the schedule against a cost back end. With
+    /// [`SlotPolicy::Adaptive`] and an overlap strategy this simulates all
+    /// four slots first (and asserts the shortcut architecture, which the
+    /// overlap strategies require).
+    pub fn build(&self, cm: &dyn CostModel) -> PairSchedule {
+        cm.validate();
+        let slot = self.resolve_slot(cm);
+        build_from_spec(self, cm, slot)
+    }
+
+    /// The slot [`Self::build`] will use, plus its simulated makespan —
+    /// the §3.2 adaptive search as a first-class query (argmin over the
+    /// four candidate locations; non-overlap strategies pin slot 0).
+    /// Asserts the shortcut architecture for overlap strategies, so this
+    /// and [`Self::build`] with [`SlotPolicy::Adaptive`] cannot disagree
+    /// on legality.
+    pub fn choose_slot(&self, cm: &dyn CostModel) -> (usize, f64) {
+        cm.validate();
+        match self.strategy {
+            Strategy::Overlap | Strategy::OverlapPipelined { .. } => {
+                assert!(matches!(self.kind, MoEKind::ScMoE { .. }),
+                        "overlap strategy requires the shortcut architecture");
+                let mut best = (0usize, f64::INFINITY);
+                for slot in 0..4 {
+                    let t = build_from_spec(self, cm, slot).makespan();
+                    if t < best.1 {
+                        best = (slot, t);
+                    }
+                }
+                best
+            }
+            _ => (0, build_from_spec(self, cm, 0).makespan()),
+        }
+    }
+
+    fn resolve_slot(&self, cm: &dyn CostModel) -> usize {
+        match self.slot {
+            SlotPolicy::Fixed(slot) => slot,
+            SlotPolicy::Adaptive => match self.strategy {
+                // choose_slot asserts the shortcut architecture
+                Strategy::Overlap | Strategy::OverlapPipelined { .. } => {
+                    self.choose_slot(cm).0
+                }
+                _ => 0,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::costs::TopoCosts;
+
+    fn costs() -> BlockCosts {
+        BlockCosts {
+            attn: 1.0, mlp: 0.8, se: 0.8, gate: 0.05, encode: 0.05,
+            decode: 0.05, expert_k1: 0.6, a2a_k1: 0.9,
+            a2a_alpha_k1: 0.05,
+        }
+    }
+
+    #[test]
+    fn both_back_ends_build_identical_graphs() {
+        let c = costs();
+        let tc = TopoCosts::from_block(&c);
+        for strategy in [Strategy::Sequential, Strategy::Pipelined { chunks: 3 }] {
+            let spec = ScheduleSpec::new(MoEKind::Standard { k: 2 }, strategy);
+            let (a, b) = (spec.build(&c).run(), spec.build(&tc).run());
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!((x.start, x.end), (y.start, y.end), "{}", x.label);
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_slot_matches_fixed_argmin() {
+        let c = costs();
+        let spec = ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, Strategy::Overlap);
+        let (slot, best) = spec.choose_slot(&c);
+        assert_eq!(spec.adaptive().build(&c).expert_slot, slot);
+        for s in 0..4 {
+            assert!(spec.with_slot(s).build(&c).makespan() >= best - 1e-12);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "shortcut architecture")]
+    fn adaptive_overlap_rejects_non_shortcut_kinds() {
+        let c = costs();
+        ScheduleSpec::new(MoEKind::Standard { k: 2 }, Strategy::Overlap)
+            .adaptive()
+            .build(&c);
+    }
+
+    #[test]
+    fn phase_queries_fall_back_symmetrically() {
+        let c = costs();
+        let tc = TopoCosts::from_block(&c);
+        assert_eq!(tc.phase(PhaseDir::Combine, PhaseScope::Intra, 0, 2),
+                   tc.phase(PhaseDir::Dispatch, PhaseScope::Intra, 0, 2));
+        assert_eq!(c.phase(PhaseDir::Dispatch, PhaseScope::Intra, 0, 2),
+                   c.a2a(2));
+    }
+}

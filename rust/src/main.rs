@@ -16,7 +16,7 @@ use anyhow::{bail, Result};
 
 use scmoe::cluster::Scenario;
 use scmoe::coordinator::costs::{MoEKind, Strategy};
-use scmoe::coordinator::schedule::build_pair_schedule_auto;
+use scmoe::coordinator::spec::ScheduleSpec;
 use scmoe::coordinator::timeline;
 use scmoe::report;
 use scmoe::runtime::Engine;
@@ -108,7 +108,7 @@ fn cmd_timeline(args: &Args) -> Result<()> {
         other => bail!("unknown strategy {other}"),
     };
     let costs = report::efficiency::proxy_costs(sc);
-    let sched = build_pair_schedule_auto(&costs, kind, strategy);
+    let sched = ScheduleSpec::new(kind, strategy).adaptive().build(&costs);
     println!("{} / {} / {} (expert slot {})", sc.label(), kind.label(),
              sched.strategy.label(), sched.expert_slot);
     print!("{}", timeline::render(&sched.run(), args.usize_or("width", 110)));

@@ -14,5 +14,5 @@ pub mod placement;
 pub mod router;
 
 pub use dispatch::{decode, decode_into, encode, encode_into};
-pub use placement::Placement;
+pub use placement::{ExpertLoad, Placement};
 pub use router::{Route, RoutingTable};

@@ -142,6 +142,59 @@ impl Placement {
     }
 }
 
+/// Per-device routed *compute* load: how many kept token copies each
+/// device's experts process under a given routing × placement. This is
+/// the quantity that stretches a hot device's Expert span in the
+/// scheduling simulator (`coordinator::TopoCosts` carries one): the
+/// pre-load model charged every device the balanced capacity batch, so
+/// comm-balanced-but-compute-overloaded layouts scored as fast as truly
+/// balanced ones.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExpertLoad {
+    /// Kept token copies processed by each device (`Σ load[e]` over the
+    /// experts placed on it).
+    pub per_device: Vec<usize>,
+    /// Sum of `per_device` — equals `RoutingTable::kept()` when derived
+    /// from a routing table.
+    pub total: usize,
+}
+
+impl ExpertLoad {
+    /// Derive the per-device load from `RoutingTable::load` (kept token
+    /// copies per expert) and the expert→device map.
+    pub fn from_routing(rt: &RoutingTable, placement: &Placement) -> ExpertLoad {
+        assert_eq!(placement.n_experts, rt.n_experts,
+                   "placement expert count must match the routing table");
+        let mut per_device = vec![0usize; placement.n_devices];
+        for (e, &l) in rt.load.iter().enumerate() {
+            per_device[placement.device_of(e)] += l;
+        }
+        let total = per_device.iter().sum();
+        ExpertLoad { per_device, total }
+    }
+
+    /// Device `d`'s load relative to the balanced mean (`load_d / mean`).
+    /// Exactly 1.0 for balanced loads — integer arithmetic cancels before
+    /// any rounding — so balanced routing reduces bit-exactly to the
+    /// unscaled expert-compute model. 0.0 when no route was kept at all.
+    pub fn scale(&self, d: usize) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.per_device[d] as f64 * self.per_device.len() as f64
+            / self.total as f64
+    }
+
+    /// Max device load over the mean (1.0 = perfectly balanced).
+    pub fn imbalance(&self) -> f64 {
+        if self.total == 0 {
+            return 1.0;
+        }
+        let mean = self.total as f64 / self.per_device.len() as f64;
+        *self.per_device.iter().max().unwrap() as f64 / mean
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -206,5 +259,38 @@ mod tests {
             (0..4).map(|e| p.device_of(e)).collect::<Vec<_>>(),
             vec![0, 3, 1, 2]
         );
+    }
+
+    #[test]
+    fn expert_load_counts_kept_copies_per_device() {
+        // the dyadic routed corpus table: per-expert loads 4/3/4/5
+        let indices: Vec<i32> =
+            vec![0, 2, 0, 2, 2, 0, 0, 2, 1, 3, 3, 1, 3, 1, 3, 3];
+        let weights = vec![1.0f32; 16];
+        let rt = RoutingTable::build(&indices, &weights, 16, 1, 4, 16);
+        let load = ExpertLoad::from_routing(&rt, &Placement::new(4, 4));
+        assert_eq!(load.per_device, vec![4, 3, 4, 5]);
+        assert_eq!(load.total, 16);
+        assert_eq!(load.scale(0), 1.0);
+        assert_eq!(load.scale(1), 0.75);
+        assert_eq!(load.scale(3), 1.25);
+        assert!((load.imbalance() - 1.25).abs() < 1e-12);
+        // skewed pack-2 layout concentrates everything on devices 0/1
+        let skew =
+            ExpertLoad::from_routing(&rt, &Placement::imbalance_skewed(4, 4, 2));
+        assert_eq!(skew.per_device, vec![7, 9, 0, 0]);
+        assert_eq!(skew.scale(2), 0.0);
+    }
+
+    #[test]
+    fn balanced_expert_load_scale_is_exactly_one() {
+        let indices: Vec<i32> = (0..16).map(|t| (t % 4) as i32).collect();
+        let weights = vec![1.0f32; 16];
+        let rt = RoutingTable::build(&indices, &weights, 16, 1, 4, 16);
+        let load = ExpertLoad::from_routing(&rt, &Placement::new(4, 4));
+        for d in 0..4 {
+            assert_eq!(load.scale(d), 1.0); // bit-exact, not a tolerance
+        }
+        assert_eq!(load.imbalance(), 1.0);
     }
 }

@@ -4,12 +4,10 @@
 use anyhow::Result;
 
 use crate::cluster::{Scenario, Topology};
-use crate::coordinator::adaptive::{choose_expert_slot_topo, overlap_fraction};
+use crate::coordinator::adaptive::overlap_fraction;
 use crate::coordinator::costs::{BlockCosts, ComputeCosts, MoEKind, Strategy, TopoCosts};
-use crate::coordinator::schedule::{
-    backbone_time, build_pair_schedule_auto, build_pair_schedule_topo,
-    build_pair_schedule_topo_with, ChunkPipelining,
-};
+use crate::coordinator::schedule::{backbone_time, ChunkPipelining};
+use crate::coordinator::spec::ScheduleSpec;
 use crate::coordinator::timeline;
 use crate::moe::{Placement, RoutingTable};
 use crate::util::cli::Args;
@@ -172,7 +170,7 @@ pub fn fig6(args: &Args) -> Result<()> {
          Strategy::OverlapPipelined { chunks: 2 }),
     ];
     for (label, kind, strat) in rows {
-        let s = build_pair_schedule_auto(&c, kind, strat);
+        let s = ScheduleSpec::new(kind, strat).adaptive().build(&c);
         println!("\n--- {label} ---");
         print!("{}", timeline::render(&s.run(), width));
     }
@@ -194,10 +192,12 @@ pub fn fig8(_args: &Args) -> Result<()> {
     for sc in Scenario::all() {
         let c = proxy_costs(sc);
         println!("\n--- {} ---", sc.label());
-        let base = build_pair_schedule_auto(&c, MoEKind::Standard { k: 2 },
-                                            Strategy::Sequential).makespan();
+        let base = ScheduleSpec::new(MoEKind::Standard { k: 2 },
+                                     Strategy::Sequential)
+            .build(&c)
+            .makespan();
         for (label, kind, strat) in &configs {
-            let t = build_pair_schedule_auto(&c, *kind, *strat).makespan();
+            let t = ScheduleSpec::new(*kind, *strat).adaptive().build(&c).makespan();
             let bar_len = (40.0 * t / base) as usize;
             println!("{:<10} {:>10}  {:>5.2}x  {}",
                      label, fmt_secs(t), base / t, "#".repeat(bar_len));
@@ -224,15 +224,18 @@ pub fn topo_report(args: &Args) -> Result<()> {
                  "preset", "dev", "nodes", "top2-seq", "scmoe-ovl", "speedup", "slot");
         for sc in Scenario::extended() {
             let tc = costs_of(sc);
-            let base = build_pair_schedule_topo(
-                &tc, MoEKind::Standard { k: 2 }, Strategy::Sequential, 0).makespan();
+            let base = ScheduleSpec::new(MoEKind::Standard { k: 2 },
+                                         Strategy::Sequential)
+                .build(&tc)
+                .makespan();
             let kind = MoEKind::ScMoE { k: 1 };
-            let (slot, overlap) = choose_expert_slot_topo(&tc, kind, Strategy::Overlap);
+            let spec = ScheduleSpec::new(kind, Strategy::Overlap);
+            let (slot, overlap) = spec.choose_slot(&tc);
             println!("{:<18} {:>4} {:>6} {:>12} {:>12} {:>7.2}x {:>6}",
                      sc.label(), tc.n_devices(), tc.n_nodes(),
                      fmt_secs(base), fmt_secs(overlap), base / overlap, slot + 1);
             if width > 0 {
-                let s = build_pair_schedule_topo(&tc, kind, Strategy::Overlap, slot);
+                let s = spec.with_slot(slot).build(&tc);
                 print!("{}", timeline::render(&s.run(), width));
             }
         }
@@ -241,6 +244,7 @@ pub fn topo_report(args: &Args) -> Result<()> {
     println!("slot = adaptive expert location (1..4, Eq. 11) chosen per topology");
 
     routed_placement_study(args);
+    load_skew_study(args);
     chunk_sweep_study(args);
     Ok(())
 }
@@ -264,16 +268,20 @@ fn chunk_sweep_study(args: &Args) {
              "ovl-chained", "slot");
     let mut chunks = 1usize;
     while chunks <= max_chunks {
-        let pipe = Strategy::Pipelined { chunks };
-        let staged = build_pair_schedule_topo(
-            &tc, MoEKind::Standard { k: 2 }, pipe, 0).makespan();
-        let chained = build_pair_schedule_topo_with(
-            &tc, MoEKind::Standard { k: 2 }, pipe, 0,
-            ChunkPipelining::PhaseChained).makespan();
-        let ostrat = Strategy::OverlapPipelined { chunks };
-        let (slot, ovl_staged) = choose_expert_slot_topo(&tc, kind, ostrat);
-        let ovl_chained = build_pair_schedule_topo_with(
-            &tc, kind, ostrat, slot, ChunkPipelining::PhaseChained).makespan();
+        let pipe = ScheduleSpec::new(MoEKind::Standard { k: 2 },
+                                     Strategy::Pipelined { chunks });
+        let staged = pipe.build(&tc).makespan();
+        let chained = pipe
+            .with_pipelining(ChunkPipelining::PhaseChained)
+            .build(&tc)
+            .makespan();
+        let ospec = ScheduleSpec::new(kind, Strategy::OverlapPipelined { chunks });
+        let (slot, ovl_staged) = ospec.choose_slot(&tc);
+        let ovl_chained = ospec
+            .with_slot(slot)
+            .with_pipelining(ChunkPipelining::PhaseChained)
+            .build(&tc)
+            .makespan();
         println!("{:<7} {:>12} {:>13} {:>12} {:>12} {:>6}",
                  chunks, fmt_secs(staged), fmt_secs(chained),
                  fmt_secs(ovl_staged), fmt_secs(ovl_chained), slot + 1);
@@ -346,9 +354,11 @@ fn routed_placement_study(args: &Args) {
         let inter_max = tc.a2a_inter_k1.iter()
             .chain(tc.a2a_inter_combine_k1.iter())
             .fold(0.0f64, |m, &t| m.max(t));
-        let seq = build_pair_schedule_topo(tc, kind, Strategy::Sequential, 0)
+        let seq = ScheduleSpec::new(kind, Strategy::Sequential)
+            .build(tc)
             .makespan();
-        let (slot, ovl) = choose_expert_slot_topo(tc, kind, Strategy::Overlap);
+        let (slot, ovl) =
+            ScheduleSpec::new(kind, Strategy::Overlap).choose_slot(tc);
         println!("{:<26} {:>11} {:>11} {:>12} {:>12} {:>6}",
                  name, fmt_secs(intra_max), fmt_secs(inter_max),
                  fmt_secs(seq), fmt_secs(ovl), slot + 1);
@@ -361,6 +371,93 @@ fn routed_placement_study(args: &Args) {
               compare the routed rows");
     println!("      against each other for placement-only effects \
               (seq + phase columns)");
+}
+
+/// The load-skew study's `(label, costs)` rows on one topology (GPT3-XL
+/// payload, node-affine routing from `seed`): the balanced block layout
+/// against imbalance-skewed layouts packing 2 and 4 experts per device.
+/// Shared by `scmoe report topo` and `timeline_explorer --skew` so the
+/// table and the rendered timelines can never drift apart.
+pub fn load_skew_study_rows(topo: &Topology, tokens_per_device: usize,
+                            seed: u64) -> Vec<(&'static str, TopoCosts)> {
+    let base = xl_compute_costs();
+    let token_bytes = 8192;
+    let rt = node_affine_routing(topo.n_devices, topo.devices_per_node,
+                                 topo.n_devices, tokens_per_device, 1, seed);
+    vec![
+        ("routed + block",
+         TopoCosts::from_routing(&base, topo, &rt,
+                                 &Placement::new(topo.n_devices, topo.n_devices),
+                                 token_bytes)),
+        ("routed + skewed (2/dev)",
+         TopoCosts::from_routing(&base, topo, &rt,
+                                 &Placement::imbalance_skewed(
+                                     topo.n_devices, topo.n_devices, 2),
+                                 token_bytes)),
+        ("routed + skewed (4/dev)",
+         TopoCosts::from_routing(&base, topo, &rt,
+                                 &Placement::imbalance_skewed(
+                                     topo.n_devices, topo.n_devices, 4),
+                                 token_bytes)),
+    ]
+}
+
+/// Load-skew study on the 4-node IB preset (GPT3-XL payload): the same
+/// node-affine routing priced with the per-device `ExpertLoad` scaling
+/// on ("load-true") and off ("naive", the pre-redesign model that charged
+/// every device the balanced capacity batch). A skewed placement keeps
+/// every source device's *send* phases roughly balanced while piling all
+/// expert compute onto the loaded device prefix — under the naive model
+/// such comm-balanced-but-compute-overloaded layouts scored nearly as
+/// fast as truly balanced ones; load-true pricing stretches the hot
+/// devices' Expert spans (and with them the fleet barrier), which also
+/// reorders seq-vs-overlap comparisons across placements.
+fn load_skew_study(args: &Args) {
+    let sc = Scenario::FourNodeA800IBx32;
+    let topo = sc.topology();
+    let kind = MoEKind::ScMoE { k: 1 };
+    let seed = args.u64_or("seed", 7);
+    let tokens_per_device = args.usize_or("tokens", 640);
+
+    let rows = load_skew_study_rows(&topo, tokens_per_device, seed);
+    println!("\n== load-skew study ({}, GPT3-XL payload, seed {seed}) ==",
+             sc.label());
+    println!("{:<24} {:>8} {:>11} {:>11} {:>11} {:>11}",
+             "placement", "load-imb", "seq-naive", "seq-true", "ovl-naive",
+             "ovl-true");
+    let mut makespans = Vec::new();
+    for (name, tc) in &rows {
+        let mut naive = tc.clone();
+        naive.expert_load = None;
+        let imb = tc.expert_load.as_ref().map_or(1.0, |l| l.imbalance());
+        let seq = ScheduleSpec::new(kind, Strategy::Sequential);
+        let ovl = ScheduleSpec::new(kind, Strategy::Overlap);
+        let seq_n = seq.build(&naive).makespan();
+        let seq_t = seq.build(tc).makespan();
+        let (_, ovl_n) = ovl.choose_slot(&naive);
+        let (_, ovl_t) = ovl.choose_slot(tc);
+        println!("{:<24} {:>7.2}x {:>11} {:>11} {:>11} {:>11}",
+                 name, imb, fmt_secs(seq_n), fmt_secs(seq_t),
+                 fmt_secs(ovl_n), fmt_secs(ovl_t));
+        makespans.push((seq_n, seq_t, ovl_n, ovl_t));
+    }
+    let (block_seq_n, block_seq_t, ..) = makespans[0];
+    let (.., skew_ovl_n, skew_ovl_t) = makespans[1];
+    println!("naive = pre-load model (every device charged the balanced \
+              capacity batch)");
+    // data-driven callout: print what the numbers actually say for this
+    // seed/token count (the default seed-7/640-token flip is pinned in
+    // rust/tests/load_scaling.rs)
+    let rel = |a: f64, b: f64| if a < b { "<" } else { ">=" };
+    println!("reordering probe, skewed(2/dev) overlap vs block sequential: \
+              naive {} {} {}; load-true {} {} {}",
+             fmt_secs(skew_ovl_n), rel(skew_ovl_n, block_seq_n),
+             fmt_secs(block_seq_n), fmt_secs(skew_ovl_t),
+             rel(skew_ovl_t, block_seq_t), fmt_secs(block_seq_t));
+    if skew_ovl_n < block_seq_n && skew_ovl_t > block_seq_t {
+        println!("  -> the comparison flips: overloading half the fleet no \
+                  longer wins once loads are priced");
+    }
 }
 
 /// Speedup columns of Tables 2 (PCIe), 3 (NVLink) and 4 (NVLink, more
@@ -383,15 +480,16 @@ pub fn speedup_tables(_args: &Args) -> Result<()> {
             _ => xl_proxy_costs(sc),
         };
         let c_tr = train_costs(&c_inf);
-        let base_inf = build_pair_schedule_auto(&c_inf, MoEKind::Standard { k: 2 },
-                                                Strategy::Sequential).makespan();
-        let base_tr = build_pair_schedule_auto(&c_tr, MoEKind::Standard { k: 2 },
-                                               Strategy::Sequential).makespan();
+        let base = ScheduleSpec::new(MoEKind::Standard { k: 2 },
+                                     Strategy::Sequential);
+        let base_inf = base.build(&c_inf).makespan();
+        let base_tr = base.build(&c_tr).makespan();
         println!("\n== {table} — {} ==", sc.label());
         println!("{:<22} {:>12} {:>12}", "model", "train", "inference");
         for (label, kind, strat) in &rows {
-            let ti = build_pair_schedule_auto(&c_inf, *kind, *strat).makespan();
-            let tt = build_pair_schedule_auto(&c_tr, *kind, *strat).makespan();
+            let spec = ScheduleSpec::new(*kind, *strat).adaptive();
+            let ti = spec.build(&c_inf).makespan();
+            let tt = spec.build(&c_tr).makespan();
             println!("{:<22} {:>11.2}x {:>11.2}x", label, base_tr / tt, base_inf / ti);
         }
         let _ = backbone_time(&c_inf, MoEKind::ScMoE { k: 1 });

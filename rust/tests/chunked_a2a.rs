@@ -12,9 +12,8 @@
 
 use scmoe::cluster::{a2a_chunk_time, Scenario};
 use scmoe::coordinator::costs::{MoEKind, Strategy, TopoCosts};
-use scmoe::coordinator::schedule::{
-    build_pair_schedule_topo, build_pair_schedule_topo_with, ChunkPipelining,
-};
+use scmoe::coordinator::schedule::ChunkPipelining;
+use scmoe::coordinator::spec::{CostModel, PhaseDir, PhaseScope, ScheduleSpec};
 use scmoe::moe::Placement;
 use scmoe::report::efficiency::{
     node_affine_routing, proxy_costs, topo_proxy_costs, xl_proxy_costs,
@@ -34,20 +33,26 @@ fn chunked_phase_totals_exceed_unchunked_by_alpha_per_extra_chunk() {
                 let extra = (chunks - 1) as f64;
                 for d in 0..tc.n_devices() {
                     let total: f64 = (0..chunks).map(|i| ca.disp_intra[i][d]).sum();
-                    let expect = tc.a2a_intra(d, k)
-                        + extra * tc.a2a_intra_alpha(d, k);
+                    let expect =
+                        tc.phase(PhaseDir::Dispatch, PhaseScope::Intra, d, k)
+                        + extra * tc.phase_alpha(PhaseDir::Dispatch,
+                                                 PhaseScope::Intra, d, k);
                     assert!((total - expect).abs() < 1e-12,
                             "{} dev {d} x{chunks}: {total} vs {expect}",
                             sc.label());
                     let ctotal: f64 = (0..chunks).map(|i| ca.comb_intra[i][d]).sum();
-                    let cexpect = tc.a2a_intra_combine(d, k)
-                        + extra * tc.a2a_intra_combine_alpha(d, k);
+                    let cexpect =
+                        tc.phase(PhaseDir::Combine, PhaseScope::Intra, d, k)
+                        + extra * tc.phase_alpha(PhaseDir::Combine,
+                                                 PhaseScope::Intra, d, k);
                     assert!((ctotal - cexpect).abs() < 1e-12);
                 }
                 for nd in 0..tc.a2a_inter_k1.len() {
                     let total: f64 = (0..chunks).map(|i| ca.disp_inter[i][nd]).sum();
-                    let expect = tc.a2a_inter(nd, k)
-                        + extra * tc.a2a_inter_alpha(nd, k);
+                    let expect =
+                        tc.phase(PhaseDir::Dispatch, PhaseScope::Inter, nd, k)
+                        + extra * tc.phase_alpha(PhaseDir::Dispatch,
+                                                 PhaseScope::Inter, nd, k);
                     assert!((total - expect).abs() < 1e-12,
                             "{} node {nd} x{chunks}: {total} vs {expect}",
                             sc.label());
@@ -94,10 +99,13 @@ fn single_chunk_schedules_ignore_alpha_and_staging() {
         (MoEKind::Standard { k: 2 }, Strategy::Pipelined { chunks: 1 }, 0),
         (MoEKind::ScMoE { k: 1 }, Strategy::OverlapPipelined { chunks: 1 }, 2),
     ] {
-        let a = build_pair_schedule_topo(&tc, kind, strat, slot).run();
-        let b = build_pair_schedule_topo(&no_alpha, kind, strat, slot).run();
-        let c = build_pair_schedule_topo_with(
-            &tc, kind, strat, slot, ChunkPipelining::PhaseChained).run();
+        let spec = ScheduleSpec::new(kind, strat).with_slot(slot);
+        let a = spec.build(&tc).run();
+        let b = spec.build(&no_alpha).run();
+        let c = spec
+            .with_pipelining(ChunkPipelining::PhaseChained)
+            .build(&tc)
+            .run();
         assert_eq!(a.len(), b.len());
         for ((x, y), z) in a.iter().zip(&b).zip(&c) {
             assert_eq!(x.start, y.start, "{}: α leaked into chunks=1", x.label);
@@ -108,11 +116,15 @@ fn single_chunk_schedules_ignore_alpha_and_staging() {
         }
     }
     // OverlapPipelined{1} builds the identical graph as Overlap
-    let ovl = build_pair_schedule_topo(
-        &tc, MoEKind::ScMoE { k: 1 }, Strategy::Overlap, 2).run();
-    let op1 = build_pair_schedule_topo(
-        &tc, MoEKind::ScMoE { k: 1 },
-        Strategy::OverlapPipelined { chunks: 1 }, 2).run();
+    let ovl = ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, Strategy::Overlap)
+        .with_slot(2)
+        .build(&tc)
+        .run();
+    let op1 = ScheduleSpec::new(MoEKind::ScMoE { k: 1 },
+                                Strategy::OverlapPipelined { chunks: 1 })
+        .with_slot(2)
+        .build(&tc)
+        .run();
     assert_eq!(ovl.len(), op1.len());
     for (x, y) in ovl.iter().zip(&op1) {
         assert_eq!((x.start, x.end), (y.start, y.end), "{}", x.label);
@@ -179,8 +191,9 @@ fn token_true_chunks_expose_routing_skew() {
     assert!(ca.comb_inter[0][1] > 0.0);
     assert_eq!(ca.comb_inter[1][1], 0.0);
     // and the built schedule differs from the evenly-divided model
-    let staged = build_pair_schedule_topo(
-        &tc, MoEKind::ScMoE { k: 1 },
-        Strategy::Pipelined { chunks: 2 }, 0).makespan();
+    let staged = ScheduleSpec::new(MoEKind::ScMoE { k: 1 },
+                                   Strategy::Pipelined { chunks: 2 })
+        .build(&tc)
+        .makespan();
     assert!(staged > 0.0);
 }

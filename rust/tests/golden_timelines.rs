@@ -9,10 +9,8 @@
 
 use scmoe::cluster::{LinkModel, Topology};
 use scmoe::coordinator::costs::{BlockCosts, ComputeCosts, MoEKind, Strategy, TopoCosts};
-use scmoe::coordinator::schedule::{
-    build_pair_schedule, build_pair_schedule_topo, build_pair_schedule_topo_with,
-    ChunkPipelining, PairSchedule,
-};
+use scmoe::coordinator::schedule::{build_pair_schedule, ChunkPipelining, PairSchedule};
+use scmoe::coordinator::spec::ScheduleSpec;
 use scmoe::moe::{Placement, RoutingTable};
 use scmoe::simtime::Resource;
 
@@ -56,6 +54,7 @@ fn dyadic_fleet() -> TopoCosts {
         a2a_intra_combine_alpha_k1: Vec::new(),
         a2a_inter_combine_alpha_k1: Vec::new(),
         chunk_source: None,
+        expert_load: None,
         devices_per_node: 2,
     }
 }
@@ -166,27 +165,32 @@ fn generate_lines() -> Vec<String> {
     let tf = dyadic_fleet();
     lines.push(render_line(
         "fleet:Top2/seq",
-        &build_pair_schedule_topo(&tf, MoEKind::Standard { k: 2 },
-                                  Strategy::Sequential, 0)));
+        &ScheduleSpec::new(MoEKind::Standard { k: 2 }, Strategy::Sequential)
+            .build(&tf)));
     lines.push(render_line(
         "fleet:Top2/pipe2",
-        &build_pair_schedule_topo(&tf, MoEKind::Standard { k: 2 },
-                                  Strategy::Pipelined { chunks: 2 }, 0)));
+        &ScheduleSpec::new(MoEKind::Standard { k: 2 },
+                           Strategy::Pipelined { chunks: 2 })
+            .build(&tf)));
     lines.push(render_line(
         "fleet:Top2/pipe2-chained",
-        &build_pair_schedule_topo_with(&tf, MoEKind::Standard { k: 2 },
-                                       Strategy::Pipelined { chunks: 2 }, 0,
-                                       ChunkPipelining::PhaseChained)));
+        &ScheduleSpec::new(MoEKind::Standard { k: 2 },
+                           Strategy::Pipelined { chunks: 2 })
+            .with_pipelining(ChunkPipelining::PhaseChained)
+            .build(&tf)));
     for slot in 0..4 {
         lines.push(render_line(
             &format!("fleet:ScMoE/overlap-s{slot}"),
-            &build_pair_schedule_topo(&tf, MoEKind::ScMoE { k: 1 },
-                                      Strategy::Overlap, slot)));
+            &ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, Strategy::Overlap)
+                .with_slot(slot)
+                .build(&tf)));
     }
     lines.push(render_line(
         "fleet:ScMoE/overlap+pipe2-s2",
-        &build_pair_schedule_topo(&tf, MoEKind::ScMoE { k: 1 },
-                                  Strategy::OverlapPipelined { chunks: 2 }, 2)));
+        &ScheduleSpec::new(MoEKind::ScMoE { k: 1 },
+                           Strategy::OverlapPipelined { chunks: 2 })
+            .with_slot(2)
+            .build(&tf)));
 
     let rt = routed_table();
     for (name, placement) in [
@@ -197,17 +201,26 @@ fn generate_lines() -> Vec<String> {
         let tc = routed_fleet(&rt, &placement);
         lines.push(render_line(
             &format!("routed:{name}/seq"),
-            &build_pair_schedule_topo(&tc, MoEKind::ScMoE { k: 1 },
-                                      Strategy::Sequential, 0)));
+            &ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, Strategy::Sequential)
+                .build(&tc)));
         lines.push(render_line(
             &format!("routed:{name}/overlap-s2"),
-            &build_pair_schedule_topo(&tc, MoEKind::ScMoE { k: 1 },
-                                      Strategy::Overlap, 2)));
+            &ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, Strategy::Overlap)
+                .with_slot(2)
+                .build(&tc)));
         lines.push(render_line(
             &format!("routed:{name}/overlap+pipe2-s2"),
-            &build_pair_schedule_topo(&tc, MoEKind::ScMoE { k: 1 },
-                                      Strategy::OverlapPipelined { chunks: 2 },
-                                      2)));
+            &ScheduleSpec::new(MoEKind::ScMoE { k: 1 },
+                               Strategy::OverlapPipelined { chunks: 2 })
+                .with_slot(2)
+                .build(&tc)));
+        // token-true chunked expert compute: each chunk's Expert span is
+        // proportional to its own kept copies on that device
+        lines.push(render_line(
+            &format!("routed:{name}/pipe2"),
+            &ScheduleSpec::new(MoEKind::ScMoE { k: 1 },
+                               Strategy::Pipelined { chunks: 2 })
+                .build(&tc)));
     }
     lines
 }
@@ -250,6 +263,7 @@ fn golden_file_covers_every_kind_and_strategy() {
         "/overlap+pipe2-s0", "fleet:", "fleet:Top2/pipe2-chained",
         "fleet:ScMoE/overlap+pipe2-s2", "routed:block/", "routed:affinity/",
         "routed:skewed/", "routed:skewed/overlap+pipe2-s2",
+        "routed:skewed/pipe2",
     ] {
         assert!(GOLDEN.contains(needle), "golden corpus is missing {needle}");
     }

@@ -13,7 +13,7 @@
 use scmoe::cluster::{a2a_transpose, Scenario};
 use scmoe::coordinator::adaptive::choose_expert_slot_topo;
 use scmoe::coordinator::costs::{ComputeCosts, MoEKind, Strategy, TopoCosts};
-use scmoe::coordinator::schedule::build_pair_schedule_topo;
+use scmoe::coordinator::spec::ScheduleSpec;
 use scmoe::moe::{Placement, RoutingTable};
 use scmoe::report::efficiency::{node_affine_routing, xl_compute_costs};
 use scmoe::util::propcheck::{check, gen};
@@ -67,17 +67,15 @@ fn prop_affinity_packing_zeroes_inter_phases_and_beats_remote() {
                                tc_a.a2a_inter_k1, tc_a.a2a_inter_combine_k1));
         }
         let kind = MoEKind::ScMoE { k };
-        let seq_a = build_pair_schedule_topo(
-            &tc_a, kind, Strategy::Sequential, 0).makespan();
-        let seq_r = build_pair_schedule_topo(
-            &tc_r, kind, Strategy::Sequential, 0).makespan();
+        let seq = ScheduleSpec::new(kind, Strategy::Sequential);
+        let seq_a = seq.build(&tc_a).makespan();
+        let seq_r = seq.build(&tc_r).makespan();
         if seq_a >= seq_r {
             return Err(format!("sequential: local {seq_a} !< remote {seq_r}"));
         }
-        let ovl_a = build_pair_schedule_topo(
-            &tc_a, kind, Strategy::Overlap, 2).makespan();
-        let ovl_r = build_pair_schedule_topo(
-            &tc_r, kind, Strategy::Overlap, 2).makespan();
+        let ovl = ScheduleSpec::new(kind, Strategy::Overlap).with_slot(2);
+        let ovl_a = ovl.build(&tc_a).makespan();
+        let ovl_r = ovl.build(&tc_r).makespan();
         if ovl_a >= ovl_r {
             return Err(format!("overlap: local {ovl_a} !< remote {ovl_r}"));
         }
@@ -120,10 +118,9 @@ fn affinity_packed_overlap_beats_uniform_routing_on_4node_ib() {
     assert!(ovl_routed < ovl_uniform,
             "affinity overlap {ovl_routed} must beat uniform {ovl_uniform}");
 
-    let seq_uniform = build_pair_schedule_topo(
-        &uniform, kind, Strategy::Sequential, 0).makespan();
-    let seq_routed = build_pair_schedule_topo(
-        &routed, kind, Strategy::Sequential, 0).makespan();
+    let seq = ScheduleSpec::new(kind, Strategy::Sequential);
+    let seq_uniform = seq.build(&uniform).makespan();
+    let seq_routed = seq.build(&routed).makespan();
     assert!(seq_routed < seq_uniform,
             "affinity sequential {seq_routed} must beat uniform {seq_uniform}");
 
@@ -133,8 +130,7 @@ fn affinity_packed_overlap_beats_uniform_routing_on_4node_ib() {
                                         &Placement::new(32, 32), 8192);
     assert!(block.a2a_inter_k1.iter().any(|&t| t > 0.0),
             "block layout must keep some uplink traffic");
-    let seq_block = build_pair_schedule_topo(
-        &block, kind, Strategy::Sequential, 0).makespan();
+    let seq_block = seq.build(&block).makespan();
     assert!(seq_routed < seq_block,
             "placement-only: affinity sequential {seq_routed} must beat \
              routed-block {seq_block}");
@@ -191,10 +187,9 @@ fn skewed_placement_concentrates_and_slows_the_fleet() {
         }
     }
     let kind = MoEKind::ScMoE { k: 1 };
-    let seq_block = build_pair_schedule_topo(
-        &block, kind, Strategy::Sequential, 0).makespan();
-    let seq_skew = build_pair_schedule_topo(
-        &skew, kind, Strategy::Sequential, 0).makespan();
+    let seq = ScheduleSpec::new(kind, Strategy::Sequential);
+    let seq_block = seq.build(&block).makespan();
+    let seq_skew = seq.build(&skew).makespan();
     assert!(seq_skew >= seq_block,
             "skewed {seq_skew} should not beat block {seq_block}");
 }

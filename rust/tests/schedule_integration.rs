@@ -10,6 +10,7 @@ use scmoe::coordinator::adaptive::overlap_fraction;
 use scmoe::coordinator::costs::{MoEKind, Strategy};
 use scmoe::coordinator::exec::{run_pair_real, Cluster};
 use scmoe::coordinator::schedule::build_pair_schedule_auto;
+use scmoe::coordinator::spec::ScheduleSpec;
 use scmoe::report::efficiency::{gpt_proxy_costs, proxy_costs, train_costs};
 use scmoe::runtime::{Engine, HostTensor};
 
@@ -120,8 +121,12 @@ fn real_distributed_pair_matches_fused_oracle_and_overlap_wins() {
 
     // link injected at a scale where comm dominates a backbone op
     let link = LinkModel::new(0.0, 50e6); // slow on purpose
-    let (y_overlap, _) = run_pair_real(&set, &cluster, &xt, k, true, link, 1.0, 2).unwrap();
-    let (y_seq, _) = run_pair_real(&set, &cluster, &xt, k, false, link, 1.0, 2).unwrap();
+    let ovl_spec = ScheduleSpec::new(MoEKind::ScMoE { k }, Strategy::Overlap);
+    let seq_spec = ScheduleSpec::new(MoEKind::ScMoE { k }, Strategy::Sequential);
+    let (y_overlap, _) =
+        run_pair_real(&set, &cluster, &xt, &ovl_spec, link, 1.0, 2).unwrap();
+    let (y_seq, _) =
+        run_pair_real(&set, &cluster, &xt, &seq_spec, link, 1.0, 2).unwrap();
 
     // numerics: both strategies produce identical results
     for (a, b) in y_overlap.iter().zip(&y_seq) {
@@ -142,14 +147,14 @@ fn real_distributed_pair_matches_fused_oracle_and_overlap_wins() {
     assert!(max_err < 1e-4, "distributed != fused oracle: {max_err}");
 
     // wall-clock: overlap hides the injected comm behind the backbone
-    let time = |overlap: bool| {
+    let time = |spec: &ScheduleSpec| {
         let t0 = std::time::Instant::now();
-        run_pair_real(&set, &cluster, &xt, k, overlap, link, 1.0, 2).unwrap();
+        run_pair_real(&set, &cluster, &xt, spec, link, 1.0, 2).unwrap();
         t0.elapsed().as_secs_f64()
     };
     // median of 3
-    let mut seq_t: Vec<f64> = (0..3).map(|_| time(false)).collect();
-    let mut ovl_t: Vec<f64> = (0..3).map(|_| time(true)).collect();
+    let mut seq_t: Vec<f64> = (0..3).map(|_| time(&seq_spec)).collect();
+    let mut ovl_t: Vec<f64> = (0..3).map(|_| time(&ovl_spec)).collect();
     seq_t.sort_by(|a, b| a.partial_cmp(b).unwrap());
     ovl_t.sort_by(|a, b| a.partial_cmp(b).unwrap());
     assert!(ovl_t[1] < seq_t[1],

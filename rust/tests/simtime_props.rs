@@ -12,7 +12,8 @@
 //!   makespan — not within a tolerance).
 
 use scmoe::coordinator::costs::{BlockCosts, MoEKind, Strategy, TopoCosts};
-use scmoe::coordinator::schedule::{build_pair_schedule, build_pair_schedule_topo};
+use scmoe::coordinator::schedule::build_pair_schedule;
+use scmoe::coordinator::spec::ScheduleSpec;
 use scmoe::simtime::{Resource, Sim};
 use scmoe::util::propcheck::{check, gen};
 use scmoe::util::rng::Rng;
@@ -198,6 +199,7 @@ fn prop_topo_fleet_makespan_monotone() {
             a2a_intra_combine_alpha_k1: Vec::new(),
             a2a_inter_combine_alpha_k1: Vec::new(),
             chunk_source: None,
+            expert_load: None,
             devices_per_node: 2,
         };
         let mut bumped = base.clone();
@@ -210,8 +212,9 @@ fn prop_topo_fleet_makespan_monotone() {
             bumped.a2a_intra_alpha_k1[*dev] += *delta;
         }
         for (kind, strategy, slot) in monotone_configs() {
-            let before = build_pair_schedule_topo(&base, kind, strategy, slot).makespan();
-            let after = build_pair_schedule_topo(&bumped, kind, strategy, slot).makespan();
+            let spec = ScheduleSpec::new(kind, strategy).with_slot(slot);
+            let before = spec.build(&base).makespan();
+            let after = spec.build(&bumped).makespan();
             if after < before - 1e-9 {
                 return Err(format!(
                     "{kind:?}/{strategy:?} slot {slot}: device {dev} field {field} \
@@ -278,8 +281,9 @@ fn rand_costs(rng: &mut Rng) -> BlockCosts {
 
 fn assert_identical(c: &BlockCosts, tc: &TopoCosts, kind: MoEKind,
                     strategy: Strategy, slot: usize) -> Result<(), String> {
+    // both CostModel back ends, through the one ScheduleSpec entry point
     let legacy = build_pair_schedule(c, kind, strategy, slot);
-    let topo = build_pair_schedule_topo(tc, kind, strategy, slot);
+    let topo = ScheduleSpec::new(kind, strategy).with_slot(slot).build(tc);
     let (ls, ts) = (legacy.run(), topo.run());
     if ls.len() != ts.len() {
         return Err(format!("{kind:?}/{strategy:?}: {} vs {} spans",

@@ -11,10 +11,8 @@
 use scmoe::cluster::Scenario;
 use scmoe::coordinator::adaptive::choose_expert_slot_topo;
 use scmoe::coordinator::costs::{MoEKind, Strategy, TopoCosts};
-use scmoe::coordinator::schedule::{
-    build_pair_schedule, build_pair_schedule_topo, build_pair_schedule_topo_auto,
-    build_pair_schedule_topo_with, ChunkPipelining,
-};
+use scmoe::coordinator::schedule::{build_pair_schedule, ChunkPipelining};
+use scmoe::coordinator::spec::ScheduleSpec;
 use scmoe::report::efficiency::{proxy_costs, topo_proxy_costs, xl_topo_proxy_costs};
 
 #[test]
@@ -28,7 +26,10 @@ fn one_modeled_device_reproduces_legacy_makespans_on_every_preset() {
             (MoEKind::ScMoE { k: 1 }, Strategy::Overlap, 2),
         ] {
             let legacy = build_pair_schedule(&c, kind, strategy, slot).makespan();
-            let topo = build_pair_schedule_topo(&tc, kind, strategy, slot).makespan();
+            let topo = ScheduleSpec::new(kind, strategy)
+                .with_slot(slot)
+                .build(&tc)
+                .makespan();
             // bit-exact, not a tolerance: identical graphs, identical math
             assert_eq!(legacy, topo, "{}: {kind:?}/{strategy:?}", sc.label());
         }
@@ -56,10 +57,15 @@ fn scmoe_overlap_reduces_fleet_makespan_on_every_preset() {
     for sc in Scenario::extended() {
         for tc in [topo_proxy_costs(sc), xl_topo_proxy_costs(sc)] {
             assert!(tc.n_devices() >= 2, "fleet presets model the whole fleet");
-            let seq = build_pair_schedule_topo(
-                &tc, MoEKind::Standard { k: 2 }, Strategy::Sequential, 0).makespan();
-            let ovl = build_pair_schedule_topo_auto(
-                &tc, MoEKind::ScMoE { k: 1 }, Strategy::Overlap).makespan();
+            let seq = ScheduleSpec::new(MoEKind::Standard { k: 2 },
+                                        Strategy::Sequential)
+                .build(&tc)
+                .makespan();
+            let ovl = ScheduleSpec::new(MoEKind::ScMoE { k: 1 },
+                                        Strategy::Overlap)
+                .adaptive()
+                .build(&tc)
+                .makespan();
             assert!(
                 ovl < seq,
                 "{}: overlap {ovl} should beat sequential {seq}",
@@ -73,11 +79,15 @@ fn scmoe_overlap_reduces_fleet_makespan_on_every_preset() {
 fn overlap_pipelined_also_beats_sequential_on_fleets() {
     for sc in [Scenario::TwoNodeA800x16, Scenario::FourNodeA800IBx32] {
         let tc = xl_topo_proxy_costs(sc);
-        let seq = build_pair_schedule_topo(
-            &tc, MoEKind::Standard { k: 2 }, Strategy::Sequential, 0).makespan();
-        let ovl = build_pair_schedule_topo_auto(
-            &tc, MoEKind::ScMoE { k: 1 },
-            Strategy::OverlapPipelined { chunks: 2 }).makespan();
+        let seq = ScheduleSpec::new(MoEKind::Standard { k: 2 },
+                                    Strategy::Sequential)
+            .build(&tc)
+            .makespan();
+        let ovl = ScheduleSpec::new(MoEKind::ScMoE { k: 1 },
+                                    Strategy::OverlapPipelined { chunks: 2 })
+            .adaptive()
+            .build(&tc)
+            .makespan();
         assert!(ovl < seq, "{}: {ovl} vs {seq}", sc.label());
     }
 }
@@ -92,21 +102,24 @@ fn staged_pipelining_strictly_beats_phase_chained_on_4node_ib() {
     // chunks 2/4/8 — far beyond f64 noise.
     let tc = xl_topo_proxy_costs(Scenario::FourNodeA800IBx32);
     for chunks in [2usize, 4, 8] {
-        let staged = build_pair_schedule_topo(
-            &tc, MoEKind::Standard { k: 2 },
-            Strategy::Pipelined { chunks }, 0).makespan();
-        let chained = build_pair_schedule_topo_with(
-            &tc, MoEKind::Standard { k: 2 },
-            Strategy::Pipelined { chunks }, 0,
-            ChunkPipelining::PhaseChained).makespan();
+        let pipe = ScheduleSpec::new(MoEKind::Standard { k: 2 },
+                                     Strategy::Pipelined { chunks });
+        let staged = pipe.build(&tc).makespan();
+        let chained = pipe
+            .with_pipelining(ChunkPipelining::PhaseChained)
+            .build(&tc)
+            .makespan();
         assert!(staged < chained,
                 "pipe{chunks}: staged {staged} vs chained {chained}");
 
-        let kind = MoEKind::ScMoE { k: 1 };
-        let strat = Strategy::OverlapPipelined { chunks };
-        let (slot, ovl_staged) = choose_expert_slot_topo(&tc, kind, strat);
-        let ovl_chained = build_pair_schedule_topo_with(
-            &tc, kind, strat, slot, ChunkPipelining::PhaseChained).makespan();
+        let ospec = ScheduleSpec::new(MoEKind::ScMoE { k: 1 },
+                                      Strategy::OverlapPipelined { chunks });
+        let (slot, ovl_staged) = ospec.choose_slot(&tc);
+        let ovl_chained = ospec
+            .with_slot(slot)
+            .with_pipelining(ChunkPipelining::PhaseChained)
+            .build(&tc)
+            .makespan();
         assert!(ovl_staged < ovl_chained,
                 "ovl+pipe{chunks} slot {slot}: staged {ovl_staged} \
                  vs chained {ovl_chained}");
@@ -153,12 +166,12 @@ fn hetero_fleet_is_gated_by_its_slow_node() {
     // NVLink preset's (same device count, same workload): stragglers set
     // the barrier — on both compute (A30 op scale) and communication
     // (the A30 node's intra link is PCIe, not NVLink).
-    let nv = build_pair_schedule_topo(
-        &topo_proxy_costs(Scenario::NvlinkA800x8),
-        MoEKind::Standard { k: 2 }, Strategy::Sequential, 0).makespan();
-    let hetero = build_pair_schedule_topo(
-        &topo_proxy_costs(Scenario::HeteroA800A30x8),
-        MoEKind::Standard { k: 2 }, Strategy::Sequential, 0).makespan();
+    let spec = ScheduleSpec::new(MoEKind::Standard { k: 2 },
+                                 Strategy::Sequential);
+    let nv = spec.build(&topo_proxy_costs(Scenario::NvlinkA800x8)).makespan();
+    let hetero = spec
+        .build(&topo_proxy_costs(Scenario::HeteroA800A30x8))
+        .makespan();
     assert!(hetero > nv, "hetero {hetero} should exceed nvlink {nv}");
 }
 

@@ -1217,6 +1217,587 @@ def consistency_checks3():
     print('PR3 consistency checks: OK')
 
 
+# ======================================================================
+# PR 4 model: ScheduleSpec + CostModel unified builders with load-scaled,
+# token-true expert compute. Transcribes the planned Rust line-by-line:
+#   moe/placement.rs        -> ExpertLoad (RoutingTable::load x Placement)
+#   coordinator/spec.rs     -> CostModel phase queries (PhaseDir/PhaseScope),
+#                              here CostModelBlock + TopoCosts4
+#   coordinator/schedule.rs -> the unified spec-driven builders (one family
+#                              serving both the single-device and fleet
+#                              back ends; sequential/pipelined/overlap share
+#                              the prologue/dispatch/combine/decode helpers)
+# ======================================================================
+
+DISPATCH, COMBINE = 0, 1
+INTRA, INTER = 0, 1
+
+
+class ExpertLoad:
+    """Per-device routed compute load (kept token copies)."""
+
+    def __init__(self, per_device):
+        self.per_device = per_device
+        self.total = sum(per_device)
+
+    @staticmethod
+    def from_routing(rt, placement):
+        per = [0] * placement.n_devices
+        for e, l in enumerate(rt.load):
+            per[placement.device_of(e)] += l
+        return ExpertLoad(per)
+
+    def scale(self, d):
+        # load_d / mean load; exactly 1.0 for balanced loads so balanced
+        # routing reduces bit-exactly to the unscaled model
+        if self.total == 0:
+            return 0.0
+        return (float(self.per_device[d]) * float(len(self.per_device))
+                / float(self.total))
+
+    def imbalance(self):
+        if self.total == 0:
+            return 1.0
+        mean = float(self.total) / float(len(self.per_device))
+        return float(max(self.per_device)) / mean
+
+
+class CostModelBlock:
+    """BlockCosts3 viewed through the CostModel interface (1 device)."""
+
+    def __init__(self, c):
+        self.c = c
+
+    def n_devices(self): return 1
+    def devices_per_node(self): return 1
+    def n_links(self): return 0
+    def node_of(self, d): return 0
+    def devices_of(self, node): return range(0, 1)
+    def device(self, d): return self.c
+
+    def phase(self, dir_, scope, idx, k):
+        return self.c.a2a(k)
+
+    def phase_alpha(self, dir_, scope, idx, k):
+        return self.c.a2a_alpha(k)
+
+    def expert_time(self, d, k):
+        return self.c.expert(k)
+
+    def chunk_phases(self, k, chunks):
+        row = [a2a_chunk_time(self.c.a2a(k), self.c.a2a_alpha(k), chunks)]
+        ex = [self.c.expert(k) / float(chunks)]
+        return ([row[:] for _ in range(chunks)],
+                [[] for _ in range(chunks)],
+                [row[:] for _ in range(chunks)],
+                [[] for _ in range(chunks)],
+                [ex[:] for _ in range(chunks)])
+
+
+class TopoCosts4(TopoCosts3):
+    """TopoCosts3 + the per-device ExpertLoad and CostModel queries."""
+
+    def __init__(self, base3, expert_load=None):
+        TopoCosts3.__init__(
+            self, base3.per_device, base3.a2a_intra_k1, base3.a2a_inter_k1,
+            base3.devices_per_node,
+            intra_c=base3.a2a_intra_combine_k1,
+            inter_c=base3.a2a_inter_combine_k1,
+            intra_a=base3.a2a_intra_alpha_k1,
+            inter_a=base3.a2a_inter_alpha_k1,
+            intra_ca=base3.a2a_intra_combine_alpha_k1,
+            inter_ca=base3.a2a_inter_combine_alpha_k1,
+            chunk_source=base3.chunk_source)
+        self.expert_load = expert_load
+
+    def n_links(self): return len(self.a2a_inter_k1)
+    def device(self, d): return self.per_device[d]
+
+    def phase(self, dir_, scope, idx, k):
+        if dir_ == DISPATCH:
+            return (self.a2a_intra(idx, k) if scope == INTRA
+                    else self.a2a_inter(idx, k))
+        return (self.a2a_intra_combine(idx, k) if scope == INTRA
+                else self.a2a_inter_combine(idx, k))
+
+    def phase_alpha(self, dir_, scope, idx, k):
+        if dir_ == DISPATCH:
+            return (self.a2a_intra_alpha(idx, k) if scope == INTRA
+                    else self.a2a_inter_alpha(idx, k))
+        return (self.a2a_intra_combine_alpha(idx, k) if scope == INTRA
+                else self.a2a_inter_combine_alpha(idx, k))
+
+    def expert_time(self, d, k):
+        base = self.per_device[d].expert(k)
+        if self.expert_load is None:
+            return base
+        return base * self.expert_load.scale(d)
+
+    def chunk_phases(self, k, chunks):
+        base = TopoCosts3.chunk_phases(self, k, chunks)
+        n = self.n_devices()
+        fc = float(chunks)
+        token_true = (self.chunk_source is not None
+                      and self.expert_load is not None
+                      and self.expert_load.total > 0)
+        if token_true:
+            total = float(self.expert_load.total)
+            ex = []
+            for part in chunk_rt(self.chunk_source.rt, chunks):
+                # per-chunk device loads via ExpertLoad, scaled against the
+                # PARENT total so chunk durations partition expert_time
+                pl = ExpertLoad.from_routing(part,
+                                             self.chunk_source.placement)
+                row = []
+                for d in range(n):
+                    scale = float(pl.per_device[d]) * float(n) / total
+                    row.append(self.per_device[d].expert(k) * scale)
+                ex.append(row)
+        else:
+            ex = [[self.expert_time(d, k) / fc for d in range(n)]
+                  for _ in range(chunks)]
+        return base + (ex,)
+
+
+def topo_from_routing4(base, topo, rt, placement, token_bytes,
+                       node_intra=None):
+    return TopoCosts4(
+        topo_from_routing3(base, topo, rt, placement, token_bytes, node_intra),
+        ExpertLoad.from_routing(rt, placement))
+
+
+# --- unified spec-driven builders (schedule.rs, post-PR4) -------------
+
+def add_backbone_head4(sim, cm, shortcut):
+    """Per-device backbone prologue shared by every builder. Non-shortcut
+    kinds anchor the MoE stream on Attn(l+1); the shortcut (ScMoE) anchors
+    it on the preceding layer's Attn(l)."""
+    anchors = []
+    enc = []
+    for d in range(cm.n_devices()):
+        c = cm.device(d)
+        attn_l = sim.add("Attn(l)", comp(d), c.attn, [])
+        if shortcut:
+            anchor = attn_l
+        else:
+            mlp_l = sim.add("MLP(l)", comp(d), c.mlp, [attn_l])
+            anchor = sim.add("Attn(l+1)", comp(d), c.attn, [mlp_l])
+        gate = sim.add("Gate", comp(d), c.gate, [anchor])
+        e = sim.add("Encode", comp(d), c.encode, [gate])
+        anchors.append(anchor)
+        enc.append(e)
+    return anchors, enc
+
+
+def add_dispatch_chunk4(sim, cm, k, i, ca, enc, prev_d, prev_x, pipelining):
+    """i=None -> the unchunked collective ('A2A-D'); i=int -> chunk i."""
+    n = cm.n_devices()
+    n_links = cm.n_links()
+    tag = '' if i is None else str(i)
+    ci = 0 if i is None else i
+    disp_i = []
+    for d in range(n):
+        deps = [enc[d]]
+        if prev_d[d] is not None:
+            deps.append(prev_d[d])
+        if pipelining == PHASE_CHAINED and n_links > 0:
+            if prev_x[cm.node_of(d)] is not None:
+                deps.append(prev_x[cm.node_of(d)])
+        dur = ca[0][ci][d] if ca is not None else cm.phase(DISPATCH, INTRA, d, k)
+        t = sim.add(f"A2A-D{tag}", comm(d), dur, deps)
+        prev_d[d] = t
+        disp_i.append(t)
+    for node in range(n_links):
+        if ca is not None:
+            deps = [disp_i[d] for d in cm.devices_of(node)]
+        else:
+            deps = [enc[d] for d in cm.devices_of(node)]
+        if prev_x[node] is not None:
+            deps.append(prev_x[node])
+        dur = (ca[1][ci][node] if ca is not None
+               else cm.phase(DISPATCH, INTER, node, k))
+        t = sim.add(f"A2A-Dx{tag}", link(node), dur, deps)
+        prev_x[node] = t
+        disp_i.append(t)
+    return disp_i
+
+
+def add_combine_chunk4(sim, cm, k, i, ca, experts_i, prev_c, combines,
+                       pipelining):
+    n = cm.n_devices()
+    n_links = cm.n_links()
+    tag = '' if i is None else str(i)
+    ci = 0 if i is None else i
+    if ca is not None:
+        comb_x_i = []
+        for node in range(n_links):
+            deps = [experts_i[d] for d in cm.devices_of(node)]
+            if pipelining == PHASE_CHAINED:
+                for d in cm.devices_of(node):
+                    if prev_c[d] is not None:
+                        deps.append(prev_c[d])
+            t = sim.add(f"A2A-Cx{tag}", link(node), ca[3][ci][node], deps)
+            comb_x_i.append(t)
+            combines.append(t)
+        for d in range(n):
+            deps = [experts_i[d]]
+            if n_links > 0:
+                deps.append(comb_x_i[cm.node_of(d)])
+            t = sim.add(f"A2A-C{tag}", comm(d), ca[2][ci][d], deps)
+            prev_c[d] = t
+            combines.append(t)
+    else:
+        for d in range(n):
+            t = sim.add(f"A2A-C{tag}", comm(d), cm.phase(COMBINE, INTRA, d, k),
+                        [experts_i[d]])
+            prev_c[d] = t
+            combines.append(t)
+        for node in range(n_links):
+            deps = [experts_i[d] for d in cm.devices_of(node)]
+            combines.append(sim.add(f"A2A-Cx{tag}", link(node),
+                                    cm.phase(COMBINE, INTER, node, k), deps))
+
+
+def add_decode4(sim, cm, kind, combines, attn_m, last_backbone):
+    for d in range(cm.n_devices()):
+        c = cm.device(d)
+        deps = combines[:]
+        if last_backbone is not None:
+            deps.append(last_backbone[d])
+        elif has_shared_expert(kind):
+            se = sim.add("SE", comp(d), c.se, [attn_m[d]])
+            deps.append(se)
+        sim.add("Decode", comp(d), c.decode, deps)
+
+
+def build_sequential4(cm, kind, k):
+    sim = Sim()
+    attn_m, enc = add_backbone_head4(sim, cm, False)
+    n = cm.n_devices()
+    prev_d = [None] * n
+    prev_x = [None] * cm.n_links()
+    prev_c = [None] * n
+    disp = add_dispatch_chunk4(sim, cm, k, None, None, enc, prev_d, prev_x,
+                               STAGED)
+    experts = [sim.add("Expert", comp(d), cm.expert_time(d, k), disp)
+               for d in range(n)]
+    combines = []
+    add_combine_chunk4(sim, cm, k, None, None, experts, prev_c, combines,
+                       STAGED)
+    add_decode4(sim, cm, kind, combines, attn_m, None)
+    return sim
+
+
+def build_pipelined4(cm, kind, k, chunks, pipelining=STAGED):
+    assert chunks >= 1
+    sim = Sim()
+    attn_m, enc = add_backbone_head4(sim, cm, False)
+    n = cm.n_devices()
+    fc = float(chunks)
+    ca = cm.chunk_phases(k, chunks) if chunks > 1 else None
+    prev_d = [None] * n
+    prev_x = [None] * cm.n_links()
+    prev_c = [None] * n
+    combines = []
+    for i in range(chunks):
+        disp_i = add_dispatch_chunk4(sim, cm, k, i, ca, enc, prev_d, prev_x,
+                                     pipelining)
+        experts_i = []
+        for d in range(n):
+            dur = ca[4][i][d] if ca is not None else cm.expert_time(d, k) / fc
+            experts_i.append(sim.add(f"Expert{i}", comp(d), dur, disp_i))
+        add_combine_chunk4(sim, cm, k, i, ca, experts_i, prev_c, combines,
+                           pipelining)
+    add_decode4(sim, cm, kind, combines, attn_m, None)
+    return sim
+
+
+def build_overlap4(cm, kind, k, slot, chunks, pipelining=STAGED):
+    assert slot <= 3 and chunks >= 1
+    sim = Sim()
+    attn_l_ids, enc = add_backbone_head4(sim, cm, True)
+    n = cm.n_devices()
+    fc = float(chunks)
+    ca = cm.chunk_phases(k, chunks) if chunks > 1 else None
+    disp_chunks = []
+    prev_d = [None] * n
+    prev_x = [None] * cm.n_links()
+    for i in range(chunks):
+        disp_chunks.append(add_dispatch_chunk4(sim, cm, k, i, ca, enc,
+                                               prev_d, prev_x, pipelining))
+    last_backbone = [0] * n
+    experts_by_dev = []
+    for d in range(n):
+        c = cm.device(d)
+        dev_experts = []
+
+        def place(after):
+            tail = after
+            for i, disp_i in enumerate(disp_chunks):
+                deps = disp_i[:]
+                deps.append(tail)
+                dur = (ca[4][i][d] if ca is not None
+                       else cm.expert_time(d, k) / fc)
+                e = sim.add(f"Expert{i}", comp(d), dur, deps)
+                dev_experts.append(e)
+                tail = e
+            return tail
+
+        tail = attn_l_ids[d]
+        if slot == 0:
+            tail = place(tail)
+        window = [("MLP(l)", c.mlp), ("Attn(l+1)", c.attn), ("SE(l+1)", c.se)]
+        for wi, (label, dur) in enumerate(window):
+            tail = sim.add(label, comp(d), dur, [tail])
+            if slot == wi + 1:
+                tail = place(tail)
+        last_backbone[d] = tail
+        experts_by_dev.append(dev_experts)
+    prev_c = [None] * n
+    combines = []
+    for i in range(chunks):
+        experts_i = [experts_by_dev[d][i] for d in range(n)]
+        add_combine_chunk4(sim, cm, k, i, ca, experts_i, prev_c, combines,
+                           pipelining)
+    add_decode4(sim, cm, kind, combines, None, last_backbone)
+    return sim
+
+
+def build_spec4(cm, kind, strat, slot=0, pipelining=STAGED):
+    """ScheduleSpec::build — the one entry point."""
+    k = routed_k(kind)
+    name = strat[0]
+    if name == 'seq':
+        return build_sequential4(cm, kind, k)
+    if name == 'pipe':
+        return build_pipelined4(cm, kind, k, strat[1], pipelining)
+    if name == 'overlap':
+        return build_overlap4(cm, kind, k, slot, 1, pipelining)
+    if name == 'overlap-pipe':
+        return build_overlap4(cm, kind, k, slot, strat[1], pipelining)
+    raise ValueError(name)
+
+
+def choose_expert_slot4(cm, kind, strat, pipelining=STAGED):
+    best = (0, float('inf'))
+    for slot in range(4):
+        t = build_spec4(cm, kind, strat, slot, pipelining).makespan()
+        if t < best[1]:
+            best = (slot, t)
+    return best
+
+
+# --- report/efficiency.rs helpers needed for expectation minting ------
+
+def xl_compute_costs():
+    return ComputeCosts(1.40e-3, 1.20e-3, 1.20e-3, 0.09e-3, 0.07e-3,
+                        0.07e-3, 1.40e-3)
+
+
+def node_affine_routing(n_devices, devices_per_node, n_experts,
+                        tokens_per_device, k, seed):
+    n_nodes = n_devices // devices_per_node
+    group = n_experts // n_nodes
+    n_tokens = n_devices * tokens_per_device
+    rng = Rng(seed)
+    indices = []
+    weights = [1.0] * (n_tokens * k)
+    for t in range(n_tokens):
+        node = (t // tokens_per_device) // devices_per_node
+        first = rng.below(group)
+        indices.append(node + n_nodes * first)
+        rest = [(first + o) % group for o in range(1, group)]
+        for _ in range(1, k):
+            idx = rest.pop(rng.below(len(rest)))
+            indices.append(node + n_nodes * idx)
+    return RoutingTable(indices, weights, n_tokens, k, n_experts, n_tokens)
+
+
+def consistency_checks4():
+    """Reductions the PR4 model must satisfy before its output is trusted:
+    the unified spec builders must reproduce the PR3 builders bit-exactly
+    wherever no load information exists, and balanced loads must be the
+    identity."""
+    c = dyadic_costs3()
+    cm = CostModelBlock(c)
+    kinds = [('std', 1), ('std', 2), ('std', 3), ('shared', 1),
+             ('scmoe', 1), ('scmoe', 2)]
+    # 1. single-device back end == legacy single-device builders
+    for kind in kinds:
+        for strat in [('seq',), ('pipe', 1), ('pipe', 2), ('pipe', 4)]:
+            a = render_line('x', build_pair_schedule3(c, kind, strat, 0))
+            b = render_line('x', build_spec4(cm, kind, strat, 0))
+            assert a == b, ('single-device spec drifted', kind, strat)
+        for slot in range(4):
+            for strat in [('overlap',), ('overlap-pipe', 2)]:
+                a = render_line('x', build_pair_schedule3(c, kind if kind[0] == 'scmoe' else ('scmoe', 1), strat, slot))
+                b = render_line('x', build_spec4(CostModelBlock(c), kind if kind[0] == 'scmoe' else ('scmoe', 1), strat, slot))
+                assert a == b, ('single-device overlap drifted', kind, strat, slot)
+    # 2. fleet back end without loads == PR3 topo builders
+    tf3 = dyadic_fleet3()
+    tf4 = TopoCosts4(tf3)
+    fleet_cases = [(('std', 2), ('seq',), 0, STAGED),
+                   (('std', 2), ('pipe', 2), 0, STAGED),
+                   (('std', 2), ('pipe', 2), 0, PHASE_CHAINED),
+                   (('std', 2), ('pipe', 4), 0, STAGED),
+                   (('scmoe', 1), ('overlap-pipe', 2), 2, STAGED),
+                   (('scmoe', 1), ('overlap-pipe', 2), 2, PHASE_CHAINED)]
+    for slot in range(4):
+        fleet_cases.append((('scmoe', 1), ('overlap',), slot, STAGED))
+    for kind, strat, slot, pipe in fleet_cases:
+        a = render_line('x', build_pair_schedule_topo3(tf3, kind, strat, slot, pipe))
+        b = render_line('x', build_spec4(tf4, kind, strat, slot, pipe))
+        assert a == b, ('fleet spec drifted', kind, strat, slot, pipe)
+    # 3. balanced routed loads are the identity: every expert equally hot
+    idx = [0, 1, 2, 3] * 4
+    rt_bal = RoutingTable(idx, [1.0] * 16, 16, 1, 4, 16)
+    for pname, p in [('block', Placement.block(4, 4))]:
+        tc3 = routed_fleet3_with(rt_bal, p)
+        tc4 = topo_from_routing4(ComputeCosts(1.0, 0.75, 0.75, 0.0625, 0.0625,
+                                              0.0625, 0.5),
+                                 Topology(4, 2, LinkModel(0.0625, 1024.0),
+                                          LinkModel(0.125, 512.0), 1.0, None),
+                                 rt_bal, p, 64)
+        assert tc4.expert_load.scale(0) == 1.0
+        for kind, strat, slot in [(('scmoe', 1), ('seq',), 0),
+                                  (('scmoe', 1), ('overlap',), 2),
+                                  (('scmoe', 1), ('overlap-pipe', 2), 2),
+                                  (('scmoe', 1), ('pipe', 2), 0)]:
+            a = render_line('x', build_pair_schedule_topo3(tc3, kind, strat, slot))
+            b = render_line('x', build_spec4(tc4, kind, strat, slot))
+            assert a == b, ('balanced routed drifted', pname, kind, strat)
+    # 4. per-chunk expert loads partition the device loads (integers)
+    rt = routed_table3()
+    for pname, p in [('block', Placement.block(4, 4)),
+                     ('skewed', Placement.imbalance_skewed(4, 4, 2))]:
+        tc4 = topo_from_routing4(ComputeCosts(1.0, 0.75, 0.75, 0.0625, 0.0625,
+                                              0.0625, 0.5),
+                                 Topology(4, 2, LinkModel(0.0625, 1024.0),
+                                          LinkModel(0.125, 512.0), 1.0, None),
+                                 rt, p, 64)
+        for chunks in [2, 3, 4]:
+            ca = tc4.chunk_phases(1, chunks)
+            for d in range(4):
+                total = sum(ca[4][i][d] for i in range(chunks))
+                assert abs(total - tc4.expert_time(d, 1)) < 1e-12, (pname, d)
+    # 5. a skewed placement strictly stretches the hot device's expert span
+    skew = topo_from_routing4(ComputeCosts(1.0, 0.75, 0.75, 0.0625, 0.0625,
+                                           0.0625, 0.5),
+                              Topology(4, 2, LinkModel(0.0625, 1024.0),
+                                       LinkModel(0.125, 512.0), 1.0, None),
+                              rt, Placement.imbalance_skewed(4, 4, 2), 64)
+    naive = TopoCosts4(TopoCosts3(skew.per_device, skew.a2a_intra_k1,
+                                  skew.a2a_inter_k1, skew.devices_per_node,
+                                  intra_c=skew.a2a_intra_combine_k1,
+                                  inter_c=skew.a2a_inter_combine_k1,
+                                  intra_a=skew.a2a_intra_alpha_k1,
+                                  inter_a=skew.a2a_inter_alpha_k1,
+                                  intra_ca=skew.a2a_intra_combine_alpha_k1,
+                                  inter_ca=skew.a2a_inter_combine_alpha_k1,
+                                  chunk_source=skew.chunk_source))
+    assert skew.expert_time(0, 1) > naive.expert_time(0, 1)
+    m_true = build_spec4(skew, ('scmoe', 1), ('seq',), 0).makespan()
+    m_naive = build_spec4(naive, ('scmoe', 1), ('seq',), 0).makespan()
+    assert m_true > m_naive, (m_true, m_naive)
+    print('PR4 consistency checks: OK')
+
+
+def routed_fleet3_with(rt, placement):
+    topo = Topology(4, 2, LinkModel(0.0625, 1024.0), LinkModel(0.125, 512.0),
+                    1.0, None)
+    base = ComputeCosts(1.0, 0.75, 0.75, 0.0625, 0.0625, 0.0625, 0.5)
+    return topo_from_routing3(base, topo, rt, placement, 64)
+
+
+def routed_fleet4(rt, placement):
+    topo = Topology(4, 2, LinkModel(0.0625, 1024.0), LinkModel(0.125, 512.0),
+                    1.0, None)
+    base = ComputeCosts(1.0, 0.75, 0.75, 0.0625, 0.0625, 0.0625, 0.5)
+    return topo_from_routing4(base, topo, rt, placement, 64)
+
+
+def generate_corpus_lines4():
+    """The post-PR4 golden corpus: identical to the PR3 corpus wherever no
+    load information exists (pinned by consistency_checks4), load-scaled
+    expert spans on the routed entries, plus new routed pipe2 entries whose
+    per-chunk expert durations are token-true."""
+    c = dyadic_costs3()
+    cm = CostModelBlock(c)
+    lines = []
+    kinds = [('std', 1), ('std', 2), ('std', 3), ('shared', 1),
+             ('scmoe', 1), ('scmoe', 2)]
+    for kind in kinds:
+        if kind[0] == 'std':
+            strategies = [('seq',), ('pipe', 2), ('pipe', 4)]
+        elif kind[0] == 'shared':
+            strategies = [('seq',), ('pipe', 1), ('pipe', 2)]
+        else:
+            strategies = [('seq',), ('pipe', 2)]
+        for strategy in strategies:
+            slabel = 'seq' if strategy[0] == 'seq' else f'pipe{strategy[1]}'
+            name = f'{kind_label(kind)}/{slabel}'
+            lines.append(render_line(name, build_spec4(cm, kind, strategy, 0)))
+        if kind[0] == 'scmoe':
+            for slot in range(4):
+                s = build_spec4(cm, kind, ('overlap',), slot)
+                lines.append(render_line(f'{kind_label(kind)}/overlap-s{slot}', s))
+            for slot in range(4):
+                s = build_spec4(cm, kind, ('overlap-pipe', 2), slot)
+                lines.append(render_line(
+                    f'{kind_label(kind)}/overlap+pipe2-s{slot}', s))
+    tf = TopoCosts4(dyadic_fleet3())
+    lines.append(render_line('fleet:Top2/seq',
+                             build_spec4(tf, ('std', 2), ('seq',), 0)))
+    lines.append(render_line('fleet:Top2/pipe2',
+                             build_spec4(tf, ('std', 2), ('pipe', 2), 0)))
+    lines.append(render_line(
+        'fleet:Top2/pipe2-chained',
+        build_spec4(tf, ('std', 2), ('pipe', 2), 0, PHASE_CHAINED)))
+    for slot in range(4):
+        lines.append(render_line(
+            f'fleet:ScMoE/overlap-s{slot}',
+            build_spec4(tf, ('scmoe', 1), ('overlap',), slot)))
+    lines.append(render_line(
+        'fleet:ScMoE/overlap+pipe2-s2',
+        build_spec4(tf, ('scmoe', 1), ('overlap-pipe', 2), 2)))
+    rt = routed_table3()
+    for name, p in [('block', Placement.block(4, 4)),
+                    ('affinity', Placement.affinity_packed(rt, 4, 2)),
+                    ('skewed', Placement.imbalance_skewed(4, 4, 2))]:
+        tc = routed_fleet4(rt, p)
+        lines.append(render_line(f'routed:{name}/seq',
+                     build_spec4(tc, ('scmoe', 1), ('seq',), 0)))
+        lines.append(render_line(f'routed:{name}/overlap-s2',
+                     build_spec4(tc, ('scmoe', 1), ('overlap',), 2)))
+        lines.append(render_line(
+            f'routed:{name}/overlap+pipe2-s2',
+            build_spec4(tc, ('scmoe', 1), ('overlap-pipe', 2), 2)))
+        lines.append(render_line(
+            f'routed:{name}/pipe2',
+            build_spec4(tc, ('scmoe', 1), ('pipe', 2), 0)))
+    return lines
+
+
+def validate_corpus4():
+    golden_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                               '..', '..', 'rust', 'tests', 'golden',
+                               'timelines.txt')
+    golden = [l for l in open(golden_path).read().splitlines()
+              if l.strip() and not l.startswith('#')]
+    lines = generate_corpus_lines4()
+    bad = 0
+    if len(golden) != len(lines):
+        print(f'line-count mismatch: golden {len(golden)} vs mirror {len(lines)}')
+        bad += 1
+    for g, cu in zip(golden, lines):
+        if g != cu:
+            bad += 1
+            print('- ' + g)
+            print('+ ' + cu)
+    print(f'golden corpus (PR4 model): {len(lines)} lines, {bad} mismatches')
+    return bad == 0
+
+
 CORPUS_HEADER3 = """# Golden operator timelines for every MoEKind x Strategy combination.
 #
 # Format: <kind>/<strategy>[-s<slot>] | makespan <secs> | <spans...>
@@ -1234,14 +1815,23 @@ CORPUS_HEADER3 = """# Golden operator timelines for every MoEKind x Strategy com
 # matrices (RoutingTable::chunk), so the skewed placement's chunks carry
 # genuinely different traffic.
 #
+# Routed entries carry load-scaled expert compute (ExpertLoad =
+# RoutingTable::load x Placement): a device's Expert span is stretched by
+# load_d / mean_load, so the imbalanced dyadic routing (per-expert loads
+# 4/3/4/5) yields visibly unequal Expert spans per placement, and the
+# routed pipe2 entries additionally split each device's expert time by
+# its per-chunk token share (token-true chunked compute). Balanced
+# routing reduces to scale 1.0 exactly, leaving every other entry
+# byte-identical to the pre-load-model corpus.
+#
 # Regenerated only deliberately (tools/des_mirror/mirror2.py --emit):
 # these snapshots pin Fig. 6 span order so schedule refactors cannot
 # silently reorder the paper's timelines."""
 
 
-def emit_corpus3(path):
+def emit_corpus4(path):
     keep = CORPUS_HEADER3.splitlines()
-    lines = generate_corpus_lines3()
+    lines = generate_corpus_lines4()
     routed_at = next(i for i, l in enumerate(lines) if l.startswith('routed:'))
     routed_comment = [
         '# Routed-placement scenarios (dyadic 4-device/2-node fleet; see',
@@ -1254,14 +1844,17 @@ def emit_corpus3(path):
 
 
 if __name__ == '__main__':
-    # Internal reductions first (chunks=1 and zero-α must reproduce the
-    # seed model bit-for-bit), then validate the PR3 model against the
-    # full golden corpus. `--emit` deliberately regenerates the file;
+    # Internal reductions first: the PR3 model must reproduce the seed
+    # model bit-for-bit where applicable, and the PR4 spec-driven model
+    # must reproduce the PR3 builders wherever no load information exists
+    # (plus balanced-load identity). Then validate the PR4 model against
+    # the full golden corpus. `--emit` deliberately regenerates the file;
     # plain invocation (CI) only validates and exits nonzero on drift.
     consistency_checks3()
+    consistency_checks4()
     if '--emit' in sys.argv:
-        emit_corpus3(os.path.join(os.path.dirname(os.path.abspath(__file__)),
+        emit_corpus4(os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                   '..', '..', 'rust', 'tests', 'golden',
                                   'timelines.txt'))
-    ok = validate_corpus3()
+    ok = validate_corpus4()
     sys.exit(0 if ok else 1)
