@@ -40,10 +40,10 @@ fn main() -> anyhow::Result<()> {
     let mut t_ovl = Vec::new();
     for _ in 0..reps {
         let t0 = std::time::Instant::now();
-        let (y_seq, _) = run_pair_real(&set, &cluster, &x, &seq_spec, link, 1.0, 2)?;
+        let (y_seq, _) = run_pair_real(&set, &cluster, &x, &seq_spec, None, link, 1.0, 2)?;
         t_seq.push(t0.elapsed().as_secs_f64());
         let t0 = std::time::Instant::now();
-        let (y_ovl, spans) = run_pair_real(&set, &cluster, &x, &ovl_spec, link, 1.0, 2)?;
+        let (y_ovl, spans) = run_pair_real(&set, &cluster, &x, &ovl_spec, None, link, 1.0, 2)?;
         t_ovl.push(t0.elapsed().as_secs_f64());
         // numerics must be identical
         for (a, b) in y_seq.iter().zip(&y_ovl) {

@@ -18,6 +18,13 @@
 //! vanish, and the fleet barrier follows the hot prefix — the same rows
 //! `scmoe report topo`'s load-skew study tabulates.
 //!
+//! With `--replace`, run the live re-placement study's drift scenario on
+//! the 4-node IB preset: render the *migration step* (the block-layout
+//! schedule with the measured-affinity `MigrationPlan`'s H2D transfers
+//! overlapped on the `h2d[d]` rows), then the post-migration node-local
+//! step, plus the cumulative static-vs-replace table and the regime-shift
+//! policy comparison `scmoe report replace` tabulates.
+//!
 //! `--chunks N` sets the pipeline depth of the chunked rows (default 2).
 //! Every chunk pays its own launch latency, so deep chunking visibly
 //! stops helping; in `--fleet` mode the chunked ScMoE timeline is also
@@ -29,19 +36,30 @@
 
 use scmoe::cluster::Scenario;
 use scmoe::coordinator::adaptive::eq11_objective;
-use scmoe::coordinator::costs::{MoEKind, Strategy};
+use scmoe::coordinator::costs::{MoEKind, Strategy, TopoCosts};
+use scmoe::coordinator::replace::{MigrationPlan, ReplacePolicy};
 use scmoe::coordinator::schedule::ChunkPipelining;
 use scmoe::coordinator::spec::ScheduleSpec;
 use scmoe::coordinator::timeline;
+use scmoe::moe::{AffinityEstimator, Placement};
 use scmoe::report::efficiency::{
     load_skew_study_rows, placement_study_rows, proxy_costs, topo_proxy_costs,
-    xl_topo_proxy_costs,
+    xl_compute_costs, xl_topo_proxy_costs,
+};
+use scmoe::report::replace::{
+    break_even_step, migration_marks, run_study, study_config, study_tables,
+    STUDY_DRIFT_NOISE, STUDY_DRIFT_SEED, STUDY_SHIFT_DECAY, STUDY_SHIFT_NOISE,
+    STUDY_SHIFT_SEED, STUDY_SHIFT_STEP, STUDY_TOKEN_BYTES,
 };
 use scmoe::simtime::makespan;
 use scmoe::util::cli::Args;
 
 fn main() {
     let args = Args::from_env();
+    if args.flag("replace") {
+        replace_mode(args.usize_or("width", 110));
+        return;
+    }
     if args.flag("placement") || args.flag("skew") {
         let sc = Scenario::parse(&args.str_or("scenario", "4node-ib"))
             .unwrap_or(Scenario::FourNodeA800IBx32);
@@ -177,6 +195,77 @@ fn placement_mode(sc: Scenario, width: usize, tokens_per_device: usize,
         .map(|((label, _), m)| format!("{label} {:.2}x", makespans[0] / m))
         .collect();
     println!("\noverlap speedup vs uniform: {}", vs_uniform.join(" | "));
+}
+
+/// Render the live re-placement study: the migration step (H2D rows
+/// overlapped behind the block-layout step) and the post-migration
+/// node-local step, plus the cumulative and policy tables of
+/// `scmoe report replace`.
+fn replace_mode(width: usize) {
+    let sc = Scenario::FourNodeA800IBx32;
+    let topo = sc.topology();
+    let base = xl_compute_costs();
+    // the exact configuration the drift study runs (same spec, expert
+    // bytes, H2D link, counting estimator), so the rendered timelines
+    // can never diverge from the tables printed below
+    let cfg = study_config(ReplacePolicy::BreakEven, 1.0);
+    let spec = cfg.spec;
+    println!("### {} — live re-placement timelines ({} devices, {} nodes) ###",
+             sc.label(), topo.n_devices, topo.n_nodes());
+
+    // the drift scenario's migration step, reconstructed: observe step
+    // 0's table, pack the measured affinity, overlap the H2D transfers
+    let tables = study_tables(STUDY_DRIFT_NOISE, STUDY_DRIFT_SEED, None);
+    let block = Placement::new(32, 32);
+    let mut est = AffinityEstimator::ewma(32, topo.n_nodes(), cfg.decay);
+    est.observe(&tables[0], topo.n_devices, topo.devices_per_node);
+    let measured = est.packed(topo.n_devices, topo.devices_per_node);
+    let plan = MigrationPlan::between(&block, &measured, cfg.bytes_per_expert);
+    let tc = TopoCosts::from_routing(&base, &topo, &tables[0], &block,
+                                     STUDY_TOKEN_BYTES);
+    let mut sched = spec.build(&tc);
+    let base_ms = sched.makespan();
+    plan.add_h2d_tasks(&mut sched.sim, &cfg.h2d);
+    let spans = sched.run();
+    println!("\n--- migration step: uniform block layout + {} expert \
+              transfers on h2d rows ---", plan.moves.len());
+    print!("{}", timeline::render(&spans, width));
+    println!("step stretches {:.3}ms -> {:.3}ms: the H2D engines outlast \
+              the step's compute",
+             base_ms * 1e3, makespan(&spans) * 1e3);
+
+    let tc_after = TopoCosts::from_routing(&base, &topo, &tables[1],
+                                           &measured, STUDY_TOKEN_BYTES);
+    let after = spec.build(&tc_after);
+    println!("\n--- post-migration step: measured-affinity layout \
+              (node-local routes) ---");
+    print!("{}", timeline::render(&after.run(), width));
+
+    // the cumulative table + policy comparison, same runs as the report
+    let static_run = run_study(&tables, ReplacePolicy::Never, 1.0);
+    let replace_run = run_study(&tables, ReplacePolicy::BreakEven, 1.0);
+    println!("\nstatic-uniform total {:.3}ms vs migrate-then-run {:.3}ms \
+              over {} steps ({:.2}x)",
+             static_run.total * 1e3, replace_run.total * 1e3,
+             static_run.steps.len(),
+             static_run.total / replace_run.total);
+    match break_even_step(&static_run, &replace_run) {
+        Some(n) => println!("break-even: replacing pulls ahead from step \
+                             {n} on"),
+        None => println!("break-even: not reached"),
+    }
+
+    println!("\n### regime shift at step {} (noise {:.0}%, EWMA decay {}) ###",
+             STUDY_SHIFT_STEP, STUDY_SHIFT_NOISE * 100.0, STUDY_SHIFT_DECAY);
+    let shifted = study_tables(STUDY_SHIFT_NOISE, STUDY_SHIFT_SEED,
+                               Some(STUDY_SHIFT_STEP));
+    for policy in [ReplacePolicy::Never, ReplacePolicy::EveryK { k: 1 },
+                   ReplacePolicy::BreakEven] {
+        let run = run_study(&shifted, policy, STUDY_SHIFT_DECAY);
+        println!("{:<12} total {:>9.3}ms  migrations {:>2}  {}",
+                 policy.label(), run.total * 1e3, run.migrations,
+                 migration_marks(&run));
+    }
 }
 
 /// Render the load-skew study's rows as fleet timelines: the balanced

@@ -18,8 +18,8 @@ use crate::cluster::LinkModel;
 use crate::moe::{decode, encode, Placement, RoutingTable};
 use crate::runtime::{ArtifactSet, Executable, HostTensor};
 
-use super::costs::Strategy;
-use super::spec::ScheduleSpec;
+use super::costs::{Strategy, TopoCosts};
+use super::spec::{CostModel, PhaseDir, PhaseScope, ScheduleSpec};
 
 // SAFETY: the PJRT CPU client is internally synchronized; executables are
 // immutable after compilation and `execute` is thread-safe per the PJRT API
@@ -227,6 +227,28 @@ pub struct WallSpan {
     pub end: f64,
 }
 
+/// Worst-phase scalar one-way delays `(dispatch, combine)` a routed
+/// [`TopoCosts`] implies for `k` routed experts: the slowest device
+/// intra phase or node uplink phase per direction — the barrier time
+/// the DES charges the collective. This is the first place the *real*
+/// executor sees placement effects: an affinity-packed layout shrinks
+/// both scalars, and a routing whose byte matrix is asymmetric (e.g. a
+/// fan-in onto one device) prices dispatch and combine differently.
+pub fn routed_pair_delays(tc: &TopoCosts, k: usize) -> (f64, f64) {
+    tc.assert_valid();
+    let worst = |dir: PhaseDir| -> f64 {
+        let mut w = 0.0f64;
+        for d in 0..tc.n_devices() {
+            w = w.max(tc.phase(dir, PhaseScope::Intra, d, k));
+        }
+        for n in 0..CostModel::n_links(tc) {
+            w = w.max(tc.phase(dir, PhaseScope::Inter, n, k));
+        }
+        w
+    };
+    (worst(PhaseDir::Dispatch), worst(PhaseDir::Combine))
+}
+
 /// Execute one Block-MLP + Block-MoE pair for real, driven by the same
 /// [`ScheduleSpec`] the DES builders consume: sequential strategies run
 /// the blocking MoE chain after the backbone, overlap strategies launch
@@ -236,12 +258,19 @@ pub struct WallSpan {
 /// capacity artifact must exist in `set`); chunked strategies execute
 /// like their unchunked parents — the thread executor has no chunk-level
 /// streams (the DES models those).
+///
+/// With `topo: Some(tc)` the injected one-way delays come from the cost
+/// model's routed phase totals ([`routed_pair_delays`]) — dispatch and
+/// combine priced separately, so placement effects reach the wall-clock
+/// run; with `None` the raw scalar `link` model prices both directions
+/// symmetrically (the legacy path).
 #[allow(clippy::too_many_arguments)]
 pub fn run_pair_real(
     set: &ArtifactSet,
     cluster: &Cluster,
     x: &HostTensor,
     spec: &ScheduleSpec,
+    topo: Option<&TopoCosts>,
     link: LinkModel,
     time_scale: f64,
     backbone_reps: usize,
@@ -256,9 +285,18 @@ pub fn run_pair_real(
     let cap = cluster.capacity();
     let w = &cluster.weights;
 
-    // modeled one-way A2A time, scaled to wall-clock
-    let bytes_out = t * k * m.token_bytes;
-    let delay = Duration::from_secs_f64(link.transfer_time(bytes_out) * time_scale);
+    // modeled one-way A2A times, scaled to wall-clock: routed phase
+    // totals when a cost model is supplied, the scalar link otherwise
+    let (disp_secs, comb_secs) = match topo {
+        Some(tc) => routed_pair_delays(tc, k),
+        None => {
+            let bytes_out = t * k * m.token_bytes;
+            let one_way = link.transfer_time(bytes_out);
+            (one_way, one_way)
+        }
+    };
+    let delay = Duration::from_secs_f64(disp_secs * time_scale);
+    let combine_delay = Duration::from_secs_f64(comb_secs * time_scale);
 
     let t0 = Instant::now();
     let mut spans = Vec::new();
@@ -308,7 +346,7 @@ pub fn run_pair_real(
     let expert_out: Vec<f32>;
     if overlap {
         // launch comm + experts, then run the backbone concurrently
-        let rx = cluster.dispatch_async(enc, delay, delay);
+        let rx = cluster.dispatch_async(enc, delay, combine_delay);
         run_backbone(&mut spans)?;
         let s = Instant::now();
         expert_out = cluster.collect(rx);
@@ -320,7 +358,7 @@ pub fn run_pair_real(
         thread::sleep(delay); // A2A dispatch
         let rx = cluster.dispatch_async(enc, Duration::ZERO, Duration::ZERO);
         expert_out = cluster.collect(rx);
-        thread::sleep(delay); // A2A combine
+        thread::sleep(combine_delay); // A2A combine
         mark_into(&mut spans, t0, "MoE(serial)", s, Instant::now());
     }
 
@@ -329,4 +367,69 @@ pub fn run_pair_real(
     mark_into(&mut spans, t0, "Decode", s, Instant::now());
     let _ = cap;
     Ok((y, spans))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Topology;
+    use crate::coordinator::costs::ComputeCosts;
+
+    fn base() -> ComputeCosts {
+        ComputeCosts {
+            attn: 1.0, mlp: 0.75, se: 0.75, gate: 0.0625, encode: 0.0625,
+            decode: 0.0625, expert_k1: 0.5,
+        }
+    }
+
+    #[test]
+    fn routed_delays_are_direction_aware() {
+        // two tokens (sourced on devices 0 and 1) both route to device
+        // 2's expert: dispatch is two single-message sends, combine is
+        // one two-message fan-out from device 2 — the combine delay
+        // pays the extra launch latency and double volume.
+        let rt = RoutingTable::build(&[2, 2], &[1.0, 1.0], 2, 1, 3, 2);
+        let topo = Topology {
+            n_devices: 3,
+            devices_per_node: 3,
+            intra: LinkModel::new(0.0625, 1024.0),
+            inter: None,
+            compute_scale: 1.0,
+            device_scales: None,
+            node_intra: None,
+        };
+        let tc = TopoCosts::from_routing(&base(), &topo, &rt,
+                                         &Placement::new(3, 3), 64);
+        let (disp, comb) = routed_pair_delays(&tc, 1);
+        assert_eq!(disp, 0.0625 + 64.0 / 1024.0);
+        assert_eq!(comb, 0.125 + 128.0 / 1024.0);
+    }
+
+    #[test]
+    fn affinity_packing_shrinks_routed_delays() {
+        // the dyadic routed corpus fleet: affinity packing keeps every
+        // route node-local, so both scalar delays drop vs the block
+        // layout (the values the real executor now injects)
+        let idx: Vec<i32> =
+            vec![0, 2, 0, 2, 2, 0, 0, 2, 1, 3, 3, 1, 3, 1, 3, 3];
+        let w = vec![1.0f32; 16];
+        let rt = RoutingTable::build(&idx, &w, 16, 1, 4, 16);
+        let topo = Topology {
+            n_devices: 4,
+            devices_per_node: 2,
+            intra: LinkModel::new(0.0625, 1024.0),
+            inter: Some(LinkModel::new(0.125, 512.0)),
+            compute_scale: 1.0,
+            device_scales: None,
+            node_intra: None,
+        };
+        let delays = |p: &Placement| {
+            routed_pair_delays(
+                &TopoCosts::from_routing(&base(), &topo, &rt, p, 64), 1)
+        };
+        let (bd, bc) = delays(&Placement::new(4, 4));
+        let (ad, ac) = delays(&Placement::affinity_packed(&rt, 4, 2));
+        assert_eq!((bd, bc), (0.625, 0.625));
+        assert_eq!((ad, ac), (0.25, 0.25));
+    }
 }

@@ -19,6 +19,10 @@
 //! - `adaptive`: Eq. 11 — the adaptive placement of expert computation
 //!   among the four candidate locations in the shared-expert stream,
 //!   including the fleet-level argmin over topology-aware simulations;
+//! - `replace`: live re-placement — `MigrationPlan` (expert→device
+//!   deltas priced as H2D DES tasks), `ReplacePolicy` (never / every-k /
+//!   break-even) and `run_replace_timeline` composing per-step schedules
+//!   with overlapped migrations into N-step makespans;
 //! - `timeline`: ASCII rendering of DES spans (regenerates Fig. 6);
 //! - `exec`: real threaded execution of the same schedules against PJRT
 //!   artifacts with injected link delays (validates the DES).
@@ -26,6 +30,7 @@
 pub mod adaptive;
 pub mod costs;
 pub mod exec;
+pub mod replace;
 pub mod schedule;
 pub mod spec;
 pub mod timeline;
@@ -33,6 +38,8 @@ pub mod timeline;
 pub use adaptive::{choose_expert_slot, choose_expert_slot_model,
                    choose_expert_slot_topo};
 pub use costs::{BlockCosts, ChunkSource, ChunkedA2a, MoEKind, Strategy, TopoCosts};
+pub use replace::{ExpertMove, MigrationPlan, ReplaceConfig, ReplaceOutcome,
+                  ReplacePolicy, StepReport, run_replace_timeline};
 pub use schedule::{build_pair_schedule, build_pair_schedule_auto,
                    ChunkPipelining, PairSchedule};
 pub use spec::{CostModel, PhaseDir, PhaseScope, ScheduleSpec, SlotPolicy};

@@ -1,0 +1,387 @@
+//! Live expert re-placement: migration plans priced as H2D DES tasks,
+//! composed with per-step schedules into migration-aware multi-step
+//! timelines.
+//!
+//! The single-step simulator answers "how fast is this placement?"; this
+//! module answers the temporal follow-up ExFlow (arXiv:2401.08383) and
+//! MoNTA (arXiv:2411.00662) pose together: *when does re-placing pay for
+//! itself?* A [`MigrationPlan`] is the expert→device delta between two
+//! [`Placement`]s with per-expert byte costs; its transfers become real
+//! DES tasks on the per-device [`Resource::H2D`] engines, overlapped
+//! behind the backbone compute of the step in which they fire.
+//! [`run_replace_timeline`] drives N steps of a routing stream through a
+//! [`ScheduleSpec`], feeding every step's table to a
+//! [`AffinityEstimator`](crate::moe::AffinityEstimator) and letting a
+//! [`ReplacePolicy`] decide when the measured-affinity packing is worth
+//! migrating to; the N-step makespan is the sum of the per-step DES
+//! makespans (migration steps include their H2D spans).
+//!
+//! The break-even arithmetic is deliberately DES-true: because the H2D
+//! engines run concurrently with the step's compute/comm streams, the
+//! cost of a migration is only the part of the transfer that *outlasts*
+//! the step (`max(0, transfer − step makespan)`), and the per-step
+//! saving is the difference of two simulated makespans under the cost
+//! model's own phase totals. `scmoe report replace` and
+//! `timeline_explorer --replace` drive the studies; every pinned number
+//! is minted through `tools/des_mirror/mirror2.py` (PR5 model).
+
+use crate::cluster::{LinkModel, Topology};
+use crate::moe::{AffinityEstimator, Placement, RoutingTable};
+use crate::simtime::{Resource, Sim, TaskId};
+
+use super::costs::{ComputeCosts, TopoCosts};
+use super::spec::ScheduleSpec;
+
+/// One expert's parameter move between devices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExpertMove {
+    /// Expert whose parameters move.
+    pub expert: usize,
+    /// Device owning the expert before the migration.
+    pub from: usize,
+    /// Device owning the expert after the migration.
+    pub to: usize,
+    /// Parameter bytes transferred (the expert's full weight footprint).
+    pub bytes: usize,
+}
+
+/// The expert→device delta between two placements, with byte costs —
+/// everything needed to price a live re-placement.
+#[derive(Debug, Clone)]
+pub struct MigrationPlan {
+    /// One move per expert whose device changed, in ascending expert id.
+    pub moves: Vec<ExpertMove>,
+    /// Fleet size (sizes the per-device H2D accounting).
+    pub n_devices: usize,
+}
+
+impl MigrationPlan {
+    /// Diff two placements over the same experts and fleet: one
+    /// [`ExpertMove`] of `bytes_per_expert` for every expert whose
+    /// owning device differs.
+    pub fn between(old: &Placement, new: &Placement,
+                   bytes_per_expert: usize) -> MigrationPlan {
+        assert_eq!(old.n_experts, new.n_experts,
+                   "placements must cover the same experts");
+        assert_eq!(old.n_devices, new.n_devices,
+                   "placements must cover the same fleet");
+        let moves = (0..old.n_experts)
+            .filter_map(|e| {
+                let (from, to) = (old.device_of(e), new.device_of(e));
+                (from != to).then_some(ExpertMove {
+                    expert: e,
+                    from,
+                    to,
+                    bytes: bytes_per_expert,
+                })
+            })
+            .collect();
+        MigrationPlan { moves, n_devices: old.n_devices }
+    }
+
+    /// True when the placements were identical (nothing to transfer).
+    pub fn is_empty(&self) -> bool {
+        self.moves.is_empty()
+    }
+
+    /// Total bytes the migration moves — exactly
+    /// `moved experts × bytes_per_expert`.
+    pub fn total_bytes(&self) -> usize {
+        self.moves.iter().map(|m| m.bytes).sum()
+    }
+
+    /// Bytes arriving at one device's H2D engine.
+    pub fn bytes_into(&self, device: usize) -> usize {
+        self.moves.iter().filter(|m| m.to == device).map(|m| m.bytes).sum()
+    }
+
+    /// Serialized per-destination-engine transfer time: each receiving
+    /// device's H2D engine runs its incoming moves back to back, and the
+    /// plan completes when the slowest engine drains — the same value
+    /// the DES produces for the dependency-free tasks of
+    /// [`Self::add_h2d_tasks`].
+    pub fn time(&self, h2d: &LinkModel) -> f64 {
+        let mut per = vec![0.0f64; self.n_devices];
+        for m in &self.moves {
+            per[m.to] += h2d.transfer_time(m.bytes);
+        }
+        per.iter().fold(0.0f64, |w, &x| w.max(x))
+    }
+
+    /// Add one DES task per move on the destination device's
+    /// [`Resource::H2D`] engine, dependency-free: transfers start at
+    /// step begin and genuinely overlap the step's backbone compute and
+    /// All-to-All phases (separate resources). Returns the task ids.
+    pub fn add_h2d_tasks(&self, sim: &mut Sim, h2d: &LinkModel) -> Vec<TaskId> {
+        self.moves
+            .iter()
+            .map(|m| {
+                sim.add(format!("H2D-E{}", m.expert), Resource::H2D(m.to),
+                        h2d.transfer_time(m.bytes), &[])
+            })
+            .collect()
+    }
+}
+
+/// When a multi-step timeline migrates to the measured-affinity packing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplacePolicy {
+    /// Never migrate: the initial placement is held for every step (the
+    /// static baseline).
+    Never,
+    /// Migrate on every k-th step whenever the measured packing differs
+    /// from the current placement, ignoring costs. `k = 1` is the eager
+    /// every-step baseline — under drift noise it churns, repaying
+    /// migration cost for placements barely better than the last.
+    EveryK {
+        /// Step period (fires on steps `k-1, 2k-1, …`).
+        k: usize,
+    },
+    /// Migrate only when the projected downstream saving repays the
+    /// migration's makespan cost: simulated per-step saving × remaining
+    /// steps must exceed the part of the transfer that outlasts the
+    /// current step (MoNTA-style cost awareness, DES-true overlap).
+    BreakEven,
+}
+
+impl ReplacePolicy {
+    /// Display label for study tables.
+    pub fn label(&self) -> String {
+        match self {
+            ReplacePolicy::Never => "never".into(),
+            ReplacePolicy::EveryK { k } => format!("every-{k}"),
+            ReplacePolicy::BreakEven => "break-even".into(),
+        }
+    }
+
+    /// The decision rule. `step` is 0-based, `remaining` the steps left
+    /// after this one, `saving` the simulated per-step makespan gain of
+    /// the candidate placement, `overhead` the migration's makespan cost
+    /// (`max(0, transfer − step makespan)` — the overlapped remainder).
+    pub fn should_migrate(&self, step: usize, remaining: usize, saving: f64,
+                          overhead: f64) -> bool {
+        match self {
+            ReplacePolicy::Never => false,
+            ReplacePolicy::EveryK { k } => {
+                assert!(*k > 0, "EveryK period must be at least 1");
+                (step + 1) % k == 0
+            }
+            ReplacePolicy::BreakEven => {
+                saving > 0.0 && saving * remaining as f64 > overhead
+            }
+        }
+    }
+}
+
+/// Everything a multi-step re-placement timeline needs beyond the
+/// routing stream: which schedule to build per step, when to migrate,
+/// and what a migration costs.
+#[derive(Debug, Clone)]
+pub struct ReplaceConfig {
+    /// Schedule built for every step (fixed or adaptive slot; resolved
+    /// per step against that step's routed costs).
+    pub spec: ScheduleSpec,
+    /// Migration decision rule.
+    pub policy: ReplacePolicy,
+    /// Parameter bytes per migrated expert.
+    pub bytes_per_expert: usize,
+    /// Host-to-device transfer link the H2D engines model.
+    pub h2d: LinkModel,
+    /// Estimator decay (1.0 = counting; < 1.0 forgets old regimes).
+    pub decay: f64,
+}
+
+/// One step of a [`ReplaceOutcome`].
+#[derive(Debug, Clone)]
+pub struct StepReport {
+    /// 0-based step index.
+    pub step: usize,
+    /// DES makespan of the step, including migration H2D spans if a
+    /// migration fired here.
+    pub makespan: f64,
+    /// DES makespan of the step's schedule alone (no migration tasks).
+    pub base_makespan: f64,
+    /// Whether a migration fired during this step (the new placement
+    /// takes effect from the next step).
+    pub migrated: bool,
+    /// Bytes the migration moved (0 when `!migrated`).
+    pub migration_bytes: usize,
+    /// Serialized H2D transfer time of the migration (0 when
+    /// `!migrated`); the step pays only `max(0, this − base_makespan)`.
+    pub migration_time: f64,
+}
+
+/// Result of [`run_replace_timeline`]: per-step reports plus the N-step
+/// totals and the placement left in force after the last step.
+#[derive(Debug, Clone)]
+pub struct ReplaceOutcome {
+    /// One report per input routing table, in step order.
+    pub steps: Vec<StepReport>,
+    /// Sum of the per-step makespans — the N-step timeline's makespan
+    /// under strict step barriers (optimizer steps synchronize the
+    /// fleet between iterations).
+    pub total: f64,
+    /// Number of migrations fired.
+    pub migrations: usize,
+    /// Placement in force after the final step.
+    pub final_placement: Placement,
+}
+
+/// Drive an N-step routing stream through per-step schedules with live
+/// measured-affinity re-placement.
+///
+/// Per step: (1) price the step's table under the placement currently
+/// in force (`TopoCosts::from_routing` — routed phases + expert loads)
+/// and build the spec's schedule; (2) feed the table to the affinity
+/// estimator; (3) unless the policy is [`ReplacePolicy::Never`] or this
+/// is the last step, diff the current placement against the measured
+/// packing and ask the policy; (4) on migration, overlap the plan's H2D
+/// tasks into *this* step's DES graph — the new placement takes effect
+/// from the *next* step (weights move while the current step computes
+/// with the old layout). Balanced/static streams reduce bit-exactly to
+/// N independent single-step schedules (mirror `consistency_checks5`).
+pub fn run_replace_timeline(base: &ComputeCosts, topo: &Topology,
+                            token_bytes: usize, tables: &[RoutingTable],
+                            initial: &Placement,
+                            cfg: &ReplaceConfig) -> ReplaceOutcome {
+    assert!(!tables.is_empty(), "a timeline needs at least one step");
+    let n_nodes = topo.n_devices / topo.devices_per_node;
+    let mut est = AffinityEstimator::ewma(initial.n_experts, n_nodes, cfg.decay);
+    let mut placement = initial.clone();
+    let mut steps = Vec::with_capacity(tables.len());
+    let mut total = 0.0f64;
+    let mut migrations = 0usize;
+    let n_steps = tables.len();
+    for (s, rt) in tables.iter().enumerate() {
+        let costs = TopoCosts::from_routing(base, topo, rt, &placement,
+                                            token_bytes);
+        let mut sched = cfg.spec.build(&costs);
+        let base_makespan = sched.makespan();
+        est.observe(rt, topo.n_devices, topo.devices_per_node);
+        let remaining = n_steps - s - 1;
+        let mut migrated = false;
+        let mut migration_bytes = 0usize;
+        let mut migration_time = 0.0f64;
+        if remaining > 0 && cfg.policy != ReplacePolicy::Never {
+            let candidate = est.packed(topo.n_devices, topo.devices_per_node);
+            let plan = MigrationPlan::between(&placement, &candidate,
+                                             cfg.bytes_per_expert);
+            if !plan.is_empty() {
+                // the H2D engines run concurrently with the step's
+                // schedule, so the makespan cost of migrating is only
+                // the part of the transfer that outlasts the step
+                let mig = plan.time(&cfg.h2d);
+                let overhead = (mig - base_makespan).max(0.0);
+                let saving = match cfg.policy {
+                    ReplacePolicy::BreakEven => {
+                        let cand = TopoCosts::from_routing(
+                            base, topo, rt, &candidate, token_bytes);
+                        base_makespan - cfg.spec.build(&cand).makespan()
+                    }
+                    _ => 0.0,
+                };
+                if cfg.policy.should_migrate(s, remaining, saving, overhead) {
+                    plan.add_h2d_tasks(&mut sched.sim, &cfg.h2d);
+                    migrated = true;
+                    migration_bytes = plan.total_bytes();
+                    migration_time = mig;
+                    placement = candidate;
+                    migrations += 1;
+                }
+            }
+        }
+        // the DES is deterministic, so a step without migration tasks
+        // keeps the makespan already simulated above
+        let makespan = if migrated { sched.makespan() } else { base_makespan };
+        total += makespan;
+        steps.push(StepReport {
+            step: s,
+            makespan,
+            base_makespan,
+            migrated,
+            migration_bytes,
+            migration_time,
+        });
+    }
+    ReplaceOutcome { steps, total, migrations, final_placement: placement }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn placements() -> (Placement, Placement) {
+        // block [0,1,2,3] vs the corpus affinity packing [0,3,1,2]
+        (Placement::new(4, 4), Placement::custom(4, 4, vec![0, 3, 1, 2]))
+    }
+
+    #[test]
+    fn plan_diffs_only_moved_experts() {
+        let (block, affinity) = placements();
+        let plan = MigrationPlan::between(&block, &affinity, 4096);
+        assert_eq!(plan.moves.len(), 3); // expert 0 stays on device 0
+        assert_eq!(plan.moves[0],
+                   ExpertMove { expert: 1, from: 1, to: 3, bytes: 4096 });
+        assert_eq!(plan.total_bytes(), 3 * 4096);
+        assert_eq!(plan.bytes_into(0), 0);
+        assert_eq!(plan.bytes_into(3), 4096);
+        assert!(MigrationPlan::between(&block, &block, 4096).is_empty());
+    }
+
+    #[test]
+    fn plan_time_serializes_per_destination_engine() {
+        // two experts land on device 0, one on device 1: device 0's H2D
+        // engine runs its transfers back to back
+        let old = Placement::custom(3, 3, vec![1, 2, 2]);
+        let new = Placement::custom(3, 3, vec![0, 0, 1]);
+        let plan = MigrationPlan::between(&old, &new, 1000);
+        let h2d = LinkModel::new(0.5, 1000.0);
+        assert!((plan.time(&h2d) - 2.0 * 1.5).abs() < 1e-15);
+        // and the DES agrees with the analytic serialization
+        let mut sim = Sim::new();
+        plan.add_h2d_tasks(&mut sim, &h2d);
+        assert!((sim.makespan() - plan.time(&h2d)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn h2d_tasks_never_overlap_on_one_engine() {
+        let old = Placement::custom(4, 2, vec![0, 0, 1, 1]);
+        let new = Placement::custom(4, 2, vec![1, 1, 0, 0]);
+        let mut sim = Sim::new();
+        MigrationPlan::between(&old, &new, 2048)
+            .add_h2d_tasks(&mut sim, &LinkModel::new(0.25, 1024.0));
+        let mut spans = sim.run();
+        spans.sort_by(|a, b| {
+            a.resource.cmp(&b.resource)
+                .then(a.start.partial_cmp(&b.start).unwrap())
+        });
+        for w in spans.windows(2) {
+            if w[0].resource == w[1].resource {
+                assert!(w[1].start >= w[0].end - 1e-12,
+                        "H2D overlap on {:?}", w[0].resource);
+            }
+        }
+    }
+
+    #[test]
+    fn policy_decisions() {
+        assert!(!ReplacePolicy::Never.should_migrate(0, 10, 1.0, 0.0));
+        let eager = ReplacePolicy::EveryK { k: 1 };
+        assert!(eager.should_migrate(0, 10, 0.0, 100.0));
+        let every3 = ReplacePolicy::EveryK { k: 3 };
+        assert!(!every3.should_migrate(0, 10, 0.0, 0.0));
+        assert!(every3.should_migrate(2, 10, 0.0, 0.0));
+        let be = ReplacePolicy::BreakEven;
+        assert!(be.should_migrate(0, 10, 1.0, 5.0)); // 10 > 5
+        assert!(!be.should_migrate(0, 4, 1.0, 5.0)); // 4 < 5
+        assert!(!be.should_migrate(0, 10, -1.0, 0.0)); // regression never pays
+        assert_eq!(be.label(), "break-even");
+        assert_eq!(every3.label(), "every-3");
+    }
+
+    #[test]
+    #[should_panic(expected = "at least 1")]
+    fn zero_period_policy_is_rejected() {
+        ReplacePolicy::EveryK { k: 0 }.should_migrate(0, 10, 0.0, 0.0);
+    }
+}

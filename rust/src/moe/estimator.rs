@@ -1,0 +1,177 @@
+//! Measured expert affinity over a multi-step routing stream.
+//!
+//! ExFlow (arXiv:2401.08383) observes that token→expert affinity is
+//! stable from one training iteration to the next, so expert placement
+//! should be *learned from measured routing traces* instead of derived
+//! from a single oracle table. [`AffinityEstimator`] is that
+//! accumulator: it folds a stream of [`RoutingTable`]s into a
+//! per-(expert, source-node) route-count matrix, and
+//! [`AffinityEstimator::packed`] turns the measured matrix into the
+//! ExFlow-style placement via
+//! [`Placement::affinity_packed_measured`](super::Placement::affinity_packed_measured).
+//!
+//! Two accumulation modes share one update rule
+//! `count = decay * count + observed`:
+//!
+//! - [`AffinityEstimator::counting`] (`decay = 1.0`) — plain counting,
+//!   the right choice under a stable routing regime (every observation
+//!   weighs equally, noise averages away);
+//! - [`AffinityEstimator::ewma`] (`decay < 1.0`) — exponentially
+//!   discounted counting, which forgets old regimes geometrically and
+//!   re-learns a post-shift affinity structure within a few steps.
+//!
+//! The estimator feeds `coordinator::replace::run_replace_timeline`,
+//! where the measured packing becomes a live re-placement priced as H2D
+//! migration tasks (see docs/ARCHITECTURE.md §"Measured affinity and
+//! live re-placement").
+
+use super::placement::Placement;
+use super::router::RoutingTable;
+
+/// Discounted (expert, source-node) route counts over a stream of
+/// routing tables — the measured replacement for the single-table
+/// oracle that `Placement::affinity_packed` consumes.
+#[derive(Debug, Clone)]
+pub struct AffinityEstimator {
+    /// Experts covered by every observed table.
+    pub n_experts: usize,
+    /// Nodes tokens are sourced from (fleet nodes).
+    pub n_nodes: usize,
+    /// Per-step discount on the accumulated counts (1.0 = counting).
+    pub decay: f64,
+    /// Row-major `[n_experts, n_nodes]` discounted route counts.
+    counts: Vec<f64>,
+    /// Number of tables observed so far.
+    pub steps: usize,
+}
+
+impl AffinityEstimator {
+    /// Pure counting accumulator (`decay = 1.0`): every observed step
+    /// weighs equally forever.
+    pub fn counting(n_experts: usize, n_nodes: usize) -> AffinityEstimator {
+        AffinityEstimator::ewma(n_experts, n_nodes, 1.0)
+    }
+
+    /// Exponentially discounted accumulator: before each observation the
+    /// stored counts are multiplied by `decay`, so a step observed `s`
+    /// steps ago weighs `decay^s`. Requires `0 < decay <= 1`.
+    pub fn ewma(n_experts: usize, n_nodes: usize, decay: f64) -> AffinityEstimator {
+        assert!(n_experts > 0 && n_nodes > 0);
+        assert!(decay > 0.0 && decay <= 1.0, "decay must be in (0, 1]");
+        AffinityEstimator {
+            n_experts,
+            n_nodes,
+            decay,
+            counts: vec![0.0; n_experts * n_nodes],
+            steps: 0,
+        }
+    }
+
+    /// Fold one step's routing table into the measured matrix. Token
+    /// sources follow the same convention as
+    /// `RoutingTable::a2a_bytes_placed`: tokens split evenly over
+    /// `n_devices` in index order, nodes are contiguous device blocks of
+    /// `devices_per_node`. Only *kept* routes count (dropped routes move
+    /// no tokens, so they attract no affinity either).
+    pub fn observe(&mut self, rt: &RoutingTable, n_devices: usize,
+                   devices_per_node: usize) {
+        assert_eq!(rt.n_experts, self.n_experts,
+                   "observed table must cover the estimator's experts");
+        assert!(devices_per_node > 0 && n_devices % devices_per_node == 0);
+        assert_eq!(n_devices / devices_per_node, self.n_nodes,
+                   "observed fleet must match the estimator's node count");
+        let tokens_per_device = rt.n_tokens.div_ceil(n_devices);
+        let mut obs = vec![0usize; self.n_experts * self.n_nodes];
+        for r in &rt.routes {
+            let src = (r.token / tokens_per_device).min(n_devices - 1);
+            obs[r.expert * self.n_nodes + src / devices_per_node] += 1;
+        }
+        for (c, &o) in self.counts.iter_mut().zip(&obs) {
+            *c = self.decay * *c + o as f64;
+        }
+        self.steps += 1;
+    }
+
+    /// Measured (discounted) route count from `node` into `expert`.
+    pub fn affinity(&self, expert: usize, node: usize) -> f64 {
+        assert!(expert < self.n_experts && node < self.n_nodes);
+        self.counts[expert * self.n_nodes + node]
+    }
+
+    /// The full row-major `[n_experts, n_nodes]` measured matrix — the
+    /// input [`Placement::affinity_packed_measured`] consumes.
+    pub fn matrix(&self) -> &[f64] {
+        &self.counts
+    }
+
+    /// ExFlow-style placement packed from the measured matrix (greedy,
+    /// capacity-balanced per node — see
+    /// [`Placement::affinity_packed_measured`]).
+    pub fn packed(&self, n_devices: usize, devices_per_node: usize) -> Placement {
+        Placement::affinity_packed_measured(&self.counts, self.n_experts,
+                                            n_devices, devices_per_node)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus_table() -> RoutingTable {
+        // the dyadic routed corpus table: node 0's tokens route to
+        // experts {0, 2}, node 1's to {1, 3}
+        let indices: Vec<i32> =
+            vec![0, 2, 0, 2, 2, 0, 0, 2, 1, 3, 3, 1, 3, 1, 3, 3];
+        let weights = vec![1.0f32; 16];
+        RoutingTable::build(&indices, &weights, 16, 1, 4, 16)
+    }
+
+    #[test]
+    fn counting_matches_one_shot_affinity() {
+        let rt = corpus_table();
+        let mut est = AffinityEstimator::counting(4, 2);
+        for _ in 0..3 {
+            est.observe(&rt, 4, 2);
+        }
+        assert_eq!(est.steps, 3);
+        // counts are a 3x scaling of the one-shot matrix, so the greedy
+        // packing is identical to Placement::affinity_packed
+        let reference = Placement::affinity_packed(&rt, 4, 2);
+        let measured = est.packed(4, 2);
+        for e in 0..4 {
+            assert_eq!(measured.device_of(e), reference.device_of(e));
+        }
+        assert_eq!(est.affinity(0, 0), 12.0);
+        assert_eq!(est.affinity(0, 1), 0.0);
+    }
+
+    #[test]
+    fn ewma_forgets_an_old_regime() {
+        // regime A: all tokens to expert 0 come from node 0; regime B
+        // flips the sourcing. After a few post-shift steps the EWMA
+        // matrix must favor the new regime.
+        let a: Vec<i32> = vec![0, 0, 0, 0, 1, 1, 1, 1];
+        let b: Vec<i32> = vec![1, 1, 1, 1, 0, 0, 0, 0];
+        let w = vec![1.0f32; 8];
+        let rt_a = RoutingTable::build(&a, &w, 8, 1, 2, 8);
+        let rt_b = RoutingTable::build(&b, &w, 8, 1, 2, 8);
+        let mut est = AffinityEstimator::ewma(2, 2, 0.5);
+        for _ in 0..8 {
+            est.observe(&rt_a, 4, 2);
+        }
+        assert!(est.affinity(0, 0) > est.affinity(0, 1));
+        for _ in 0..3 {
+            est.observe(&rt_b, 4, 2);
+        }
+        assert!(est.affinity(0, 1) > est.affinity(0, 0),
+                "EWMA failed to forget regime A: {} vs {}",
+                est.affinity(0, 0), est.affinity(0, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "node count")]
+    fn observe_rejects_mismatched_fleet() {
+        let rt = corpus_table();
+        AffinityEstimator::counting(4, 2).observe(&rt, 8, 2);
+    }
+}

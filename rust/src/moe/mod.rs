@@ -7,12 +7,17 @@
 //! It also feeds the scheduling simulator: `RoutingTable::a2a_bytes_placed`
 //! turns real routing decisions plus a [`Placement`] into the per-device-
 //! pair byte matrix that `coordinator::TopoCosts::from_routing` converts
-//! into per-link All-to-All phase times.
+//! into per-link All-to-All phase times, and [`AffinityEstimator`]
+//! accumulates measured (expert, source-node) affinity over a multi-step
+//! stream of routing tables so placements can be *learned* (ExFlow-style)
+//! and re-learned live instead of derived from a single oracle table.
 
 pub mod dispatch;
+pub mod estimator;
 pub mod placement;
 pub mod router;
 
 pub use dispatch::{decode, decode_into, encode, encode_into};
+pub use estimator::AffinityEstimator;
 pub use placement::{ExpertLoad, Placement};
 pub use router::{Route, RoutingTable};

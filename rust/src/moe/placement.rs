@@ -9,6 +9,10 @@
 //! - [`Placement::affinity_packed`] — ExFlow-style (arXiv:2401.08383)
 //!   greedy packing that co-locates each expert with the node sourcing
 //!   most of its tokens, shrinking inter-node A2A volume;
+//! - [`Placement::affinity_packed_measured`] — the same greedy packer
+//!   over a *measured* affinity matrix (an
+//!   [`AffinityEstimator`](super::AffinityEstimator)'s discounted route
+//!   counts over a multi-step stream), for live re-placement;
 //! - [`Placement::imbalance_skewed`] — a deliberately skewed layout that
 //!   concentrates experts on a device prefix, for studying hot-device
 //!   link contention;
@@ -55,55 +59,79 @@ impl Placement {
         Placement { n_experts, n_devices, map }
     }
 
-    /// ExFlow-style affinity packing: assign each expert to the node that
-    /// sources most of its routed tokens (greedy, highest-demand experts
-    /// first, node capacity balanced at `n_experts / n_nodes` experts per
-    /// node), then round-robin experts over the node's devices. When every
-    /// expert's traffic comes from a single node and group sizes match the
-    /// capacity, the resulting layout makes all A2A traffic node-local and
-    /// the inter-node phase times drop to zero.
+    /// ExFlow-style affinity packing from a *single oracle table*:
+    /// count each expert's routed copies per source node, then pack with
+    /// [`Self::affinity_packed_measured`]. Token sources follow the same
+    /// convention as `RoutingTable::a2a_bytes_placed`: tokens are split
+    /// evenly over devices in index order.
     ///
-    /// Token sources follow the same convention as
-    /// `RoutingTable::a2a_bytes_placed`: tokens are split evenly over
-    /// devices in index order.
+    /// For placements learned over a multi-step routing stream, feed a
+    /// [`super::AffinityEstimator`]'s measured matrix to
+    /// [`Self::affinity_packed_measured`] instead (this one-shot wrapper
+    /// is the `steps == 1` counting special case, bit-exactly).
     pub fn affinity_packed(rt: &RoutingTable, n_devices: usize,
                            devices_per_node: usize) -> Placement {
         assert!(devices_per_node > 0 && n_devices % devices_per_node == 0);
         let n_nodes = n_devices / devices_per_node;
-        assert!(rt.n_experts % n_nodes == 0,
-                "experts ({}) must divide into {} nodes", rt.n_experts, n_nodes);
         let tokens_per_device = rt.n_tokens.div_ceil(n_devices);
-        // affinity[e][node] = routed copies expert e receives from node
-        let mut aff = vec![vec![0usize; n_nodes]; rt.n_experts];
+        // affinity[e * n_nodes + node] = routed copies from that node
+        let mut aff = vec![0.0f64; rt.n_experts * n_nodes];
         for r in &rt.routes {
             let src = (r.token / tokens_per_device).min(n_devices - 1);
-            aff[r.expert][src / devices_per_node] += 1;
+            aff[r.expert * n_nodes + src / devices_per_node] += 1.0;
         }
+        Placement::affinity_packed_measured(&aff, rt.n_experts, n_devices,
+                                            devices_per_node)
+    }
+
+    /// ExFlow-style affinity packing from a *measured* affinity matrix
+    /// (row-major `[n_experts, n_nodes]`, e.g. an
+    /// [`super::AffinityEstimator`]'s discounted route counts): assign
+    /// each expert to the node sourcing most of its measured traffic
+    /// (greedy, highest-demand experts first — ties break toward the
+    /// lower expert id — node capacity balanced at `n_experts / n_nodes`
+    /// experts per node), then round-robin experts over the node's
+    /// devices. When every expert's measured traffic comes from a single
+    /// node and group sizes match the capacity, the resulting layout
+    /// makes all A2A traffic node-local and the inter-node phase times
+    /// drop to zero.
+    pub fn affinity_packed_measured(aff: &[f64], n_experts: usize,
+                                    n_devices: usize,
+                                    devices_per_node: usize) -> Placement {
+        assert!(devices_per_node > 0 && n_devices % devices_per_node == 0);
+        let n_nodes = n_devices / devices_per_node;
+        assert_eq!(aff.len(), n_experts * n_nodes,
+                   "affinity matrix must be [n_experts, n_nodes]");
+        assert!(n_experts % n_nodes == 0,
+                "experts ({n_experts}) must divide into {n_nodes} nodes");
         // place the highest-demand experts first (ties: lower expert id)
-        let mut order: Vec<usize> = (0..rt.n_experts).collect();
-        order.sort_by_key(|&e| {
-            (std::cmp::Reverse(aff[e].iter().sum::<usize>()), e)
+        let total: Vec<f64> = (0..n_experts)
+            .map(|e| aff[e * n_nodes..(e + 1) * n_nodes].iter().sum())
+            .collect();
+        let mut order: Vec<usize> = (0..n_experts).collect();
+        order.sort_by(|&a, &b| {
+            total[b].partial_cmp(&total[a]).unwrap().then(a.cmp(&b))
         });
-        let cap = rt.n_experts / n_nodes;
+        let cap = n_experts / n_nodes;
         let mut node_load = vec![0usize; n_nodes];
-        let mut map = vec![0usize; rt.n_experts];
+        let mut map = vec![0usize; n_experts];
         for &e in &order {
             let mut best: Option<usize> = None;
-            let mut best_aff = 0usize;
+            let mut best_aff = 0.0f64;
             for node in 0..n_nodes {
                 if node_load[node] >= cap {
                     continue;
                 }
-                if best.is_none() || aff[e][node] > best_aff {
+                if best.is_none() || aff[e * n_nodes + node] > best_aff {
                     best = Some(node);
-                    best_aff = aff[e][node];
+                    best_aff = aff[e * n_nodes + node];
                 }
             }
             let node = best.expect("capacities sum to n_experts");
             map[e] = node * devices_per_node + node_load[node] % devices_per_node;
             node_load[node] += 1;
         }
-        Placement::custom(rt.n_experts, n_devices, map)
+        Placement::custom(n_experts, n_devices, map)
     }
 
     /// Imbalance-skewed layout: pack `pack` experts per device onto the
@@ -258,6 +286,25 @@ mod tests {
         assert_eq!(
             (0..4).map(|e| p.device_of(e)).collect::<Vec<_>>(),
             vec![0, 3, 1, 2]
+        );
+    }
+
+    #[test]
+    fn measured_packing_follows_fractional_affinity() {
+        // EWMA-style non-integer matrix (4 experts x 2 nodes): experts 0
+        // and 2 lean toward node 1, experts 1 and 3 toward node 0. The
+        // greedy packer places by demand order (e0, e1, e3, e2) under the
+        // 2-experts-per-node capacity.
+        let aff = vec![
+            1.5, 2.25, // expert 0 -> node 1
+            3.0, 0.5, // expert 1 -> node 0
+            0.25, 1.0, // expert 2 -> node 1
+            2.0, 0.0, // expert 3 -> node 0
+        ];
+        let p = Placement::affinity_packed_measured(&aff, 4, 4, 2);
+        assert_eq!(
+            (0..4).map(|e| p.device_of(e)).collect::<Vec<_>>(),
+            vec![2, 0, 3, 1]
         );
     }
 

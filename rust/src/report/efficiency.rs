@@ -118,6 +118,41 @@ pub fn node_affine_routing(n_devices: usize, devices_per_node: usize,
     RoutingTable::build(&indices, &weights, n_tokens, k, n_experts, n_tokens)
 }
 
+/// Seeded *drifting* node-affine routing (k = 1) for multi-step
+/// re-placement studies: each token picks an expert from its node's
+/// affinity group, except that with probability `noise` it picks a
+/// uniformly random expert instead — so the affinity structure is stable
+/// but every step's table differs (ExFlow's iteration-to-iteration
+/// stability with measurement noise). `regime` rotates the node→group
+/// mapping: node `n` is affine to group `(n + regime) % n_nodes`, so
+/// bumping the regime mid-stream models a routing-regime shift that
+/// invalidates a learned placement. Deterministic per seed (splitmix64);
+/// capacity is sized so nothing drops.
+pub fn drifting_node_affine_routing(n_devices: usize, devices_per_node: usize,
+                                    n_experts: usize,
+                                    tokens_per_device: usize, regime: usize,
+                                    noise: f64, seed: u64) -> RoutingTable {
+    assert!(devices_per_node > 0 && n_devices % devices_per_node == 0);
+    let n_nodes = n_devices / devices_per_node;
+    assert!(n_experts % n_nodes == 0, "experts must divide into nodes");
+    let group = n_experts / n_nodes;
+    let n_tokens = n_devices * tokens_per_device;
+    let mut rng = Rng::new(seed);
+    let mut indices = Vec::with_capacity(n_tokens);
+    let weights = vec![1.0f32; n_tokens];
+    for t in 0..n_tokens {
+        let node = (t / tokens_per_device) / devices_per_node;
+        let aff_node = (node + regime) % n_nodes;
+        let e = if rng.next_f64() < noise {
+            rng.below(n_experts)
+        } else {
+            aff_node + n_nodes * rng.below(group)
+        };
+        indices.push(e as i32);
+    }
+    RoutingTable::build(&indices, &weights, n_tokens, 1, n_experts, n_tokens)
+}
+
 /// Training-iteration costs: forward + backward. Backward roughly doubles
 /// compute (recompute + grads) and repeats both All-to-Alls for gradients.
 pub fn train_costs(c: &BlockCosts) -> BlockCosts {

@@ -11,6 +11,7 @@
 pub mod efficiency;
 pub mod offload_report;
 pub mod quality;
+pub mod replace;
 
 use anyhow::{bail, Result};
 
@@ -25,6 +26,7 @@ pub fn run(exp: &str, args: &Args) -> Result<()> {
             efficiency::speedup_tables(args)
         }
         "topo" | "fleet" => efficiency::topo_report(args),
+        "replace" => replace::replace_report(args),
         "fig10" => offload_report::fig10(args),
         "table1" => quality::table1(args),
         "table2" => quality::table_archs(args, &["top2", "top1", "shared", "scmoe"], "table2"),

@@ -1,0 +1,187 @@
+//! The live re-placement study (`scmoe report replace`): when does
+//! migrating to a measured-affinity placement pay for itself?
+//!
+//! Two scenarios on the 32xA800-4node-IB preset (GPT3-XL payload, 8 KiB
+//! tokens), both driven by [`run_replace_timeline`] over seeded
+//! [`drifting_node_affine_routing`] streams:
+//!
+//! - **A (stable drift)** — node-affine routing with 5% per-token noise,
+//!   counting estimator, starting from the uniform block placement. The
+//!   break-even policy migrates once at step 0 (128 MiB/expert over a
+//!   16 GB/s H2D link stretches that step), then every later step runs
+//!   node-local; the cumulative makespan crosses below static-uniform at
+//!   a pinned break-even step count.
+//! - **B (regime shift)** — the node→group affinity rotates at step 8
+//!   under 15% noise (EWMA decay 0.5). Eager every-step re-placement
+//!   churns (a migration nearly every step, each repaying little), while
+//!   the break-even threshold migrates exactly twice: once at warmup and
+//!   once after the shift — strictly beating both eager and never.
+//!
+//! Every pinned number is minted through the DES mirror
+//! (`tools/des_mirror/mirror2.py --study`, PR5 model) and pinned in
+//! `rust/tests/replace_timeline.rs`. The same scenario constants are
+//! exported so `timeline_explorer --replace` renders the identical runs.
+
+use anyhow::Result;
+
+use crate::cluster::{LinkModel, Scenario};
+use crate::coordinator::costs::{MoEKind, Strategy};
+use crate::coordinator::replace::{
+    run_replace_timeline, ReplaceConfig, ReplaceOutcome, ReplacePolicy,
+};
+use crate::coordinator::spec::ScheduleSpec;
+use crate::moe::{Placement, RoutingTable};
+use crate::util::cli::Args;
+use crate::util::stats::fmt_secs;
+
+use super::efficiency::{drifting_node_affine_routing, xl_compute_costs};
+
+/// Steps per study timeline.
+pub const STUDY_STEPS: usize = 16;
+/// Step at which scenario B's routing regime rotates.
+pub const STUDY_SHIFT_STEP: usize = 8;
+/// Tokens per device per step (matches the routed placement study).
+pub const STUDY_TOKENS_PER_DEVICE: usize = 640;
+/// Payload bytes per routed token copy (GPT3-XL, 8 KiB).
+pub const STUDY_TOKEN_BYTES: usize = 8192;
+/// Parameter bytes per migrated expert (128 MiB — a GPT3-XL-class FFN
+/// expert in bf16).
+pub const STUDY_BYTES_PER_EXPERT: usize = 128 * 1024 * 1024;
+/// Scenario A per-token noise / base seed.
+pub const STUDY_DRIFT_NOISE: f64 = 0.05;
+/// Scenario A base seed (step s draws from seed + s).
+pub const STUDY_DRIFT_SEED: u64 = 11;
+/// Scenario B per-token noise / base seed / estimator decay.
+pub const STUDY_SHIFT_NOISE: f64 = 0.15;
+/// Scenario B base seed.
+pub const STUDY_SHIFT_SEED: u64 = 211;
+/// Scenario B estimator decay (EWMA; scenario A uses counting = 1.0).
+pub const STUDY_SHIFT_DECAY: f64 = 0.5;
+
+/// The modeled host-to-device migration link (PCIe-gen4-class 16 GB/s).
+pub fn study_h2d_link() -> LinkModel {
+    LinkModel::new(10e-6, 16e9)
+}
+
+/// One routing table per step: drifting node-affine routing on the
+/// 32-device fleet, with the regime rotated from `shift_at` onward.
+pub fn study_tables(noise: f64, seed0: u64,
+                    shift_at: Option<usize>) -> Vec<RoutingTable> {
+    (0..STUDY_STEPS)
+        .map(|s| {
+            let regime = match shift_at {
+                Some(at) if s >= at => 1,
+                _ => 0,
+            };
+            drifting_node_affine_routing(32, 8, 32, STUDY_TOKENS_PER_DEVICE,
+                                         regime, noise, seed0 + s as u64)
+        })
+        .collect()
+}
+
+/// The study's [`ReplaceConfig`]: sequential ScMoE steps (the strategy
+/// where placement effects are largest), the pinned per-expert bytes and
+/// H2D link.
+pub fn study_config(policy: ReplacePolicy, decay: f64) -> ReplaceConfig {
+    ReplaceConfig {
+        spec: ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, Strategy::Sequential),
+        policy,
+        bytes_per_expert: STUDY_BYTES_PER_EXPERT,
+        h2d: study_h2d_link(),
+        decay,
+    }
+}
+
+/// Run one policy over a study table stream from the uniform block
+/// placement on the 4-node IB preset.
+pub fn run_study(tables: &[RoutingTable], policy: ReplacePolicy,
+                 decay: f64) -> ReplaceOutcome {
+    let topo = Scenario::FourNodeA800IBx32.topology();
+    let base = xl_compute_costs();
+    let initial = Placement::new(32, 32);
+    run_replace_timeline(&base, &topo, STUDY_TOKEN_BYTES, tables, &initial,
+                         &study_config(policy, decay))
+}
+
+/// First step count (1-based) at which the replacing run's cumulative
+/// makespan drops strictly below the static run's; `None` if it never
+/// does within the timeline.
+pub fn break_even_step(static_run: &ReplaceOutcome,
+                       replace_run: &ReplaceOutcome) -> Option<usize> {
+    let mut cum_s = 0.0f64;
+    let mut cum_r = 0.0f64;
+    for (a, b) in static_run.steps.iter().zip(&replace_run.steps) {
+        cum_s += a.makespan;
+        cum_r += b.makespan;
+        if cum_r < cum_s {
+            return Some(a.step + 1);
+        }
+    }
+    None
+}
+
+/// `M`/`.` per step: which steps fired a migration.
+pub fn migration_marks(outcome: &ReplaceOutcome) -> String {
+    outcome.steps.iter().map(|s| if s.migrated { 'M' } else { '.' }).collect()
+}
+
+/// `scmoe report replace` — both scenarios, tabulated.
+pub fn replace_report(_args: &Args) -> Result<()> {
+    let sc = Scenario::FourNodeA800IBx32;
+    println!("== live re-placement study ({}, GPT3-XL payload) ==",
+             sc.label());
+    println!("{} steps, {} tokens/dev, {} B tokens; migrations move {} MiB \
+              per expert over a {:.0} GB/s H2D link",
+             STUDY_STEPS, STUDY_TOKENS_PER_DEVICE, STUDY_TOKEN_BYTES,
+             STUDY_BYTES_PER_EXPERT >> 20, study_h2d_link().beta / 1e9);
+
+    println!("\n-- scenario A: stable drift (noise {:.0}%, counting \
+              estimator, seed {}) --",
+             STUDY_DRIFT_NOISE * 100.0, STUDY_DRIFT_SEED);
+    let tables = study_tables(STUDY_DRIFT_NOISE, STUDY_DRIFT_SEED, None);
+    let static_run = run_study(&tables, ReplacePolicy::Never, 1.0);
+    let replace_run = run_study(&tables, ReplacePolicy::BreakEven, 1.0);
+    println!("{:<5} {:>12} {:>12} {:>10} {:>12} {:>12}",
+             "step", "static", "replace", "h2d", "cum-static", "cum-replace");
+    let mut cum_s = 0.0f64;
+    let mut cum_r = 0.0f64;
+    for (a, b) in static_run.steps.iter().zip(&replace_run.steps) {
+        cum_s += a.makespan;
+        cum_r += b.makespan;
+        println!("{:<4}{} {:>12} {:>12} {:>10} {:>12} {:>12}",
+                 a.step, if b.migrated { "*" } else { " " },
+                 fmt_secs(a.makespan), fmt_secs(b.makespan),
+                 if b.migrated { fmt_secs(b.migration_time) } else { "-".into() },
+                 fmt_secs(cum_s), fmt_secs(cum_r));
+    }
+    match break_even_step(&static_run, &replace_run) {
+        Some(n) => println!("break-even: migrate-then-run strictly beats \
+                             static-uniform from step {n} on"),
+        None => println!("break-even: not reached within {STUDY_STEPS} steps"),
+    }
+    println!("totals: static {} | replace {} ({:.2}x); {} migration(s)",
+             fmt_secs(static_run.total), fmt_secs(replace_run.total),
+             static_run.total / replace_run.total, replace_run.migrations);
+
+    println!("\n-- scenario B: regime shift at step {} (noise {:.0}%, EWMA \
+              decay {}, seed {}) --",
+             STUDY_SHIFT_STEP, STUDY_SHIFT_NOISE * 100.0, STUDY_SHIFT_DECAY,
+             STUDY_SHIFT_SEED);
+    let tables = study_tables(STUDY_SHIFT_NOISE, STUDY_SHIFT_SEED,
+                              Some(STUDY_SHIFT_STEP));
+    println!("{:<12} {:>12} {:>11}  {:<16}",
+             "policy", "total", "migrations", "timeline");
+    for policy in [ReplacePolicy::Never, ReplacePolicy::EveryK { k: 1 },
+                   ReplacePolicy::BreakEven] {
+        let run = run_study(&tables, policy, STUDY_SHIFT_DECAY);
+        println!("{:<12} {:>12} {:>11}  {}",
+                 policy.label(), fmt_secs(run.total), run.migrations,
+                 migration_marks(&run));
+    }
+    println!("eager re-placement churns under drift noise (a migration \
+              nearly every step, each");
+    println!("repaying little); the break-even threshold migrates once at \
+              warmup and once after");
+    println!("the shift, strictly beating both eager and static");
+    Ok(())
+}

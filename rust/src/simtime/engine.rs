@@ -20,7 +20,10 @@ pub enum Resource {
     /// A node's shared inter-node uplink (IB/Ethernet fabric): all
     /// node-crossing All-to-All phases of that node serialize here.
     Link(usize),
-    /// Host-to-device transfer engine (expert offloading migrations).
+    /// A device's host-to-device transfer engine: expert-offloading
+    /// fetches and live re-placement migrations
+    /// (`coordinator::replace::MigrationPlan::add_h2d_tasks`) serialize
+    /// here while overlapping the device's compute and comm streams.
     H2D(usize),
     /// Unlimited: bookkeeping tasks that consume time but no stream.
     Free,
@@ -179,6 +182,17 @@ mod tests {
         let _b = sim.add("y", Resource::Compute(0), 2.0, &[]);
         // same resource, no deps: still serial
         assert_eq!(sim.makespan(), 4.0);
+    }
+
+    #[test]
+    fn h2d_engine_serializes_and_overlaps_compute() {
+        let mut sim = Sim::new();
+        sim.add("comp", Resource::Compute(0), 2.0, &[]);
+        sim.add("m1", Resource::H2D(0), 1.5, &[]);
+        sim.add("m2", Resource::H2D(0), 1.5, &[]);
+        // the two transfers overlap compute on a separate engine but
+        // serialize against each other: makespan = 1.5 + 1.5
+        assert_eq!(sim.makespan(), 3.0);
     }
 
     #[test]

@@ -9,6 +9,7 @@
 
 use scmoe::cluster::{LinkModel, Topology};
 use scmoe::coordinator::costs::{BlockCosts, ComputeCosts, MoEKind, Strategy, TopoCosts};
+use scmoe::coordinator::replace::MigrationPlan;
 use scmoe::coordinator::schedule::{build_pair_schedule, ChunkPipelining, PairSchedule};
 use scmoe::coordinator::spec::ScheduleSpec;
 use scmoe::moe::{Placement, RoutingTable};
@@ -222,6 +223,33 @@ fn generate_lines() -> Vec<String> {
                                Strategy::Pipelined { chunks: 2 })
                 .build(&tc)));
     }
+
+    // live re-placement migration steps: the routed block-placement
+    // schedules with the block->affinity MigrationPlan's H2D transfers
+    // overlapped in as dependency-free tasks on the h<dev> engines
+    // (4096 B/expert over an alpha=0.125 beta=1024 H2D link -> 4.125 s
+    // per moved expert). The pre-existing spans stay byte-identical to
+    // the routed:block entries (mirror consistency_checks5).
+    let block = Placement::new(4, 4);
+    let affinity = Placement::affinity_packed(&rt, 4, 2);
+    let plan = MigrationPlan::between(&block, &affinity, 4096);
+    let h2d = LinkModel::new(0.125, 1024.0);
+    let tc = routed_fleet(&rt, &block);
+    for (name, spec) in [
+        ("seq",
+         ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, Strategy::Sequential)),
+        ("overlap-s2",
+         ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, Strategy::Overlap)
+             .with_slot(2)),
+        ("pipe2",
+         ScheduleSpec::new(MoEKind::ScMoE { k: 1 },
+                           Strategy::Pipelined { chunks: 2 })),
+    ] {
+        let mut sched = spec.build(&tc);
+        plan.add_h2d_tasks(&mut sched.sim, &h2d);
+        lines.push(render_line(&format!("replace:block->affinity/{name}"),
+                               &sched));
+    }
     lines
 }
 
@@ -263,7 +291,8 @@ fn golden_file_covers_every_kind_and_strategy() {
         "/overlap+pipe2-s0", "fleet:", "fleet:Top2/pipe2-chained",
         "fleet:ScMoE/overlap+pipe2-s2", "routed:block/", "routed:affinity/",
         "routed:skewed/", "routed:skewed/overlap+pipe2-s2",
-        "routed:skewed/pipe2",
+        "routed:skewed/pipe2", "replace:block->affinity/seq",
+        "replace:block->affinity/overlap-s2", "replace:block->affinity/pipe2",
     ] {
         assert!(GOLDEN.contains(needle), "golden corpus is missing {needle}");
     }

@@ -1,0 +1,229 @@
+//! Acceptance tests for the dynamic re-placement subsystem: estimator
+//! convergence under drift, migration byte-accounting exactness, H2D
+//! non-overlap on the migration step, the bit-exact static reduction,
+//! and the two pinned multi-step studies on 32xA800-4node-IB (break-even
+//! vs static-uniform; regime shift where the break-even threshold beats
+//! eager every-step re-placement). Every pinned value was minted through
+//! the validated DES mirror (`tools/des_mirror/mirror2.py --study`).
+
+use scmoe::cluster::{LinkModel, Scenario, Topology};
+use scmoe::coordinator::costs::{ComputeCosts, MoEKind, Strategy, TopoCosts};
+use scmoe::coordinator::replace::{
+    run_replace_timeline, MigrationPlan, ReplaceConfig, ReplacePolicy,
+};
+use scmoe::coordinator::spec::ScheduleSpec;
+use scmoe::moe::{AffinityEstimator, Placement, RoutingTable};
+use scmoe::report::efficiency::drifting_node_affine_routing;
+use scmoe::report::replace::{
+    break_even_step, migration_marks, run_study, study_h2d_link,
+    study_tables, STUDY_BYTES_PER_EXPERT, STUDY_DRIFT_NOISE,
+    STUDY_DRIFT_SEED, STUDY_SHIFT_DECAY, STUDY_SHIFT_NOISE, STUDY_SHIFT_SEED,
+    STUDY_SHIFT_STEP, STUDY_TOKEN_BYTES,
+};
+use scmoe::simtime::Resource;
+
+/// First-maximum argmax over an expert's per-node affinities (strict
+/// `>`, matching the mirror's tie semantics).
+fn argmax_node(est: &AffinityEstimator, expert: usize, n_nodes: usize) -> usize {
+    let mut best = 0usize;
+    for node in 1..n_nodes {
+        if est.affinity(expert, node) > est.affinity(expert, best) {
+            best = node;
+        }
+    }
+    best
+}
+
+#[test]
+fn estimator_converges_to_planted_affinity_under_drift() {
+    // planted structure: expert e is affine to node e % 4; 20% of
+    // tokens route uniformly at random instead. After 4 noisy steps the
+    // counting estimator must recover the planted structure exactly —
+    // argmax per expert AND the packed placement's node assignment.
+    let mut est = AffinityEstimator::counting(32, 4);
+    for s in 0..4u64 {
+        let rt = drifting_node_affine_routing(32, 8, 32, 64, 0, 0.2, 5000 + s);
+        est.observe(&rt, 32, 8);
+    }
+    assert_eq!(est.steps, 4);
+    for e in 0..32 {
+        assert_eq!(argmax_node(&est, e, 4), e % 4, "expert {e} argmax");
+    }
+    let p = est.packed(32, 8);
+    for e in 0..32 {
+        assert_eq!(p.device_of(e) / 8, e % 4, "expert {e} packed node");
+    }
+}
+
+fn dyadic_topo() -> Topology {
+    Topology {
+        n_devices: 4,
+        devices_per_node: 2,
+        intra: LinkModel::new(0.0625, 1024.0),
+        inter: Some(LinkModel::new(0.125, 512.0)),
+        compute_scale: 1.0,
+        device_scales: None,
+        node_intra: None,
+    }
+}
+
+fn dyadic_base() -> ComputeCosts {
+    ComputeCosts {
+        attn: 1.0,
+        mlp: 0.75,
+        se: 0.75,
+        gate: 0.0625,
+        encode: 0.0625,
+        decode: 0.0625,
+        expert_k1: 0.5,
+    }
+}
+
+fn corpus_table() -> RoutingTable {
+    let indices: Vec<i32> = vec![0, 2, 0, 2, 2, 0, 0, 2, 1, 3, 3, 1, 3, 1, 3, 3];
+    let weights = vec![1.0f32; 16];
+    RoutingTable::build(&indices, &weights, 16, 1, 4, 16)
+}
+
+#[test]
+fn static_stream_reduces_to_single_step_schedules() {
+    // a Never-policy timeline over N identical tables is N independent
+    // single-step schedules, bit-exactly — the multi-step composition
+    // adds nothing when nothing migrates
+    let rt = corpus_table();
+    let spec = ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, Strategy::Sequential);
+    let single = spec
+        .build(&TopoCosts::from_routing(&dyadic_base(), &dyadic_topo(), &rt,
+                                        &Placement::new(4, 4), 64))
+        .makespan();
+    let cfg = ReplaceConfig {
+        spec,
+        policy: ReplacePolicy::Never,
+        bytes_per_expert: 4096,
+        h2d: LinkModel::new(0.125, 1024.0),
+        decay: 1.0,
+    };
+    let tables = vec![rt; 4];
+    let out = run_replace_timeline(&dyadic_base(), &dyadic_topo(), 64,
+                                   &tables, &Placement::new(4, 4), &cfg);
+    assert_eq!(out.migrations, 0);
+    for step in &out.steps {
+        assert_eq!(step.makespan, single); // bit-exact, not a tolerance
+        assert_eq!(step.base_makespan, single);
+        assert!(!step.migrated);
+        assert_eq!(step.migration_bytes, 0);
+    }
+    let sum: f64 = out.steps.iter().map(|s| s.makespan).sum();
+    assert_eq!(out.total, sum);
+}
+
+#[test]
+fn migration_step_h2d_tasks_are_exact_and_never_overlap() {
+    // reconstruct the drift study's migration step: one observation,
+    // measured packing, plan overlapped into the block-layout schedule
+    let topo = Scenario::FourNodeA800IBx32.topology();
+    let base = scmoe::report::efficiency::xl_compute_costs();
+    let tables = study_tables(STUDY_DRIFT_NOISE, STUDY_DRIFT_SEED, None);
+    let block = Placement::new(32, 32);
+    let mut est = AffinityEstimator::counting(32, 4);
+    est.observe(&tables[0], 32, 8);
+    let measured = est.packed(32, 8);
+    let plan = MigrationPlan::between(&block, &measured, STUDY_BYTES_PER_EXPERT);
+    // byte accounting is exact: 30 experts move (pinned via the mirror),
+    // each carrying its full parameter footprint
+    assert_eq!(plan.moves.len(), 30);
+    assert_eq!(plan.total_bytes(), 30 * STUDY_BYTES_PER_EXPERT);
+    assert_eq!((0..32).map(|d| plan.bytes_into(d)).sum::<usize>(),
+               plan.total_bytes());
+    let spec = ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, Strategy::Sequential);
+    let tc = TopoCosts::from_routing(&base, &topo, &tables[0], &block,
+                                     STUDY_TOKEN_BYTES);
+    let mut sched = spec.build(&tc);
+    let base_makespan = sched.makespan();
+    plan.add_h2d_tasks(&mut sched.sim, &study_h2d_link());
+    let spans = sched.run();
+    // per-engine H2D spans serialize (exclusive resource) and the step
+    // stretches to the slowest engine: makespan = max(base, plan time)
+    let mut h2d_spans: Vec<_> = spans
+        .iter()
+        .filter(|s| matches!(s.resource, Resource::H2D(_)))
+        .collect();
+    assert_eq!(h2d_spans.len(), 30);
+    h2d_spans.sort_by(|a, b| {
+        a.resource.cmp(&b.resource)
+            .then(a.start.partial_cmp(&b.start).unwrap())
+    });
+    for w in h2d_spans.windows(2) {
+        if w[0].resource == w[1].resource {
+            assert!(w[1].start >= w[0].end - 1e-12,
+                    "H2D overlap on {:?}", w[0].resource);
+        }
+    }
+    let end = spans.iter().fold(0.0f64, |m, s| m.max(s.end));
+    let expect = base_makespan.max(plan.time(&study_h2d_link()));
+    assert!((end - expect).abs() < 1e-12,
+            "migration step makespan {end} vs {expect}");
+    assert!(end > base_makespan, "128 MiB/expert must stretch the step");
+}
+
+#[test]
+fn break_even_study_beats_static_beyond_pinned_step_count() {
+    // scenario A (stable drift): the break-even policy migrates exactly
+    // once, at step 0, and the cumulative makespan crosses below the
+    // static-uniform baseline at step 6 (pinned via the mirror); from
+    // step 1 on, every migrated-run step is strictly faster
+    let tables = study_tables(STUDY_DRIFT_NOISE, STUDY_DRIFT_SEED, None);
+    let static_run = run_study(&tables, ReplacePolicy::Never, 1.0);
+    let replace_run = run_study(&tables, ReplacePolicy::BreakEven, 1.0);
+    assert_eq!(replace_run.migrations, 1);
+    assert!(replace_run.steps[0].migrated, "migration fires at step 0");
+    assert_eq!(replace_run.steps[0].migration_bytes,
+               30 * STUDY_BYTES_PER_EXPERT);
+    assert!(replace_run.steps[0].makespan > static_run.steps[0].makespan,
+            "the migration step itself costs extra");
+    for (a, b) in static_run.steps.iter().zip(&replace_run.steps).skip(1) {
+        assert!(b.makespan < a.makespan,
+                "step {}: replaced {} vs static {}", a.step, b.makespan,
+                a.makespan);
+    }
+    assert_eq!(break_even_step(&static_run, &replace_run), Some(6));
+    assert!(replace_run.total < static_run.total,
+            "16-step totals: replace {} vs static {}", replace_run.total,
+            static_run.total);
+    // the measured placement recovered the planted node structure
+    for e in 0..32 {
+        assert_eq!(replace_run.final_placement.device_of(e) / 8, e % 4);
+    }
+}
+
+#[test]
+fn regime_shift_threshold_beats_eager_replacement() {
+    // scenario B (regime shift at step 8): eager every-step replacement
+    // churns — 15 migrations, each repaying little — while the
+    // break-even threshold migrates exactly twice (warmup + one step
+    // after the shift) and strictly beats both eager and never
+    let tables = study_tables(STUDY_SHIFT_NOISE, STUDY_SHIFT_SEED,
+                              Some(STUDY_SHIFT_STEP));
+    let never = run_study(&tables, ReplacePolicy::Never, STUDY_SHIFT_DECAY);
+    let eager = run_study(&tables, ReplacePolicy::EveryK { k: 1 },
+                          STUDY_SHIFT_DECAY);
+    let threshold = run_study(&tables, ReplacePolicy::BreakEven,
+                              STUDY_SHIFT_DECAY);
+    assert_eq!(never.migrations, 0);
+    assert_eq!(eager.migrations, 15);
+    assert_eq!(threshold.migrations, 2);
+    assert_eq!(migration_marks(&threshold), "M........M......");
+    assert!(threshold.total < never.total,
+            "replacing must beat the static layout across the shift: {} vs {}",
+            threshold.total, never.total);
+    assert!(threshold.total < eager.total,
+            "threshold {} must strictly beat eager {}", threshold.total,
+            eager.total);
+    // eager's churn is the mechanism: every migration step pays for its
+    // H2D transfers with makespan
+    for step in eager.steps.iter().filter(|s| s.migrated) {
+        assert!(step.makespan >= step.base_makespan);
+        assert!(step.migration_time > step.base_makespan,
+                "churn migrations outlast the step they overlap");
+    }
+}

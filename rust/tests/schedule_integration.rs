@@ -124,9 +124,9 @@ fn real_distributed_pair_matches_fused_oracle_and_overlap_wins() {
     let ovl_spec = ScheduleSpec::new(MoEKind::ScMoE { k }, Strategy::Overlap);
     let seq_spec = ScheduleSpec::new(MoEKind::ScMoE { k }, Strategy::Sequential);
     let (y_overlap, _) =
-        run_pair_real(&set, &cluster, &xt, &ovl_spec, link, 1.0, 2).unwrap();
+        run_pair_real(&set, &cluster, &xt, &ovl_spec, None, link, 1.0, 2).unwrap();
     let (y_seq, _) =
-        run_pair_real(&set, &cluster, &xt, &seq_spec, link, 1.0, 2).unwrap();
+        run_pair_real(&set, &cluster, &xt, &seq_spec, None, link, 1.0, 2).unwrap();
 
     // numerics: both strategies produce identical results
     for (a, b) in y_overlap.iter().zip(&y_seq) {
@@ -149,7 +149,7 @@ fn real_distributed_pair_matches_fused_oracle_and_overlap_wins() {
     // wall-clock: overlap hides the injected comm behind the backbone
     let time = |spec: &ScheduleSpec| {
         let t0 = std::time::Instant::now();
-        run_pair_real(&set, &cluster, &xt, spec, link, 1.0, 2).unwrap();
+        run_pair_real(&set, &cluster, &xt, spec, None, link, 1.0, 2).unwrap();
         t0.elapsed().as_secs_f64()
     };
     // median of 3

@@ -1843,18 +1843,452 @@ def emit_corpus4(path):
     print(f'emitted {len(lines)} corpus lines to {path}')
 
 
+# ======================================================================
+# PR 5 model: measured-affinity live re-placement with migration-aware
+# multi-step timelines. Transcribes the planned Rust line-by-line:
+#   moe/estimator.rs        -> AffinityEstimator (EWMA/counting over a
+#                              RoutingTable stream)
+#   moe/placement.rs        -> Placement::affinity_packed_measured (the
+#                              greedy packer over a measured f64 matrix;
+#                              affinity_packed becomes a one-shot wrapper)
+#   coordinator/replace.rs  -> MigrationPlan (expert->device deltas with
+#                              per-expert byte costs, priced as H2D DES
+#                              tasks), ReplacePolicy, run_replace_timeline
+#   report/efficiency.rs    -> drifting_node_affine_routing (seeded drift
+#                              + regime-shift scenario generator)
+# ======================================================================
+
+
+def h2d(d):
+    return ("h2d", d)
+
+
+def transfer_time(link, bytes_):
+    """LinkModel::transfer_time — zero bytes send no message."""
+    if bytes_ == 0:
+        return 0.0
+    return link.alpha + float(bytes_) / link.beta
+
+
+def affinity_packed_measured(aff, n_experts, n_devices, devices_per_node):
+    """Placement::affinity_packed_measured — the ExFlow-style greedy
+    packer over a row-major [n_experts, n_nodes] measured affinity
+    matrix (f64). Integer-valued matrices reproduce the one-shot
+    Placement.affinity_packed bit-exactly (checked in
+    consistency_checks5)."""
+    assert devices_per_node > 0 and n_devices % devices_per_node == 0
+    n_nodes = n_devices // devices_per_node
+    assert len(aff) == n_experts * n_nodes
+    assert n_experts % n_nodes == 0
+    total = [sum(aff[e * n_nodes:(e + 1) * n_nodes])
+             for e in range(n_experts)]
+    order = sorted(range(n_experts), key=lambda e: (-total[e], e))
+    cap = n_experts // n_nodes
+    node_load = [0] * n_nodes
+    mapping = [0] * n_experts
+    for e in order:
+        best = None
+        best_aff = 0.0
+        for node in range(n_nodes):
+            if node_load[node] >= cap:
+                continue
+            a = aff[e * n_nodes + node]
+            if best is None or a > best_aff:
+                best = node
+                best_aff = a
+        mapping[e] = best * devices_per_node + node_load[best] % devices_per_node
+        node_load[best] += 1
+    return Placement(n_experts, n_devices, mapping)
+
+
+class AffinityEstimator:
+    """moe::AffinityEstimator — discounted (expert, source-node) route
+    counts over a multi-step stream of RoutingTables. decay = 1.0 is
+    pure counting; decay < 1.0 forgets old regimes geometrically."""
+
+    def __init__(self, n_experts, n_nodes, decay):
+        assert 0.0 < decay <= 1.0
+        self.n_experts = n_experts
+        self.n_nodes = n_nodes
+        self.decay = decay
+        self.counts = [0.0] * (n_experts * n_nodes)
+        self.steps = 0
+
+    def observe(self, rt, n_devices, devices_per_node):
+        assert rt.n_experts == self.n_experts
+        assert n_devices % devices_per_node == 0
+        assert n_devices // devices_per_node == self.n_nodes
+        tokens_per_device = -(-rt.n_tokens // n_devices)
+        obs = [0] * (self.n_experts * self.n_nodes)
+        for (t, kk, e, slot, w) in rt.routes:
+            src = min(t // tokens_per_device, n_devices - 1)
+            obs[e * self.n_nodes + src // devices_per_node] += 1
+        for i in range(len(self.counts)):
+            self.counts[i] = self.decay * self.counts[i] + float(obs[i])
+        self.steps += 1
+
+    def affinity(self, expert, node):
+        return self.counts[expert * self.n_nodes + node]
+
+    def packed(self, n_devices, devices_per_node):
+        return affinity_packed_measured(self.counts, self.n_experts,
+                                        n_devices, devices_per_node)
+
+
+class MigrationPlan:
+    """coordinator::replace::MigrationPlan — moves = (expert, from, to,
+    bytes), one per expert whose device changed between placements."""
+
+    def __init__(self, moves, n_devices):
+        self.moves = moves
+        self.n_devices = n_devices
+
+    @staticmethod
+    def between(old, new, bytes_per_expert):
+        assert old.n_experts == new.n_experts
+        assert old.n_devices == new.n_devices
+        moves = []
+        for e in range(old.n_experts):
+            f, t = old.device_of(e), new.device_of(e)
+            if f != t:
+                moves.append((e, f, t, bytes_per_expert))
+        return MigrationPlan(moves, old.n_devices)
+
+    def is_empty(self):
+        return not self.moves
+
+    def total_bytes(self):
+        return sum(m[3] for m in self.moves)
+
+    def bytes_into(self, device):
+        return sum(m[3] for m in self.moves if m[2] == device)
+
+    def time(self, link):
+        """Serialized per-destination-engine transfer time (the H2D
+        engine of each receiving device runs its moves back to back);
+        the plan completes when the slowest engine drains."""
+        per = [0.0] * self.n_devices
+        for (e, f, t, b) in self.moves:
+            per[t] += transfer_time(link, b)
+        worst = 0.0
+        for x in per:
+            worst = max(worst, x)
+        return worst
+
+    def add_h2d_tasks(self, sim, link):
+        """One DES task per move on the destination device's H2D engine,
+        dependency-free: transfers start at step begin and overlap the
+        step's backbone compute."""
+        return [sim.add(f"H2D-E{e}", h2d(t), transfer_time(link, b), [])
+                for (e, f, t, b) in self.moves]
+
+
+# ReplacePolicy: ('never',) | ('every', k) | ('break-even',)
+
+def should_migrate(policy, step, remaining, saving, overhead):
+    if policy[0] == 'never':
+        return False
+    if policy[0] == 'every':
+        return (step + 1) % policy[1] == 0
+    return saving > 0.0 and saving * float(remaining) > overhead
+
+
+def drifting_node_affine_routing(n_devices, devices_per_node, n_experts,
+                                 tokens_per_device, regime, noise, seed):
+    """report::efficiency::drifting_node_affine_routing — k = 1
+    node-affine routing with per-token noise: with probability `noise` a
+    token picks a uniformly random expert instead of one from its node's
+    affinity group. `regime` rotates the node->group mapping (a regime
+    shift re-labels which experts each node is affine to)."""
+    assert devices_per_node > 0 and n_devices % devices_per_node == 0
+    n_nodes = n_devices // devices_per_node
+    assert n_experts % n_nodes == 0
+    group = n_experts // n_nodes
+    n_tokens = n_devices * tokens_per_device
+    rng = Rng(seed)
+    indices = []
+    weights = [1.0] * n_tokens
+    for t in range(n_tokens):
+        node = (t // tokens_per_device) // devices_per_node
+        aff_node = (node + regime) % n_nodes
+        if rng.next_f64() < noise:
+            e = rng.below(n_experts)
+        else:
+            e = aff_node + n_nodes * rng.below(group)
+        indices.append(e)
+    return RoutingTable(indices, weights, n_tokens, 1, n_experts, n_tokens)
+
+
+def run_replace_timeline(base, topo, token_bytes, tables, initial, kind,
+                         strat, policy, bytes_per_expert, h2d_link, decay,
+                         slot=0, pipelining=STAGED):
+    """coordinator::replace::run_replace_timeline — per step: build the
+    step's schedule under the placement in force, observe the step's
+    routing, and (policy permitting) fire a migration to the measured
+    packing whose H2D tasks overlap THIS step; the new placement takes
+    effect from the NEXT step. Returns (steps, total, migrations) with
+    steps = (step, makespan, base_makespan, migrated, bytes, mig_time)."""
+    n_nodes = topo.n_devices // topo.devices_per_node
+    est = AffinityEstimator(initial.n_experts, n_nodes, decay)
+    placement = initial
+    steps = []
+    total = 0.0
+    migrations = 0
+    n_steps = len(tables)
+    for s, rt in enumerate(tables):
+        costs = topo_from_routing4(base, topo, rt, placement, token_bytes)
+        sim = build_spec4(costs, kind, strat, slot, pipelining)
+        base_makespan = sim.makespan()
+        est.observe(rt, topo.n_devices, topo.devices_per_node)
+        remaining = n_steps - s - 1
+        migrated = False
+        mig_bytes = 0
+        mig_time = 0.0
+        if remaining > 0 and policy[0] != 'never':
+            candidate = est.packed(topo.n_devices, topo.devices_per_node)
+            plan = MigrationPlan.between(placement, candidate,
+                                         bytes_per_expert)
+            if not plan.is_empty():
+                # the H2D engines run concurrently with the step's
+                # schedule, so the makespan cost of migrating is only
+                # the part of the transfer that outlasts the step
+                mig = plan.time(h2d_link)
+                overhead = max(0.0, mig - base_makespan)
+                if policy[0] == 'break-even':
+                    cand_costs = topo_from_routing4(base, topo, rt, candidate,
+                                                    token_bytes)
+                    saving = base_makespan - build_spec4(
+                        cand_costs, kind, strat, slot, pipelining).makespan()
+                else:
+                    saving = 0.0
+                if should_migrate(policy, s, remaining, saving, overhead):
+                    plan.add_h2d_tasks(sim, h2d_link)
+                    migrated = True
+                    mig_bytes = plan.total_bytes()
+                    mig_time = mig
+                    placement = candidate
+                    migrations += 1
+        # deterministic DES: only migration tasks can change the makespan
+        makespan = sim.makespan() if migrated else base_makespan
+        total += makespan
+        steps.append((s, makespan, base_makespan, migrated, mig_bytes,
+                      mig_time))
+    return steps, total, migrations
+
+
+# --- PR5 golden corpus additions --------------------------------------
+
+REPLACE_H2D_LINK = LinkModel(0.125, 1024.0)
+REPLACE_BYTES_PER_EXPERT = 4096
+
+
+def generate_replace_lines5():
+    """Migration-step goldens: the routed block-placement schedules with
+    the block->affinity MigrationPlan's H2D tasks overlapped in (all
+    dyadic: 0.125 + 4096/1024 = 4.125 s per moved expert)."""
+    rt = routed_table3()
+    block = Placement.block(4, 4)
+    affinity = Placement.affinity_packed(rt, 4, 2)
+    plan = MigrationPlan.between(block, affinity, REPLACE_BYTES_PER_EXPERT)
+    tc = routed_fleet4(rt, block)
+    lines = []
+    for name, strat, slot in [('seq', ('seq',), 0),
+                              ('overlap-s2', ('overlap',), 2),
+                              ('pipe2', ('pipe', 2), 0)]:
+        sim = build_spec4(tc, ('scmoe', 1), strat, slot)
+        plan.add_h2d_tasks(sim, REPLACE_H2D_LINK)
+        lines.append(render_line(f'replace:block->affinity/{name}', sim))
+    return lines
+
+
+def generate_corpus_lines5():
+    return generate_corpus_lines4() + generate_replace_lines5()
+
+
+def validate_corpus5():
+    golden_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                               '..', '..', 'rust', 'tests', 'golden',
+                               'timelines.txt')
+    golden = [l for l in open(golden_path).read().splitlines()
+              if l.strip() and not l.startswith('#')]
+    lines = generate_corpus_lines5()
+    bad = 0
+    if len(golden) != len(lines):
+        print(f'line-count mismatch: golden {len(golden)} vs mirror {len(lines)}')
+        bad += 1
+    for g, cu in zip(golden, lines):
+        if g != cu:
+            bad += 1
+            print('- ' + g)
+            print('+ ' + cu)
+    print(f'golden corpus (PR5 model): {len(lines)} lines, {bad} mismatches')
+    return bad == 0
+
+
+def emit_corpus5(path):
+    keep = CORPUS_HEADER3.splitlines()
+    lines = generate_corpus_lines5()
+    routed_at = next(i for i, l in enumerate(lines) if l.startswith('routed:'))
+    routed_comment = [
+        '# Routed-placement scenarios (dyadic 4-device/2-node fleet; see',
+        '# routed_table/routed_fleet in golden_timelines.rs).',
+    ]
+    replace_at = next(i for i, l in enumerate(lines)
+                      if l.startswith('replace:'))
+    replace_comment = [
+        '# Live re-placement migration steps: the routed block-placement',
+        '# schedules with the block->affinity MigrationPlan overlapped in',
+        '# as dependency-free H2D tasks (h<dev> rows; 4096 B/expert over',
+        '# an alpha=0.125 beta=1024 H2D link -> 4.125 s per moved expert).',
+        '# The pre-existing spans are byte-identical to the routed:block',
+        '# entries above (pinned by mirror consistency_checks5).',
+    ]
+    body = (lines[:routed_at] + routed_comment + lines[routed_at:replace_at]
+            + replace_comment + lines[replace_at:])
+    with open(path, 'w') as f:
+        f.write('\n'.join(keep) + '\n' + '\n'.join(body) + '\n')
+    print(f'emitted {len(lines)} corpus lines to {path}')
+
+
+def consistency_checks5():
+    """Reductions the PR5 model must satisfy before its output is
+    trusted as a golden value."""
+    # 1. the measured packer over integer-valued f64 matrices reproduces
+    #    the one-shot integer affinity_packed bit-exactly
+    rt = routed_table3()
+    for n_devices, dpn in [(4, 2), (4, 4)]:
+        ref = Placement.affinity_packed(rt, n_devices, dpn)
+        tokens_per_device = -(-rt.n_tokens // n_devices)
+        aff = [0.0] * (rt.n_experts * (n_devices // dpn))
+        for (t, kk, e, slot, w) in rt.routes:
+            src = min(t // tokens_per_device, n_devices - 1)
+            aff[e * (n_devices // dpn) + src // dpn] += 1.0
+        got = affinity_packed_measured(aff, rt.n_experts, n_devices, dpn)
+        assert got.map == ref.map, (n_devices, dpn, got.map, ref.map)
+    # 2. a counting estimator over T identical tables packs identically
+    #    to the one-shot packer (counts are an exact T-fold scaling)
+    est = AffinityEstimator(4, 2, 1.0)
+    for _ in range(3):
+        est.observe(rt, 4, 2)
+    assert est.steps == 3
+    assert est.packed(4, 2).map == Placement.affinity_packed(rt, 4, 2).map
+    # 3. migration byte accounting is exact: plan bytes = moved experts x
+    #    per-expert bytes; the self-plan is empty
+    block = Placement.block(4, 4)
+    affinity = Placement.affinity_packed(rt, 4, 2)
+    plan = MigrationPlan.between(block, affinity, 4096)
+    moved = sum(1 for e in range(4)
+                if block.device_of(e) != affinity.device_of(e))
+    assert plan.total_bytes() == moved * 4096
+    assert sum(plan.bytes_into(d) for d in range(4)) == plan.total_bytes()
+    assert MigrationPlan.between(block, block, 4096).is_empty()
+    # 4. H2D tasks never overlap on one engine in the migration goldens
+    tc = routed_fleet4(rt, block)
+    sim = build_spec4(tc, ('scmoe', 1), ('seq',), 0)
+    MigrationPlan.between(block, affinity, 4096).add_h2d_tasks(
+        sim, REPLACE_H2D_LINK)
+    per_engine = {}
+    for (i, label, res, start, end) in sim.run():
+        if res[0] == 'h2d':
+            per_engine.setdefault(res, []).append((start, end))
+    assert per_engine, 'migration goldens must schedule H2D tasks'
+    for spans in per_engine.values():
+        spans.sort()
+        for (s0, e0), (s1, e1) in zip(spans, spans[1:]):
+            assert s1 >= e0 - 1e-12, 'H2D overlap'
+    # 5. the migration golden is the base schedule plus appended H2D
+    #    spans: every pre-existing task keeps its exact span
+    base_sim = build_spec4(tc, ('scmoe', 1), ('seq',), 0)
+    base_spans = base_sim.run()
+    mig_spans = sim.run()
+    for b, m in zip(base_spans, mig_spans[:len(base_spans)]):
+        assert b == m, 'migration tasks perturbed the step schedule'
+    # 6. a Never-policy multi-step timeline over constant tables reduces
+    #    to N independent single-step schedules, bit-exactly
+    topo = Topology(4, 2, LinkModel(0.0625, 1024.0), LinkModel(0.125, 512.0),
+                    1.0, None)
+    base = ComputeCosts(1.0, 0.75, 0.75, 0.0625, 0.0625, 0.0625, 0.5)
+    single = build_spec4(routed_fleet4(rt, block), ('scmoe', 1), ('seq',),
+                         0).makespan()
+    steps, total, migrations = run_replace_timeline(
+        base, topo, 64, [rt] * 4, block, ('scmoe', 1), ('seq',), ('never',),
+        4096, REPLACE_H2D_LINK, 1.0)
+    assert migrations == 0
+    for (s, makespan, base_makespan, migrated, mb, mt) in steps:
+        assert makespan == single and base_makespan == single
+        assert not migrated and mb == 0 and mt == 0.0
+    print('PR5 consistency checks: OK')
+
+
+# --- PR5 study scenarios (the numbers pinned in rust/tests/ -----------
+# replace_timeline.rs and quoted in docs/STUDIES.md are minted here) ---
+
+REPLACE_STUDY_TOKENS = 640
+REPLACE_STUDY_BYTES = 8192
+REPLACE_STUDY_EXPERT_BYTES = 128 * 1024 * 1024
+REPLACE_STUDY_H2D = LinkModel(10e-6, 16e9)
+REPLACE_STUDY_STEPS = 16
+REPLACE_STUDY_SHIFT = 8
+
+
+def replace_drift_tables(noise, seed0, shift_at=None):
+    """One table per step: node-affine with per-token noise; steps at or
+    beyond `shift_at` rotate the node->group regime by one."""
+    tables = []
+    for s in range(REPLACE_STUDY_STEPS):
+        regime = 1 if (shift_at is not None and s >= shift_at) else 0
+        tables.append(drifting_node_affine_routing(
+            32, 8, 32, REPLACE_STUDY_TOKENS, regime, noise, seed0 + s))
+    return tables
+
+
+def replace_study5():
+    topo = SCENARIOS['4node-ib']
+    base = xl_compute_costs()
+    blk = Placement.block(32, 32)
+    run = lambda tables, policy, decay: run_replace_timeline(
+        base, topo, REPLACE_STUDY_BYTES, tables, blk, ('scmoe', 1), ('seq',),
+        policy, REPLACE_STUDY_EXPERT_BYTES, REPLACE_STUDY_H2D, decay)
+    # scenario A: stable drift, counting estimator, break-even vs static
+    ta = replace_drift_tables(0.05, 11)
+    st_n, tot_n, _ = run(ta, ('never',), 1.0)
+    st_b, tot_b, mig_b = run(ta, ('break-even',), 1.0)
+    cum_n = cum_b = 0.0
+    be = None
+    for (sn, sb) in zip(st_n, st_b):
+        cum_n += sn[1]
+        cum_b += sb[1]
+        if be is None and cum_b < cum_n:
+            be = sn[0] + 1
+    print('A(drift):  static %.6f ms | replace %.6f ms | migrations %d | '
+          'break-even at %d steps' % (tot_n * 1e3, tot_b * 1e3, mig_b, be))
+    # scenario B: regime shift at step 8, EWMA 0.5, eager vs threshold
+    tb = replace_drift_tables(0.15, 211, shift_at=REPLACE_STUDY_SHIFT)
+    for pol in [('never',), ('every', 1), ('break-even',)]:
+        st, tot, mig = run(tb, pol, 0.5)
+        marks = ''.join('M' if s[3] else '.' for s in st)
+        print('B(shift):  %-10s total %.6f ms migrations %2d  %s'
+              % (pol[0], tot * 1e3, mig, marks))
+
+
 if __name__ == '__main__':
     # Internal reductions first: the PR3 model must reproduce the seed
-    # model bit-for-bit where applicable, and the PR4 spec-driven model
-    # must reproduce the PR3 builders wherever no load information exists
-    # (plus balanced-load identity). Then validate the PR4 model against
-    # the full golden corpus. `--emit` deliberately regenerates the file;
-    # plain invocation (CI) only validates and exits nonzero on drift.
+    # model bit-for-bit where applicable, the PR4 spec-driven model must
+    # reproduce the PR3 builders wherever no load information exists
+    # (plus balanced-load identity), and the PR5 re-placement model must
+    # reduce to the PR4 single-step schedules wherever no migration
+    # fires. Then validate the PR5 model against the full golden corpus.
+    # `--emit` deliberately regenerates the file; plain invocation (CI)
+    # only validates and exits nonzero on drift.
     consistency_checks3()
     consistency_checks4()
+    consistency_checks5()
+    if '--study' in sys.argv:
+        replace_study5()
+        sys.exit(0)
     if '--emit' in sys.argv:
-        emit_corpus4(os.path.join(os.path.dirname(os.path.abspath(__file__)),
+        emit_corpus5(os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                   '..', '..', 'rust', 'tests', 'golden',
                                   'timelines.txt'))
-    ok = validate_corpus4()
+    ok = validate_corpus5()
     sys.exit(0 if ok else 1)
