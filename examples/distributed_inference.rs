@@ -57,8 +57,8 @@ fn main() -> anyhow::Result<()> {
             }
         }
     }
-    t_seq.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    t_ovl.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    t_seq.sort_by(|a, b| a.total_cmp(b));
+    t_ovl.sort_by(|a, b| a.total_cmp(b));
     println!("\nsequential: {:.1}ms | ScMoE overlap: {:.1}ms | speedup {:.2}x",
              t_seq[reps / 2] * 1e3, t_ovl[reps / 2] * 1e3,
              t_seq[reps / 2] / t_ovl[reps / 2]);

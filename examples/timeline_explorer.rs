@@ -25,6 +25,12 @@
 //! step, plus the cumulative static-vs-replace table and the regime-shift
 //! policy comparison `scmoe report replace` tabulates.
 //!
+//! With `--serve`, run the open-loop serving study's mid-load cell
+//! (`scmoe report serve` constants): print the serving loop's step log
+//! (batch composition, queue depth, online migrations), render one mixed
+//! prefill+decode step's fleet timeline, and compare the swept loads'
+//! latency percentiles.
+//!
 //! `--chunks N` sets the pipeline depth of the chunked rows (default 2).
 //! Every chunk pays its own launch latency, so deep chunking visibly
 //! stops helping; in `--fleet` mode the chunked ScMoE timeline is also
@@ -51,11 +57,21 @@ use scmoe::report::replace::{
     STUDY_DRIFT_NOISE, STUDY_DRIFT_SEED, STUDY_SHIFT_DECAY, STUDY_SHIFT_NOISE,
     STUDY_SHIFT_SEED, STUDY_SHIFT_STEP, STUDY_TOKEN_BYTES,
 };
+use scmoe::report::serve_report::{
+    run_serve_cell, serve_spec, SERVE_BUDGET, SERVE_DECODE_NOISE, SERVE_LOADS,
+    SERVE_PREFILL_NOISE, SERVE_SLO, SERVE_TOKEN_BYTES, SERVE_TRAFFIC_SEED,
+};
+use scmoe::moe::phase_affine_routing;
+use scmoe::serve::BatchPolicy;
 use scmoe::simtime::makespan;
 use scmoe::util::cli::Args;
 
 fn main() {
     let args = Args::from_env();
+    if args.flag("serve") {
+        serve_mode(args.usize_or("width", 110));
+        return;
+    }
     if args.flag("replace") {
         replace_mode(args.usize_or("width", 110));
         return;
@@ -265,6 +281,70 @@ fn replace_mode(width: usize) {
         println!("{:<12} total {:>9.3}ms  migrations {:>2}  {}",
                  policy.label(), run.total * 1e3, run.migrations,
                  migration_marks(&run));
+    }
+}
+
+/// Render the open-loop serving study's mid-load cell: the serving
+/// loop's step log (batch composition, queue depth, online migrations),
+/// one mixed prefill+decode step's fleet timeline, and the swept loads'
+/// latency percentiles — the same cells `scmoe report serve` tabulates.
+fn serve_mode(width: usize) {
+    let sc = Scenario::FourNodeA800IBx32;
+    let topo = sc.topology();
+    let base = xl_compute_costs();
+    let budget = BatchPolicy::TokenBudget { budget: SERVE_BUDGET };
+    println!("### {} — open-loop serving timelines ({} devices, {} nodes) ###",
+             sc.label(), topo.n_devices, topo.n_nodes());
+
+    let rate = SERVE_LOADS[1];
+    let out = run_serve_cell(rate, Strategy::Sequential, budget,
+                             ReplacePolicy::BreakEven);
+    println!("\n--- step log at {rate:.0} req/s (seq, break-even replace; \
+              first 12 steps) ---");
+    println!("{:>4} {:>10} {:>8} {:>7} {:>6} {:>10} {:>5} {:>4}",
+             "step", "start", "prefill", "decode", "queue", "makespan",
+             "migr", "done");
+    for st in out.steps.iter().take(12) {
+        println!("{:>4} {:>9.1}ms {:>5}/{:<2} {:>7} {:>6} {:>9.3}ms {:>5} {:>4}",
+                 st.step, st.start * 1e3, st.prefill_tokens, st.prefills,
+                 st.decodes, st.queued, st.makespan * 1e3,
+                 if st.migrated { "M" } else { "." }, st.completed);
+    }
+    println!("({} steps total, {} migration(s), busy {:.1}ms of {:.1}ms)",
+             out.steps.len(), out.migrations, out.busy * 1e3,
+             out.total_time * 1e3);
+
+    // render the busiest mixed step, replayed from a static-placement run
+    // (Never policy keeps the block layout, so the replay is exact)
+    let static_out = run_serve_cell(rate, Strategy::Sequential, budget,
+                                    ReplacePolicy::Never);
+    let mixed = static_out
+        .steps
+        .iter()
+        .filter(|s| s.prefills > 0 && s.decodes > 0)
+        .max_by_key(|s| s.prefill_tokens + s.decode_tokens)
+        .expect("mid load mixes prefill and decode");
+    let rt = phase_affine_routing(topo.n_devices, topo.devices_per_node, 32,
+                                  mixed.prefill_tokens, mixed.decode_tokens,
+                                  0, SERVE_PREFILL_NOISE, SERVE_DECODE_NOISE,
+                                  SERVE_TRAFFIC_SEED + mixed.step as u64);
+    let tc = TopoCosts::from_routing(&base, &topo, &rt, &Placement::new(32, 32),
+                                     SERVE_TOKEN_BYTES);
+    let sched = serve_spec(Strategy::Sequential).build(&tc);
+    println!("\n--- step {}: {} prompt tokens ({} prefills) + {} decode \
+              tokens ({} requests) ---",
+             mixed.step, mixed.prefill_tokens, mixed.prefills,
+             mixed.decode_tokens, mixed.decodes);
+    print!("{}", timeline::render(&sched.run(), width));
+
+    println!("\n--- swept loads (seq, break-even replace) ---");
+    for rate in SERVE_LOADS {
+        let o = run_serve_cell(rate, Strategy::Sequential, budget,
+                               ReplacePolicy::BreakEven);
+        println!("{:>4.0} req/s: p50 {:>8.3}ms  p99 {:>8.3}ms  \
+                  throughput {:>6.1} req/s  goodput {:>6.1} req/s",
+                 rate, o.p50() * 1e3, o.p99() * 1e3, o.throughput(),
+                 o.goodput(SERVE_SLO));
     }
 }
 

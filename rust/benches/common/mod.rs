@@ -28,7 +28,7 @@ impl Bench {
             }
             per_iter.push(t0.elapsed().as_secs_f64() / iters as f64);
         }
-        per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        per_iter.sort_by(|a, b| a.total_cmp(b));
         let med = per_iter[samples / 2];
         let (val, unit) = if med >= 1e-3 {
             (med * 1e3, "ms")

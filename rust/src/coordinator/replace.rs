@@ -352,8 +352,7 @@ mod tests {
             .add_h2d_tasks(&mut sim, &LinkModel::new(0.25, 1024.0));
         let mut spans = sim.run();
         spans.sort_by(|a, b| {
-            a.resource.cmp(&b.resource)
-                .then(a.start.partial_cmp(&b.start).unwrap())
+            a.resource.cmp(&b.resource).then(a.start.total_cmp(&b.start))
         });
         for w in spans.windows(2) {
             if w[0].resource == w[1].resource {

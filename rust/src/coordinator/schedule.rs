@@ -564,7 +564,7 @@ mod tests {
             let mut comp_spans: Vec<_> = spans.iter()
                 .filter(|sp| matches!(sp.resource, Resource::Compute(_)))
                 .collect();
-            comp_spans.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+            comp_spans.sort_by(|a, b| a.start.total_cmp(&b.start));
             for w in comp_spans.windows(2) {
                 assert!(w[1].start >= w[0].end - 1e-12,
                         "compute overlap: {:?} then {:?}", w[0].label, w[1].label);

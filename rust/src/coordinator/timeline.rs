@@ -44,7 +44,7 @@ pub fn render(spans: &[Span], width: usize) -> String {
 
     let mut out = String::new();
     for (res, mut row_spans) in rows {
-        row_spans.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+        row_spans.sort_by(|a, b| a.start.total_cmp(&b.start));
         let mut line = vec![b' '; width];
         for s in &row_spans {
             let a = ((s.start * scale) as usize).min(width.saturating_sub(1));
@@ -72,7 +72,7 @@ pub fn render(spans: &[Span], width: usize) -> String {
 /// Compact per-op summary: label -> (start, end), sorted by start.
 pub fn summary(spans: &[Span]) -> String {
     let mut sorted: Vec<&Span> = spans.iter().collect();
-    sorted.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+    sorted.sort_by(|a, b| a.start.total_cmp(&b.start));
     let mut out = String::new();
     for s in sorted {
         out.push_str(&format!(

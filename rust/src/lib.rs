@@ -16,6 +16,7 @@ pub mod moe;
 pub mod offload;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod simtime;
 pub mod train;
 pub mod util;

@@ -16,8 +16,10 @@ pub mod dispatch;
 pub mod estimator;
 pub mod placement;
 pub mod router;
+pub mod traffic;
 
 pub use dispatch::{decode, decode_into, encode, encode_into};
 pub use estimator::AffinityEstimator;
 pub use placement::{ExpertLoad, Placement};
 pub use router::{Route, RoutingTable};
+pub use traffic::phase_affine_routing;

@@ -110,7 +110,7 @@ impl Placement {
             .collect();
         let mut order: Vec<usize> = (0..n_experts).collect();
         order.sort_by(|&a, &b| {
-            total[b].partial_cmp(&total[a]).unwrap().then(a.cmp(&b))
+            total[b].total_cmp(&total[a]).then(a.cmp(&b))
         });
         let cap = n_experts / n_nodes;
         let mut node_load = vec![0usize; n_nodes];

@@ -1,0 +1,113 @@
+//! Phase-aware routing-stream generation for the serving simulator.
+//!
+//! Serving batches mix two token populations with different routing
+//! statistics: *prefill* tokens (full prompts, routed while the planted
+//! expert affinity still dominates) and *decode* tokens (single generated
+//! tokens, whose routing drifts harder from the learned structure).
+//! [`phase_affine_routing`] generates one [`RoutingTable`] for such a
+//! mixed batch: the first `prefill_tokens` positions use `prefill_noise`,
+//! the remaining `decode_tokens` use `decode_noise`, and both share the
+//! node-affine backbone of
+//! [`drifting_node_affine_routing`](crate::report::efficiency::drifting_node_affine_routing)
+//! — which is the `prefill_noise == decode_noise`, evenly-divisible
+//! special case of this generator, bit-exactly (same splitmix64 draw
+//! order: one `next_f64` per token, plus one `below` on whichever branch
+//! the noise comparison picks).
+
+use crate::util::rng::Rng;
+
+use super::router::RoutingTable;
+
+/// Seeded mixed-phase node-affine routing (k = 1).
+///
+/// Token sources follow the `RoutingTable::a2a_bytes_placed` convention:
+/// the `prefill_tokens + decode_tokens` batch positions are split evenly
+/// over devices in index order, so a token's source node is a function of
+/// its position. With probability `noise` (per token, phase-dependent)
+/// the token routes to a uniformly random expert; otherwise it picks from
+/// its source node's affinity group `{e : e % n_nodes == aff_node}` with
+/// `aff_node = (node + regime) % n_nodes`. Capacity is sized so nothing
+/// drops. Deterministic per seed.
+#[allow(clippy::too_many_arguments)]
+pub fn phase_affine_routing(n_devices: usize, devices_per_node: usize,
+                            n_experts: usize, prefill_tokens: usize,
+                            decode_tokens: usize, regime: usize,
+                            prefill_noise: f64, decode_noise: f64,
+                            seed: u64) -> RoutingTable {
+    assert!(devices_per_node > 0 && n_devices % devices_per_node == 0);
+    let n_nodes = n_devices / devices_per_node;
+    assert!(n_experts % n_nodes == 0, "experts must divide into nodes");
+    let group = n_experts / n_nodes;
+    let n_tokens = prefill_tokens + decode_tokens;
+    assert!(n_tokens > 0, "a batch needs at least one token");
+    let tokens_per_device = n_tokens.div_ceil(n_devices);
+    let mut rng = Rng::new(seed);
+    let mut indices = Vec::with_capacity(n_tokens);
+    let weights = vec![1.0f32; n_tokens];
+    for t in 0..n_tokens {
+        let node = (t / tokens_per_device).min(n_devices - 1) / devices_per_node;
+        let aff_node = (node + regime) % n_nodes;
+        let noise = if t < prefill_tokens { prefill_noise } else { decode_noise };
+        let e = if rng.next_f64() < noise {
+            rng.below(n_experts)
+        } else {
+            aff_node + n_nodes * rng.below(group)
+        };
+        indices.push(e as i32);
+    }
+    RoutingTable::build(&indices, &weights, n_tokens, 1, n_experts, n_tokens)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_noise_prefill_is_exactly_node_affine() {
+        let rt = phase_affine_routing(4, 2, 4, 16, 0, 0, 0.0, 0.0, 3);
+        for r in &rt.routes {
+            let node = (r.token / 4) / 2;
+            assert_eq!(r.expert % 2, node, "token {} expert {}", r.token, r.expert);
+        }
+    }
+
+    #[test]
+    fn phases_use_distinct_noise_levels() {
+        // prefill exact, decode fully random: every affinity violation
+        // must come from the decode suffix
+        let rt = phase_affine_routing(4, 2, 8, 32, 32, 0, 0.0, 1.0, 9);
+        let violations: Vec<usize> = rt
+            .routes
+            .iter()
+            .filter(|r| {
+                let node = (r.token / 16).min(3) / 2;
+                r.expert % 2 != node
+            })
+            .map(|r| r.token)
+            .collect();
+        assert!(!violations.is_empty(), "noise 1.0 must violate affinity");
+        assert!(violations.iter().all(|&t| t >= 32),
+                "prefill tokens (noise 0) may never violate: {violations:?}");
+    }
+
+    #[test]
+    fn regime_rotates_the_affinity_target() {
+        let rt = phase_affine_routing(4, 2, 4, 16, 0, 1, 0.0, 0.0, 3);
+        for r in &rt.routes {
+            let node = (r.token / 4) / 2;
+            assert_eq!(r.expert % 2, (node + 1) % 2);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = phase_affine_routing(4, 2, 8, 12, 7, 0, 0.25, 0.75, 42);
+        let b = phase_affine_routing(4, 2, 8, 12, 7, 0, 0.25, 0.75, 42);
+        let idx = |rt: &RoutingTable| -> Vec<usize> {
+            rt.routes.iter().map(|r| r.expert).collect()
+        };
+        assert_eq!(idx(&a), idx(&b));
+        assert_eq!(a.n_tokens, 19);
+        assert_eq!(a.dropped, 0);
+    }
+}

@@ -132,25 +132,13 @@ pub fn drifting_node_affine_routing(n_devices: usize, devices_per_node: usize,
                                     n_experts: usize,
                                     tokens_per_device: usize, regime: usize,
                                     noise: f64, seed: u64) -> RoutingTable {
-    assert!(devices_per_node > 0 && n_devices % devices_per_node == 0);
-    let n_nodes = n_devices / devices_per_node;
-    assert!(n_experts % n_nodes == 0, "experts must divide into nodes");
-    let group = n_experts / n_nodes;
-    let n_tokens = n_devices * tokens_per_device;
-    let mut rng = Rng::new(seed);
-    let mut indices = Vec::with_capacity(n_tokens);
-    let weights = vec![1.0f32; n_tokens];
-    for t in 0..n_tokens {
-        let node = (t / tokens_per_device) / devices_per_node;
-        let aff_node = (node + regime) % n_nodes;
-        let e = if rng.next_f64() < noise {
-            rng.below(n_experts)
-        } else {
-            aff_node + n_nodes * rng.below(group)
-        };
-        indices.push(e as i32);
-    }
-    RoutingTable::build(&indices, &weights, n_tokens, 1, n_experts, n_tokens)
+    // the single-phase special case of the serving traffic generator:
+    // with n_tokens divisible by n_devices the source-device clamp is a
+    // no-op and equal noise makes the phase split irrelevant, so the
+    // splitmix64 draw stream is identical token for token
+    crate::moe::phase_affine_routing(n_devices, devices_per_node, n_experts,
+                                     n_devices * tokens_per_device, 0, regime,
+                                     noise, noise, seed)
 }
 
 /// Training-iteration costs: forward + backward. Backward roughly doubles

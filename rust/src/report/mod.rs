@@ -12,6 +12,7 @@ pub mod efficiency;
 pub mod offload_report;
 pub mod quality;
 pub mod replace;
+pub mod serve_report;
 
 use anyhow::{bail, Result};
 
@@ -27,6 +28,7 @@ pub fn run(exp: &str, args: &Args) -> Result<()> {
         }
         "topo" | "fleet" => efficiency::topo_report(args),
         "replace" => replace::replace_report(args),
+        "serve" => serve_report::serve_report(args),
         "fig10" => offload_report::fig10(args),
         "table1" => quality::table1(args),
         "table2" => quality::table_archs(args, &["top2", "top1", "shared", "scmoe"], "table2"),

@@ -1,0 +1,197 @@
+//! The open-loop serving study (`scmoe report serve`): where is the
+//! throughput–latency knee, and what moves it?
+//!
+//! A seeded Poisson request stream (prefill + multi-step decode) drives
+//! [`run_serve`] on the 32xA800-4node-IB preset with the GPT3-XL payload.
+//! The sweep crosses offered load × schedule strategy (sequential vs
+//! adaptive overlap) × placement policy (static block layout vs PR 5's
+//! break-even online re-placement): below the knee p50 tracks the
+//! no-queue service time, past it queueing blows the tail up by an order
+//! of magnitude, and both the overlap strategy and online re-placement
+//! shift the knee right by shortening every step. A second table holds
+//! the batching policies (wait-k / deadline / token-budget) at mid load.
+//!
+//! Every pinned number in `rust/tests/serve_loop.rs` and
+//! `docs/STUDIES.md` is minted through the DES mirror
+//! (`tools/des_mirror/mirror2.py --serve-study`, PR6 model). The same
+//! constants are exported so `timeline_explorer --serve` renders the
+//! identical runs.
+
+use anyhow::Result;
+
+use crate::cluster::Scenario;
+use crate::coordinator::costs::{MoEKind, Strategy};
+use crate::coordinator::replace::ReplacePolicy;
+use crate::coordinator::spec::ScheduleSpec;
+use crate::moe::Placement;
+use crate::serve::{
+    poisson_arrivals, run_serve, BatchPolicy, Request, ServeConfig,
+    ServeOutcome, TrafficProfile,
+};
+use crate::util::cli::Args;
+use crate::util::stats::fmt_secs;
+
+use super::efficiency::xl_compute_costs;
+use super::replace::{study_h2d_link, STUDY_BYTES_PER_EXPERT};
+
+/// Requests per serving run.
+pub const SERVE_REQUESTS: usize = 64;
+/// Prompt tokens per request (one prefill step's contribution).
+pub const SERVE_PREFILL_TOKENS: usize = 2048;
+/// Decode iterations per request after prefill.
+pub const SERVE_DECODE_STEPS: usize = 4;
+/// Tokens each active decode request contributes per step.
+pub const SERVE_DECODE_TOKENS: usize = 64;
+/// Payload bytes per routed token copy (GPT3-XL, 8 KiB).
+pub const SERVE_TOKEN_BYTES: usize = 8192;
+/// Bernoulli-grid tick for the Poisson arrival stream (dyadic so the
+/// arrival instants are bit-identical in the Python mirror).
+pub const SERVE_TICK: f64 = 1.0 / 2048.0;
+/// Arrival-stream seed.
+pub const SERVE_SEED: u64 = 31;
+/// Traffic (routing-stream) base seed; step `s` draws from seed + s.
+pub const SERVE_TRAFFIC_SEED: u64 = 311;
+/// Per-token random-routing probability for prompt tokens.
+pub const SERVE_PREFILL_NOISE: f64 = 0.05;
+/// Per-token random-routing probability for generated tokens.
+pub const SERVE_DECODE_NOISE: f64 = 0.25;
+/// Token budget of the sweep's batch policy.
+pub const SERVE_BUDGET: usize = 6144;
+/// Latency target for goodput and the knee (seconds) — tight enough
+/// that the sequential strategy misses it at the top swept load while
+/// overlap holds it, so the knee discriminates between strategies.
+pub const SERVE_SLO: f64 = 0.030;
+/// Fixed overlap expert slot on the 4-node IB preset (the adaptive
+/// choice for the XL payload, pinned so every step prices one build).
+pub const SERVE_OVERLAP_SLOT: usize = 2;
+/// Offered loads swept (requests per second).
+pub const SERVE_LOADS: [f64; 3] = [120.0, 240.0, 480.0];
+
+/// The swept arrival stream at one offered load.
+pub fn serve_requests(rate: f64) -> Vec<Request> {
+    poisson_arrivals(SERVE_REQUESTS, rate, SERVE_TICK, SERVE_PREFILL_TOKENS,
+                     SERVE_DECODE_STEPS, SERVE_SEED)
+}
+
+/// The study's schedule spec for a strategy (overlap pins its slot).
+pub fn serve_spec(strategy: Strategy) -> ScheduleSpec {
+    let spec = ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, strategy);
+    match strategy {
+        Strategy::Overlap => spec.with_slot(SERVE_OVERLAP_SLOT),
+        _ => spec,
+    }
+}
+
+/// The study's [`ServeConfig`] for one cell of the sweep.
+pub fn serve_config(strategy: Strategy, batching: BatchPolicy,
+                    policy: ReplacePolicy) -> ServeConfig {
+    ServeConfig {
+        spec: serve_spec(strategy),
+        batching,
+        policy,
+        decay: 1.0,
+        bytes_per_expert: STUDY_BYTES_PER_EXPERT,
+        h2d: study_h2d_link(),
+        token_bytes: SERVE_TOKEN_BYTES,
+        decode_tokens: SERVE_DECODE_TOKENS,
+        n_experts: 32,
+        traffic: TrafficProfile {
+            regime: 0,
+            shift_at: None,
+            prefill_noise: SERVE_PREFILL_NOISE,
+            decode_noise: SERVE_DECODE_NOISE,
+            seed: SERVE_TRAFFIC_SEED,
+        },
+    }
+}
+
+/// Run one cell: offered load × strategy × batching × placement policy
+/// on the 4-node IB preset from the uniform block placement.
+pub fn run_serve_cell(rate: f64, strategy: Strategy, batching: BatchPolicy,
+                      policy: ReplacePolicy) -> ServeOutcome {
+    let topo = Scenario::FourNodeA800IBx32.topology();
+    let base = xl_compute_costs();
+    let requests = serve_requests(rate);
+    run_serve(&base, &topo, &requests, &Placement::new(32, 32),
+              &serve_config(strategy, batching, policy))
+}
+
+/// The throughput–latency knee: the largest swept load whose p99 stays
+/// within the SLO (`None` when even the lightest load misses it).
+pub fn knee_load(cells: &[(f64, ServeOutcome)]) -> Option<f64> {
+    cells
+        .iter()
+        .filter(|(_, o)| o.p99() <= SERVE_SLO)
+        .map(|(rate, _)| *rate)
+        .fold(None, |m: Option<f64>, r| Some(m.map_or(r, |m| m.max(r))))
+}
+
+fn policy_label(policy: ReplacePolicy) -> &'static str {
+    match policy {
+        ReplacePolicy::Never => "static",
+        _ => "replace",
+    }
+}
+
+/// `scmoe report serve` — the load sweep plus the batching-policy table.
+pub fn serve_report(_args: &Args) -> Result<()> {
+    let sc = Scenario::FourNodeA800IBx32;
+    println!("== open-loop serving study ({}, GPT3-XL payload) ==", sc.label());
+    println!("{} requests/run: prefill {} tok + {} decode steps x {} tok; \
+              {} B tokens",
+             SERVE_REQUESTS, SERVE_PREFILL_TOKENS, SERVE_DECODE_STEPS,
+             SERVE_DECODE_TOKENS, SERVE_TOKEN_BYTES);
+    println!("batching {}; SLO {}; online replace moves {} MiB/expert over \
+              a {:.0} GB/s H2D link",
+             BatchPolicy::TokenBudget { budget: SERVE_BUDGET }.label(),
+             fmt_secs(SERVE_SLO), STUDY_BYTES_PER_EXPERT >> 20,
+             study_h2d_link().beta / 1e9);
+
+    println!("\n-- load sweep: offered req/s x strategy x placement policy --");
+    println!("{:>5} {:<8} {:<8} {:>6} {:>10} {:>10} {:>8} {:>8} {:>5}",
+             "load", "strategy", "policy", "steps", "p50", "p99", "req/s",
+             "goodput", "migr");
+    let budget = BatchPolicy::TokenBudget { budget: SERVE_BUDGET };
+    for strategy in [Strategy::Sequential, Strategy::Overlap] {
+        for policy in [ReplacePolicy::Never, ReplacePolicy::BreakEven] {
+            let mut cells = Vec::new();
+            for rate in SERVE_LOADS {
+                let out = run_serve_cell(rate, strategy, budget, policy);
+                println!("{:>5.0} {:<8} {:<8} {:>6} {:>10} {:>10} {:>8.1} \
+                          {:>8.1} {:>5}",
+                         rate, strategy.label(), policy_label(policy),
+                         out.steps.len(), fmt_secs(out.p50()),
+                         fmt_secs(out.p99()), out.throughput(),
+                         out.goodput(SERVE_SLO), out.migrations);
+                cells.push((rate, out));
+            }
+            match knee_load(&cells) {
+                Some(r) => println!("      {} / {}: knee at {:.0} req/s \
+                                     (largest load with p99 <= SLO)",
+                                    strategy.label(), policy_label(policy), r),
+                None => println!("      {} / {}: saturated at every swept load",
+                                 strategy.label(), policy_label(policy)),
+            }
+        }
+    }
+
+    println!("\n-- batching policies at {:.0} req/s (seq, replace) --",
+             SERVE_LOADS[1]);
+    println!("{:<14} {:>6} {:>10} {:>10} {:>8} {:>8}",
+             "policy", "steps", "p50", "p99", "req/s", "goodput");
+    for batching in [BatchPolicy::WaitK { k: 2 },
+                     BatchPolicy::Deadline { window: 0.008 },
+                     budget] {
+        let out = run_serve_cell(SERVE_LOADS[1], Strategy::Sequential,
+                                 batching, ReplacePolicy::BreakEven);
+        println!("{:<14} {:>6} {:>10} {:>10} {:>8.1} {:>8.1}",
+                 batching.label(), out.steps.len(), fmt_secs(out.p50()),
+                 fmt_secs(out.p99()), out.throughput(), out.goodput(SERVE_SLO));
+    }
+    println!("\npast the knee the queue never drains: p99 grows with run \
+              length while p50 stays");
+    println!("near the no-queue service time; overlap and online \
+              re-placement both shift the");
+    println!("knee right by shortening every step");
+    Ok(())
+}

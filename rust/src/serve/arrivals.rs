@@ -1,0 +1,100 @@
+//! Request streams: seeded Poisson-like and trace-driven arrivals.
+
+use crate::util::rng::Rng;
+
+/// One inference request: a prompt to prefill, then `decode_steps`
+/// generation iterations (each contributing the serving config's
+/// per-request decode tokens to its step's batch).
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Stable id (index in arrival order).
+    pub id: usize,
+    /// Arrival instant (seconds on the virtual clock).
+    pub arrival: f64,
+    /// Prompt tokens routed in the request's prefill step.
+    pub prefill_tokens: usize,
+    /// Generation iterations after prefill (0 = prefill-only).
+    pub decode_steps: usize,
+}
+
+/// Seeded Poisson-like arrival stream via Bernoulli thinning on a fixed
+/// tick grid: each tick of width `tick` seconds admits an arrival with
+/// probability `rate * tick`, giving geometrically distributed
+/// inter-arrival gaps with mean `1 / rate` — the discrete-grid limit of
+/// a Poisson process, chosen over exponential sampling because it needs
+/// no `ln()` and is therefore bit-reproducible across the Rust engine
+/// and the Python DES mirror (only `*`, `<` on the splitmix64 stream).
+///
+/// All requests share one shape (`prefill_tokens`, `decode_steps`);
+/// heterogeneous workloads go through [`trace_arrivals`].
+pub fn poisson_arrivals(n_requests: usize, rate: f64, tick: f64,
+                        prefill_tokens: usize, decode_steps: usize,
+                        seed: u64) -> Vec<Request> {
+    assert!(rate > 0.0 && tick > 0.0);
+    let p = rate * tick;
+    assert!(p < 1.0, "rate * tick must stay below 1 (got {p})");
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(n_requests);
+    let mut i = 0u64;
+    while out.len() < n_requests {
+        if rng.next_f64() < p {
+            out.push(Request {
+                id: out.len(),
+                arrival: i as f64 * tick,
+                prefill_tokens,
+                decode_steps,
+            });
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Trace-driven arrivals from explicit `(arrival, prefill_tokens,
+/// decode_steps)` rows; the trace must be sorted by arrival time.
+pub fn trace_arrivals(trace: &[(f64, usize, usize)]) -> Vec<Request> {
+    assert!(trace.windows(2).all(|w| w[0].0 <= w[1].0),
+            "trace must be sorted by arrival time");
+    trace
+        .iter()
+        .enumerate()
+        .map(|(id, &(arrival, prefill_tokens, decode_steps))| Request {
+            id,
+            arrival,
+            prefill_tokens,
+            decode_steps,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_is_seeded_and_sorted() {
+        let a = poisson_arrivals(32, 100.0, 1.0 / 2048.0, 128, 4, 7);
+        let b = poisson_arrivals(32, 100.0, 1.0 / 2048.0, 128, 4, 7);
+        assert_eq!(a.len(), 32);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival, y.arrival);
+        }
+        assert!(a.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        assert!(a.windows(2).all(|w| w[0].id + 1 == w[1].id));
+    }
+
+    #[test]
+    fn poisson_mean_gap_tracks_the_rate() {
+        let reqs = poisson_arrivals(512, 200.0, 1.0 / 4096.0, 1, 0, 3);
+        let span = reqs.last().unwrap().arrival - reqs[0].arrival;
+        let mean_gap = span / 511.0;
+        assert!((mean_gap - 1.0 / 200.0).abs() < 1.0 / 400.0,
+                "mean inter-arrival {mean_gap} should be near 5 ms");
+    }
+
+    #[test]
+    #[should_panic(expected = "sorted")]
+    fn trace_rejects_unsorted_input() {
+        trace_arrivals(&[(1.0, 8, 0), (0.5, 8, 0)]);
+    }
+}

@@ -1,0 +1,160 @@
+//! Continuous-batching admission policies.
+//!
+//! A serving step always carries every *active* decode request
+//! (continuous batching: generation never waits on prompt admission);
+//! the policy only decides how many *queued prefills* join, or — when
+//! nothing would run — how far to advance the virtual clock before
+//! re-evaluating.
+
+/// What the policy decided for the instant `now`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BatchDecision {
+    /// Launch a step admitting the first `n` queued prefills (FIFO).
+    Admit(usize),
+    /// Nothing runs yet: advance the virtual clock to this strictly
+    /// later instant and re-evaluate (more arrivals or a deadline).
+    WaitUntil(f64),
+}
+
+/// Prefill admission policy for batch formation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BatchPolicy {
+    /// Wait for `k` queued prefills before launching; if decode work is
+    /// active, steps run anyway and take whatever is queued (up to `k`).
+    WaitK { k: usize },
+    /// Launch all queued prefills once the oldest has waited `window`
+    /// seconds; until then prefills hold while decode steps run.
+    Deadline { window: f64 },
+    /// Admit queued prefills FIFO while the batch's total tokens
+    /// (decode tokens of active requests + admitted prompt tokens) stay
+    /// within `budget`; an oversized head-of-line request runs alone
+    /// rather than starving.
+    TokenBudget { budget: usize },
+}
+
+impl BatchPolicy {
+    /// Display label for study tables.
+    pub fn label(&self) -> String {
+        match self {
+            BatchPolicy::WaitK { k } => format!("wait-{k}"),
+            BatchPolicy::Deadline { window } => {
+                format!("deadline-{:.0}ms", window * 1e3)
+            }
+            BatchPolicy::TokenBudget { budget } => format!("budget-{budget}"),
+        }
+    }
+
+    /// The admission decision at instant `now`.
+    ///
+    /// `queued` is the FIFO prefill queue as `(arrival, prefill_tokens)`
+    /// rows; `active` counts in-flight decode requests (each contributing
+    /// `decode_tokens` to the step); `next_arrival` is the next future
+    /// arrival instant, if any (strictly after `now` — the engine drains
+    /// all arrivals at or before `now` first). The engine only asks when
+    /// some work exists (`!queued.is_empty() || active > 0`), and every
+    /// `WaitUntil` target is strictly after `now`, so the loop always
+    /// advances.
+    pub fn decide(&self, now: f64, queued: &[(f64, usize)], active: usize,
+                  decode_tokens: usize, next_arrival: Option<f64>)
+                  -> BatchDecision {
+        match *self {
+            BatchPolicy::WaitK { k } => {
+                assert!(k > 0, "WaitK needs k >= 1");
+                if queued.len() >= k {
+                    BatchDecision::Admit(k)
+                } else if active > 0 {
+                    BatchDecision::Admit(queued.len())
+                } else if let Some(t) = next_arrival {
+                    BatchDecision::WaitUntil(t)
+                } else {
+                    // tail drain: no arrivals left, fewer than k queued
+                    BatchDecision::Admit(queued.len())
+                }
+            }
+            BatchPolicy::Deadline { window } => {
+                let Some(&(oldest, _)) = queued.first() else {
+                    return BatchDecision::Admit(0); // pure-decode step
+                };
+                let deadline = oldest + window;
+                if now >= deadline {
+                    BatchDecision::Admit(queued.len())
+                } else if active > 0 {
+                    BatchDecision::Admit(0)
+                } else {
+                    let t = match next_arrival {
+                        Some(na) if na < deadline => na,
+                        _ => deadline,
+                    };
+                    BatchDecision::WaitUntil(t)
+                }
+            }
+            BatchPolicy::TokenBudget { budget } => {
+                let mut tokens = active * decode_tokens;
+                let mut n = 0usize;
+                for &(_, prefill) in queued {
+                    if tokens + prefill > budget {
+                        break;
+                    }
+                    tokens += prefill;
+                    n += 1;
+                }
+                if n == 0 && active == 0 {
+                    BatchDecision::Admit(1)
+                } else {
+                    BatchDecision::Admit(n)
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wait_k_holds_until_k_then_launches() {
+        let p = BatchPolicy::WaitK { k: 2 };
+        let q1 = [(0.0, 64)];
+        assert_eq!(p.decide(0.0, &q1, 0, 8, Some(0.5)),
+                   BatchDecision::WaitUntil(0.5));
+        let q2 = [(0.0, 64), (0.5, 64)];
+        assert_eq!(p.decide(0.5, &q2, 0, 8, None), BatchDecision::Admit(2));
+        // decode work drives steps regardless of queue depth
+        assert_eq!(p.decide(0.0, &q1, 3, 8, Some(0.5)),
+                   BatchDecision::Admit(1));
+        // tail drain with no future arrivals
+        assert_eq!(p.decide(0.0, &q1, 0, 8, None), BatchDecision::Admit(1));
+    }
+
+    #[test]
+    fn deadline_waits_for_window_or_arrival() {
+        let p = BatchPolicy::Deadline { window: 0.25 };
+        let q = [(1.0, 64), (1.1, 64)];
+        // idle system: jump to the earlier of next arrival / deadline
+        assert_eq!(p.decide(1.1, &q, 0, 8, Some(1.2)),
+                   BatchDecision::WaitUntil(1.2));
+        assert_eq!(p.decide(1.1, &q, 0, 8, Some(2.0)),
+                   BatchDecision::WaitUntil(1.25));
+        // deadline reached: admit everything queued
+        assert_eq!(p.decide(1.25, &q, 0, 8, Some(2.0)),
+                   BatchDecision::Admit(2));
+        // decode work keeps stepping while prefills wait out the window
+        assert_eq!(p.decide(1.1, &q, 2, 8, Some(2.0)),
+                   BatchDecision::Admit(0));
+    }
+
+    #[test]
+    fn token_budget_counts_decode_tokens_and_never_starves() {
+        let p = BatchPolicy::TokenBudget { budget: 256 };
+        let q = [(0.0, 100), (0.0, 100), (0.0, 100)];
+        // 4 active decodes at 16 tokens each leave room for one prefill
+        assert_eq!(p.decide(0.0, &q, 4, 16, None), BatchDecision::Admit(1));
+        assert_eq!(p.decide(0.0, &q, 0, 16, None), BatchDecision::Admit(2));
+        // oversized head-of-line request runs alone on an idle system
+        let big = [(0.0, 1000)];
+        assert_eq!(p.decide(0.0, &big, 0, 16, None), BatchDecision::Admit(1));
+        // ...but holds while decode work exists
+        assert_eq!(p.decide(0.0, &big, 4, 16, None), BatchDecision::Admit(0));
+    }
+}

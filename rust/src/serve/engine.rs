@@ -1,0 +1,310 @@
+//! The serving loop: arrivals → batches → priced DES steps → latencies.
+
+use crate::cluster::{LinkModel, Topology};
+use crate::coordinator::costs::{ComputeCosts, TopoCosts};
+use crate::coordinator::replace::{MigrationPlan, ReplacePolicy};
+use crate::coordinator::spec::ScheduleSpec;
+use crate::moe::{phase_affine_routing, AffinityEstimator, Placement};
+use crate::util::stats::percentile;
+
+use super::arrivals::Request;
+use super::batch::{BatchDecision, BatchPolicy};
+
+/// Routing statistics of the served traffic: node-affine with
+/// phase-dependent noise, optionally shifting regime mid-run. Step `s`
+/// draws its table from `seed + s` (the `study_tables` convention).
+#[derive(Debug, Clone)]
+pub struct TrafficProfile {
+    /// Base node→group rotation.
+    pub regime: usize,
+    /// Step index from which the regime rotates one further notch
+    /// (models a routing-regime shift invalidating a learned placement).
+    pub shift_at: Option<usize>,
+    /// Per-token random-routing probability for prompt tokens.
+    pub prefill_noise: f64,
+    /// Per-token random-routing probability for generated tokens
+    /// (typically noisier: generation drifts off the planted affinity).
+    pub decode_noise: f64,
+    /// Base seed; step `s` uses `seed + s`.
+    pub seed: u64,
+}
+
+/// Everything the serving loop needs beyond the request stream.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Schedule built for every step.
+    pub spec: ScheduleSpec,
+    /// Prefill admission policy.
+    pub batching: BatchPolicy,
+    /// Online re-placement decision rule (PR 5's policy, driven by
+    /// outstanding *requests* instead of scripted steps).
+    pub policy: ReplacePolicy,
+    /// Estimator decay (1.0 = counting).
+    pub decay: f64,
+    /// Parameter bytes per migrated expert.
+    pub bytes_per_expert: usize,
+    /// Host-to-device migration link.
+    pub h2d: LinkModel,
+    /// Payload bytes per routed token copy.
+    pub token_bytes: usize,
+    /// Tokens each active decode request contributes per step.
+    pub decode_tokens: usize,
+    /// Number of experts in the layer.
+    pub n_experts: usize,
+    /// Traffic statistics.
+    pub traffic: TrafficProfile,
+}
+
+/// One executed serving step.
+#[derive(Debug, Clone)]
+pub struct ServeStep {
+    /// 0-based executed-step index (idle gaps don't count).
+    pub step: usize,
+    /// Virtual-clock instant the step launched.
+    pub start: f64,
+    /// DES makespan, including migration H2D spans if one fired here.
+    pub makespan: f64,
+    /// DES makespan of the schedule alone.
+    pub base_makespan: f64,
+    /// Prefill requests admitted into this batch.
+    pub prefills: usize,
+    /// Prompt tokens those admissions contributed.
+    pub prefill_tokens: usize,
+    /// Active decode requests riding along.
+    pub decodes: usize,
+    /// Decode tokens they contributed.
+    pub decode_tokens: usize,
+    /// Prefills still queued after admission.
+    pub queued: usize,
+    /// Whether an online migration fired during this step.
+    pub migrated: bool,
+    /// Bytes the migration moved (0 when `!migrated`).
+    pub migration_bytes: usize,
+    /// Serialized H2D time of the migration (0 when `!migrated`).
+    pub migration_time: f64,
+    /// Requests completing at the end of this step.
+    pub completed: usize,
+}
+
+/// Result of [`run_serve`].
+#[derive(Debug, Clone)]
+pub struct ServeOutcome {
+    /// Executed steps in order.
+    pub steps: Vec<ServeStep>,
+    /// Per-request latency (completion − arrival), in completion order.
+    pub latencies: Vec<f64>,
+    /// Sum of step makespans (fleet busy time).
+    pub busy: f64,
+    /// Virtual clock at the last completion (includes idle gaps).
+    pub total_time: f64,
+    /// Online migrations fired.
+    pub migrations: usize,
+    /// Placement in force after the last step.
+    pub final_placement: Placement,
+}
+
+impl ServeOutcome {
+    /// Median request latency.
+    pub fn p50(&self) -> f64 {
+        percentile(&self.latencies, 50.0)
+    }
+
+    /// Tail (99th-percentile) request latency.
+    pub fn p99(&self) -> f64 {
+        percentile(&self.latencies, 99.0)
+    }
+
+    /// Completed requests per second of virtual time.
+    pub fn throughput(&self) -> f64 {
+        self.latencies.len() as f64 / self.total_time
+    }
+
+    /// Requests per second completing within the latency target `slo`.
+    pub fn goodput(&self, slo: f64) -> f64 {
+        self.latencies.iter().filter(|&&l| l <= slo).count() as f64
+            / self.total_time
+    }
+}
+
+struct ActiveReq {
+    arrival: f64,
+    remaining_decode: usize,
+}
+
+/// Drive a request stream through the serving loop.
+///
+/// Per iteration: (1) drain arrivals at or before `now` into the prefill
+/// queue; (2) if the system is empty, jump the clock to the next arrival;
+/// (3) ask the [`BatchPolicy`] — either advance the clock and retry, or
+/// launch a step admitting `n` queued prefills alongside every active
+/// decode request; (4) generate the batch's [`phase_affine_routing`]
+/// table (prompt tokens first, then decode tokens — matching the
+/// even-split source convention of `a2a_bytes_placed`), price it under
+/// the placement in force, build the spec's schedule, and advance `now`
+/// by its makespan; (5) feed the table to the affinity estimator and run
+/// the PR 5 migration decision with `remaining` = outstanding requests
+/// after this step — on migration the plan's H2D tasks overlap into this
+/// step's DES graph and the new placement takes effect next step;
+/// (6) record completions (prefill-only admissions and decodes reaching
+/// their last iteration) with latency `end − arrival`.
+///
+/// `requests` must be sorted by arrival time. With all requests at
+/// `t = 0`, wait-1 batching and prefill-only requests, the loop is
+/// bit-exactly `run_replace_timeline` over the same table stream.
+pub fn run_serve(base: &ComputeCosts, topo: &Topology, requests: &[Request],
+                 initial: &Placement, cfg: &ServeConfig) -> ServeOutcome {
+    assert!(!requests.is_empty(), "a serving run needs at least one request");
+    assert!(requests.windows(2).all(|w| w[0].arrival <= w[1].arrival),
+            "requests must be sorted by arrival time");
+    assert!(requests.iter().all(|r| r.decode_steps == 0) || cfg.decode_tokens > 0,
+            "decode phases need decode_tokens > 0");
+    assert_eq!(cfg.n_experts, initial.n_experts);
+    let n_nodes = topo.n_devices / topo.devices_per_node;
+    let mut est = AffinityEstimator::ewma(cfg.n_experts, n_nodes, cfg.decay);
+    let mut placement = initial.clone();
+    let mut queued: Vec<Request> = Vec::new();
+    let mut active: Vec<ActiveReq> = Vec::new();
+    let mut next_idx = 0usize;
+    let mut now = 0.0f64;
+    let mut step = 0usize;
+    let mut steps = Vec::new();
+    let mut latencies = Vec::new();
+    let mut busy = 0.0f64;
+    let mut migrations = 0usize;
+
+    while next_idx < requests.len() || !queued.is_empty() || !active.is_empty() {
+        while next_idx < requests.len() && requests[next_idx].arrival <= now {
+            queued.push(requests[next_idx].clone());
+            next_idx += 1;
+        }
+        if queued.is_empty() && active.is_empty() {
+            now = requests[next_idx].arrival; // idle: jump to next arrival
+            continue;
+        }
+        let next_arrival = requests.get(next_idx).map(|r| r.arrival);
+        let qmeta: Vec<(f64, usize)> =
+            queued.iter().map(|r| (r.arrival, r.prefill_tokens)).collect();
+        let admit = match cfg.batching.decide(now, &qmeta, active.len(),
+                                              cfg.decode_tokens, next_arrival) {
+            BatchDecision::Admit(n) => n,
+            BatchDecision::WaitUntil(t) => {
+                assert!(t > now, "batching must advance the clock");
+                now = t;
+                continue;
+            }
+        };
+        let admitted: Vec<Request> = queued.drain(..admit).collect();
+        let n_prefill_tokens: usize =
+            admitted.iter().map(|r| r.prefill_tokens).sum();
+        let n_decodes = active.len();
+        let n_decode_tokens = n_decodes * cfg.decode_tokens;
+
+        let regime = cfg.traffic.regime
+            + match cfg.traffic.shift_at {
+                Some(at) if step >= at => 1,
+                _ => 0,
+            };
+        let rt = phase_affine_routing(
+            topo.n_devices, topo.devices_per_node, cfg.n_experts,
+            n_prefill_tokens, n_decode_tokens, regime,
+            cfg.traffic.prefill_noise, cfg.traffic.decode_noise,
+            cfg.traffic.seed + step as u64);
+        let costs = TopoCosts::from_routing(base, topo, &rt, &placement,
+                                            cfg.token_bytes);
+        let mut sched = cfg.spec.build(&costs);
+        let base_makespan = sched.makespan();
+        est.observe(&rt, topo.n_devices, topo.devices_per_node);
+
+        // outstanding requests once this step retires: still-future
+        // arrivals, still-queued prefills, and batch members with decode
+        // iterations left — the serving analogue of the timeline's
+        // "remaining steps" (each needs at least one more step)
+        let survivors = active.iter().filter(|a| a.remaining_decode > 1).count()
+            + admitted.iter().filter(|r| r.decode_steps > 0).count();
+        let remaining = (requests.len() - next_idx) + queued.len() + survivors;
+        let mut migrated = false;
+        let mut migration_bytes = 0usize;
+        let mut migration_time = 0.0f64;
+        if remaining > 0 && cfg.policy != ReplacePolicy::Never {
+            let candidate = est.packed(topo.n_devices, topo.devices_per_node);
+            let plan = MigrationPlan::between(&placement, &candidate,
+                                             cfg.bytes_per_expert);
+            if !plan.is_empty() {
+                let mig = plan.time(&cfg.h2d);
+                let overhead = (mig - base_makespan).max(0.0);
+                let saving = match cfg.policy {
+                    ReplacePolicy::BreakEven => {
+                        let cand = TopoCosts::from_routing(
+                            base, topo, &rt, &candidate, cfg.token_bytes);
+                        base_makespan - cfg.spec.build(&cand).makespan()
+                    }
+                    _ => 0.0,
+                };
+                if cfg.policy.should_migrate(step, remaining, saving, overhead) {
+                    plan.add_h2d_tasks(&mut sched.sim, &cfg.h2d);
+                    migrated = true;
+                    migration_bytes = plan.total_bytes();
+                    migration_time = mig;
+                    placement = candidate;
+                    migrations += 1;
+                }
+            }
+        }
+        let makespan = if migrated { sched.makespan() } else { base_makespan };
+        let end = now + makespan;
+
+        let mut completed = 0usize;
+        let mut still = Vec::with_capacity(active.len());
+        for a in active.drain(..) {
+            if a.remaining_decode == 1 {
+                latencies.push(end - a.arrival);
+                completed += 1;
+            } else {
+                still.push(ActiveReq {
+                    remaining_decode: a.remaining_decode - 1,
+                    ..a
+                });
+            }
+        }
+        active = still;
+        for r in admitted {
+            if r.decode_steps == 0 {
+                latencies.push(end - r.arrival);
+                completed += 1;
+            } else {
+                active.push(ActiveReq {
+                    arrival: r.arrival,
+                    remaining_decode: r.decode_steps,
+                });
+            }
+        }
+
+        steps.push(ServeStep {
+            step,
+            start: now,
+            makespan,
+            base_makespan,
+            prefills: admit,
+            prefill_tokens: n_prefill_tokens,
+            decodes: n_decodes,
+            decode_tokens: n_decode_tokens,
+            queued: queued.len(),
+            migrated,
+            migration_bytes,
+            migration_time,
+            completed,
+        });
+        busy += makespan;
+        now = end;
+        step += 1;
+    }
+
+    ServeOutcome {
+        steps,
+        latencies,
+        busy,
+        total_time: now,
+        migrations,
+        final_placement: placement,
+    }
+}

@@ -1,0 +1,37 @@
+//! Open-loop serving simulation: request streams → latency under load.
+//!
+//! Every study below this layer prices one fixed batch per step; serving
+//! a model is different — requests *arrive*, wait in a queue, get batched
+//! by a policy, run a prefill step, then ride along as decode tokens for
+//! several more steps before completing. This module puts that loop on
+//! top of the DES:
+//!
+//! - [`arrivals`] — seeded Poisson-like and trace-driven request streams
+//!   ([`poisson_arrivals`], [`trace_arrivals`]);
+//! - [`batch`] — continuous-batching admission policies
+//!   ([`BatchPolicy`]: wait-k / deadline / token-budget);
+//! - [`engine`] — the serving loop ([`run_serve`]): per step, the formed
+//!   batch becomes a [`RoutingTable`](crate::moe::RoutingTable) via
+//!   [`phase_affine_routing`](crate::moe::phase_affine_routing) (prefill
+//!   and decode tokens carry distinct noise profiles), is priced by
+//!   `TopoCosts::from_routing` under the placement currently in force,
+//!   and executes as a `ScheduleSpec::build` schedule whose makespan
+//!   advances the virtual clock. PR 5's
+//!   [`ReplacePolicy`](crate::coordinator::replace::ReplacePolicy) runs
+//!   *online* inside the loop — the same estimator/plan/break-even
+//!   machinery as `run_replace_timeline`, with `remaining` counting
+//!   outstanding requests instead of scripted steps.
+//!
+//! The closed-system configuration (all requests at `t = 0`, wait-1
+//! batching, prefill-only requests) reduces bit-exactly to
+//! `run_replace_timeline` over the same table stream — the property that
+//! pins this loop to the validated PR 5 model (and to the DES mirror,
+//! `tools/des_mirror/mirror2.py` `consistency_checks6`).
+
+pub mod arrivals;
+pub mod batch;
+pub mod engine;
+
+pub use arrivals::{poisson_arrivals, trace_arrivals, Request};
+pub use batch::{BatchDecision, BatchPolicy};
+pub use engine::{run_serve, ServeConfig, ServeOutcome, ServeStep, TrafficProfile};

@@ -54,7 +54,7 @@ pub mod gen {
                 picked.push(picked[0]);
             }
             let mut ws: Vec<f32> = (0..k).map(|_| rng.next_f32() + 0.01).collect();
-            ws.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            ws.sort_by(|a, b| b.total_cmp(a));
             let total: f32 = ws.iter().sum();
             for (e, w) in picked.iter().zip(ws) {
                 indices.push(*e as i32);

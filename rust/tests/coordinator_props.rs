@@ -208,7 +208,7 @@ fn prop_compute_stream_exclusive() {
             let mut comp: Vec<_> = spans.iter()
                 .filter(|s| matches!(s.resource, Resource::Compute(_)))
                 .collect();
-            comp.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+            comp.sort_by(|a, b| a.start.total_cmp(&b.start));
             for w in comp.windows(2) {
                 if w[1].start < w[0].end - 1e-9 {
                     return Err(format!("compute overlap {} / {}", w[0].label, w[1].label));

@@ -12,7 +12,7 @@ use scmoe::coordinator::costs::{BlockCosts, ComputeCosts, MoEKind, Strategy, Top
 use scmoe::coordinator::replace::MigrationPlan;
 use scmoe::coordinator::schedule::{build_pair_schedule, ChunkPipelining, PairSchedule};
 use scmoe::coordinator::spec::ScheduleSpec;
-use scmoe::moe::{Placement, RoutingTable};
+use scmoe::moe::{phase_affine_routing, Placement, RoutingTable};
 use scmoe::simtime::Resource;
 
 const GOLDEN: &str = include_str!("golden/timelines.txt");
@@ -106,9 +106,7 @@ fn resource_token(r: Resource) -> String {
 fn render_line(name: &str, sched: &PairSchedule) -> String {
     let mut spans = sched.run();
     let makespan = spans.iter().fold(0.0f64, |m, s| m.max(s.end));
-    spans.sort_by(|a, b| {
-        a.start.partial_cmp(&b.start).unwrap().then(a.id.cmp(&b.id))
-    });
+    spans.sort_by(|a, b| a.start.total_cmp(&b.start).then(a.id.cmp(&b.id)));
     let toks: Vec<String> = spans
         .iter()
         .map(|s| format!("{}@{}@{:.6}", s.label, resource_token(s.resource), s.start))
@@ -250,6 +248,26 @@ fn generate_lines() -> Vec<String> {
         lines.push(render_line(&format!("replace:block->affinity/{name}"),
                                &sched));
     }
+
+    // open-loop serving steps: phase_affine_routing batches priced on
+    // the routed fleet under the block placement. serve:wait1/* pins
+    // the serving loop's per-step traffic-seed advance (seeds 97..99,
+    // uniform noise 0.25); serve:mixed pins the prefill/decode noise
+    // split (8 exact prompt tokens + 8 decode tokens at 0.5).
+    for s in 0..3u64 {
+        let rt = phase_affine_routing(4, 2, 4, 16, 0, 0, 0.25, 0.25, 97 + s);
+        let tc = routed_fleet(&rt, &block);
+        lines.push(render_line(
+            &format!("serve:wait1/step{s}"),
+            &ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, Strategy::Sequential)
+                .build(&tc)));
+    }
+    let rt = phase_affine_routing(4, 2, 4, 8, 8, 0, 0.0, 0.5, 98);
+    let tc = routed_fleet(&rt, &block);
+    lines.push(render_line(
+        "serve:mixed/seq",
+        &ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, Strategy::Sequential)
+            .build(&tc)));
     lines
 }
 
@@ -293,6 +311,7 @@ fn golden_file_covers_every_kind_and_strategy() {
         "routed:skewed/", "routed:skewed/overlap+pipe2-s2",
         "routed:skewed/pipe2", "replace:block->affinity/seq",
         "replace:block->affinity/overlap-s2", "replace:block->affinity/pipe2",
+        "serve:wait1/step0", "serve:wait1/step2", "serve:mixed/seq",
     ] {
         assert!(GOLDEN.contains(needle), "golden corpus is missing {needle}");
     }

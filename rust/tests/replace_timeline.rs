@@ -150,8 +150,7 @@ fn migration_step_h2d_tasks_are_exact_and_never_overlap() {
         .collect();
     assert_eq!(h2d_spans.len(), 30);
     h2d_spans.sort_by(|a, b| {
-        a.resource.cmp(&b.resource)
-            .then(a.start.partial_cmp(&b.start).unwrap())
+        a.resource.cmp(&b.resource).then(a.start.total_cmp(&b.start))
     });
     for w in h2d_spans.windows(2) {
         if w[0].resource == w[1].resource {

@@ -155,8 +155,8 @@ fn real_distributed_pair_matches_fused_oracle_and_overlap_wins() {
     // median of 3
     let mut seq_t: Vec<f64> = (0..3).map(|_| time(&seq_spec)).collect();
     let mut ovl_t: Vec<f64> = (0..3).map(|_| time(&ovl_spec)).collect();
-    seq_t.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    ovl_t.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    seq_t.sort_by(|a, b| a.total_cmp(b));
+    ovl_t.sort_by(|a, b| a.total_cmp(b));
     assert!(ovl_t[1] < seq_t[1],
             "overlap ({:.3}s) should beat sequential ({:.3}s)", ovl_t[1], seq_t[1]);
 }

@@ -75,7 +75,9 @@ fn prop_exclusive_resources_never_overlap() {
             }
         }
         for (res, mut intervals) in by_resource {
-            intervals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            intervals.sort_by(|a, b| {
+                a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1))
+            });
             for w in intervals.windows(2) {
                 if w[1].0 < w[0].1 - 1e-12 {
                     return Err(format!(

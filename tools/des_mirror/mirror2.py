@@ -2271,24 +2271,487 @@ def replace_study5():
               % (pol[0], tot * 1e3, mig, marks))
 
 
+# ======================================================================
+# PR 6 model: the open-loop serving loop (request streams -> batches ->
+# priced DES steps -> latencies). Transcribes the post-PR6 Rust
+# line-by-line:
+#   moe/traffic.rs         -> phase_affine_routing
+#   serve/arrivals.rs      -> poisson_arrivals (Bernoulli-grid thinning)
+#   serve/batch.rs         -> batch_decide
+#   serve/engine.rs        -> run_serve
+#   util/stats.rs          -> percentile (nearest-rank, f64::round)
+#   report/serve_report.rs -> SERVE_* constants + serve_cell + knee
+# ======================================================================
+
+
+def phase_affine_routing(n_devices, devices_per_node, n_experts,
+                         prefill_tokens, decode_tokens, regime,
+                         prefill_noise, decode_noise, seed):
+    """moe::traffic::phase_affine_routing — mixed-batch node-affine
+    routing (k = 1): the first `prefill_tokens` positions roll their
+    noise against `prefill_noise`, the rest against `decode_noise`.
+    drifting_node_affine_routing is the equal-noise, evenly-divisible
+    special case, bit-exactly (same splitmix64 draw order: one next_f64
+    per token plus one below() on the taken branch)."""
+    assert devices_per_node > 0 and n_devices % devices_per_node == 0
+    n_nodes = n_devices // devices_per_node
+    assert n_experts % n_nodes == 0
+    group = n_experts // n_nodes
+    n_tokens = prefill_tokens + decode_tokens
+    assert n_tokens > 0
+    tokens_per_device = -(-n_tokens // n_devices)
+    rng = Rng(seed)
+    indices = []
+    weights = [1.0] * n_tokens
+    for t in range(n_tokens):
+        node = min(t // tokens_per_device, n_devices - 1) // devices_per_node
+        aff_node = (node + regime) % n_nodes
+        noise = prefill_noise if t < prefill_tokens else decode_noise
+        if rng.next_f64() < noise:
+            e = rng.below(n_experts)
+        else:
+            e = aff_node + n_nodes * rng.below(group)
+        indices.append(e)
+    return RoutingTable(indices, weights, n_tokens, 1, n_experts, n_tokens)
+
+
+def poisson_arrivals(n_requests, rate, tick, prefill_tokens, decode_steps,
+                     seed):
+    """serve::arrivals::poisson_arrivals — Bernoulli thinning on a fixed
+    tick grid (each tick admits with p = rate*tick): geometric gaps with
+    mean 1/rate, no ln(), bit-reproducible against Rust. Requests are
+    (arrival, prefill_tokens, decode_steps) tuples (ids are implicit
+    arrival-order indices on both sides)."""
+    assert rate > 0.0 and tick > 0.0
+    p = rate * tick
+    assert p < 1.0
+    rng = Rng(seed)
+    out = []
+    i = 0
+    while len(out) < n_requests:
+        if rng.next_f64() < p:
+            out.append((float(i) * tick, prefill_tokens, decode_steps))
+        i += 1
+    return out
+
+
+# BatchPolicy: ('wait', k) | ('deadline', window) | ('budget', budget)
+# BatchDecision: ('admit', n) | ('wait-until', t)
+
+def batch_decide(policy, now, queued, active, decode_tokens, next_arrival):
+    """serve::batch::BatchPolicy::decide — queued is the FIFO prefill
+    queue as (arrival, prefill_tokens) rows; active counts in-flight
+    decode requests."""
+    if policy[0] == 'wait':
+        k = policy[1]
+        assert k > 0
+        if len(queued) >= k:
+            return ('admit', k)
+        if active > 0:
+            return ('admit', len(queued))
+        if next_arrival is not None:
+            return ('wait-until', next_arrival)
+        return ('admit', len(queued))  # tail drain
+    if policy[0] == 'deadline':
+        window = policy[1]
+        if not queued:
+            return ('admit', 0)  # pure-decode step
+        deadline = queued[0][0] + window
+        if now >= deadline:
+            return ('admit', len(queued))
+        if active > 0:
+            return ('admit', 0)
+        if next_arrival is not None and next_arrival < deadline:
+            return ('wait-until', next_arrival)
+        return ('wait-until', deadline)
+    budget = policy[1]
+    tokens = active * decode_tokens
+    n = 0
+    for (arr, prefill) in queued:
+        if tokens + prefill > budget:
+            break
+        tokens += prefill
+        n += 1
+    if n == 0 and active == 0:
+        return ('admit', 1)  # oversized head runs alone
+    return ('admit', n)
+
+
+def percentile(xs, p):
+    """util::stats::percentile — nearest-rank on a sorted copy. Rust
+    rounds the rank with f64::round (half away from zero): transcribed
+    via rust_round, NOT Python round() (banker's rounding diverges on
+    every odd-length median)."""
+    if not xs:
+        return 0.0
+    v = sorted(xs)
+    rank = rust_round((p / 100.0) * (len(v) - 1.0))
+    return v[min(rank, len(v) - 1)]
+
+
+def run_serve(base, topo, requests, initial, kind, strat, batching, policy,
+              decay, bytes_per_expert, h2d_link, token_bytes, decode_tokens,
+              n_experts, regime, shift_at, prefill_noise, decode_noise,
+              traffic_seed, slot=0, pipelining=STAGED):
+    """serve::engine::run_serve — drain arrivals, ask the batch policy,
+    price the admitted batch's phase-affine table under the placement in
+    force, run the PR5 migration decision with remaining = outstanding
+    requests, record completions. Returns (steps, latencies, busy,
+    total_time, migrations, final_placement) with steps = (step, start,
+    makespan, base_makespan, prefills, prefill_tokens, decodes,
+    decode_tokens, queued, migrated, mig_bytes, mig_time, completed)."""
+    assert requests
+    assert all(a[0] <= b[0] for a, b in zip(requests, requests[1:]))
+    assert all(r[2] == 0 for r in requests) or decode_tokens > 0
+    assert n_experts == initial.n_experts
+    n_nodes = topo.n_devices // topo.devices_per_node
+    est = AffinityEstimator(n_experts, n_nodes, decay)
+    placement = initial
+    queued = []   # (arrival, prefill_tokens, decode_steps)
+    active = []   # (arrival, remaining_decode)
+    next_idx = 0
+    now = 0.0
+    step = 0
+    steps = []
+    latencies = []
+    busy = 0.0
+    migrations = 0
+    while next_idx < len(requests) or queued or active:
+        while next_idx < len(requests) and requests[next_idx][0] <= now:
+            queued.append(requests[next_idx])
+            next_idx += 1
+        if not queued and not active:
+            now = requests[next_idx][0]  # idle: jump to next arrival
+            continue
+        next_arrival = (requests[next_idx][0] if next_idx < len(requests)
+                        else None)
+        qmeta = [(r[0], r[1]) for r in queued]
+        dec = batch_decide(batching, now, qmeta, len(active), decode_tokens,
+                           next_arrival)
+        if dec[0] == 'wait-until':
+            assert dec[1] > now, 'batching must advance the clock'
+            now = dec[1]
+            continue
+        admit = dec[1]
+        admitted = queued[:admit]
+        queued = queued[admit:]
+        n_prefill_tokens = sum(r[1] for r in admitted)
+        n_decodes = len(active)
+        n_decode_tokens = n_decodes * decode_tokens
+        reg = regime + (1 if (shift_at is not None and step >= shift_at)
+                        else 0)
+        rt = phase_affine_routing(topo.n_devices, topo.devices_per_node,
+                                  n_experts, n_prefill_tokens,
+                                  n_decode_tokens, reg, prefill_noise,
+                                  decode_noise, traffic_seed + step)
+        costs = topo_from_routing4(base, topo, rt, placement, token_bytes)
+        sim = build_spec4(costs, kind, strat, slot, pipelining)
+        base_makespan = sim.makespan()
+        est.observe(rt, topo.n_devices, topo.devices_per_node)
+        survivors = (sum(1 for a in active if a[1] > 1)
+                     + sum(1 for r in admitted if r[2] > 0))
+        remaining = (len(requests) - next_idx) + len(queued) + survivors
+        migrated = False
+        mig_bytes = 0
+        mig_time = 0.0
+        if remaining > 0 and policy[0] != 'never':
+            candidate = est.packed(topo.n_devices, topo.devices_per_node)
+            plan = MigrationPlan.between(placement, candidate,
+                                         bytes_per_expert)
+            if not plan.is_empty():
+                mig = plan.time(h2d_link)
+                overhead = max(0.0, mig - base_makespan)
+                if policy[0] == 'break-even':
+                    cand_costs = topo_from_routing4(base, topo, rt, candidate,
+                                                    token_bytes)
+                    saving = base_makespan - build_spec4(
+                        cand_costs, kind, strat, slot, pipelining).makespan()
+                else:
+                    saving = 0.0
+                if should_migrate(policy, step, remaining, saving, overhead):
+                    plan.add_h2d_tasks(sim, h2d_link)
+                    migrated = True
+                    mig_bytes = plan.total_bytes()
+                    mig_time = mig
+                    placement = candidate
+                    migrations += 1
+        makespan = sim.makespan() if migrated else base_makespan
+        end = now + makespan
+        completed = 0
+        still = []
+        for (arr, rem) in active:
+            if rem == 1:
+                latencies.append(end - arr)
+                completed += 1
+            else:
+                still.append((arr, rem - 1))
+        active = still
+        for (arr, pf, ds) in admitted:
+            if ds == 0:
+                latencies.append(end - arr)
+                completed += 1
+            else:
+                active.append((arr, ds))
+        steps.append((step, now, makespan, base_makespan, admit,
+                      n_prefill_tokens, n_decodes, n_decode_tokens,
+                      len(queued), migrated, mig_bytes, mig_time, completed))
+        busy += makespan
+        now = end
+        step += 1
+    return steps, latencies, busy, now, migrations, placement
+
+
+# --- PR6 golden corpus additions --------------------------------------
+
+def generate_serve_lines6():
+    """Serving-step goldens: phase-affine mixed batches priced on the
+    dyadic routed fleet under the block placement (seq ScMoE spec). The
+    wait1 triple pins the per-step seed advance of the serving loop's
+    traffic stream; the mixed line pins the two-noise phase split."""
+    block = Placement.block(4, 4)
+    lines = []
+    for s in range(3):
+        rt = phase_affine_routing(4, 2, 4, 16, 0, 0, 0.25, 0.25, 97 + s)
+        sim = build_spec4(routed_fleet4(rt, block), ('scmoe', 1), ('seq',), 0)
+        lines.append(render_line(f'serve:wait1/step{s}', sim))
+    rt = phase_affine_routing(4, 2, 4, 8, 8, 0, 0.0, 0.5, 98)
+    sim = build_spec4(routed_fleet4(rt, block), ('scmoe', 1), ('seq',), 0)
+    lines.append(render_line('serve:mixed/seq', sim))
+    return lines
+
+
+def generate_corpus_lines6():
+    return generate_corpus_lines5() + generate_serve_lines6()
+
+
+def validate_corpus6():
+    golden_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                               '..', '..', 'rust', 'tests', 'golden',
+                               'timelines.txt')
+    golden = [l for l in open(golden_path).read().splitlines()
+              if l.strip() and not l.startswith('#')]
+    lines = generate_corpus_lines6()
+    bad = 0
+    if len(golden) != len(lines):
+        print(f'line-count mismatch: golden {len(golden)} vs mirror {len(lines)}')
+        bad += 1
+    for g, cu in zip(golden, lines):
+        if g != cu:
+            bad += 1
+            print('- ' + g)
+            print('+ ' + cu)
+    print(f'golden corpus (PR6 model): {len(lines)} lines, {bad} mismatches')
+    return bad == 0
+
+
+def emit_corpus6(path):
+    keep = CORPUS_HEADER3.splitlines()
+    lines = generate_corpus_lines6()
+    routed_at = next(i for i, l in enumerate(lines) if l.startswith('routed:'))
+    routed_comment = [
+        '# Routed-placement scenarios (dyadic 4-device/2-node fleet; see',
+        '# routed_table/routed_fleet in golden_timelines.rs).',
+    ]
+    replace_at = next(i for i, l in enumerate(lines)
+                      if l.startswith('replace:'))
+    replace_comment = [
+        '# Live re-placement migration steps: the routed block-placement',
+        '# schedules with the block->affinity MigrationPlan overlapped in',
+        '# as dependency-free H2D tasks (h<dev> rows; 4096 B/expert over',
+        '# an alpha=0.125 beta=1024 H2D link -> 4.125 s per moved expert).',
+        '# The pre-existing spans are byte-identical to the routed:block',
+        '# entries above (pinned by mirror consistency_checks5).',
+    ]
+    serve_at = next(i for i, l in enumerate(lines) if l.startswith('serve:'))
+    serve_comment = [
+        '# Open-loop serving steps: phase_affine_routing batches priced',
+        '# on the routed fleet under the block placement. serve:wait1/*',
+        '# pins the serving loop\'s per-step traffic-seed advance (seeds',
+        '# 97..99, uniform noise 0.25); serve:mixed pins the prefill/',
+        '# decode noise split (8 exact prompt tokens + 8 tokens at 0.5).',
+    ]
+    body = (lines[:routed_at] + routed_comment + lines[routed_at:replace_at]
+            + replace_comment + lines[replace_at:serve_at]
+            + serve_comment + lines[serve_at:])
+    with open(path, 'w') as f:
+        f.write('\n'.join(keep) + '\n' + '\n'.join(body) + '\n')
+    print(f'emitted {len(lines)} corpus lines to {path}')
+
+
+# --- PR6 study scenario (the numbers pinned in rust/tests/ ------------
+# serve_loop.rs and quoted in docs/STUDIES.md are minted here) ---------
+
+SERVE_REQUESTS = 64
+SERVE_PREFILL_TOKENS = 2048
+SERVE_DECODE_STEPS = 4
+SERVE_DECODE_TOKENS = 64
+SERVE_TOKEN_BYTES = 8192
+SERVE_TICK = 1.0 / 2048.0
+SERVE_SEED = 31
+SERVE_TRAFFIC_SEED = 311
+SERVE_PREFILL_NOISE = 0.05
+SERVE_DECODE_NOISE = 0.25
+SERVE_BUDGET = 6144
+SERVE_SLO = 0.030
+SERVE_OVERLAP_SLOT = 2
+SERVE_LOADS = [120.0, 240.0, 480.0]
+
+
+def serve_cell(rate, strat, batching, policy):
+    """report::serve_report::run_serve_cell — one sweep cell on the
+    4-node IB preset with the GPT3-XL payload, from the uniform block
+    placement."""
+    topo = SCENARIOS['4node-ib']
+    base = xl_compute_costs()
+    requests = poisson_arrivals(SERVE_REQUESTS, rate, SERVE_TICK,
+                                SERVE_PREFILL_TOKENS, SERVE_DECODE_STEPS,
+                                SERVE_SEED)
+    slot = SERVE_OVERLAP_SLOT if strat[0] == 'overlap' else 0
+    return run_serve(base, topo, requests, Placement.block(32, 32),
+                     ('scmoe', 1), strat, batching, policy, 1.0,
+                     REPLACE_STUDY_EXPERT_BYTES, REPLACE_STUDY_H2D,
+                     SERVE_TOKEN_BYTES, SERVE_DECODE_TOKENS, 32,
+                     0, None, SERVE_PREFILL_NOISE, SERVE_DECODE_NOISE,
+                     SERVE_TRAFFIC_SEED, slot)
+
+
+def serve_study6():
+    """Full-precision pinned numbers for rust/tests/serve_loop.rs and
+    docs/STUDIES.md (repr() round-trips the exact f64)."""
+    budget = ('budget', SERVE_BUDGET)
+    for strat in [('seq',), ('overlap',)]:
+        for policy in [('never',), ('break-even',)]:
+            knee = None
+            for rate in SERVE_LOADS:
+                steps, lat, busy, total, mig, _ = serve_cell(
+                    rate, strat, budget, policy)
+                p50 = percentile(lat, 50.0)
+                p99 = percentile(lat, 99.0)
+                thr = len(lat) / total
+                good = sum(1 for l in lat if l <= SERVE_SLO) / total
+                print('load %5.0f %-7s %-10s steps %3d migr %2d' %
+                      (rate, strat[0], policy[0], len(steps), mig))
+                print('  p50 %r p99 %r' % (p50, p99))
+                print('  req/s %r goodput %r busy %r total %r' %
+                      (thr, good, busy, total))
+                if p99 <= SERVE_SLO:
+                    knee = rate if knee is None else max(knee, rate)
+            print('  knee: %r' % knee)
+    print('-- batching policies at %.0f req/s (seq, break-even) --'
+          % SERVE_LOADS[1])
+    for batching in [('wait', 2), ('deadline', 0.008), budget]:
+        steps, lat, busy, total, mig, _ = serve_cell(
+            SERVE_LOADS[1], ('seq',), batching, ('break-even',))
+        print('%-16s steps %3d migr %2d p50 %r p99 %r req/s %r goodput %r'
+              % (batching, len(steps), mig, percentile(lat, 50.0),
+                 percentile(lat, 99.0), len(lat) / total,
+                 sum(1 for l in lat if l <= SERVE_SLO) / total))
+
+
+def consistency_checks6():
+    """Reductions the PR6 model must satisfy before its output is
+    trusted as a golden or pinned value."""
+    # 1. the phase-affine generator degenerates to the PR5 drifting
+    #    generator bit-exactly when both noises coincide and the token
+    #    count divides evenly (same draw order per token)
+    for (regime, noise, seed) in [(0, 0.0, 3), (0, 0.25, 97), (1, 0.6, 42)]:
+        a = drifting_node_affine_routing(4, 2, 4, 4, regime, noise, seed)
+        b = phase_affine_routing(4, 2, 4, 16, 0, regime, noise, noise, seed)
+        assert a.routes == b.routes and a.load == b.load
+    # 2. nearest-rank percentile follows Rust f64::round (half away from
+    #    zero), not Python banker's rounding: the 4-element median picks
+    #    the upper neighbour
+    assert percentile([1.0, 2.0, 3.0, 4.0], 50.0) == 3.0
+    assert percentile([1.0, 2.0, 3.0, 4.0], 100.0) == 4.0
+    assert percentile([], 50.0) == 0.0
+    # 3. the arrival grid is deterministic, sorted, and respects the
+    #    thinning probability bound
+    a = poisson_arrivals(32, 100.0, 1.0 / 2048.0, 128, 4, 7)
+    b = poisson_arrivals(32, 100.0, 1.0 / 2048.0, 128, 4, 7)
+    assert a == b and len(a) == 32
+    assert all(x[0] <= y[0] for x, y in zip(a, a[1:]))
+    # 4. batch policies reproduce the Rust unit-test vectors
+    assert batch_decide(('wait', 2), 0.0, [(0.0, 64)], 0, 8, 0.5) == \
+        ('wait-until', 0.5)
+    assert batch_decide(('wait', 2), 0.5, [(0.0, 64), (0.5, 64)], 0, 8,
+                        None) == ('admit', 2)
+    assert batch_decide(('wait', 2), 0.0, [(0.0, 64)], 3, 8, 0.5) == \
+        ('admit', 1)
+    assert batch_decide(('wait', 2), 0.0, [(0.0, 64)], 0, 8, None) == \
+        ('admit', 1)
+    assert batch_decide(('deadline', 0.25), 1.1, [(1.0, 64), (1.1, 64)], 0,
+                        8, 1.2) == ('wait-until', 1.2)
+    assert batch_decide(('deadline', 0.25), 1.1, [(1.0, 64), (1.1, 64)], 0,
+                        8, 2.0) == ('wait-until', 1.25)
+    assert batch_decide(('deadline', 0.25), 1.25, [(1.0, 64), (1.1, 64)], 0,
+                        8, 2.0) == ('admit', 2)
+    assert batch_decide(('deadline', 0.25), 1.1, [(1.0, 64), (1.1, 64)], 2,
+                        8, 2.0) == ('admit', 0)
+    q3 = [(0.0, 100), (0.0, 100), (0.0, 100)]
+    assert batch_decide(('budget', 256), 0.0, q3, 4, 16, None) == ('admit', 1)
+    assert batch_decide(('budget', 256), 0.0, q3, 0, 16, None) == ('admit', 2)
+    assert batch_decide(('budget', 256), 0.0, [(0.0, 1000)], 0, 16, None) == \
+        ('admit', 1)
+    assert batch_decide(('budget', 256), 0.0, [(0.0, 1000)], 4, 16, None) == \
+        ('admit', 0)
+    # 5. closed-system reduction: all requests at t=0, wait-1 batching,
+    #    prefill-only -> the serving loop IS run_replace_timeline over
+    #    the same drifting table stream, bit-exactly (dyadic config)
+    topo = Topology(4, 2, LinkModel(0.0625, 1024.0), LinkModel(0.125, 512.0),
+                    1.0, None)
+    base = ComputeCosts(1.0, 0.75, 0.75, 0.0625, 0.0625, 0.0625, 0.5)
+    n = 6
+    tables = [drifting_node_affine_routing(4, 2, 4, 4, 0, 0.25, 500 + s)
+              for s in range(n)]
+    block = Placement.block(4, 4)
+    for policy in [('never',), ('break-even',)]:
+        ref_steps, ref_total, ref_mig = run_replace_timeline(
+            base, topo, 64, tables, block, ('scmoe', 1), ('seq',), policy,
+            4096, REPLACE_H2D_LINK, 1.0)
+        steps, lat, busy, total, mig, _ = run_serve(
+            base, topo, [(0.0, 16, 0)] * n, block, ('scmoe', 1), ('seq',),
+            ('wait', 1), policy, 1.0, 4096, REPLACE_H2D_LINK, 64, 0, 4,
+            0, None, 0.25, 0.25, 500)
+        assert mig == ref_mig and total == ref_total and busy == total
+        assert len(steps) == n and len(lat) == n
+        for (sv, rf) in zip(steps, ref_steps):
+            # (step, makespan, base_makespan, migrated, bytes, time)
+            assert sv[0] == rf[0] and sv[2] == rf[1] and sv[3] == rf[2]
+            assert sv[9] == rf[3] and sv[10] == rf[4] and sv[11] == rf[5]
+            assert sv[4] == 1 and sv[5] == 16 and sv[6] == 0 and sv[7] == 0
+    # 6. the serving loop is deterministic: one seed, one outcome
+    x = serve_cell(SERVE_LOADS[0], ('seq',), ('budget', SERVE_BUDGET),
+                   ('never',))
+    y = serve_cell(SERVE_LOADS[0], ('seq',), ('budget', SERVE_BUDGET),
+                   ('never',))
+    assert x[0] == y[0] and x[1] == y[1] and x[4] == y[4]
+    print('PR6 consistency checks: OK')
+
+
 if __name__ == '__main__':
     # Internal reductions first: the PR3 model must reproduce the seed
     # model bit-for-bit where applicable, the PR4 spec-driven model must
     # reproduce the PR3 builders wherever no load information exists
-    # (plus balanced-load identity), and the PR5 re-placement model must
+    # (plus balanced-load identity), the PR5 re-placement model must
     # reduce to the PR4 single-step schedules wherever no migration
-    # fires. Then validate the PR5 model against the full golden corpus.
-    # `--emit` deliberately regenerates the file; plain invocation (CI)
-    # only validates and exits nonzero on drift.
+    # fires, and the PR6 serving loop must reduce to the PR5 scripted
+    # timeline on a closed system. Then validate the PR6 model against
+    # the full golden corpus. `--emit` deliberately regenerates the
+    # file; plain invocation (CI) only validates and exits nonzero on
+    # drift.
     consistency_checks3()
     consistency_checks4()
     consistency_checks5()
+    consistency_checks6()
     if '--study' in sys.argv:
         replace_study5()
         sys.exit(0)
+    if '--serve-study' in sys.argv:
+        serve_study6()
+        sys.exit(0)
     if '--emit' in sys.argv:
-        emit_corpus5(os.path.join(os.path.dirname(os.path.abspath(__file__)),
+        emit_corpus6(os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                   '..', '..', 'rust', 'tests', 'golden',
                                   'timelines.txt'))
-    ok = validate_corpus5()
+    ok = validate_corpus6()
     sys.exit(0 if ok else 1)
