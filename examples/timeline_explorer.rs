@@ -31,6 +31,12 @@
 //! prefill+decode step's fleet timeline, and compare the swept loads'
 //! latency percentiles.
 //!
+//! With `--chaos`, run the chaos robustness study's fault scenarios on
+//! the 4-node IB preset: render the straggler-perturbed fleet step next
+//! to the clean one, the dropout recovery step (the failover migration
+//! storm on the `h2d[d]` rows), and the robustness + C2R head-to-head
+//! tables `scmoe report chaos` prints.
+//!
 //! `--chunks N` sets the pipeline depth of the chunked rows (default 2).
 //! Every chunk pays its own launch latency, so deep chunking visibly
 //! stops helping; in `--fleet` mode the chunked ScMoE timeline is also
@@ -40,14 +46,19 @@
 //! All schedules are built through the one construction API:
 //! `ScheduleSpec::new(kind, strategy).build(&cost_model)`.
 
-use scmoe::cluster::Scenario;
+use scmoe::cluster::{ChaosSpec, Scenario};
 use scmoe::coordinator::adaptive::eq11_objective;
 use scmoe::coordinator::costs::{MoEKind, Strategy, TopoCosts};
-use scmoe::coordinator::replace::{MigrationPlan, ReplacePolicy};
+use scmoe::coordinator::replace::{failover_placement, MigrationPlan,
+                                  ReplacePolicy};
 use scmoe::coordinator::schedule::ChunkPipelining;
 use scmoe::coordinator::spec::ScheduleSpec;
 use scmoe::coordinator::timeline;
 use scmoe::moe::{AffinityEstimator, Placement};
+use scmoe::report::chaos::{
+    c2r_study_tables, c2r_uplink_fault, chaos_scenarios, run_chaos_cell,
+    tail_stats, CHAOS_DROP_DEVICE, CHAOS_DROP_STEP,
+};
 use scmoe::report::efficiency::{
     load_skew_study_rows, placement_study_rows, proxy_costs, topo_proxy_costs,
     xl_compute_costs, xl_topo_proxy_costs,
@@ -74,6 +85,10 @@ fn main() {
     }
     if args.flag("replace") {
         replace_mode(args.usize_or("width", 110));
+        return;
+    }
+    if args.flag("chaos") {
+        chaos_mode(args.usize_or("width", 110));
         return;
     }
     if args.flag("placement") || args.flag("skew") {
@@ -346,6 +361,98 @@ fn serve_mode(width: usize) {
                  rate, o.p50() * 1e3, o.p99() * 1e3, o.throughput(),
                  o.goodput(SERVE_SLO));
     }
+}
+
+/// Render the chaos study's fault scenarios: the straggler-perturbed
+/// fleet step (slow devices' Compute rows visibly stretched against the
+/// clean step), the dropout recovery step (the failover migration storm
+/// on the `h2d[d]` rows), and the robustness + C2R tables
+/// `scmoe report chaos` tabulates.
+fn chaos_mode(width: usize) {
+    let sc = Scenario::FourNodeA800IBx32;
+    let topo = sc.topology();
+    let base = xl_compute_costs();
+    // same configuration as the chaos study's cells, so the rendered
+    // steps match the tables printed below
+    let cfg = study_config(ReplacePolicy::Never, 1.0);
+    let spec = cfg.spec;
+    println!("### {} — chaos timelines ({} devices, {} nodes) ###",
+             sc.label(), topo.n_devices, topo.n_nodes());
+
+    let tables = study_tables(STUDY_DRIFT_NOISE, STUDY_DRIFT_SEED, None);
+    let block = Placement::new(32, 32);
+    let scenarios = chaos_scenarios();
+
+    // the stragglers scenario's step 0: seeded jitter plus two persistent
+    // stragglers stretch the slow devices' rows and the fleet barrier
+    let straggle = &scenarios[0].1;
+    let clean_tc = TopoCosts::from_routing(&base, &topo, &tables[0], &block,
+                                           STUDY_TOKEN_BYTES);
+    let clean_ms = spec.build(&clean_tc).makespan();
+    let ptopo = straggle.perturb(&topo, 0);
+    let tc = TopoCosts::from_routing(&base, &ptopo, &tables[0], &block,
+                                     STUDY_TOKEN_BYTES);
+    let spans = spec.build(&tc).run();
+    println!("\n--- stragglers, step 0: 10% jitter + d3 1.5x + d17 2.0x ---");
+    print!("{}", timeline::render(&spans, width));
+    println!("clean step {:.3}ms -> perturbed {:.3}ms ({:.2}x): the fleet \
+              barrier tracks the slowest straggler",
+             clean_ms * 1e3, makespan(&spans) * 1e3,
+             makespan(&spans) / clean_ms);
+
+    // the dropout scenario's recovery step: the failed device's expert
+    // fails over to the least-loaded survivor, and the migration storm
+    // overlaps the step on the h2d rows
+    let failover = failover_placement(&block, CHAOS_DROP_DEVICE);
+    let plan = MigrationPlan::between(&block, &failover, cfg.bytes_per_expert);
+    let tc = TopoCosts::from_routing(&base, &topo, &tables[CHAOS_DROP_STEP],
+                                     &block, STUDY_TOKEN_BYTES);
+    let mut sched = spec.build(&tc);
+    let base_ms = sched.makespan();
+    plan.add_h2d_tasks(&mut sched.sim, &cfg.h2d);
+    let spans = sched.run();
+    println!("\n--- dropout recovery, step {}: device {} fails, {} expert \
+              transfer(s) on h2d rows ---",
+             CHAOS_DROP_STEP, CHAOS_DROP_DEVICE, plan.moves.len());
+    print!("{}", timeline::render(&spans, width));
+    println!("recovery step stretches {:.3}ms -> {:.3}ms: the failover \
+              storm outlasts the step's compute",
+             base_ms * 1e3, makespan(&spans) * 1e3);
+
+    // the robustness table, block placement, sequential schedule — the
+    // same cells `scmoe report chaos` prints in its full grid
+    println!("\n### robustness (block placement, seq) ###");
+    println!("{:<14} {:<11} {:>10} {:>10} {:>6} {:>11} {:>4}",
+             "scenario", "policy", "median", "p99", "amp", "total", "mig");
+    let mut rows = vec![("clean", ChaosSpec::clean(0))];
+    rows.extend(scenarios);
+    for (name, chaos) in &rows {
+        for policy in [ReplacePolicy::Never, ReplacePolicy::BreakEven] {
+            let out = run_chaos_cell(&tables, &block, Strategy::Sequential, 0,
+                                     policy, chaos);
+            let (med, p99, amp) = tail_stats(&out);
+            println!("{:<14} {:<11} {:>8.3}ms {:>8.3}ms {:>5.2}x {:>9.3}ms \
+                      {:>4}",
+                     name, policy.label(), med * 1e3, p99 * 1e3, amp,
+                     out.total * 1e3, out.migrations);
+        }
+    }
+
+    println!("\n### C2R bounded fanout under a persistent uplink fault ###");
+    let fault = c2r_uplink_fault();
+    for (name, constrained) in [("affine", false), ("c2r", true)] {
+        let tbl = c2r_study_tables(constrained);
+        let init = Placement::affinity_packed(&tbl[0], 32, 8);
+        let clean = run_chaos_cell(&tbl, &init, Strategy::Sequential, 0,
+                                   ReplacePolicy::Never, &ChaosSpec::clean(0));
+        let deg = run_chaos_cell(&tbl, &init, Strategy::Sequential, 0,
+                                 ReplacePolicy::Never, &fault);
+        println!("{:<7} clean {:>9.3}ms  degraded {:>9.3}ms ({:.2}x)",
+                 name, clean.total * 1e3, deg.total * 1e3,
+                 deg.total / clean.total);
+    }
+    println!("collaboration-constrained routes never leave their node, so \
+              the uplink fault cannot touch them");
 }
 
 /// Render the load-skew study's rows as fleet timelines: the balanced

@@ -1,0 +1,294 @@
+//! Chaos perturbation layer: per-step fault models over a clean
+//! [`Topology`].
+//!
+//! Real fleets are not the clean presets of
+//! [`Scenario`](super::topology::Scenario): devices jitter, some straggle
+//! persistently, links degrade or flap, and whole devices drop out. A
+//! [`ChaosSpec`] describes such a fault set declaratively;
+//! [`ChaosSpec::perturb`] applies it to a topology for one step, producing
+//! the perturbed [`Topology`] that `TopoCosts::from_routing` prices like
+//! any other fleet:
+//!
+//! - **compute jitter** — every device's compute scale is divided by
+//!   `1 + jitter * u` with `u ~ U[0, 1)` drawn from the spec's seeded
+//!   splitmix64 stream, forked per step
+//!   ([`Rng::fork`](crate::util::rng::Rng::fork)), so any step of a study
+//!   is reproducible in isolation and independent of every other step;
+//! - **stragglers** — persistent per-device slowdown factors composing
+//!   multiplicatively with the jitter (and, downstream, with
+//!   `ExpertLoad`'s load stretching);
+//! - **link faults** — α/β degradation of one node's intra link or of the
+//!   shared uplink, persistent or *flapping* on a periodic schedule
+//!   ([`LinkFault`]);
+//! - **dropout** — one device fails at a step ([`Dropout`]); the recovery
+//!   (expert failover + migration storm) is priced by
+//!   `coordinator::replace::run_chaos_timeline`, not here — the spec only
+//!   carries the fault.
+//!
+//! A zero-magnitude spec ([`ChaosSpec::is_zero`]) perturbs *nothing*:
+//! untouched fields are cloned verbatim rather than recomputed, so clean
+//! schedules stay bit-identical to never having had a chaos layer at all
+//! (the zero-perturbation identity pinned in `rust/tests/chaos_suite.rs`).
+//! Every pinned expectation is minted through the DES mirror
+//! (`tools/des_mirror/mirror2.py`, PR7 model).
+
+use crate::util::rng::Rng;
+
+use super::interconnect::LinkModel;
+use super::topology::Topology;
+
+/// One degraded link: the shared inter-node uplink (`node: None`) or one
+/// node's intra-node link, with α multiplied and β divided while the
+/// fault is active — persistently, or on a flapping schedule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkFault {
+    /// `None` = the shared inter-node uplink; `Some(n)` = node `n`'s
+    /// intra-node link.
+    pub node: Option<usize>,
+    /// Launch-latency multiplier while active (1.0 = untouched).
+    pub alpha_mult: f64,
+    /// Bandwidth divisor while active (1.0 = untouched).
+    pub beta_div: f64,
+    /// `None` = persistent; `Some((period, up))` = the link is healthy
+    /// for `up` steps then degraded for the rest of each `period`-step
+    /// cycle (degraded exactly when `step % period >= up`).
+    pub flap: Option<(usize, usize)>,
+}
+
+impl LinkFault {
+    /// Whether the fault degrades its link at this step.
+    pub fn active(&self, step: usize) -> bool {
+        match self.flap {
+            None => true,
+            Some((period, up)) => step % period >= up,
+        }
+    }
+}
+
+/// Whole-device failure at a step. `run_chaos_timeline` prices the
+/// recovery: the failed device's experts fail over to survivors and the
+/// resulting migration storm overlaps the recovery step as H2D tasks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Dropout {
+    /// The failing device.
+    pub device: usize,
+    /// 0-based step at which it fails.
+    pub at_step: usize,
+}
+
+/// A declarative fault set over a fleet: jitter + stragglers + link
+/// faults + at most one device dropout. See the module docs for the
+/// semantics of each field.
+#[derive(Debug, Clone)]
+pub struct ChaosSpec {
+    /// Jitter stream seed (forked per step, so steps draw independently).
+    pub seed: u64,
+    /// Max fractional per-device compute slowdown per step (0 = none).
+    pub jitter: f64,
+    /// Persistent `(device, slowdown factor)` stragglers.
+    pub stragglers: Vec<(usize, f64)>,
+    /// Degraded / flapping links.
+    pub link_faults: Vec<LinkFault>,
+    /// Whole-device failure, if any.
+    pub dropout: Option<Dropout>,
+}
+
+impl ChaosSpec {
+    /// The fault-free spec (named seed, zero magnitudes).
+    pub fn clean(seed: u64) -> ChaosSpec {
+        ChaosSpec {
+            seed,
+            jitter: 0.0,
+            stragglers: Vec::new(),
+            link_faults: Vec::new(),
+            dropout: None,
+        }
+    }
+
+    /// True when every magnitude is the identity: no jitter, only 1.0x
+    /// stragglers, only identity link faults, no dropout. Such a spec's
+    /// [`Self::perturb`] is a field-exact clone.
+    pub fn is_zero(&self) -> bool {
+        self.jitter == 0.0
+            && self.stragglers.iter().all(|&(_, f)| f == 1.0)
+            && self
+                .link_faults
+                .iter()
+                .all(|f| f.alpha_mult == 1.0 && f.beta_div == 1.0)
+            && self.dropout.is_none()
+    }
+
+    /// Apply the spec to a topology for one step. Only the faulted
+    /// fields change: jitter/stragglers materialize `device_scales`,
+    /// intra-link faults materialize `node_intra`, uplink faults rewrite
+    /// `inter` — everything a zero-magnitude spec never touches is the
+    /// clone's verbatim copy (the bit-exactness guarantee).
+    pub fn perturb(&self, topo: &Topology, step: usize) -> Topology {
+        let mut out = topo.clone();
+        let straggling = self.stragglers.iter().any(|&(_, f)| f != 1.0);
+        if self.jitter > 0.0 || straggling {
+            let mut scales: Vec<f64> = (0..topo.n_devices)
+                .map(|d| topo.device_compute_scale(d))
+                .collect();
+            if self.jitter > 0.0 {
+                let mut rng = Rng::new(self.seed).fork(step as u64);
+                for s in scales.iter_mut() {
+                    *s /= 1.0 + self.jitter * rng.next_f64();
+                }
+            }
+            for &(d, f) in &self.stragglers {
+                scales[d] /= f;
+            }
+            out.device_scales = Some(scales);
+        }
+        let mut links: Option<Vec<LinkModel>> = None;
+        for f in &self.link_faults {
+            if (f.alpha_mult == 1.0 && f.beta_div == 1.0) || !f.active(step) {
+                continue;
+            }
+            match f.node {
+                None => {
+                    let l = out
+                        .inter
+                        .expect("uplink fault on a single-node topology");
+                    out.inter = Some(LinkModel::new(l.alpha * f.alpha_mult,
+                                                    l.beta / f.beta_div));
+                }
+                Some(n) => {
+                    let v = links.get_or_insert_with(|| topo.intra_links());
+                    let l = v[n];
+                    v[n] = LinkModel::new(l.alpha * f.alpha_mult,
+                                          l.beta / f.beta_div);
+                }
+            }
+        }
+        if let Some(v) = links {
+            out.node_intra = Some(v);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dyadic_topo() -> Topology {
+        Topology {
+            n_devices: 4,
+            devices_per_node: 2,
+            intra: LinkModel::new(0.0625, 1024.0),
+            inter: Some(LinkModel::new(0.125, 512.0)),
+            compute_scale: 1.0,
+            device_scales: None,
+            node_intra: None,
+        }
+    }
+
+    #[test]
+    fn zero_magnitude_spec_touches_no_field() {
+        // 1.0x stragglers, identity uplink faults and never-active flap
+        // schedules all count as zero — and perturb leaves every field
+        // verbatim (mirror consistency_checks7 case 1)
+        let topo = dyadic_topo();
+        let zero = ChaosSpec {
+            seed: 9,
+            jitter: 0.0,
+            stragglers: vec![(2, 1.0)],
+            link_faults: vec![
+                LinkFault { node: None, alpha_mult: 1.0, beta_div: 1.0,
+                            flap: None },
+                LinkFault { node: Some(0), alpha_mult: 2.0, beta_div: 2.0,
+                            flap: Some((4, 4)) },
+            ],
+            dropout: None,
+        };
+        assert!(zero.is_zero());
+        assert!(ChaosSpec::clean(9).is_zero());
+        assert!(!ChaosSpec {
+            dropout: Some(Dropout { device: 0, at_step: 0 }),
+            ..ChaosSpec::clean(9)
+        }
+        .is_zero());
+        for step in 0..4 {
+            let pt = zero.perturb(&topo, step);
+            assert_eq!(pt.device_scales, None);
+            assert_eq!(pt.node_intra, None);
+            assert_eq!(pt.inter, topo.inter);
+            assert_eq!(pt.intra, topo.intra);
+        }
+    }
+
+    #[test]
+    fn jitter_is_seed_deterministic_and_fork_true() {
+        // identical seed+step => identical scales; distinct seed or step
+        // => distinct draws; and the draws follow the fork(step) stream
+        // contract shared with util::rng (mirror case 3)
+        let topo = dyadic_topo();
+        let spec = ChaosSpec { jitter: 0.25, ..ChaosSpec::clean(41) };
+        let a1 = spec.perturb(&topo, 2);
+        let a2 = spec.perturb(&topo, 2);
+        assert_eq!(a1.device_scales, a2.device_scales);
+        let b = ChaosSpec { jitter: 0.25, ..ChaosSpec::clean(42) }
+            .perturb(&topo, 2);
+        assert_ne!(a1.device_scales, b.device_scales);
+        let c = spec.perturb(&topo, 3);
+        assert_ne!(a1.device_scales, c.device_scales);
+        let mut manual = Rng::new(41).fork(2);
+        let expect: Vec<f64> = (0..4)
+            .map(|_| 1.0 / (1.0 + 0.25 * manual.next_f64()))
+            .collect();
+        assert_eq!(a1.device_scales, Some(expect));
+    }
+
+    #[test]
+    fn stragglers_compose_multiplicatively_with_jitter() {
+        let topo = dyadic_topo();
+        let jittered = ChaosSpec { jitter: 0.25, ..ChaosSpec::clean(41) }
+            .perturb(&topo, 2);
+        let both = ChaosSpec {
+            jitter: 0.25,
+            stragglers: vec![(3, 2.0)],
+            ..ChaosSpec::clean(41)
+        }
+        .perturb(&topo, 2);
+        let j = jittered.device_scales.unwrap();
+        let s = both.device_scales.unwrap();
+        assert_eq!(s[..3], j[..3]);
+        assert_eq!(s[3], j[3] / 2.0);
+    }
+
+    #[test]
+    fn flap_schedule_gates_uplink_faults_per_step() {
+        let topo = dyadic_topo();
+        let flap = ChaosSpec {
+            link_faults: vec![LinkFault { node: None, alpha_mult: 2.0,
+                                          beta_div: 4.0, flap: Some((4, 2)) }],
+            ..ChaosSpec::clean(0)
+        };
+        for step in 0..8 {
+            let pt = flap.perturb(&topo, step);
+            if step % 4 >= 2 {
+                assert_eq!(pt.inter, Some(LinkModel::new(0.25, 128.0)));
+            } else {
+                assert_eq!(pt.inter, topo.inter);
+            }
+        }
+    }
+
+    #[test]
+    fn intra_fault_materializes_node_intra_and_leaves_inter() {
+        let topo = dyadic_topo();
+        let pt = ChaosSpec {
+            link_faults: vec![LinkFault { node: Some(1), alpha_mult: 2.0,
+                                          beta_div: 2.0, flap: None }],
+            ..ChaosSpec::clean(0)
+        }
+        .perturb(&topo, 0);
+        assert_eq!(pt.node_intra,
+                   Some(vec![LinkModel::new(0.0625, 1024.0),
+                             LinkModel::new(0.125, 512.0)]));
+        assert_eq!(pt.inter, topo.inter);
+        pt.assert_valid();
+    }
+}

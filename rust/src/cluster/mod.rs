@@ -19,9 +19,18 @@
 //! `[n, n]` byte matrix — uniform ([`uniform_a2a_bytes`]) or derived from
 //! real routing decisions (`moe::RoutingTable::a2a_bytes_placed`).
 
+//!
+//! The `chaos` perturbation layer describes what real fleets add on top
+//! of the clean presets — per-device compute jitter, persistent
+//! stragglers, degraded or flapping links, and whole-device dropout — as
+//! a declarative [`ChaosSpec`] whose per-step `perturb` yields an
+//! ordinary `Topology` the cost constructors price unchanged.
+
+pub mod chaos;
 pub mod interconnect;
 pub mod topology;
 
+pub use chaos::{ChaosSpec, Dropout, LinkFault};
 pub use interconnect::{
     a2a_chunk_time, a2a_decompose, a2a_decompose_per_node, a2a_time,
     a2a_time_per_node, a2a_time_split_per_node, a2a_transpose,

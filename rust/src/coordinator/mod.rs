@@ -22,7 +22,9 @@
 //! - `replace`: live re-placement — `MigrationPlan` (expert→device
 //!   deltas priced as H2D DES tasks), `ReplacePolicy` (never / every-k /
 //!   break-even) and `run_replace_timeline` composing per-step schedules
-//!   with overlapped migrations into N-step makespans;
+//!   with overlapped migrations into N-step makespans; plus the chaos
+//!   variants `failover_placement` and `run_chaos_timeline` (per-step
+//!   perturbed topologies, dropout recovery via forced failover);
 //! - `timeline`: ASCII rendering of DES spans (regenerates Fig. 6);
 //! - `exec`: real threaded execution of the same schedules against PJRT
 //!   artifacts with injected link delays (validates the DES).
@@ -39,7 +41,8 @@ pub use adaptive::{choose_expert_slot, choose_expert_slot_model,
                    choose_expert_slot_topo};
 pub use costs::{BlockCosts, ChunkSource, ChunkedA2a, MoEKind, Strategy, TopoCosts};
 pub use replace::{ExpertMove, MigrationPlan, ReplaceConfig, ReplaceOutcome,
-                  ReplacePolicy, StepReport, run_replace_timeline};
+                  ReplacePolicy, StepReport, failover_placement,
+                  run_chaos_timeline, run_replace_timeline};
 pub use schedule::{build_pair_schedule, build_pair_schedule_auto,
                    ChunkPipelining, PairSchedule};
 pub use spec::{CostModel, PhaseDir, PhaseScope, ScheduleSpec, SlotPolicy};

@@ -25,7 +25,7 @@
 //! `timeline_explorer --replace` drive the studies; every pinned number
 //! is minted through `tools/des_mirror/mirror2.py` (PR5 model).
 
-use crate::cluster::{LinkModel, Topology};
+use crate::cluster::{ChaosSpec, LinkModel, Topology};
 use crate::moe::{AffinityEstimator, Placement, RoutingTable};
 use crate::simtime::{Resource, Sim, TaskId};
 
@@ -292,6 +292,135 @@ pub fn run_replace_timeline(base: &ComputeCosts, topo: &Topology,
         }
         // the DES is deterministic, so a step without migration tasks
         // keeps the makespan already simulated above
+        let makespan = if migrated { sched.makespan() } else { base_makespan };
+        total += makespan;
+        steps.push(StepReport {
+            step: s,
+            makespan,
+            base_makespan,
+            migrated,
+            migration_bytes,
+            migration_time,
+        });
+    }
+    ReplaceOutcome { steps, total, migrations, final_placement: placement }
+}
+
+/// Deterministic expert failover off a failed device: each of its
+/// experts (ascending id) moves to the least-loaded surviving device,
+/// ties toward the lower device id, with the running load updated after
+/// every reassignment — so a failed device's experts spread instead of
+/// piling onto one survivor. Pure placement arithmetic; the migration
+/// storm it implies is priced by [`run_chaos_timeline`].
+pub fn failover_placement(p: &Placement, failed: usize) -> Placement {
+    assert!(p.n_devices > 1, "failover needs a surviving device");
+    let mut load = vec![0usize; p.n_devices];
+    let mut mapping: Vec<usize> =
+        (0..p.n_experts).map(|e| p.device_of(e)).collect();
+    for &d in &mapping {
+        load[d] += 1;
+    }
+    for e in 0..p.n_experts {
+        if mapping[e] != failed {
+            continue;
+        }
+        load[failed] -= 1;
+        let mut best = failed;
+        for d in 0..p.n_devices {
+            if d == failed {
+                continue;
+            }
+            if best == failed || load[d] < load[best] {
+                best = d;
+            }
+        }
+        mapping[e] = best;
+        load[best] += 1;
+    }
+    Placement::custom(p.n_experts, p.n_devices, mapping)
+}
+
+/// [`run_replace_timeline`] under a [`ChaosSpec`]: every step prices its
+/// table on the spec's *perturbed* topology (jittered/straggling compute
+/// scales, degraded or flapping links), and a device dropout triggers
+/// recovery — on the dropout step the [`failover_placement`] plan fires
+/// unconditionally (its H2D storm overlaps that step; the recovered
+/// placement takes effect from the next step, exactly like a policy
+/// migration), and later policy candidates are remapped off the dead
+/// device so re-learning never places an expert back on it. A
+/// zero-magnitude spec ([`ChaosSpec::is_zero`]) reduces bit-exactly to
+/// [`run_replace_timeline`] (pinned in `rust/tests/chaos_suite.rs`).
+pub fn run_chaos_timeline(base: &ComputeCosts, topo: &Topology,
+                          token_bytes: usize, tables: &[RoutingTable],
+                          initial: &Placement, cfg: &ReplaceConfig,
+                          chaos: &ChaosSpec) -> ReplaceOutcome {
+    assert!(!tables.is_empty(), "a timeline needs at least one step");
+    let n_nodes = topo.n_devices / topo.devices_per_node;
+    let mut est = AffinityEstimator::ewma(initial.n_experts, n_nodes, cfg.decay);
+    let mut placement = initial.clone();
+    let mut steps = Vec::with_capacity(tables.len());
+    let mut total = 0.0f64;
+    let mut migrations = 0usize;
+    let n_steps = tables.len();
+    for (s, rt) in tables.iter().enumerate() {
+        let ptopo = chaos.perturb(topo, s);
+        let costs = TopoCosts::from_routing(base, &ptopo, rt, &placement,
+                                            token_bytes);
+        let mut sched = cfg.spec.build(&costs);
+        let base_makespan = sched.makespan();
+        est.observe(rt, topo.n_devices, topo.devices_per_node);
+        let remaining = n_steps - s - 1;
+        let mut migrated = false;
+        let mut migration_bytes = 0usize;
+        let mut migration_time = 0.0f64;
+        let failing = matches!(chaos.dropout, Some(d) if d.at_step == s);
+        if failing {
+            // the failover is not optional: the device is gone, so the
+            // plan fires regardless of policy and pays whatever the
+            // migration storm costs on this step's H2D engines
+            let failed = chaos.dropout.unwrap().device;
+            let candidate = failover_placement(&placement, failed);
+            let plan = MigrationPlan::between(&placement, &candidate,
+                                              cfg.bytes_per_expert);
+            if !plan.is_empty() {
+                migration_time = plan.time(&cfg.h2d);
+                plan.add_h2d_tasks(&mut sched.sim, &cfg.h2d);
+                migrated = true;
+                migration_bytes = plan.total_bytes();
+                migrations += 1;
+            }
+            placement = candidate;
+        } else if remaining > 0 && cfg.policy != ReplacePolicy::Never {
+            let mut candidate = est.packed(topo.n_devices,
+                                           topo.devices_per_node);
+            if let Some(d) = chaos.dropout {
+                if s > d.at_step {
+                    candidate = failover_placement(&candidate, d.device);
+                }
+            }
+            let plan = MigrationPlan::between(&placement, &candidate,
+                                              cfg.bytes_per_expert);
+            if !plan.is_empty() {
+                let mig = plan.time(&cfg.h2d);
+                let overhead = (mig - base_makespan).max(0.0);
+                let saving = match cfg.policy {
+                    ReplacePolicy::BreakEven => {
+                        let cand = TopoCosts::from_routing(
+                            base, &ptopo, rt, &candidate, token_bytes);
+                        base_makespan - cfg.spec.build(&cand).makespan()
+                    }
+                    _ => 0.0,
+                };
+                if cfg.policy.should_migrate(s, remaining, saving, overhead) {
+                    plan.add_h2d_tasks(&mut sched.sim, &cfg.h2d);
+                    migrated = true;
+                    migration_bytes = plan.total_bytes();
+                    migration_time = mig;
+                    placement = candidate;
+                    migrations += 1;
+                }
+            }
+        }
         let makespan = if migrated { sched.makespan() } else { base_makespan };
         total += makespan;
         steps.push(StepReport {

@@ -22,4 +22,4 @@ pub use dispatch::{decode, decode_into, encode, encode_into};
 pub use estimator::AffinityEstimator;
 pub use placement::{ExpertLoad, Placement};
 pub use router::{Route, RoutingTable};
-pub use traffic::phase_affine_routing;
+pub use traffic::{c2r_routing, phase_affine_routing};

@@ -58,6 +58,48 @@ pub fn phase_affine_routing(n_devices: usize, devices_per_node: usize,
     RoutingTable::build(&indices, &weights, n_tokens, 1, n_experts, n_tokens)
 }
 
+/// Seeded C2R-style (arXiv:2504.01337) collaboration-constrained
+/// node-affine routing (k = 1).
+///
+/// The chaos mitigation measured by `scmoe report chaos`: tokens that
+/// deviate from their node's affinity group (probability `noise` per
+/// token) are confined to the first `collab` experts *of that group*
+/// instead of scattering uniformly over all experts, so every token's
+/// expert satisfies `e % n_nodes == aff_node` and worst-case All-to-All
+/// fanout stays bounded no matter how hard routing drifts — at a
+/// clean-path cost, since the collaboration set concentrates load.
+/// Same per-token draw order as
+/// [`drifting_node_affine_routing`](crate::report::efficiency::drifting_node_affine_routing)
+/// (one `next_f64`, then one `below` on whichever branch the noise
+/// comparison picks), to which it reduces bit-exactly at `noise = 0`.
+#[allow(clippy::too_many_arguments)]
+pub fn c2r_routing(n_devices: usize, devices_per_node: usize,
+                   n_experts: usize, tokens_per_device: usize,
+                   regime: usize, noise: f64, collab: usize,
+                   seed: u64) -> RoutingTable {
+    assert!(devices_per_node > 0 && n_devices % devices_per_node == 0);
+    let n_nodes = n_devices / devices_per_node;
+    assert!(n_experts % n_nodes == 0, "experts must divide into nodes");
+    let group = n_experts / n_nodes;
+    assert!((1..=group).contains(&collab),
+            "collaboration width must fit inside one affinity group");
+    let n_tokens = n_devices * tokens_per_device;
+    let mut rng = Rng::new(seed);
+    let mut indices = Vec::with_capacity(n_tokens);
+    let weights = vec![1.0f32; n_tokens];
+    for t in 0..n_tokens {
+        let node = (t / tokens_per_device) / devices_per_node;
+        let aff_node = (node + regime) % n_nodes;
+        let e = if rng.next_f64() < noise {
+            aff_node + n_nodes * rng.below(collab)
+        } else {
+            aff_node + n_nodes * rng.below(group)
+        };
+        indices.push(e as i32);
+    }
+    RoutingTable::build(&indices, &weights, n_tokens, 1, n_experts, n_tokens)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -97,6 +139,20 @@ mod tests {
             let node = (r.token / 4) / 2;
             assert_eq!(r.expert % 2, (node + 1) % 2);
         }
+    }
+
+    #[test]
+    fn c2r_fanout_is_bounded_at_any_noise() {
+        // even at 60% deviation probability, every token stays inside
+        // its node's affinity group — that is the whole point of the
+        // collaboration constraint
+        let rt = c2r_routing(4, 2, 8, 16, 1, 0.6, 2, 5);
+        for r in &rt.routes {
+            let node = (r.token / 16) / 2;
+            assert_eq!(r.expert % 2, (node + 1) % 2,
+                       "token {} escaped its group", r.token);
+        }
+        assert_eq!(rt.dropped, 0);
     }
 
     #[test]

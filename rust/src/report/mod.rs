@@ -8,6 +8,7 @@
 //! the AOT artifacts. Offloading (Fig. 10) uses the decode simulator with
 //! real parameter byte counts.
 
+pub mod chaos;
 pub mod efficiency;
 pub mod offload_report;
 pub mod quality;
@@ -29,6 +30,7 @@ pub fn run(exp: &str, args: &Args) -> Result<()> {
         "topo" | "fleet" => efficiency::topo_report(args),
         "replace" => replace::replace_report(args),
         "serve" => serve_report::serve_report(args),
+        "chaos" => chaos::chaos_report(args),
         "fig10" => offload_report::fig10(args),
         "table1" => quality::table1(args),
         "table2" => quality::table_archs(args, &["top2", "top1", "shared", "scmoe"], "table2"),

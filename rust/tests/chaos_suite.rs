@@ -1,0 +1,400 @@
+//! Acceptance tests for the chaos scenario suite: the zero-perturbation
+//! identity (a zero-magnitude ChaosSpec reduces bit-exactly to the clean
+//! schedules and to `run_replace_timeline`), seeded jitter determinism,
+//! dropout failover semantics, the C2R noise-0 reduction, and the pinned
+//! robustness-study headlines on 32xA800-4node-IB (break-even failover
+//! beats static placement under dropout; C2R's bounded fanout is immune
+//! to the uplink fault at a pinned clean-path cost). Every pinned value
+//! was minted through the validated DES mirror
+//! (`tools/des_mirror/mirror2.py --chaos-study`).
+
+use scmoe::cluster::{ChaosSpec, Dropout, LinkFault, LinkModel, Scenario,
+                     Topology};
+use scmoe::coordinator::costs::{ComputeCosts, MoEKind, Strategy, TopoCosts};
+use scmoe::coordinator::replace::{
+    failover_placement, run_chaos_timeline, run_replace_timeline,
+    ReplaceConfig, ReplacePolicy,
+};
+use scmoe::coordinator::schedule::PairSchedule;
+use scmoe::coordinator::spec::ScheduleSpec;
+use scmoe::moe::{c2r_routing, Placement, RoutingTable};
+use scmoe::report::chaos::{
+    c2r_study_tables, c2r_uplink_fault, chaos_scenarios, run_chaos_cell,
+    tail_stats, CHAOS_DROP_STEP, C2R_NOISE,
+};
+use scmoe::report::efficiency::{drifting_node_affine_routing,
+                                xl_compute_costs};
+use scmoe::report::replace::{study_tables, STUDY_DRIFT_NOISE,
+                             STUDY_DRIFT_SEED};
+
+fn dyadic_topo() -> Topology {
+    Topology {
+        n_devices: 4,
+        devices_per_node: 2,
+        intra: LinkModel::new(0.0625, 1024.0),
+        inter: Some(LinkModel::new(0.125, 512.0)),
+        compute_scale: 1.0,
+        device_scales: None,
+        node_intra: None,
+    }
+}
+
+fn dyadic_base() -> ComputeCosts {
+    ComputeCosts {
+        attn: 1.0,
+        mlp: 0.75,
+        se: 0.75,
+        gate: 0.0625,
+        encode: 0.0625,
+        decode: 0.0625,
+        expert_k1: 0.5,
+    }
+}
+
+fn dyadic_cfg(policy: ReplacePolicy) -> ReplaceConfig {
+    ReplaceConfig {
+        spec: ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, Strategy::Sequential),
+        policy,
+        bytes_per_expert: 4096,
+        h2d: LinkModel::new(0.125, 1024.0),
+        decay: 1.0,
+    }
+}
+
+fn dyadic_tables(n: usize, seed0: u64) -> Vec<RoutingTable> {
+    (0..n)
+        .map(|s| drifting_node_affine_routing(4, 2, 4, 4, 0, 0.25,
+                                              seed0 + s as u64))
+        .collect()
+}
+
+/// A structurally non-trivial spec whose every magnitude is identity: a
+/// 1.0x straggler, a 1.0x/1.0x uplink fault, and a *never-active* flap
+/// fault (up == period) whose magnitudes would bite if the flap gate
+/// ever let it through.
+fn zero_spec(topo: &Topology) -> ChaosSpec {
+    let mut spec = ChaosSpec::clean(9);
+    spec.stragglers.push((topo.n_devices - 1, 1.0));
+    spec.link_faults.push(LinkFault {
+        node: Some(0),
+        alpha_mult: 1.0,
+        beta_div: 1.0,
+        flap: None,
+    });
+    spec.link_faults.push(LinkFault {
+        node: None,
+        alpha_mult: 4.0,
+        beta_div: 4.0,
+        flap: Some((4, 4)),
+    });
+    spec
+}
+
+/// Span fingerprint (label, resource, start, end) in deterministic
+/// order — `Span` has no `PartialEq`, so identity is asserted on this.
+fn fingerprint(sched: &PairSchedule) -> Vec<(String, String, f64, f64)> {
+    let mut spans = sched.run();
+    spans.sort_by(|a, b| a.start.total_cmp(&b.start).then(a.id.cmp(&b.id)));
+    spans
+        .iter()
+        .map(|s| (s.label.clone(), format!("{:?}", s.resource), s.start,
+                  s.end))
+        .collect()
+}
+
+fn device_map(p: &Placement) -> Vec<usize> {
+    (0..p.n_experts).map(|e| p.device_of(e)).collect()
+}
+
+#[test]
+fn zero_perturbation_reduces_to_clean_schedules() {
+    // a zero-magnitude spec must leave every preset's every schedule
+    // bit-identical to the clean `ScheduleSpec::build` timeline — same
+    // spans, same starts, same ends, across strategy and placement
+    let base = xl_compute_costs();
+    for (i, sc) in Scenario::extended().into_iter().enumerate() {
+        let topo = sc.topology();
+        let (nd, dpn) = (topo.n_devices, topo.devices_per_node);
+        let rt = drifting_node_affine_routing(nd, dpn, nd, 16, 0, 0.2,
+                                              900 + i as u64);
+        let spec = zero_spec(&topo);
+        for step in 0..4 {
+            let ptopo = spec.perturb(&topo, step);
+            for placement in [Placement::new(nd, nd),
+                              Placement::affinity_packed(&rt, nd, dpn)] {
+                let clean = TopoCosts::from_routing(&base, &topo, &rt,
+                                                    &placement, 64);
+                let dirty = TopoCosts::from_routing(&base, &ptopo, &rt,
+                                                    &placement, 64);
+                for (strategy, slot) in [(Strategy::Sequential, 0),
+                                         (Strategy::Overlap, 2)] {
+                    let s = ScheduleSpec::new(MoEKind::ScMoE { k: 1 },
+                                              strategy)
+                        .with_slot(slot);
+                    assert_eq!(fingerprint(&s.build(&clean)),
+                               fingerprint(&s.build(&dirty)),
+                               "{} step {step} {strategy:?}", sc.label());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn zero_chaos_timeline_is_bit_exact_replace_timeline() {
+    // with a clean spec, run_chaos_timeline must be byte-for-byte
+    // run_replace_timeline — every StepReport field, the total, the
+    // migration count, and the final placement — under every policy
+    let tables = dyadic_tables(6, 700);
+    let initial = Placement::new(4, 4);
+    let chaos = ChaosSpec::clean(0);
+    assert!(chaos.is_zero());
+    for policy in [ReplacePolicy::Never, ReplacePolicy::EveryK { k: 2 },
+                   ReplacePolicy::BreakEven] {
+        let cfg = dyadic_cfg(policy);
+        let a = run_replace_timeline(&dyadic_base(), &dyadic_topo(), 64,
+                                     &tables, &initial, &cfg);
+        let b = run_chaos_timeline(&dyadic_base(), &dyadic_topo(), 64,
+                                   &tables, &initial, &cfg, &chaos);
+        assert_eq!(a.steps.len(), b.steps.len());
+        for (x, y) in a.steps.iter().zip(&b.steps) {
+            assert_eq!(x.step, y.step);
+            assert_eq!(x.makespan, y.makespan); // bit-exact, no tolerance
+            assert_eq!(x.base_makespan, y.base_makespan);
+            assert_eq!(x.migrated, y.migrated);
+            assert_eq!(x.migration_bytes, y.migration_bytes);
+            assert_eq!(x.migration_time, y.migration_time);
+        }
+        assert_eq!(a.total, b.total);
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(device_map(&a.final_placement),
+                   device_map(&b.final_placement));
+    }
+}
+
+#[test]
+fn jitter_stream_is_seeded_and_forks_per_step() {
+    // identical seeds perturb identically (byte-identical timelines);
+    // distinct seeds and distinct steps perturb differently
+    let topo = dyadic_topo();
+    let spec = ChaosSpec { jitter: 0.25, ..ChaosSpec::clean(41) };
+    let scales = |s: &ChaosSpec, step: usize| {
+        s.perturb(&topo, step).device_scales.expect("jitter sets scales")
+    };
+    assert_eq!(scales(&spec, 2), scales(&spec, 2));
+    let other = ChaosSpec { jitter: 0.25, ..ChaosSpec::clean(42) };
+    assert_ne!(scales(&spec, 2), scales(&other, 2), "seed must matter");
+    assert_ne!(scales(&spec, 2), scales(&spec, 3), "step must fork");
+
+    // and the full timeline inherits the determinism: two identical runs
+    // of a jittered stream produce bit-equal totals
+    let tables = dyadic_tables(4, 300);
+    let cfg = dyadic_cfg(ReplacePolicy::Never);
+    let run = |chaos: &ChaosSpec| {
+        run_chaos_timeline(&dyadic_base(), &dyadic_topo(), 64, &tables,
+                           &Placement::new(4, 4), &cfg, chaos)
+    };
+    assert_eq!(run(&spec).total, run(&spec).total);
+    assert_ne!(run(&spec).total, run(&other).total);
+}
+
+#[test]
+fn failover_rebalances_to_least_loaded_survivors() {
+    // block(4,4): expert 3 leaves dead device 3 for device 0 (all
+    // survivors tie at load 1; lowest id wins)
+    let p = failover_placement(&Placement::new(4, 4), 3);
+    assert_eq!(device_map(&p), vec![0, 1, 2, 0]);
+    // skewed start {d0: e0 e1 e2, d1: e3}, device 0 dies: the running
+    // load update spreads the three orphans over the survivors instead
+    // of dogpiling one
+    let skew = Placement::custom(4, 3, vec![0, 0, 0, 1]);
+    assert_eq!(device_map(&failover_placement(&skew, 0)), vec![2, 1, 2, 1]);
+}
+
+#[test]
+fn dropout_fires_failover_and_prices_the_storm() {
+    let tables = dyadic_tables(4, 300);
+    let chaos = ChaosSpec {
+        dropout: Some(Dropout { device: 3, at_step: 1 }),
+        ..ChaosSpec::clean(0)
+    };
+    let out = run_chaos_timeline(&dyadic_base(), &dyadic_topo(), 64, &tables,
+                                 &Placement::new(4, 4),
+                                 &dyadic_cfg(ReplacePolicy::Never), &chaos);
+    // the Never policy migrates exactly once: the forced failover
+    assert_eq!(out.migrations, 1);
+    assert!(out.steps[1].migrated, "failover fires at the dropout step");
+    assert_eq!(out.steps[1].migration_bytes, 4096, "one expert moves");
+    assert!(out.steps[1].makespan >= out.steps[1].base_makespan,
+            "the recovery step absorbs the migration storm");
+    for step in &out.steps {
+        assert!(!step.migrated || step.step == 1);
+    }
+    // no expert remains on the dead device, from the dropout step on
+    assert!(device_map(&out.final_placement).iter().all(|&d| d != 3),
+            "final placement {:?} still uses the dead device",
+            device_map(&out.final_placement));
+}
+
+#[test]
+fn c2r_reduces_to_node_affine_at_zero_noise() {
+    // at noise 0 the collaboration constraint never engages: the routed
+    // experts (and hence the whole downstream cost model) are bit-equal
+    // to drifting_node_affine_routing on the same seed
+    for (regime, seed) in [(0usize, 3u64), (1, 11)] {
+        let a = c2r_routing(4, 2, 8, 16, regime, 0.0, 2, seed);
+        let b = drifting_node_affine_routing(4, 2, 8, 16, regime, 0.0, seed);
+        let experts = |rt: &RoutingTable| -> Vec<usize> {
+            rt.routes.iter().map(|r| r.expert).collect()
+        };
+        assert_eq!(experts(&a), experts(&b));
+        assert_eq!(a.load, b.load);
+    }
+}
+
+#[test]
+fn chaos_study_dropout_headline_is_pinned() {
+    // the acceptance headline: under the device-5 dropout, break-even
+    // re-placement beats riding out the degraded static layout, because
+    // re-learning repacks the post-failover placement. Totals, tails and
+    // migration counts pinned via the mirror (--chaos-study).
+    let tables = study_tables(STUDY_DRIFT_NOISE, STUDY_DRIFT_SEED, None);
+    let block = Placement::new(32, 32);
+    let scenarios = chaos_scenarios();
+    let (name, drop_spec) = &scenarios[2];
+    assert_eq!(*name, "dropout");
+
+    let clean_static = run_chaos_cell(&tables, &block, Strategy::Sequential,
+                                      0, ReplacePolicy::Never,
+                                      &ChaosSpec::clean(0));
+    assert_eq!(clean_static.total, 0.07555310486666666);
+    assert_eq!(clean_static.migrations, 0);
+    let clean_be = run_chaos_cell(&tables, &block, Strategy::Sequential, 0,
+                                  ReplacePolicy::BreakEven,
+                                  &ChaosSpec::clean(0));
+    assert_eq!(clean_be.total, 0.06617359183368421);
+    assert_eq!(clean_be.migrations, 1);
+
+    let stat = run_chaos_cell(&tables, &block, Strategy::Sequential, 0,
+                              ReplacePolicy::Never, drop_spec);
+    assert_eq!(stat.total, 0.08656656125263158);
+    assert_eq!(stat.migrations, 1, "the forced failover itself");
+    assert!(stat.steps[CHAOS_DROP_STEP].migrated);
+    let (med, p99, amp) = tail_stats(&stat);
+    assert_eq!(med, 0.005365674582456141);
+    // p99 is the recovery step: one 128 MiB expert over the 16 GB/s H2D
+    // link, 10us alpha -> 0.008398608 s exactly
+    assert_eq!(p99, 0.008398608);
+    assert!(amp > 1.5, "dropout amplifies the tail: {amp}");
+
+    let be = run_chaos_cell(&tables, &block, Strategy::Sequential, 0,
+                            ReplacePolicy::BreakEven, drop_spec);
+    assert_eq!(be.total, 0.07914883020631579);
+    assert_eq!(be.migrations, 2, "warmup re-pack + forced failover");
+    assert!(be.total < stat.total,
+            "break-even failover {} must beat static {}", be.total,
+            stat.total);
+}
+
+#[test]
+fn chaos_study_straggler_and_uplink_rows_are_pinned() {
+    let tables = study_tables(STUDY_DRIFT_NOISE, STUDY_DRIFT_SEED, None);
+    let block = Placement::new(32, 32);
+    let affinity = Placement::affinity_packed(&tables[0], 32, 8);
+    let scenarios = chaos_scenarios();
+    let (sname, stragglers) = &scenarios[0];
+    let (fname, flaky) = &scenarios[1];
+    assert_eq!((*sname, *fname), ("stragglers", "flaky-uplink"));
+
+    // stragglers: jitter + two slow devices stretch every step's barrier
+    let s = run_chaos_cell(&tables, &block, Strategy::Sequential, 0,
+                           ReplacePolicy::Never, stragglers);
+    assert_eq!(s.total, 0.13774594081477698);
+    assert_eq!(s.migrations, 0);
+    let (med, p99, _) = tail_stats(&s);
+    assert_eq!(med, 0.008663534732679569);
+    assert_eq!(p99, 0.008972875329324056);
+
+    // flaky uplink: the block layout pays on every degraded step, while
+    // the affinity placement's node-local routes never touch the faulted
+    // uplink — its overlap-s2 total equals the clean run's
+    let f = run_chaos_cell(&tables, &block, Strategy::Sequential, 0,
+                           ReplacePolicy::Never, flaky);
+    assert_eq!(f.total, 0.13553053665263157);
+    let (med, p99, _) = tail_stats(&f);
+    assert_eq!(med, 0.012102932305263159);
+    assert_eq!(p99, 0.012381844266666667);
+    let fa = run_chaos_cell(&tables, &affinity, Strategy::Sequential, 0,
+                            ReplacePolicy::Never, flaky);
+    assert_eq!(fa.total, 0.06423326860701754);
+    let fo = run_chaos_cell(&tables, &affinity, Strategy::Overlap, 2,
+                            ReplacePolicy::Never, flaky);
+    assert_eq!(fo.total, 0.05842532894736842);
+    let co = run_chaos_cell(&tables, &affinity, Strategy::Overlap, 2,
+                            ReplacePolicy::Never, &ChaosSpec::clean(0));
+    assert_eq!(fo.total, co.total,
+               "node-local routes are immune to the uplink fault");
+}
+
+#[test]
+fn chaos_study_c2r_headline_is_pinned() {
+    // C2R's bounded fanout wins under chaos despite a pinned clean-path
+    // cost: constrained routing is +22% slower on a healthy fleet, but a
+    // persistent uplink fault (alpha x8, beta /16) cannot touch it at
+    // all — its degraded run is bit-identical to its clean run — while
+    // unconstrained node-affine routing at the same noise degrades 1.65x
+    assert!(C2R_NOISE > 0.0, "the head-to-head needs real deviation");
+    let fault = c2r_uplink_fault();
+    let run = |tables: &[RoutingTable], chaos: &ChaosSpec| {
+        let init = Placement::affinity_packed(&tables[0], 32, 8);
+        run_chaos_cell(tables, &init, Strategy::Sequential, 0,
+                       ReplacePolicy::Never, chaos)
+    };
+    let affine = c2r_study_tables(false);
+    let a_clean = run(&affine, &ChaosSpec::clean(0));
+    let a_deg = run(&affine, &fault);
+    assert_eq!(a_clean.total, 0.06148941163578947);
+    assert_eq!(a_deg.total, 0.10137539014385967);
+
+    let c2r = c2r_study_tables(true);
+    let c_clean = run(&c2r, &ChaosSpec::clean(0));
+    let c_deg = run(&c2r, &fault);
+    assert_eq!(c_clean.total, 0.07533669939789474);
+    assert_eq!(c_deg.total, c_clean.total,
+               "zero uplink exposure: degraded == clean, bit-exactly");
+    assert!(c_clean.total > a_clean.total,
+            "the constraint costs on the clean path");
+    assert!(c_deg.total < a_deg.total,
+            "and wins once the uplink degrades: {} vs {}", c_deg.total,
+            a_deg.total);
+}
+
+#[test]
+fn chaos_cells_are_deterministic() {
+    // the full study cell is a pure function of its inputs: re-running
+    // any jittered cell reproduces byte-identical step reports
+    let tables = dyadic_tables(4, 300);
+    let chaos = ChaosSpec {
+        jitter: 0.2,
+        stragglers: vec![(3, 1.5)],
+        link_faults: vec![LinkFault {
+            node: None,
+            alpha_mult: 2.0,
+            beta_div: 2.0,
+            flap: Some((2, 1)),
+        }],
+        dropout: Some(Dropout { device: 1, at_step: 2 }),
+        ..ChaosSpec::clean(77)
+    };
+    let cfg = dyadic_cfg(ReplacePolicy::BreakEven);
+    let run = || {
+        run_chaos_timeline(&dyadic_base(), &dyadic_topo(), 64, &tables,
+                           &Placement::new(4, 4), &cfg, &chaos)
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.total, b.total);
+    assert_eq!(a.migrations, b.migrations);
+    for (x, y) in a.steps.iter().zip(&b.steps) {
+        assert_eq!(x.makespan, y.makespan);
+    }
+}

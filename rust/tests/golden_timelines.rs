@@ -7,9 +7,9 @@
 //! start/makespan formats exactly at six decimals and comparisons are
 //! deterministic across platforms.
 
-use scmoe::cluster::{LinkModel, Topology};
+use scmoe::cluster::{ChaosSpec, LinkFault, LinkModel, Topology};
 use scmoe::coordinator::costs::{BlockCosts, ComputeCosts, MoEKind, Strategy, TopoCosts};
-use scmoe::coordinator::replace::MigrationPlan;
+use scmoe::coordinator::replace::{failover_placement, MigrationPlan};
 use scmoe::coordinator::schedule::{build_pair_schedule, ChunkPipelining, PairSchedule};
 use scmoe::coordinator::spec::ScheduleSpec;
 use scmoe::moe::{phase_affine_routing, Placement, RoutingTable};
@@ -268,6 +268,60 @@ fn generate_lines() -> Vec<String> {
         "serve:mixed/seq",
         &ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, Strategy::Sequential)
             .build(&tc)));
+
+    // chaos goldens on the same dyadic routed fleet, all rng-free so
+    // every span stays dyadic-exact: a persistent 2x straggler on device
+    // 3, a degraded shared uplink (alpha x2, beta /4 ->
+    // LinkModel(0.25, 128)), and a device-3 dropout whose failover plan
+    // (E3 -> device 0, the lowest-id tie) overlaps the clean step as an
+    // H2D task (mirror generate_chaos_lines7)
+    let rt = routed_table();
+    let topo = Topology {
+        n_devices: 4,
+        devices_per_node: 2,
+        intra: LinkModel::new(0.0625, 1024.0),
+        inter: Some(LinkModel::new(0.125, 512.0)),
+        compute_scale: 1.0,
+        device_scales: None,
+        node_intra: None,
+    };
+    let base = ComputeCosts {
+        attn: 1.0,
+        mlp: 0.75,
+        se: 0.75,
+        gate: 0.0625,
+        encode: 0.0625,
+        decode: 0.0625,
+        expert_k1: 0.5,
+    };
+    let straggler = ChaosSpec { stragglers: vec![(3, 2.0)],
+                                ..ChaosSpec::clean(0) };
+    let tc = TopoCosts::from_routing(&base, &straggler.perturb(&topo, 0), &rt,
+                                     &block, 64);
+    lines.push(render_line(
+        "chaos:straggler/seq",
+        &ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, Strategy::Sequential)
+            .build(&tc)));
+    let degraded = ChaosSpec {
+        link_faults: vec![LinkFault { node: None, alpha_mult: 2.0,
+                                      beta_div: 4.0, flap: None }],
+        ..ChaosSpec::clean(0)
+    };
+    let tc = TopoCosts::from_routing(&base, &degraded.perturb(&topo, 0), &rt,
+                                     &block, 64);
+    lines.push(render_line(
+        "chaos:degraded-uplink/overlap-s2",
+        &ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, Strategy::Overlap)
+            .with_slot(2)
+            .build(&tc)));
+    let failover = failover_placement(&block, 3);
+    let plan = MigrationPlan::between(&block, &failover, 4096);
+    let tc = TopoCosts::from_routing(&base, &topo, &rt, &block, 64);
+    let mut sched = ScheduleSpec::new(MoEKind::ScMoE { k: 1 },
+                                      Strategy::Sequential)
+        .build(&tc);
+    plan.add_h2d_tasks(&mut sched.sim, &h2d);
+    lines.push(render_line("chaos:dropout-recovery/seq", &sched));
     lines
 }
 
@@ -312,6 +366,8 @@ fn golden_file_covers_every_kind_and_strategy() {
         "routed:skewed/pipe2", "replace:block->affinity/seq",
         "replace:block->affinity/overlap-s2", "replace:block->affinity/pipe2",
         "serve:wait1/step0", "serve:wait1/step2", "serve:mixed/seq",
+        "chaos:straggler/seq", "chaos:degraded-uplink/overlap-s2",
+        "chaos:dropout-recovery/seq",
     ] {
         assert!(GOLDEN.contains(needle), "golden corpus is missing {needle}");
     }

@@ -2728,30 +2728,542 @@ def consistency_checks6():
     print('PR6 consistency checks: OK')
 
 
+# ======================================================================
+# PR 7 model: chaos perturbations (per-device jitter + stragglers,
+# degraded/flapping links, device dropout with expert failover) and C2R
+# collaboration-constrained routing. Transcribes the post-PR7 Rust
+# line-by-line:
+#   util/rng.rs            -> Rng.fork (rng_fork7)
+#   cluster/chaos.rs       -> LinkFault/Dropout/ChaosSpec + perturb
+#   moe/traffic.rs         -> c2r_routing
+#   coordinator/replace.rs -> failover_placement, run_chaos_timeline
+#   report/chaos.rs        -> CHAOS_* constants + chaos_study7
+# ======================================================================
+
+
+def rng_fork7(rng, stream):
+    """util::rng::Rng::fork — child stream seeded off the parent state
+    (state ^ stream * 0xA0761D6478BD642F through the constructor, then
+    one warm-up draw). Stable under reordering of other draws."""
+    child = Rng((rng.state ^ ((stream * 0xA0761D6478BD642F) & MASK)) & MASK)
+    child.next_u64()
+    return child
+
+
+@_dataclass
+class LinkFault7:
+    node: object        # None = shared uplink; int = that node's intra link
+    alpha_mult: float   # launch latency multiplier while the fault is active
+    beta_div: float     # bandwidth divisor while the fault is active
+    flap: object        # None = persistent; (period, up) = degraded on
+                        # steps with step % period >= up
+
+
+def fault_active7(fault, step):
+    if fault.flap is None:
+        return True
+    period, up = fault.flap
+    return step % period >= up
+
+
+@_dataclass
+class Dropout7:
+    device: int
+    at_step: int
+
+
+@_dataclass
+class ChaosSpec7:
+    seed: int           # jitter stream seed (forked per step)
+    jitter: float       # max fractional per-device slowdown per step
+    stragglers: list    # (device, persistent slowdown factor) pairs
+    link_faults: list   # LinkFault7 entries
+    dropout: object     # Dropout7 or None
+
+
+def chaos_clean7(seed):
+    return ChaosSpec7(seed, 0.0, [], [], None)
+
+
+def chaos_is_zero7(spec):
+    return (spec.jitter == 0.0
+            and all(f == 1.0 for (_, f) in spec.stragglers)
+            and all(f.alpha_mult == 1.0 and f.beta_div == 1.0
+                    for f in spec.link_faults)
+            and spec.dropout is None)
+
+
+def chaos_perturb7(spec, topo, step, node_intra=None):
+    """cluster::chaos::ChaosSpec::perturb — Rust clones the Topology and
+    rewrites device_scales / node_intra / inter; the Python Topology
+    dataclass has no node_intra field, so the per-node link vector rides
+    alongside as a second return value (feeds topo_from_routing4's
+    node_intra parameter). Fields a zero-magnitude spec never touches
+    stay untouched, which is what makes the zero-perturbation identity
+    bit-exact rather than merely value-equal."""
+    scales = None
+    straggling = any(f != 1.0 for (_, f) in spec.stragglers)
+    if spec.jitter > 0.0 or straggling:
+        scales = [topo.device_compute_scale(d) for d in range(topo.n_devices)]
+        if spec.jitter > 0.0:
+            rng = rng_fork7(Rng(spec.seed), step)
+            for d in range(topo.n_devices):
+                scales[d] /= 1.0 + spec.jitter * rng.next_f64()
+        for (d, f) in spec.stragglers:
+            scales[d] /= f
+    links = topo_intra_links(topo, node_intra)
+    inter = topo.inter
+    touched_intra = False
+    for f in spec.link_faults:
+        if (f.alpha_mult == 1.0 and f.beta_div == 1.0) \
+                or not fault_active7(f, step):
+            continue
+        if f.node is None:
+            assert inter is not None, \
+                'uplink fault on a single-node topology'
+            inter = LinkModel(inter.alpha * f.alpha_mult,
+                              inter.beta / f.beta_div)
+        else:
+            if not touched_intra:
+                links = list(links)
+            l = links[f.node]
+            links[f.node] = LinkModel(l.alpha * f.alpha_mult,
+                                      l.beta / f.beta_div)
+            touched_intra = True
+    out = replace(topo, inter=inter,
+                  device_scales=scales if scales is not None
+                  else topo.device_scales)
+    return out, (links if touched_intra else node_intra)
+
+
+def failover_placement7(p, failed):
+    """coordinator::replace::failover_placement — deterministic expert
+    failover: each of the failed device's experts (ascending id) goes to
+    the least-loaded surviving device, ties toward the lower device id,
+    with the running load updated after every reassignment."""
+    assert p.n_devices > 1
+    load = [0] * p.n_devices
+    mapping = [p.device_of(e) for e in range(p.n_experts)]
+    for d in mapping:
+        load[d] += 1
+    for e in range(p.n_experts):
+        if mapping[e] != failed:
+            continue
+        load[failed] -= 1
+        best = None
+        best_load = None
+        for d in range(p.n_devices):
+            if d == failed:
+                continue
+            if best is None or load[d] < best_load:
+                best = d
+                best_load = load[d]
+        mapping[e] = best
+        load[best] += 1
+    return Placement(p.n_experts, p.n_devices, mapping)
+
+
+def c2r_routing(n_devices, devices_per_node, n_experts, tokens_per_device,
+                regime, noise, collab, seed):
+    """moe::traffic::c2r_routing — C2R-style (arXiv:2504.01337)
+    collaboration-constrained node-affine routing (k = 1): deviating
+    tokens are confined to the first `collab` experts of their node's
+    affinity group instead of scattering uniformly over all experts, so
+    worst-case A2A fanout stays bounded. Same per-token draw order as
+    drifting_node_affine_routing (one next_f64, one below), to which it
+    reduces bit-exactly at noise = 0."""
+    assert devices_per_node > 0 and n_devices % devices_per_node == 0
+    n_nodes = n_devices // devices_per_node
+    assert n_experts % n_nodes == 0
+    group = n_experts // n_nodes
+    assert 1 <= collab <= group
+    n_tokens = n_devices * tokens_per_device
+    rng = Rng(seed)
+    indices = []
+    weights = [1.0] * n_tokens
+    for t in range(n_tokens):
+        node = (t // tokens_per_device) // devices_per_node
+        aff_node = (node + regime) % n_nodes
+        if rng.next_f64() < noise:
+            e = aff_node + n_nodes * rng.below(collab)
+        else:
+            e = aff_node + n_nodes * rng.below(group)
+        indices.append(e)
+    return RoutingTable(indices, weights, n_tokens, 1, n_experts, n_tokens)
+
+
+def run_chaos_timeline7(base, topo, token_bytes, tables, initial, kind,
+                        strat, policy, bytes_per_expert, h2d_link, decay,
+                        chaos, node_intra=None, slot=0, pipelining=STAGED):
+    """coordinator::replace::run_chaos_timeline — run_replace_timeline
+    with a per-step perturbed topology and dropout-aware placement flow:
+    on the dropout step the failover plan fires unconditionally (its H2D
+    storm overlaps that step; the recovered placement takes effect from
+    the next step), and later policy candidates are remapped off the
+    dead device. A zero-magnitude spec reduces bit-exactly to
+    run_replace_timeline (consistency_checks7)."""
+    n_nodes = topo.n_devices // topo.devices_per_node
+    est = AffinityEstimator(initial.n_experts, n_nodes, decay)
+    placement = initial
+    steps = []
+    total = 0.0
+    migrations = 0
+    n_steps = len(tables)
+    for s, rt in enumerate(tables):
+        ptopo, pni = chaos_perturb7(chaos, topo, s, node_intra)
+        costs = topo_from_routing4(base, ptopo, rt, placement, token_bytes,
+                                   pni)
+        sim = build_spec4(costs, kind, strat, slot, pipelining)
+        base_makespan = sim.makespan()
+        est.observe(rt, topo.n_devices, topo.devices_per_node)
+        remaining = n_steps - s - 1
+        migrated = False
+        mig_bytes = 0
+        mig_time = 0.0
+        failing = chaos.dropout is not None and chaos.dropout.at_step == s
+        if failing:
+            candidate = failover_placement7(placement, chaos.dropout.device)
+            plan = MigrationPlan.between(placement, candidate,
+                                         bytes_per_expert)
+            if not plan.is_empty():
+                mig_time = plan.time(h2d_link)
+                plan.add_h2d_tasks(sim, h2d_link)
+                migrated = True
+                mig_bytes = plan.total_bytes()
+                migrations += 1
+            placement = candidate
+        elif remaining > 0 and policy[0] != 'never':
+            candidate = est.packed(topo.n_devices, topo.devices_per_node)
+            if chaos.dropout is not None and s > chaos.dropout.at_step:
+                candidate = failover_placement7(candidate,
+                                                chaos.dropout.device)
+            plan = MigrationPlan.between(placement, candidate,
+                                         bytes_per_expert)
+            if not plan.is_empty():
+                mig = plan.time(h2d_link)
+                overhead = max(0.0, mig - base_makespan)
+                if policy[0] == 'break-even':
+                    cand_costs = topo_from_routing4(base, ptopo, rt,
+                                                    candidate, token_bytes,
+                                                    pni)
+                    saving = base_makespan - build_spec4(
+                        cand_costs, kind, strat, slot, pipelining).makespan()
+                else:
+                    saving = 0.0
+                if should_migrate(policy, s, remaining, saving, overhead):
+                    plan.add_h2d_tasks(sim, h2d_link)
+                    migrated = True
+                    mig_bytes = plan.total_bytes()
+                    mig_time = mig
+                    placement = candidate
+                    migrations += 1
+        makespan = sim.makespan() if migrated else base_makespan
+        total += makespan
+        steps.append((s, makespan, base_makespan, migrated, mig_bytes,
+                      mig_time))
+    return steps, total, migrations
+
+
+# --- PR7 golden corpus additions --------------------------------------
+
+def generate_chaos_lines7():
+    """Chaos goldens on the dyadic routed fleet, all rng-free so every
+    span stays dyadic-exact: a persistent 2x straggler on device 3, a
+    degraded shared uplink (alpha x2, beta /4 -> LinkModel(0.25, 128)),
+    and a device-3 dropout whose failover plan (E3 -> device 0, the
+    lowest-id tie) overlaps the step as an H2D task."""
+    rt = routed_table3()
+    block = Placement.block(4, 4)
+    topo = Topology(4, 2, LinkModel(0.0625, 1024.0), LinkModel(0.125, 512.0),
+                    1.0, None)
+    base = ComputeCosts(1.0, 0.75, 0.75, 0.0625, 0.0625, 0.0625, 0.5)
+    lines = []
+    spec = ChaosSpec7(0, 0.0, [(3, 2.0)], [], None)
+    pt, pni = chaos_perturb7(spec, topo, 0)
+    sim = build_spec4(topo_from_routing4(base, pt, rt, block, 64, pni),
+                      ('scmoe', 1), ('seq',), 0)
+    lines.append(render_line('chaos:straggler/seq', sim))
+    spec = ChaosSpec7(0, 0.0, [], [LinkFault7(None, 2.0, 4.0, None)], None)
+    pt, pni = chaos_perturb7(spec, topo, 0)
+    sim = build_spec4(topo_from_routing4(base, pt, rt, block, 64, pni),
+                      ('scmoe', 1), ('overlap',), 2)
+    lines.append(render_line('chaos:degraded-uplink/overlap-s2', sim))
+    failover = failover_placement7(block, 3)
+    plan = MigrationPlan.between(block, failover, REPLACE_BYTES_PER_EXPERT)
+    sim = build_spec4(topo_from_routing4(base, topo, rt, block, 64),
+                      ('scmoe', 1), ('seq',), 0)
+    plan.add_h2d_tasks(sim, REPLACE_H2D_LINK)
+    lines.append(render_line('chaos:dropout-recovery/seq', sim))
+    return lines
+
+
+def generate_corpus_lines7():
+    return generate_corpus_lines6() + generate_chaos_lines7()
+
+
+def validate_corpus7():
+    golden_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                               '..', '..', 'rust', 'tests', 'golden',
+                               'timelines.txt')
+    golden = [l for l in open(golden_path).read().splitlines()
+              if l.strip() and not l.startswith('#')]
+    lines = generate_corpus_lines7()
+    bad = 0
+    if len(golden) != len(lines):
+        print(f'line-count mismatch: golden {len(golden)} vs mirror {len(lines)}')
+        bad += 1
+    for g, cu in zip(golden, lines):
+        if g != cu:
+            bad += 1
+            print('- ' + g)
+            print('+ ' + cu)
+    print(f'golden corpus (PR7 model): {len(lines)} lines, {bad} mismatches')
+    return bad == 0
+
+
+def emit_corpus7(path):
+    keep = CORPUS_HEADER3.splitlines()
+    lines = generate_corpus_lines7()
+    routed_at = next(i for i, l in enumerate(lines) if l.startswith('routed:'))
+    routed_comment = [
+        '# Routed-placement scenarios (dyadic 4-device/2-node fleet; see',
+        '# routed_table/routed_fleet in golden_timelines.rs).',
+    ]
+    replace_at = next(i for i, l in enumerate(lines)
+                      if l.startswith('replace:'))
+    replace_comment = [
+        '# Live re-placement migration steps: the routed block-placement',
+        '# schedules with the block->affinity MigrationPlan overlapped in',
+        '# as dependency-free H2D tasks (h<dev> rows; 4096 B/expert over',
+        '# an alpha=0.125 beta=1024 H2D link -> 4.125 s per moved expert).',
+        '# The pre-existing spans are byte-identical to the routed:block',
+        '# entries above (pinned by mirror consistency_checks5).',
+    ]
+    serve_at = next(i for i, l in enumerate(lines) if l.startswith('serve:'))
+    serve_comment = [
+        '# Open-loop serving steps: phase_affine_routing batches priced',
+        '# on the routed fleet under the block placement. serve:wait1/*',
+        '# pins the serving loop\'s per-step traffic-seed advance (seeds',
+        '# 97..99, uniform noise 0.25); serve:mixed pins the prefill/',
+        '# decode noise split (8 exact prompt tokens + 8 tokens at 0.5).',
+    ]
+    chaos_at = next(i for i, l in enumerate(lines) if l.startswith('chaos:'))
+    chaos_comment = [
+        '# Chaos perturbations on the routed block fleet (all rng-free,',
+        '# so every span stays dyadic-exact): a persistent 2x straggler',
+        '# on device 3, a degraded shared uplink (alpha x2, beta /4 ->',
+        '# LinkModel(0.25, 128)), and a device-3 dropout whose failover',
+        '# plan (E3 -> device 0, lowest-id tie) overlaps the step as an',
+        '# H2D task over the replace-corpus link (4.125 s).',
+    ]
+    body = (lines[:routed_at] + routed_comment + lines[routed_at:replace_at]
+            + replace_comment + lines[replace_at:serve_at]
+            + serve_comment + lines[serve_at:chaos_at]
+            + chaos_comment + lines[chaos_at:])
+    with open(path, 'w') as f:
+        f.write('\n'.join(keep) + '\n' + '\n'.join(body) + '\n')
+    print(f'emitted {len(lines)} corpus lines to {path}')
+
+
+# --- PR7 study scenario (the numbers pinned in rust/tests/ ------------
+# chaos_suite.rs and quoted in docs/STUDIES.md are minted here) --------
+
+CHAOS_JITTER = 0.10
+CHAOS_JITTER_SEED = 77
+CHAOS_STRAGGLERS = [(3, 1.5), (17, 2.0)]
+CHAOS_FLAP_ALPHA = 8.0
+CHAOS_FLAP_BETA = 8.0
+CHAOS_FLAP = (4, 2)
+CHAOS_DROP_DEVICE = 5
+CHAOS_DROP_STEP = 4
+C2R_NOISE = 0.15
+C2R_COLLAB = 1
+C2R_UPLINK_ALPHA = 8.0
+C2R_UPLINK_BETA = 16.0
+
+
+def chaos_scenarios7():
+    return [
+        ('stragglers', ChaosSpec7(CHAOS_JITTER_SEED, CHAOS_JITTER,
+                                  CHAOS_STRAGGLERS, [], None)),
+        ('flaky-uplink', ChaosSpec7(0, 0.0, [],
+                                    [LinkFault7(None, CHAOS_FLAP_ALPHA,
+                                                CHAOS_FLAP_BETA,
+                                                CHAOS_FLAP)], None)),
+        ('dropout', ChaosSpec7(0, 0.0, [], [],
+                               Dropout7(CHAOS_DROP_DEVICE, CHAOS_DROP_STEP))),
+    ]
+
+
+def chaos_cell7(tables, init, strat, slot, policy, spec):
+    topo = SCENARIOS['4node-ib']
+    return run_chaos_timeline7(
+        xl_compute_costs(), topo, REPLACE_STUDY_BYTES, tables, init,
+        ('scmoe', 1), strat, policy, REPLACE_STUDY_EXPERT_BYTES,
+        REPLACE_STUDY_H2D, 1.0, spec, slot=slot)
+
+
+def chaos_study7():
+    """Full-precision pinned numbers for rust/tests/chaos_suite.rs and
+    docs/STUDIES.md (repr() round-trips the exact f64)."""
+    tables = replace_drift_tables(0.05, 11)
+    placements = [('block', Placement.block(32, 32)),
+                  ('affinity', Placement.affinity_packed(tables[0], 32, 8))]
+    strategies = [('seq', ('seq',), 0), ('overlap-s2', ('overlap',), 2)]
+    policies = [('never',), ('break-even',)]
+    for (sname, spec) in [('clean', chaos_clean7(0))] + chaos_scenarios7():
+        print(f'== {sname} ==')
+        for (pname, init) in placements:
+            for (tname, strat, slot) in strategies:
+                for pol in policies:
+                    st, tot, mig = chaos_cell7(tables, init, strat, slot,
+                                               pol, spec)
+                    ms = [x[1] for x in st]
+                    med = percentile(ms, 50.0)
+                    p99 = percentile(ms, 99.0)
+                    print('%-8s %-10s %-10s med %r p99 %r amp %r tot %r '
+                          'mig %d' % (pname, tname, pol[0], med, p99,
+                                      p99 / med, tot, mig))
+    print('== c2r ==')
+    base_tables = [drifting_node_affine_routing(32, 8, 32, 640, 0, C2R_NOISE,
+                                                11 + s) for s in range(16)]
+    c2r_tables = [c2r_routing(32, 8, 32, 640, 0, C2R_NOISE, C2R_COLLAB,
+                              11 + s) for s in range(16)]
+    fault = ChaosSpec7(0, 0.0, [], [LinkFault7(None, C2R_UPLINK_ALPHA,
+                                               C2R_UPLINK_BETA, None)], None)
+    for (rname, tbl) in [('affine', base_tables), ('c2r', c2r_tables)]:
+        init = Placement.affinity_packed(tbl[0], 32, 8)
+        for (cname, spec) in [('clean', chaos_clean7(0)),
+                              ('degraded', fault)]:
+            st, tot, mig = chaos_cell7(tbl, init, ('seq',), 0, ('never',),
+                                       spec)
+            print('%-7s %-9s tot %r' % (rname, cname, tot))
+
+
+def consistency_checks7():
+    """Reductions the PR7 model must satisfy before its output is
+    trusted as a golden or pinned value."""
+    topo = Topology(4, 2, LinkModel(0.0625, 1024.0), LinkModel(0.125, 512.0),
+                    1.0, None)
+    base = ComputeCosts(1.0, 0.75, 0.75, 0.0625, 0.0625, 0.0625, 0.5)
+    rt = routed_table3()
+    block = Placement.block(4, 4)
+    # 1. a zero-magnitude spec leaves every Topology field untouched
+    #    (straggler factors of exactly 1.0 and inactive/identity link
+    #    faults included), so clean schedules are bit-identical
+    zero = ChaosSpec7(9, 0.0, [(2, 1.0)],
+                      [LinkFault7(None, 1.0, 1.0, None),
+                       LinkFault7(0, 2.0, 2.0, (4, 4))], None)
+    assert chaos_is_zero7(chaos_clean7(9))
+    assert not chaos_is_zero7(ChaosSpec7(9, 0.0, [], [], Dropout7(0, 0)))
+    for s in range(4):
+        pt, pni = chaos_perturb7(zero, topo, s)
+        assert pt == topo and pni is None
+        a = build_spec4(topo_from_routing4(base, topo, rt, block, 64),
+                        ('scmoe', 1), ('seq',), 0).run()
+        b = build_spec4(topo_from_routing4(base, pt, rt, block, 64, pni),
+                        ('scmoe', 1), ('seq',), 0).run()
+        assert a == b
+    # 2. zero-chaos multi-step timelines ARE run_replace_timeline,
+    #    bit-exactly, for every policy
+    tables = [drifting_node_affine_routing(4, 2, 4, 4, 0, 0.25, 700 + s)
+              for s in range(6)]
+    for policy in [('never',), ('every', 2), ('break-even',)]:
+        ref = run_replace_timeline(base, topo, 64, tables, block,
+                                   ('scmoe', 1), ('seq',), policy, 4096,
+                                   REPLACE_H2D_LINK, 1.0)
+        got = run_chaos_timeline7(base, topo, 64, tables, block,
+                                  ('scmoe', 1), ('seq',), policy, 4096,
+                                  REPLACE_H2D_LINK, 1.0, chaos_clean7(3))
+        assert got == ref
+    # 3. the jitter stream is seed-deterministic, seed-distinct, and
+    #    follows the fork(step) contract shared with util/rng.rs
+    spec = ChaosSpec7(41, 0.25, [], [], None)
+    a1, _ = chaos_perturb7(spec, topo, 2)
+    a2, _ = chaos_perturb7(spec, topo, 2)
+    assert a1.device_scales == a2.device_scales
+    b1, _ = chaos_perturb7(ChaosSpec7(42, 0.25, [], [], None), topo, 2)
+    assert a1.device_scales != b1.device_scales
+    c1, _ = chaos_perturb7(spec, topo, 3)
+    assert a1.device_scales != c1.device_scales
+    manual = rng_fork7(Rng(41), 2)
+    expect = [1.0 / (1.0 + 0.25 * manual.next_f64()) for _ in range(4)]
+    assert a1.device_scales == expect
+    # 4. straggler factors compose multiplicatively with jitter scales,
+    #    and flap schedules gate faults per step
+    s1, _ = chaos_perturb7(ChaosSpec7(41, 0.25, [(3, 2.0)], [], None),
+                           topo, 2)
+    assert s1.device_scales[:3] == a1.device_scales[:3]
+    assert s1.device_scales[3] == a1.device_scales[3] / 2.0
+    flap = ChaosSpec7(0, 0.0, [], [LinkFault7(None, 2.0, 4.0, (4, 2))], None)
+    for s in range(8):
+        pt, _ = chaos_perturb7(flap, topo, s)
+        if s % 4 >= 2:
+            assert pt.inter == LinkModel(0.25, 128.0)
+        else:
+            assert pt.inter == topo.inter
+    pt, pni = chaos_perturb7(
+        ChaosSpec7(0, 0.0, [], [LinkFault7(1, 2.0, 2.0, None)], None),
+        topo, 0)
+    assert pni == [LinkModel(0.0625, 1024.0), LinkModel(0.125, 512.0)]
+    assert pt.inter == topo.inter
+    # 5. c2r_routing reduces bit-exactly to the drifting generator at
+    #    noise = 0 and stays in-group at any noise (bounded fanout)
+    for (regime, seed) in [(0, 3), (1, 11)]:
+        a = drifting_node_affine_routing(4, 2, 4, 4, regime, 0.0, seed)
+        b = c2r_routing(4, 2, 4, 4, regime, 0.0, 1, seed)
+        assert a.routes == b.routes and a.load == b.load
+    bounded = c2r_routing(4, 2, 8, 16, 1, 0.6, 2, 5)
+    for (t, kk, e, slot, w) in bounded.routes:
+        node = (t // 16) // 2
+        assert e % 2 == (node + 1) % 2
+    # 6. dropout fires the failover unconditionally on its step and no
+    #    expert ever lands back on the dead device
+    drop = ChaosSpec7(0, 0.0, [], [], Dropout7(3, 1))
+    for policy in [('never',), ('break-even',)]:
+        st, tot, mig = run_chaos_timeline7(base, topo, 64, tables, block,
+                                           ('scmoe', 1), ('seq',), policy,
+                                           4096, REPLACE_H2D_LINK, 1.0, drop)
+        assert mig >= 1 and st[1][3]  # the forced failover migrated
+        assert st[1][4] == 4096  # exactly expert 3's bytes moved
+    fo = failover_placement7(block, 3)
+    assert [fo.device_of(e) for e in range(4)] == [0, 1, 2, 0]
+    skew = failover_placement7(Placement(4, 3, [0, 0, 0, 1]), 0)
+    # ascending experts spread over survivors by running load, ties to
+    # the lower id: e0 -> d2 (empty), e1 -> d1 (tie), e2 -> d2 (lighter)
+    assert [skew.device_of(e) for e in range(4)] == [2, 1, 2, 1]
+    print('PR7 consistency checks: OK')
+
+
 if __name__ == '__main__':
     # Internal reductions first: the PR3 model must reproduce the seed
     # model bit-for-bit where applicable, the PR4 spec-driven model must
     # reproduce the PR3 builders wherever no load information exists
     # (plus balanced-load identity), the PR5 re-placement model must
     # reduce to the PR4 single-step schedules wherever no migration
-    # fires, and the PR6 serving loop must reduce to the PR5 scripted
-    # timeline on a closed system. Then validate the PR6 model against
-    # the full golden corpus. `--emit` deliberately regenerates the
-    # file; plain invocation (CI) only validates and exits nonzero on
-    # drift.
+    # fires, the PR6 serving loop must reduce to the PR5 scripted
+    # timeline on a closed system, and the PR7 chaos layer must reduce
+    # to the clean PR5/PR6 models at zero magnitude. Then validate the
+    # PR7 model against the full golden corpus. `--emit` deliberately
+    # regenerates the file; plain invocation (CI) only validates and
+    # exits nonzero on drift.
     consistency_checks3()
     consistency_checks4()
     consistency_checks5()
     consistency_checks6()
+    consistency_checks7()
     if '--study' in sys.argv:
         replace_study5()
         sys.exit(0)
     if '--serve-study' in sys.argv:
         serve_study6()
         sys.exit(0)
+    if '--chaos-study' in sys.argv:
+        chaos_study7()
+        sys.exit(0)
     if '--emit' in sys.argv:
-        emit_corpus6(os.path.join(os.path.dirname(os.path.abspath(__file__)),
+        emit_corpus7(os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                   '..', '..', 'rust', 'tests', 'golden',
                                   'timelines.txt'))
-    ok = validate_corpus6()
+    ok = validate_corpus7()
     sys.exit(0 if ok else 1)
