@@ -37,6 +37,13 @@
 //! storm on the `h2d[d]` rows), and the robustness + C2R head-to-head
 //! tables `scmoe report chaos` prints.
 //!
+//! With `--model`, run the whole-model pipeline study on the 4-node IB
+//! preset: render one GPipe step's L-layer timeline (stage 1's layers on
+//! their own engine rows, layer-l A2A overlapping layer-l±1 compute),
+//! print the placement × schedule grid and the live break-even row with
+//! source-side D2H pricing — the same cells `scmoe report model`
+//! tabulates.
+//!
 //! `--chunks N` sets the pipeline depth of the chunked rows (default 2).
 //! Every chunk pays its own launch latency, so deep chunking visibly
 //! stops helping; in `--fleet` mode the chunked ScMoE timeline is also
@@ -59,9 +66,15 @@ use scmoe::report::chaos::{
     c2r_study_tables, c2r_uplink_fault, chaos_scenarios, run_chaos_cell,
     tail_stats, CHAOS_DROP_DEVICE, CHAOS_DROP_STEP,
 };
+use scmoe::coordinator::model::{build_model_sim, model_layer_costs,
+                                PipelineSchedule, PlacementMode};
 use scmoe::report::efficiency::{
     load_skew_study_rows, placement_study_rows, proxy_costs, topo_proxy_costs,
     xl_compute_costs, xl_topo_proxy_costs,
+};
+use scmoe::report::model_report::{
+    model_config, model_grid_placements, model_spec, model_tables,
+    run_model_cell, study_d2h_link, MODEL_LAYERS, MODEL_MICROBATCHES,
 };
 use scmoe::report::replace::{
     break_even_step, migration_marks, run_study, study_config, study_tables,
@@ -89,6 +102,10 @@ fn main() {
     }
     if args.flag("chaos") {
         chaos_mode(args.usize_or("width", 110));
+        return;
+    }
+    if args.flag("model") {
+        model_mode(args.usize_or("width", 110));
         return;
     }
     if args.flag("placement") || args.flag("skew") {
@@ -453,6 +470,72 @@ fn chaos_mode(width: usize) {
     }
     println!("collaboration-constrained routes never leave their node, so \
               the uplink fault cannot touch them");
+}
+
+/// Render the whole-model pipeline study: one GPipe step's L-layer
+/// timeline under the cross-layer placements (stage 1's layers live on
+/// their own engine rows), the placement × schedule grid at the
+/// pipelined microbatch count, and the live break-even row — the same
+/// cells `scmoe report model` tabulates.
+fn model_mode(width: usize) {
+    let sc = Scenario::FourNodeA800IBx32;
+    let topo = sc.topology();
+    let base = xl_compute_costs();
+    println!("### {} — whole-model pipeline timelines ({} devices, \
+              {} nodes) ###",
+             sc.label(), topo.n_devices, topo.n_nodes());
+
+    let tables = model_tables();
+    let (per, cross) = model_grid_placements(&tables[0]);
+    let block: Vec<Placement> = (0..MODEL_LAYERS)
+        .map(|_| Placement::new(32, 32))
+        .collect();
+
+    // step 0 under the cross-layer placements, GPipe at the study's
+    // microbatch count: stage 1's layers land on compute/comm rows 32+
+    let spec = model_spec(MODEL_MICROBATCHES, PipelineSchedule::GPipe);
+    let costs = model_layer_costs(&base, &topo, STUDY_TOKEN_BYTES,
+                                  &tables[0], &cross, MODEL_MICROBATCHES);
+    let (sim, _) = build_model_sim(&spec, &costs, topo.n_devices,
+                                   topo.n_nodes());
+    println!("\n--- step 0: {} layers x {} microbatches, GPipe, \
+              cross-layer placements ---",
+             MODEL_LAYERS, MODEL_MICROBATCHES);
+    print!("{}", timeline::render(&sim.run(), width));
+
+    println!("\n--- total {}-step makespan at m = {} ---",
+             tables.len(), MODEL_MICROBATCHES);
+    for schedule in [PipelineSchedule::LayerSequential,
+                     PipelineSchedule::GPipe, PipelineSchedule::OneFOneB] {
+        for (name, initial) in [("block", &block), ("per-layer", &per),
+                                ("cross-layer", &cross)] {
+            let cfg = model_config(MODEL_MICROBATCHES, schedule,
+                                   ReplacePolicy::Never,
+                                   PlacementMode::PerLayer, None);
+            let out = run_model_cell(&tables, initial, &cfg);
+            println!("{:<10} {:<12} total {:>9.3}ms",
+                     schedule.label(), name, out.total * 1e3);
+        }
+    }
+
+    let cfg = model_config(MODEL_MICROBATCHES, PipelineSchedule::GPipe,
+                           ReplacePolicy::BreakEven,
+                           PlacementMode::CrossLayer,
+                           Some(study_d2h_link()));
+    let out = run_model_cell(&tables, &block, &cfg);
+    println!("\nlive (block start, break-even, cross-layer candidates, \
+              D2H-priced): total {:.3}ms, {} migration(s)",
+             out.total * 1e3, out.migrations);
+    for st in &out.steps {
+        println!("  step {}{} makespan {:>9.3}ms{}",
+                 st.step, if st.migrated { "*" } else { " " },
+                 st.makespan * 1e3,
+                 if st.migrated {
+                     format!(" (d2h+h2d {:.3}ms)", st.migration_time * 1e3)
+                 } else {
+                     String::new()
+                 });
+    }
 }
 
 /// Render the load-skew study's rows as fleet timelines: the balanced

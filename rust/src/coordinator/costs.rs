@@ -296,6 +296,12 @@ pub struct ChunkSource {
     pub intra_links: Vec<LinkModel>,
     /// Shared inter-node uplink, if any.
     pub inter: Option<LinkModel>,
+    /// Per-token source devices when the unchunked phases were priced
+    /// from explicit sources ([`TopoCosts::from_routing_with_sources`]);
+    /// `None` keeps the even index-order split. Indexed by absolute
+    /// token id, so chunked parts (which keep parent token ids) reuse
+    /// the same vector.
+    pub sources: Option<Vec<usize>>,
 }
 
 /// Per-chunk, per-link one-way All-to-All durations plus per-chunk expert
@@ -480,10 +486,32 @@ impl TopoCosts {
     pub fn from_routing(base: &ComputeCosts, topo: &Topology,
                         rt: &RoutingTable, placement: &Placement,
                         token_bytes: usize) -> TopoCosts {
+        TopoCosts::from_routing_with_sources(base, topo, rt, placement,
+                                             token_bytes, None)
+    }
+
+    /// [`Self::from_routing`] with an explicit per-token *source device*
+    /// map: `sources[t]` is the device holding token `t`'s activations
+    /// when this layer's dispatch fires
+    /// (`RoutingTable::a2a_bytes_from_sources`). The model composition
+    /// layer passes the previous layer's landing devices here, so a
+    /// layer's A2A volume depends on where the *previous* placement put
+    /// each token's expert (the ExFlow execution model). `None` keeps
+    /// the even index-order split bit-exactly — including through the
+    /// token-true [`ChunkSource`], which records the map for per-chunk
+    /// re-decomposition.
+    pub fn from_routing_with_sources(base: &ComputeCosts, topo: &Topology,
+                                     rt: &RoutingTable,
+                                     placement: &Placement,
+                                     token_bytes: usize,
+                                     sources: Option<&[usize]>) -> TopoCosts {
         topo.assert_valid();
         assert_eq!(placement.n_devices, topo.n_devices,
                    "placement must cover the topology's device fleet");
-        let disp = rt.a2a_bytes_placed(placement, token_bytes);
+        let disp = match sources {
+            Some(s) => rt.a2a_bytes_from_sources(s, placement, token_bytes),
+            None => rt.a2a_bytes_placed(placement, token_bytes),
+        };
         let comb = a2a_transpose(&disp, topo.n_devices);
         let links = topo.intra_links();
         let pd = a2a_decompose_per_node(&disp, topo.n_devices,
@@ -526,6 +554,7 @@ impl TopoCosts {
                 token_bytes,
                 intra_links: links,
                 inter: topo.inter,
+                sources: sources.map(|s| s.to_vec()),
             }),
             expert_load: Some(ExpertLoad::from_routing(rt, placement)),
             devices_per_node: topo.devices_per_node,
@@ -677,8 +706,12 @@ impl CostModel for TopoCosts {
                 expert: Vec::with_capacity(chunks),
             };
             for part in src.rt.chunk(chunks) {
-                let disp = part.a2a_bytes_placed(&src.placement,
-                                                 src.token_bytes);
+                let disp = match &src.sources {
+                    Some(s) => part.a2a_bytes_from_sources(
+                        s, &src.placement, src.token_bytes),
+                    None => part.a2a_bytes_placed(&src.placement,
+                                                  src.token_bytes),
+                };
                 let comb = a2a_transpose(&disp, n);
                 let pd = a2a_decompose_per_node(&disp, n,
                                                 self.devices_per_node,
@@ -1140,6 +1173,66 @@ mod tests {
         // normalized per k then rescaled by k = 2 gives the full volume
         assert!((tc.phase(PhaseDir::Dispatch, PhaseScope::Intra, 0, 2)
                  - 1000.0 / 1e9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn explicit_home_sources_reduce_to_from_routing() {
+        use crate::moe::{Placement, RoutingTable};
+        use crate::coordinator::spec::ScheduleSpec;
+        let idx = vec![0i32, 2, 0, 2, 2, 0, 0, 2, 1, 3, 3, 1, 3, 1, 3, 3];
+        let w = vec![1.0f32; 16];
+        let rt = RoutingTable::build(&idx, &w, 16, 1, 4, 16);
+        let topo = Topology {
+            n_devices: 4,
+            devices_per_node: 2,
+            intra: LinkModel::new(0.0625, 1024.0),
+            inter: Some(LinkModel::new(0.125, 512.0)),
+            compute_scale: 1.0,
+            device_scales: None,
+            node_intra: None,
+        };
+        let p = Placement::new(4, 4);
+        let base = ComputeCosts::swin_proxy();
+        let tpd = rt.n_tokens.div_ceil(4);
+        let home: Vec<usize> =
+            (0..rt.n_tokens).map(|t| (t / tpd).min(3)).collect();
+        let a = TopoCosts::from_routing(&base, &topo, &rt, &p, 64);
+        let b = TopoCosts::from_routing_with_sources(&base, &topo, &rt, &p,
+                                                     64, Some(&home));
+        // the stored phase vectors and a chunked build (exercising the
+        // ChunkSource path) must agree bit-exactly
+        assert_eq!(a.a2a_intra_k1, b.a2a_intra_k1);
+        assert_eq!(a.a2a_inter_k1, b.a2a_inter_k1);
+        assert_eq!(a.a2a_intra_combine_k1, b.a2a_intra_combine_k1);
+        assert_eq!(a.a2a_inter_combine_k1, b.a2a_inter_combine_k1);
+        let spec = ScheduleSpec::new(MoEKind::ScMoE { k: 1 },
+                                     Strategy::Pipelined { chunks: 2 });
+        assert_eq!(spec.build(&a).makespan(), spec.build(&b).makespan());
+    }
+
+    #[test]
+    fn chained_sources_reshape_the_dispatch_rows() {
+        use crate::moe::{Placement, RoutingTable};
+        // every token sits on device 3 (a previous layer concentrated
+        // them there): all dispatch must leave node 1, none from node 0
+        let idx = vec![0i32, 1, 2, 3];
+        let w = vec![1.0f32; 4];
+        let rt = RoutingTable::build(&idx, &w, 4, 1, 4, 4);
+        let topo = Topology {
+            n_devices: 4,
+            devices_per_node: 2,
+            intra: LinkModel::new(0.0, 1e9),
+            inter: Some(LinkModel::new(0.0, 1e6)),
+            compute_scale: 1.0,
+            device_scales: None,
+            node_intra: None,
+        };
+        let base = ComputeCosts::swin_proxy();
+        let tc = TopoCosts::from_routing_with_sources(
+            &base, &topo, &rt, &Placement::new(4, 4), 1000, Some(&[3; 4]));
+        // node 1 sends tokens 0/1 across (2000 B over 1e6 B/s)
+        assert!((tc.a2a_inter_k1[1] - 2000.0 / 1e6).abs() < 1e-15);
+        assert_eq!(tc.a2a_inter_k1[0], 0.0);
     }
 
     #[test]

@@ -25,6 +25,12 @@
 //!   with overlapped migrations into N-step makespans; plus the chaos
 //!   variants `failover_placement` and `run_chaos_timeline` (per-step
 //!   perturbed topologies, dropout recovery via forced failover);
+//! - `model`: whole-model composition — [`ModelSpec`] embeds L per-layer
+//!   pair graphs × M microbatches onto S pipeline stages under a
+//!   [`PipelineSchedule`] (layer-sequential / GPipe / 1F1B) with chained
+//!   inter-layer dispatch sources, and `run_model_timeline` drives the
+//!   multi-step stream with per-layer or ExFlow-style cross-layer
+//!   ([`PlacementMode`]) live re-placement;
 //! - `timeline`: ASCII rendering of DES spans (regenerates Fig. 6);
 //! - `exec`: real threaded execution of the same schedules against PJRT
 //!   artifacts with injected link delays (validates the DES).
@@ -32,6 +38,7 @@
 pub mod adaptive;
 pub mod costs;
 pub mod exec;
+pub mod model;
 pub mod replace;
 pub mod schedule;
 pub mod spec;
@@ -40,6 +47,9 @@ pub mod timeline;
 pub use adaptive::{choose_expert_slot, choose_expert_slot_model,
                    choose_expert_slot_topo};
 pub use costs::{BlockCosts, ChunkSource, ChunkedA2a, MoEKind, Strategy, TopoCosts};
+pub use model::{build_model_sim, chained_sources, model_layer_costs,
+                run_model_timeline, ModelConfig, ModelOutcome, ModelSpec,
+                ModelStepReport, PipelineSchedule, PlacementMode};
 pub use replace::{ExpertMove, MigrationPlan, ReplaceConfig, ReplaceOutcome,
                   ReplacePolicy, StepReport, failover_placement,
                   run_chaos_timeline, run_replace_timeline};

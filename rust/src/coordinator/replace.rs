@@ -8,7 +8,11 @@
 //! itself?* A [`MigrationPlan`] is the expert→device delta between two
 //! [`Placement`]s with per-expert byte costs; its transfers become real
 //! DES tasks on the per-device [`Resource::H2D`] engines, overlapped
-//! behind the backbone compute of the step in which they fire.
+//! behind the backbone compute of the step in which they fire. With a
+//! configured D2H link ([`ReplaceConfig::d2h_link`]) every move also
+//! pays its source-side read-out on the per-device [`Resource::D2H`]
+//! engine first — the H2D write chains behind it, so a device shedding
+//! many experts throttles all of their arrivals.
 //! [`run_replace_timeline`] drives N steps of a routing stream through a
 //! [`ScheduleSpec`], feeding every step's table to a
 //! [`AffinityEstimator`](crate::moe::AffinityEstimator) and letting a
@@ -121,6 +125,54 @@ impl MigrationPlan {
             })
             .collect()
     }
+
+    /// [`Self::add_h2d_tasks`] generalized to price the *source* side of
+    /// every move: with `d2h = Some(link)` each move first reads the
+    /// expert's parameters out on the source device's [`Resource::D2H`]
+    /// engine (serialized per device, overlapping compute/comm like H2D)
+    /// and the destination H2D task depends on that read-out; with
+    /// `d2h = None` the legacy destination-only tasks are emitted
+    /// bit-exactly. `device_offset` shifts every engine index — the
+    /// model layer uses it to land a layer's migration on its pipeline
+    /// stage's engines. Returns the H2D task ids.
+    pub fn add_transfer_tasks(&self, sim: &mut Sim, h2d: &LinkModel,
+                              d2h: Option<&LinkModel>,
+                              device_offset: usize) -> Vec<TaskId> {
+        self.moves
+            .iter()
+            .map(|m| {
+                let deps: Vec<TaskId> = match d2h {
+                    Some(link) => vec![sim.add(
+                        format!("D2H-E{}", m.expert),
+                        Resource::D2H(m.from + device_offset),
+                        link.transfer_time(m.bytes), &[])],
+                    None => Vec::new(),
+                };
+                sim.add(format!("H2D-E{}", m.expert),
+                        Resource::H2D(m.to + device_offset),
+                        h2d.transfer_time(m.bytes), &deps)
+            })
+            .collect()
+    }
+
+    /// Completion time of the plan's transfer tasks alone. With no D2H
+    /// link this is the analytic per-destination serialization of
+    /// [`Self::time`], bit-exactly; with one, each H2D task waits on its
+    /// own source read-out, so destination engines can stall on busy
+    /// source engines — an interaction only the DES prices correctly,
+    /// so the value comes from a scratch simulation of exactly the
+    /// tasks [`Self::add_transfer_tasks`] would add.
+    pub fn transfer_time(&self, h2d: &LinkModel,
+                         d2h: Option<&LinkModel>) -> f64 {
+        match d2h {
+            None => self.time(h2d),
+            Some(_) => {
+                let mut sim = Sim::new();
+                self.add_transfer_tasks(&mut sim, h2d, d2h, 0);
+                sim.makespan()
+            }
+        }
+    }
 }
 
 /// When a multi-step timeline migrates to the measured-affinity packing.
@@ -187,6 +239,13 @@ pub struct ReplaceConfig {
     pub bytes_per_expert: usize,
     /// Host-to-device transfer link the H2D engines model.
     pub h2d: LinkModel,
+    /// Device-to-host link pricing the *source* side of each move.
+    /// `None` (the legacy configuration) emits destination-only H2D
+    /// tasks; `Some` chains every H2D task behind its source read-out
+    /// on the per-device [`Resource::D2H`] engine. An infinite-bandwidth
+    /// zero-latency D2H link reduces bit-exactly to `None` (pinned in
+    /// `rust/tests/model_timeline.rs` and mirror `consistency_checks8`).
+    pub d2h_link: Option<LinkModel>,
     /// Estimator decay (1.0 = counting; < 1.0 forgets old regimes).
     pub decay: f64,
 }
@@ -267,10 +326,10 @@ pub fn run_replace_timeline(base: &ComputeCosts, topo: &Topology,
             let plan = MigrationPlan::between(&placement, &candidate,
                                              cfg.bytes_per_expert);
             if !plan.is_empty() {
-                // the H2D engines run concurrently with the step's
+                // the transfer engines run concurrently with the step's
                 // schedule, so the makespan cost of migrating is only
                 // the part of the transfer that outlasts the step
-                let mig = plan.time(&cfg.h2d);
+                let mig = plan.transfer_time(&cfg.h2d, cfg.d2h_link.as_ref());
                 let overhead = (mig - base_makespan).max(0.0);
                 let saving = match cfg.policy {
                     ReplacePolicy::BreakEven => {
@@ -281,7 +340,8 @@ pub fn run_replace_timeline(base: &ComputeCosts, topo: &Topology,
                     _ => 0.0,
                 };
                 if cfg.policy.should_migrate(s, remaining, saving, overhead) {
-                    plan.add_h2d_tasks(&mut sched.sim, &cfg.h2d);
+                    plan.add_transfer_tasks(&mut sched.sim, &cfg.h2d,
+                                            cfg.d2h_link.as_ref(), 0);
                     migrated = true;
                     migration_bytes = plan.total_bytes();
                     migration_time = mig;
@@ -383,8 +443,10 @@ pub fn run_chaos_timeline(base: &ComputeCosts, topo: &Topology,
             let plan = MigrationPlan::between(&placement, &candidate,
                                               cfg.bytes_per_expert);
             if !plan.is_empty() {
-                migration_time = plan.time(&cfg.h2d);
-                plan.add_h2d_tasks(&mut sched.sim, &cfg.h2d);
+                migration_time = plan.transfer_time(&cfg.h2d,
+                                                    cfg.d2h_link.as_ref());
+                plan.add_transfer_tasks(&mut sched.sim, &cfg.h2d,
+                                        cfg.d2h_link.as_ref(), 0);
                 migrated = true;
                 migration_bytes = plan.total_bytes();
                 migrations += 1;
@@ -401,7 +463,7 @@ pub fn run_chaos_timeline(base: &ComputeCosts, topo: &Topology,
             let plan = MigrationPlan::between(&placement, &candidate,
                                               cfg.bytes_per_expert);
             if !plan.is_empty() {
-                let mig = plan.time(&cfg.h2d);
+                let mig = plan.transfer_time(&cfg.h2d, cfg.d2h_link.as_ref());
                 let overhead = (mig - base_makespan).max(0.0);
                 let saving = match cfg.policy {
                     ReplacePolicy::BreakEven => {
@@ -412,7 +474,8 @@ pub fn run_chaos_timeline(base: &ComputeCosts, topo: &Topology,
                     _ => 0.0,
                 };
                 if cfg.policy.should_migrate(s, remaining, saving, overhead) {
-                    plan.add_h2d_tasks(&mut sched.sim, &cfg.h2d);
+                    plan.add_transfer_tasks(&mut sched.sim, &cfg.h2d,
+                                            cfg.d2h_link.as_ref(), 0);
                     migrated = true;
                     migration_bytes = plan.total_bytes();
                     migration_time = mig;
@@ -487,6 +550,69 @@ mod tests {
             if w[0].resource == w[1].resource {
                 assert!(w[1].start >= w[0].end - 1e-12,
                         "H2D overlap on {:?}", w[0].resource);
+            }
+        }
+    }
+
+    #[test]
+    fn transfer_tasks_without_d2h_match_legacy_h2d() {
+        let (block, affinity) = placements();
+        let plan = MigrationPlan::between(&block, &affinity, 4096);
+        let h2d = LinkModel::new(0.125, 1024.0);
+        let mut legacy = Sim::new();
+        plan.add_h2d_tasks(&mut legacy, &h2d);
+        let mut new = Sim::new();
+        plan.add_transfer_tasks(&mut new, &h2d, None, 0);
+        let (ls, ns) = (legacy.run(), new.run());
+        assert_eq!(ls.len(), ns.len());
+        for (a, b) in ls.iter().zip(&ns) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.resource, b.resource);
+            assert_eq!(a.start, b.start);
+            assert_eq!(a.end, b.end);
+        }
+        assert_eq!(plan.transfer_time(&h2d, None), plan.time(&h2d));
+    }
+
+    #[test]
+    fn infinite_d2h_bandwidth_is_bit_exact_with_none() {
+        let (block, affinity) = placements();
+        let plan = MigrationPlan::between(&block, &affinity, 4096);
+        let h2d = LinkModel::new(0.125, 1024.0);
+        let free = LinkModel::new(0.0, f64::INFINITY);
+        assert_eq!(plan.transfer_time(&h2d, Some(&free)),
+                   plan.transfer_time(&h2d, None));
+    }
+
+    #[test]
+    fn d2h_source_engine_serializes_the_read_outs() {
+        // both experts leave device 0: their D2H read-outs serialize on
+        // the one source engine, so the second H2D write starts late
+        // even though the destinations differ
+        let old = Placement::custom(2, 3, vec![0, 0]);
+        let new = Placement::custom(2, 3, vec![1, 2]);
+        let plan = MigrationPlan::between(&old, &new, 1000);
+        let h2d = LinkModel::new(0.0, 1000.0); // 1.0 per move
+        let d2h = LinkModel::new(0.0, 2000.0); // 0.5 per move
+        // engine trace: D2H(0) runs 0.5 + 0.5; H2D(1) spans [0.5, 1.5];
+        // H2D(2) spans [1.0, 2.0]
+        assert!((plan.transfer_time(&h2d, Some(&d2h)) - 2.0).abs() < 1e-15);
+        // the analytic destination-only serialization would claim 1.0
+        assert!((plan.time(&h2d) - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn device_offset_shifts_every_engine() {
+        let (block, affinity) = placements();
+        let plan = MigrationPlan::between(&block, &affinity, 4096);
+        let h2d = LinkModel::new(0.125, 1024.0);
+        let d2h = LinkModel::new(0.25, 2048.0);
+        let mut sim = Sim::new();
+        plan.add_transfer_tasks(&mut sim, &h2d, Some(&d2h), 8);
+        for s in sim.run() {
+            match s.resource {
+                Resource::H2D(d) | Resource::D2H(d) => assert!(d >= 8),
+                r => panic!("unexpected resource {r:?}"),
             }
         }
     }

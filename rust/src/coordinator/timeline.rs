@@ -14,6 +14,7 @@ fn resource_row(r: Resource) -> String {
         Resource::Comm(d) => format!("comm[{d}]"),
         Resource::Link(n) => format!("link[{n}]"),
         Resource::H2D(d) => format!("h2d[{d}]"),
+        Resource::D2H(d) => format!("d2h[{d}]"),
         Resource::Free => "free".into(),
     }
 }

@@ -26,7 +26,7 @@ use scmoe::util::cli::Args;
 const USAGE: &str = "\
 usage: scmoe <command> [options]
   train        --arch scmoe --preset micro --steps 100 [--log out.csv]
-  report       <fig1|fig6|fig8|fig9|fig10|fig11|table1..7|speedups|topo|replace|serve|chaos|a5|all-efficiency>
+  report       <fig1|fig6|fig8|fig9|fig10|fig11|table1..7|speedups|topo|replace|serve|model|chaos|a5|all-efficiency>
   timeline     --kind <top2|top1|shared|scmoe|scmoe2> --strategy <seq|pipe|overlap|overlap-pipe>
   offload-sim  [--tokens 64]
   bench-calib  [--dir artifacts/ops_tiny] [--reps 5]

@@ -11,15 +11,22 @@
 //! accumulates measured (expert, source-node) affinity over a multi-step
 //! stream of routing tables so placements can be *learned* (ExFlow-style)
 //! and re-learned live instead of derived from a single oracle table.
+//! For whole-model timelines, [`TransitionEstimator`] additionally
+//! accumulates *inter-layer* expert transitions and [`co_placed`] packs
+//! each layer against the previous layer's placement (cross-layer
+//! co-placement), while `RoutingTable::a2a_bytes_from_sources` prices a
+//! layer's dispatch from wherever the previous layer left each token.
 
 pub mod dispatch;
 pub mod estimator;
 pub mod placement;
 pub mod router;
 pub mod traffic;
+pub mod transition;
 
 pub use dispatch::{decode, decode_into, encode, encode_into};
 pub use estimator::AffinityEstimator;
 pub use placement::{ExpertLoad, Placement};
 pub use router::{Route, RoutingTable};
-pub use traffic::{c2r_routing, phase_affine_routing};
+pub use traffic::{c2r_routing, correlated_layer_routing, phase_affine_routing};
+pub use transition::{co_placed, TransitionEstimator};

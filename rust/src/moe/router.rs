@@ -129,6 +129,52 @@ impl RoutingTable {
         mat
     }
 
+    /// [`Self::a2a_bytes_placed`] with an explicit per-token source
+    /// device instead of the even index-order split: `sources[t]` is the
+    /// device holding token `t`'s activations when this layer's dispatch
+    /// fires. The model composition layer uses this to chain layers in
+    /// the ExFlow execution model — a token's layer-*l* activations sit
+    /// on whatever device ran its layer-*l−1* expert, so the layer-*l*
+    /// dispatch matrix depends on the *previous* layer's placement.
+    /// `sources` is indexed by absolute token id (chunked parts keep
+    /// their parent's token ids, so one vector serves every part).
+    /// The combine direction remains the transpose.
+    pub fn a2a_bytes_from_sources(
+        &self,
+        sources: &[usize],
+        placement: &Placement,
+        token_bytes: usize,
+    ) -> Vec<usize> {
+        assert_eq!(placement.n_experts, self.n_experts,
+                   "placement expert count must match the routing table");
+        assert_eq!(sources.len(), self.n_tokens,
+                   "one source device per token");
+        let n_devices = placement.n_devices;
+        let mut mat = vec![0usize; n_devices * n_devices];
+        for r in &self.routes {
+            let src = sources[r.token];
+            assert!(src < n_devices, "source device outside the fleet");
+            let dst = placement.device_of(r.expert);
+            mat[src * n_devices + dst] += token_bytes;
+        }
+        mat
+    }
+
+    /// Each token's first kept k-slot-0 expert, `None` for tokens whose
+    /// primary route dropped. This is the "where did the token go" map
+    /// the inter-layer transition estimator and the chained-source
+    /// computation consume (secondary top-k copies return to the token's
+    /// holder at combine, so the primary expert decides residence).
+    pub fn primary_experts(&self) -> Vec<Option<usize>> {
+        let mut primary = vec![None; self.n_tokens];
+        for r in &self.routes {
+            if r.k_slot == 0 && primary[r.token].is_none() {
+                primary[r.token] = Some(r.expert);
+            }
+        }
+        primary
+    }
+
     /// Split into `chunks` contiguous token ranges (Tutel-style pipeline
     /// chunking): part `i` covers tokens `[i·⌈n/chunks⌉, (i+1)·⌈n/chunks⌉)`
     /// and keeps exactly the parent routes whose token falls in that range.
@@ -247,6 +293,38 @@ mod tests {
         let p = Placement::custom(4, 2, vec![1, 1, 1, 1]);
         let m = rt.a2a_bytes_placed(&p, 10);
         assert_eq!(m, vec![0, 20, 0, 20]);
+    }
+
+    #[test]
+    fn home_sources_reduce_to_the_even_split() {
+        let idx = vec![0, 2, 1, 3, 2, 2];
+        let w = vec![1.0; 6];
+        let rt = RoutingTable::build(&idx, &w, 6, 1, 4, 4);
+        let p = Placement::new(4, 2);
+        let tpd = rt.n_tokens.div_ceil(2);
+        let home: Vec<usize> =
+            (0..rt.n_tokens).map(|t| (t / tpd).min(1)).collect();
+        assert_eq!(rt.a2a_bytes_from_sources(&home, &p, 10),
+                   rt.a2a_bytes_placed(&p, 10));
+    }
+
+    #[test]
+    fn explicit_sources_redirect_the_rows() {
+        // every token held by device 1: all dispatch leaves row 1
+        let idx = vec![0, 1, 2, 3];
+        let w = vec![1.0; 4];
+        let rt = RoutingTable::build(&idx, &w, 4, 1, 4, 4);
+        let m = rt.a2a_bytes_from_sources(&[1; 4], &Placement::new(4, 2), 10);
+        assert_eq!(m, vec![0, 0, 20, 20]);
+    }
+
+    #[test]
+    fn primary_experts_track_kept_slot_zero_routes() {
+        // capacity 1: token 0 fills both experts, token 1 drops entirely
+        let idx = vec![0, 1, 0, 1];
+        let w = vec![0.6, 0.4, 0.7, 0.3];
+        let rt = RoutingTable::build(&idx, &w, 2, 2, 2, 1);
+        assert_eq!(rt.primary_experts(), vec![Some(0), None]);
     }
 
     #[test]

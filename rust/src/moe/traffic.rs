@@ -58,6 +58,42 @@ pub fn phase_affine_routing(n_devices: usize, devices_per_node: usize,
     RoutingTable::build(&indices, &weights, n_tokens, 1, n_experts, n_tokens)
 }
 
+/// Seeded ExFlow-style (arXiv:2401.08383) inter-layer correlated routing
+/// (k = 1): the next layer's table as a function of the previous one.
+///
+/// Each token follows a deterministic expert *transition*: with
+/// probability `1 - noise` it routes to `(e_prev + stride) % n_experts`
+/// where `e_prev` is its previous-layer primary expert — the stable
+/// cross-layer correlation ExFlow measures — and with probability
+/// `noise` (or when its previous primary dropped) it scatters to a
+/// uniformly random expert. Per-token draw order (one `next_f64`, then
+/// one `below` on the scatter branches) matches the other generators.
+/// Capacity is sized so nothing drops. Deterministic per seed.
+pub fn correlated_layer_routing(prev: &RoutingTable, n_experts: usize,
+                                stride: usize, noise: f64,
+                                seed: u64) -> RoutingTable {
+    assert_eq!(prev.n_experts, n_experts,
+               "layers share one expert-count geometry");
+    let n_tokens = prev.n_tokens;
+    assert!(n_tokens > 0, "a batch needs at least one token");
+    let primary = prev.primary_experts();
+    let mut rng = Rng::new(seed);
+    let mut indices = Vec::with_capacity(n_tokens);
+    let weights = vec![1.0f32; n_tokens];
+    for t in 0..n_tokens {
+        let e = if rng.next_f64() < noise {
+            rng.below(n_experts)
+        } else {
+            match primary[t] {
+                Some(p) => (p + stride) % n_experts,
+                None => rng.below(n_experts),
+            }
+        };
+        indices.push(e as i32);
+    }
+    RoutingTable::build(&indices, &weights, n_tokens, 1, n_experts, n_tokens)
+}
+
 /// Seeded C2R-style (arXiv:2504.01337) collaboration-constrained
 /// node-affine routing (k = 1).
 ///
@@ -153,6 +189,30 @@ mod tests {
                        "token {} escaped its group", r.token);
         }
         assert_eq!(rt.dropped, 0);
+    }
+
+    #[test]
+    fn zero_noise_correlation_is_the_pure_stride() {
+        let prev = phase_affine_routing(4, 2, 8, 32, 0, 0, 0.0, 0.0, 3);
+        let next = correlated_layer_routing(&prev, 8, 3, 0.0, 7);
+        let pp = prev.primary_experts();
+        let np = next.primary_experts();
+        for t in 0..prev.n_tokens {
+            assert_eq!(np[t], Some((pp[t].unwrap() + 3) % 8));
+        }
+    }
+
+    #[test]
+    fn correlated_routing_deviates_at_full_noise() {
+        let prev = phase_affine_routing(4, 2, 8, 32, 0, 0, 0.0, 0.0, 3);
+        let next = correlated_layer_routing(&prev, 8, 1, 1.0, 7);
+        let pp = prev.primary_experts();
+        let np = next.primary_experts();
+        let off_stride = (0..prev.n_tokens)
+            .filter(|&t| np[t] != Some((pp[t].unwrap() + 1) % 8))
+            .count();
+        assert!(off_stride > 0, "full noise must break the stride");
+        assert_eq!(next.dropped, 0);
     }
 
     #[test]

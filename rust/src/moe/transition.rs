@@ -1,0 +1,226 @@
+//! Measured inter-layer expert transitions and cross-layer co-placement.
+//!
+//! ExFlow (arXiv:2401.08383) observes that a token's expert choice at
+//! layer *l* predicts its choice at layer *l+1*: routing decisions are
+//! correlated across depth, so the device that ran a token's layer-*l*
+//! expert is the *source* of its layer-*l+1* dispatch. A per-layer
+//! affinity packer (one [`AffinityEstimator`](super::AffinityEstimator)
+//! per layer) only sees where tokens *live* at batch start; it cannot
+//! see that expert `f` at layer *l+1* receives most of its tokens from
+//! expert `e` at layer *l*, wherever `e` happens to be placed.
+//!
+//! [`TransitionEstimator`] is the missing accumulator: a discounted
+//! `[n_experts, n_experts]` prev→next primary-route count matrix over a
+//! stream of adjacent-layer [`RoutingTable`] pairs, with the same
+//! `count = decay * count + observed` update rule (and the same
+//! counting/EWMA modes) as the per-layer estimator. [`co_placed`] then
+//! packs layer *l+1* given layer *l*'s placement: each expert's
+//! home-node affinity row is augmented with the transition counts
+//! flowing from every previous-layer expert resident on that node, and
+//! the combined matrix feeds the same greedy
+//! [`Placement::affinity_packed_measured`] packer. With zero transition
+//! counts the combined matrix *is* the affinity matrix, so cross-layer
+//! packing reduces bit-exactly to independent per-layer packing (pinned
+//! in `rust/tests/model_timeline.rs` and mirror `consistency_checks8`).
+
+use super::placement::Placement;
+use super::router::RoutingTable;
+
+/// Discounted prev-layer→next-layer primary-expert transition counts —
+/// the inter-layer analogue of
+/// [`AffinityEstimator`](super::AffinityEstimator).
+#[derive(Debug, Clone)]
+pub struct TransitionEstimator {
+    /// Experts per layer (both layers of every observed pair).
+    pub n_experts: usize,
+    /// Per-step discount on the accumulated counts (1.0 = counting).
+    pub decay: f64,
+    /// Row-major `[prev_expert, next_expert]` discounted counts.
+    counts: Vec<f64>,
+    /// Number of table pairs observed so far.
+    pub steps: usize,
+}
+
+impl TransitionEstimator {
+    /// Pure counting accumulator (`decay = 1.0`).
+    pub fn counting(n_experts: usize) -> TransitionEstimator {
+        TransitionEstimator::ewma(n_experts, 1.0)
+    }
+
+    /// Exponentially discounted accumulator; requires `0 < decay <= 1`.
+    pub fn ewma(n_experts: usize, decay: f64) -> TransitionEstimator {
+        assert!(n_experts > 0);
+        assert!(decay > 0.0 && decay <= 1.0, "decay must be in (0, 1]");
+        TransitionEstimator {
+            n_experts,
+            decay,
+            counts: vec![0.0; n_experts * n_experts],
+            steps: 0,
+        }
+    }
+
+    /// Fold one adjacent-layer pair of routing tables over the same
+    /// token batch: every token whose primary (k-slot-0, kept) route
+    /// exists in *both* layers contributes one `(prev_expert,
+    /// next_expert)` observation. Dropped primaries contribute nothing
+    /// — a token that never reached a layer-*l* expert carries no
+    /// layer-*l* residence to transition from.
+    pub fn observe(&mut self, prev: &RoutingTable, next: &RoutingTable) {
+        assert_eq!(prev.n_experts, self.n_experts,
+                   "prev table must cover the estimator's experts");
+        assert_eq!(next.n_experts, self.n_experts,
+                   "next table must cover the estimator's experts");
+        assert_eq!(prev.n_tokens, next.n_tokens,
+                   "adjacent layers route the same token batch");
+        let pe = prev.primary_experts();
+        let ne = next.primary_experts();
+        let mut obs = vec![0usize; self.n_experts * self.n_experts];
+        for t in 0..prev.n_tokens {
+            if let (Some(e), Some(f)) = (pe[t], ne[t]) {
+                obs[e * self.n_experts + f] += 1;
+            }
+        }
+        for (c, &o) in self.counts.iter_mut().zip(&obs) {
+            *c = self.decay * *c + o as f64;
+        }
+        self.steps += 1;
+    }
+
+    /// Measured (discounted) transition count from previous-layer expert
+    /// `e` into next-layer expert `f`.
+    pub fn count(&self, e: usize, f: usize) -> f64 {
+        assert!(e < self.n_experts && f < self.n_experts);
+        self.counts[e * self.n_experts + f]
+    }
+
+    /// The full row-major `[n_experts, n_experts]` measured matrix.
+    pub fn matrix(&self) -> &[f64] {
+        &self.counts
+    }
+}
+
+/// ExFlow-style cross-layer co-placement: pack a layer's experts given
+/// the *previous* layer's placement. Each next-layer expert `f`'s
+/// affinity row (`aff`, row-major `[n_experts, n_nodes]` — typically
+/// this layer's [`AffinityEstimator`](super::AffinityEstimator) matrix)
+/// is augmented with the measured transition counts arriving from every
+/// previous-layer expert `e` resident on node `prev.device_of(e) /
+/// devices_per_node`, then the combined matrix feeds the same greedy
+/// capacity-balanced packer as per-layer packing. Zero transition
+/// counts reduce bit-exactly to
+/// [`Placement::affinity_packed_measured`] on `aff` alone.
+pub fn co_placed(aff: &[f64], trans: &TransitionEstimator, prev: &Placement,
+                 n_devices: usize, devices_per_node: usize) -> Placement {
+    assert!(devices_per_node > 0 && n_devices % devices_per_node == 0);
+    let n_nodes = n_devices / devices_per_node;
+    let n_experts = trans.n_experts;
+    assert_eq!(aff.len(), n_experts * n_nodes,
+               "affinity matrix must be [n_experts, n_nodes]");
+    assert_eq!(prev.n_experts, n_experts,
+               "previous placement must cover the same experts");
+    let mut combined = aff.to_vec();
+    for e in 0..n_experts {
+        let node = prev.device_of(e) / devices_per_node;
+        for f in 0..n_experts {
+            combined[f * n_nodes + node] += trans.count(e, f);
+        }
+    }
+    Placement::affinity_packed_measured(&combined, n_experts, n_devices,
+                                        devices_per_node)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table(idx: &[i32], n_experts: usize) -> RoutingTable {
+        let w = vec![1.0f32; idx.len()];
+        RoutingTable::build(idx, &w, idx.len(), 1, n_experts, idx.len())
+    }
+
+    #[test]
+    fn counting_accumulates_primary_transitions() {
+        // tokens 0..3 route e0→e1, e0→e1, e1→e0, e1→e1
+        let prev = table(&[0, 0, 1, 1], 2);
+        let next = table(&[1, 1, 0, 1], 2);
+        let mut tr = TransitionEstimator::counting(2);
+        tr.observe(&prev, &next);
+        tr.observe(&prev, &next);
+        assert_eq!(tr.steps, 2);
+        assert_eq!(tr.count(0, 1), 4.0);
+        assert_eq!(tr.count(1, 0), 2.0);
+        assert_eq!(tr.count(1, 1), 2.0);
+        assert_eq!(tr.count(0, 0), 0.0);
+    }
+
+    #[test]
+    fn dropped_primaries_contribute_nothing() {
+        // capacity 1 drops token 1's primary in the prev layer
+        let w = vec![1.0f32; 2];
+        let prev = RoutingTable::build(&[0, 0], &w, 2, 1, 2, 1);
+        let next = table(&[1, 1], 2);
+        let mut tr = TransitionEstimator::counting(2);
+        tr.observe(&prev, &next);
+        assert_eq!(tr.count(0, 1), 1.0);
+        assert_eq!(tr.matrix().iter().sum::<f64>(), 1.0);
+    }
+
+    #[test]
+    fn ewma_discounts_old_pairs() {
+        let prev = table(&[0, 0], 2);
+        let a = table(&[0, 0], 2);
+        let b = table(&[1, 1], 2);
+        let mut tr = TransitionEstimator::ewma(2, 0.5);
+        tr.observe(&prev, &a);
+        for _ in 0..3 {
+            tr.observe(&prev, &b);
+        }
+        assert!(tr.count(0, 1) > tr.count(0, 0),
+                "EWMA failed to forget: {} vs {}",
+                tr.count(0, 1), tr.count(0, 0));
+    }
+
+    #[test]
+    fn zero_transitions_reduce_to_per_layer_packing() {
+        let aff = vec![
+            1.5, 2.25,
+            3.0, 0.5,
+            0.25, 1.0,
+            2.0, 0.0,
+        ];
+        let tr = TransitionEstimator::counting(4);
+        let prev = Placement::new(4, 4);
+        let cross = co_placed(&aff, &tr, &prev, 4, 2);
+        let per = Placement::affinity_packed_measured(&aff, 4, 4, 2);
+        for e in 0..4 {
+            assert_eq!(cross.device_of(e), per.device_of(e));
+        }
+    }
+
+    #[test]
+    fn co_placement_follows_the_feeding_node() {
+        // no home affinity at all; experts 0/1 of the previous layer sit
+        // on node 0 and feed next-layer experts 0/1; experts 2/3 sit on
+        // node 1 and feed 2/3 — co-placement must keep each pair local
+        // to its feeding node
+        let aff = vec![0.0; 8];
+        let prev = Placement::new(4, 4); // devices 0,1 = node 0
+        let pl = table(&[0, 0, 1, 1, 2, 2, 3, 3], 4);
+        let nl = table(&[0, 0, 1, 1, 2, 2, 3, 3], 4);
+        let mut tr = TransitionEstimator::counting(4);
+        tr.observe(&pl, &nl);
+        let p = co_placed(&aff, &tr, &prev, 4, 2);
+        assert_eq!(p.device_of(0) / 2, 0);
+        assert_eq!(p.device_of(1) / 2, 0);
+        assert_eq!(p.device_of(2) / 2, 1);
+        assert_eq!(p.device_of(3) / 2, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "same token batch")]
+    fn observe_rejects_mismatched_batches() {
+        let prev = table(&[0, 0], 2);
+        let next = table(&[1, 1, 1], 2);
+        TransitionEstimator::counting(2).observe(&prev, &next);
+    }
+}

@@ -10,6 +10,7 @@
 
 pub mod chaos;
 pub mod efficiency;
+pub mod model_report;
 pub mod offload_report;
 pub mod quality;
 pub mod replace;
@@ -30,6 +31,7 @@ pub fn run(exp: &str, args: &Args) -> Result<()> {
         "topo" | "fleet" => efficiency::topo_report(args),
         "replace" => replace::replace_report(args),
         "serve" => serve_report::serve_report(args),
+        "model" => model_report::model_report(args),
         "chaos" => chaos::chaos_report(args),
         "fig10" => offload_report::fig10(args),
         "table1" => quality::table1(args),

@@ -88,6 +88,7 @@ pub fn study_config(policy: ReplacePolicy, decay: f64) -> ReplaceConfig {
         policy,
         bytes_per_expert: STUDY_BYTES_PER_EXPERT,
         h2d: study_h2d_link(),
+        d2h_link: None,
         decay,
     }
 }

@@ -25,6 +25,11 @@ pub enum Resource {
     /// (`coordinator::replace::MigrationPlan::add_h2d_tasks`) serialize
     /// here while overlapping the device's compute and comm streams.
     H2D(usize),
+    /// A device's device-to-host transfer engine: the *source* side of a
+    /// live re-placement move (`MigrationPlan::add_transfer_tasks` with a
+    /// D2H link) serializes its outgoing expert snapshots here; each
+    /// destination H2D task then depends on its own D2H read-out.
+    D2H(usize),
     /// Unlimited: bookkeeping tasks that consume time but no stream.
     Free,
 }
@@ -74,6 +79,14 @@ impl Sim {
 
     pub fn len(&self) -> usize {
         self.tasks.len()
+    }
+
+    /// The task specs added so far, in insertion (id) order. The model
+    /// composition layer (`coordinator::model`) reads a built
+    /// [`PairSchedule`](crate::coordinator::PairSchedule)'s graph through
+    /// this to embed it — offset, remapped — into a larger Sim.
+    pub fn tasks(&self) -> &[TaskSpec] {
+        &self.tasks
     }
 
     pub fn is_empty(&self) -> bool {
@@ -193,6 +206,17 @@ mod tests {
         // the two transfers overlap compute on a separate engine but
         // serialize against each other: makespan = 1.5 + 1.5
         assert_eq!(sim.makespan(), 3.0);
+    }
+
+    #[test]
+    fn d2h_feeds_h2d_across_engines() {
+        let mut sim = Sim::new();
+        sim.add("comp", Resource::Compute(0), 2.0, &[]);
+        let r = sim.add("read", Resource::D2H(0), 1.0, &[]);
+        sim.add("write", Resource::H2D(1), 1.5, &[r]);
+        // the D2H read-out overlaps compute; the dependent H2D write
+        // starts only once the source engine has drained: 1.0 + 1.5
+        assert_eq!(sim.makespan(), 2.5);
     }
 
     #[test]

@@ -57,6 +57,7 @@ fn dyadic_cfg(policy: ReplacePolicy) -> ReplaceConfig {
         policy,
         bytes_per_expert: 4096,
         h2d: LinkModel::new(0.125, 1024.0),
+        d2h_link: None,
         decay: 1.0,
     }
 }

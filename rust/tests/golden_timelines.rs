@@ -9,11 +9,13 @@
 
 use scmoe::cluster::{ChaosSpec, LinkFault, LinkModel, Topology};
 use scmoe::coordinator::costs::{BlockCosts, ComputeCosts, MoEKind, Strategy, TopoCosts};
+use scmoe::coordinator::model::{build_model_sim, model_layer_costs,
+                                ModelSpec, PipelineSchedule};
 use scmoe::coordinator::replace::{failover_placement, MigrationPlan};
 use scmoe::coordinator::schedule::{build_pair_schedule, ChunkPipelining, PairSchedule};
 use scmoe::coordinator::spec::ScheduleSpec;
 use scmoe::moe::{phase_affine_routing, Placement, RoutingTable};
-use scmoe::simtime::Resource;
+use scmoe::simtime::{Resource, Span};
 
 const GOLDEN: &str = include_str!("golden/timelines.txt");
 
@@ -99,12 +101,12 @@ fn resource_token(r: Resource) -> String {
         Resource::Comm(d) => format!("m{d}"),
         Resource::Link(n) => format!("l{n}"),
         Resource::H2D(d) => format!("h{d}"),
+        Resource::D2H(d) => format!("d{d}"),
         Resource::Free => "f".into(),
     }
 }
 
-fn render_line(name: &str, sched: &PairSchedule) -> String {
-    let mut spans = sched.run();
+fn render_spans(name: &str, mut spans: Vec<Span>) -> String {
     let makespan = spans.iter().fold(0.0f64, |m, s| m.max(s.end));
     spans.sort_by(|a, b| a.start.total_cmp(&b.start).then(a.id.cmp(&b.id)));
     let toks: Vec<String> = spans
@@ -112,6 +114,10 @@ fn render_line(name: &str, sched: &PairSchedule) -> String {
         .map(|s| format!("{}@{}@{:.6}", s.label, resource_token(s.resource), s.start))
         .collect();
     format!("{name} | makespan {makespan:.6} | {}", toks.join(" "))
+}
+
+fn render_line(name: &str, sched: &PairSchedule) -> String {
+    render_spans(name, sched.run())
 }
 
 fn generate_lines() -> Vec<String> {
@@ -322,7 +328,66 @@ fn generate_lines() -> Vec<String> {
         .build(&tc);
     plan.add_h2d_tasks(&mut sched.sim, &h2d);
     lines.push(render_line("chaos:dropout-recovery/seq", &sched));
+
+    // whole-model L-layer pipeline timelines (build_model_sim): layer 0
+    // is the routed corpus table, layer 1 its +1-stride successor priced
+    // from chained sources under the block placement. L2S2 lines put
+    // layer 1 on stage 1's engines (c4..c7, m4..m7, l2..l3). The final
+    // line pins source-side D2H pricing: the replace-corpus
+    // block->affinity plan with each H2D write chained behind its d2h
+    // read-out (4096 B/expert over alpha=0.0625 beta=2048 -> 2.0625 s
+    // per moved expert on d<dev>). Mirror generate_model_lines8.
+    let rt0 = routed_table();
+    let idx1: Vec<i32> = rt0_shifted_indices();
+    let rt1 = RoutingTable::build(&idx1, &vec![1.0f32; 16], 16, 1, 4, 16);
+    let model_line = |name: &str, n_layers: usize, stages: usize,
+                      microbatches: usize, schedule: PipelineSchedule| {
+        let tabs: Vec<RoutingTable> =
+            [rt0.clone(), rt1.clone()][..n_layers].to_vec();
+        let ps = vec![Placement::new(4, 4); n_layers];
+        let costs = model_layer_costs(&base, &topo, 64, &tabs, &ps,
+                                      microbatches);
+        let spec = ModelSpec {
+            layers: vec![ScheduleSpec::new(MoEKind::ScMoE { k: 1 },
+                                           Strategy::Sequential); n_layers],
+            stages,
+            microbatches,
+            schedule,
+        };
+        let (sim, _) = build_model_sim(&spec, &costs, 4, 2);
+        render_spans(name, sim.run())
+    };
+    lines.push(model_line("model:L1/seq-m1", 1, 1, 1,
+                          PipelineSchedule::LayerSequential));
+    lines.push(model_line("model:L2/seq-m1", 2, 1, 1,
+                          PipelineSchedule::LayerSequential));
+    lines.push(model_line("model:L2/gpipe-m2", 2, 1, 2,
+                          PipelineSchedule::GPipe));
+    lines.push(model_line("model:L2/1f1b-m2", 2, 1, 2,
+                          PipelineSchedule::OneFOneB));
+    lines.push(model_line("model:L2S2/gpipe-m2", 2, 2, 2,
+                          PipelineSchedule::GPipe));
+    lines.push(model_line("model:L2S2/layerseq-m2", 2, 2, 2,
+                          PipelineSchedule::LayerSequential));
+    let affinity = Placement::affinity_packed(&rt0, 4, 2);
+    let plan = MigrationPlan::between(&block, &affinity, 4096);
+    let d2h = LinkModel::new(0.0625, 2048.0);
+    let tc = routed_fleet(&rt0, &block);
+    let mut sched = ScheduleSpec::new(MoEKind::ScMoE { k: 1 },
+                                      Strategy::Sequential)
+        .build(&tc);
+    plan.add_transfer_tasks(&mut sched.sim, &h2d, Some(&d2h), 0);
+    lines.push(render_line("model:d2h-migration/seq", &sched));
     lines
+}
+
+/// Layer 1's routing: every token's corpus-table expert shifted by +1
+/// mod 4 (a deterministic inter-layer transition, dyadic-exact).
+fn rt0_shifted_indices() -> Vec<i32> {
+    vec![0, 2, 0, 2, 2, 0, 0, 2, 1, 3, 3, 1, 3, 1, 3, 3]
+        .into_iter()
+        .map(|e| (e + 1) % 4)
+        .collect()
 }
 
 #[test]
@@ -367,7 +432,9 @@ fn golden_file_covers_every_kind_and_strategy() {
         "replace:block->affinity/overlap-s2", "replace:block->affinity/pipe2",
         "serve:wait1/step0", "serve:wait1/step2", "serve:mixed/seq",
         "chaos:straggler/seq", "chaos:degraded-uplink/overlap-s2",
-        "chaos:dropout-recovery/seq",
+        "chaos:dropout-recovery/seq", "model:L1/seq-m1", "model:L2/seq-m1",
+        "model:L2/gpipe-m2", "model:L2/1f1b-m2", "model:L2S2/gpipe-m2",
+        "model:L2S2/layerseq-m2", "model:d2h-migration/seq",
     ] {
         assert!(GOLDEN.contains(needle), "golden corpus is missing {needle}");
     }

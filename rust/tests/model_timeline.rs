@@ -1,0 +1,229 @@
+//! Acceptance tests for the whole-model pipeline simulator: the pinned
+//! `scmoe report model` grid on 32xA800-4node-IB (cross-layer
+//! co-placement strictly beats per-layer affinity packing; pipelined
+//! schedules beat layer-sequential at M >= 2), the live break-even row
+//! with D2H-priced migrations, the study-scale L=1 reduction to
+//! `run_replace_timeline`, the infinite-bandwidth D2H bit-exactness,
+//! and the zero-transition packer reduction. Every pinned number was
+//! minted through the validated DES mirror
+//! (`tools/des_mirror/mirror2.py --model-study`).
+
+use scmoe::cluster::{LinkModel, Scenario};
+use scmoe::coordinator::costs::{MoEKind, Strategy};
+use scmoe::coordinator::model::{
+    run_model_timeline, ModelConfig, ModelSpec, PipelineSchedule,
+    PlacementMode,
+};
+use scmoe::coordinator::replace::{
+    run_replace_timeline, ReplaceConfig, ReplacePolicy,
+};
+use scmoe::coordinator::spec::ScheduleSpec;
+use scmoe::moe::{
+    co_placed, AffinityEstimator, Placement, TransitionEstimator,
+};
+use scmoe::report::efficiency::xl_compute_costs;
+use scmoe::report::model_report::{
+    model_config, model_grid_placements, model_tables, run_model_cell,
+    study_d2h_link, MODEL_LAYERS, MODEL_MICROBATCHES,
+};
+use scmoe::report::replace::{
+    study_h2d_link, STUDY_BYTES_PER_EXPERT, STUDY_TOKEN_BYTES,
+};
+
+fn block_placements() -> Vec<Placement> {
+    (0..MODEL_LAYERS).map(|_| Placement::new(32, 32)).collect()
+}
+
+/// Total L-layer makespan of one static grid cell.
+fn cell_total(m: usize, schedule: PipelineSchedule,
+              initial: &[Placement]) -> f64 {
+    let tables = model_tables();
+    let cfg = model_config(m, schedule, ReplacePolicy::Never,
+                           PlacementMode::PerLayer, None);
+    run_model_cell(&tables, initial, &cfg).total
+}
+
+#[test]
+fn pinned_grid_at_one_microbatch() {
+    // m = 1: every schedule builds the same graph, so one schedule
+    // suffices; cross-layer < per-layer < block, strictly
+    let tables = model_tables();
+    let (per, cross) = model_grid_placements(&tables[0]);
+    let block = cell_total(1, PipelineSchedule::LayerSequential,
+                           &block_placements());
+    let p = cell_total(1, PipelineSchedule::LayerSequential, &per);
+    let c = cell_total(1, PipelineSchedule::LayerSequential, &cross);
+    assert!((block - 0.07365077901403508).abs() < 1e-12);
+    assert!((p - 0.07079783696140349).abs() < 1e-12);
+    assert!((c - 0.06517393062315788).abs() < 1e-12);
+    assert!(c < p && p < block, "cross {c} / per {p} / block {block}");
+    for schedule in [PipelineSchedule::GPipe, PipelineSchedule::OneFOneB] {
+        assert_eq!(cell_total(1, schedule, &cross), c,
+                   "m=1 schedules are graph-identical");
+    }
+}
+
+#[test]
+fn pinned_grid_at_four_microbatches() {
+    let tables = model_tables();
+    let (per, cross) = model_grid_placements(&tables[0]);
+    let block = block_placements();
+    let cell = |s, i: &[Placement]| cell_total(MODEL_MICROBATCHES, s, i);
+
+    let seq_b = cell(PipelineSchedule::LayerSequential, &block);
+    let seq_p = cell(PipelineSchedule::LayerSequential, &per);
+    let seq_c = cell(PipelineSchedule::LayerSequential, &cross);
+    assert!((seq_b - 0.2360365979929824).abs() < 1e-12);
+    assert!((seq_p - 0.2359304947649121).abs() < 1e-12);
+    // layer-sequential at m=4 hides the deeper layers' dispatch off the
+    // critical path, so per == cross here; the pipelined rows differ
+    assert_eq!(seq_c, seq_p);
+
+    let gp_b = cell(PipelineSchedule::GPipe, &block);
+    let gp_p = cell(PipelineSchedule::GPipe, &per);
+    let gp_c = cell(PipelineSchedule::GPipe, &cross);
+    assert!((gp_b - 0.2330006984701753).abs() < 1e-12);
+    assert!((gp_p - 0.2341155310035086).abs() < 1e-12);
+    assert!((gp_c - 0.23186532924912262).abs() < 1e-12);
+
+    let fb_b = cell(PipelineSchedule::OneFOneB, &block);
+    let fb_p = cell(PipelineSchedule::OneFOneB, &per);
+    let fb_c = cell(PipelineSchedule::OneFOneB, &cross);
+    assert!((fb_b - 0.23980425031578934).abs() < 1e-12);
+    assert!((fb_p - 0.2393018295438595).abs() < 1e-12);
+    assert!((fb_c - 0.23013790016280686).abs() < 1e-12);
+
+    // the headline: only the transition-aware packer beats both block
+    // and per-layer packing once the pipeline overlaps layers
+    assert!(gp_c < gp_b && gp_c < gp_p, "gpipe cross must win its row");
+    assert!(fb_c < fb_b && fb_c < fb_p, "1f1b cross must win its row");
+    // and pipelining beats layer-sequential under the winning placement
+    assert!(gp_c < seq_c && fb_c < seq_c,
+            "pipelined cross {gp_c}/{fb_c} vs layer-sequential {seq_c}");
+    assert!(gp_b < seq_b, "gpipe beats layer-sequential from block too");
+}
+
+#[test]
+fn pinned_live_break_even_row() {
+    // block start, break-even policy, cross-layer candidates, D2H-priced
+    // migrations on the m=4 GPipe pipeline — the report's live row
+    let tables = model_tables();
+    let cfg = model_config(MODEL_MICROBATCHES, PipelineSchedule::GPipe,
+                           ReplacePolicy::BreakEven,
+                           PlacementMode::CrossLayer,
+                           Some(study_d2h_link()));
+    let out = run_model_cell(&tables, &block_placements(), &cfg);
+    assert!((out.total - 0.2322055117754384).abs() < 1e-12);
+    assert_eq!(out.migrations, 2);
+    let expect = [0.05871754753684207, 0.057894432252631536,
+                  0.05784752355087714, 0.05774600843508767];
+    assert_eq!(out.steps.len(), expect.len());
+    for (st, e) in out.steps.iter().zip(expect) {
+        assert!((st.makespan - e).abs() < 1e-12,
+                "step {}: {} vs {e}", st.step, st.makespan);
+    }
+    assert_eq!(out.final_placements.len(), MODEL_LAYERS);
+}
+
+#[test]
+fn single_layer_model_reduces_to_replace_timeline_at_study_scale() {
+    // L = 1 / S = 1 / M = 1 over the study's layer-0 streams: the model
+    // timeline must equal run_replace_timeline field-for-field with ==
+    let topo = Scenario::FourNodeA800IBx32.topology();
+    let base = xl_compute_costs();
+    let tables: Vec<_> = model_tables().iter()
+        .map(|step| step[0].clone())
+        .collect();
+    let model_tables: Vec<_> = tables.iter()
+        .map(|t| vec![t.clone()])
+        .collect();
+    let spec = ScheduleSpec::new(MoEKind::ScMoE { k: 1 },
+                                 Strategy::Sequential);
+    let initial = Placement::new(32, 32);
+    for policy in [ReplacePolicy::Never, ReplacePolicy::EveryK { k: 2 },
+                   ReplacePolicy::BreakEven] {
+        let rcfg = ReplaceConfig {
+            spec: spec.clone(),
+            policy,
+            bytes_per_expert: STUDY_BYTES_PER_EXPERT,
+            h2d: study_h2d_link(),
+            d2h_link: None,
+            decay: 1.0,
+        };
+        let mcfg = ModelConfig {
+            spec: ModelSpec {
+                layers: vec![spec.clone()],
+                stages: 1,
+                microbatches: 1,
+                schedule: PipelineSchedule::LayerSequential,
+            },
+            policy,
+            bytes_per_expert: STUDY_BYTES_PER_EXPERT,
+            h2d: study_h2d_link(),
+            d2h: None,
+            decay: 1.0,
+            mode: PlacementMode::CrossLayer,
+        };
+        let r = run_replace_timeline(&base, &topo, STUDY_TOKEN_BYTES,
+                                     &tables, &initial, &rcfg);
+        let m = run_model_timeline(&base, &topo, STUDY_TOKEN_BYTES,
+                                   &model_tables, &[initial.clone()], &mcfg);
+        assert_eq!(r.total, m.total, "{policy:?}");
+        assert_eq!(r.migrations, m.migrations);
+        assert_eq!(r.steps.len(), m.steps.len());
+        for (a, b) in r.steps.iter().zip(&m.steps) {
+            assert_eq!(a.makespan, b.makespan);
+            assert_eq!(a.base_makespan, b.base_makespan);
+            assert_eq!(a.migrated, b.migrated);
+            assert_eq!(a.migration_bytes, b.migration_bytes);
+            assert_eq!(a.migration_time, b.migration_time);
+        }
+        for e in 0..32 {
+            assert_eq!(r.final_placement.device_of(e),
+                       m.final_placements[0].device_of(e));
+        }
+    }
+}
+
+#[test]
+fn infinite_bandwidth_d2h_is_bit_exact() {
+    // a zero-latency, infinite-bandwidth source read-out adds spans of
+    // zero duration: every makespan and decision must match d2h = None
+    let tables = model_tables();
+    let free = Some(LinkModel::new(0.0, f64::INFINITY));
+    for d2h in [None, free] {
+        let cfg = model_config(MODEL_MICROBATCHES, PipelineSchedule::GPipe,
+                               ReplacePolicy::BreakEven,
+                               PlacementMode::CrossLayer, d2h);
+        let out = run_model_cell(&tables, &block_placements(), &cfg);
+        // both branches land on the same priced-migration totals
+        let cfg0 = model_config(MODEL_MICROBATCHES, PipelineSchedule::GPipe,
+                                ReplacePolicy::BreakEven,
+                                PlacementMode::CrossLayer, None);
+        let base = run_model_cell(&tables, &block_placements(), &cfg0);
+        assert_eq!(out.total, base.total);
+        assert_eq!(out.migrations, base.migrations);
+        for (a, b) in out.steps.iter().zip(&base.steps) {
+            assert_eq!(a.makespan, b.makespan);
+            assert_eq!(a.migration_time, b.migration_time);
+        }
+    }
+}
+
+#[test]
+fn zero_transition_packer_reduces_to_per_layer_at_study_scale() {
+    // with no observed transitions the cross-layer packer has no chain
+    // signal, so co_placed == affinity-packed for the measured counts
+    let tables0 = &model_tables()[0];
+    for rt in tables0 {
+        let mut est = AffinityEstimator::counting(32, 4);
+        est.observe(rt, 32, 8);
+        let packed = est.packed(32, 8);
+        let empty = TransitionEstimator::counting(32);
+        let co = co_placed(est.matrix(), &empty, &Placement::new(32, 32),
+                           32, 8);
+        for e in 0..32 {
+            assert_eq!(co.device_of(e), packed.device_of(e));
+        }
+    }
+}

@@ -101,6 +101,7 @@ fn static_stream_reduces_to_single_step_schedules() {
         policy: ReplacePolicy::Never,
         bytes_per_expert: 4096,
         h2d: LinkModel::new(0.125, 1024.0),
+        d2h_link: None,
         decay: 1.0,
     };
     let tables = vec![rt; 4];

@@ -17,8 +17,8 @@ use scmoe::report::replace::{
     STUDY_TOKEN_BYTES,
 };
 use scmoe::report::serve_report::{
-    knee_load, run_serve_cell, serve_spec, SERVE_BUDGET, SERVE_LOADS,
-    SERVE_REQUESTS, SERVE_SLO,
+    hetero_requests, knee_load, run_hetero_cell, run_serve_cell, serve_spec,
+    SERVE_BUDGET, SERVE_LOADS, SERVE_REQUESTS, SERVE_SLO,
 };
 use scmoe::serve::{
     run_serve, trace_arrivals, BatchPolicy, ServeConfig, TrafficProfile,
@@ -271,4 +271,59 @@ fn knee_helper_picks_the_largest_load_within_slo() {
     assert_eq!(knee_load(&cells), Some(240.0));
     let none = vec![(120.0, mk(0.9))];
     assert_eq!(knee_load(&none), None);
+}
+
+#[test]
+fn hetero_trace_alternates_shapes_on_the_same_instants() {
+    let homo = scmoe::report::serve_report::serve_requests(SERVE_LOADS[1]);
+    let hetero = hetero_requests(SERVE_LOADS[1]);
+    assert_eq!(hetero.len(), homo.len());
+    for (i, (h, r)) in hetero.iter().zip(&homo).enumerate() {
+        assert_eq!(h.id, i);
+        assert_eq!(h.arrival, r.arrival); // same Poisson instants, bit-exact
+        if i % 2 == 0 {
+            assert_eq!((h.prefill_tokens, h.decode_steps), (1024, 2));
+        } else {
+            assert_eq!((h.prefill_tokens, h.decode_steps), (4096, 8));
+        }
+    }
+}
+
+#[test]
+fn pinned_hetero_cells_match_the_mirror() {
+    // minted via mirror2.py --serve-hetero-study
+    let budget = BatchPolicy::TokenBudget { budget: SERVE_BUDGET };
+    let out = run_hetero_cell(SERVE_LOADS[1], Strategy::Overlap, budget,
+                              ReplacePolicy::Never);
+    assert_eq!(out.steps.len(), 75);
+    assert_eq!(out.migrations, 0);
+    assert!((out.p50() - 0.03461212612973931).abs() < 1e-12);
+    assert!((out.p99() - 0.039643354559919436).abs() < 1e-12);
+    assert!((out.throughput() - 208.5524638669676).abs() < 1e-9);
+    assert!((out.goodput(SERVE_SLO) - 104.2762319334838).abs() < 1e-9);
+
+    let be = run_hetero_cell(SERVE_LOADS[2], Strategy::Sequential, budget,
+                             ReplacePolicy::BreakEven);
+    assert_eq!(be.steps.len(), 45);
+    assert_eq!(be.migrations, 1);
+    assert!((be.p50() - 0.03485513348564934).abs() < 1e-12);
+    assert!((be.p99() - 0.04598329716723735).abs() < 1e-12);
+}
+
+#[test]
+fn hetero_slo_bifurcates_by_request_shape() {
+    // every short request (half the trace) meets the SLO, no long one
+    // does, so goodput is exactly half of throughput at every cell
+    let budget = BatchPolicy::TokenBudget { budget: SERVE_BUDGET };
+    for &load in &SERVE_LOADS {
+        for strategy in [Strategy::Sequential, Strategy::Overlap] {
+            let out = run_hetero_cell(load, strategy, budget,
+                                      ReplacePolicy::Never);
+            let within = out.latencies.iter()
+                .filter(|&&l| l <= SERVE_SLO).count();
+            assert_eq!(within, SERVE_REQUESTS / 2,
+                       "{load} req/s {}", strategy.label());
+            assert_eq!(out.goodput(SERVE_SLO) * 2.0, out.throughput());
+        }
+    }
 }

@@ -45,6 +45,8 @@ def resource_token(r):
         return f'l{r[1]}'
     if kind == 'h2d':
         return f'h{r[1]}'
+    if kind == 'd2h':
+        return f'd{r[1]}'
     return 'f'
 
 
@@ -553,12 +555,14 @@ class BlockCosts3:
 
 
 class ChunkSource:
-    def __init__(self, rt, placement, token_bytes, intra_links, inter):
+    def __init__(self, rt, placement, token_bytes, intra_links, inter,
+                 sources=None):
         self.rt = rt
         self.placement = placement
         self.token_bytes = token_bytes
         self.intra_links = intra_links
         self.inter = inter
+        self.sources = sources  # PR8: per-token source devices, or None
 
 
 def chunk_rt(rt, chunks):
@@ -653,7 +657,13 @@ class TopoCosts3:
             scale = float(k) / kf
             di, dx, ci, cx = [], [], [], []
             for part in chunk_rt(src.rt, chunks):
-                disp = part.a2a_bytes_placed(src.placement, src.token_bytes)
+                if src.sources is None:
+                    disp = part.a2a_bytes_placed(src.placement,
+                                                 src.token_bytes)
+                else:
+                    disp = a2a_bytes_from_sources8(part, src.sources,
+                                                   src.placement,
+                                                   src.token_bytes)
                 comb = transpose(disp, n)
                 pdi, pdx, _, _ = a2a_decompose_pn3(
                     disp, n, self.devices_per_node, src.intra_links, src.inter)
@@ -3235,6 +3245,772 @@ def consistency_checks7():
     print('PR7 consistency checks: OK')
 
 
+# ======================================================================
+# PR 8 model: whole-model simulation — L-layer pipeline-parallel MoE
+# timelines with inter-layer affinity placement. Transcribes the
+# post-PR8 Rust line-by-line:
+#   simtime/engine.rs       -> Resource::D2H ('d2h' engines, d<dev> token)
+#   moe/router.rs           -> primary_experts, a2a_bytes_from_sources
+#   moe/transition.rs       -> TransitionEstimator8, co_placed8
+#   moe/traffic.rs          -> correlated_layer_routing8
+#   coordinator/costs.rs    -> sources-aware ChunkSource +
+#                              topo_from_routing8 (from_routing_with_sources)
+#   coordinator/replace.rs  -> plan_add_transfer_tasks8 /
+#                              plan_transfer_time8 (source-side D2H)
+#   coordinator/model.rs    -> build_model_sim8, chained_sources8,
+#                              model_layer_costs8, run_model_timeline8
+# ======================================================================
+
+
+def d2h(d):
+    return ("d2h", d)
+
+
+def primary_experts8(rt):
+    """RoutingTable::primary_experts — each token's first kept k-slot-0
+    expert, None for tokens whose primary route dropped."""
+    primary = [None] * rt.n_tokens
+    for (t, kk, e, slot, w) in rt.routes:
+        if kk == 0 and primary[t] is None:
+            primary[t] = e
+    return primary
+
+
+def a2a_bytes_from_sources8(rt, sources, placement, token_bytes):
+    """RoutingTable::a2a_bytes_from_sources — the dispatch byte matrix
+    priced from an explicit per-token source-device map instead of the
+    even index-order home split."""
+    assert placement.n_experts == rt.n_experts
+    assert len(sources) == rt.n_tokens
+    n_devices = placement.n_devices
+    mat = [0] * (n_devices * n_devices)
+    for (t, kk, e, slot, w) in rt.routes:
+        src = sources[t]
+        assert src < n_devices
+        dst = placement.device_of(e)
+        mat[src * n_devices + dst] += token_bytes
+    return mat
+
+
+def topo_from_routing8(base, topo, rt, placement, token_bytes, sources=None,
+                       node_intra=None):
+    """TopoCosts::from_routing_with_sources + ExpertLoad — identical to
+    topo_from_routing4 except the dispatch matrix (and the recorded
+    ChunkSource) may come from explicit per-token sources."""
+    n = topo.n_devices
+    links = topo_intra_links(topo, node_intra)
+    if sources is None:
+        disp = rt.a2a_bytes_placed(placement, token_bytes)
+    else:
+        disp = a2a_bytes_from_sources8(rt, sources, placement, token_bytes)
+    comb = transpose(disp, n)
+    pdi, pdx, pdia, pdxa = a2a_decompose_pn3(
+        disp, n, topo.devices_per_node, links, topo.inter)
+    pci, pcx, pcia, pcxa = a2a_decompose_pn3(
+        comb, n, topo.devices_per_node, links, topo.inter)
+    kf = float(max(rt.k, 1))
+    scale = lambda v: [x / kf for x in v]
+    td, ad = a2a_time_split_pn(disp, n, topo.devices_per_node, links,
+                               topo.inter)
+    tcm, acm = a2a_time_split_pn(comb, n, topo.devices_per_node, links,
+                                 topo.inter)
+    if tcm > td:
+        flat, flat_a = tcm / kf, acm / kf
+    else:
+        flat, flat_a = td / kf, ad / kf
+    per_device = []
+    for d in range(n):
+        s = topo.device_compute_scale(d)
+        per_device.append(BlockCosts3(base.attn / s, base.mlp / s, base.se / s,
+                                      base.gate / s, base.encode / s,
+                                      base.decode / s, base.expert_k1 / s,
+                                      flat, flat_a))
+    tc3 = TopoCosts3(per_device, scale(pdi), scale(pdx),
+                     topo.devices_per_node,
+                     intra_c=scale(pci), inter_c=scale(pcx),
+                     intra_a=scale(pdia), inter_a=scale(pdxa),
+                     intra_ca=scale(pcia), inter_ca=scale(pcxa),
+                     chunk_source=ChunkSource(rt, placement, token_bytes,
+                                              links, topo.inter, sources))
+    return TopoCosts4(tc3, ExpertLoad.from_routing(rt, placement))
+
+
+def plan_add_transfer_tasks8(plan, sim, h2d_link, d2h_link=None,
+                             device_offset=0):
+    """MigrationPlan::add_transfer_tasks — with a D2H link each move
+    first reads out on the source device's d2h engine and the H2D write
+    depends on it; without one the legacy dependency-free H2D tasks are
+    emitted bit-exactly. device_offset lands a layer's migration on its
+    pipeline stage's engines."""
+    out = []
+    for (e, f, t, b) in plan.moves:
+        deps = []
+        if d2h_link is not None:
+            deps = [sim.add(f"D2H-E{e}", d2h(f + device_offset),
+                            transfer_time(d2h_link, b), [])]
+        out.append(sim.add(f"H2D-E{e}", h2d(t + device_offset),
+                           transfer_time(h2d_link, b), deps))
+    return out
+
+
+def plan_transfer_time8(plan, h2d_link, d2h_link=None):
+    """MigrationPlan::transfer_time — analytic per-destination
+    serialization without D2H; a scratch DES of exactly the transfer
+    tasks with it (source-engine stalls are simulated, not summed)."""
+    if d2h_link is None:
+        return plan.time(h2d_link)
+    sim = Sim()
+    plan_add_transfer_tasks8(plan, sim, h2d_link, d2h_link, 0)
+    return sim.makespan()
+
+
+def correlated_layer_routing8(prev, n_experts, stride, noise, seed):
+    """moe::traffic::correlated_layer_routing — ExFlow-style inter-layer
+    correlated k=1 routing: with probability 1-noise a token routes to
+    (prev_primary + stride) % n_experts; otherwise (or when its primary
+    dropped) it scatters uniformly. One next_f64 per token plus one
+    below() on the scatter branches."""
+    assert prev.n_experts == n_experts
+    n_tokens = prev.n_tokens
+    assert n_tokens > 0
+    primary = primary_experts8(prev)
+    rng = Rng(seed)
+    indices = []
+    weights = [1.0] * n_tokens
+    for t in range(n_tokens):
+        if rng.next_f64() < noise:
+            e = rng.below(n_experts)
+        elif primary[t] is not None:
+            e = (primary[t] + stride) % n_experts
+        else:
+            e = rng.below(n_experts)
+        indices.append(e)
+    return RoutingTable(indices, weights, n_tokens, 1, n_experts, n_tokens)
+
+
+class TransitionEstimator8:
+    """moe::TransitionEstimator — discounted [prev_expert, next_expert]
+    primary-route transition counts over adjacent-layer table pairs."""
+
+    def __init__(self, n_experts, decay):
+        assert n_experts > 0
+        assert 0.0 < decay <= 1.0
+        self.n_experts = n_experts
+        self.decay = decay
+        self.counts = [0.0] * (n_experts * n_experts)
+        self.steps = 0
+
+    def observe(self, prev, next_):
+        assert prev.n_experts == self.n_experts
+        assert next_.n_experts == self.n_experts
+        assert prev.n_tokens == next_.n_tokens
+        pe = primary_experts8(prev)
+        ne = primary_experts8(next_)
+        obs = [0] * (self.n_experts * self.n_experts)
+        for t in range(prev.n_tokens):
+            if pe[t] is not None and ne[t] is not None:
+                obs[pe[t] * self.n_experts + ne[t]] += 1
+        for i in range(len(self.counts)):
+            self.counts[i] = self.decay * self.counts[i] + float(obs[i])
+        self.steps += 1
+
+    def count(self, e, f):
+        return self.counts[e * self.n_experts + f]
+
+
+def co_placed8(aff, trans, prev, n_devices, devices_per_node):
+    """moe::co_placed — ExFlow-style cross-layer co-placement: each
+    next-layer expert's affinity row is augmented with the transition
+    counts arriving from every previous-layer expert's resident node,
+    then fed to the same greedy packer. Zero transition counts reduce
+    bit-exactly to affinity_packed_measured on aff alone."""
+    assert devices_per_node > 0 and n_devices % devices_per_node == 0
+    n_nodes = n_devices // devices_per_node
+    n_experts = trans.n_experts
+    assert len(aff) == n_experts * n_nodes
+    assert prev.n_experts == n_experts
+    combined = list(aff)
+    for e in range(n_experts):
+        node = prev.device_of(e) // devices_per_node
+        for f in range(n_experts):
+            combined[f * n_nodes + node] += trans.count(e, f)
+    return affinity_packed_measured(combined, n_experts, n_devices,
+                                    devices_per_node)
+
+
+def chained_sources8(prev, prev_placement):
+    """coordinator::model::chained_sources — where each token's
+    activations sit when the next layer dispatches: the device owning
+    its previous primary expert, or its home device if that dropped."""
+    n_devices = prev_placement.n_devices
+    tokens_per_device = -(-prev.n_tokens // n_devices)
+    out = []
+    for t, p in enumerate(primary_experts8(prev)):
+        if p is not None:
+            out.append(prev_placement.device_of(p))
+        else:
+            out.append(min(t // tokens_per_device, n_devices - 1))
+    return out
+
+
+def model_layer_costs8(base, topo, token_bytes, layer_tables, placements,
+                       microbatches):
+    """coordinator::model::model_layer_costs — costs[l][m]: layer 0 from
+    home sources, layer l >= 1 from the chained sources its
+    predecessor's placement implies; parts keep parent token ids so one
+    source vector per layer serves every microbatch."""
+    assert len(layer_tables) == len(placements)
+    out = []
+    for l, rt in enumerate(layer_tables):
+        if l == 0:
+            sources = None
+        else:
+            sources = chained_sources8(layer_tables[l - 1],
+                                       placements[l - 1])
+        placement = placements[l]
+        cost_of = lambda part: topo_from_routing8(base, topo, part,
+                                                  placement, token_bytes,
+                                                  sources)
+        if microbatches == 1:
+            row = [cost_of(rt)]
+        else:
+            row = [cost_of(p) for p in chunk_rt(rt, microbatches)]
+        out.append(row)
+    return out
+
+
+# PipelineSchedule labels (shared with the Rust study tables)
+LAYERSEQ = 'layerseq'
+GPIPE = 'gpipe'
+ONEFONEB = '1f1b'
+
+
+def remap_res8(res, stage, devices_per_stage, nodes_per_stage):
+    """coordinator::model::remap_resource — device engines shift by
+    stage * devices_per_stage, links by stage * nodes_per_stage."""
+    kind = res[0]
+    if kind in ('compute', 'comm', 'h2d', 'd2h'):
+        return (kind, res[1] + stage * devices_per_stage)
+    if kind == 'link':
+        return (kind, res[1] + stage * nodes_per_stage)
+    return res
+
+
+def build_model_sim8(layers, stages, microbatches, schedule, costs,
+                     devices_per_stage, nodes_per_stage):
+    """coordinator::model::build_model_sim — layers is a list of
+    (kind, strat, slot, pipelining) spec tuples, costs[l][m] prices
+    layer l over microbatch m. Each pair graph is embedded with
+    resources remapped onto its stage, in-graph deps offset, roots
+    chained behind the schedule's required joins, and capped with a
+    zero-duration Join-L{l}M{m} task. Insertion order is layer-major
+    for layerseq, microbatch-major for the pipelined schedules (1F1B's
+    window dep needs mb-S's last join to already exist)."""
+    n_layers = len(layers)
+    assert n_layers >= 1 and stages >= 1 and microbatches >= 1
+    assert n_layers % stages == 0
+    lps = n_layers // stages
+    sim = Sim()
+    joins = [[0] * microbatches for _ in range(n_layers)]
+
+    def embed(l, mb):
+        if schedule == LAYERSEQ:
+            roots = list(joins[l - 1]) if l > 0 else []
+        else:
+            roots = [joins[l - 1][mb]] if l > 0 else []
+        if schedule == ONEFONEB and l == 0 and mb >= stages:
+            roots.append(joins[n_layers - 1][mb - stages])
+        stage = l // lps
+        kind, strat, slot, pipelining = layers[l]
+        pair = build_spec4(costs[l][mb], kind, strat, slot, pipelining)
+        off = len(sim.tasks)
+        count = len(pair.tasks)
+        for (label, res, dur, deps) in pair.tasks:
+            nd = list(roots) if not deps else [d + off for d in deps]
+            sim.add(label, remap_res8(res, stage, devices_per_stage,
+                                      nodes_per_stage), dur, nd)
+        joins[l][mb] = sim.add(f"Join-L{l}M{mb}", FREE, 0.0,
+                               list(range(off, off + count)))
+
+    if schedule == LAYERSEQ:
+        for l in range(n_layers):
+            for mb in range(microbatches):
+                embed(l, mb)
+    else:
+        for mb in range(microbatches):
+            for l in range(n_layers):
+                embed(l, mb)
+    return sim, joins
+
+
+def run_model_timeline8(base, topo, token_bytes, tables, initial, layers,
+                        stages, microbatches, schedule, policy,
+                        bytes_per_expert, h2d_link, d2h_link, decay, mode):
+    """coordinator::model::run_model_timeline — tables[step][layer],
+    one placement per layer; mode = 'per-layer' | 'cross-layer'.
+    Returns (steps, total, migrations, placements) with steps =
+    (step, makespan, base_makespan, migrated, bytes, mig_time)."""
+    n_layers = len(layers)
+    assert tables
+    assert len(initial) == n_layers
+    n_nodes = topo.n_devices // topo.devices_per_node
+    ests = [AffinityEstimator(p.n_experts, n_nodes, decay) for p in initial]
+    trans = [TransitionEstimator8(initial[l].n_experts, decay)
+             for l in range(n_layers - 1)]
+    placements = list(initial)
+    steps = []
+    total = 0.0
+    migrations = 0
+    n_steps = len(tables)
+
+    def candidates_of():
+        if mode == 'per-layer':
+            return [e.packed(topo.n_devices, topo.devices_per_node)
+                    for e in ests]
+        out = [ests[0].packed(topo.n_devices, topo.devices_per_node)]
+        for l in range(1, n_layers):
+            out.append(co_placed8(ests[l].counts, trans[l - 1], out[l - 1],
+                                  topo.n_devices, topo.devices_per_node))
+        return out
+
+    for s, layer_tables in enumerate(tables):
+        def model_sim(pl):
+            costs = model_layer_costs8(base, topo, token_bytes,
+                                       layer_tables, pl, microbatches)
+            return build_model_sim8(layers, stages, microbatches, schedule,
+                                    costs, topo.n_devices, n_nodes)[0]
+        sim = model_sim(placements)
+        base_makespan = sim.makespan()
+        for l, rt in enumerate(layer_tables):
+            ests[l].observe(rt, topo.n_devices, topo.devices_per_node)
+        for l in range(n_layers - 1):
+            trans[l].observe(layer_tables[l], layer_tables[l + 1])
+        remaining = n_steps - s - 1
+        migrated = False
+        mig_bytes = 0
+        mig_time = 0.0
+        if remaining > 0 and policy[0] != 'never':
+            candidates = candidates_of()
+            plans = [MigrationPlan.between(placements[l], candidates[l],
+                                           bytes_per_expert)
+                     for l in range(n_layers)]
+            if any(not p.is_empty() for p in plans):
+                # layers migrate concurrently on their own stages'
+                # engines: the model-level transfer time is the slowest
+                # layer plan's
+                mig = 0.0
+                for p in plans:
+                    mig = max(mig, plan_transfer_time8(p, h2d_link,
+                                                       d2h_link))
+                overhead = max(0.0, mig - base_makespan)
+                if policy[0] == 'break-even':
+                    saving = base_makespan - model_sim(candidates).makespan()
+                else:
+                    saving = 0.0
+                if should_migrate(policy, s, remaining, saving, overhead):
+                    for l, p in enumerate(plans):
+                        if not p.is_empty():
+                            plan_add_transfer_tasks8(
+                                p, sim, h2d_link, d2h_link,
+                                (l // (n_layers // stages)) * topo.n_devices)
+                    migrated = True
+                    mig_bytes = sum(p.total_bytes() for p in plans)
+                    mig_time = mig
+                    placements = candidates
+                    migrations += 1
+        makespan = sim.makespan() if migrated else base_makespan
+        total += makespan
+        steps.append((s, makespan, base_makespan, migrated, mig_bytes,
+                      mig_time))
+    return steps, total, migrations, placements
+
+
+# --- PR8 golden corpus additions --------------------------------------
+
+MODEL_SEQ_SPEC = (('scmoe', 1), ('seq',), 0, STAGED)
+MODEL_D2H_LINK = LinkModel(0.0625, 2048.0)
+
+
+def generate_model_lines8():
+    """Whole-model goldens on the dyadic routed fleet: layer 0 is the
+    routed corpus table, layer 1 its +1-stride successor (chained
+    sources under the block placement), all dyadic-exact. The final line
+    pins source-side D2H pricing: the replace-corpus block->affinity
+    plan with each H2D write chained behind its d2h read-out
+    (0.0625 + 4096/2048 = 2.0625 s per moved expert on d<dev>)."""
+    rt0 = routed_table3()
+    idx1 = [(e + 1) % 4
+            for e in [0, 2, 0, 2, 2, 0, 0, 2, 1, 3, 3, 1, 3, 1, 3, 3]]
+    rt1 = RoutingTable(idx1, [1.0] * 16, 16, 1, 4, 16)
+    topo = Topology(4, 2, LinkModel(0.0625, 1024.0), LinkModel(0.125, 512.0),
+                    1.0, None)
+    base = ComputeCosts(1.0, 0.75, 0.75, 0.0625, 0.0625, 0.0625, 0.5)
+    block = Placement.block(4, 4)
+    lines = []
+
+    def model_line(name, n_layers, stages, microbatches, schedule):
+        tabs = [rt0, rt1][:n_layers]
+        pls = [block] * n_layers
+        costs = model_layer_costs8(base, topo, 64, tabs, pls, microbatches)
+        sim, _ = build_model_sim8([MODEL_SEQ_SPEC] * n_layers, stages,
+                                  microbatches, schedule, costs, 4, 2)
+        return render_line(name, sim)
+
+    lines.append(model_line('model:L1/seq-m1', 1, 1, 1, LAYERSEQ))
+    lines.append(model_line('model:L2/seq-m1', 2, 1, 1, LAYERSEQ))
+    lines.append(model_line('model:L2/gpipe-m2', 2, 1, 2, GPIPE))
+    lines.append(model_line('model:L2/1f1b-m2', 2, 1, 2, ONEFONEB))
+    lines.append(model_line('model:L2S2/gpipe-m2', 2, 2, 2, GPIPE))
+    lines.append(model_line('model:L2S2/layerseq-m2', 2, 2, 2, LAYERSEQ))
+    affinity = Placement.affinity_packed(rt0, 4, 2)
+    plan = MigrationPlan.between(block, affinity, REPLACE_BYTES_PER_EXPERT)
+    sim = build_spec4(routed_fleet4(rt0, block), ('scmoe', 1), ('seq',), 0)
+    plan_add_transfer_tasks8(plan, sim, REPLACE_H2D_LINK, MODEL_D2H_LINK, 0)
+    lines.append(render_line('model:d2h-migration/seq', sim))
+    return lines
+
+
+def generate_corpus_lines8():
+    return generate_corpus_lines7() + generate_model_lines8()
+
+
+def validate_corpus8():
+    golden_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                               '..', '..', 'rust', 'tests', 'golden',
+                               'timelines.txt')
+    golden = [l for l in open(golden_path).read().splitlines()
+              if l.strip() and not l.startswith('#')]
+    lines = generate_corpus_lines8()
+    bad = 0
+    if len(golden) != len(lines):
+        print(f'line-count mismatch: golden {len(golden)} vs mirror {len(lines)}')
+        bad += 1
+    for g, cu in zip(golden, lines):
+        if g != cu:
+            bad += 1
+            print('- ' + g)
+            print('+ ' + cu)
+    print(f'golden corpus (PR8 model): {len(lines)} lines, {bad} mismatches')
+    return bad == 0
+
+
+def emit_corpus8(path):
+    keep = CORPUS_HEADER3.splitlines()
+    lines = generate_corpus_lines8()
+    routed_at = next(i for i, l in enumerate(lines) if l.startswith('routed:'))
+    routed_comment = [
+        '# Routed-placement scenarios (dyadic 4-device/2-node fleet; see',
+        '# routed_table/routed_fleet in golden_timelines.rs).',
+    ]
+    replace_at = next(i for i, l in enumerate(lines)
+                      if l.startswith('replace:'))
+    replace_comment = [
+        '# Live re-placement migration steps: the routed block-placement',
+        '# schedules with the block->affinity MigrationPlan overlapped in',
+        '# as dependency-free H2D tasks (h<dev> rows; 4096 B/expert over',
+        '# an alpha=0.125 beta=1024 H2D link -> 4.125 s per moved expert).',
+        '# The pre-existing spans are byte-identical to the routed:block',
+        '# entries above (pinned by mirror consistency_checks5).',
+    ]
+    serve_at = next(i for i, l in enumerate(lines) if l.startswith('serve:'))
+    serve_comment = [
+        '# Open-loop serving steps: phase_affine_routing batches priced',
+        '# on the routed fleet under the block placement. serve:wait1/*',
+        '# pins the serving loop\'s per-step traffic-seed advance (seeds',
+        '# 97..99, uniform noise 0.25); serve:mixed pins the prefill/',
+        '# decode noise split (8 exact prompt tokens + 8 tokens at 0.5).',
+    ]
+    chaos_at = next(i for i, l in enumerate(lines) if l.startswith('chaos:'))
+    chaos_comment = [
+        '# Chaos perturbations on the routed block fleet (all rng-free,',
+        '# so every span stays dyadic-exact): a persistent 2x straggler',
+        '# on device 3, a degraded shared uplink (alpha x2, beta /4 ->',
+        '# LinkModel(0.25, 128)), and a device-3 dropout whose failover',
+        '# plan (E3 -> device 0, lowest-id tie) overlaps the step as an',
+        '# H2D task over the replace-corpus link (4.125 s).',
+    ]
+    model_at = next(i for i, l in enumerate(lines) if l.startswith('model:'))
+    model_comment = [
+        '# Whole-model L-layer pipeline timelines (build_model_sim):',
+        '# layer 0 is the routed corpus table, layer 1 its +1-stride',
+        '# successor priced from chained sources under the block',
+        '# placement. L2S2 lines put layer 1 on stage 1\'s engines',
+        '# (c4..c7, m4..m7, l2..l3). model:d2h-migration chains each',
+        '# H2D write behind its source-side D2H read-out (d<dev> rows;',
+        '# 4096 B/expert over alpha=0.0625 beta=2048 -> 2.0625 s).',
+    ]
+    body = (lines[:routed_at] + routed_comment + lines[routed_at:replace_at]
+            + replace_comment + lines[replace_at:serve_at]
+            + serve_comment + lines[serve_at:chaos_at]
+            + chaos_comment + lines[chaos_at:model_at]
+            + model_comment + lines[model_at:])
+    with open(path, 'w') as f:
+        f.write('\n'.join(keep) + '\n' + '\n'.join(body) + '\n')
+    print(f'emitted {len(lines)} corpus lines to {path}')
+
+
+# --- PR8 study scenario (the numbers pinned in rust/tests/ ------------
+# model_timeline.rs and quoted in docs/STUDIES.md are minted here) -----
+
+MODEL_NOISE = 1.0
+MODEL_CORR_NOISE = 0.05
+MODEL_STRIDE = 5
+MODEL_LAYERS = 4
+MODEL_STAGES = 2
+MODEL_STEPS = 4
+MODEL_SEED = 211
+MODEL_STUDY_D2H = LinkModel(10e-6, 32e9)
+
+
+def model_tables8(n_steps, n_layers, seed0):
+    """One row of per-layer tables per step: layer 0 fully uniform
+    (noise 1.0 -> a token's home node predicts nothing, so the
+    home-anchored affinity counts are flat to sampling noise at every
+    depth), while deeper layers follow the +MODEL_STRIDE expert
+    transition almost deterministically (noise 0.05). A deterministic
+    expert->expert permutation propagates any home tilt perfectly, so
+    with home-affine layer-0 traffic per-layer packing co-places chains
+    by accident; only with the home signal gone does the measured
+    inter-layer transition carry information the per-layer packer cannot
+    see — exactly the correlation ExFlow exploits."""
+    out = []
+    for s in range(n_steps):
+        row = [phase_affine_routing(32, 8, 32,
+                                    32 * REPLACE_STUDY_TOKENS, 0, 0,
+                                    MODEL_NOISE, MODEL_NOISE,
+                                    seed0 + 100 * s)]
+        for l in range(1, n_layers):
+            row.append(correlated_layer_routing8(row[-1], 32, MODEL_STRIDE,
+                                                 MODEL_CORR_NOISE,
+                                                 seed0 + 100 * s + l))
+        out.append(row)
+    return out
+
+
+def model_grid_placements8(tables0):
+    """Warm-started per-layer and cross-layer placements from the step-0
+    tables (counting estimators, one observation each) — the static
+    endpoints of the report grid."""
+    n_layers = len(tables0)
+    ests = [AffinityEstimator(32, 4, 1.0) for _ in range(n_layers)]
+    for l, rt in enumerate(tables0):
+        ests[l].observe(rt, 32, 8)
+    trans = [TransitionEstimator8(32, 1.0) for _ in range(n_layers - 1)]
+    for l in range(n_layers - 1):
+        trans[l].observe(tables0[l], tables0[l + 1])
+    per = [e.packed(32, 8) for e in ests]
+    cross = [ests[0].packed(32, 8)]
+    for l in range(1, n_layers):
+        cross.append(co_placed8(ests[l].counts, trans[l - 1], cross[l - 1],
+                                32, 8))
+    return per, cross
+
+
+def model_cell8(tables, initial, microbatches, schedule, policy, mode,
+                d2h_link=None):
+    topo = SCENARIOS['4node-ib']
+    return run_model_timeline8(
+        xl_compute_costs(), topo, REPLACE_STUDY_BYTES, tables, initial,
+        [MODEL_SEQ_SPEC] * MODEL_LAYERS, MODEL_STAGES, microbatches,
+        schedule, policy, REPLACE_STUDY_EXPERT_BYTES, REPLACE_STUDY_H2D,
+        d2h_link, 1.0, mode)
+
+
+def model_study8():
+    """Full-precision pinned numbers for rust/tests/model_timeline.rs
+    and docs/STUDIES.md (repr() round-trips the exact f64)."""
+    tables = model_tables8(MODEL_STEPS, MODEL_LAYERS, MODEL_SEED)
+    per, cross = model_grid_placements8(tables[0])
+    blk = [Placement.block(32, 32)] * MODEL_LAYERS
+    placements = [('block', blk), ('per-layer', per), ('cross-layer', cross)]
+    for m in [1, MODEL_STAGES * 2]:
+        for schedule in [LAYERSEQ, GPIPE, ONEFONEB]:
+            for (pname, init) in placements:
+                st, tot, mig, _ = model_cell8(tables, init, m, schedule,
+                                              ('never',), 'per-layer')
+                print('m%-2d %-9s %-11s tot %r' % (m, schedule, pname, tot))
+    # live re-placement: block start, break-even policy, cross-layer
+    # candidates, D2H-priced transfers
+    st, tot, mig, _ = model_cell8(tables, blk, MODEL_STAGES * 2, GPIPE,
+                                  ('break-even',), 'cross-layer',
+                                  MODEL_STUDY_D2H)
+    print('live m%d gpipe block->cross break-even tot %r mig %d'
+          % (MODEL_STAGES * 2, tot, mig))
+    per_steps = [x[1] for x in st]
+    print('live steps %s' % ' '.join(repr(x) for x in per_steps))
+
+
+# --- PR8 heterogeneous serving study ----------------------------------
+
+HETERO_SHORT_PREFILL = 1024
+HETERO_SHORT_DECODE = 2
+HETERO_LONG_PREFILL = 4096
+HETERO_LONG_DECODE = 8
+
+
+def hetero_requests8(rate):
+    """serve::arrivals::trace_arrivals input: the Poisson instants of
+    the homogeneous study remapped to alternating short (1024 prompt /
+    2 decode steps) and long (4096 / 8) request shapes by index."""
+    base = poisson_arrivals(SERVE_REQUESTS, rate, SERVE_TICK,
+                            SERVE_PREFILL_TOKENS, SERVE_DECODE_STEPS,
+                            SERVE_SEED)
+    out = []
+    for i, (arr, _pf, _ds) in enumerate(base):
+        if i % 2 == 0:
+            out.append((arr, HETERO_SHORT_PREFILL, HETERO_SHORT_DECODE))
+        else:
+            out.append((arr, HETERO_LONG_PREFILL, HETERO_LONG_DECODE))
+    return out
+
+
+def serve_hetero_cell8(rate, strat, batching, policy):
+    topo = SCENARIOS['4node-ib']
+    base = xl_compute_costs()
+    slot = SERVE_OVERLAP_SLOT if strat[0] == 'overlap' else 0
+    return run_serve(base, topo, hetero_requests8(rate),
+                     Placement.block(32, 32), ('scmoe', 1), strat, batching,
+                     policy, 1.0, REPLACE_STUDY_EXPERT_BYTES,
+                     REPLACE_STUDY_H2D, SERVE_TOKEN_BYTES,
+                     SERVE_DECODE_TOKENS, 32, 0, None, SERVE_PREFILL_NOISE,
+                     SERVE_DECODE_NOISE, SERVE_TRAFFIC_SEED, slot)
+
+
+def serve_hetero_study8():
+    """Full-precision pinned numbers for the mixed-shape serving column
+    (rust/tests/serve_loop.rs / docs/STUDIES.md)."""
+    budget = ('budget', SERVE_BUDGET)
+    for strat in [('seq',), ('overlap',)]:
+        for policy in [('never',), ('break-even',)]:
+            for rate in SERVE_LOADS:
+                steps, lat, busy, total, mig, _ = serve_hetero_cell8(
+                    rate, strat, budget, policy)
+                p50 = percentile(lat, 50.0)
+                p99 = percentile(lat, 99.0)
+                print('hetero load %5.0f %-7s %-10s steps %3d migr %2d' %
+                      (rate, strat[0], policy[0], len(steps), mig))
+                print('  p50 %r p99 %r req/s %r goodput %r' %
+                      (p50, p99, len(lat) / total,
+                       sum(1 for l in lat if l <= SERVE_SLO) / total))
+
+
+def consistency_checks8():
+    """Reductions the PR8 model must satisfy before its output is
+    trusted as a golden or pinned value."""
+    topo = Topology(4, 2, LinkModel(0.0625, 1024.0), LinkModel(0.125, 512.0),
+                    1.0, None)
+    base = ComputeCosts(1.0, 0.75, 0.75, 0.0625, 0.0625, 0.0625, 0.5)
+    rt = routed_table3()
+    block = Placement.block(4, 4)
+    # 1. sources-aware routed costs without sources == topo_from_routing4
+    #    bit-exactly, unchunked and token-true chunked
+    for strat in [('seq',), ('pipe', 2)]:
+        a = render_line('x', build_spec4(
+            topo_from_routing4(base, topo, rt, block, 64),
+            ('scmoe', 1), strat, 0))
+        b = render_line('x', build_spec4(
+            topo_from_routing8(base, topo, rt, block, 64),
+            ('scmoe', 1), strat, 0))
+        assert a == b, ('sources=None drifted', strat)
+    # 2. the explicit home-split source map reproduces the even split
+    tpd = -(-rt.n_tokens // 4)
+    home = [min(t // tpd, 3) for t in range(rt.n_tokens)]
+    for strat in [('seq',), ('pipe', 2)]:
+        a = render_line('x', build_spec4(
+            topo_from_routing8(base, topo, rt, block, 64),
+            ('scmoe', 1), strat, 0))
+        b = render_line('x', build_spec4(
+            topo_from_routing8(base, topo, rt, block, 64, home),
+            ('scmoe', 1), strat, 0))
+        assert a == b, ('home sources drifted', strat)
+    # 3. L=S=M=1 build_model_sim8 is the pair schedule plus one join
+    costs = model_layer_costs8(base, topo, 64, [rt], [block], 1)
+    msim, joins = build_model_sim8([MODEL_SEQ_SPEC], 1, 1, LAYERSEQ, costs,
+                                   4, 2)
+    pair = build_spec4(costs[0][0], ('scmoe', 1), ('seq',), 0)
+    assert len(msim.tasks) == len(pair.tasks) + 1
+    assert joins == [[len(pair.tasks)]]
+    assert msim.run()[:len(pair.tasks)] == pair.run()
+    assert msim.makespan() == pair.makespan()
+    # 4. the L=1 model timeline IS run_replace_timeline, field for field,
+    #    for every policy (final placements included)
+    tables = [drifting_node_affine_routing(4, 2, 4, 4, 0, 0.25, 800 + s)
+              for s in range(5)]
+    for policy in [('never',), ('every', 2), ('break-even',)]:
+        ref = run_replace_timeline(base, topo, 64, tables, block,
+                                   ('scmoe', 1), ('seq',), policy, 4096,
+                                   REPLACE_H2D_LINK, 1.0)
+        st, tot, mig, pls = run_model_timeline8(
+            base, topo, 64, [[t] for t in tables], [block],
+            [MODEL_SEQ_SPEC], 1, 1, LAYERSEQ, policy, 4096,
+            REPLACE_H2D_LINK, None, 1.0, 'cross-layer')
+        assert (st, tot, mig) == ref, policy
+        if policy[0] != 'never':
+            final = ref_final_placement8(base, topo, tables, block, policy)
+            assert pls[0].map == final.map
+    # 5. zero transition counts: co_placed8 == affinity_packed_measured
+    est = AffinityEstimator(4, 2, 1.0)
+    est.observe(rt, 4, 2)
+    tr0 = TransitionEstimator8(4, 1.0)
+    a = co_placed8(est.counts, tr0, block, 4, 2)
+    b = affinity_packed_measured(est.counts, 4, 4, 2)
+    assert a.map == b.map
+    # 6. an infinite-bandwidth D2H link prices every timeline bit-exactly
+    #    like no D2H link at all (zero-duration read-outs stall nothing)
+    free_d2h = LinkModel(0.0, float('inf'))
+    for policy in [('every', 2), ('break-even',)]:
+        a = run_model_timeline8(base, topo, 64, [[t] for t in tables],
+                                [block], [MODEL_SEQ_SPEC], 1, 1, LAYERSEQ,
+                                policy, 4096, REPLACE_H2D_LINK, None, 1.0,
+                                'per-layer')
+        b = run_model_timeline8(base, topo, 64, [[t] for t in tables],
+                                [block], [MODEL_SEQ_SPEC], 1, 1, LAYERSEQ,
+                                policy, 4096, REPLACE_H2D_LINK, free_d2h,
+                                1.0, 'per-layer')
+        assert a[:3] == b[:3], policy
+    # 7. gpipe == layerseq at one microbatch (identical root structure)
+    idx1 = [(e + 1) % 4
+            for e in [0, 2, 0, 2, 2, 0, 0, 2, 1, 3, 3, 1, 3, 1, 3, 3]]
+    rt1 = RoutingTable(idx1, [1.0] * 16, 16, 1, 4, 16)
+    costs2 = model_layer_costs8(base, topo, 64, [rt, rt1], [block, block], 1)
+    g = build_model_sim8([MODEL_SEQ_SPEC] * 2, 1, 1, GPIPE, costs2, 4, 2)[0]
+    s = build_model_sim8([MODEL_SEQ_SPEC] * 2, 1, 1, LAYERSEQ, costs2,
+                         4, 2)[0]
+    assert g.run() == s.run()
+    print('PR8 consistency checks: OK')
+
+
+def ref_final_placement8(base, topo, tables, initial, policy):
+    """Replays run_replace_timeline's placement updates (the PR5 helper
+    returns only (steps, total, migrations))."""
+    n_nodes = topo.n_devices // topo.devices_per_node
+    est = AffinityEstimator(initial.n_experts, n_nodes, 1.0)
+    placement = initial
+    n_steps = len(tables)
+    for s, rt in enumerate(tables):
+        costs = topo_from_routing4(base, topo, rt, placement, 64)
+        base_makespan = build_spec4(costs, ('scmoe', 1), ('seq',),
+                                    0).makespan()
+        est.observe(rt, topo.n_devices, topo.devices_per_node)
+        remaining = n_steps - s - 1
+        if remaining > 0 and policy[0] != 'never':
+            candidate = est.packed(topo.n_devices, topo.devices_per_node)
+            plan = MigrationPlan.between(placement, candidate, 4096)
+            if not plan.is_empty():
+                mig = plan.time(REPLACE_H2D_LINK)
+                overhead = max(0.0, mig - base_makespan)
+                if policy[0] == 'break-even':
+                    cand_costs = topo_from_routing4(base, topo, rt,
+                                                    candidate, 64)
+                    saving = base_makespan - build_spec4(
+                        cand_costs, ('scmoe', 1), ('seq',), 0).makespan()
+                else:
+                    saving = 0.0
+                if should_migrate(policy, s, remaining, saving, overhead):
+                    placement = candidate
+    return placement
+
+
 if __name__ == '__main__':
     # Internal reductions first: the PR3 model must reproduce the seed
     # model bit-for-bit where applicable, the PR4 spec-driven model must
@@ -3243,15 +4019,18 @@ if __name__ == '__main__':
     # reduce to the PR4 single-step schedules wherever no migration
     # fires, the PR6 serving loop must reduce to the PR5 scripted
     # timeline on a closed system, and the PR7 chaos layer must reduce
-    # to the clean PR5/PR6 models at zero magnitude. Then validate the
-    # PR7 model against the full golden corpus. `--emit` deliberately
-    # regenerates the file; plain invocation (CI) only validates and
-    # exits nonzero on drift.
+    # to the clean PR5/PR6 models at zero magnitude, and the PR8
+    # whole-model layer must reduce to the per-layer PR5 timeline at
+    # L=S=M=1 (and to per-layer packing at zero transition counts).
+    # Then validate the PR8 model against the full golden corpus.
+    # `--emit` deliberately regenerates the file; plain invocation (CI)
+    # only validates and exits nonzero on drift.
     consistency_checks3()
     consistency_checks4()
     consistency_checks5()
     consistency_checks6()
     consistency_checks7()
+    consistency_checks8()
     if '--study' in sys.argv:
         replace_study5()
         sys.exit(0)
@@ -3261,9 +4040,15 @@ if __name__ == '__main__':
     if '--chaos-study' in sys.argv:
         chaos_study7()
         sys.exit(0)
+    if '--model-study' in sys.argv:
+        model_study8()
+        sys.exit(0)
+    if '--serve-hetero-study' in sys.argv:
+        serve_hetero_study8()
+        sys.exit(0)
     if '--emit' in sys.argv:
-        emit_corpus7(os.path.join(os.path.dirname(os.path.abspath(__file__)),
+        emit_corpus8(os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                   '..', '..', 'rust', 'tests', 'golden',
                                   'timelines.txt'))
-    ok = validate_corpus7()
+    ok = validate_corpus8()
     sys.exit(0 if ok else 1)
