@@ -44,6 +44,12 @@
 //! source-side D2H pricing — the same cells `scmoe report model`
 //! tabulates.
 //!
+//! In `--fleet` mode, `--critpath` redraws every span on the realized
+//! critical path with `#` bars and prints the path's makespan
+//! attribution (`analyze::critpath`), and `--export-trace PATH` writes
+//! the ScMoE fleet timeline as Chrome-trace-event JSON for Perfetto /
+//! `chrome://tracing` (`analyze::export`).
+//!
 //! `--chunks N` sets the pipeline depth of the chunked rows (default 2).
 //! Every chunk pays its own launch latency, so deep chunking visibly
 //! stops helping; in `--fleet` mode the chunked ScMoE timeline is also
@@ -53,6 +59,9 @@
 //! All schedules are built through the one construction API:
 //! `ScheduleSpec::new(kind, strategy).build(&cost_model)`.
 
+use std::collections::BTreeSet;
+
+use scmoe::analyze::{attribute, chrome_trace, critical_path};
 use scmoe::cluster::{ChaosSpec, Scenario};
 use scmoe::coordinator::adaptive::eq11_objective;
 use scmoe::coordinator::costs::{MoEKind, Strategy, TopoCosts};
@@ -128,7 +137,8 @@ fn main() {
     let width = args.usize_or("width", 110);
     let chunks = args.usize_or("chunks", 2).max(1);
     if args.flag("fleet") {
-        fleet_mode(sc, width, chunks);
+        fleet_mode(sc, width, chunks, args.flag("critpath"),
+                   args.str_opt("export-trace"));
         return;
     }
     let c = proxy_costs(sc);
@@ -161,23 +171,51 @@ fn main() {
     println!("chosen: slot {} ({:.3}ms)", best + 1, t * 1e3);
 }
 
-fn fleet_mode(sc: Scenario, width: usize, chunks: usize) {
+/// Render a fleet timeline; with `critpath` the realized critical path's
+/// spans are drawn with `#` bars and its makespan attribution printed.
+fn render_fleet(sim: &scmoe::simtime::Sim, width: usize, critpath: bool)
+                -> Vec<scmoe::simtime::Span> {
+    if !critpath {
+        let spans = sim.run();
+        print!("{}", timeline::render(&spans, width));
+        return spans;
+    }
+    let run = sim.run_traced();
+    let crit: BTreeSet<usize> = critical_path(&run).into_iter().collect();
+    print!("{}", timeline::render_marked(&run.spans, width, &crit));
+    let a = attribute(&run);
+    println!("critical path: {} tasks | backbone {:.3}ms  expert {:.3}ms  \
+              dispatch {:.3}ms  combine {:.3}ms  migr {:.3}ms",
+             crit.len(), a.backbone * 1e3, a.expert * 1e3, a.dispatch * 1e3,
+             a.combine * 1e3, a.migration * 1e3);
+    run.spans
+}
+
+fn fleet_mode(sc: Scenario, width: usize, chunks: usize, critpath: bool,
+              export_trace: Option<&str>) {
     let tc = topo_proxy_costs(sc);
     println!("### {} — topology-aware fleet ({} devices, {} nodes) ###",
              sc.label(), tc.n_devices(), tc.n_nodes());
+    let dpn = tc.n_devices() / tc.n_nodes();
     let kind = MoEKind::ScMoE { k: 1 };
-    let base_spans = ScheduleSpec::new(MoEKind::Standard { k: 2 },
-                                       Strategy::Sequential)
-        .build(&tc)
-        .run();
+    let base = ScheduleSpec::new(MoEKind::Standard { k: 2 },
+                                 Strategy::Sequential)
+        .build(&tc);
     println!("\n--- standard top-2, sequential (fleet) ---");
-    print!("{}", timeline::render(&base_spans, width));
+    let base_spans = render_fleet(&base.sim, width, critpath);
     let ovl = ScheduleSpec::new(kind, Strategy::Overlap);
     let (slot, _) = ovl.choose_slot(&tc);
-    let spans = ovl.with_slot(slot).build(&tc).run();
+    let sched = ovl.with_slot(slot).build(&tc);
     println!("\n--- ScMoE overlapping (fleet, adaptive slot {}) ---", slot + 1);
-    print!("{}", timeline::render(&spans, width));
+    let spans = render_fleet(&sched.sim, width, critpath);
     println!("\nspeedup: {:.2}x", makespan(&base_spans) / makespan(&spans));
+    if let Some(path) = export_trace {
+        let run = sched.sim.run_traced();
+        let json = chrome_trace(&sched.sim, &run, dpn);
+        std::fs::write(path, json + "\n").expect("write trace file");
+        println!("wrote Chrome trace of the ScMoE fleet timeline to {path} \
+                  (open in Perfetto / chrome://tracing)");
+    }
 
     if chunks > 1 {
         // chunked MoE stream: every chunk pays its own α; the uplink task

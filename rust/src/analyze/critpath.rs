@@ -1,0 +1,317 @@
+//! Critical-path extraction, per-task slack, and makespan attribution
+//! over a traced DES run.
+//!
+//! The realized blocking graph has two edge kinds: the DAG dependencies
+//! the schedule was built with, and the resource-serialization edges the
+//! engine *realized* (for each span, the predecessor whose finish gated
+//! its start — [`crate::simtime::Blocker`]). Because the engine is
+//! work-conserving, walking blockers back from the latest-finishing span
+//! yields a time-contiguous chain from t = 0 whose durations telescope to
+//! the makespan exactly — the critical path. Slack is classic CPM over
+//! the full realized edge set (every dep edge plus the per-resource
+//! execution order), so a task's slack is how much it could stretch
+//! without moving the makespan *given the realized schedule*.
+
+use std::collections::BTreeMap;
+
+use crate::simtime::{makespan, Resource, Sim, TaskId, TracedRun};
+
+/// Makespan-attribution category, classified from the schedule layer's
+/// task-label vocabulary (`coordinator::schedule`) plus the resource.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Category {
+    /// Backbone compute: `Attn(l)` / `MLP(l)` / `Attn(l+1)` / `SE` /
+    /// `Gate` / `Encode` / `Decode` (+ the model layer's zero-duration
+    /// `Join-*` bookkeeping).
+    Backbone,
+    /// Expert FFN compute: `Expert` / `Expert{i}` chunks.
+    Expert,
+    /// Dispatch All-to-All: `A2A-D*` (intra) and `A2A-Dx*` (uplink).
+    Dispatch,
+    /// Combine All-to-All: `A2A-C*` / `A2A-Cx*`.
+    Combine,
+    /// Live re-placement traffic: anything on an H2D or D2H engine
+    /// (`H2D-E{e}` writes, `D2H-E{e}` read-outs).
+    Migration,
+}
+
+/// Classify one task. Migration is recognized by resource (every task on
+/// a transfer engine is re-placement traffic); the A2A split and expert
+/// compute by label prefix; everything else is backbone.
+pub fn category(label: &str, resource: Resource) -> Category {
+    if matches!(resource, Resource::H2D(_) | Resource::D2H(_)) {
+        return Category::Migration;
+    }
+    if label.starts_with("A2A-D") {
+        return Category::Dispatch;
+    }
+    if label.starts_with("A2A-C") {
+        return Category::Combine;
+    }
+    if label.starts_with("Expert") {
+        return Category::Expert;
+    }
+    Category::Backbone
+}
+
+/// The critical path: task ids in time order, from a t = 0 task to the
+/// latest-finishing span (lowest id on ties), following each task's
+/// realized blocking predecessor. The chain is time-contiguous, so the
+/// path's summed durations equal the makespan exactly.
+pub fn critical_path(run: &TracedRun) -> Vec<TaskId> {
+    if run.spans.is_empty() {
+        return Vec::new();
+    }
+    let mut sink = 0usize;
+    for s in &run.spans {
+        if s.end > run.spans[sink].end {
+            sink = s.id;
+        }
+    }
+    let mut path = vec![sink];
+    let mut cur = sink;
+    while let Some(b) = run.blockers[cur] {
+        cur = b.pred;
+        path.push(cur);
+    }
+    path.reverse();
+    path
+}
+
+/// Per-task slack (seconds): how much each task's duration could grow
+/// without moving the makespan, holding the realized schedule's edge set
+/// fixed (dep edges plus the execution order on every exclusive
+/// resource). Critical-path tasks have slack 0.
+pub fn slack(sim: &Sim, run: &TracedRun) -> Vec<f64> {
+    let n = run.spans.len();
+    let ms = makespan(&run.spans);
+    let succs = realized_succs(sim, run);
+    // backward CPM pass in reverse topological order (Kahn)
+    let mut indeg = vec![0usize; n];
+    for ss in &succs {
+        for &s in ss {
+            indeg[s] += 1;
+        }
+    }
+    let mut stack: Vec<TaskId> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut order = Vec::with_capacity(n);
+    while let Some(i) = stack.pop() {
+        order.push(i);
+        for &s in &succs[i] {
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                stack.push(s);
+            }
+        }
+    }
+    assert_eq!(order.len(), n, "realized edge set must be acyclic");
+    let mut lf = vec![ms; n];
+    for &i in order.iter().rev() {
+        for &s in &succs[i] {
+            let cand = lf[s] - (run.spans[s].end - run.spans[s].start);
+            if cand < lf[i] {
+                lf[i] = cand;
+            }
+        }
+    }
+    (0..n).map(|i| lf[i] - run.spans[i].end).collect()
+}
+
+/// The realized successor lists: every dep edge plus the execution order
+/// on each exclusive resource (sorted by start, end, id). This edge set
+/// *explains* the schedule — each task's start is exactly the latest
+/// finish among its predecessors here — so CPM over it is sound.
+fn realized_succs(sim: &Sim, run: &TracedRun) -> Vec<Vec<TaskId>> {
+    let n = run.spans.len();
+    let mut succs: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+    for (id, t) in sim.tasks().iter().enumerate() {
+        for &d in &t.deps {
+            succs[d].push(id);
+        }
+    }
+    let mut by_res: BTreeMap<Resource, Vec<TaskId>> = BTreeMap::new();
+    for s in &run.spans {
+        if !matches!(s.resource, Resource::Free) {
+            by_res.entry(s.resource).or_default().push(s.id);
+        }
+    }
+    for ids in by_res.values_mut() {
+        ids.sort_by(|a, b| {
+            run.spans[*a]
+                .start
+                .total_cmp(&run.spans[*b].start)
+                .then(run.spans[*a].end.total_cmp(&run.spans[*b].end))
+                .then(a.cmp(b))
+        });
+        for w in ids.windows(2) {
+            succs[w[0]].push(w[1]);
+        }
+    }
+    succs
+}
+
+/// Makespan of the counterfactual schedule in which task `zero` takes no
+/// time, holding the realized execution order fixed — a forward CPM pass
+/// over the same edge set [`slack`] uses, with task durations taken from
+/// the specs. With `zero = None` it replays the schedule as-is and
+/// reproduces the makespan bit-exactly (the edge set explains every
+/// start time). This is deliberately *not* an engine re-run: list
+/// scheduling is not anomaly-free — shortening a task can reorder a
+/// resource queue downstream and move the makespan (the dyadic
+/// `Top1/pipe2` corpus timeline exhibits exactly that, found empirically
+/// by the mirror) — whereas slack is defined over the realized order,
+/// where zeroing any positive-slack task provably changes nothing.
+pub fn makespan_with_zeroed(sim: &Sim, run: &TracedRun,
+                            zero: Option<TaskId>) -> f64 {
+    let n = run.spans.len();
+    let succs = realized_succs(sim, run);
+    let mut indeg = vec![0usize; n];
+    for ss in &succs {
+        for &s in ss {
+            indeg[s] += 1;
+        }
+    }
+    let mut stack: Vec<TaskId> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut es = vec![0.0f64; n];
+    let mut ms = 0.0f64;
+    let mut seen = 0usize;
+    while let Some(i) = stack.pop() {
+        seen += 1;
+        let dur = if zero == Some(i) { 0.0 } else { sim.tasks()[i].duration };
+        let ef = es[i] + dur;
+        if ef > ms {
+            ms = ef;
+        }
+        for &s in &succs[i] {
+            if ef > es[s] {
+                es[s] = ef;
+            }
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                stack.push(s);
+            }
+        }
+    }
+    assert_eq!(seen, n, "realized edge set must be acyclic");
+    ms
+}
+
+/// Makespan attribution: the total time partitioned into the categories
+/// of the critical-path tasks plus residual idle. Because the blocking
+/// chain is contiguous, `idle` is zero (up to float association) on every
+/// schedule the engine produces — it exists so the partition is exact by
+/// construction and stays honest if release times ever appear.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Attribution {
+    pub makespan: f64,
+    pub backbone: f64,
+    pub expert: f64,
+    pub dispatch: f64,
+    pub combine: f64,
+    pub migration: f64,
+    pub idle: f64,
+}
+
+impl Attribution {
+    /// Sum of the five labeled categories (== `makespan - idle`).
+    pub fn categorized(&self) -> f64 {
+        self.backbone + self.expert + self.dispatch + self.combine
+            + self.migration
+    }
+}
+
+/// Attribute the makespan to critical-path task categories.
+pub fn attribute(run: &TracedRun) -> Attribution {
+    let ms = makespan(&run.spans);
+    let mut a = Attribution { makespan: ms, ..Attribution::default() };
+    for id in critical_path(run) {
+        let s = &run.spans[id];
+        let dur = s.end - s.start;
+        match category(&s.label, s.resource) {
+            Category::Backbone => a.backbone += dur,
+            Category::Expert => a.expert += dur,
+            Category::Dispatch => a.dispatch += dur,
+            Category::Combine => a.combine += dur,
+            Category::Migration => a.migration += dur,
+        }
+    }
+    a.idle = ms - a.categorized();
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simtime::Sim;
+
+    fn diamond() -> Sim {
+        let mut sim = Sim::new();
+        let a = sim.add("Attn(l)", Resource::Compute(0), 1.0, &[]);
+        let b = sim.add("A2A-D", Resource::Comm(0), 4.0, &[a]);
+        let c = sim.add("MLP(l)", Resource::Compute(0), 2.0, &[a]);
+        sim.add("Expert", Resource::Compute(0), 1.0, &[b, c]);
+        sim
+    }
+
+    #[test]
+    fn path_durations_telescope_to_makespan() {
+        let sim = diamond();
+        let run = sim.run_traced();
+        let path = critical_path(&run);
+        let len: f64 = path.iter()
+            .map(|&i| run.spans[i].end - run.spans[i].start)
+            .sum();
+        assert_eq!(len, makespan(&run.spans));
+        // a -> comm -> expert, not through the slack-y MLP
+        assert_eq!(path, vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn slack_zero_on_path_positive_off_path() {
+        let sim = diamond();
+        let run = sim.run_traced();
+        let sl = slack(&sim, &run);
+        assert_eq!(sl[0], 0.0);
+        assert_eq!(sl[1], 0.0);
+        assert_eq!(sl[3], 0.0);
+        // MLP ends at 3, the expert can't start before 5: slack 2
+        assert_eq!(sl[2], 2.0);
+    }
+
+    #[test]
+    fn attribution_partitions_makespan() {
+        let sim = diamond();
+        let run = sim.run_traced();
+        let a = attribute(&run);
+        assert_eq!(a.makespan, 6.0);
+        assert_eq!(a.backbone, 1.0);
+        assert_eq!(a.dispatch, 4.0);
+        assert_eq!(a.expert, 1.0);
+        assert_eq!(a.idle, 0.0);
+        assert_eq!(a.categorized() + a.idle, a.makespan);
+    }
+
+    #[test]
+    fn counterfactual_replay_respects_slack() {
+        let sim = diamond();
+        let run = sim.run_traced();
+        let ms = makespan(&run.spans);
+        assert_eq!(makespan_with_zeroed(&sim, &run, None), ms);
+        // zeroing the slack-2 MLP leaves the makespan alone...
+        assert_eq!(makespan_with_zeroed(&sim, &run, Some(2)), ms);
+        // ...zeroing the critical dispatch collapses it to the MLP path
+        assert_eq!(makespan_with_zeroed(&sim, &run, Some(1)), 4.0);
+    }
+
+    #[test]
+    fn migration_category_is_resource_keyed() {
+        assert_eq!(category("H2D-E3", Resource::H2D(1)), Category::Migration);
+        assert_eq!(category("D2H-E3", Resource::D2H(1)), Category::Migration);
+        assert_eq!(category("A2A-Dx1", Resource::Link(0)),
+                   Category::Dispatch);
+        assert_eq!(category("A2A-Cx0", Resource::Link(0)), Category::Combine);
+        assert_eq!(category("Expert2", Resource::Compute(0)),
+                   Category::Expert);
+        assert_eq!(category("Join-L0M0", Resource::Free), Category::Backbone);
+    }
+}

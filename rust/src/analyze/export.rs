@@ -1,0 +1,153 @@
+//! Chrome-trace-event JSON export (chrome://tracing / Perfetto "Trace
+//! Event Format") for any DES timeline, via `util::json`.
+//!
+//! Layout: one *process* per node (`pid` = node index, `Link(n)` rows on
+//! node `n`), one *thread* per resource row (`tid` = the row's rank in
+//! `Resource` order, named via `thread_name` metadata with the shared
+//! [`Resource::row_label`] tokens). Every span becomes a complete
+//! (`"ph":"X"`) event with microsecond `ts`/`dur`; its `args` carry the
+//! analysis layer's verdict — `crit` (on the critical path) and
+//! `slack_us`.
+//!
+//! Determinism: metadata events first (processes, then threads, in
+//! sorted order), then spans in task-id order; objects serialize with
+//! sorted keys (`util::json` uses a BTreeMap). On dyadic timelines every
+//! number is an exact integer, so the output is byte-for-byte
+//! reproducible (pinned by `rust/tests/golden/trace_fleet.json` and the
+//! mirror).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::simtime::{Resource, Sim, TracedRun};
+use crate::util::json::{num, obj, s, Json};
+
+use super::critpath::{critical_path, slack};
+
+/// Node (= Chrome process) owning a resource row.
+fn node_of(r: Resource, devices_per_node: usize) -> usize {
+    match r {
+        Resource::Compute(d)
+        | Resource::Comm(d)
+        | Resource::H2D(d)
+        | Resource::D2H(d) => d / devices_per_node,
+        Resource::Link(n) => n,
+        Resource::Free => 0,
+    }
+}
+
+/// Serialize a traced run as Chrome-trace-event JSON (one line, no
+/// trailing newline). `devices_per_node` maps device rows to their node
+/// process, matching [`super::overlap::comm_overlap`].
+pub fn chrome_trace(sim: &Sim, run: &TracedRun,
+                    devices_per_node: usize) -> String {
+    assert!(devices_per_node > 0, "devices_per_node must be positive");
+    let on_path: BTreeSet<usize> = critical_path(run).into_iter().collect();
+    let slacks = slack(sim, run);
+
+    // tid = rank of the resource row in Resource order
+    let resources: BTreeSet<Resource> =
+        run.spans.iter().map(|sp| sp.resource).collect();
+    let tid: BTreeMap<Resource, usize> = resources
+        .iter()
+        .enumerate()
+        .map(|(i, r)| (*r, i))
+        .collect();
+    let pids: BTreeSet<usize> = resources
+        .iter()
+        .map(|r| node_of(*r, devices_per_node))
+        .collect();
+
+    let mut events: Vec<Json> = Vec::new();
+    for p in &pids {
+        events.push(obj(vec![
+            ("args", obj(vec![("name", s(&format!("node{p}")))])),
+            ("name", s("process_name")),
+            ("ph", s("M")),
+            ("pid", num(*p as f64)),
+        ]));
+    }
+    for r in &resources {
+        events.push(obj(vec![
+            ("args", obj(vec![("name", s(&r.row_label()))])),
+            ("name", s("thread_name")),
+            ("ph", s("M")),
+            ("pid", num(node_of(*r, devices_per_node) as f64)),
+            ("tid", num(tid[r] as f64)),
+        ]));
+    }
+    for sp in &run.spans {
+        events.push(obj(vec![
+            ("args", obj(vec![
+                ("crit", Json::Bool(on_path.contains(&sp.id))),
+                ("slack_us", num(slacks[sp.id] * 1e6)),
+            ])),
+            ("cat", s("sim")),
+            ("dur", num((sp.end - sp.start) * 1e6)),
+            ("name", s(&sp.label)),
+            ("ph", s("X")),
+            ("pid", num(node_of(sp.resource, devices_per_node) as f64)),
+            ("tid", num(tid[&sp.resource] as f64)),
+            ("ts", num(sp.start * 1e6)),
+        ]));
+    }
+    obj(vec![
+        ("displayTimeUnit", s("ms")),
+        ("traceEvents", Json::Arr(events)),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simtime::Sim;
+    use crate::util::json::Json;
+
+    fn toy() -> Sim {
+        let mut sim = Sim::new();
+        let a = sim.add("Attn(l)", Resource::Compute(0), 1.0, &[]);
+        sim.add("A2A-Dx0", Resource::Link(0), 2.0, &[a]);
+        sim.add("MLP(l)", Resource::Compute(1), 0.5, &[a]);
+        sim
+    }
+
+    #[test]
+    fn trace_parses_and_counts_events() {
+        let sim = toy();
+        let run = sim.run_traced();
+        let txt = chrome_trace(&sim, &run, 2);
+        let v = Json::parse(&txt).unwrap();
+        assert_eq!(v.get("displayTimeUnit").unwrap().as_str(), Some("ms"));
+        let ev = v.get("traceEvents").unwrap().as_arr().unwrap();
+        // 1 process + 3 thread rows + 3 spans
+        assert_eq!(ev.len(), 7);
+        let span_evs: Vec<&Json> = ev
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("X"))
+            .collect();
+        assert_eq!(span_evs.len(), 3);
+        // the dispatch uplink is critical and slack-free
+        let a2a = span_evs
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str() == Some("A2A-Dx0"))
+            .unwrap();
+        assert_eq!(a2a.get("args").unwrap().get("crit").unwrap().as_bool(),
+                   Some(true));
+        assert_eq!(
+            a2a.get("args").unwrap().get("slack_us").unwrap().as_f64(),
+            Some(0.0)
+        );
+        assert_eq!(a2a.get("ts").unwrap().as_f64(), Some(1e6));
+        assert_eq!(a2a.get("dur").unwrap().as_f64(), Some(2e6));
+    }
+
+    #[test]
+    fn thread_names_use_row_labels() {
+        let sim = toy();
+        let run = sim.run_traced();
+        let txt = chrome_trace(&sim, &run, 2);
+        assert!(txt.contains("\"compute[0]\""));
+        assert!(txt.contains("\"link[0]\""));
+        assert!(txt.contains("\"node0\""));
+    }
+}

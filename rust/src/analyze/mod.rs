@@ -1,0 +1,29 @@
+//! Timeline analytics over DES output: where did the makespan go, and
+//! how much communication actually hid behind compute?
+//!
+//! Every simulation in this repo ends in a `Vec<Span>`; this module is
+//! the layer that turns those spans into explanations:
+//!
+//! - [`critpath`] — realized blocking graph, critical path, per-task
+//!   slack, and makespan attribution into backbone / expert / dispatch /
+//!   combine / migration / idle buckets.
+//! - [`overlap`] — per-resource utilization, the hidden-communication
+//!   fraction (the measured counterpart of the paper's overlap claim),
+//!   and per-stage pipeline bubbles for whole-model timelines.
+//! - [`export`] — Chrome-trace-event JSON so any timeline opens in
+//!   Perfetto / `chrome://tracing`, with slack and critical-path
+//!   verdicts attached to every span.
+//!
+//! Everything here is deterministic and is mirrored op-for-op by
+//! `tools/des_mirror/mirror2.py`, which mints the golden corpus in
+//! `rust/tests/golden/analyze.txt` and `trace_fleet.json`.
+
+pub mod critpath;
+pub mod export;
+pub mod overlap;
+
+pub use critpath::{attribute, category, critical_path, makespan_with_zeroed,
+                   slack, Attribution, Category};
+pub use export::chrome_trace;
+pub use overlap::{comm_overlap, stage_bubbles, utilization, CommOverlap,
+                  ResourceUtil};

@@ -1,0 +1,208 @@
+//! Overlap-efficiency metrics over DES spans: per-resource utilization,
+//! the hidden-communication fraction (the paper's "up to 100% overlap"
+//! claim as a measured per-schedule number), and per-stage pipeline
+//! bubble fractions for whole-model timelines.
+//!
+//! A communication span is *hidden* while compute is simultaneously busy
+//! on the hardware it occupies: a `Comm(d)` stream against device `d`'s
+//! compute stream, a shared `Link(n)` uplink against any compute stream
+//! of node `n`'s devices. Hidden + exposed always equals total comm time.
+
+use std::collections::BTreeMap;
+
+use crate::simtime::{makespan, Resource, Span};
+
+/// Busy time and utilization of one exclusive resource.
+#[derive(Debug, Clone, Copy)]
+pub struct ResourceUtil {
+    pub resource: Resource,
+    /// Summed span durations on this resource (seconds).
+    pub busy: f64,
+    /// `busy / makespan`, in [0, 1].
+    pub utilization: f64,
+}
+
+/// Per-resource busy/utilization, in `Resource` order. `Free` spans are
+/// skipped (unlimited concurrency has no utilization).
+pub fn utilization(spans: &[Span]) -> Vec<ResourceUtil> {
+    let ms = makespan(spans);
+    let mut busy: BTreeMap<Resource, f64> = BTreeMap::new();
+    for s in spans {
+        if !matches!(s.resource, Resource::Free) {
+            *busy.entry(s.resource).or_insert(0.0) += s.end - s.start;
+        }
+    }
+    busy.into_iter()
+        .map(|(resource, b)| ResourceUtil {
+            resource,
+            busy: b,
+            utilization: if ms > 0.0 { b / ms } else { 0.0 },
+        })
+        .collect()
+}
+
+/// Total communication time and the part of it hidden behind compute.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CommOverlap {
+    /// Summed durations of every `Comm`/`Link` span (seconds).
+    pub total: f64,
+    /// Part of `total` during which compute was busy on the same device
+    /// (comm stream) or on some device of the same node (uplink).
+    pub hidden: f64,
+}
+
+impl CommOverlap {
+    /// Comm time left in the open: `total - hidden`.
+    pub fn exposed(&self) -> f64 {
+        self.total - self.hidden
+    }
+
+    /// The headline metric: `hidden / total` (0 when there is no comm).
+    pub fn hidden_fraction(&self) -> f64 {
+        if self.total > 0.0 {
+            self.hidden / self.total
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Measure comm/compute overlap. `devices_per_node` maps a `Link(n)`
+/// uplink to its node's compute streams (devices `n*dpn .. (n+1)*dpn`);
+/// model-composed timelines keep this mapping because stages remap
+/// devices and links by the same stride.
+pub fn comm_overlap(spans: &[Span], devices_per_node: usize) -> CommOverlap {
+    assert!(devices_per_node > 0, "devices_per_node must be positive");
+    let mut compute: BTreeMap<usize, Vec<(f64, f64)>> = BTreeMap::new();
+    for s in spans {
+        if let Resource::Compute(d) = s.resource {
+            compute.entry(d).or_default().push((s.start, s.end));
+        }
+    }
+    let mut out = CommOverlap::default();
+    for s in spans {
+        let devs: Vec<usize> = match s.resource {
+            Resource::Comm(d) => vec![d],
+            Resource::Link(n) => {
+                (n * devices_per_node..(n + 1) * devices_per_node).collect()
+            }
+            _ => continue,
+        };
+        out.total += s.end - s.start;
+        let ivs: Vec<(f64, f64)> = devs
+            .iter()
+            .filter_map(|d| compute.get(d))
+            .flatten()
+            .copied()
+            .collect();
+        out.hidden += overlap_len(&merge(ivs), s.start, s.end);
+    }
+    out
+}
+
+/// Per-stage pipeline bubble fractions for a `build_model_sim` timeline:
+/// the share of the makespan during which *no* compute stream of stage
+/// `s` (devices `s*devices_per_stage ..`) is busy. One entry per stage,
+/// each in [0, 1].
+pub fn stage_bubbles(spans: &[Span], stages: usize,
+                     devices_per_stage: usize) -> Vec<f64> {
+    let ms = makespan(spans);
+    (0..stages)
+        .map(|st| {
+            let lo = st * devices_per_stage;
+            let hi = lo + devices_per_stage;
+            let ivs: Vec<(f64, f64)> = spans
+                .iter()
+                .filter_map(|s| match s.resource {
+                    Resource::Compute(d) if d >= lo && d < hi => {
+                        Some((s.start, s.end))
+                    }
+                    _ => None,
+                })
+                .collect();
+            let busy: f64 = merge(ivs).iter().map(|(a, b)| b - a).sum();
+            if ms > 0.0 { 1.0 - busy / ms } else { 0.0 }
+        })
+        .collect()
+}
+
+/// Sort-and-merge a set of possibly overlapping intervals.
+fn merge(mut ivs: Vec<(f64, f64)>) -> Vec<(f64, f64)> {
+    ivs.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+    let mut out: Vec<(f64, f64)> = Vec::new();
+    for (s, e) in ivs {
+        if let Some(last) = out.last_mut() {
+            if s <= last.1 {
+                if e > last.1 {
+                    last.1 = e;
+                }
+                continue;
+            }
+        }
+        out.push((s, e));
+    }
+    out
+}
+
+/// Length of `[s, e] ∩ merged`, with `merged` disjoint and sorted.
+fn overlap_len(merged: &[(f64, f64)], s: f64, e: f64) -> f64 {
+    let mut acc = 0.0;
+    for &(a, b) in merged {
+        acc += (b.min(e) - a.max(s)).max(0.0);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simtime::Sim;
+
+    #[test]
+    fn hidden_plus_exposed_is_total() {
+        let mut sim = Sim::new();
+        let a = sim.add("comp1", Resource::Compute(0), 2.0, &[]);
+        sim.add("comm", Resource::Comm(0), 3.0, &[a]);
+        sim.add("comp2", Resource::Compute(0), 1.0, &[a]);
+        let spans = sim.run();
+        let ov = comm_overlap(&spans, 1);
+        assert_eq!(ov.total, 3.0);
+        assert_eq!(ov.hidden, 1.0); // comm [2,5] vs compute [2,3]
+        assert_eq!(ov.exposed(), 2.0);
+        assert!((ov.hidden_fraction() - 1.0 / 3.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn uplink_hides_behind_any_node_device() {
+        let mut sim = Sim::new();
+        sim.add("c0", Resource::Compute(0), 1.0, &[]);
+        sim.add("c1", Resource::Compute(1), 3.0, &[]);
+        sim.add("x", Resource::Link(0), 2.0, &[]);
+        let ov = comm_overlap(&sim.run(), 2);
+        assert_eq!(ov.total, 2.0);
+        assert_eq!(ov.hidden, 2.0); // device 1 is busy the whole window
+    }
+
+    #[test]
+    fn utilization_in_unit_interval() {
+        let mut sim = Sim::new();
+        let a = sim.add("a", Resource::Compute(0), 2.0, &[]);
+        sim.add("b", Resource::Comm(0), 1.0, &[a]);
+        sim.add("f", Resource::Free, 10.0, &[]);
+        for u in utilization(&sim.run()) {
+            assert!(u.utilization >= 0.0 && u.utilization <= 1.0);
+            assert!(!matches!(u.resource, Resource::Free));
+        }
+    }
+
+    #[test]
+    fn bubbles_count_compute_gaps() {
+        let mut sim = Sim::new();
+        // stage 0 busy [0,1]; stage 1 busy [3,4]; makespan 4
+        let a = sim.add("s0", Resource::Compute(0), 1.0, &[]);
+        let b = sim.add("x", Resource::Comm(0), 2.0, &[a]);
+        sim.add("s1", Resource::Compute(1), 1.0, &[b]);
+        let bub = stage_bubbles(&sim.run(), 2, 1);
+        assert_eq!(bub, vec![0.75, 0.75]);
+    }
+}

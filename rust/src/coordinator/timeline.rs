@@ -3,27 +3,29 @@
 //! Spans are grouped into rows by resource (compute stream, comm stream,
 //! H2D engine) and drawn as labelled bars on a shared time axis.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
-use crate::simtime::{Resource, Span};
+use crate::simtime::{Resource, Span, TaskId};
 use crate::util::stats::fmt_secs;
-
-fn resource_row(r: Resource) -> String {
-    match r {
-        Resource::Compute(d) => format!("compute[{d}]"),
-        Resource::Comm(d) => format!("comm[{d}]"),
-        Resource::Link(n) => format!("link[{n}]"),
-        Resource::H2D(d) => format!("h2d[{d}]"),
-        Resource::D2H(d) => format!("d2h[{d}]"),
-        Resource::Free => "free".into(),
-    }
-}
 
 /// Render spans as an ASCII chart `width` characters wide. Rows are
 /// ordered by the `Resource` enum (all compute streams in device order,
 /// then comm streams, then node links), so multi-device fleet renders
 /// stay numerically ordered past device 9.
 pub fn render(spans: &[Span], width: usize) -> String {
+    render_impl(spans, width, None)
+}
+
+/// Like [`render`], but spans whose task id is in `critical` are drawn
+/// with `#` bars instead of `=` (the `timeline_explorer --critpath`
+/// view). With an empty set the output is byte-identical to [`render`].
+pub fn render_marked(spans: &[Span], width: usize,
+                     critical: &BTreeSet<TaskId>) -> String {
+    render_impl(spans, width, Some(critical))
+}
+
+fn render_impl(spans: &[Span], width: usize,
+               critical: Option<&BTreeSet<TaskId>>) -> String {
     if spans.is_empty() {
         return String::from("(empty timeline)\n");
     }
@@ -39,7 +41,7 @@ pub fn render(spans: &[Span], width: usize) -> String {
     }
     let label_w = rows
         .keys()
-        .map(|r| resource_row(*r).len())
+        .map(|r| r.row_label().len())
         .max()
         .unwrap_or(0);
 
@@ -50,9 +52,13 @@ pub fn render(spans: &[Span], width: usize) -> String {
         for s in &row_spans {
             let a = ((s.start * scale) as usize).min(width.saturating_sub(1));
             let b = ((s.end * scale) as usize).clamp(a + 1, width);
+            let bar = match critical {
+                Some(set) if set.contains(&s.id) => b'#',
+                _ => b'=',
+            };
             // bar body
             for c in line.iter_mut().take(b).skip(a) {
-                *c = b'=';
+                *c = bar;
             }
             line[a] = b'|';
             // inscribe label if it fits
@@ -63,7 +69,7 @@ pub fn render(spans: &[Span], width: usize) -> String {
                 }
             }
         }
-        out.push_str(&format!("{:<label_w$} {}\n", resource_row(res),
+        out.push_str(&format!("{:<label_w$} {}\n", res.row_label(),
                               String::from_utf8(line).unwrap()));
     }
     out.push_str(&format!("total: {}\n", fmt_secs(t_end)));
@@ -81,7 +87,7 @@ pub fn summary(spans: &[Span]) -> String {
             s.label,
             fmt_secs(s.start),
             fmt_secs(s.end),
-            resource_row(s.resource).trim()
+            s.resource.row_label().trim()
         ));
     }
     out
@@ -118,6 +124,19 @@ mod tests {
     #[test]
     fn empty_ok() {
         assert!(render(&[], 40).contains("empty"));
+    }
+
+    #[test]
+    fn marked_render_reduces_to_plain_on_empty_set() {
+        let mut sim = Sim::new();
+        let a = sim.add("comp", Resource::Compute(0), 1.0, &[]);
+        sim.add("comm", Resource::Comm(0), 1.0, &[a]);
+        let spans = sim.run();
+        assert_eq!(render_marked(&spans, 40, &BTreeSet::new()),
+                   render(&spans, 40));
+        let marked = render_marked(&spans, 40,
+                                   &BTreeSet::from([a]));
+        assert!(marked.contains('#'), "{marked}");
     }
 
     #[test]

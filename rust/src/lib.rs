@@ -7,6 +7,7 @@
 //! operator boundary: expert-parallel routing, All-to-All, the adaptive
 //! overlap scheduler, expert offloading, and the training/inference drivers.
 
+pub mod analyze;
 pub mod bench_support;
 pub mod cluster;
 pub mod coordinator;

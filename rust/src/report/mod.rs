@@ -12,6 +12,7 @@ pub mod chaos;
 pub mod efficiency;
 pub mod model_report;
 pub mod offload_report;
+pub mod overlap_report;
 pub mod quality;
 pub mod replace;
 pub mod serve_report;
@@ -29,6 +30,7 @@ pub fn run(exp: &str, args: &Args) -> Result<()> {
             efficiency::speedup_tables(args)
         }
         "topo" | "fleet" => efficiency::topo_report(args),
+        "overlap" => overlap_report::overlap_report(args),
         "replace" => replace::replace_report(args),
         "serve" => serve_report::serve_report(args),
         "model" => model_report::model_report(args),

@@ -1,0 +1,153 @@
+//! `scmoe report overlap` — the analysis layer's headline study: for each
+//! architecture × strategy on the 4-node IB fleet (GPT3-XL payload), where
+//! did the makespan actually go (critical-path attribution), and how much
+//! All-to-All hid behind compute (hidden-comm fraction)?
+//!
+//! The grid makes the paper's overlap claim quantitative: the sequential
+//! baseline's dispatch/combine phases sit on the critical path almost
+//! whole, while the adaptive ScMoE schedule's hidden fraction rises and
+//! the exposed A2A attribution collapses into backbone compute. One
+//! replace row (the drift study's migration step) shows H2D traffic
+//! entering the attribution, and one whole-model row adds the per-stage
+//! pipeline bubble view. Every number printed here is minted by
+//! `tools/des_mirror/mirror2.py --overlap-study` and pinned in
+//! docs/STUDIES.md.
+
+use anyhow::Result;
+
+use crate::analyze::{attribute, comm_overlap, critical_path, stage_bubbles,
+                     utilization};
+use crate::cluster::Scenario;
+use crate::coordinator::costs::{MoEKind, Strategy, TopoCosts};
+use crate::coordinator::model::{build_model_sim, model_layer_costs,
+                                PipelineSchedule};
+use crate::coordinator::replace::{MigrationPlan, ReplacePolicy};
+use crate::coordinator::spec::ScheduleSpec;
+use crate::moe::{AffinityEstimator, Placement};
+use crate::report::efficiency::{xl_compute_costs, xl_topo_proxy_costs};
+use crate::report::model_report::{model_grid_placements, model_spec,
+                                  model_tables, MODEL_MICROBATCHES,
+                                  MODEL_STAGES};
+use crate::report::replace::{study_config, study_tables, STUDY_DRIFT_NOISE,
+                             STUDY_DRIFT_SEED, STUDY_TOKEN_BYTES};
+use crate::simtime::{Resource, Sim};
+use crate::util::cli::Args;
+
+/// One grid row: attribution (ms), hidden-comm %, mean compute
+/// utilization %, critical-path task count.
+fn print_row(name: &str, sim: &Sim, devices_per_node: usize) {
+    let run = sim.run_traced();
+    let a = attribute(&run);
+    let ov = comm_overlap(&run.spans, devices_per_node);
+    let crit = critical_path(&run).len();
+    let comps: Vec<f64> = utilization(&run.spans)
+        .iter()
+        .filter(|u| matches!(u.resource, Resource::Compute(_)))
+        .map(|u| u.utilization)
+        .collect();
+    let cu = comps.iter().sum::<f64>() / comps.len() as f64;
+    println!(
+        "{:<26} {:>8.3} {:>8.3} {:>8.3} {:>8.3} {:>8.3} {:>8.3} {:>6.1}% \
+         {:>6.1}% {:>5}",
+        name, a.makespan * 1e3, a.backbone * 1e3, a.expert * 1e3,
+        a.dispatch * 1e3, a.combine * 1e3, a.migration * 1e3,
+        ov.hidden_fraction() * 100.0, cu * 100.0, crit
+    );
+}
+
+fn header() {
+    println!(
+        "{:<26} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8} {:>7} {:>7} {:>5}",
+        "row", "total", "backbone", "expert", "dispatch", "combine", "migr",
+        "hidden", "util", "crit"
+    );
+}
+
+pub fn overlap_report(_args: &Args) -> Result<()> {
+    let sc = Scenario::FourNodeA800IBx32;
+    let topo = sc.topology();
+    let dpn = topo.devices_per_node;
+    let tc = xl_topo_proxy_costs(sc);
+    println!("== makespan attribution x hidden comm ({}, GPT3-XL proxy; \
+              all columns ms) ==", sc.label());
+    header();
+
+    print_row(
+        "top2/seq",
+        &ScheduleSpec::new(MoEKind::Standard { k: 2 }, Strategy::Sequential)
+            .build(&tc)
+            .sim,
+        dpn,
+    );
+    print_row(
+        "top2/pipe2",
+        &ScheduleSpec::new(MoEKind::Standard { k: 2 },
+                           Strategy::Pipelined { chunks: 2 })
+            .build(&tc)
+            .sim,
+        dpn,
+    );
+    let kind = MoEKind::ScMoE { k: 1 };
+    let ovl = ScheduleSpec::new(kind, Strategy::Overlap);
+    let (slot, _) = ovl.choose_slot(&tc);
+    print_row(
+        &format!("scmoe/ovl (slot {})", slot + 1),
+        &ovl.with_slot(slot).build(&tc).sim,
+        dpn,
+    );
+    let opipe = ScheduleSpec::new(kind,
+                                  Strategy::OverlapPipelined { chunks: 2 });
+    let (oslot, _) = opipe.choose_slot(&tc);
+    print_row(
+        &format!("scmoe/ovl+pipe2 (slot {})", oslot + 1),
+        &opipe.with_slot(oslot).build(&tc).sim,
+        dpn,
+    );
+
+    // the drift study's migration step: block layout + measured-affinity
+    // MigrationPlan's H2D transfers (same reconstruction as
+    // `timeline_explorer --replace`), so `migr` finally shows up in the
+    // attribution when the transfer engines outlast the step's compute
+    let base = xl_compute_costs();
+    let cfg = study_config(ReplacePolicy::BreakEven, 1.0);
+    let tables = study_tables(STUDY_DRIFT_NOISE, STUDY_DRIFT_SEED, None);
+    let block = Placement::new(32, 32);
+    let mut est = AffinityEstimator::ewma(32, topo.n_nodes(), cfg.decay);
+    est.observe(&tables[0], topo.n_devices, topo.devices_per_node);
+    let measured = est.packed(topo.n_devices, topo.devices_per_node);
+    let plan = MigrationPlan::between(&block, &measured, cfg.bytes_per_expert);
+    let rtc = TopoCosts::from_routing(&base, &topo, &tables[0], &block,
+                                      STUDY_TOKEN_BYTES);
+    let mut sched = cfg.spec.build(&rtc);
+    plan.add_h2d_tasks(&mut sched.sim, &cfg.h2d);
+    print_row("replace/migrate-step", &sched.sim, dpn);
+
+    // one whole-model pipeline row (GPipe at the study's microbatch
+    // count, cross-layer placements) plus its per-stage bubble fractions
+    println!("\n== whole-model pipeline (GPipe, m = {MODEL_MICROBATCHES}, \
+              cross-layer placements) ==");
+    header();
+    let mtables = model_tables();
+    let (_, cross) = model_grid_placements(&mtables[0]);
+    let spec = model_spec(MODEL_MICROBATCHES, PipelineSchedule::GPipe);
+    let costs = model_layer_costs(&base, &topo, STUDY_TOKEN_BYTES,
+                                  &mtables[0], &cross, MODEL_MICROBATCHES);
+    let (sim, _) = build_model_sim(&spec, &costs, topo.n_devices,
+                                   topo.n_nodes());
+    print_row("model/gpipe-m4", &sim, dpn);
+    let bub = stage_bubbles(&sim.run(), MODEL_STAGES, topo.n_devices);
+    let marks: Vec<String> = bub
+        .iter()
+        .enumerate()
+        .map(|(s, b)| format!("s{s} {:.1}%", b * 100.0))
+        .collect();
+    println!("stage bubbles: {}", marks.join("  "));
+
+    println!("\nhidden = comm time concurrent with compute on the same \
+              device (comm stream) or node (uplink);");
+    println!("util = mean compute-stream busy fraction; crit = tasks on \
+              the realized critical path;");
+    println!("attribution columns partition the makespan by \
+              critical-path task category (exact)");
+    Ok(())
+}

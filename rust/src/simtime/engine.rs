@@ -34,6 +34,23 @@ pub enum Resource {
     Free,
 }
 
+impl Resource {
+    /// Human-readable row label shared by the ASCII timeline renderer
+    /// (`coordinator::timeline`) and the Chrome-trace exporter
+    /// (`analyze::export`): `compute[d]` / `comm[d]` / `link[n]` /
+    /// `h2d[d]` / `d2h[d]` / `free`.
+    pub fn row_label(self) -> String {
+        match self {
+            Resource::Compute(d) => format!("compute[{d}]"),
+            Resource::Comm(d) => format!("comm[{d}]"),
+            Resource::Link(n) => format!("link[{n}]"),
+            Resource::H2D(d) => format!("h2d[{d}]"),
+            Resource::D2H(d) => format!("d2h[{d}]"),
+            Resource::Free => "free".into(),
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct TaskSpec {
     pub label: String,
@@ -49,6 +66,38 @@ pub struct Span {
     pub resource: Resource,
     pub start: f64,
     pub end: f64,
+}
+
+/// Which realized constraint gated a task's start time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeKind {
+    /// A DAG dependency: the task started the instant its latest-finishing
+    /// dependency completed.
+    Dep,
+    /// Resource serialization: the task was ready earlier but its exclusive
+    /// resource was still running another task.
+    Resource,
+}
+
+/// The realized blocking predecessor of a task: the single predecessor
+/// whose *finish* equals this task's start in the executed schedule.
+/// `None` only for tasks that start at t = 0 with nothing gating them.
+#[derive(Debug, Clone, Copy)]
+pub struct Blocker {
+    pub pred: TaskId,
+    pub kind: EdgeKind,
+}
+
+/// Output of [`Sim::run_traced`]: the spans plus, per task, the realized
+/// blocking predecessor. Walking `blockers` back from the latest-finishing
+/// span yields a time-contiguous chain from t = 0 — the critical path
+/// (`analyze::critpath` consumes exactly this).
+#[derive(Debug, Clone)]
+pub struct TracedRun {
+    /// Per-task spans, indexed by task id (identical to [`Sim::run`]).
+    pub spans: Vec<Span>,
+    /// Per-task realized blocking predecessor, indexed by task id.
+    pub blockers: Vec<Option<Blocker>>,
 }
 
 #[derive(Default)]
@@ -94,7 +143,21 @@ impl Sim {
     }
 
     /// Run the schedule; returns spans indexed by task id.
+    ///
+    /// Thin wrapper over [`Sim::run_traced`] — the spans are bit-identical
+    /// (pinned by the mirror and the `analyze_timeline` property suite);
+    /// only the blocking-edge record is dropped.
     pub fn run(&self) -> Vec<Span> {
+        self.run_traced().spans
+    }
+
+    /// Run the schedule, additionally recording each task's realized
+    /// blocking predecessor: a [`EdgeKind::Resource`] edge to the previous
+    /// task on the same exclusive resource when the resource freed *after*
+    /// the task's dependencies finished, otherwise a [`EdgeKind::Dep`] edge
+    /// to the latest-finishing dependency (first such dep on ties). Tasks
+    /// that start at t = 0 unconstrained get `None`.
+    pub fn run_traced(&self) -> TracedRun {
         let n = self.tasks.len();
         let mut remaining: Vec<usize> = self.tasks.iter().map(|t| t.deps.len()).collect();
         let mut dependents: Vec<Vec<TaskId>> = vec![Vec::new(); n];
@@ -118,21 +181,43 @@ impl Sim {
 
         let mut resource_free: std::collections::BTreeMap<Resource, f64> =
             std::collections::BTreeMap::new();
+        let mut last_on: std::collections::BTreeMap<Resource, TaskId> =
+            std::collections::BTreeMap::new();
         let mut spans: Vec<Option<Span>> = (0..n).map(|_| None).collect();
+        let mut blockers: Vec<Option<Blocker>> = vec![None; n];
         let mut done = 0usize;
+
+        // latest-finishing dependency of `id` (first one on ties)
+        let latest_dep = |id: TaskId, spans: &[Option<Span>]| {
+            let mut best: Option<(TaskId, f64)> = None;
+            for &d in &self.tasks[id].deps {
+                let end = spans[d].as_ref().unwrap().end;
+                if best.is_none_or(|(_, e)| end > e) {
+                    best = Some((d, end));
+                }
+            }
+            best.map(|(pred, _)| Blocker { pred, kind: EdgeKind::Dep })
+        };
 
         while let Some((_, id)) = heap.pop() {
             let t = &self.tasks[id];
-            let start = match t.resource {
-                Resource::Free => ready_at[id],
+            let (start, blocker) = match t.resource {
+                Resource::Free => (ready_at[id], latest_dep(id, &spans)),
                 r => {
                     let free = resource_free.get(&r).copied().unwrap_or(0.0);
-                    free.max(ready_at[id])
+                    if free > ready_at[id] {
+                        let pred = *last_on.get(&r).expect("busy resource");
+                        (free, Some(Blocker { pred,
+                                              kind: EdgeKind::Resource }))
+                    } else {
+                        (ready_at[id], latest_dep(id, &spans))
+                    }
                 }
             };
             let end = start + t.duration;
             if !matches!(t.resource, Resource::Free) {
                 resource_free.insert(t.resource, end);
+                last_on.insert(t.resource, id);
             }
             spans[id] = Some(Span {
                 id,
@@ -141,6 +226,7 @@ impl Sim {
                 start,
                 end,
             });
+            blockers[id] = blocker;
             done += 1;
             for &dep in &dependents[id] {
                 ready_at[dep] = ready_at[dep].max(end);
@@ -151,7 +237,10 @@ impl Sim {
             }
         }
         assert_eq!(done, n, "cycle in task graph");
-        spans.into_iter().map(|s| s.unwrap()).collect()
+        TracedRun {
+            spans: spans.into_iter().map(|s| s.unwrap()).collect(),
+            blockers,
+        }
     }
 
     /// Makespan of the schedule.
@@ -259,5 +348,68 @@ mod tests {
     fn forward_dependency_panics() {
         let mut sim = Sim::new();
         sim.add("a", Resource::Compute(0), 1.0, &[5]);
+    }
+
+    #[test]
+    fn traced_spans_match_run() {
+        let mut sim = Sim::new();
+        let a = sim.add("a", Resource::Compute(0), 1.0, &[]);
+        let b = sim.add("b", Resource::Comm(0), 4.0, &[a]);
+        let c = sim.add("c", Resource::Compute(0), 2.0, &[a]);
+        sim.add("d", Resource::Compute(0), 1.0, &[b, c]);
+        let plain = sim.run();
+        let traced = sim.run_traced();
+        assert_eq!(plain.len(), traced.spans.len());
+        for (p, t) in plain.iter().zip(&traced.spans) {
+            assert_eq!(p.id, t.id);
+            assert_eq!(p.start.to_bits(), t.start.to_bits());
+            assert_eq!(p.end.to_bits(), t.end.to_bits());
+        }
+    }
+
+    #[test]
+    fn blocker_kinds_record_dep_vs_resource() {
+        let mut sim = Sim::new();
+        let a = sim.add("a", Resource::Compute(0), 2.0, &[]);
+        // same resource, no dep: gated by the resource freeing
+        let b = sim.add("b", Resource::Compute(0), 1.0, &[]);
+        // other resource, dep on a: gated by the dependency
+        let c = sim.add("c", Resource::Comm(0), 1.0, &[a]);
+        let tr = sim.run_traced();
+        assert!(tr.blockers[a].is_none());
+        let bb = tr.blockers[b].unwrap();
+        assert_eq!((bb.pred, bb.kind), (a, EdgeKind::Resource));
+        let bc = tr.blockers[c].unwrap();
+        assert_eq!((bc.pred, bc.kind), (a, EdgeKind::Dep));
+    }
+
+    #[test]
+    fn blocker_chain_is_time_contiguous() {
+        let mut sim = Sim::new();
+        let a = sim.add("a", Resource::Compute(0), 1.0, &[]);
+        let b = sim.add("b", Resource::Comm(0), 4.0, &[a]);
+        let c = sim.add("c", Resource::Compute(0), 2.0, &[a]);
+        let d = sim.add("d", Resource::Compute(0), 1.0, &[b, c]);
+        let tr = sim.run_traced();
+        let _ = (c, d);
+        for (id, blk) in tr.blockers.iter().enumerate() {
+            match blk {
+                Some(bl) => assert_eq!(
+                    tr.spans[bl.pred].end.to_bits(),
+                    tr.spans[id].start.to_bits(),
+                    "blocker finish must equal task start"
+                ),
+                None => assert_eq!(tr.spans[id].start, 0.0),
+            }
+        }
+        // d's latest-finishing dep is b (ends at 5.0), not c
+        assert_eq!(tr.blockers[d].unwrap().pred, b);
+    }
+
+    #[test]
+    fn row_labels() {
+        assert_eq!(Resource::Compute(3).row_label(), "compute[3]");
+        assert_eq!(Resource::Link(1).row_label(), "link[1]");
+        assert_eq!(Resource::Free.row_label(), "free");
     }
 }

@@ -16,4 +16,5 @@
 
 pub mod engine;
 
-pub use engine::{makespan, Resource, Sim, Span, TaskId, TaskSpec};
+pub use engine::{makespan, Blocker, EdgeKind, Resource, Sim, Span, TaskId,
+                 TaskSpec, TracedRun};

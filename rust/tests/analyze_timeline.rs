@@ -1,0 +1,227 @@
+//! Property + golden suite for the `analyze` layer, run over the *same*
+//! corpus of simulations the golden-timeline snapshot pins
+//! (`tests/common/generators.rs`), so every property is checked on every
+//! schedule shape the repo can produce: pair, fleet, routed, replace
+//! (H2D), serve, chaos, and whole-model pipelines.
+//!
+//! The analyze golden lines (`golden/analyze.txt`) and the Chrome-trace
+//! golden (`golden/trace_fleet.json`) are minted by
+//! `tools/des_mirror/mirror2.py --emit`, which re-derives critical path,
+//! slack, attribution, and overlap from its independent Python DES.
+
+#[path = "common/generators.rs"]
+mod generators;
+
+use std::collections::BTreeSet;
+
+use generators::golden_sims;
+use scmoe::analyze::{attribute, chrome_trace, comm_overlap, critical_path,
+                     makespan_with_zeroed, slack, utilization};
+use scmoe::cluster::Scenario;
+use scmoe::coordinator::costs::{MoEKind, Strategy};
+use scmoe::coordinator::spec::ScheduleSpec;
+use scmoe::report::efficiency::xl_topo_proxy_costs;
+use scmoe::simtime::{makespan, Resource, Sim};
+
+const GOLDEN_ANALYZE: &str = include_str!("golden/analyze.txt");
+const GOLDEN_TRACE: &str = include_str!("golden/trace_fleet.json");
+
+/// Corpus devices-per-node: every multi-device corpus sim (fleet,
+/// routed, replace, serve, chaos, model) models 2 devices per node.
+const CORPUS_DPN: usize = 2;
+
+fn analyze_line(name: &str, sim: &Sim) -> String {
+    let run = sim.run_traced();
+    let path = critical_path(&run);
+    let path_len: f64 = path
+        .iter()
+        .map(|&i| run.spans[i].end - run.spans[i].start)
+        .sum();
+    let a = attribute(&run);
+    let ov = comm_overlap(&run.spans, CORPUS_DPN);
+    format!(
+        "{name} | crit {} {path_len:.6} | attr {:.6} {:.6} {:.6} {:.6} \
+         {:.6} {:.6} | comm {:.6} {:.6}",
+        path.len(), a.backbone, a.expert, a.dispatch, a.combine,
+        a.migration, a.idle, ov.total, ov.hidden
+    )
+}
+
+#[test]
+fn traced_run_spans_equal_plain_run_on_every_generator() {
+    for (name, sim) in golden_sims() {
+        let plain = sim.run();
+        let traced = sim.run_traced();
+        assert_eq!(plain.len(), traced.spans.len(), "{name}");
+        for (p, t) in plain.iter().zip(&traced.spans) {
+            assert_eq!(p.id, t.id, "{name}");
+            assert_eq!(p.label, t.label, "{name}");
+            assert_eq!(p.resource, t.resource, "{name}");
+            assert_eq!(p.start.to_bits(), t.start.to_bits(), "{name}");
+            assert_eq!(p.end.to_bits(), t.end.to_bits(), "{name}");
+        }
+    }
+}
+
+#[test]
+fn critical_path_length_equals_makespan_on_every_generator() {
+    for (name, sim) in golden_sims() {
+        let run = sim.run_traced();
+        let ms = makespan(&run.spans);
+        let path = critical_path(&run);
+        let len: f64 = path
+            .iter()
+            .map(|&i| run.spans[i].end - run.spans[i].start)
+            .sum();
+        assert!((len - ms).abs() < 1e-9,
+                "{name}: critical path {len} != makespan {ms}");
+        // the blocking chain is time-contiguous: each hop starts exactly
+        // where its predecessor finished
+        for w in path.windows(2) {
+            assert_eq!(run.spans[w[0]].end.to_bits(),
+                       run.spans[w[1]].start.to_bits(), "{name}");
+        }
+    }
+}
+
+#[test]
+fn attribution_partitions_makespan_exactly() {
+    for (name, sim) in golden_sims() {
+        let run = sim.run_traced();
+        let a = attribute(&run);
+        assert!((a.categorized() + a.idle - a.makespan).abs() < 1e-12,
+                "{name}");
+        assert!(a.idle.abs() < 1e-9,
+                "{name}: work-conserving engine must leave no idle on the \
+                 critical path, got {}", a.idle);
+    }
+}
+
+#[test]
+fn hidden_plus_exposed_equals_total_comm() {
+    for (name, sim) in golden_sims() {
+        let ov = comm_overlap(&sim.run(), CORPUS_DPN);
+        assert!(ov.hidden >= 0.0 && ov.hidden <= ov.total + 1e-12, "{name}");
+        assert!((ov.hidden + ov.exposed() - ov.total).abs() < 1e-12,
+                "{name}");
+        let f = ov.hidden_fraction();
+        assert!((0.0..=1.0 + 1e-12).contains(&f), "{name}: {f}");
+    }
+}
+
+/// Zeroing any positive-slack task's duration never changes the
+/// makespan, holding the realized execution order fixed (the order slack
+/// is defined over — see `makespan_with_zeroed`: naively *re-running*
+/// the engine instead hits a genuine list-scheduling anomaly on the
+/// `Top1/pipe2` corpus timeline). The `None` replay doubles as a
+/// soundness check that the realized edge set reproduces the makespan
+/// bit-exactly.
+#[test]
+fn zeroing_a_positive_slack_task_never_changes_makespan() {
+    for (name, sim) in golden_sims() {
+        let run = sim.run_traced();
+        let ms = makespan(&run.spans);
+        assert_eq!(makespan_with_zeroed(&sim, &run, None).to_bits(),
+                   ms.to_bits(), "{name}: replay must be exact");
+        let slacks = slack(&sim, &run);
+        for (i, sl) in slacks.iter().enumerate() {
+            if *sl <= 1e-9 || sim.tasks()[i].duration == 0.0 {
+                continue;
+            }
+            let ms2 = makespan_with_zeroed(&sim, &run, Some(i));
+            assert!((ms2 - ms).abs() < 1e-9,
+                    "{name}: zeroing slack-{sl} task {i} ({}) moved the \
+                     makespan {ms} -> {ms2}", sim.tasks()[i].label);
+        }
+    }
+}
+
+#[test]
+fn utilization_in_unit_interval_on_all_presets() {
+    let ovl = ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, Strategy::Overlap);
+    for sc in Scenario::extended() {
+        let tc = xl_topo_proxy_costs(sc);
+        let (slot, _) = ovl.choose_slot(&tc);
+        let spans = ovl.with_slot(slot).build(&tc).run();
+        for u in utilization(&spans) {
+            assert!(u.utilization >= 0.0 && u.utilization <= 1.0 + 1e-12,
+                    "{}: {:?} utilization {}", sc.label(), u.resource,
+                    u.utilization);
+            assert!(!matches!(u.resource, Resource::Free));
+        }
+    }
+}
+
+#[test]
+fn adaptive_overlap_hides_more_comm_than_sequential_on_4node_ib() {
+    let tc = xl_topo_proxy_costs(Scenario::FourNodeA800IBx32);
+    let dpn = tc.n_devices() / tc.n_nodes();
+    let seq = ScheduleSpec::new(MoEKind::Standard { k: 2 },
+                                Strategy::Sequential)
+        .build(&tc)
+        .run();
+    let ovl = ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, Strategy::Overlap);
+    let (slot, _) = ovl.choose_slot(&tc);
+    let adaptive = ovl.with_slot(slot).build(&tc).run();
+    let h_seq = comm_overlap(&seq, dpn).hidden_fraction();
+    let h_adp = comm_overlap(&adaptive, dpn).hidden_fraction();
+    assert!(h_adp > h_seq,
+            "adaptive overlap must hide strictly more comm: {h_adp} vs \
+             {h_seq}");
+}
+
+#[test]
+fn analyze_lines_match_golden_snapshots() {
+    let golden: Vec<&str> = GOLDEN_ANALYZE
+        .lines()
+        .filter(|l| !l.starts_with('#') && !l.trim().is_empty())
+        .collect();
+    let current: Vec<String> = golden_sims()
+        .iter()
+        .map(|(name, sim)| analyze_line(name, sim))
+        .collect();
+    assert_eq!(
+        golden.len(),
+        current.len(),
+        "golden/analyze.txt has {} lines, current build produces {} — \
+         regenerate via mirror2.py --emit deliberately",
+        golden.len(),
+        current.len()
+    );
+    let mut diffs = Vec::new();
+    for (g, c) in golden.iter().zip(&current) {
+        if g != c {
+            diffs.push(format!("- {g}\n+ {c}"));
+        }
+    }
+    assert!(diffs.is_empty(),
+            "{} analyze line(s) drifted:\n{}", diffs.len(), diffs.join("\n"));
+}
+
+#[test]
+fn chrome_trace_matches_golden_fleet_trace() {
+    let (name, sim) = golden_sims()
+        .into_iter()
+        .find(|(n, _)| n == "fleet:ScMoE/overlap-s2")
+        .expect("fleet corpus entry");
+    let run = sim.run_traced();
+    let trace = chrome_trace(&sim, &run, CORPUS_DPN);
+    assert_eq!(trace.as_str(), GOLDEN_TRACE.trim_end_matches('\n'),
+               "{name}: Chrome trace drifted from golden/trace_fleet.json");
+}
+
+#[test]
+fn critical_spans_marked_in_rendered_timeline() {
+    let (_, sim) = golden_sims()
+        .into_iter()
+        .find(|(n, _)| n == "fleet:ScMoE/overlap-s2")
+        .unwrap();
+    let run = sim.run_traced();
+    let crit: BTreeSet<usize> = critical_path(&run).into_iter().collect();
+    let marked =
+        scmoe::coordinator::timeline::render_marked(&run.spans, 100, &crit);
+    assert!(marked.contains('#'));
+    assert_eq!(scmoe::coordinator::timeline::render_marked(
+                   &run.spans, 100, &BTreeSet::new()),
+               scmoe::coordinator::timeline::render(&run.spans, 100));
+}

@@ -6,387 +6,22 @@
 //! Costs are dyadic rationals (exact in binary floating point), so every
 //! start/makespan formats exactly at six decimals and comparisons are
 //! deterministic across platforms.
+//!
+//! The simulations themselves live in `tests/common/generators.rs`,
+//! shared with the analysis-layer property suite (`analyze_timeline.rs`)
+//! so both run over the identical corpus.
 
-use scmoe::cluster::{ChaosSpec, LinkFault, LinkModel, Topology};
-use scmoe::coordinator::costs::{BlockCosts, ComputeCosts, MoEKind, Strategy, TopoCosts};
-use scmoe::coordinator::model::{build_model_sim, model_layer_costs,
-                                ModelSpec, PipelineSchedule};
-use scmoe::coordinator::replace::{failover_placement, MigrationPlan};
-use scmoe::coordinator::schedule::{build_pair_schedule, ChunkPipelining, PairSchedule};
-use scmoe::coordinator::spec::ScheduleSpec;
-use scmoe::moe::{phase_affine_routing, Placement, RoutingTable};
-use scmoe::simtime::{Resource, Span};
+#[path = "common/generators.rs"]
+mod generators;
+
+use generators::{golden_sims, render_spans};
 
 const GOLDEN: &str = include_str!("golden/timelines.txt");
 
-fn dyadic_costs() -> BlockCosts {
-    BlockCosts {
-        attn: 1.0,
-        mlp: 0.75,
-        se: 0.75,
-        gate: 0.0625,
-        encode: 0.0625,
-        decode: 0.0625,
-        expert_k1: 0.5,
-        a2a_k1: 0.8125,
-        // 1/13 of the one-way time is launch latency: chunked entries pay
-        // it per chunk, so pipe4 visibly stops dominating pipe2
-        a2a_alpha_k1: 0.0625,
-    }
-}
-
-/// 2 nodes × 2 devices; node 1 runs every compute op 2x slower.
-fn dyadic_fleet() -> TopoCosts {
-    let fast = dyadic_costs();
-    let mut slow = dyadic_costs();
-    slow.attn *= 2.0;
-    slow.mlp *= 2.0;
-    slow.se *= 2.0;
-    slow.gate *= 2.0;
-    slow.encode *= 2.0;
-    slow.decode *= 2.0;
-    slow.expert_k1 *= 2.0;
-    TopoCosts {
-        per_device: vec![fast.clone(), fast, slow.clone(), slow],
-        a2a_intra_k1: vec![0.25; 4],
-        a2a_inter_k1: vec![0.5; 2],
-        a2a_intra_combine_k1: Vec::new(),
-        a2a_inter_combine_k1: Vec::new(),
-        a2a_intra_alpha_k1: vec![0.0625; 4],
-        a2a_inter_alpha_k1: vec![0.125; 2],
-        a2a_intra_combine_alpha_k1: Vec::new(),
-        a2a_inter_combine_alpha_k1: Vec::new(),
-        chunk_source: None,
-        expert_load: None,
-        devices_per_node: 2,
-    }
-}
-
-/// Dyadic routed-placement scenario: 4 devices in 2 nodes with
-/// power-of-two link constants, a node-affine routing table (node 0's
-/// tokens pick experts {0, 2}; node 1's pick {1, 3}), and three expert
-/// placements. Every duration is a dyadic rational, so the snapshot
-/// format stays exact.
-fn routed_table() -> RoutingTable {
-    let indices: Vec<i32> = vec![0, 2, 0, 2, 2, 0, 0, 2, 1, 3, 3, 1, 3, 1, 3, 3];
-    let weights = vec![1.0f32; 16];
-    RoutingTable::build(&indices, &weights, 16, 1, 4, 16)
-}
-
-fn routed_fleet(rt: &RoutingTable, placement: &Placement) -> TopoCosts {
-    let topo = Topology {
-        n_devices: 4,
-        devices_per_node: 2,
-        intra: LinkModel::new(0.0625, 1024.0),
-        inter: Some(LinkModel::new(0.125, 512.0)),
-        compute_scale: 1.0,
-        device_scales: None,
-        node_intra: None,
-    };
-    let base = ComputeCosts {
-        attn: 1.0,
-        mlp: 0.75,
-        se: 0.75,
-        gate: 0.0625,
-        encode: 0.0625,
-        decode: 0.0625,
-        expert_k1: 0.5,
-    };
-    TopoCosts::from_routing(&base, &topo, rt, placement, 64)
-}
-
-fn resource_token(r: Resource) -> String {
-    match r {
-        Resource::Compute(d) => format!("c{d}"),
-        Resource::Comm(d) => format!("m{d}"),
-        Resource::Link(n) => format!("l{n}"),
-        Resource::H2D(d) => format!("h{d}"),
-        Resource::D2H(d) => format!("d{d}"),
-        Resource::Free => "f".into(),
-    }
-}
-
-fn render_spans(name: &str, mut spans: Vec<Span>) -> String {
-    let makespan = spans.iter().fold(0.0f64, |m, s| m.max(s.end));
-    spans.sort_by(|a, b| a.start.total_cmp(&b.start).then(a.id.cmp(&b.id)));
-    let toks: Vec<String> = spans
-        .iter()
-        .map(|s| format!("{}@{}@{:.6}", s.label, resource_token(s.resource), s.start))
-        .collect();
-    format!("{name} | makespan {makespan:.6} | {}", toks.join(" "))
-}
-
-fn render_line(name: &str, sched: &PairSchedule) -> String {
-    render_spans(name, sched.run())
-}
-
 fn generate_lines() -> Vec<String> {
-    let c = dyadic_costs();
-    let mut lines = Vec::new();
-    let kinds = [
-        MoEKind::Standard { k: 1 },
-        MoEKind::Standard { k: 2 },
-        MoEKind::Standard { k: 3 },
-        MoEKind::SharedExpert,
-        MoEKind::ScMoE { k: 1 },
-        MoEKind::ScMoE { k: 2 },
-    ];
-    for kind in kinds {
-        let strategies: Vec<Strategy> = match kind {
-            MoEKind::Standard { .. } => vec![
-                Strategy::Sequential,
-                Strategy::Pipelined { chunks: 2 },
-                Strategy::Pipelined { chunks: 4 },
-            ],
-            MoEKind::SharedExpert => vec![
-                Strategy::Sequential,
-                Strategy::Pipelined { chunks: 1 },
-                Strategy::Pipelined { chunks: 2 },
-            ],
-            MoEKind::ScMoE { .. } => vec![
-                Strategy::Sequential,
-                Strategy::Pipelined { chunks: 2 },
-            ],
-        };
-        for strategy in strategies {
-            let name = format!("{}/{}", kind.label(), strategy.label());
-            lines.push(render_line(&name, &build_pair_schedule(&c, kind, strategy, 0)));
-        }
-        if matches!(kind, MoEKind::ScMoE { .. }) {
-            for slot in 0..4 {
-                let s = build_pair_schedule(&c, kind, Strategy::Overlap, slot);
-                lines.push(render_line(
-                    &format!("{}/overlap-s{slot}", kind.label()), &s));
-            }
-            for slot in 0..4 {
-                let s = build_pair_schedule(
-                    &c, kind, Strategy::OverlapPipelined { chunks: 2 }, slot);
-                lines.push(render_line(
-                    &format!("{}/overlap+pipe2-s{slot}", kind.label()), &s));
-            }
-        }
-    }
-
-    let tf = dyadic_fleet();
-    lines.push(render_line(
-        "fleet:Top2/seq",
-        &ScheduleSpec::new(MoEKind::Standard { k: 2 }, Strategy::Sequential)
-            .build(&tf)));
-    lines.push(render_line(
-        "fleet:Top2/pipe2",
-        &ScheduleSpec::new(MoEKind::Standard { k: 2 },
-                           Strategy::Pipelined { chunks: 2 })
-            .build(&tf)));
-    lines.push(render_line(
-        "fleet:Top2/pipe2-chained",
-        &ScheduleSpec::new(MoEKind::Standard { k: 2 },
-                           Strategy::Pipelined { chunks: 2 })
-            .with_pipelining(ChunkPipelining::PhaseChained)
-            .build(&tf)));
-    for slot in 0..4 {
-        lines.push(render_line(
-            &format!("fleet:ScMoE/overlap-s{slot}"),
-            &ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, Strategy::Overlap)
-                .with_slot(slot)
-                .build(&tf)));
-    }
-    lines.push(render_line(
-        "fleet:ScMoE/overlap+pipe2-s2",
-        &ScheduleSpec::new(MoEKind::ScMoE { k: 1 },
-                           Strategy::OverlapPipelined { chunks: 2 })
-            .with_slot(2)
-            .build(&tf)));
-
-    let rt = routed_table();
-    for (name, placement) in [
-        ("block", Placement::new(4, 4)),
-        ("affinity", Placement::affinity_packed(&rt, 4, 2)),
-        ("skewed", Placement::imbalance_skewed(4, 4, 2)),
-    ] {
-        let tc = routed_fleet(&rt, &placement);
-        lines.push(render_line(
-            &format!("routed:{name}/seq"),
-            &ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, Strategy::Sequential)
-                .build(&tc)));
-        lines.push(render_line(
-            &format!("routed:{name}/overlap-s2"),
-            &ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, Strategy::Overlap)
-                .with_slot(2)
-                .build(&tc)));
-        lines.push(render_line(
-            &format!("routed:{name}/overlap+pipe2-s2"),
-            &ScheduleSpec::new(MoEKind::ScMoE { k: 1 },
-                               Strategy::OverlapPipelined { chunks: 2 })
-                .with_slot(2)
-                .build(&tc)));
-        // token-true chunked expert compute: each chunk's Expert span is
-        // proportional to its own kept copies on that device
-        lines.push(render_line(
-            &format!("routed:{name}/pipe2"),
-            &ScheduleSpec::new(MoEKind::ScMoE { k: 1 },
-                               Strategy::Pipelined { chunks: 2 })
-                .build(&tc)));
-    }
-
-    // live re-placement migration steps: the routed block-placement
-    // schedules with the block->affinity MigrationPlan's H2D transfers
-    // overlapped in as dependency-free tasks on the h<dev> engines
-    // (4096 B/expert over an alpha=0.125 beta=1024 H2D link -> 4.125 s
-    // per moved expert). The pre-existing spans stay byte-identical to
-    // the routed:block entries (mirror consistency_checks5).
-    let block = Placement::new(4, 4);
-    let affinity = Placement::affinity_packed(&rt, 4, 2);
-    let plan = MigrationPlan::between(&block, &affinity, 4096);
-    let h2d = LinkModel::new(0.125, 1024.0);
-    let tc = routed_fleet(&rt, &block);
-    for (name, spec) in [
-        ("seq",
-         ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, Strategy::Sequential)),
-        ("overlap-s2",
-         ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, Strategy::Overlap)
-             .with_slot(2)),
-        ("pipe2",
-         ScheduleSpec::new(MoEKind::ScMoE { k: 1 },
-                           Strategy::Pipelined { chunks: 2 })),
-    ] {
-        let mut sched = spec.build(&tc);
-        plan.add_h2d_tasks(&mut sched.sim, &h2d);
-        lines.push(render_line(&format!("replace:block->affinity/{name}"),
-                               &sched));
-    }
-
-    // open-loop serving steps: phase_affine_routing batches priced on
-    // the routed fleet under the block placement. serve:wait1/* pins
-    // the serving loop's per-step traffic-seed advance (seeds 97..99,
-    // uniform noise 0.25); serve:mixed pins the prefill/decode noise
-    // split (8 exact prompt tokens + 8 decode tokens at 0.5).
-    for s in 0..3u64 {
-        let rt = phase_affine_routing(4, 2, 4, 16, 0, 0, 0.25, 0.25, 97 + s);
-        let tc = routed_fleet(&rt, &block);
-        lines.push(render_line(
-            &format!("serve:wait1/step{s}"),
-            &ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, Strategy::Sequential)
-                .build(&tc)));
-    }
-    let rt = phase_affine_routing(4, 2, 4, 8, 8, 0, 0.0, 0.5, 98);
-    let tc = routed_fleet(&rt, &block);
-    lines.push(render_line(
-        "serve:mixed/seq",
-        &ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, Strategy::Sequential)
-            .build(&tc)));
-
-    // chaos goldens on the same dyadic routed fleet, all rng-free so
-    // every span stays dyadic-exact: a persistent 2x straggler on device
-    // 3, a degraded shared uplink (alpha x2, beta /4 ->
-    // LinkModel(0.25, 128)), and a device-3 dropout whose failover plan
-    // (E3 -> device 0, the lowest-id tie) overlaps the clean step as an
-    // H2D task (mirror generate_chaos_lines7)
-    let rt = routed_table();
-    let topo = Topology {
-        n_devices: 4,
-        devices_per_node: 2,
-        intra: LinkModel::new(0.0625, 1024.0),
-        inter: Some(LinkModel::new(0.125, 512.0)),
-        compute_scale: 1.0,
-        device_scales: None,
-        node_intra: None,
-    };
-    let base = ComputeCosts {
-        attn: 1.0,
-        mlp: 0.75,
-        se: 0.75,
-        gate: 0.0625,
-        encode: 0.0625,
-        decode: 0.0625,
-        expert_k1: 0.5,
-    };
-    let straggler = ChaosSpec { stragglers: vec![(3, 2.0)],
-                                ..ChaosSpec::clean(0) };
-    let tc = TopoCosts::from_routing(&base, &straggler.perturb(&topo, 0), &rt,
-                                     &block, 64);
-    lines.push(render_line(
-        "chaos:straggler/seq",
-        &ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, Strategy::Sequential)
-            .build(&tc)));
-    let degraded = ChaosSpec {
-        link_faults: vec![LinkFault { node: None, alpha_mult: 2.0,
-                                      beta_div: 4.0, flap: None }],
-        ..ChaosSpec::clean(0)
-    };
-    let tc = TopoCosts::from_routing(&base, &degraded.perturb(&topo, 0), &rt,
-                                     &block, 64);
-    lines.push(render_line(
-        "chaos:degraded-uplink/overlap-s2",
-        &ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, Strategy::Overlap)
-            .with_slot(2)
-            .build(&tc)));
-    let failover = failover_placement(&block, 3);
-    let plan = MigrationPlan::between(&block, &failover, 4096);
-    let tc = TopoCosts::from_routing(&base, &topo, &rt, &block, 64);
-    let mut sched = ScheduleSpec::new(MoEKind::ScMoE { k: 1 },
-                                      Strategy::Sequential)
-        .build(&tc);
-    plan.add_h2d_tasks(&mut sched.sim, &h2d);
-    lines.push(render_line("chaos:dropout-recovery/seq", &sched));
-
-    // whole-model L-layer pipeline timelines (build_model_sim): layer 0
-    // is the routed corpus table, layer 1 its +1-stride successor priced
-    // from chained sources under the block placement. L2S2 lines put
-    // layer 1 on stage 1's engines (c4..c7, m4..m7, l2..l3). The final
-    // line pins source-side D2H pricing: the replace-corpus
-    // block->affinity plan with each H2D write chained behind its d2h
-    // read-out (4096 B/expert over alpha=0.0625 beta=2048 -> 2.0625 s
-    // per moved expert on d<dev>). Mirror generate_model_lines8.
-    let rt0 = routed_table();
-    let idx1: Vec<i32> = rt0_shifted_indices();
-    let rt1 = RoutingTable::build(&idx1, &vec![1.0f32; 16], 16, 1, 4, 16);
-    let model_line = |name: &str, n_layers: usize, stages: usize,
-                      microbatches: usize, schedule: PipelineSchedule| {
-        let tabs: Vec<RoutingTable> =
-            [rt0.clone(), rt1.clone()][..n_layers].to_vec();
-        let ps = vec![Placement::new(4, 4); n_layers];
-        let costs = model_layer_costs(&base, &topo, 64, &tabs, &ps,
-                                      microbatches);
-        let spec = ModelSpec {
-            layers: vec![ScheduleSpec::new(MoEKind::ScMoE { k: 1 },
-                                           Strategy::Sequential); n_layers],
-            stages,
-            microbatches,
-            schedule,
-        };
-        let (sim, _) = build_model_sim(&spec, &costs, 4, 2);
-        render_spans(name, sim.run())
-    };
-    lines.push(model_line("model:L1/seq-m1", 1, 1, 1,
-                          PipelineSchedule::LayerSequential));
-    lines.push(model_line("model:L2/seq-m1", 2, 1, 1,
-                          PipelineSchedule::LayerSequential));
-    lines.push(model_line("model:L2/gpipe-m2", 2, 1, 2,
-                          PipelineSchedule::GPipe));
-    lines.push(model_line("model:L2/1f1b-m2", 2, 1, 2,
-                          PipelineSchedule::OneFOneB));
-    lines.push(model_line("model:L2S2/gpipe-m2", 2, 2, 2,
-                          PipelineSchedule::GPipe));
-    lines.push(model_line("model:L2S2/layerseq-m2", 2, 2, 2,
-                          PipelineSchedule::LayerSequential));
-    let affinity = Placement::affinity_packed(&rt0, 4, 2);
-    let plan = MigrationPlan::between(&block, &affinity, 4096);
-    let d2h = LinkModel::new(0.0625, 2048.0);
-    let tc = routed_fleet(&rt0, &block);
-    let mut sched = ScheduleSpec::new(MoEKind::ScMoE { k: 1 },
-                                      Strategy::Sequential)
-        .build(&tc);
-    plan.add_transfer_tasks(&mut sched.sim, &h2d, Some(&d2h), 0);
-    lines.push(render_line("model:d2h-migration/seq", &sched));
-    lines
-}
-
-/// Layer 1's routing: every token's corpus-table expert shifted by +1
-/// mod 4 (a deterministic inter-layer transition, dyadic-exact).
-fn rt0_shifted_indices() -> Vec<i32> {
-    vec![0, 2, 0, 2, 2, 0, 0, 2, 1, 3, 3, 1, 3, 1, 3, 3]
+    golden_sims()
         .into_iter()
-        .map(|e| (e + 1) % 4)
+        .map(|(name, sim)| render_spans(&name, sim.run()))
         .collect()
 }
 

@@ -50,7 +50,14 @@ def resource_token(r):
     return 'f'
 
 
+# When a list, render_line records every (name, sim) it renders — set by
+# corpus_sims9() so the PR9 analysis layer replays the exact golden corpus.
+_COLLECT9 = None
+
+
 def render_line(name, sim):
+    if _COLLECT9 is not None:
+        _COLLECT9.append((name, sim))
     spans = sim.run()
     makespan = max((s[4] for s in spans), default=0.0)
     spans = sorted(spans, key=lambda s: (s[3], s[0]))
@@ -4011,6 +4018,585 @@ def ref_final_placement8(base, topo, tables, initial, policy):
     return placement
 
 
+# ======================================================================
+# PR 9 model: the timeline analysis layer. Transcribes the post-PR9 Rust
+# line-by-line:
+#   simtime/engine.rs (run_traced) -> run_traced9
+#   analyze/critpath.rs            -> critical_path9 / slack9 / attribute9
+#   analyze/overlap.rs             -> comm_overlap9 / utilization9 /
+#                                     stage_bubbles9
+#   analyze/export.rs + util/json  -> chrome_trace9 / json9
+# Both engines key their ready heaps by (ready_at, task id), so pop order
+# — and therefore last_on and every realized blocking edge — matches the
+# Rust engine exactly, and the analytics below are bit-identical.
+# ======================================================================
+
+# Rust Resource derives Ord over declaration order:
+# Compute, Comm, Link, H2D, D2H, Free.
+RES_RANK9 = {'compute': 0, 'comm': 1, 'link': 2, 'h2d': 3, 'd2h': 4,
+             'free': 5}
+
+
+def res_key9(r):
+    return (RES_RANK9[r[0]], r[1] if len(r) > 1 else 0)
+
+
+def run_traced9(sim):
+    """simtime::engine::Sim::run_traced — spans plus, per task, the
+    realized blocking predecessor: (pred, 'res') when the exclusive
+    resource freed after the deps finished, (pred, 'dep') to the
+    latest-finishing dep otherwise (first on ties), None when the task
+    started unconstrained at t = 0."""
+    n = len(sim.tasks)
+    remaining = [len(t[3]) for t in sim.tasks]
+    dependents = [[] for _ in range(n)]
+    for i, t in enumerate(sim.tasks):
+        for d in t[3]:
+            dependents[d].append(i)
+    heap = []
+    ready_at = [0.0] * n
+    for i, t in enumerate(sim.tasks):
+        if not t[3]:
+            heapq.heappush(heap, (0.0, i))
+    free = {}
+    last_on = {}
+    spans = [None] * n
+    blockers = [None] * n
+    done = 0
+
+    def latest_dep(i):
+        best = None
+        for d in sim.tasks[i][3]:
+            end = spans[d][4]
+            if best is None or end > best[1]:
+                best = (d, end)
+        return None if best is None else (best[0], 'dep')
+
+    while heap:
+        _, i = heapq.heappop(heap)
+        label, res, dur, deps = sim.tasks[i]
+        if res == FREE:
+            start, blk = ready_at[i], latest_dep(i)
+        else:
+            f = free.get(res, 0.0)
+            if f > ready_at[i]:
+                start, blk = f, (last_on[res], 'res')
+            else:
+                start, blk = ready_at[i], latest_dep(i)
+        end = start + dur
+        if res != FREE:
+            free[res] = end
+            last_on[res] = i
+        spans[i] = (i, label, res, start, end)
+        blockers[i] = blk
+        done += 1
+        for dep in dependents[i]:
+            ready_at[dep] = max(ready_at[dep], end)
+            remaining[dep] -= 1
+            if remaining[dep] == 0:
+                heapq.heappush(heap, (ready_at[dep], dep))
+    assert done == n, 'cycle'
+    return spans, blockers
+
+
+def critical_path9(spans, blockers):
+    """analyze::critpath::critical_path — walk blockers back from the
+    latest-finishing span (lowest id on ties)."""
+    if not spans:
+        return []
+    sink = 0
+    for sp in spans:
+        if sp[4] > spans[sink][4]:
+            sink = sp[0]
+    path = [sink]
+    while blockers[path[-1]] is not None:
+        path.append(blockers[path[-1]][0])
+    path.reverse()
+    return path
+
+
+def slack9(sim, spans):
+    """analyze::critpath::slack — CPM over dep edges plus the realized
+    per-resource execution order."""
+    n = len(spans)
+    ms = max((sp[4] for sp in spans), default=0.0)
+    succs = realized_succs9(sim, spans)
+    indeg = [0] * n
+    for ss in succs:
+        for s in ss:
+            indeg[s] += 1
+    stack = [i for i in range(n) if indeg[i] == 0]
+    order = []
+    while stack:
+        i = stack.pop()
+        order.append(i)
+        for s in succs[i]:
+            indeg[s] -= 1
+            if indeg[s] == 0:
+                stack.append(s)
+    assert len(order) == n, 'realized edge set must be acyclic'
+    lf = [ms] * n
+    for i in reversed(order):
+        for s in succs[i]:
+            cand = lf[s] - (spans[s][4] - spans[s][3])
+            if cand < lf[i]:
+                lf[i] = cand
+    return [lf[i] - spans[i][4] for i in range(n)]
+
+
+def realized_succs9(sim, spans):
+    """analyze::critpath::realized_succs — dep edges plus the realized
+    per-resource execution order."""
+    n = len(spans)
+    succs = [[] for _ in range(n)]
+    for i, t in enumerate(sim.tasks):
+        for d in t[3]:
+            succs[d].append(i)
+    by_res = {}
+    for sp in spans:
+        if sp[2] != FREE:
+            by_res.setdefault(sp[2], []).append(sp[0])
+    for ids in by_res.values():
+        ids.sort(key=lambda i: (spans[i][3], spans[i][4], i))
+        for a, b in zip(ids, ids[1:]):
+            succs[a].append(b)
+    return succs
+
+
+def makespan_with_zeroed9(sim, spans, zero=None):
+    """analyze::critpath::makespan_with_zeroed — forward CPM pass over
+    the realized edge set with task `zero`'s duration set to 0. Not an
+    engine re-run: list scheduling is not anomaly-free (zeroing the
+    slack-carrying Gate chunk of the Top1/pipe2 corpus timeline reorders
+    a compute queue and moves the re-simulated makespan), but over the
+    realized order slack is exactly the do-nothing budget."""
+    n = len(spans)
+    succs = realized_succs9(sim, spans)
+    indeg = [0] * n
+    for ss in succs:
+        for s in ss:
+            indeg[s] += 1
+    stack = [i for i in range(n) if indeg[i] == 0]
+    es = [0.0] * n
+    ms = 0.0
+    seen = 0
+    while stack:
+        i = stack.pop()
+        seen += 1
+        dur = 0.0 if i == zero else sim.tasks[i][2]
+        ef = es[i] + dur
+        if ef > ms:
+            ms = ef
+        for s in succs[i]:
+            if ef > es[s]:
+                es[s] = ef
+            indeg[s] -= 1
+            if indeg[s] == 0:
+                stack.append(s)
+    assert seen == n, 'realized edge set must be acyclic'
+    return ms
+
+
+def category9(label, res):
+    if res[0] in ('h2d', 'd2h'):
+        return 'migration'
+    if label.startswith('A2A-D'):
+        return 'dispatch'
+    if label.startswith('A2A-C'):
+        return 'combine'
+    if label.startswith('Expert'):
+        return 'expert'
+    return 'backbone'
+
+
+def attribute9(spans, blockers):
+    """analyze::critpath::attribute — category sums in path order, idle
+    subtracted last (matching the Rust association exactly)."""
+    ms = max((sp[4] for sp in spans), default=0.0)
+    a = {'makespan': ms, 'backbone': 0.0, 'expert': 0.0, 'dispatch': 0.0,
+         'combine': 0.0, 'migration': 0.0}
+    for i in critical_path9(spans, blockers):
+        sp = spans[i]
+        a[category9(sp[1], sp[2])] += sp[4] - sp[3]
+    a['idle'] = ms - (a['backbone'] + a['expert'] + a['dispatch']
+                      + a['combine'] + a['migration'])
+    return a
+
+
+def merge9(ivs):
+    out = []
+    for s, e in sorted(ivs, key=lambda t: (t[0], t[1])):
+        if out and s <= out[-1][1]:
+            if e > out[-1][1]:
+                out[-1][1] = e
+            continue
+        out.append([s, e])
+    return out
+
+
+def overlap_len9(merged, s, e):
+    acc = 0.0
+    for a, b in merged:
+        acc += max(min(b, e) - max(a, s), 0.0)
+    return acc
+
+
+def comm_overlap9(spans, dpn):
+    """analyze::overlap::comm_overlap — (total, hidden)."""
+    assert dpn > 0
+    compute = {}
+    for sp in spans:
+        if sp[2][0] == 'compute':
+            compute.setdefault(sp[2][1], []).append((sp[3], sp[4]))
+    total = 0.0
+    hidden = 0.0
+    for sp in spans:
+        if sp[2][0] == 'comm':
+            devs = [sp[2][1]]
+        elif sp[2][0] == 'link':
+            devs = list(range(sp[2][1] * dpn, (sp[2][1] + 1) * dpn))
+        else:
+            continue
+        total += sp[4] - sp[3]
+        ivs = []
+        for d in devs:
+            ivs.extend(compute.get(d, []))
+        hidden += overlap_len9(merge9(ivs), sp[3], sp[4])
+    return total, hidden
+
+
+def utilization9(spans):
+    """analyze::overlap::utilization — [(resource, busy, util)] in
+    Resource order, Free skipped."""
+    ms = max((sp[4] for sp in spans), default=0.0)
+    busy = {}
+    for sp in spans:
+        if sp[2] != FREE:
+            busy[sp[2]] = busy.get(sp[2], 0.0) + (sp[4] - sp[3])
+    return [(r, b, b / ms if ms > 0.0 else 0.0)
+            for r, b in sorted(busy.items(), key=lambda kv: res_key9(kv[0]))]
+
+
+def stage_bubbles9(spans, stages, devices_per_stage):
+    ms = max((sp[4] for sp in spans), default=0.0)
+    out = []
+    for st in range(stages):
+        lo = st * devices_per_stage
+        hi = lo + devices_per_stage
+        ivs = [(sp[3], sp[4]) for sp in spans
+               if sp[2][0] == 'compute' and lo <= sp[2][1] < hi]
+        busy = sum(b - a for a, b in merge9(ivs))
+        out.append(1.0 - busy / ms if ms > 0.0 else 0.0)
+    return out
+
+
+# --- analyze/export.rs + util/json.rs ---------------------------------
+
+def row_label9(r):
+    return 'free' if r == FREE else '%s[%d]' % (r[0], r[1])
+
+
+def node_of9(r, dpn):
+    if r == FREE:
+        return 0
+    if r[0] == 'link':
+        return r[1]
+    return r[1] // dpn
+
+
+def json9(v):
+    """util::json::Json::to_string — sorted object keys, compact
+    separators, every number on the integer fast-path (asserted: the
+    pinned trace is dyadic, so each microsecond value is exact)."""
+    if isinstance(v, bool):
+        return 'true' if v else 'false'
+    if isinstance(v, (int, float)):
+        f = float(v)
+        assert f == int(f) and abs(f) < 1e15, ('non-integer trace value', v)
+        return str(int(f))
+    if isinstance(v, str):
+        assert '"' not in v and '\\' not in v
+        return '"' + v + '"'
+    if isinstance(v, list):
+        return '[' + ','.join(json9(x) for x in v) + ']'
+    assert isinstance(v, dict), v
+    return '{' + ','.join('"%s":%s' % (k, json9(x))
+                          for k, x in sorted(v.items())) + '}'
+
+
+def chrome_trace9(sim, spans, blockers, dpn):
+    """analyze::export::chrome_trace — metadata events first (processes,
+    then threads, in sorted order), then spans in id order."""
+    assert dpn > 0
+    on_path = set(critical_path9(spans, blockers))
+    slacks = slack9(sim, spans)
+    resources = sorted({sp[2] for sp in spans}, key=res_key9)
+    tid = {r: i for i, r in enumerate(resources)}
+    events = []
+    for p in sorted({node_of9(r, dpn) for r in resources}):
+        events.append({'args': {'name': 'node%d' % p},
+                       'name': 'process_name', 'ph': 'M', 'pid': p})
+    for r in resources:
+        events.append({'args': {'name': row_label9(r)},
+                       'name': 'thread_name', 'ph': 'M',
+                       'pid': node_of9(r, dpn), 'tid': tid[r]})
+    for sp in spans:
+        events.append({'args': {'crit': sp[0] in on_path,
+                                'slack_us': slacks[sp[0]] * 1e6},
+                       'cat': 'sim', 'dur': (sp[4] - sp[3]) * 1e6,
+                       'name': sp[1], 'ph': 'X',
+                       'pid': node_of9(sp[2], dpn), 'tid': tid[sp[2]],
+                       'ts': sp[3] * 1e6})
+    return json9({'displayTimeUnit': 'ms', 'traceEvents': events})
+
+
+# --- PR9 golden corpus additions --------------------------------------
+
+# Every multi-device corpus sim models 2 devices per node (matches
+# CORPUS_DPN in rust/tests/analyze_timeline.rs).
+CORPUS_DPN9 = 2
+TRACE_SIM9 = 'fleet:ScMoE/overlap-s2'
+
+
+def corpus_sims9():
+    """(name, Sim) for every golden corpus line, in corpus order, plus
+    the rendered lines themselves — captured through the render_line
+    choke point so the analysis corpus can never drift from the
+    timeline corpus."""
+    global _COLLECT9
+    _COLLECT9 = []
+    try:
+        lines = generate_corpus_lines8()
+        sims = list(_COLLECT9)
+    finally:
+        _COLLECT9 = None
+    assert len(sims) == len(lines), 'render_line collection out of sync'
+    return sims, lines
+
+
+def analyze_line9(name, sim):
+    """Mirror of analyze_line in rust/tests/analyze_timeline.rs."""
+    spans, blockers = run_traced9(sim)
+    path = critical_path9(spans, blockers)
+    path_len = sum(spans[i][4] - spans[i][3] for i in path)
+    a = attribute9(spans, blockers)
+    total, hidden = comm_overlap9(spans, CORPUS_DPN9)
+    return ('%s | crit %d %.6f | attr %.6f %.6f %.6f %.6f %.6f %.6f | '
+            'comm %.6f %.6f'
+            % (name, len(path), path_len, a['backbone'], a['expert'],
+               a['dispatch'], a['combine'], a['migration'], a['idle'],
+               total, hidden))
+
+
+def fleet_trace9(sims):
+    name, sim = next((n, s) for n, s in sims if n == TRACE_SIM9)
+    spans, blockers = run_traced9(sim)
+    return chrome_trace9(sim, spans, blockers, CORPUS_DPN9)
+
+
+def validate_corpus9():
+    """Validate all three golden artifacts (timelines, analyze lines,
+    fleet trace) and print the combined count CI pins on."""
+    golden_dir = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                              '..', '..', 'rust', 'tests', 'golden')
+    sims, lines = corpus_sims9()
+    bad = 0
+    total = 0
+
+    def check(fname, cur):
+        nonlocal bad, total
+        golden = [l for l in open(os.path.join(golden_dir, fname))
+                  .read().splitlines() if l.strip() and not l.startswith('#')]
+        total += len(cur)
+        if len(golden) != len(cur):
+            print('%s: line-count mismatch golden %d vs mirror %d'
+                  % (fname, len(golden), len(cur)))
+            bad += 1
+        for g, cu in zip(golden, cur):
+            if g != cu:
+                bad += 1
+                print('- ' + g)
+                print('+ ' + cu)
+
+    check('timelines.txt', lines)
+    check('analyze.txt', [analyze_line9(n, s) for n, s in sims])
+    total += 1
+    trace_path = os.path.join(golden_dir, 'trace_fleet.json')
+    if open(trace_path).read().rstrip('\n') != fleet_trace9(sims):
+        bad += 1
+        print('trace_fleet.json drifted from the mirror trace')
+    print('golden corpus (PR9 analyze): %d lines, %d mismatches'
+          % (total, bad))
+    return bad == 0
+
+
+ANALYZE_HEADER9 = """\
+# Analysis-layer goldens: one line per golden-corpus simulation, in
+# corpus order (the sims themselves are pinned span-by-span in
+# timelines.txt). Fields: critical-path task count and summed duration
+# (== makespan), makespan attribution in seconds
+# (backbone/expert/dispatch/combine/migration/idle), and total/hidden
+# communication time at devices_per_node = 2.
+# Regenerate deliberately: python3 tools/des_mirror/mirror2.py --emit
+"""
+
+
+def emit_analyze9(path):
+    sims, _ = corpus_sims9()
+    cur = [analyze_line9(n, s) for n, s in sims]
+    with open(path, 'w') as f:
+        f.write(ANALYZE_HEADER9 + '\n'.join(cur) + '\n')
+    print('emitted %d analyze lines to %s' % (len(cur), path))
+
+
+def emit_trace9(path):
+    sims, _ = corpus_sims9()
+    with open(path, 'w') as f:
+        f.write(fleet_trace9(sims) + '\n')
+    print('emitted fleet trace to %s' % path)
+
+
+def xl_topo_proxy9(topo):
+    """report::efficiency::xl_topo_proxy_costs."""
+    return TopoCosts4(topo_from_topology3(xl_compute_costs(), topo, 640,
+                                          8192, 2.0))
+
+
+def consistency_checks9():
+    sims, _ = corpus_sims9()
+    for name, sim in sims:
+        spans, blockers = run_traced9(sim)
+        # 1. the traced engine is a pure extension: spans bit-identical
+        assert spans == sim.run(), ('traced spans drifted', name)
+        ms = max((sp[4] for sp in spans), default=0.0)
+        # 2. the blocking chain telescopes to the makespan, contiguously
+        path = critical_path9(spans, blockers)
+        plen = sum(spans[i][4] - spans[i][3] for i in path)
+        assert abs(plen - ms) < 1e-9, ('critical path != makespan', name)
+        for a, b in zip(path, path[1:]):
+            assert spans[a][4] == spans[b][3], ('path gap', name)
+        # 3. attribution partitions the makespan exactly; idle ~ 0
+        at = attribute9(spans, blockers)
+        cat = (at['backbone'] + at['expert'] + at['dispatch']
+               + at['combine'] + at['migration'])
+        assert abs(cat + at['idle'] - ms) < 1e-12, ('partition', name)
+        assert abs(at['idle']) < 1e-9, ('idle', name, at['idle'])
+        # 4. overlap bounds; slack non-negative and zero along the path
+        total, hidden = comm_overlap9(spans, CORPUS_DPN9)
+        assert -1e-12 <= hidden <= total + 1e-12, ('hidden bounds', name)
+        sl = slack9(sim, spans)
+        assert all(x >= -1e-9 for x in sl), ('negative slack', name)
+        assert all(sl[i] <= 1e-9 for i in path), ('slack on path', name)
+        # 5. the realized edge set replays the makespan bit-exactly, and
+        #    zeroing any positive-slack task never moves it (over the
+        #    realized order — an engine re-run is NOT anomaly-free:
+        #    zeroing Top1/pipe2's slack-carrying Gate chunk reorders a
+        #    compute queue and shifts the re-simulated makespan)
+        assert makespan_with_zeroed9(sim, spans) == ms, ('replay', name)
+        for i, x in enumerate(sl):
+            if x <= 1e-9 or sim.tasks[i][2] == 0.0:
+                continue
+            assert abs(makespan_with_zeroed9(sim, spans, i) - ms) < 1e-9, \
+                ('slack anomaly', name, i, x)
+    # 6. XL grid: adaptive overlap hides strictly more comm than the
+    #    sequential baseline (the PR's acceptance inequality)
+    topo = SCENARIOS['4node-ib']
+    dpn = topo.devices_per_node
+    tc = xl_topo_proxy9(topo)
+    st, sh = comm_overlap9(build_spec4(tc, ('std', 2), ('seq',)).run(), dpn)
+    slot, _ = choose_expert_slot4(tc, ('scmoe', 1), ('overlap',))
+    at_, ah = comm_overlap9(
+        build_spec4(tc, ('scmoe', 1), ('overlap',), slot).run(), dpn)
+    assert ah / at_ > sh / st, 'adaptive overlap must hide more comm'
+    # 7. utilization lands in [0, 1] on every preset
+    for nm, sc in SCENARIOS.items():
+        tcs = xl_topo_proxy9(sc)
+        slot, _ = choose_expert_slot4(tcs, ('scmoe', 1), ('overlap',))
+        spans = build_spec4(tcs, ('scmoe', 1), ('overlap',), slot).run()
+        for r, _b, u in utilization9(spans):
+            assert 0.0 <= u <= 1.0 + 1e-12, ('utilization', nm, r, u)
+            assert r != FREE
+    # 8. the pinned fleet trace serializes on the integer fast-path only
+    #    (json9 asserts) and carries the expected structure
+    trace = fleet_trace9(sims)
+    assert trace.startswith('{"displayTimeUnit":"ms","traceEvents":[')
+    assert '"crit":true' in trace and '"thread_name"' in trace
+    print('PR9 consistency checks: OK')
+
+
+# --- PR9 study scenario (the numbers pinned in docs/STUDIES.md --------
+# and printed by `scmoe report overlap` are minted here) ---------------
+
+def study_row9(name, sim, dpn):
+    """report::overlap_report::print_row."""
+    spans, blockers = run_traced9(sim)
+    a = attribute9(spans, blockers)
+    total, hidden = comm_overlap9(spans, dpn)
+    crit = len(critical_path9(spans, blockers))
+    comps = [u for u in utilization9(spans) if u[0][0] == 'compute']
+    cu = sum(u[2] for u in comps) / len(comps)
+    hf = hidden / total if total > 0.0 else 0.0
+    print('%-26s %8.3f %8.3f %8.3f %8.3f %8.3f %8.3f %6.1f%% %6.1f%% %5d'
+          % (name, a['makespan'] * 1e3, a['backbone'] * 1e3,
+             a['expert'] * 1e3, a['dispatch'] * 1e3, a['combine'] * 1e3,
+             a['migration'] * 1e3, hf * 100.0, cu * 100.0, crit))
+
+
+def study_header9():
+    print('%-26s %8s %8s %8s %8s %8s %8s %7s %7s %5s'
+          % ('row', 'total', 'backbone', 'expert', 'dispatch', 'combine',
+             'migr', 'hidden', 'util', 'crit'))
+
+
+def overlap_study9():
+    """Mirror of `scmoe report overlap` (report/overlap_report.rs)."""
+    topo = SCENARIOS['4node-ib']
+    dpn = topo.devices_per_node
+    tc = xl_topo_proxy9(topo)
+    print('== makespan attribution x hidden comm (4node-ib, GPT3-XL '
+          'proxy; all columns ms) ==')
+    study_header9()
+    study_row9('top2/seq', build_spec4(tc, ('std', 2), ('seq',)), dpn)
+    study_row9('top2/pipe2', build_spec4(tc, ('std', 2), ('pipe', 2)), dpn)
+    slot, _ = choose_expert_slot4(tc, ('scmoe', 1), ('overlap',))
+    study_row9('scmoe/ovl (slot %d)' % (slot + 1),
+               build_spec4(tc, ('scmoe', 1), ('overlap',), slot), dpn)
+    oslot, _ = choose_expert_slot4(tc, ('scmoe', 1), ('overlap-pipe', 2))
+    study_row9('scmoe/ovl+pipe2 (slot %d)' % (oslot + 1),
+               build_spec4(tc, ('scmoe', 1), ('overlap-pipe', 2), oslot),
+               dpn)
+    # the drift study's migration step, reconstructed exactly as
+    # `timeline_explorer --replace` / report/overlap_report.rs do
+    base = xl_compute_costs()
+    tables = replace_drift_tables(0.05, 11)
+    blk = Placement.block(32, 32)
+    est = AffinityEstimator(32, topo.n_devices // dpn, 1.0)
+    est.observe(tables[0], topo.n_devices, dpn)
+    measured = est.packed(topo.n_devices, dpn)
+    plan = MigrationPlan.between(blk, measured, REPLACE_STUDY_EXPERT_BYTES)
+    rtc = topo_from_routing4(base, topo, tables[0], blk, REPLACE_STUDY_BYTES)
+    sim = build_spec4(rtc, ('scmoe', 1), ('seq',))
+    plan.add_h2d_tasks(sim, REPLACE_STUDY_H2D)
+    study_row9('replace/migrate-step', sim, dpn)
+    # one whole-model pipeline row plus its stage-bubble fractions
+    print()
+    print('== whole-model pipeline (GPipe, m = 4, cross-layer '
+          'placements) ==')
+    study_header9()
+    mtables = model_tables8(MODEL_STEPS, MODEL_LAYERS, MODEL_SEED)
+    _, cross = model_grid_placements8(mtables[0])
+    costs = model_layer_costs8(base, topo, REPLACE_STUDY_BYTES, mtables[0],
+                               cross, MODEL_STAGES * 2)
+    sim, _ = build_model_sim8([MODEL_SEQ_SPEC] * MODEL_LAYERS, MODEL_STAGES,
+                              MODEL_STAGES * 2, GPIPE, costs, topo.n_devices,
+                              topo.n_devices // dpn)
+    study_row9('model/gpipe-m4', sim, dpn)
+    bub = stage_bubbles9(sim.run(), MODEL_STAGES, topo.n_devices)
+    print('stage bubbles: '
+          + '  '.join('s%d %.1f%%' % (i, b * 100.0)
+                      for i, b in enumerate(bub)))
+
+
 if __name__ == '__main__':
     # Internal reductions first: the PR3 model must reproduce the seed
     # model bit-for-bit where applicable, the PR4 spec-driven model must
@@ -4021,9 +4607,12 @@ if __name__ == '__main__':
     # timeline on a closed system, and the PR7 chaos layer must reduce
     # to the clean PR5/PR6 models at zero magnitude, and the PR8
     # whole-model layer must reduce to the per-layer PR5 timeline at
-    # L=S=M=1 (and to per-layer packing at zero transition counts).
-    # Then validate the PR8 model against the full golden corpus.
-    # `--emit` deliberately regenerates the file; plain invocation (CI)
+    # L=S=M=1 (and to per-layer packing at zero transition counts), and
+    # the PR9 traced engine must reproduce the plain engine's spans
+    # bit-for-bit while its analytics satisfy the critical-path algebra
+    # on every corpus sim. Then validate the PR9 artifacts (timelines +
+    # analyze lines + fleet trace) against the full golden corpus.
+    # `--emit` deliberately regenerates the files; plain invocation (CI)
     # only validates and exits nonzero on drift.
     consistency_checks3()
     consistency_checks4()
@@ -4031,6 +4620,7 @@ if __name__ == '__main__':
     consistency_checks6()
     consistency_checks7()
     consistency_checks8()
+    consistency_checks9()
     if '--study' in sys.argv:
         replace_study5()
         sys.exit(0)
@@ -4046,9 +4636,14 @@ if __name__ == '__main__':
     if '--serve-hetero-study' in sys.argv:
         serve_hetero_study8()
         sys.exit(0)
+    if '--overlap-study' in sys.argv:
+        overlap_study9()
+        sys.exit(0)
     if '--emit' in sys.argv:
-        emit_corpus8(os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                                  '..', '..', 'rust', 'tests', 'golden',
-                                  'timelines.txt'))
-    ok = validate_corpus8()
+        golden = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                              '..', '..', 'rust', 'tests', 'golden')
+        emit_corpus8(os.path.join(golden, 'timelines.txt'))
+        emit_analyze9(os.path.join(golden, 'analyze.txt'))
+        emit_trace9(os.path.join(golden, 'trace_fleet.json'))
+    ok = validate_corpus9()
     sys.exit(0 if ok else 1)
