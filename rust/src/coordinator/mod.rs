@@ -55,4 +55,5 @@ pub use replace::{ExpertMove, MigrationPlan, ReplaceConfig, ReplaceOutcome,
                   run_chaos_timeline, run_replace_timeline};
 pub use schedule::{build_pair_schedule, build_pair_schedule_auto,
                    ChunkPipelining, PairSchedule};
-pub use spec::{CostModel, PhaseDir, PhaseScope, ScheduleSpec, SlotPolicy};
+pub use spec::{BuiltInto, CostModel, PhaseDir, PhaseScope, ScheduleSpec,
+               SlotPolicy};

@@ -45,7 +45,7 @@
 use crate::cluster::{LinkModel, Topology};
 use crate::moe::{co_placed, AffinityEstimator, Placement, RoutingTable,
                  TransitionEstimator};
-use crate::simtime::{Resource, Sim, TaskId};
+use crate::simtime::{Resource, Sim, SimArena, TaskId};
 
 use super::costs::{ComputeCosts, TopoCosts};
 use super::replace::{MigrationPlan, ReplacePolicy};
@@ -189,8 +189,11 @@ pub fn build_model_sim(spec: &ModelSpec, costs: &[Vec<TopoCosts>],
     }
     let mut sim = Sim::new();
     let mut joins: Vec<Vec<TaskId>> = vec![vec![0; m]; n_layers];
+    // layer-pair skeletons repeat across microbatches (and across layers
+    // sharing a spec), so the inner builds warm-start from the arena
+    let mut arena = SimArena::new();
     let mut embed = |sim: &mut Sim, joins: &mut Vec<Vec<TaskId>>,
-                     l: usize, mb: usize| {
+                     arena: &mut SimArena, l: usize, mb: usize| {
         let mut roots: Vec<TaskId> = match spec.schedule {
             PipelineSchedule::LayerSequential => {
                 if l > 0 { joins[l - 1].clone() } else { Vec::new() }
@@ -206,10 +209,10 @@ pub fn build_model_sim(spec: &ModelSpec, costs: &[Vec<TopoCosts>],
             roots.push(joins[n_layers - 1][mb - spec.stages]);
         }
         let stage = spec.stage_of(l);
-        let pair = spec.layers[l].build(&costs[l][mb]);
+        spec.layers[l].build_into(&costs[l][mb], arena);
         let off = sim.len();
-        let count = pair.sim.len();
-        for t in pair.sim.tasks() {
+        let count = arena.sim().len();
+        for t in arena.sim().tasks() {
             let deps: Vec<TaskId> = if t.deps.is_empty() {
                 roots.clone()
             } else {
@@ -228,14 +231,14 @@ pub fn build_model_sim(spec: &ModelSpec, costs: &[Vec<TopoCosts>],
         PipelineSchedule::LayerSequential => {
             for l in 0..n_layers {
                 for mb in 0..m {
-                    embed(&mut sim, &mut joins, l, mb);
+                    embed(&mut sim, &mut joins, &mut arena, l, mb);
                 }
             }
         }
         PipelineSchedule::GPipe | PipelineSchedule::OneFOneB => {
             for mb in 0..m {
                 for l in 0..n_layers {
-                    embed(&mut sim, &mut joins, l, mb);
+                    embed(&mut sim, &mut joins, &mut arena, l, mb);
                 }
             }
         }

@@ -31,7 +31,7 @@
 
 use crate::cluster::{ChaosSpec, LinkModel, Topology};
 use crate::moe::{AffinityEstimator, Placement, RoutingTable};
-use crate::simtime::{Resource, Sim, TaskId};
+use crate::simtime::{Resource, Sim, SimArena, TaskId};
 
 use super::costs::{ComputeCosts, TopoCosts};
 use super::spec::ScheduleSpec;
@@ -311,11 +311,17 @@ pub fn run_replace_timeline(base: &ComputeCosts, topo: &Topology,
     let mut total = 0.0f64;
     let mut migrations = 0usize;
     let n_steps = tables.len();
+    // every step builds the same spec shape, so the step schedule and the
+    // break-even probe warm-start from cached skeletons — two arenas,
+    // because the probe would otherwise re-price the step's durations out
+    // from under the pending migration append
+    let mut arena = SimArena::new();
+    let mut probe = SimArena::new();
     for (s, rt) in tables.iter().enumerate() {
         let costs = TopoCosts::from_routing(base, topo, rt, &placement,
                                             token_bytes);
-        let mut sched = cfg.spec.build(&costs);
-        let base_makespan = sched.makespan();
+        cfg.spec.build_into(&costs, &mut arena);
+        let base_makespan = arena.makespan();
         est.observe(rt, topo.n_devices, topo.devices_per_node);
         let remaining = n_steps - s - 1;
         let mut migrated = false;
@@ -335,12 +341,13 @@ pub fn run_replace_timeline(base: &ComputeCosts, topo: &Topology,
                     ReplacePolicy::BreakEven => {
                         let cand = TopoCosts::from_routing(
                             base, topo, rt, &candidate, token_bytes);
-                        base_makespan - cfg.spec.build(&cand).makespan()
+                        cfg.spec.build_into(&cand, &mut probe);
+                        base_makespan - probe.makespan()
                     }
                     _ => 0.0,
                 };
                 if cfg.policy.should_migrate(s, remaining, saving, overhead) {
-                    plan.add_transfer_tasks(&mut sched.sim, &cfg.h2d,
+                    plan.add_transfer_tasks(arena.sim_mut(), &cfg.h2d,
                                             cfg.d2h_link.as_ref(), 0);
                     migrated = true;
                     migration_bytes = plan.total_bytes();
@@ -352,7 +359,7 @@ pub fn run_replace_timeline(base: &ComputeCosts, topo: &Topology,
         }
         // the DES is deterministic, so a step without migration tasks
         // keeps the makespan already simulated above
-        let makespan = if migrated { sched.makespan() } else { base_makespan };
+        let makespan = if migrated { arena.makespan() } else { base_makespan };
         total += makespan;
         steps.push(StepReport {
             step: s,
@@ -422,12 +429,15 @@ pub fn run_chaos_timeline(base: &ComputeCosts, topo: &Topology,
     let mut total = 0.0f64;
     let mut migrations = 0usize;
     let n_steps = tables.len();
+    // step + probe arenas, exactly as in `run_replace_timeline`
+    let mut arena = SimArena::new();
+    let mut probe = SimArena::new();
     for (s, rt) in tables.iter().enumerate() {
         let ptopo = chaos.perturb(topo, s);
         let costs = TopoCosts::from_routing(base, &ptopo, rt, &placement,
                                             token_bytes);
-        let mut sched = cfg.spec.build(&costs);
-        let base_makespan = sched.makespan();
+        cfg.spec.build_into(&costs, &mut arena);
+        let base_makespan = arena.makespan();
         est.observe(rt, topo.n_devices, topo.devices_per_node);
         let remaining = n_steps - s - 1;
         let mut migrated = false;
@@ -445,7 +455,7 @@ pub fn run_chaos_timeline(base: &ComputeCosts, topo: &Topology,
             if !plan.is_empty() {
                 migration_time = plan.transfer_time(&cfg.h2d,
                                                     cfg.d2h_link.as_ref());
-                plan.add_transfer_tasks(&mut sched.sim, &cfg.h2d,
+                plan.add_transfer_tasks(arena.sim_mut(), &cfg.h2d,
                                         cfg.d2h_link.as_ref(), 0);
                 migrated = true;
                 migration_bytes = plan.total_bytes();
@@ -469,12 +479,13 @@ pub fn run_chaos_timeline(base: &ComputeCosts, topo: &Topology,
                     ReplacePolicy::BreakEven => {
                         let cand = TopoCosts::from_routing(
                             base, &ptopo, rt, &candidate, token_bytes);
-                        base_makespan - cfg.spec.build(&cand).makespan()
+                        cfg.spec.build_into(&cand, &mut probe);
+                        base_makespan - probe.makespan()
                     }
                     _ => 0.0,
                 };
                 if cfg.policy.should_migrate(s, remaining, saving, overhead) {
-                    plan.add_transfer_tasks(&mut sched.sim, &cfg.h2d,
+                    plan.add_transfer_tasks(arena.sim_mut(), &cfg.h2d,
                                             cfg.d2h_link.as_ref(), 0);
                     migrated = true;
                     migration_bytes = plan.total_bytes();
@@ -484,7 +495,7 @@ pub fn run_chaos_timeline(base: &ComputeCosts, topo: &Topology,
                 }
             }
         }
-        let makespan = if migrated { sched.makespan() } else { base_makespan };
+        let makespan = if migrated { arena.makespan() } else { base_makespan };
         total += makespan;
         steps.push(StepReport {
             step: s,

@@ -30,7 +30,7 @@
 //! shared helpers below — insertion order is semantic (the DES breaks
 //! readiness ties by task id) and is unchanged.
 
-use crate::simtime::{Resource, Sim, Span, TaskId};
+use crate::simtime::{lazy_label, Resource, Sim, Span, TaskId};
 
 use super::costs::{BlockCosts, ChunkedA2a, MoEKind, Strategy};
 use super::spec::{CostModel, PhaseDir, PhaseScope, ScheduleSpec};
@@ -112,17 +112,49 @@ pub fn build_pair_schedule_auto(c: &BlockCosts, kind: MoEKind,
 /// cost model and resolves the slot policy first.
 pub(crate) fn build_from_spec(spec: &ScheduleSpec, cm: &dyn CostModel,
                               slot: usize) -> PairSchedule {
+    let mut sim = Sim::new();
+    build_from_spec_into(spec, cm, slot, &mut sim);
+    let (strategy, expert_slot) = built_meta(spec, slot);
+    PairSchedule { sim, kind: spec.kind, strategy, expert_slot }
+}
+
+/// [`build_from_spec`] appending into a caller-owned [`Sim`] — the entry
+/// point `ScheduleSpec::build_into` replays over a `SimArena`, both cold
+/// (appending) and warm (re-pricing a cached skeleton). The builders'
+/// task insertion order and dependency lists are identical either way.
+pub(crate) fn build_from_spec_into(spec: &ScheduleSpec, cm: &dyn CostModel,
+                                   slot: usize, sim: &mut Sim) {
     let k = spec.kind.routed_k();
     match spec.strategy {
-        Strategy::Sequential => build_sequential(cm, spec.kind, k),
+        Strategy::Sequential => build_sequential(sim, cm, spec.kind, k),
         Strategy::Pipelined { chunks } => {
-            build_pipelined(cm, spec.kind, k, chunks, spec.pipelining)
+            build_pipelined(sim, cm, spec.kind, k, chunks, spec.pipelining)
         }
         Strategy::Overlap => {
-            build_overlap(cm, spec.kind, k, slot, 1, spec.pipelining)
+            build_overlap(sim, cm, spec.kind, k, slot, 1, spec.pipelining)
         }
         Strategy::OverlapPipelined { chunks } => {
-            build_overlap(cm, spec.kind, k, slot, chunks, spec.pipelining)
+            build_overlap(sim, cm, spec.kind, k, slot, chunks, spec.pipelining)
+        }
+    }
+}
+
+/// The `(strategy, expert_slot)` a built [`PairSchedule`] reports for a
+/// spec: `OverlapPipelined { chunks: 1 }` normalizes to `Overlap` and
+/// non-overlap strategies pin slot 0 — exactly what the builders returned
+/// before they wrote into caller-owned sims.
+pub(crate) fn built_meta(spec: &ScheduleSpec, slot: usize) -> (Strategy, usize) {
+    match spec.strategy {
+        Strategy::Sequential => (Strategy::Sequential, 0),
+        Strategy::Pipelined { chunks } => (Strategy::Pipelined { chunks }, 0),
+        Strategy::Overlap => (Strategy::Overlap, slot),
+        Strategy::OverlapPipelined { chunks } => {
+            let strategy = if chunks == 1 {
+                Strategy::Overlap
+            } else {
+                Strategy::OverlapPipelined { chunks }
+            };
+            (strategy, slot)
         }
     }
 }
@@ -213,39 +245,48 @@ fn add_dispatch_chunk(
     let ci = i.unwrap_or(0);
     let mut disp_i = Vec::with_capacity(n + n_links);
     for d in 0..n {
-        let mut deps = vec![enc[d]];
+        // at most enc + prev chunk intra + prev chunk uplink
+        let mut dbuf: [TaskId; 3] = [0; 3];
+        dbuf[0] = enc[d];
+        let mut dl = 1;
         if let Some(p) = prev_d[d] {
-            deps.push(p);
+            dbuf[dl] = p;
+            dl += 1;
         }
         if pipelining == ChunkPipelining::PhaseChained && n_links > 0 {
             if let Some(p) = prev_x[cm.node_of(d)] {
-                deps.push(p);
+                dbuf[dl] = p;
+                dl += 1;
             }
         }
         let dur = match ca {
             Some(ca) => ca.disp_intra[ci][d],
             None => cm.phase(PhaseDir::Dispatch, PhaseScope::Intra, d, k),
         };
-        let t = sim.add(tag("A2A-D", i), Resource::Comm(d), dur, &deps);
+        let t = sim.add(lazy_label(|| tag("A2A-D", i)), Resource::Comm(d),
+                        dur, &dbuf[..dl]);
         prev_d[d] = Some(t);
         disp_i.push(t);
     }
+    let mut nbuf: Vec<TaskId> = Vec::with_capacity(cm.devices_per_node() + 1);
     for node in 0..n_links {
         // staged (chunks > 1): the uplink sends what the node's intra
         // phase gathered, so it waits on this chunk's intra tasks; the
         // unchunked collective keeps the seed's enc-barrier semantics
-        let mut deps: Vec<TaskId> = match ca {
-            Some(_) => cm.devices_of(node).map(|d| disp_i[d]).collect(),
-            None => cm.devices_of(node).map(|d| enc[d]).collect(),
-        };
+        nbuf.clear();
+        match ca {
+            Some(_) => nbuf.extend(cm.devices_of(node).map(|d| disp_i[d])),
+            None => nbuf.extend(cm.devices_of(node).map(|d| enc[d])),
+        }
         if let Some(p) = prev_x[node] {
-            deps.push(p);
+            nbuf.push(p);
         }
         let dur = match ca {
             Some(ca) => ca.disp_inter[ci][node],
             None => cm.phase(PhaseDir::Dispatch, PhaseScope::Inter, node, k),
         };
-        let t = sim.add(tag("A2A-Dx", i), Resource::Link(node), dur, &deps);
+        let t = sim.add(lazy_label(|| tag("A2A-Dx", i)), Resource::Link(node),
+                        dur, &nbuf);
         prev_x[node] = Some(t);
         disp_i.push(t);
     }
@@ -283,28 +324,35 @@ fn add_combine_chunk(
     match ca {
         Some(ca) => {
             let mut comb_x_i = Vec::with_capacity(n_links);
+            let mut nbuf: Vec<TaskId> =
+                Vec::with_capacity(2 * cm.devices_per_node());
             for node in 0..n_links {
-                let mut deps: Vec<TaskId> =
-                    cm.devices_of(node).map(|d| experts_i[d]).collect();
+                nbuf.clear();
+                nbuf.extend(cm.devices_of(node).map(|d| experts_i[d]));
                 if pipelining == ChunkPipelining::PhaseChained {
                     for d in cm.devices_of(node) {
                         if let Some(p) = prev_c[d] {
-                            deps.push(p);
+                            nbuf.push(p);
                         }
                     }
                 }
-                let t = sim.add(tag("A2A-Cx", i), Resource::Link(node),
-                                ca.comb_inter[ci][node], &deps);
+                let t = sim.add(lazy_label(|| tag("A2A-Cx", i)),
+                                Resource::Link(node),
+                                ca.comb_inter[ci][node], &nbuf);
                 comb_x_i.push(t);
                 combines.push(t);
             }
             for d in 0..n {
-                let mut deps = vec![experts_i[d]];
+                let mut dbuf: [TaskId; 2] = [0; 2];
+                dbuf[0] = experts_i[d];
+                let mut dl = 1;
                 if n_links > 0 {
-                    deps.push(comb_x_i[cm.node_of(d)]);
+                    dbuf[dl] = comb_x_i[cm.node_of(d)];
+                    dl += 1;
                 }
-                let t = sim.add(tag("A2A-C", i), Resource::Comm(d),
-                                ca.comb_intra[ci][d], &deps);
+                let t = sim.add(lazy_label(|| tag("A2A-C", i)),
+                                Resource::Comm(d),
+                                ca.comb_intra[ci][d], &dbuf[..dl]);
                 prev_c[d] = Some(t);
                 combines.push(t);
             }
@@ -312,19 +360,21 @@ fn add_combine_chunk(
         None => {
             for d in 0..n {
                 let t = sim.add(
-                    tag("A2A-C", i), Resource::Comm(d),
+                    lazy_label(|| tag("A2A-C", i)), Resource::Comm(d),
                     cm.phase(PhaseDir::Combine, PhaseScope::Intra, d, k),
                     &[experts_i[d]]);
                 prev_c[d] = Some(t);
                 combines.push(t);
             }
+            let mut nbuf: Vec<TaskId> =
+                Vec::with_capacity(cm.devices_per_node());
             for node in 0..n_links {
-                let deps: Vec<TaskId> =
-                    cm.devices_of(node).map(|d| experts_i[d]).collect();
+                nbuf.clear();
+                nbuf.extend(cm.devices_of(node).map(|d| experts_i[d]));
                 combines.push(sim.add(
-                    tag("A2A-Cx", i), Resource::Link(node),
+                    lazy_label(|| tag("A2A-Cx", i)), Resource::Link(node),
                     cm.phase(PhaseDir::Combine, PhaseScope::Inter, node, k),
-                    &deps));
+                    &nbuf));
             }
         }
     }
@@ -340,27 +390,37 @@ fn add_decode(sim: &mut Sim, cm: &dyn CostModel, kind: MoEKind,
               last_backbone: Option<&[TaskId]>) {
     for d in 0..cm.n_devices() {
         let c = cm.device(d);
-        let mut deps = combines.to_vec();
-        if let Some(tails) = last_backbone {
-            deps.push(tails[d]);
+        // the SE task (when present) must be inserted before Decode —
+        // insertion order is semantic
+        let tail: Option<TaskId> = if let Some(tails) = last_backbone {
+            Some(tails[d])
         } else if kind.has_shared_expert() {
-            let se = sim.add("SE", Resource::Compute(d), c.se, &[anchors[d]]);
-            deps.push(se);
-        }
-        sim.add("Decode", Resource::Compute(d), c.decode, &deps);
+            Some(sim.add("SE", Resource::Compute(d), c.se, &[anchors[d]]))
+        } else {
+            None
+        };
+        let tail_buf;
+        let extra: &[TaskId] = match tail {
+            Some(t) => {
+                tail_buf = [t];
+                &tail_buf
+            }
+            None => &[],
+        };
+        sim.add_cat("Decode", Resource::Compute(d), c.decode, combines, extra);
     }
 }
 
 /// Fully sequential baseline (Fig. 6, 1st timeline), over the whole
 /// modeled fleet: one barrier collective each way, experts between.
-fn build_sequential(cm: &dyn CostModel, kind: MoEKind, k: usize) -> PairSchedule {
+fn build_sequential(sim: &mut Sim, cm: &dyn CostModel, kind: MoEKind,
+                    k: usize) {
     let n = cm.n_devices();
-    let mut sim = Sim::new();
-    let (attn_m, enc) = add_backbone_head(&mut sim, cm, false);
+    let (attn_m, enc) = add_backbone_head(sim, cm, false);
     let mut prev_d: Vec<Option<TaskId>> = vec![None; n];
     let mut prev_x: Vec<Option<TaskId>> = vec![None; cm.n_links()];
     let mut prev_c: Vec<Option<TaskId>> = vec![None; n];
-    let disp = add_dispatch_chunk(&mut sim, cm, k, None, None, &enc,
+    let disp = add_dispatch_chunk(sim, cm, k, None, None, &enc,
                                   &mut prev_d, &mut prev_x,
                                   ChunkPipelining::Staged);
     let experts: Vec<TaskId> = (0..n)
@@ -368,10 +428,9 @@ fn build_sequential(cm: &dyn CostModel, kind: MoEKind, k: usize) -> PairSchedule
                          cm.expert_time(d, k), &disp))
         .collect();
     let mut combines = Vec::new();
-    add_combine_chunk(&mut sim, cm, k, None, None, &experts, &mut prev_c,
+    add_combine_chunk(sim, cm, k, None, None, &experts, &mut prev_c,
                       &mut combines, ChunkPipelining::Staged);
-    add_decode(&mut sim, cm, kind, &combines, &attn_m, None);
-    PairSchedule { sim, kind, strategy: Strategy::Sequential, expert_slot: 0 }
+    add_decode(sim, cm, kind, &combines, &attn_m, None);
 }
 
 /// Tutel-style pipelining (Fig. 6, 2nd timeline) over the fleet: every
@@ -379,12 +438,11 @@ fn build_sequential(cm: &dyn CostModel, kind: MoEKind, k: usize) -> PairSchedule
 /// chunk pays its own per-link α and bytes (`CostModel::chunk_phases` —
 /// token-true under routed costs, as are the per-chunk expert durations),
 /// and the uplink tasks are staged per [`ChunkPipelining`].
-fn build_pipelined(cm: &dyn CostModel, kind: MoEKind, k: usize,
-                   chunks: usize, pipelining: ChunkPipelining) -> PairSchedule {
+fn build_pipelined(sim: &mut Sim, cm: &dyn CostModel, kind: MoEKind, k: usize,
+                   chunks: usize, pipelining: ChunkPipelining) {
     assert!(chunks >= 1);
     let n = cm.n_devices();
-    let mut sim = Sim::new();
-    let (attn_m, enc) = add_backbone_head(&mut sim, cm, false);
+    let (attn_m, enc) = add_backbone_head(sim, cm, false);
     let fc = chunks as f64;
     let ca = if chunks > 1 { Some(cm.chunk_phases(k, chunks)) } else { None };
     let mut prev_d: Vec<Option<TaskId>> = vec![None; n];
@@ -392,7 +450,7 @@ fn build_pipelined(cm: &dyn CostModel, kind: MoEKind, k: usize,
     let mut prev_c: Vec<Option<TaskId>> = vec![None; n];
     let mut combines: Vec<TaskId> = Vec::new();
     for i in 0..chunks {
-        let disp_i = add_dispatch_chunk(&mut sim, cm, k, Some(i), ca.as_ref(),
+        let disp_i = add_dispatch_chunk(sim, cm, k, Some(i), ca.as_ref(),
                                         &enc, &mut prev_d, &mut prev_x,
                                         pipelining);
         let mut experts_i = Vec::with_capacity(n);
@@ -401,14 +459,13 @@ fn build_pipelined(cm: &dyn CostModel, kind: MoEKind, k: usize,
                 Some(ca) => ca.expert[i][d],
                 None => cm.expert_time(d, k) / fc,
             };
-            experts_i.push(sim.add(format!("Expert{i}"), Resource::Compute(d),
-                                   dur, &disp_i));
+            experts_i.push(sim.add(lazy_label(|| format!("Expert{i}")),
+                                   Resource::Compute(d), dur, &disp_i));
         }
-        add_combine_chunk(&mut sim, cm, k, Some(i), ca.as_ref(), &experts_i,
+        add_combine_chunk(sim, cm, k, Some(i), ca.as_ref(), &experts_i,
                           &mut prev_c, &mut combines, pipelining);
     }
-    add_decode(&mut sim, cm, kind, &combines, &attn_m, None);
-    PairSchedule { sim, kind, strategy: Strategy::Pipelined { chunks }, expert_slot: 0 }
+    add_decode(sim, cm, kind, &combines, &attn_m, None);
 }
 
 /// The paper's overlapping strategy (Fig. 6, 4th/5th timelines) over the
@@ -417,20 +474,19 @@ fn build_pipelined(cm: &dyn CostModel, kind: MoEKind, k: usize,
 /// in its own backbone window; slow or hot devices stretch the collective
 /// for everyone. Chunked dispatch/combine phases follow the same
 /// per-chunk α + staging model as [`build_pipelined`].
-fn build_overlap(cm: &dyn CostModel, kind: MoEKind, k: usize, slot: usize,
-                 chunks: usize, pipelining: ChunkPipelining) -> PairSchedule {
+fn build_overlap(sim: &mut Sim, cm: &dyn CostModel, kind: MoEKind, k: usize,
+                 slot: usize, chunks: usize, pipelining: ChunkPipelining) {
     assert!(slot <= 3, "expert slot must be one of the 4 locations");
     assert!(chunks >= 1);
     let n = cm.n_devices();
-    let mut sim = Sim::new();
-    let (attn_l_ids, enc) = add_backbone_head(&mut sim, cm, true);
+    let (attn_l_ids, enc) = add_backbone_head(sim, cm, true);
     let fc = chunks as f64;
     let ca = if chunks > 1 { Some(cm.chunk_phases(k, chunks)) } else { None };
     let mut disp_chunks: Vec<Vec<TaskId>> = Vec::with_capacity(chunks);
     let mut prev_d: Vec<Option<TaskId>> = vec![None; n];
     let mut prev_x: Vec<Option<TaskId>> = vec![None; cm.n_links()];
     for i in 0..chunks {
-        disp_chunks.push(add_dispatch_chunk(&mut sim, cm, k, Some(i),
+        disp_chunks.push(add_dispatch_chunk(sim, cm, k, Some(i),
                                             ca.as_ref(), &enc, &mut prev_d,
                                             &mut prev_x, pipelining));
     }
@@ -444,14 +500,13 @@ fn build_overlap(cm: &dyn CostModel, kind: MoEKind, k: usize, slot: usize,
                      out: &mut Vec<TaskId>| -> TaskId {
             let mut tail = after;
             for (i, disp_i) in disp_chunks.iter().enumerate() {
-                let mut deps = disp_i.clone();
-                deps.push(tail);
                 let dur = match &ca {
                     Some(ca) => ca.expert[i][d],
                     None => cm.expert_time(d, k) / fc,
                 };
-                let e = sim.add(format!("Expert{i}"), Resource::Compute(d),
-                                dur, &deps);
+                let e = sim.add_cat(lazy_label(|| format!("Expert{i}")),
+                                    Resource::Compute(d), dur, disp_i,
+                                    &[tail]);
                 out.push(e);
                 tail = e;
             }
@@ -459,7 +514,7 @@ fn build_overlap(cm: &dyn CostModel, kind: MoEKind, k: usize, slot: usize,
         };
         let mut tail = attn_l_ids[d];
         if slot == 0 {
-            tail = place(&mut sim, tail, &mut dev_experts);
+            tail = place(sim, tail, &mut dev_experts);
         }
         let window: [(&str, f64); 3] = [
             ("MLP(l)", c.mlp),
@@ -469,7 +524,7 @@ fn build_overlap(cm: &dyn CostModel, kind: MoEKind, k: usize, slot: usize,
         for (wi, (label, dur)) in window.iter().enumerate() {
             tail = sim.add(*label, Resource::Compute(d), *dur, &[tail]);
             if slot == wi + 1 {
-                tail = place(&mut sim, tail, &mut dev_experts);
+                tail = place(sim, tail, &mut dev_experts);
             }
         }
         last_backbone[d] = tail;
@@ -480,16 +535,10 @@ fn build_overlap(cm: &dyn CostModel, kind: MoEKind, k: usize, slot: usize,
     for i in 0..chunks {
         let experts_i: Vec<TaskId> =
             (0..n).map(|d| experts_by_dev[d][i]).collect();
-        add_combine_chunk(&mut sim, cm, k, Some(i), ca.as_ref(), &experts_i,
+        add_combine_chunk(sim, cm, k, Some(i), ca.as_ref(), &experts_i,
                           &mut prev_c, &mut combines, pipelining);
     }
-    add_decode(&mut sim, cm, kind, &combines, &[], Some(&last_backbone));
-    let strategy = if chunks == 1 {
-        Strategy::Overlap
-    } else {
-        Strategy::OverlapPipelined { chunks }
-    };
-    PairSchedule { sim, kind, strategy, expert_slot: slot }
+    add_decode(sim, cm, kind, &combines, &[], Some(&last_backbone));
 }
 
 #[cfg(test)]

@@ -38,8 +38,11 @@
 
 use std::ops::Range;
 
+use crate::simtime::{GraphShape, SimArena};
+
 use super::costs::{BlockCosts, ChunkedA2a, MoEKind, Strategy};
-use super::schedule::{build_from_spec, ChunkPipelining, PairSchedule};
+use super::schedule::{build_from_spec, build_from_spec_into, built_meta,
+                      ChunkPipelining, PairSchedule};
 
 /// Which direction of the All-to-All a phase query refers to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -223,6 +226,122 @@ impl ScheduleSpec {
             },
         }
     }
+
+    /// [`Self::build`] through a [`SimArena`]: if the arena holds a
+    /// skeleton for this spec's [`Self::shape`], the builder re-prices its
+    /// durations in place (warm start — no allocation, no label
+    /// formatting); otherwise it builds cold into a cached slot. Either
+    /// way `arena.sim()` / `arena.makespan()` afterwards are bit-identical
+    /// to a fresh `self.build(cm)`. Adaptive slot resolution runs through
+    /// the same arena, so the four candidate probes warm-start too.
+    pub fn build_into(&self, cm: &dyn CostModel, arena: &mut SimArena)
+                      -> BuiltInto {
+        cm.validate();
+        let slot = self.resolve_slot_in(cm, arena);
+        self.build_resolved_into(cm, slot, arena)
+    }
+
+    /// [`Self::choose_slot`] through a [`SimArena`] (bit-identical result;
+    /// the four candidate builds warm-start on repeat calls).
+    pub fn choose_slot_in(&self, cm: &dyn CostModel, arena: &mut SimArena)
+                          -> (usize, f64) {
+        cm.validate();
+        match self.strategy {
+            Strategy::Overlap | Strategy::OverlapPipelined { .. } => {
+                assert!(matches!(self.kind, MoEKind::ScMoE { .. }),
+                        "overlap strategy requires the shortcut architecture");
+                let mut best = (0usize, f64::INFINITY);
+                for slot in 0..4 {
+                    self.build_resolved_into(cm, slot, arena);
+                    let t = arena.makespan();
+                    if t < best.1 {
+                        best = (slot, t);
+                    }
+                }
+                best
+            }
+            _ => {
+                self.build_resolved_into(cm, 0, arena);
+                (0, arena.makespan())
+            }
+        }
+    }
+
+    fn build_resolved_into(&self, cm: &dyn CostModel, slot: usize,
+                           arena: &mut SimArena) -> BuiltInto {
+        let warm = arena.begin(self.shape(cm, slot));
+        build_from_spec_into(self, cm, slot, arena.sim_mut());
+        arena.finish();
+        BuiltInto { expert_slot: slot, warm }
+    }
+
+    fn resolve_slot_in(&self, cm: &dyn CostModel, arena: &mut SimArena)
+                       -> usize {
+        match self.slot {
+            SlotPolicy::Fixed(slot) => slot,
+            SlotPolicy::Adaptive => match self.strategy {
+                // choose_slot_in asserts the shortcut architecture
+                Strategy::Overlap | Strategy::OverlapPipelined { .. } => {
+                    self.choose_slot_in(cm, arena).0
+                }
+                _ => 0,
+            },
+        }
+    }
+
+    /// Injective structural key for the graph this spec builds against
+    /// `cm` at `slot`: every input that steers the builders' control flow
+    /// (task order, resources, labels, dependency lists) is a coordinate
+    /// — kind (tag + routed k), strategy (tag + chunk count), pipelining,
+    /// slot, and the fleet dimensions — and nothing that only prices
+    /// durations is. Two specs with equal shapes therefore build the
+    /// identical skeleton, which is what makes a `SimArena` warm hit
+    /// sound, and a stale hit impossible rather than improbable (the key
+    /// is a full encoding, not a hash).
+    pub fn shape(&self, cm: &dyn CostModel, slot: usize) -> GraphShape {
+        let (kind_tag, k) = match self.kind {
+            MoEKind::Standard { k } => (0u64, k as u64),
+            MoEKind::SharedExpert => (1, 0),
+            MoEKind::ScMoE { k } => (2, k as u64),
+        };
+        let (strat_tag, chunks) = match self.strategy {
+            Strategy::Sequential => (0u64, 1u64),
+            Strategy::Pipelined { chunks } => (1, chunks as u64),
+            Strategy::Overlap => (2, 1),
+            Strategy::OverlapPipelined { chunks } => (3, chunks as u64),
+        };
+        let pipelining = match self.pipelining {
+            ChunkPipelining::Staged => 0u64,
+            ChunkPipelining::PhaseChained => 1,
+        };
+        GraphShape([
+            kind_tag,
+            k,
+            strat_tag,
+            chunks,
+            (pipelining << 32) | slot as u64,
+            cm.n_devices() as u64,
+            cm.devices_per_node() as u64,
+            cm.n_links() as u64,
+        ])
+    }
+
+    /// The `(strategy, expert_slot)` metadata [`PairSchedule`] would carry
+    /// for this spec built at `slot` — for call sites that consume an
+    /// arena-built sim but still need the normalized strategy.
+    pub fn built_meta(&self, slot: usize) -> (Strategy, usize) {
+        built_meta(self, slot)
+    }
+}
+
+/// Outcome of [`ScheduleSpec::build_into`].
+#[derive(Debug, Clone, Copy)]
+pub struct BuiltInto {
+    /// Expert slot the build used (resolved from the spec's slot policy).
+    pub expert_slot: usize,
+    /// `true` when the arena re-priced a cached skeleton instead of
+    /// building cold.
+    pub warm: bool,
 }
 
 #[cfg(test)]

@@ -5,6 +5,7 @@ use crate::coordinator::costs::{ComputeCosts, TopoCosts};
 use crate::coordinator::replace::{MigrationPlan, ReplacePolicy};
 use crate::coordinator::spec::ScheduleSpec;
 use crate::moe::{phase_affine_routing, AffinityEstimator, Placement};
+use crate::simtime::SimArena;
 use crate::util::stats::percentile;
 
 use super::arrivals::Request;
@@ -171,6 +172,10 @@ pub fn run_serve(base: &ComputeCosts, topo: &Topology, requests: &[Request],
     let mut latencies = Vec::new();
     let mut busy = 0.0f64;
     let mut migrations = 0usize;
+    // step + break-even-probe arenas: every batch builds the same spec
+    // shape, so repeat builds warm-start (see `simtime::arena`)
+    let mut arena = SimArena::new();
+    let mut probe = SimArena::new();
 
     while next_idx < requests.len() || !queued.is_empty() || !active.is_empty() {
         while next_idx < requests.len() && requests[next_idx].arrival <= now {
@@ -211,8 +216,8 @@ pub fn run_serve(base: &ComputeCosts, topo: &Topology, requests: &[Request],
             cfg.traffic.seed + step as u64);
         let costs = TopoCosts::from_routing(base, topo, &rt, &placement,
                                             cfg.token_bytes);
-        let mut sched = cfg.spec.build(&costs);
-        let base_makespan = sched.makespan();
+        cfg.spec.build_into(&costs, &mut arena);
+        let base_makespan = arena.makespan();
         est.observe(&rt, topo.n_devices, topo.devices_per_node);
 
         // outstanding requests once this step retires: still-future
@@ -236,12 +241,13 @@ pub fn run_serve(base: &ComputeCosts, topo: &Topology, requests: &[Request],
                     ReplacePolicy::BreakEven => {
                         let cand = TopoCosts::from_routing(
                             base, topo, &rt, &candidate, cfg.token_bytes);
-                        base_makespan - cfg.spec.build(&cand).makespan()
+                        cfg.spec.build_into(&cand, &mut probe);
+                        base_makespan - probe.makespan()
                     }
                     _ => 0.0,
                 };
                 if cfg.policy.should_migrate(step, remaining, saving, overhead) {
-                    plan.add_h2d_tasks(&mut sched.sim, &cfg.h2d);
+                    plan.add_h2d_tasks(arena.sim_mut(), &cfg.h2d);
                     migrated = true;
                     migration_bytes = plan.total_bytes();
                     migration_time = mig;
@@ -250,7 +256,7 @@ pub fn run_serve(base: &ComputeCosts, topo: &Topology, requests: &[Request],
                 }
             }
         }
-        let makespan = if migrated { sched.makespan() } else { base_makespan };
+        let makespan = if migrated { arena.makespan() } else { base_makespan };
         let end = now + makespan;
 
         let mut completed = 0usize;

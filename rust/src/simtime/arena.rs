@@ -1,0 +1,259 @@
+//! Reusable simulation arena: cached graph skeletons + shared run buffers.
+//!
+//! Policy search re-evaluates near-identical graphs thousands of times —
+//! `choose_slot` prices four slots per step, `ReplacePolicy::BreakEven`
+//! prices a candidate placement per step, and the serving loop prices
+//! what-ifs per batch. The graph *structure* (task count, resources,
+//! labels, dependency lists) is fully determined by the schedule's shape;
+//! only durations change between evaluations. A [`SimArena`] caches built
+//! skeletons keyed by an injective [`GraphShape`] so a repeat build becomes
+//! a warm start: the builder replays over the cached skeleton re-pricing
+//! durations in place (no label formatting, no dependency copies, no
+//! allocation), and the run reuses the cached dependents index plus one
+//! shared set of engine buffers.
+//!
+//! Contract:
+//!
+//! * `begin(shape)` → `true` (warm) enters re-pricing mode over the cached
+//!   skeleton for `shape`; `false` (cold) provides an empty [`Sim`] to
+//!   append into. Either way the caller then replays the *same* builder
+//!   and calls [`SimArena::finish`].
+//! * Warm and cold paths are bit-identical by construction: a warm build
+//!   only ever overwrites durations of a skeleton produced by the same
+//!   builder under the same shape, and [`GraphShape`] keys are injective
+//!   mappings of every structure-determining input (no hashing), so a
+//!   stale-cache hit is impossible rather than merely unlikely.
+//! * Fallback to a full rebuild is automatic on structural change: a new
+//!   shape misses the cache (cold build into a fresh or LRU-evicted slot),
+//!   and tasks appended after `finish` (e.g. migration what-ifs via
+//!   [`SimArena::sim_mut`]) are truncated away by the next `begin`.
+//! * Capacity is bounded: at most [`SimArena::MAX_SLOTS`] skeletons are
+//!   retained, evicting the least recently used.
+
+use super::engine::{DependentsIndex, RunBuffers, Sim, Span, TracedRun};
+
+/// Injective structural key for a cached skeleton. Producers (e.g.
+/// `ScheduleSpec::shape`) must encode *every* input that influences the
+/// builder's control flow — task order, resources, labels and dependency
+/// lists — and no input that only influences durations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GraphShape(pub [u64; 8]);
+
+struct Slot {
+    shape: GraphShape,
+    sim: Sim,
+    /// Task count at the last `finish` — what `begin` truncates back to.
+    built_len: usize,
+    /// Cached adjacency, revalidated lazily against `sim`'s structural
+    /// version (stays valid across pure re-pricing).
+    index: DependentsIndex,
+    last_used: u64,
+}
+
+/// See the module docs. One arena per evaluation loop; two independent
+/// loops over the same shapes (e.g. a timeline step and its break-even
+/// probe) need two arenas, otherwise the second build re-prices the
+/// durations out from under the first.
+#[derive(Default)]
+pub struct SimArena {
+    slots: Vec<Slot>,
+    bufs: RunBuffers,
+    active: usize,
+    tick: u64,
+}
+
+impl SimArena {
+    /// Maximum cached skeletons (LRU beyond this). Covers the four
+    /// `choose_slot` candidates plus a full strategy × chunk-count sweep
+    /// through one arena without thrashing.
+    pub const MAX_SLOTS: usize = 16;
+
+    pub fn new() -> SimArena {
+        SimArena::default()
+    }
+
+    /// Start a build for `shape`. Returns `true` if a cached skeleton was
+    /// found (the builder's `add` calls will re-price it in place), else
+    /// `false` (the builder appends into an empty sim). Call
+    /// [`SimArena::finish`] after the builder completes.
+    pub fn begin(&mut self, shape: GraphShape) -> bool {
+        self.tick += 1;
+        if let Some(i) = self.slots.iter().position(|s| s.shape == shape) {
+            self.active = i;
+            let slot = &mut self.slots[i];
+            slot.last_used = self.tick;
+            slot.sim.truncate(slot.built_len);
+            slot.sim.begin_reprice();
+            return true;
+        }
+        let i = if self.slots.len() < Self::MAX_SLOTS {
+            self.slots.push(Slot {
+                shape,
+                sim: Sim::new(),
+                built_len: 0,
+                index: DependentsIndex::default(),
+                last_used: self.tick,
+            });
+            self.slots.len() - 1
+        } else {
+            let (i, _) = self
+                .slots
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, s)| s.last_used)
+                .expect("MAX_SLOTS > 0");
+            let slot = &mut self.slots[i];
+            slot.shape = shape;
+            slot.sim.clear();
+            slot.built_len = 0;
+            slot.last_used = self.tick;
+            i
+        };
+        self.active = i;
+        false
+    }
+
+    /// End the build started by the last [`SimArena::begin`]: asserts a
+    /// warm re-price covered the whole skeleton (a structural drift under
+    /// an unchanged shape is a bug, not a fallback) and records the built
+    /// length for the next warm start.
+    pub fn finish(&mut self) {
+        let slot = &mut self.slots[self.active];
+        slot.sim.finish_reprice();
+        slot.built_len = slot.sim.len();
+    }
+
+    /// The active slot's sim (the one most recently built via
+    /// `begin`/`finish`). Panics if nothing was built yet.
+    pub fn sim(&self) -> &Sim {
+        &self.slots[self.active].sim
+    }
+
+    /// Mutable access to the active sim, for appending what-if tasks
+    /// (e.g. `MigrationPlan::add_transfer_tasks`) after `finish`. Appends
+    /// are priced by the next run and shed by the next `begin`.
+    pub fn sim_mut(&mut self) -> &mut Sim {
+        &mut self.slots[self.active].sim
+    }
+
+    /// Makespan of the active sim on the fast engine, reusing the slot's
+    /// cached dependents index and the arena's shared run buffers; no
+    /// spans are materialized. Bit-identical to `self.sim().makespan()`.
+    pub fn makespan(&mut self) -> f64 {
+        let slot = &mut self.slots[self.active];
+        slot.index.ensure(&slot.sim);
+        slot.sim.run_fast(&slot.index, &mut self.bufs, false)
+    }
+
+    /// Spans of the active sim (bit-identical to `self.sim().run()`).
+    pub fn run(&mut self) -> Vec<Span> {
+        let slot = &mut self.slots[self.active];
+        slot.index.ensure(&slot.sim);
+        slot.sim.run_fast(&slot.index, &mut self.bufs, false);
+        slot.sim.materialize_spans(&self.bufs)
+    }
+
+    /// Traced run of the active sim (bit-identical to
+    /// `self.sim().run_traced()`).
+    pub fn run_traced(&mut self) -> TracedRun {
+        let slot = &mut self.slots[self.active];
+        slot.index.ensure(&slot.sim);
+        slot.sim.run_fast(&slot.index, &mut self.bufs, true);
+        TracedRun {
+            spans: slot.sim.materialize_spans(&self.bufs),
+            blockers: self.bufs.blockers.clone(),
+        }
+    }
+
+    /// Number of currently cached skeletons (test/bench introspection).
+    pub fn cached_slots(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simtime::Resource;
+
+    fn shape(tag: u64) -> GraphShape {
+        GraphShape([tag, 0, 0, 0, 0, 0, 0, 0])
+    }
+
+    // a two-task builder whose durations come from `scale`
+    fn build_pair(sim: &mut Sim, scale: f64) {
+        let a = sim.add("a", Resource::Compute(0), 1.0 * scale, &[]);
+        sim.add("b", Resource::Comm(0), 2.0 * scale, &[a]);
+    }
+
+    #[test]
+    fn warm_start_reprices_and_matches_cold() {
+        let mut arena = SimArena::new();
+        assert!(!arena.begin(shape(1)));
+        build_pair(arena.sim_mut(), 1.0);
+        arena.finish();
+        assert_eq!(arena.makespan(), 3.0);
+
+        // same shape again: warm, durations re-priced
+        assert!(arena.begin(shape(1)));
+        build_pair(arena.sim_mut(), 2.0);
+        arena.finish();
+        assert_eq!(arena.makespan(), 6.0);
+
+        let mut cold = Sim::new();
+        build_pair(&mut cold, 2.0);
+        assert_eq!(arena.makespan().to_bits(), cold.makespan().to_bits());
+    }
+
+    #[test]
+    fn different_shape_is_cold() {
+        let mut arena = SimArena::new();
+        assert!(!arena.begin(shape(1)));
+        build_pair(arena.sim_mut(), 1.0);
+        arena.finish();
+        assert!(!arena.begin(shape(2)));
+        build_pair(arena.sim_mut(), 1.0);
+        arena.finish();
+        assert_eq!(arena.cached_slots(), 2);
+        // revisiting either shape is warm again
+        assert!(arena.begin(shape(1)));
+        build_pair(arena.sim_mut(), 3.0);
+        arena.finish();
+        assert_eq!(arena.makespan(), 9.0);
+    }
+
+    #[test]
+    fn appended_tasks_are_shed_by_next_begin() {
+        let mut arena = SimArena::new();
+        arena.begin(shape(1));
+        build_pair(arena.sim_mut(), 1.0);
+        arena.finish();
+        // what-if append: an H2D task serialized after nothing
+        arena.sim_mut().add("mig", Resource::H2D(0), 10.0, &[]);
+        assert_eq!(arena.makespan(), 10.0);
+        // next warm build drops the append and re-prices the skeleton
+        assert!(arena.begin(shape(1)));
+        build_pair(arena.sim_mut(), 1.0);
+        arena.finish();
+        assert_eq!(arena.sim().len(), 2);
+        assert_eq!(arena.makespan(), 3.0);
+    }
+
+    #[test]
+    fn lru_eviction_bounds_memory_and_stays_correct() {
+        let mut arena = SimArena::new();
+        let n_shapes = SimArena::MAX_SLOTS as u64 + 4;
+        for round in 0..3u64 {
+            for tag in 0..n_shapes {
+                let warm = arena.begin(shape(tag));
+                // with more shapes than slots cycling in order, every
+                // visit misses (the LRU evicts ahead of reuse)
+                assert!(!warm, "round {round} tag {tag}");
+                build_pair(arena.sim_mut(), (tag + 1) as f64);
+                arena.finish();
+                assert_eq!(arena.makespan(), 3.0 * (tag + 1) as f64);
+                assert!(arena.cached_slots() <= SimArena::MAX_SLOTS);
+            }
+        }
+    }
+}

@@ -1,6 +1,34 @@
 //! Resource-constrained list scheduler over a task DAG.
+//!
+//! Two engines implement the identical semantics:
+//!
+//! * [`Sim::run_traced_reference`] — the original single global
+//!   `BinaryHeap` event loop. It is kept verbatim as the pinned reference:
+//!   the differential harness (`rust/tests/engine_equivalence.rs`) asserts
+//!   the fast engine span- and blocker-bit-identical to it over the whole
+//!   golden corpus plus randomized DAGs.
+//! * The fast engine behind [`Sim::run`] / [`Sim::run_traced`] /
+//!   [`Sim::makespan`] — per-resource ready queues advanced independently,
+//!   with only cross-resource wakeups touching a small frontier heap, over
+//!   index-based buffers that [`EngineScratch`] / `SimArena` reuse across
+//!   runs.
+//!
+//! Why they agree bit-for-bit: the reference pops a global heap keyed
+//! `(ready_at.to_bits(), task-id)`, and every push carries a key ≥ the key
+//! currently popped (a dependent becomes ready no earlier than its
+//! dependency's end), so the global service order is exactly the ascending
+//! sort of all final `(ready, id)` keys. Realized starts/ends depend only
+//! on (a) the *per-resource* restriction of that order and (b) dep-derived
+//! ready times — cross-resource interleaving is irrelevant, and `Free`
+//! tasks can be scheduled eagerly the instant they become ready. The fast
+//! engine services each exclusive resource in ascending `(ready, id)`
+//! order directly, which is the same restriction, including ties (for
+//! equal ready bits the smaller id is always serviced first by both).
 
+use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 pub type TaskId = usize;
 
@@ -100,9 +128,61 @@ pub struct TracedRun {
     pub blockers: Vec<Option<Blocker>>,
 }
 
-#[derive(Default)]
+/// A label that is only rendered if the task is actually appended.
+/// Warm-start re-pricing (`SimArena`) replays a builder over a cached
+/// skeleton where labels already exist; wrapping `format!` call sites in
+/// [`lazy_label`] skips the formatting entirely on that path.
+pub struct LazyLabel<F>(F);
+
+impl<F: FnOnce() -> String> From<LazyLabel<F>> for String {
+    fn from(l: LazyLabel<F>) -> String {
+        (l.0)()
+    }
+}
+
+/// Wrap a `FnOnce() -> String` so it satisfies `impl Into<String>` label
+/// parameters without being evaluated on the re-pricing path.
+pub fn lazy_label<F: FnOnce() -> String>(f: F) -> LazyLabel<F> {
+    LazyLabel(f)
+}
+
+/// Dense index reserved for [`Resource::Free`] in `Sim::res_idx`.
+pub(crate) const FREE_RES: u32 = u32::MAX;
+
+/// Monotone source of per-`Sim` identities so cached [`DependentsIndex`]es
+/// can never be applied to the wrong graph.
+static SIM_NONCE: AtomicU64 = AtomicU64::new(1);
+
 pub struct Sim {
     tasks: Vec<TaskSpec>,
+    /// Interned exclusive-resource index per task (`FREE_RES` for `Free`),
+    /// parallel to `tasks`.
+    res_idx: Vec<u32>,
+    res_map: HashMap<Resource, u32>,
+    n_res: u32,
+    /// `Some(cursor)` while a `SimArena` warm build re-prices durations in
+    /// place over the cached skeleton instead of appending.
+    reprice: Option<usize>,
+    /// Unique per-instance identity (see [`SIM_NONCE`]).
+    nonce: u64,
+    /// Bumped on every *structural* change (append / truncate / clear) —
+    /// re-pricing durations deliberately does not bump it, which is what
+    /// lets a warm run reuse its cached dependents index.
+    version: u64,
+}
+
+impl Default for Sim {
+    fn default() -> Sim {
+        Sim {
+            tasks: Vec::new(),
+            res_idx: Vec::new(),
+            res_map: HashMap::new(),
+            n_res: 0,
+            reprice: None,
+            nonce: SIM_NONCE.fetch_add(1, Ordering::Relaxed),
+            version: 0,
+        }
+    }
 }
 
 impl Sim {
@@ -112,17 +192,61 @@ impl Sim {
 
     pub fn add(&mut self, label: impl Into<String>, resource: Resource,
                duration: f64, deps: &[TaskId]) -> TaskId {
+        self.add_cat(label, resource, duration, deps, &[])
+    }
+
+    /// [`Sim::add`] with the dependency list given as a concatenation of
+    /// two slices (`deps` then `extra`). Builders use this to pass barrier
+    /// dependency lists (e.g. "all dispatch chunks") by reference plus a
+    /// small tail without materializing a combined `Vec` per call — on the
+    /// warm-start re-pricing path no dependency copy happens at all.
+    pub fn add_cat(&mut self, label: impl Into<String>, resource: Resource,
+                   duration: f64, deps: &[TaskId], extra: &[TaskId]) -> TaskId {
+        assert!(duration >= 0.0, "negative duration");
+        if let Some(cursor) = self.reprice {
+            assert!(
+                cursor < self.tasks.len(),
+                "warm re-price appended past the cached skeleton \
+                 (structural change without a shape change)"
+            );
+            let t = &mut self.tasks[cursor];
+            debug_assert_eq!(t.resource, resource, "skeleton resource drifted");
+            debug_assert_eq!(t.deps.len(), deps.len() + extra.len(),
+                             "skeleton dep count drifted");
+            debug_assert!(
+                t.deps.iter().eq(deps.iter().chain(extra)),
+                "skeleton deps drifted"
+            );
+            t.duration = duration;
+            self.reprice = Some(cursor + 1);
+            return cursor;
+        }
         let id = self.tasks.len();
-        for &d in deps {
+        for &d in deps.iter().chain(extra) {
             assert!(d < id, "dependency {d} of task {id} not yet defined");
         }
-        assert!(duration >= 0.0, "negative duration");
+        let r = match resource {
+            Resource::Free => FREE_RES,
+            r => {
+                let n_res = &mut self.n_res;
+                *self.res_map.entry(r).or_insert_with(|| {
+                    let i = *n_res;
+                    *n_res += 1;
+                    i
+                })
+            }
+        };
+        let mut dep_vec = Vec::with_capacity(deps.len() + extra.len());
+        dep_vec.extend_from_slice(deps);
+        dep_vec.extend_from_slice(extra);
+        self.res_idx.push(r);
         self.tasks.push(TaskSpec {
             label: label.into(),
             resource,
             duration,
-            deps: deps.to_vec(),
+            deps: dep_vec,
         });
+        self.version += 1;
         id
     }
 
@@ -142,6 +266,46 @@ impl Sim {
         self.tasks.is_empty()
     }
 
+    /// Enter warm-start re-pricing: subsequent `add`/`add_cat` calls
+    /// overwrite durations of the cached skeleton in id order instead of
+    /// appending. [`Sim::finish_reprice`] asserts full coverage.
+    pub(crate) fn begin_reprice(&mut self) {
+        self.reprice = Some(0);
+    }
+
+    pub(crate) fn finish_reprice(&mut self) {
+        if let Some(cursor) = self.reprice.take() {
+            assert_eq!(
+                cursor,
+                self.tasks.len(),
+                "warm re-price covered {cursor} of {} skeleton tasks \
+                 (structural change without a shape change)",
+                self.tasks.len()
+            );
+        }
+    }
+
+    /// Drop tasks appended after the first `len` (used by `SimArena` to
+    /// shed what-if tasks — e.g. migration H2D/D2H appends — before the
+    /// next warm build). A no-op truncation keeps the structural version,
+    /// so the cached dependents index stays valid across warm rebuilds.
+    pub(crate) fn truncate(&mut self, len: usize) {
+        if len < self.tasks.len() {
+            self.tasks.truncate(len);
+            self.res_idx.truncate(len);
+            self.version += 1;
+        }
+    }
+
+    pub(crate) fn clear(&mut self) {
+        self.tasks.clear();
+        self.res_idx.clear();
+        self.res_map.clear();
+        self.n_res = 0;
+        self.reprice = None;
+        self.version += 1;
+    }
+
     /// Run the schedule; returns spans indexed by task id.
     ///
     /// Thin wrapper over [`Sim::run_traced`] — the spans are bit-identical
@@ -158,6 +322,220 @@ impl Sim {
     /// to the latest-finishing dependency (first such dep on ties). Tasks
     /// that start at t = 0 unconstrained get `None`.
     pub fn run_traced(&self) -> TracedRun {
+        let mut scratch = EngineScratch::default();
+        self.run_traced_with(&mut scratch)
+    }
+
+    /// [`Sim::run_traced`] reusing caller-owned buffers — zero steady-state
+    /// allocation apart from the returned spans.
+    pub fn run_traced_with(&self, scratch: &mut EngineScratch) -> TracedRun {
+        let EngineScratch { index, bufs } = scratch;
+        index.ensure(self);
+        self.run_fast(index, bufs, true);
+        TracedRun {
+            spans: self.materialize_spans(bufs),
+            blockers: bufs.blockers.clone(),
+        }
+    }
+
+    /// Makespan of the schedule. Runs the fast engine in makespan-only
+    /// mode: no spans are materialized and no labels are cloned.
+    pub fn makespan(&self) -> f64 {
+        let mut scratch = EngineScratch::default();
+        self.makespan_with(&mut scratch)
+    }
+
+    /// [`Sim::makespan`] reusing caller-owned buffers.
+    pub fn makespan_with(&self, scratch: &mut EngineScratch) -> f64 {
+        let EngineScratch { index, bufs } = scratch;
+        index.ensure(self);
+        self.run_fast(index, bufs, false)
+    }
+
+    pub(crate) fn materialize_spans(&self, bufs: &RunBuffers) -> Vec<Span> {
+        self.tasks
+            .iter()
+            .enumerate()
+            .map(|(id, t)| Span {
+                id,
+                label: t.label.clone(),
+                resource: t.resource,
+                start: bufs.starts[id],
+                end: bufs.ends[id],
+            })
+            .collect()
+    }
+
+    /// The fast engine. Fills `bufs.starts` / `bufs.ends` (and, when
+    /// `trace`, `bufs.blockers`) and returns the makespan.
+    ///
+    /// Per exclusive resource, tasks are serviced in ascending
+    /// `(ready.to_bits(), id)` order from that resource's own priority
+    /// queue; a frontier heap holds (at least) the current head of every
+    /// non-empty queue and decides which resource acts next. `Free` tasks
+    /// never touch a queue: they are scheduled eagerly the moment their
+    /// last dependency completes (their start is `ready_at` regardless of
+    /// global order). Frontier entries are invalidated lazily: an entry is
+    /// acted on only if it still equals its queue's head.
+    ///
+    /// Correctness of the frontier order (incl. zero-duration ties): if
+    /// some not-yet-queued task U on resource r has a smaller key than r's
+    /// queued head, U has a chain of unscheduled ancestors down to a task Q
+    /// that *is* queued, with time(Q) ≤ time(U); if all times are equal
+    /// (zero durations), Q is an ancestor of U so id(Q) < id(U) (deps must
+    /// have smaller ids, enforced by `add`). Either way key(Q) < key(U) ≤
+    /// key(head), so the frontier serves Q first and U is enqueued before r
+    /// could run its head out of order.
+    pub(crate) fn run_fast(&self, di: &DependentsIndex, bufs: &mut RunBuffers,
+                           trace: bool) -> f64 {
+        assert!(self.reprice.is_none(), "run during an unfinished re-price");
+        debug_assert!(di.matches(self), "stale dependents index");
+        let n = self.tasks.len();
+        let nr = self.n_res as usize;
+        bufs.remaining.clear();
+        bufs.remaining.extend_from_slice(&di.dep_count);
+        bufs.ready.clear();
+        bufs.ready.resize(n, 0.0);
+        bufs.starts.clear();
+        bufs.starts.resize(n, 0.0);
+        bufs.ends.clear();
+        bufs.ends.resize(n, 0.0);
+        if trace {
+            bufs.blockers.clear();
+            bufs.blockers.resize(n, None);
+        }
+        bufs.res_free.clear();
+        bufs.res_free.resize(nr, 0.0);
+        bufs.res_last.clear();
+        bufs.res_last.resize(nr, usize::MAX);
+        if bufs.queues.len() < nr {
+            bufs.queues.resize_with(nr, BinaryHeap::new);
+        }
+        for q in &mut bufs.queues[..nr] {
+            q.clear();
+        }
+        bufs.frontier.clear();
+        bufs.cascade.clear();
+
+        let mut done = 0usize;
+        let mut makespan = 0.0f64;
+
+        // latest-finishing dependency of `id` (first one on ties)
+        fn latest_dep(tasks: &[TaskSpec], ends: &[f64], id: TaskId)
+                      -> Option<Blocker> {
+            let mut best: Option<(TaskId, f64)> = None;
+            for &d in &tasks[id].deps {
+                let end = ends[d];
+                if best.is_none_or(|(_, e)| end > e) {
+                    best = Some((d, end));
+                }
+            }
+            best.map(|(pred, _)| Blocker { pred, kind: EdgeKind::Dep })
+        }
+
+        // Schedule one completed task's effects: propagate its end to
+        // dependents and collect the newly ready ones onto the cascade.
+        macro_rules! complete {
+            ($id:expr, $end:expr) => {{
+                let end = $end;
+                makespan = makespan.max(end);
+                done += 1;
+                let (lo, hi) =
+                    (di.off[$id] as usize, di.off[$id + 1] as usize);
+                for &dep in &di.dat[lo..hi] {
+                    let dep = dep as usize;
+                    bufs.ready[dep] = bufs.ready[dep].max(end);
+                    bufs.remaining[dep] -= 1;
+                    if bufs.remaining[dep] == 0 {
+                        bufs.cascade.push(dep);
+                    }
+                }
+            }};
+        }
+
+        // Drain the ready cascade: Free tasks run eagerly (possibly making
+        // more tasks ready), exclusive tasks are enqueued on their
+        // resource's queue, publishing a frontier entry when they become
+        // that queue's new head.
+        macro_rules! drain_cascade {
+            () => {
+                while let Some(id) = bufs.cascade.pop() {
+                    let r = self.res_idx[id];
+                    if r == FREE_RES {
+                        let start = bufs.ready[id];
+                        let end = start + self.tasks[id].duration;
+                        bufs.starts[id] = start;
+                        bufs.ends[id] = end;
+                        if trace {
+                            bufs.blockers[id] =
+                                latest_dep(&self.tasks, &bufs.ends, id);
+                        }
+                        complete!(id, end);
+                    } else {
+                        let key = (bufs.ready[id].to_bits(), id);
+                        let q = &mut bufs.queues[r as usize];
+                        q.push(Reverse(key));
+                        if q.peek() == Some(&Reverse(key)) {
+                            bufs.frontier.push(Reverse((key.0, key.1, r)));
+                        }
+                    }
+                }
+            };
+        }
+
+        for (id, &dc) in di.dep_count.iter().enumerate() {
+            if dc == 0 {
+                bufs.cascade.push(id);
+            }
+        }
+        drain_cascade!();
+
+        while let Some(Reverse((bits, id, r))) = bufs.frontier.pop() {
+            let ri = r as usize;
+            // lazily dropped stale entry: the queue moved past it
+            if bufs.queues[ri].peek() != Some(&Reverse((bits, id))) {
+                continue;
+            }
+            bufs.queues[ri].pop();
+            let ready = bufs.ready[id];
+            debug_assert_eq!(ready.to_bits(), bits);
+            let free = bufs.res_free[ri];
+            let start = if free > ready {
+                if trace {
+                    bufs.blockers[id] = Some(Blocker {
+                        pred: bufs.res_last[ri],
+                        kind: EdgeKind::Resource,
+                    });
+                }
+                free
+            } else {
+                if trace {
+                    bufs.blockers[id] =
+                        latest_dep(&self.tasks, &bufs.ends, id);
+                }
+                ready
+            };
+            let end = start + self.tasks[id].duration;
+            bufs.res_free[ri] = end;
+            bufs.res_last[ri] = id;
+            bufs.starts[id] = start;
+            bufs.ends[id] = end;
+            complete!(id, end);
+            drain_cascade!();
+            if let Some(&Reverse((b2, t2))) = bufs.queues[ri].peek() {
+                bufs.frontier.push(Reverse((b2, t2, r)));
+            }
+        }
+        assert_eq!(done, n, "cycle in task graph");
+        makespan
+    }
+
+    /// The original global-`BinaryHeap` engine, kept verbatim as the pinned
+    /// reference for the differential harness
+    /// (`rust/tests/engine_equivalence.rs`) and the bench's
+    /// reference-vs-optimized comparison (`benches/des_engine.rs`). Do not
+    /// optimize this — its entire value is being the unchanged baseline.
+    pub fn run_traced_reference(&self) -> TracedRun {
         let n = self.tasks.len();
         let mut remaining: Vec<usize> = self.tasks.iter().map(|t| t.deps.len()).collect();
         let mut dependents: Vec<Vec<TaskId>> = vec![Vec::new(); n];
@@ -242,11 +620,89 @@ impl Sim {
             blockers,
         }
     }
+}
 
-    /// Makespan of the schedule.
-    pub fn makespan(&self) -> f64 {
-        self.run().iter().fold(0.0, |m, s| m.max(s.end))
+/// CSR adjacency (dependents of each task) plus per-task dependency
+/// counts, cached against a specific `Sim` structural version so warm
+/// re-priced runs skip rebuilding it.
+#[derive(Default)]
+pub(crate) struct DependentsIndex {
+    nonce: u64,
+    version: u64,
+    dep_count: Vec<u32>,
+    /// `off[i]..off[i+1]` indexes `dat` with the dependents of task `i`.
+    off: Vec<u32>,
+    dat: Vec<u32>,
+    cursor: Vec<u32>,
+}
+
+impl DependentsIndex {
+    fn matches(&self, sim: &Sim) -> bool {
+        self.nonce == sim.nonce && self.version == sim.version
     }
+
+    /// Rebuild iff the index does not match `sim`'s structural identity.
+    /// Sound because `Sim` bumps `version` on every structural change and
+    /// `nonce` is unique per instance.
+    pub(crate) fn ensure(&mut self, sim: &Sim) {
+        if self.matches(sim) {
+            return;
+        }
+        let n = sim.tasks.len();
+        self.dep_count.clear();
+        self.off.clear();
+        self.off.resize(n + 1, 0);
+        for t in &sim.tasks {
+            self.dep_count.push(t.deps.len() as u32);
+        }
+        for t in &sim.tasks {
+            for &d in &t.deps {
+                self.off[d + 1] += 1;
+            }
+        }
+        for i in 0..n {
+            self.off[i + 1] += self.off[i];
+        }
+        self.dat.clear();
+        self.dat.resize(self.off[n] as usize, 0);
+        self.cursor.clear();
+        self.cursor.extend_from_slice(&self.off[..n]);
+        for (id, t) in sim.tasks.iter().enumerate() {
+            for &d in &t.deps {
+                self.dat[self.cursor[d] as usize] = id as u32;
+                self.cursor[d] += 1;
+            }
+        }
+        self.nonce = sim.nonce;
+        self.version = sim.version;
+    }
+}
+
+/// Reusable per-run buffers for the fast engine. Separated from
+/// [`DependentsIndex`] so a `SimArena` can keep one adjacency cache per
+/// cached skeleton while sharing a single set of run buffers.
+#[derive(Default)]
+pub(crate) struct RunBuffers {
+    remaining: Vec<u32>,
+    ready: Vec<f64>,
+    starts: Vec<f64>,
+    ends: Vec<f64>,
+    pub(crate) blockers: Vec<Option<Blocker>>,
+    res_free: Vec<f64>,
+    res_last: Vec<usize>,
+    queues: Vec<BinaryHeap<Reverse<(u64, usize)>>>,
+    frontier: BinaryHeap<Reverse<(u64, usize, u32)>>,
+    cascade: Vec<usize>,
+}
+
+/// Caller-owned scratch for [`Sim::run_traced_with`] /
+/// [`Sim::makespan_with`]: reusing one across many runs eliminates the
+/// steady-state allocation of the engine (the dependents index is
+/// re-validated per call against the sim's structural identity).
+#[derive(Default)]
+pub struct EngineScratch {
+    pub(crate) index: DependentsIndex,
+    pub(crate) bufs: RunBuffers,
 }
 
 /// Makespan from precomputed spans.
@@ -404,6 +860,88 @@ mod tests {
         }
         // d's latest-finishing dep is b (ends at 5.0), not c
         assert_eq!(tr.blockers[d].unwrap().pred, b);
+    }
+
+    #[test]
+    fn fast_engine_matches_reference_on_zero_duration_ties() {
+        // zero-duration tasks + duplicate ready times: the (time, id)
+        // tie-break is fully exercised and must match the reference
+        let mut sim = Sim::new();
+        let a = sim.add("a", Resource::Compute(0), 0.0, &[]);
+        let b = sim.add("b", Resource::Compute(0), 0.0, &[a]);
+        sim.add("c", Resource::Compute(0), 0.0, &[]);
+        sim.add("d", Resource::Comm(0), 0.0, &[b]);
+        sim.add("e", Resource::Free, 0.0, &[a]);
+        let fast = sim.run_traced();
+        let reference = sim.run_traced_reference();
+        for (f, r) in fast.spans.iter().zip(&reference.spans) {
+            assert_eq!(f.start.to_bits(), r.start.to_bits());
+            assert_eq!(f.end.to_bits(), r.end.to_bits());
+        }
+        for (f, r) in fast.blockers.iter().zip(&reference.blockers) {
+            match (f, r) {
+                (None, None) => {}
+                (Some(fb), Some(rb)) => {
+                    assert_eq!((fb.pred, fb.kind), (rb.pred, rb.kind));
+                }
+                _ => panic!("blocker presence diverged"),
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical() {
+        let mut scratch = EngineScratch::default();
+        let mut big = Sim::new();
+        for i in 0..20 {
+            let deps: Vec<TaskId> = if i == 0 { vec![] } else { vec![i - 1] };
+            big.add(format!("t{i}"), Resource::Compute(i % 3), 0.5, &deps);
+        }
+        let mut small = Sim::new();
+        small.add("only", Resource::Comm(0), 1.0, &[]);
+        // big run, then small run with the same scratch: stale buffers
+        // from the larger graph must not leak into the smaller one
+        let m_big = big.makespan_with(&mut scratch);
+        let m_small = small.makespan_with(&mut scratch);
+        assert_eq!(m_big.to_bits(), big.makespan().to_bits());
+        assert_eq!(m_small.to_bits(), small.makespan().to_bits());
+        let t_big = big.run_traced_with(&mut scratch);
+        for (a, b) in t_big.spans.iter().zip(&big.run_traced().spans) {
+            assert_eq!(a.start.to_bits(), b.start.to_bits());
+            assert_eq!(a.end.to_bits(), b.end.to_bits());
+        }
+    }
+
+    #[test]
+    fn reprice_overwrites_durations_in_place() {
+        let mut sim = Sim::new();
+        let a = sim.add("a", Resource::Compute(0), 1.0, &[]);
+        sim.add("b", Resource::Comm(0), 2.0, &[a]);
+        assert_eq!(sim.makespan(), 3.0);
+        sim.begin_reprice();
+        let a2 = sim.add("a", Resource::Compute(0), 4.0, &[]);
+        sim.add("b", Resource::Comm(0), 0.5, &[a2]);
+        sim.finish_reprice();
+        assert_eq!(sim.len(), 2);
+        assert_eq!(sim.makespan(), 4.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn reprice_must_cover_whole_skeleton() {
+        let mut sim = Sim::new();
+        sim.add("a", Resource::Compute(0), 1.0, &[]);
+        sim.add("b", Resource::Comm(0), 2.0, &[0]);
+        sim.begin_reprice();
+        sim.add("a", Resource::Compute(0), 4.0, &[]);
+        sim.finish_reprice(); // covered 1 of 2
+    }
+
+    #[test]
+    fn lazy_label_renders_on_append() {
+        let mut sim = Sim::new();
+        sim.add(lazy_label(|| format!("t{}", 7)), Resource::Free, 1.0, &[]);
+        assert_eq!(sim.tasks()[0].label, "t7");
     }
 
     #[test]

@@ -14,7 +14,9 @@
 //! decomposition (see `cluster::interconnect::a2a_decompose`) maps onto
 //! genuinely contended simulation resources.
 
+pub mod arena;
 pub mod engine;
 
-pub use engine::{makespan, Blocker, EdgeKind, Resource, Sim, Span, TaskId,
-                 TaskSpec, TracedRun};
+pub use arena::{GraphShape, SimArena};
+pub use engine::{lazy_label, makespan, Blocker, EdgeKind, EngineScratch,
+                 LazyLabel, Resource, Sim, Span, TaskId, TaskSpec, TracedRun};

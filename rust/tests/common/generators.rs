@@ -18,6 +18,7 @@ use scmoe::coordinator::schedule::{build_pair_schedule, ChunkPipelining};
 use scmoe::coordinator::spec::ScheduleSpec;
 use scmoe::moe::{phase_affine_routing, Placement, RoutingTable};
 use scmoe::simtime::{Resource, Sim, Span};
+use scmoe::util::rng::Rng;
 
 pub fn dyadic_costs() -> BlockCosts {
     BlockCosts {
@@ -383,4 +384,135 @@ pub fn golden_sims() -> Vec<(String, Sim)> {
     plan.add_transfer_tasks(&mut sched.sim, &h2d, Some(&d2h), 0);
     sims.push(("model:d2h-migration/seq".into(), sched.sim));
     sims
+}
+
+/// Seeded random task DAG exercising the engine edge cases the builder
+/// corpus cannot reach: duplicate dependencies (legal — readiness counts
+/// per occurrence), zero-duration tie pile-ups, [`Resource::Free`]
+/// tasks interleaved everywhere, and random resource counts. Durations
+/// are dyadic (multiples of 1/4) so ready-time collisions are common and
+/// span comparisons stay exact across engines.
+pub fn random_dag_sim(seed: u64) -> Sim {
+    let mut rng = Rng::new(seed);
+    let n = 10 + rng.below(121);
+    let n_compute = 1 + rng.below(6);
+    let n_comm = 1 + rng.below(4);
+    let n_link = 1 + rng.below(3);
+    let mut sim = Sim::new();
+    for i in 0..n {
+        let resource = match rng.below(10) {
+            0..=2 => Resource::Compute(rng.below(n_compute)),
+            3..=5 => Resource::Comm(rng.below(n_comm)),
+            6 => Resource::Link(rng.below(n_link)),
+            7 => Resource::H2D(rng.below(2)),
+            8 => Resource::D2H(rng.below(2)),
+            _ => Resource::Free,
+        };
+        let duration = if rng.below(4) == 0 {
+            0.0
+        } else {
+            rng.below(32) as f64 * 0.25
+        };
+        let mut deps: Vec<usize> = Vec::new();
+        if i > 0 {
+            for _ in 0..rng.below(5) {
+                deps.push(rng.below(i)); // duplicates are deliberate
+            }
+        }
+        sim.add(format!("t{i}"), resource, duration, &deps);
+    }
+    sim
+}
+
+/// `count` random DAGs seeded `seed..seed+count`, as named sims.
+pub fn random_dag_sims(count: usize, seed: u64) -> Vec<(String, Sim)> {
+    (0..count)
+        .map(|i| (format!("rand-dag-{i}"), random_dag_sim(seed + i as u64)))
+        .collect()
+}
+
+/// Dyadic fleet cost model at arbitrary scale: `n_nodes` × `per_node`
+/// devices, odd nodes 2x slower on compute, every compute and wire
+/// constant a dyadic rational times `scale` (itself dyadic in every
+/// caller, so spans stay exact). Shared by the equivalence tests and
+/// `benches/des_engine.rs` so the bench prices exactly the graph family
+/// the differential harness locks down.
+pub fn fleet_costs_scaled(n_nodes: usize, per_node: usize,
+                          scale: f64) -> TopoCosts {
+    let base = dyadic_costs();
+    let mut per_device = Vec::with_capacity(n_nodes * per_node);
+    for node in 0..n_nodes {
+        let slow = if node % 2 == 1 { 2.0 } else { 1.0 };
+        for _ in 0..per_node {
+            per_device.push(BlockCosts {
+                attn: base.attn * slow * scale,
+                mlp: base.mlp * slow * scale,
+                se: base.se * slow * scale,
+                gate: base.gate * slow * scale,
+                encode: base.encode * slow * scale,
+                decode: base.decode * slow * scale,
+                expert_k1: base.expert_k1 * slow * scale,
+                a2a_k1: base.a2a_k1,
+                a2a_alpha_k1: base.a2a_alpha_k1,
+            });
+        }
+    }
+    TopoCosts {
+        per_device,
+        a2a_intra_k1: vec![0.25 * scale; n_nodes * per_node],
+        a2a_inter_k1: vec![0.5 * scale; n_nodes],
+        a2a_intra_combine_k1: Vec::new(),
+        a2a_inter_combine_k1: Vec::new(),
+        a2a_intra_alpha_k1: vec![0.0625; n_nodes * per_node],
+        a2a_inter_alpha_k1: vec![0.125; n_nodes],
+        a2a_intra_combine_alpha_k1: Vec::new(),
+        a2a_inter_combine_alpha_k1: Vec::new(),
+        chunk_source: None,
+        expert_load: None,
+        devices_per_node: per_node,
+    }
+}
+
+/// The fleet-scale schedule sweep — the (kind, strategy) pairs the
+/// replace-timeline and chunk-sweep studies price per step — as specs,
+/// so callers pick the cost scale (tests build at scale 1.0; the bench
+/// alternates scales to exercise warm re-pricing).
+pub fn fleet_sweep_specs() -> Vec<(String, ScheduleSpec)> {
+    let sc = MoEKind::ScMoE { k: 1 };
+    let top2 = MoEKind::Standard { k: 2 };
+    vec![
+        ("sweep:Top2/seq".into(),
+         ScheduleSpec::new(top2, Strategy::Sequential)),
+        ("sweep:Top2/pipe2".into(),
+         ScheduleSpec::new(top2, Strategy::Pipelined { chunks: 2 })),
+        ("sweep:Top2/pipe4".into(),
+         ScheduleSpec::new(top2, Strategy::Pipelined { chunks: 4 })),
+        ("sweep:Top2/pipe8".into(),
+         ScheduleSpec::new(top2, Strategy::Pipelined { chunks: 8 })),
+        ("sweep:Top2/pipe2-chained".into(),
+         ScheduleSpec::new(top2, Strategy::Pipelined { chunks: 2 })
+             .with_pipelining(ChunkPipelining::PhaseChained)),
+        ("sweep:ScMoE/seq".into(),
+         ScheduleSpec::new(sc, Strategy::Sequential)),
+        ("sweep:ScMoE/overlap-s2".into(),
+         ScheduleSpec::new(sc, Strategy::Overlap).with_slot(2)),
+        ("sweep:ScMoE/overlap+pipe2-s2".into(),
+         ScheduleSpec::new(sc, Strategy::OverlapPipelined { chunks: 2 })
+             .with_slot(2)),
+        ("sweep:ScMoE/overlap+pipe4-s2".into(),
+         ScheduleSpec::new(sc, Strategy::OverlapPipelined { chunks: 4 })
+             .with_slot(2)),
+    ]
+}
+
+/// The sweep built on an `n_nodes` × `per_node` fleet at scale 1.0.
+pub fn fleet_sweep_sims(n_nodes: usize,
+                        per_node: usize) -> Vec<(String, Sim)> {
+    let tc = fleet_costs_scaled(n_nodes, per_node, 1.0);
+    fleet_sweep_specs()
+        .into_iter()
+        .map(|(name, spec)| {
+            (format!("{name}@{n_nodes}x{per_node}"), spec.build(&tc).sim)
+        })
+        .collect()
 }

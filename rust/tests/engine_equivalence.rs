@@ -1,0 +1,135 @@
+//! Differential harness for the fast DES engine: every simulation the
+//! repo can build — the full golden corpus, the fleet-scale sweep, and
+//! hundreds of seeded random DAGs — runs through both the per-resource
+//! ready-queue engine (`Sim::run_traced`) and the retained reference
+//! implementation (`Sim::run_traced_reference`), asserting span-for-span
+//! and blocker-for-blocker bit-equality. The reference engine is the
+//! pre-optimization global-heap implementation kept verbatim precisely
+//! so this suite can lock the rework down; if the two ever disagree the
+//! fast engine is wrong by definition.
+
+#[path = "common/generators.rs"]
+mod generators;
+
+use generators::{fleet_sweep_sims, golden_sims, random_dag_sims};
+use scmoe::simtime::{EngineScratch, Resource, Sim, TracedRun};
+
+/// Bitwise span equality: id, label, resource, and the exact f64 bits of
+/// start and end. No tolerances anywhere in this file.
+fn assert_spans_eq(name: &str, fast: &[scmoe::simtime::Span],
+                   reference: &[scmoe::simtime::Span]) {
+    assert_eq!(fast.len(), reference.len(), "{name}: span count");
+    for (f, r) in fast.iter().zip(reference) {
+        assert_eq!(f.id, r.id, "{name}: task id order");
+        assert_eq!(f.label, r.label, "{name}: label of task {}", f.id);
+        assert_eq!(f.resource, r.resource, "{name}: resource of {}", f.label);
+        assert_eq!(f.start.to_bits(), r.start.to_bits(),
+                   "{name}: start of {} ({} vs {})", f.label, f.start, r.start);
+        assert_eq!(f.end.to_bits(), r.end.to_bits(),
+                   "{name}: end of {} ({} vs {})", f.label, f.end, r.end);
+    }
+}
+
+/// Run `sim` through every fast-engine entry point and the reference
+/// engine; assert all of them agree bit-exactly.
+fn assert_equivalent(name: &str, sim: &Sim) {
+    let reference: TracedRun = sim.run_traced_reference();
+    let fast: TracedRun = sim.run_traced();
+    assert_spans_eq(name, &fast.spans, &reference.spans);
+
+    assert_eq!(fast.blockers.len(), reference.blockers.len(),
+               "{name}: blocker count");
+    for (id, (f, r)) in
+        fast.blockers.iter().zip(&reference.blockers).enumerate()
+    {
+        match (f, r) {
+            (None, None) => {}
+            (Some(fb), Some(rb)) => {
+                assert_eq!(fb.pred, rb.pred, "{name}: blocker pred of {id}");
+                assert_eq!(fb.kind, rb.kind, "{name}: blocker kind of {id}");
+            }
+            _ => panic!("{name}: blocker presence of {id}: {f:?} vs {r:?}"),
+        }
+    }
+
+    // the untraced paths agree with the traced ones
+    let spans = sim.run();
+    assert_spans_eq(name, &spans, &reference.spans);
+    let ref_makespan = scmoe::simtime::makespan(&reference.spans);
+    assert_eq!(sim.makespan().to_bits(), ref_makespan.to_bits(),
+               "{name}: makespan");
+}
+
+#[test]
+fn golden_corpus_is_engine_equivalent() {
+    let sims = golden_sims();
+    // the corpus the golden snapshot + mirror pin: keep in lockstep
+    assert_eq!(sims.len(), 69, "golden corpus size drifted");
+    for (name, sim) in &sims {
+        assert_equivalent(name, sim);
+    }
+}
+
+#[test]
+fn random_dags_are_engine_equivalent() {
+    for (name, sim) in &random_dag_sims(200, 0xD0E5) {
+        assert_equivalent(name, sim);
+    }
+}
+
+#[test]
+fn fleet_sweep_is_engine_equivalent() {
+    for (name, sim) in &fleet_sweep_sims(32, 4) {
+        assert_equivalent(name, sim);
+    }
+}
+
+/// One shared [`EngineScratch`] across wildly different graphs must be
+/// bit-identical to fresh runs — the nonce/version revalidation at work.
+#[test]
+fn scratch_reuse_across_corpus_is_deterministic() {
+    let mut scratch = EngineScratch::default();
+    for (name, sim) in golden_sims().iter().chain(&random_dag_sims(25, 7)) {
+        let shared = sim.run_traced_with(&mut scratch);
+        let fresh = sim.run_traced();
+        assert_spans_eq(name, &shared.spans, &fresh.spans);
+        assert_eq!(sim.makespan_with(&mut scratch).to_bits(),
+                   sim.makespan().to_bits(), "{name}: scratch makespan");
+    }
+}
+
+/// Repeated runs of the same sim are bit-identical (no hidden state).
+#[test]
+fn repeated_runs_are_deterministic() {
+    for (name, sim) in &random_dag_sims(25, 0xBEEF) {
+        let a = sim.run_traced();
+        let b = sim.run_traced();
+        assert_spans_eq(name, &a.spans, &b.spans);
+    }
+}
+
+/// The Graham scheduling anomaly the analysis layer documents must
+/// reproduce identically on both engines: shortening task P *increases*
+/// the makespan (31.0 at p=0, 21.5 at p=2) because list scheduling is
+/// not monotone on arbitrary DAGs. Pinned here so the fast engine can
+/// never "fix" it.
+#[test]
+fn graham_anomaly_pins_on_both_engines() {
+    let build = |p: f64| {
+        let mut sim = Sim::new();
+        let pp = sim.add("P", Resource::Compute(1), p, &[]);
+        let q = sim.add("Q", Resource::Free, 0.5, &[]);
+        let _a = sim.add("A", Resource::Compute(0), 10.0, &[pp]);
+        let b = sim.add("B", Resource::Compute(0), 1.0, &[q]);
+        let _c = sim.add("C", Resource::Comm(0), 20.0, &[b]);
+        sim
+    };
+    for (p, expect) in [(0.0, 31.0), (2.0, 21.5)] {
+        let sim = build(p);
+        assert_eq!(sim.makespan(), expect, "fast engine, p={p}");
+        let reference = sim.run_traced_reference();
+        assert_eq!(scmoe::simtime::makespan(&reference.spans), expect,
+                   "reference engine, p={p}");
+        assert_equivalent(&format!("graham-p{p}"), &sim);
+    }
+}

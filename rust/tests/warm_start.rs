@@ -1,0 +1,315 @@
+//! Warm-start invalidation suite for the `SimArena` re-pricing path:
+//! a warm rebuild (re-pricing a cached skeleton) must be bit-identical
+//! to a cold build under every cost model, every structural change must
+//! fall back to a cold build, what-if appends must be shed, and the
+//! arena-powered timeline/serving loops must match cold-built references
+//! field for field — the "stale-cache hits are impossible" pin for the
+//! report's replace and serve configurations.
+
+#[path = "common/generators.rs"]
+mod generators;
+
+use generators::{fleet_costs_scaled, fleet_sweep_specs, routed_base_costs,
+                 routed_topology};
+use scmoe::cluster::{LinkModel, Topology};
+use scmoe::coordinator::costs::{ComputeCosts, MoEKind, Strategy, TopoCosts};
+use scmoe::coordinator::replace::{run_replace_timeline, MigrationPlan,
+                                  ReplaceConfig, ReplacePolicy};
+use scmoe::coordinator::spec::ScheduleSpec;
+use scmoe::moe::{phase_affine_routing, AffinityEstimator, Placement,
+                 RoutingTable};
+use scmoe::serve::{run_serve, BatchPolicy, Request, ServeConfig,
+                   TrafficProfile};
+use scmoe::simtime::{Sim, SimArena};
+
+fn assert_sims_identical(name: &str, a: &Sim, b: &Sim) {
+    assert_eq!(a.len(), b.len(), "{name}: task count");
+    for (x, y) in a.tasks().iter().zip(b.tasks()) {
+        assert_eq!(x.label, y.label, "{name}: label");
+        assert_eq!(x.resource, y.resource, "{name}: resource of {}", x.label);
+        assert_eq!(x.duration.to_bits(), y.duration.to_bits(),
+                   "{name}: duration of {}", x.label);
+        assert_eq!(x.deps, y.deps, "{name}: deps of {}", x.label);
+    }
+}
+
+/// A warm rebuild under a different cost model is bit-identical — task
+/// list, spans, blockers, makespan — to a cold build under that model.
+#[test]
+fn warm_rebuild_is_bit_identical_to_cold() {
+    for (name, spec) in fleet_sweep_specs() {
+        let mut arena = SimArena::new();
+        for (i, scale) in [1.0, 1.5, 0.5, 1.25].into_iter().enumerate() {
+            let tc = fleet_costs_scaled(4, 2, scale);
+            let built = spec.build_into(&tc, &mut arena);
+            assert_eq!(built.warm, i > 0, "{name}: warm flag at build {i}");
+            let cold = spec.build(&tc);
+            assert_sims_identical(&format!("{name}@x{scale}"), arena.sim(),
+                                  &cold.sim);
+            assert_eq!(arena.makespan().to_bits(),
+                       cold.makespan().to_bits(), "{name}@x{scale}: makespan");
+            let warm_traced = arena.run_traced();
+            let cold_traced = cold.sim.run_traced();
+            for (w, c) in warm_traced.spans.iter().zip(&cold_traced.spans) {
+                assert_eq!((w.start.to_bits(), w.end.to_bits()),
+                           (c.start.to_bits(), c.end.to_bits()),
+                           "{name}@x{scale}: span {}", w.label);
+            }
+            for (w, c) in
+                warm_traced.blockers.iter().zip(&cold_traced.blockers)
+            {
+                assert_eq!(w.map(|b| (b.pred, b.kind)),
+                           c.map(|b| (b.pred, b.kind)),
+                           "{name}@x{scale}: blocker");
+            }
+        }
+    }
+}
+
+/// Every structural change — chunk count, strategy, pipelining, slot,
+/// device count — misses the cache on first encounter (cold build), and
+/// revisiting a cached shape is warm again with correct results.
+#[test]
+fn structural_changes_fall_back_to_cold() {
+    let mut arena = SimArena::new();
+    let tc8 = fleet_costs_scaled(4, 2, 1.0);
+    let tc16 = fleet_costs_scaled(4, 4, 1.0); // more devices, same builder
+    let sc = MoEKind::ScMoE { k: 1 };
+    let pipe2 = ScheduleSpec::new(sc, Strategy::Pipelined { chunks: 2 });
+    let pipe4 = ScheduleSpec::new(sc, Strategy::Pipelined { chunks: 4 });
+    let ovl2 = ScheduleSpec::new(sc, Strategy::Overlap).with_slot(2);
+    let ovl3 = ScheduleSpec::new(sc, Strategy::Overlap).with_slot(3);
+
+    assert!(!pipe2.build_into(&tc8, &mut arena).warm, "first pipe2");
+    assert!(!pipe4.build_into(&tc8, &mut arena).warm, "chunk count changed");
+    assert!(!ovl2.build_into(&tc8, &mut arena).warm, "strategy changed");
+    assert!(!ovl3.build_into(&tc8, &mut arena).warm, "slot changed");
+    assert!(!pipe2.build_into(&tc16, &mut arena).warm, "device count changed");
+    // revisits of cached shapes are warm and still correct
+    for (name, spec, tc) in [("pipe2", pipe2, &tc8), ("pipe4", pipe4, &tc8),
+                             ("ovl2", ovl2, &tc8), ("ovl3", ovl3, &tc8),
+                             ("pipe2@16", pipe2, &tc16)] {
+        assert!(spec.build_into(tc, &mut arena).warm, "{name} revisit");
+        assert_sims_identical(name, arena.sim(), &spec.build(tc).sim);
+    }
+}
+
+/// Tasks appended after a build (migration what-ifs) are priced by the
+/// next run and shed by the next build — never leaked into a warm hit.
+#[test]
+fn appended_migration_tasks_are_priced_then_shed() {
+    let topo = routed_topology();
+    let base = routed_base_costs();
+    let rt = generators::routed_table();
+    let block = Placement::new(4, 4);
+    let affinity = Placement::affinity_packed(&rt, 4, 2);
+    let plan = MigrationPlan::between(&block, &affinity, 4096);
+    let h2d = LinkModel::new(0.125, 1024.0);
+    let d2h = LinkModel::new(0.0625, 2048.0);
+    let tc = TopoCosts::from_routing(&base, &topo, &rt, &block, 64);
+    let spec = ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, Strategy::Sequential);
+
+    let mut arena = SimArena::new();
+    spec.build_into(&tc, &mut arena);
+    let clean = arena.makespan();
+    plan.add_transfer_tasks(arena.sim_mut(), &h2d, Some(&d2h), 0);
+
+    let mut cold = spec.build(&tc);
+    plan.add_transfer_tasks(&mut cold.sim, &h2d, Some(&d2h), 0);
+    assert_sims_identical("with-migration", arena.sim(), &cold.sim);
+    assert_eq!(arena.makespan().to_bits(), cold.makespan().to_bits());
+
+    // the next build of the same shape is warm, sheds the appends, and
+    // reproduces the clean schedule exactly
+    assert!(spec.build_into(&tc, &mut arena).warm);
+    assert_sims_identical("shed", arena.sim(), &spec.build(&tc).sim);
+    assert_eq!(arena.makespan().to_bits(), clean.to_bits());
+}
+
+/// The arena-backed slot search returns the same argmin (and the same
+/// makespan bits) as the cold search, on the miss pass and the warm pass.
+#[test]
+fn choose_slot_in_matches_choose_slot() {
+    let tc = fleet_costs_scaled(4, 2, 1.0);
+    for spec in [
+        ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, Strategy::Overlap),
+        ScheduleSpec::new(MoEKind::ScMoE { k: 2 },
+                          Strategy::OverlapPipelined { chunks: 2 }),
+        ScheduleSpec::new(MoEKind::Standard { k: 2 }, Strategy::Sequential),
+    ] {
+        let mut arena = SimArena::new();
+        let cold = spec.choose_slot(&tc);
+        for pass in 0..2 {
+            let warm = spec.choose_slot_in(&tc, &mut arena);
+            assert_eq!(warm.0, cold.0, "slot, pass {pass}");
+            assert_eq!(warm.1.to_bits(), cold.1.to_bits(),
+                       "makespan, pass {pass}");
+        }
+        // adaptive resolution goes through the same search
+        let built = spec.adaptive().build_into(&tc, &mut arena);
+        assert_eq!(built.expert_slot, cold.0);
+        assert_eq!(spec.adaptive().build(&tc).expert_slot, cold.0);
+    }
+}
+
+/// Pre-PR cold-built replace-timeline loop, kept as the reference the
+/// arena-powered [`run_replace_timeline`] must reproduce bit-exactly:
+/// every step builds fresh sims with `spec.build` and no caching of any
+/// kind. Returns per-step
+/// `(makespan, base_makespan, migrated, migration_bytes, migration_time)`.
+#[allow(clippy::type_complexity)]
+fn cold_reference_timeline(base: &ComputeCosts, topo: &Topology,
+                           token_bytes: usize, tables: &[RoutingTable],
+                           initial: &Placement, cfg: &ReplaceConfig)
+                           -> Vec<(f64, f64, bool, usize, f64)> {
+    let n_nodes = topo.n_devices / topo.devices_per_node;
+    let mut est =
+        AffinityEstimator::ewma(initial.n_experts, n_nodes, cfg.decay);
+    let mut placement = initial.clone();
+    let mut out = Vec::with_capacity(tables.len());
+    let n_steps = tables.len();
+    for (s, rt) in tables.iter().enumerate() {
+        let costs = TopoCosts::from_routing(base, topo, rt, &placement,
+                                            token_bytes);
+        let mut sched = cfg.spec.build(&costs);
+        let base_makespan = sched.makespan();
+        est.observe(rt, topo.n_devices, topo.devices_per_node);
+        let remaining = n_steps - s - 1;
+        let mut migrated = false;
+        let mut migration_bytes = 0usize;
+        let mut migration_time = 0.0f64;
+        if remaining > 0 && cfg.policy != ReplacePolicy::Never {
+            let candidate = est.packed(topo.n_devices, topo.devices_per_node);
+            let plan = MigrationPlan::between(&placement, &candidate,
+                                              cfg.bytes_per_expert);
+            if !plan.is_empty() {
+                let mig = plan.transfer_time(&cfg.h2d, cfg.d2h_link.as_ref());
+                let overhead = (mig - base_makespan).max(0.0);
+                let saving = match cfg.policy {
+                    ReplacePolicy::BreakEven => {
+                        let cand = TopoCosts::from_routing(
+                            base, topo, rt, &candidate, token_bytes);
+                        base_makespan - cfg.spec.build(&cand).makespan()
+                    }
+                    _ => 0.0,
+                };
+                if cfg.policy.should_migrate(s, remaining, saving, overhead) {
+                    plan.add_transfer_tasks(&mut sched.sim, &cfg.h2d,
+                                            cfg.d2h_link.as_ref(), 0);
+                    migrated = true;
+                    migration_bytes = plan.total_bytes();
+                    migration_time = mig;
+                    placement = candidate;
+                }
+            }
+        }
+        let makespan = if migrated { sched.makespan() } else { base_makespan };
+        out.push((makespan, base_makespan, migrated, migration_bytes,
+                  migration_time));
+    }
+    out
+}
+
+fn drift_tables(n_steps: usize, seed: u64) -> Vec<RoutingTable> {
+    (0..n_steps)
+        .map(|s| phase_affine_routing(4, 2, 4, 16, 0, 0, 0.25, 0.25,
+                                      seed + s as u64))
+        .collect()
+}
+
+/// The stale-hit-impossible pin: across every replace policy, with and
+/// without D2H source pricing, fixed and adaptive slots, the warm-started
+/// timeline equals the cold-built reference loop bit for bit on every
+/// step field.
+#[test]
+fn replace_timeline_matches_cold_reference_bit_exactly() {
+    let topo = routed_topology();
+    let base = routed_base_costs();
+    let initial = Placement::new(4, 4);
+    let tables = drift_tables(8, 131);
+    let h2d = LinkModel::new(0.125, 1024.0);
+    let specs = [
+        ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, Strategy::Sequential),
+        ScheduleSpec::new(MoEKind::ScMoE { k: 1 }, Strategy::Overlap)
+            .adaptive(),
+        ScheduleSpec::new(MoEKind::ScMoE { k: 1 },
+                          Strategy::Pipelined { chunks: 2 }),
+    ];
+    let policies = [ReplacePolicy::BreakEven, ReplacePolicy::EveryK { k: 2 },
+                    ReplacePolicy::Never];
+    for spec in specs {
+        for policy in policies {
+            for d2h in [None, Some(LinkModel::new(0.0625, 2048.0))] {
+                let cfg = ReplaceConfig {
+                    spec,
+                    policy,
+                    bytes_per_expert: 4096,
+                    h2d: h2d.clone(),
+                    d2h_link: d2h,
+                    decay: 1.0,
+                };
+                let outcome = run_replace_timeline(&base, &topo, 64, &tables,
+                                                   &initial, &cfg);
+                let reference = cold_reference_timeline(&base, &topo, 64,
+                                                        &tables, &initial,
+                                                        &cfg);
+                assert_eq!(outcome.steps.len(), reference.len());
+                for (step, want) in outcome.steps.iter().zip(&reference) {
+                    let tag = format!("{policy:?}/{:?}/step{}",
+                                      spec.strategy, step.step);
+                    assert_eq!(step.makespan.to_bits(), want.0.to_bits(),
+                               "{tag}: makespan");
+                    assert_eq!(step.base_makespan.to_bits(), want.1.to_bits(),
+                               "{tag}: base_makespan");
+                    assert_eq!(step.migrated, want.2, "{tag}: migrated");
+                    assert_eq!(step.migration_bytes, want.3, "{tag}: bytes");
+                    assert_eq!(step.migration_time.to_bits(),
+                               want.4.to_bits(), "{tag}: migration_time");
+                }
+            }
+        }
+    }
+}
+
+/// The serving loop's arena path against per-step cold builds: with a
+/// static placement every step's makespan must equal a fresh
+/// `spec.build` on that step's table — the serve-side stale-hit pin.
+#[test]
+fn serve_steps_match_cold_builds() {
+    let topo = routed_topology();
+    let base = routed_base_costs();
+    let spec = ScheduleSpec::new(MoEKind::ScMoE { k: 1 },
+                                 Strategy::Sequential);
+    let seed = 977u64;
+    let requests: Vec<Request> = (0..6)
+        .map(|id| Request { id, arrival: 0.0, prefill_tokens: 16,
+                            decode_steps: 0 })
+        .collect();
+    let cfg = ServeConfig {
+        spec,
+        batching: BatchPolicy::WaitK { k: 1 },
+        policy: ReplacePolicy::Never,
+        decay: 1.0,
+        bytes_per_expert: 4096,
+        h2d: LinkModel::new(0.125, 1024.0),
+        token_bytes: 64,
+        decode_tokens: 0,
+        n_experts: 4,
+        traffic: TrafficProfile { regime: 0, shift_at: None,
+                                  prefill_noise: 0.25, decode_noise: 0.25,
+                                  seed },
+    };
+    let block = Placement::new(4, 4);
+    let outcome = run_serve(&base, &topo, &requests, &block, &cfg);
+    assert_eq!(outcome.steps.len(), requests.len());
+    for step in &outcome.steps {
+        let rt = phase_affine_routing(4, 2, 4, 16, 0, 0, 0.25, 0.25,
+                                      seed + step.step as u64);
+        let tc = TopoCosts::from_routing(&base, &topo, &rt, &block, 64);
+        let cold = spec.build(&tc).makespan();
+        assert_eq!(step.base_makespan.to_bits(), cold.to_bits(),
+                   "step {}", step.step);
+        assert_eq!(step.makespan.to_bits(), cold.to_bits(),
+                   "step {}", step.step);
+    }
+}
